@@ -1,0 +1,157 @@
+//! Ablation sweep — regenerates the paper's §4 ablation tables (3-8) and
+//! Table 11 from the trained variant artifacts.
+//!
+//!     cargo run --release --example ablation_sweep -- [artifacts] [--axis X] [--quick]
+//!
+//! Axes: hidden (Table 3), layers (Table 4), embed (Table 5), ktrain
+//! (Table 6), epochs (Table 7), seqlen (Table 8), layers2v4 (Table 11),
+//! all (default).
+
+use anyhow::Result;
+use p_eagle::report::eval_acceptance;
+use p_eagle::runtime::ModelRuntime;
+use p_eagle::util::bench::Table;
+use p_eagle::util::cli::Args;
+
+struct Sweep<'a> {
+    title: &'a str,
+    paper: &'a str,
+    rows: Vec<(&'a str, &'a str)>, // (label, drafter)
+    datasets: Vec<&'a str>,
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let root = args.positional.first().cloned().unwrap_or_else(|| "artifacts".into());
+    let axis = args.get_or("axis", "all");
+    let quick = args.flag("quick");
+    let (n_req, max_new) = if quick { (3, 48) } else { (8, 80) };
+
+    let mut mr = ModelRuntime::load(&root)?;
+    let k = mr.manifest.default_k;
+
+    let sweeps = vec![
+        Sweep {
+            title: "Table 3 — hidden-state design (4L, GPT-OSS-20B analog)",
+            paper: "paper: shared 3.16 beats all variants by 7-15% on HumanEval",
+            rows: vec![
+                ("baseline (learnable shared)", "target-m-pe4-40ep"),
+                ("+ depth-specific encoding", "target-m-hs-depth"),
+                ("+ NTP hidden + depth encoding", "target-m-hs-ntp-depth"),
+                ("+ NTP hidden only", "target-m-hs-ntp"),
+                ("+ regularized NTP hidden", "target-m-hs-reg"),
+            ],
+            datasets: vec!["humaneval"],
+        },
+        Sweep {
+            title: "Table 4 — decoder layers",
+            paper: "paper: 1L 2.69/2.41, 2L +33%/+14%, 4L +46%/+26% (HE/MT)",
+            rows: vec![
+                ("1 layer", "target-m-pe1"),
+                ("2 layers", "target-m-pe2"),
+                ("4 layers", "target-m-pe4"),
+            ],
+            datasets: vec!["humaneval", "mtbench"],
+        },
+        Sweep {
+            title: "Table 5 — embedding freezing (1L)",
+            paper: "paper: trainable +5.1%/+5.2%",
+            rows: vec![
+                ("frozen", "target-m-frozen"),
+                ("trainable", "target-m-pe1"),
+            ],
+            datasets: vec!["humaneval", "mtbench"],
+        },
+        Sweep {
+            title: "Table 6 — training speculation depth (1L)",
+            paper: "paper: K_tr=8 over K_tr=5: +4.1%/+2.7%",
+            rows: vec![
+                ("K_train=5", "target-m-ktr5"),
+                ("K_train=8", "target-m-pe1"),
+            ],
+            datasets: vec!["humaneval", "mtbench"],
+        },
+        Sweep {
+            title: "Table 7 — training duration (4L)",
+            paper: "paper: 20ep 3.92/3.04 -> 60ep +2.0%/+4.6%",
+            rows: vec![
+                ("20 epochs", "target-m-pe4-20ep"),
+                ("40 epochs", "target-m-pe4-40ep"),
+                ("60 epochs", "target-m-pe4-60ep"),
+            ],
+            datasets: vec!["humaneval", "mtbench"],
+        },
+        Sweep {
+            title: "Table 8 — max training sequence length (1L)",
+            paper: "paper: 512 2.51/2.26 -> 2048 +2.0%/+1.3%",
+            rows: vec![
+                ("short (48 = paper 512)", "target-m-seq48"),
+                ("long (96 = paper 2048)", "target-m-pe1"),
+            ],
+            datasets: vec!["humaneval", "mtbench"],
+        },
+        Sweep {
+            title: "Table 11 — 2L vs 4L P-EAGLE (all targets)",
+            paper: "paper: 2L reaches 93-97% of AR baseline; 4L matches/exceeds",
+            rows: vec![
+                ("target-l AR", "target-l-ar"),
+                ("target-l 2L", "target-l-pe2"),
+                ("target-l 4L", "target-l-pe4"),
+                ("target-m AR", "target-m-ar"),
+                ("target-m 2L", "target-m-pe2"),
+                ("target-m 4L", "target-m-pe4"),
+                ("target-s AR", "target-s-ar"),
+                ("target-s 2L", "target-s-pe2"),
+                ("target-s 4L", "target-s-pe4"),
+            ],
+            datasets: vec!["humaneval"],
+        },
+    ];
+
+    let pick = |name: &str| match axis.as_str() {
+        "all" => true,
+        "hidden" => name.contains("Table 3"),
+        "layers" => name.contains("Table 4"),
+        "embed" => name.contains("Table 5"),
+        "ktrain" => name.contains("Table 6"),
+        "epochs" => name.contains("Table 7"),
+        "seqlen" => name.contains("Table 8"),
+        "layers2v4" => name.contains("Table 11"),
+        other => panic!("unknown axis {other}"),
+    };
+
+    for sweep in sweeps.iter().filter(|s| pick(s.title)) {
+        println!("\n=== {} ===", sweep.title);
+        println!("{}", sweep.paper);
+        let mut header = vec!["variant"];
+        header.extend(sweep.datasets.iter().copied());
+        header.push("Δ% vs first row");
+        let mut table = Table::new(&header);
+        let mut baseline: Option<Vec<f64>> = None;
+        for (label, drafter) in &sweep.rows {
+            let mut als = Vec::new();
+            for ds in &sweep.datasets {
+                let e = eval_acceptance(&mut mr, drafter, ds, k, n_req, max_new)?;
+                als.push(e.acceptance_length);
+            }
+            let delta = match &baseline {
+                None => {
+                    baseline = Some(als.clone());
+                    "—".to_string()
+                }
+                Some(b) => als
+                    .iter()
+                    .zip(b)
+                    .map(|(a, b)| format!("{:+.1}%", (a - b) / b * 100.0))
+                    .collect::<Vec<_>>()
+                    .join(" / "),
+            };
+            let mut row = vec![label.to_string()];
+            row.extend(als.iter().map(|a| format!("{a:.2}")));
+            row.push(delta);
+            table.row(row);
+        }
+        table.print();
+    }
+    Ok(())
+}

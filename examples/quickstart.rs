@@ -1,0 +1,72 @@
+//! Quickstart: load the AOT artifacts, smoke-test the runtime, and serve a
+//! handful of requests with P-EAGLE parallel drafting.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Walks the full public API surface: Manifest -> ModelRuntime -> engine
+//! config -> closed-loop serving -> metrics.
+
+use anyhow::Result;
+use p_eagle::coordinator::{EngineConfig, Sampling};
+use p_eagle::report::{bench_otps, eval_acceptance};
+use p_eagle::runtime::{Arg, HostTensor, ModelRuntime};
+
+fn main() -> Result<()> {
+    let root = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+
+    // 1. load artifacts + PJRT runtime
+    let mut mr = ModelRuntime::load(&root)?;
+    println!(
+        "loaded manifest: {} targets, {} drafters, {} executables",
+        mr.manifest.targets.len(),
+        mr.manifest.drafters.len(),
+        mr.manifest.executables.len()
+    );
+
+    // 2. runtime smoke test (2x2 matmul HLO round-trip)
+    let st = mr.manifest.find_exec("selftest", None, None, None, None)?.clone();
+    mr.rt.load(&st.name, &mr.manifest.abs(&st.path))?;
+    let x = HostTensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+    let y = HostTensor::f32(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+    let out = mr.rt.call(&st.name, &[Arg::Host(&x), Arg::Host(&y)])?;
+    let t = mr.rt.download(&out[0])?;
+    println!("selftest matmul+2 = {:?} (want [5,5,9,9])", t.as_f32()?);
+
+    // 3. acceptance-length spot check: P-EAGLE 4L on the code regime
+    let al = eval_acceptance(&mut mr, "target-m-pe4", "humaneval", 5, 4, 64)?;
+    println!(
+        "P-EAGLE(4L) acceptance length on humaneval (K=5): {:.2}",
+        al.acceptance_length
+    );
+
+    // 4. serve a small closed-loop batch and report throughput
+    let run = bench_otps(&mut mr, "target-m-pe4", "mtbench", 5, 2, 4, 64, 7)?;
+    println!(
+        "served 4 requests @ C=2: OTPS {:.0}, AL {:.2}, p50 latency {:?}",
+        run.otps,
+        run.acceptance_length,
+        run.metrics.latency_quantile(0.5)
+    );
+
+    // 5. peek at one generation
+    let cfg = EngineConfig {
+        target: "target-m".into(),
+        drafter: "target-m-pe4".into(),
+        k: 5,
+        batch: 1,
+        max_new_tokens: 24,
+        sampling: Sampling::Greedy,
+        seed: 3,
+    };
+    let regime = mr.manifest.regimes["humaneval"].clone();
+    let mut arr = p_eagle::workload::ArrivalProcess::closed_loop(regime, 16, 24, 9);
+    let (results, _) =
+        p_eagle::coordinator::run_closed_loop(&mut mr, &cfg, 1, 1, || arr.next())?;
+    println!(
+        "sample generation ({} tokens, finish {:?}): {:?}",
+        results[0].tokens.len(),
+        results[0].finish,
+        &results[0].tokens
+    );
+    Ok(())
+}

@@ -1,0 +1,1 @@
+# build-path package (never imported at runtime)

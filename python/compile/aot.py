@@ -1,0 +1,333 @@
+"""AOT pipeline: pretrain targets, train every drafter variant, lower all
+serving executables to HLO *text*, and emit artifacts/manifest.json.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which the runtime's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Stages are individually cached under artifacts/ so a partial run resumes:
+  weights/<name>.pew + logs/<name>.json   — training outputs
+  hlo/<exec>.hlo.txt                      — lowered executables
+  manifest.json                           — written last (Make's stamp)
+
+Env knobs:
+  PEAGLE_FAST=1       quarter training steps (CI / iteration)
+  PEAGLE_KERNEL=jnp   lower drafters with the jnp attention instead of the
+                      Pallas kernel (perf A/B in EXPERIMENTS.md §Perf)
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from .configs import (
+    BATCH_SIZES, BOS_ID, CTX_WINDOW, DATASETS, DEFAULT_K, EOS_ID,
+    EPOCH_SNAPSHOTS, MASK_ID, PAD_ID, PROMPT_PAD, S_MAX, SPEC_DEPTHS,
+    TABLE1_CONTEXTS, TARGETS, VOCAB, DrafterConfig, all_drafters,
+    ablation_drafters, config_dict, drafter_train_config, serving_drafters,
+    table1_drafters,
+)
+from .drafter import draft_ar, draft_pe, init_drafter
+from .model import init_target, prefill, verify, zero_kv
+from .pew import flatten_named, read_pew, unflatten_named, write_pew
+from .pretrain import pretrain_target
+from .train import train_drafter
+
+FAST = os.environ.get("PEAGLE_FAST", "") == "1"
+KERNEL = os.environ.get("PEAGLE_KERNEL", "pallas")
+
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False => with the runtime's untuple_result patch each
+    # result comes back as its own output buffer, so the Rust engine can
+    # thread the KV cache buffers straight into the next call without host
+    # round-trips.
+    #
+    # print_large_constants=True is ESSENTIAL: the default printer elides
+    # array constants over ~10 elements as `{...}`, which the text parser
+    # silently reads back as zeros (e.g. RoPE frequency tables become
+    # pow(theta, 0) == 1 — wrong numerics with no error).
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "elided constant survived — HLO text is lossy"
+    return text
+
+
+def lower_to_file(fn, args, path):
+    # keep_unused=True: jit otherwise PRUNES parameters a variant doesn't
+    # touch (e.g. h_shared in the AR drafter), silently shifting every
+    # subsequent argument position away from the manifest's param_order.
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def spec_of(tree):
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype), tree)
+
+
+def io_spec(arrs):
+    return [
+        {"dtype": str(np.asarray(a).dtype), "shape": list(np.shape(a))}
+        for a in arrs
+    ]
+
+
+class Artifacts:
+    def __init__(self, root):
+        self.root = root
+        for sub in ("weights", "hlo", "logs", "eval"):
+            os.makedirs(os.path.join(root, sub), exist_ok=True)
+        self.manifest = {
+            "vocab": VOCAB, "s_max": S_MAX, "prompt_pad": PROMPT_PAD,
+            "ctx_window": CTX_WINDOW, "pad_id": PAD_ID, "bos_id": BOS_ID,
+            "eos_id": EOS_ID, "mask_id": MASK_ID,
+            "spec_depths": SPEC_DEPTHS, "batch_sizes": BATCH_SIZES,
+            "default_k": DEFAULT_K, "kernel": KERNEL, "fast": FAST,
+            "targets": {}, "drafters": {}, "executables": [],
+            "regimes": {}, "eval_prompts": {}, "training_logs": {},
+            "table1_contexts": {str(k): v for k, v in TABLE1_CONTEXTS.items()},
+        }
+
+    def path(self, *parts):
+        return os.path.join(self.root, *parts)
+
+    def save_params(self, name, params):
+        tensors, _ = flatten_named(params)
+        write_pew(self.path("weights", f"{name}.pew"), tensors)
+        return [n for n, _ in tensors]
+
+    def load_params(self, name, template):
+        tensors = read_pew(self.path("weights", f"{name}.pew"))
+        return unflatten_named(tensors, template)
+
+    def has_weights(self, name):
+        return os.path.exists(self.path("weights", f"{name}.pew"))
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: targets
+# ---------------------------------------------------------------------------
+
+def stage_targets(art: Artifacts):
+    params = {}
+    for name, cfg in TARGETS.items():
+        template = init_target(jax.random.PRNGKey(0), cfg)
+        if art.has_weights(name):
+            print(f"[targets] {name}: cached")
+            params[name] = art.load_params(name, template)
+        else:
+            steps = 60 if FAST else 240
+            t0 = time.time()
+            p, hist = pretrain_target(cfg, steps=steps, batch=8, seq_len=96,
+                                      verbose=False)
+            print(f"[targets] {name}: trained {steps} steps "
+                  f"({time.time()-t0:.0f}s, loss {hist[-1]['loss']:.3f})")
+            art.save_params(name, p)
+            with open(art.path("logs", f"{name}.json"), "w") as f:
+                json.dump(hist, f)
+            params[name] = p
+        order = [n for n, _ in flatten_named(params[name])[0]]
+        art.manifest["targets"][name] = {
+            **config_dict(cfg),
+            "feature_layers": cfg.feature_layers,
+            "feature_dim": cfg.feature_dim,
+            "head_dim": cfg.head_dim,
+            "weights": f"weights/{name}.pew",
+            "param_order": order,
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: drafters
+# ---------------------------------------------------------------------------
+
+def stage_drafters(art: Artifacts, target_params):
+    out = {}
+    jobs = all_drafters()
+    for dcfg in jobs:
+        tcfg = TARGETS[dcfg.target]
+        template = init_drafter(jax.random.PRNGKey(0), dcfg, tcfg,
+                                target_embed=target_params[dcfg.target]["embed"])
+        names = [dcfg.name]
+        snap_steps = ()
+        if dcfg.name == "target-m-pe4":
+            snap_steps = tuple(EPOCH_SNAPSHOTS)  # Table 7 epoch ablation
+            names += [f"target-m-pe4-{lbl}" for lbl in EPOCH_SNAPSHOTS.values()]
+        if all(art.has_weights(n) for n in names):
+            print(f"[drafters] {dcfg.name}: cached")
+            out[dcfg.name] = art.load_params(dcfg.name, template)
+            for n in names[1:]:
+                out[n] = art.load_params(n, template)
+        else:
+            tc = drafter_train_config(dcfg)
+            if FAST:
+                tc.steps = max(10, tc.steps // 4)
+                snap_steps = tuple(max(2, s // 4) for s in snap_steps)
+            t0 = time.time()
+            p, log, snaps = train_drafter(
+                target_params[dcfg.target], tcfg, dcfg, tc,
+                snapshot_steps=snap_steps, verbose=False)
+            print(f"[drafters] {dcfg.name}: {tc.steps} steps "
+                  f"({time.time()-t0:.0f}s, ntp {log['ntp_acc'][-1]:.3f} "
+                  f"mtp {log['mtp_acc'][-1]:.3f})")
+            art.save_params(dcfg.name, p)
+            with open(art.path("logs", f"{dcfg.name}.json"), "w") as f:
+                json.dump(log, f)
+            out[dcfg.name] = p
+            if snap_steps:
+                labels = list(EPOCH_SNAPSHOTS.values())
+                for (step, sp), lbl in zip(sorted(snaps.items()), labels):
+                    sname = f"target-m-pe4-{lbl}"
+                    art.save_params(sname, sp)
+                    out[sname] = sp
+        order = [n for n, _ in flatten_named(out[dcfg.name])[0]]
+        tc = drafter_train_config(dcfg)
+        art.manifest["drafters"][dcfg.name] = {
+            **config_dict(dcfg),
+            "weights": f"weights/{dcfg.name}.pew",
+            "param_order": order,
+            "train": {"seq_len": tc.seq_len, "k_train": tc.k_train,
+                      "cod_ratio": tc.cod_ratio, "segments": tc.segments,
+                      "mask_mode": tc.mask_mode, "steps": tc.steps},
+        }
+        if os.path.exists(art.path("logs", f"{dcfg.name}.json")):
+            with open(art.path("logs", f"{dcfg.name}.json")) as f:
+                art.manifest["training_logs"][dcfg.name] = json.load(f)
+        if dcfg.name == "target-m-pe4":
+            for lbl in EPOCH_SNAPSHOTS.values():
+                sname = f"target-m-pe4-{lbl}"
+                art.manifest["drafters"][sname] = {
+                    **config_dict(dcfg), "name": sname,
+                    "weights": f"weights/{sname}.pew",
+                    "param_order": order,
+                }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: lower executables
+# ---------------------------------------------------------------------------
+
+def _maybe_lower(art, name, fn, args, kind, meta, outputs_meta):
+    path = art.path("hlo", f"{name}.hlo.txt")
+    if not os.path.exists(path):
+        t0 = time.time()
+        size = lower_to_file(fn, args, path)
+        print(f"[hlo] {name}: {size/1e3:.0f} kB ({time.time()-t0:.1f}s)")
+    art.manifest["executables"].append({
+        "name": name, "path": f"hlo/{name}.hlo.txt", "kind": kind, **meta,
+        "outputs": outputs_meta,
+    })
+
+
+def stage_lower(art: Artifacts, target_params, drafter_params):
+    # --- target executables ------------------------------------------------
+    for tname, tcfg in TARGETS.items():
+        tp = target_params[tname]
+        pspec = spec_of(tp)
+        for b in BATCH_SIZES:
+            toks = jax.ShapeDtypeStruct((b, PROMPT_PAD), jnp.int32)
+            plen = jax.ShapeDtypeStruct((b,), jnp.int32)
+            kv = jax.ShapeDtypeStruct(
+                (tcfg.n_layers, 2, b, S_MAX, tcfg.n_heads, tcfg.head_dim),
+                jnp.float32)
+            _maybe_lower(
+                art, f"{tname}-prefill-b{b}",
+                lambda p, t, l, c, _cfg=tcfg: prefill(p, _cfg, t, l, c),
+                (pspec, toks, plen, kv), "prefill",
+                {"model": tname, "batch": b},
+                [{"name": "last_logits"}, {"name": "feats"}, {"name": "kv"}])
+            for k in SPEC_DEPTHS:
+                chunk = jax.ShapeDtypeStruct((b, k + 1), jnp.int32)
+                clen = jax.ShapeDtypeStruct((b,), jnp.int32)
+                _maybe_lower(
+                    art, f"{tname}-verify-b{b}-k{k}",
+                    lambda p, c, l, cache, _cfg=tcfg: verify(p, _cfg, c, l, cache),
+                    (pspec, chunk, clen, kv), "verify",
+                    {"model": tname, "batch": b, "k": k},
+                    [{"name": "logits"}, {"name": "feats"}, {"name": "kv"}])
+
+    # --- drafter executables -----------------------------------------------
+    serving = {d.name for d in serving_drafters() if not d.name.endswith("pe2")}
+    for dname, dmeta in art.manifest["drafters"].items():
+        dcfg = DrafterConfig(**{k: v for k, v in dmeta.items()
+                                if k in DrafterConfig.__dataclass_fields__})
+        tcfg = TARGETS[dcfg.target]
+        dp = drafter_params[dname]
+        dspec = spec_of(dp)
+        fn = draft_ar if dcfg.kind == "ar" else draft_pe
+        grids = ([(b, k) for b in BATCH_SIZES for k in SPEC_DEPTHS]
+                 if dname in serving else [(1, DEFAULT_K)])
+        for b, k in grids:
+            ct = jax.ShapeDtypeStruct((b, CTX_WINDOW), jnp.int32)
+            cf = jax.ShapeDtypeStruct((b, CTX_WINDOW, tcfg.feature_dim),
+                                      jnp.float32)
+            p0 = jax.ShapeDtypeStruct((b,), jnp.int32)
+            _maybe_lower(
+                art, f"{dname}-draft-b{b}-k{k}",
+                lambda p, c, f, q, _cfg=dcfg, _k=k, _fn=fn: _fn(
+                    p, _cfg, c, f, q, _k, attn_impl=KERNEL),
+                (dspec, ct, cf, p0), "draft",
+                {"model": dcfg.target, "drafter": dname, "batch": b, "k": k},
+                [{"name": "tokens"}])
+
+    # --- runtime selftest (load_hlo-style smoke executable) -----------------
+    def smoke(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    s = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    _maybe_lower(art, "selftest", smoke, (s, s), "selftest", {}, [{"name": "out"}])
+
+
+# ---------------------------------------------------------------------------
+# Stage 4: eval prompts + regime tables for the Rust mirror
+# ---------------------------------------------------------------------------
+
+def stage_data(art: Artifacts):
+    for regime in DATASETS:
+        r = data_mod.PhraseRegime(regime)
+        art.manifest["regimes"][regime] = r.export_tables()
+        prompts = data_mod.eval_prompts(regime, 64, 24, seed=42)
+        path = art.path("eval", f"{regime}.json")
+        with open(path, "w") as f:
+            json.dump(prompts.tolist(), f)
+        art.manifest["eval_prompts"][regime] = f"eval/{regime}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="manifest output path")
+    ap.add_argument("--root", default=None, help="artifacts root dir")
+    args = ap.parse_args()
+    root = args.root or os.path.join(os.path.dirname(__file__), "..", "..",
+                                     "artifacts")
+    root = os.path.abspath(root)
+    art = Artifacts(root)
+    t0 = time.time()
+    tparams = stage_targets(art)
+    dparams = stage_drafters(art, tparams)
+    stage_lower(art, tparams, dparams)
+    stage_data(art)
+    out = args.out or art.path("manifest.json")
+    with open(out, "w") as f:
+        json.dump(art.manifest, f, indent=1)
+    print(f"[aot] manifest -> {out} ({time.time()-t0:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

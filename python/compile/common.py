@@ -1,0 +1,152 @@
+"""Shared jnp building blocks: RMSNorm, RoPE, masked MHA, SwiGLU, init.
+
+Everything here is pure-functional over explicit parameter pytrees so the same
+code paths serve training (grad), AOT lowering, and the pure-jnp kernel oracle.
+"""
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def dense_init(key, fan_in, fan_out, scale=1.0):
+    std = scale / math.sqrt(fan_in)
+    return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * std
+
+
+def embed_init(key, vocab, dim):
+    return jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * weight
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta=10000.0):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    return inv  # [head_dim/2]
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: [..., T, H, Dh]; positions: [..., T] int32 (broadcastable)."""
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)                       # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * inv    # [..., T, Dh/2]
+    cos = jnp.cos(ang)[..., None, :]                        # [..., T, 1, Dh/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (reference path; the Pallas kernel mirrors this math)
+# ---------------------------------------------------------------------------
+
+def sdpa(q, k, v, bias):
+    """q: [B,H,T,Dh], k/v: [B,H,S,Dh], bias: broadcastable to [B,H,T,S]."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", probs, v)
+
+
+def mha(x, params, positions, bias, n_heads, theta=10000.0, kv=None):
+    """Multi-head attention over x with RoPE.
+
+    x: [B,T,D]; positions: [B,T]; bias: [B,1,T,S] additive.
+    kv: optional (k_ext, v_ext) each [B,S,H,Dh] of *pre-roped* external
+        keys/values the queries should attend to instead of x's own K/V
+        (used by the KV-cache serving path). When None, S == T.
+    Returns [B,T,D].
+    """
+    B, T, D = x.shape
+    H = n_heads
+    Dh = D // H
+    q = (x @ params["wq"]).reshape(B, T, H, Dh)
+    q = apply_rope(q, positions, theta)
+    if kv is None:
+        k = (x @ params["wk"]).reshape(B, T, H, Dh)
+        v = (x @ params["wv"]).reshape(B, T, H, Dh)
+        k = apply_rope(k, positions, theta)
+    else:
+        k, v = kv
+    out = sdpa(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), bias
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, D)
+    return out @ params["wo"]
+
+
+def causal_bias(T, dtype=jnp.float32):
+    m = jnp.tril(jnp.ones((T, T), dtype=bool))
+    return jnp.where(m, 0.0, NEG_INF).astype(dtype)[None, None]
+
+
+def mask_to_bias(mask_bool):
+    """bool mask (True = may attend) -> additive bias."""
+    return jnp.where(mask_bool, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (shared by target and drafter)
+# ---------------------------------------------------------------------------
+
+def init_block(key, d_model, n_heads, ffn_dim):
+    ks = jax.random.split(key, 7)
+    return {
+        "ln1": jnp.ones((d_model,), jnp.float32),
+        "wq": dense_init(ks[0], d_model, d_model),
+        "wk": dense_init(ks[1], d_model, d_model),
+        "wv": dense_init(ks[2], d_model, d_model),
+        "wo": dense_init(ks[3], d_model, d_model),
+        "ln2": jnp.ones((d_model,), jnp.float32),
+        "w_gate": dense_init(ks[4], d_model, ffn_dim),
+        "w_up": dense_init(ks[5], d_model, ffn_dim),
+        "w_down": dense_init(ks[6], ffn_dim, d_model),
+    }
+
+
+def run_block(x, blk, positions, bias, n_heads, theta, eps, kv=None,
+              attn_fn=None):
+    """One pre-norm transformer block. attn_fn optionally overrides the
+    attention inner product (the Pallas kernel hooks in here)."""
+    h = rms_norm(x, blk["ln1"], eps)
+    if attn_fn is None:
+        a = mha(h, blk, positions, bias, n_heads, theta, kv=kv)
+    else:
+        a = attn_fn(h, blk, positions, bias, n_heads, theta, kv)
+    x = x + a
+    h = rms_norm(x, blk["ln2"], eps)
+    x = x + swiglu(h, blk["w_gate"], blk["w_up"], blk["w_down"])
+    return x
+
+
+def cross_entropy(logits, labels, valid=None):
+    """Mean CE over valid positions. logits [..., V], labels [...] int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if valid is None:
+        return jnp.mean(nll)
+    valid = valid.astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

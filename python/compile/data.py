@@ -1,0 +1,135 @@
+"""Seeded synthetic corpora standing in for the paper's datasets.
+
+The paper trains on UltraChat / GSM-8K / OpenCodeInstruct and evaluates on
+HumanEval / MT-Bench / GSM-8K(test). We substitute three seeded *phrase-bank*
+regimes (DESIGN.md §Hardware-Adaptation): a regime owns a bank of fixed token
+phrases (deterministic spans, like code idioms / formulaic math steps) chained
+by a temperature-controlled first-order process at phrase boundaries. Within a
+phrase the next token is deterministic (highly predictable — what a drafter
+exploits); at boundaries entropy is regime-controlled:
+
+  * humaneval ("code")  — long phrases, cold boundaries (paper: highest AL)
+  * gsm8k     ("math")  — mid phrases, mid boundaries
+  * mtbench   ("chat")  — short phrases, hot boundaries (paper: lowest AL)
+
+Every phrase starts with an anchor token unique to it, so a 1-2 token context
+identifies the phrase + offset — learnable by the mini target and mirrored
+bit-for-bit in rust/src/workload/corpus.rs from the exported tables.
+"""
+
+import numpy as np
+
+from .configs import VOCAB, BOS_ID, EOS_ID, FIRST_CONTENT_ID
+
+# regime -> (seed, n_phrases, min_len, max_len, branch, temperature)
+REGIMES = {
+    "humaneval": (101, 48, 5, 9, 3, 0.30),
+    "gsm8k": (202, 48, 4, 7, 3, 0.55),
+    "mtbench": (303, 48, 3, 5, 4, 1.00),
+}
+
+N_PHRASES = 48
+BODY_LO = FIRST_CONTENT_ID + N_PHRASES           # body tokens share a pool
+BODY_HI = VOCAB
+
+
+class PhraseRegime:
+    """Phrase-bank source: deterministic phrase bodies + stochastic chaining."""
+
+    def __init__(self, name):
+        seed, n, lo, hi, branch, temp = REGIMES[name]
+        self.name = name
+        self.n = n
+        self.branch = branch
+        rng = np.random.default_rng(seed)
+        self.phrases = []
+        for i in range(n):
+            length = int(rng.integers(lo, hi + 1))
+            body = rng.integers(BODY_LO, BODY_HI, size=length - 1)
+            anchor = FIRST_CONTENT_ID + i        # unique phrase anchor token
+            self.phrases.append(np.concatenate([[anchor], body]).astype(np.int32))
+        # first-order phrase transitions: each phrase chains to `branch`
+        # successors with a temperature-peaked categorical
+        self.succ = rng.integers(0, n, size=(n, branch)).astype(np.int32)
+        logits = rng.normal(size=(n, branch)) / temp
+        e = np.exp(logits - logits.max(axis=1, keepdims=True))
+        self.probs = (e / e.sum(axis=1, keepdims=True)).astype(np.float32)
+
+    def sample_seq(self, length, rng):
+        """Sample [BOS, tokens...] of exactly `length` tokens (no EOS)."""
+        out = np.empty(length, dtype=np.int32)
+        out[0] = BOS_ID
+        i = 1
+        pid = int(rng.integers(self.n))
+        while i < length:
+            ph = self.phrases[pid]
+            take = min(len(ph), length - i)
+            out[i:i + take] = ph[:take]
+            i += take
+            pid = int(self.succ[pid, rng.choice(self.branch, p=self.probs[pid])])
+        return out
+
+    def sample_batch(self, batch, length, rng):
+        return np.stack([self.sample_seq(length, rng) for _ in range(batch)])
+
+    def export_tables(self):
+        """Serializable regime tables for the Rust mirror."""
+        return {
+            "name": self.name,
+            "phrases": [p.tolist() for p in self.phrases],
+            "succ": self.succ.tolist(),
+            "probs": [[float(x) for x in row] for row in self.probs],
+        }
+
+
+# Backwards-friendly alias used throughout train/pretrain
+MarkovRegime = PhraseRegime
+
+
+def training_batch(regimes, batch, length, rng):
+    """Mixture batch across regimes (the paper trains on all three datasets)."""
+    names = list(regimes)
+    out = np.empty((batch, length), dtype=np.int32)
+    for i in range(batch):
+        r = regimes[names[rng.integers(len(names))]]
+        out[i] = r.sample_seq(length, rng)
+    return out
+
+
+def eval_prompts(regime, count, prompt_len, seed):
+    """Held-out prompt set for a regime (disjoint seed stream from training)."""
+    rng = np.random.default_rng(seed * 7919 + 17)
+    r = PhraseRegime(regime)
+    return r.sample_batch(count, prompt_len, rng)
+
+
+# ---------------------------------------------------------------------------
+# Figure 1: sequence-length (prompt + generation) distribution
+# ---------------------------------------------------------------------------
+
+# Lognormal mixture fit to the paper's reported quantiles (median 3891,
+# P90 10800, P99 20000) then scaled by LEN_SCALE for the mini testbed.
+LEN_SCALE = 1.0 / 32.0
+_LOGN_MODES = [
+    # (weight, mu, sigma) over paper-scale token counts, fit to the paper's
+    # median 3891 / P90 10800 / P99 20000
+    (0.80, 8.10, 0.60),   # main reasoning mass (~median 3.3K)
+    (0.20, 9.20, 0.40),   # long-tail reasoning traces
+]
+
+
+def sample_paper_length(rng):
+    w = rng.random()
+    acc = 0.0
+    for weight, mu, sigma in _LOGN_MODES:
+        acc += weight
+        if w <= acc:
+            return float(np.exp(rng.normal(mu, sigma)))
+    weight, mu, sigma = _LOGN_MODES[-1]
+    return float(np.exp(rng.normal(mu, sigma)))
+
+
+def length_distribution_stats(samples):
+    s = np.sort(np.asarray(samples))
+    q = lambda p: float(s[min(len(s) - 1, int(p * len(s)))])
+    return {"median": q(0.50), "p90": q(0.90), "p99": q(0.99)}

@@ -1,0 +1,285 @@
+"""L2 drafter models: AR EAGLE-3 baseline, P-EAGLE, and the ParallelSpec
+variant — shared row-wise formulation for training and serving.
+
+Row convention (fixed across training, serving, and the Rust engine):
+a drafter row for absolute token position t carries input pair
+(token_t, target-feature at t-1) and predicts token_{t+1}; its RoPE position
+is t-1 ("row space" = token index - 1). Depth-d MTP rows at row position p
+carry (MASK embedding, h_variant) anchored at the depth-0 row p-d.
+
+Inference windows: `draft_pe` runs ONE forward over
+[C context rows | K-1 MTP slots] (chain drafting makes the mask plain causal
+— DESIGN.md); `draft_ar` runs K sequential window passes inside a
+`lax.fori_loop`, so the K× sequential drafter cost is physically present in
+the lowered HLO the Rust engine executes.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    NEG_INF,
+    cross_entropy,
+    dense_init,
+    embed_init,
+    mask_to_bias,
+    rms_norm,
+    init_block,
+    apply_rope,
+    sdpa,
+    swiglu,
+)
+from .configs import CTX_WINDOW, MASK_ID, DrafterConfig, TargetConfig
+
+K_MAX = 8  # depth-embedding table size (>= K_train)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_drafter(key, cfg: DrafterConfig, tcfg: TargetConfig, target_embed=None):
+    ks = jax.random.split(key, cfg.n_layers + 8)
+    dd = cfg.d_model
+    if target_embed is not None:
+        # paper §4.3: token embeddings inherited from the target model
+        embed = jnp.asarray(target_embed[:, :dd])
+    else:
+        embed = embed_init(ks[0], tcfg.vocab, dd)
+    params = {
+        "embed": embed,
+        "proj_feat": dense_init(ks[1], tcfg.feature_dim, dd),
+        "fuse": dense_init(ks[2], 2 * dd, dd),
+        "blocks": [
+            init_block(ks[3 + i], dd, cfg.n_heads, cfg.ffn_dim)
+            for i in range(cfg.n_layers)
+        ],
+        "ln_f": jnp.ones((dd,), jnp.float32),
+        "lm_head": dense_init(ks[-3], dd, tcfg.vocab),
+        # P-EAGLE learnables (paper §2)
+        "h_shared": jax.random.normal(ks[-2], (dd,), jnp.float32) * 0.02,
+    }
+    if cfg.hidden_mode in ("depth", "ntp_depth"):
+        params["e_depth"] = jax.random.normal(ks[-1], (K_MAX, dd), jnp.float32) * 0.02
+    if cfg.hidden_mode in ("ntp", "ntp_depth", "reg_ntp"):
+        params["proj_ntp"] = dense_init(ks[-1], tcfg.feature_dim, dd)
+    if cfg.hidden_mode == "reg_ntp":
+        params["alpha"] = jnp.asarray(0.1, jnp.float32)  # paper App. B.2 init
+    return params
+
+
+def mtp_hidden(params, cfg: DrafterConfig, depth, feat_anchor, dropout_key=None):
+    """h_variant for an MTP row (paper §4.1 / Appendix B.2).
+
+    depth: [...] int32 (>=1); feat_anchor: [..., 3dt] target features of the
+    anchor NTP position (used by the ntp* variants).
+    """
+    dd = cfg.d_model
+    mode = cfg.hidden_mode
+    if mode == "none":  # ParallelSpec: no shared hidden state
+        return jnp.zeros(feat_anchor.shape[:-1] + (dd,), jnp.float32)
+    h = jnp.broadcast_to(params["h_shared"], feat_anchor.shape[:-1] + (dd,))
+    if mode == "shared":
+        return h
+    if mode in ("depth", "ntp_depth"):
+        h = h + params["e_depth"][jnp.clip(depth, 0, K_MAX - 1)]
+    if mode in ("ntp", "ntp_depth"):
+        h = h + feat_anchor @ params["proj_ntp"]
+    if mode == "reg_ntp":
+        ctx = feat_anchor @ params["proj_ntp"]
+        if dropout_key is not None:  # train-time dropout (rate 0.1)
+            keep = jax.random.bernoulli(dropout_key, 0.9, ctx.shape)
+            ctx = jnp.where(keep, ctx / 0.9, 0.0)
+        h = h + params["alpha"] * ctx
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Core row forward
+# ---------------------------------------------------------------------------
+
+def drafter_blocks(params, cfg: DrafterConfig, x, positions, bias,
+                   attn_impl="jnp"):
+    """x: [B,T,dd] fused row inputs -> post-norm hidden [B,T,dd].
+
+    attn_impl: "jnp" (training / oracle) or "pallas" (the L1 fused kernel,
+    used in the exported serving drafters)."""
+    B, T, dd = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    for blk in params["blocks"]:
+        h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+        q = apply_rope((h @ blk["wq"]).reshape(B, T, H, Dh), positions, cfg.rope_theta)
+        k = apply_rope((h @ blk["wk"]).reshape(B, T, H, Dh), positions, cfg.rope_theta)
+        v = (h @ blk["wv"]).reshape(B, T, H, Dh)
+        qt, kt, vt = (a.transpose(0, 2, 1, 3) for a in (q, k, v))
+        if attn_impl == "pallas":
+            from .kernels.draft_attention import draft_attention
+            a = draft_attention(qt, kt, vt, bias)
+        else:
+            a = sdpa(qt, kt, vt, bias)
+        x = x + a.transpose(0, 2, 1, 3).reshape(B, T, dd) @ blk["wo"]
+        h2 = rms_norm(x, blk["ln2"], cfg.norm_eps)
+        x = x + swiglu(h2, blk["w_gate"], blk["w_up"], blk["w_down"])
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def fuse_rows(params, tok_emb, h_in):
+    return jnp.concatenate([tok_emb, h_in], axis=-1) @ params["fuse"]
+
+
+# ---------------------------------------------------------------------------
+# Serving: P-EAGLE parallel drafting (single forward pass)
+# ---------------------------------------------------------------------------
+
+def draft_pe(params, cfg: DrafterConfig, ctx_tokens, ctx_feats, row_pos0, k,
+             attn_impl="pallas"):
+    """One-pass parallel drafting (the paper's contribution).
+
+    ctx_tokens: [B, C] tokens at consecutive absolute positions ending at the
+    last verified token; ctx_feats: [B, C, 3dt] target features at those
+    positions minus one; row_pos0: [B] RoPE position of the last context row.
+    Returns draft tokens [B, k] int32.
+    """
+    B, C = ctx_tokens.shape
+    T = C + k - 1
+    dd = cfg.d_model
+
+    # context rows
+    ctx_emb = params["embed"][ctx_tokens]                       # [B,C,dd]
+    ctx_h = ctx_feats @ params["proj_feat"]                     # [B,C,dd]
+    x_ctx = fuse_rows(params, ctx_emb, ctx_h)
+
+    # MTP slots (depths 1..k-1), all anchored at the last context row
+    depths = jnp.arange(1, k, dtype=jnp.int32)                  # [k-1]
+    feat_anchor = jnp.broadcast_to(
+        ctx_feats[:, -1:, :], (B, k - 1, ctx_feats.shape[-1])
+    )
+    h_mtp = mtp_hidden(params, cfg, depths[None, :], feat_anchor)
+    mask_emb = jnp.broadcast_to(params["embed"][MASK_ID], (B, k - 1, dd))
+    x_mtp = fuse_rows(params, mask_emb, h_mtp)
+
+    x = jnp.concatenate([x_ctx, x_mtp], axis=1)                 # [B,T,dd]
+    offs = jnp.concatenate([
+        jnp.arange(-(C - 1), 1, dtype=jnp.int32),
+        jnp.arange(1, k, dtype=jnp.int32),
+    ])
+    positions = row_pos0[:, None] + offs[None, :]
+    bias = mask_to_bias(jnp.tril(jnp.ones((T, T), bool)))[None, None]
+
+    h = drafter_blocks(params, cfg, x, positions, bias, attn_impl)
+    logits = h[:, C - 1:, :] @ params["lm_head"]                # [B,k,V]
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Serving: AR EAGLE-3 baseline (K sequential passes in-graph)
+# ---------------------------------------------------------------------------
+
+def draft_ar(params, cfg: DrafterConfig, ctx_tokens, ctx_feats, row_pos0, k,
+             attn_impl="pallas"):
+    """Autoregressive drafting: K sequential drafter forward passes.
+
+    Same I/O contract as draft_pe. Step j >= 1 feeds back (draft token j,
+    drafter hidden of the previous row) — the EAGLE recurrence. The
+    fori_loop keeps the sequential dependency inside the lowered HLO.
+    """
+    B, C = ctx_tokens.shape
+    T = C + k - 1
+    dd = cfg.d_model
+
+    ctx_emb = params["embed"][ctx_tokens]
+    ctx_h = ctx_feats @ params["proj_feat"]
+    x_ctx = fuse_rows(params, ctx_emb, ctx_h)
+    x = jnp.concatenate([x_ctx, jnp.zeros((B, k - 1, dd), jnp.float32)], axis=1)
+
+    offs = jnp.concatenate([
+        jnp.arange(-(C - 1), 1, dtype=jnp.int32),
+        jnp.arange(1, k, dtype=jnp.int32),
+    ])
+    positions = row_pos0[:, None] + offs[None, :]
+    causal = jnp.tril(jnp.ones((T, T), bool))
+
+    def fwd(x_buf, n_valid):
+        ok = jnp.arange(T) < n_valid
+        bias = mask_to_bias(causal & ok[None, :])[None, None]
+        return drafter_blocks(params, cfg, x_buf, positions, bias, attn_impl)
+
+    # pass 1: draft token 1 from the last context row
+    h = fwd(x, C)
+    t1 = jnp.argmax(h[:, C - 1] @ params["lm_head"], axis=-1).astype(jnp.int32)
+    tokens0 = jnp.zeros((B, k), jnp.int32).at[:, 0].set(t1)
+
+    def step(j, carry):
+        x_buf, tokens, h_prev = carry
+        tok_j = jax.lax.dynamic_slice_in_dim(tokens, j - 1, 1, 1)[:, 0]
+        row = fuse_rows(params, params["embed"][tok_j], h_prev)   # [B,dd]
+        x_buf = jax.lax.dynamic_update_slice(
+            x_buf, row[:, None, :], (0, C - 1 + j, 0))
+        h_all = fwd(x_buf, C + j)                                  # pass j+1
+        h_row = jax.lax.dynamic_slice_in_dim(h_all, C - 1 + j, 1, 1)[:, 0]
+        t_next = jnp.argmax(h_row @ params["lm_head"], axis=-1).astype(jnp.int32)
+        tokens = jax.lax.dynamic_update_slice(tokens, t_next[:, None], (0, j))
+        return x_buf, tokens, h_row
+
+    if k > 1:
+        h_prev0 = h[:, C - 1]
+        x, tokens, _ = jax.lax.fori_loop(1, k, step, (x, tokens0, h_prev0))
+    else:
+        tokens = tokens0
+    return tokens
+
+
+# ---------------------------------------------------------------------------
+# Training forward over prepared MTP row batches (see train.py)
+# ---------------------------------------------------------------------------
+
+def train_rows_forward(params, cfg: DrafterConfig, batch, dropout_key=None,
+                       h_override=None):
+    """Forward over one prepared segment.
+
+    batch dict (all leading dim [B, R]):
+      tok_in   int32  — input token per row (depth-0: token_{p+1}; MTP: MASK)
+      depth    int32  — row depth d
+      pos      int32  — RoPE position p
+      feat     f32 [B,R,3dt] — depth-0: feat_p; MTP: feat of the anchor row
+      label    int32  — token_{p+2}
+      loss_w   f32    — 1.0 for rows owned by this segment, 0 for key-only
+      valid    bool   — padding indicator
+      mask     bool [B,R,R] — gathered MTP attention mask (masks.py)
+
+    h_override: optional [B,R,dd] replacing the per-row hidden input (TTT
+    second pass for the AR baseline). Returns (loss, aux dict).
+    """
+    tok_in, depth = batch["tok_in"], batch["depth"]
+    feat, label = batch["feat"], batch["label"]
+    loss_w, valid, mask = batch["loss_w"], batch["valid"], batch["mask"]
+    B, R = tok_in.shape
+
+    if h_override is None:
+        h_ntp = feat @ params["proj_feat"]
+        h_mtp = mtp_hidden(params, cfg, depth, feat, dropout_key)
+        h_in = jnp.where((depth == 0)[..., None], h_ntp, h_mtp)
+    else:
+        h_in = h_override
+    x = fuse_rows(params, params["embed"][tok_in], h_in)
+
+    bias = mask_to_bias(mask & valid[:, None, :])[:, None]      # [B,1,R,R]
+    h = drafter_blocks(params, cfg, x, batch["pos"], bias, attn_impl="jnp")
+    logits = h @ params["lm_head"]
+
+    w = loss_w * valid.astype(jnp.float32)
+    loss = cross_entropy(logits, label, valid=w)
+    pred = jnp.argmax(logits, axis=-1)
+    hit = (pred == label).astype(jnp.float32)
+    wsum = jnp.maximum(jnp.sum(w), 1.0)
+    ntp_w = w * (depth == 0)
+    mtp_w = w * (depth > 0)
+    aux = {
+        "acc": jnp.sum(hit * w) / wsum,
+        "ntp_acc": jnp.sum(hit * ntp_w) / jnp.maximum(jnp.sum(ntp_w), 1.0),
+        "mtp_acc": jnp.sum(hit * mtp_w) / jnp.maximum(jnp.sum(mtp_w), 1.0),
+        "hidden": h,
+    }
+    return loss, aux

@@ -1,0 +1,156 @@
+"""Pallas fused draft-attention kernel — the L1 hot-spot.
+
+This is the attention inside the P-EAGLE drafter forward pass: queries are
+the `C + K - 1` rows `[context pairs | MTP slots]`, keys/values are either the
+same rows (chain drafting is plain causal attention over the window — see
+DESIGN.md) or, for the flash variant, a longer key set. One fused kernel
+computes QK^T -> +bias -> softmax -> V without materializing the score matrix
+in HBM.
+
+Hardware adaptation (paper targets H200 CUDA; see DESIGN.md
+§Hardware-Adaptation): instead of a warp/threadblock decomposition we tile for
+the TPU memory hierarchy — the grid iterates (batch, head, q-tile), each
+program instance holding one q-tile plus streamed k/v tiles in VMEM and
+accumulating with the online-softmax recurrence so the VMEM footprint is
+O(Tq*Dh + Ts*Dh + Tq*Ts) independent of S. Tile sizes default to MXU-friendly
+(8, 128)-aligned shapes, padded up when the problem is smaller.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same kernel runs
+inside the AOT artifacts loaded by the Rust runtime. Real-TPU VMEM/MXU
+estimates are derived analytically in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _single_block_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale):
+    """One (batch, head) program instance: full T x S attention in VMEM.
+
+    Used when T*S fits a single tile (the drafter window path: T,S <= ~32).
+    """
+    q = q_ref[...].astype(jnp.float32)           # [T, Dh]
+    k = k_ref[...].astype(jnp.float32)           # [S, Dh]
+    v = v_ref[...].astype(jnp.float32)           # [S, Dh]
+    b = bias_ref[...].astype(jnp.float32)        # [T, S]
+    scores = q @ k.T * scale + b                 # [T, S] (MXU matmul)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (p @ v).astype(o_ref.dtype)     # [T, Dh] (MXU matmul)
+
+
+def draft_attention(q, k, v, bias, *, interpret=True):
+    """Fused attention, single-block per (batch, head).
+
+    q: [B,H,T,Dh]; k,v: [B,H,S,Dh]; bias: [B,1,T,S] or [1,1,T,S] additive.
+    Returns [B,H,T,Dh] in q.dtype. Matches kernels.ref.ref_attention.
+    """
+    B, H, T, Dh = q.shape
+    S = k.shape[2]
+    scale = 1.0 / math.sqrt(Dh)
+    bias_b = jnp.broadcast_to(bias, (B, 1, T, S))
+
+    kernel = functools.partial(_single_block_kernel, scale=scale)
+    grid = (B, H)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, T, Dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, S, Dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, S, Dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, T, S), lambda b, h: (b, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, T, Dh), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, Dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, bias_b)
+
+
+# ---------------------------------------------------------------------------
+# Flash variant: streamed K/V tiles with online softmax (for long key sets,
+# e.g. the verify path's S_MAX=256 cache). Grid = (B, H, num_q_tiles); the
+# k-loop runs inside the kernel so the score matrix never exceeds one tile.
+# ---------------------------------------------------------------------------
+
+def _flash_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale, ts):
+    q = q_ref[...].astype(jnp.float32)                     # [Tq, Dh]
+    S = k_ref.shape[0]
+    Tq, Dh = q.shape
+    nk = S // ts
+
+    def body(i, carry):
+        acc, m_prev, l_prev = carry
+        kk = jax.lax.dynamic_slice_in_dim(k_ref[...], i * ts, ts, 0)
+        vv = jax.lax.dynamic_slice_in_dim(v_ref[...], i * ts, ts, 0)
+        bb = jax.lax.dynamic_slice_in_dim(bias_ref[...], i * ts, ts, 1)
+        s = q @ kk.astype(jnp.float32).T * scale + bb.astype(jnp.float32)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + p @ vv.astype(jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((Tq, Dh), jnp.float32)
+    m0 = jnp.full((Tq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((Tq, 1), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nk, body, (acc0, m0, l0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def draft_attention_flash(q, k, v, bias, *, tq=8, ts=128, interpret=True):
+    """Flash-style fused attention with streamed K/V tiles.
+
+    q: [B,H,T,Dh]; k,v: [B,H,S,Dh]; bias: broadcastable [.,1,T,S].
+    T must be divisible by tq and S by ts (callers pad; NEG_INF bias masks
+    padding). VMEM per program instance ≈ (tq + 2*ts)*Dh + tq*ts floats.
+    """
+    B, H, T, Dh = q.shape
+    S = k.shape[2]
+    assert T % tq == 0 and S % ts == 0, (T, tq, S, ts)
+    scale = 1.0 / math.sqrt(Dh)
+    bias_b = jnp.broadcast_to(bias, (B, 1, T, S))
+
+    kernel = functools.partial(_flash_kernel, scale=scale, ts=ts)
+    grid = (B, H, T // tq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, tq, Dh), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((None, None, S, Dh), lambda b, h, t: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, S, Dh), lambda b, h, t: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, tq, S), lambda b, h, t: (b, 0, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, tq, Dh), lambda b, h, t: (b, h, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, Dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, bias_b)
+
+
+def vmem_estimate_bytes(tq, ts, dh, dtype_bytes=4):
+    """Analytical VMEM footprint per program instance of the flash kernel
+    (used for the §Perf TPU estimates — interpret mode has no real VMEM)."""
+    return dtype_bytes * (tq * dh + 2 * ts * dh + tq * ts + 3 * tq + tq * dh)
+
+
+def mxu_utilization_estimate(t, s, dh, tq=8, ts=128):
+    """Fraction of MXU work that is non-padding for a T x S attention with
+    (tq, ts) tiles: real FLOPs / padded-tile FLOPs."""
+    import math as _m
+
+    pt = _m.ceil(t / tq) * tq
+    ps = _m.ceil(s / ts) * ts
+    real = t * s * dh * 2 * 2
+    padded = pt * ps * dh * 2 * 2
+    return real / padded

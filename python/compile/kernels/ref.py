@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the Pallas draft-attention kernel.
+
+This is the correctness contract: `draft_attention.draft_attention(...)` must
+match `ref_attention(...)` to float32 tolerance for every shape/dtype the
+hypothesis sweep in python/tests/test_kernel.py generates.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def ref_attention(q, k, v, bias):
+    """q: [B,H,T,Dh], k/v: [B,H,S,Dh], bias: [B,1,T,S] or [1,1,T,S] additive.
+
+    Plain softmax(QK^T/sqrt(d) + bias) V in float32.
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum(
+        "bhtd,bhsd->bhts", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale + bias.astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_attention_varlen(q, k, v, bias, kv_len):
+    """Variant with a per-batch valid key length (serving verify path):
+    keys at s >= kv_len[b] are masked out on top of `bias`.
+
+    kv_len: [B] int32.
+    """
+    S = k.shape[2]
+    key_ok = jnp.arange(S)[None, :] < kv_len[:, None]      # [B,S]
+    extra = jnp.where(key_ok, 0.0, NEG_INF)[:, None, None, :]
+    return ref_attention(q, k, v, bias + extra)

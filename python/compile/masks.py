@@ -1,0 +1,140 @@
+"""Scalable attention-mask machinery for parallel-prediction training (paper §3).
+
+Row coordinates. A training row is a pair (p, d): RoPE/sequence position p and
+prediction depth d (the paper's "group" G_d). Row (p, d) is anchored at the
+real context position a = p - d, consumes a mask token for d >= 1, and predicts
+token_{p+1}. The attention rule (derived from chain drafting — see DESIGN.md):
+
+    row (p, d) may attend row (q, e)  iff
+        e == 0 and q <= p - d            (the real NTP context), or
+        q - e == p - d and e <= d        (its own mask chain, incl. self)
+
+This rule depends only on (p, d, q, e) — *position-invariant* (paper Fig. 3) —
+so under the position-major interleaved layout row_id = p*K + d, the mask for
+any sequence length n is exactly the top-left (nK x nK) submatrix of the mask
+for the maximum length. `PrecomputedMask` builds the max mask once and serves
+per-example masks as O(1) slices (+ an index gather when COD sampling is on).
+
+`pard_mask` is the baseline: PARD-style from-scratch per-example construction,
+O((nK)^2) predicate evaluations per example (the 48x data-loading slowdown of
+paper Table 2).
+
+COD (Conditional Drop-token, PARD / paper §3): geometric retention — depth d
+keeps round(n * r^d) anchors. We sample anchors *nested* (A_d ⊆ A_{d-1}), which
+the paper's own Figure 4 example satisfies and which Algorithm 1's Phase 2
+requires (each row's chain parent must exist).
+"""
+
+import numpy as np
+
+
+def attend_allowed(p, d, q, e):
+    """Scalar attention predicate for row (p,d) attending (q,e).
+
+    Rows with p < d (or q < e) never arise in training (their anchor would
+    precede the sequence) — report False so all construction paths agree.
+    """
+    if d > p or e > q:
+        return False
+    if e == 0 and q <= p - d:
+        return True
+    if q - e == p - d and e <= d:
+        return True
+    return False
+
+
+def full_mask_dense(n, k):
+    """Vectorized construction of the full interleaved mask for n positions,
+    k depths. Returns bool [n*k, n*k] with row_id = p*k + d."""
+    ids = np.arange(n * k)
+    p = ids // k
+    d = ids % k
+    P, Q = p[:, None], p[None, :]
+    D, E = d[:, None], d[None, :]
+    valid = (D <= P) & (E <= Q)
+    ctx = (E == 0) & (Q <= P - D)
+    chain = (Q - E == P - D) & (E <= D)
+    return valid & (ctx | chain)
+
+
+class PrecomputedMask:
+    """Paper §3.1: amortized mask construction.
+
+    Built once for (n_max, k); per-example masks for any n <= n_max are
+    constant-time views (`slice_view`), and COD-sampled row subsets are cheap
+    gathers over that view (`gather`).
+    """
+
+    def __init__(self, n_max, k):
+        self.n_max = n_max
+        self.k = k
+        self.mask = full_mask_dense(n_max, k)
+
+    def slice_view(self, n):
+        assert n <= self.n_max, f"n={n} exceeds precomputed n_max={self.n_max}"
+        m = n * self.k
+        return self.mask[:m, :m]  # numpy basic slicing: a view, no copy
+
+    def gather(self, rows):
+        """rows: int array of interleaved row ids (p*k + d), sorted.
+        Returns bool [len(rows), len(rows)] — the attention mask over the
+        sampled row subset."""
+        rows = np.asarray(rows)
+        return self.mask[np.ix_(rows, rows)]
+
+
+def pard_mask(rows, k):
+    """PARD baseline: per-example from-scratch construction with scalar
+    predicate evaluation over all row pairs — O(len(rows)^2) Python/loop work
+    per example (the Table 2 bottleneck). `rows` are interleaved ids."""
+    m = len(rows)
+    out = np.zeros((m, m), dtype=bool)
+    for i in range(m):
+        p, d = rows[i] // k, rows[i] % k
+        for j in range(m):
+            q, e = rows[j] // k, rows[j] % k
+            out[i, j] = attend_allowed(p, d, q, e)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# COD sampling (nested anchors)
+# ---------------------------------------------------------------------------
+
+def cod_sample(n, k, ratio, rng):
+    """Sample nested anchor sets per depth.
+
+    Returns `anchors`: list of k sorted int arrays; anchors[d] are the real
+    context positions a whose depth-d row (p = a + d) is kept. anchors[0] is
+    all of [0, n-1]; |anchors[d]| = round(n * ratio^d); anchors[d] ⊆
+    anchors[d-1]. Rows (p, d) with p > n-2 predict beyond the sequence and are
+    dropped by the caller via `valid_rows`.
+    """
+    anchors = [np.arange(n)]
+    for d in range(1, k):
+        want = int(round(n * (ratio ** d)))
+        prev = anchors[-1]
+        want = min(want, len(prev))
+        keep = rng.choice(len(prev), size=want, replace=False)
+        anchors.append(np.sort(prev[keep]))
+    return anchors
+
+
+def rows_from_anchors(anchors, n, k):
+    """Interleaved row ids for the sampled anchor sets, sorted ascending.
+
+    Drops rows whose label token_{p+1} would fall outside the sequence
+    (p >= n-1) and rows whose position p = a + d exceeds n-1.
+    """
+    ids = []
+    for d, anc in enumerate(anchors):
+        p = anc + d
+        p = p[p <= n - 2]
+        ids.append(p * k + d)
+    ids = np.concatenate(ids)
+    return np.sort(ids)
+
+
+def expected_total_rows(n, k, ratio):
+    """Paper §3.2: total positions ≈ n * (1 - r^K) / (1 - r)."""
+    return n * (1.0 - ratio ** k) / (1.0 - ratio)

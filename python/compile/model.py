@@ -1,0 +1,213 @@
+"""L2 target model: LLaMA-style decoder-only transformer with EAGLE-3 feature
+taps and explicit-KV serving entry points (prefill / verify).
+
+The serving executables are pure functions over (params, state) so aot.py can
+lower them to HLO text with weights passed as runtime arguments — the Rust
+runtime uploads weights once as device-resident PJRT buffers and threads the
+KV cache through successive `verify` calls without host round-trips.
+
+KV cache layout: [L, 2, B, S_MAX, H, Dh] float32 (k then v per layer).
+`cache_len[b]` counts valid positions; every attended position is either
+< cache_len or freshly written by the current call (see DESIGN.md for the
+overwrite-safety argument).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    NEG_INF,
+    apply_rope,
+    cross_entropy,
+    dense_init,
+    embed_init,
+    init_block,
+    mask_to_bias,
+    rms_norm,
+    run_block,
+    sdpa,
+    swiglu,
+)
+from .configs import S_MAX, TargetConfig
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_target(key, cfg: TargetConfig):
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model),
+        "blocks": [
+            init_block(keys[i + 1], cfg.d_model, cfg.n_heads, cfg.ffn_dim)
+            for i in range(cfg.n_layers)
+        ],
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": dense_init(keys[-1], cfg.d_model, cfg.vocab),
+    }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Training forward (pretraining the target on the synthetic corpus)
+# ---------------------------------------------------------------------------
+
+def target_forward_train(params, cfg: TargetConfig, tokens):
+    """tokens: [B, S] -> logits [B, S, V]. Plain causal LM forward."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    bias = mask_to_bias(causal)[None, None]
+    for blk in params["blocks"]:
+        x = run_block(x, blk, positions, bias, cfg.n_heads, cfg.rope_theta,
+                      cfg.norm_eps)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x @ params["lm_head"]
+
+
+def target_loss(params, cfg: TargetConfig, tokens):
+    logits = target_forward_train(params, cfg, tokens)
+    labels = tokens[:, 1:]
+    return cross_entropy(logits[:, :-1], labels)
+
+
+# ---------------------------------------------------------------------------
+# Shared serving forward over a token chunk with explicit KV cache
+# ---------------------------------------------------------------------------
+
+def _chunk_forward(params, cfg: TargetConfig, tokens, start, kv, key_limit):
+    """Run a [B, T] token chunk at per-batch offset `start` against the cache.
+
+    tokens: [B, T] int32; start: [B] int32 (chunk position offsets);
+    kv: [L, 2, B, S_MAX, H, Dh]; key_limit: [B, T] int32 — position i may
+    attend cache keys at q < key_limit[b, i] (chunk keys are scattered into
+    the cache *before* attention, so chunk-causal structure is expressed
+    through key_limit too).
+
+    Returns (features [B,T,3d], logits [B,T,V], new_kv).
+    """
+    L, H, Dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    B, T = tokens.shape
+    x = params["embed"][tokens]
+    positions = start[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+
+    key_pos = jnp.arange(S_MAX, dtype=jnp.int32)
+    # [B, T, S_MAX] -> [B, 1, T, S_MAX]
+    allow = key_pos[None, None, :] < key_limit[:, :, None]
+    bias = mask_to_bias(allow)[:, None]
+
+    taps = {i: None for i in cfg.feature_layers}
+    new_kv = []
+    for li, blk in enumerate(params["blocks"]):
+        h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+        q = (h @ blk["wq"]).reshape(B, T, H, Dh)
+        k = (h @ blk["wk"]).reshape(B, T, H, Dh)
+        v = (h @ blk["wv"]).reshape(B, T, H, Dh)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+        # scatter this chunk's K/V into the cache at per-batch offsets
+        def scatter(cache_bshd, new_bthd, off_b):
+            return jax.vmap(
+                lambda c, n, o: jax.lax.dynamic_update_slice(c, n, (o, 0, 0))
+            )(cache_bshd, new_bthd, off_b)
+
+        k_cache = scatter(kv[li, 0], k, start)
+        v_cache = scatter(kv[li, 1], v, start)
+        new_kv.append(jnp.stack([k_cache, v_cache]))
+
+        a = sdpa(
+            q.transpose(0, 2, 1, 3),
+            k_cache.transpose(0, 2, 1, 3),
+            v_cache.transpose(0, 2, 1, 3),
+            bias,
+        )
+        a = a.transpose(0, 2, 1, 3).reshape(B, T, cfg.d_model)
+        x = x + a @ blk["wo"]
+        h2 = rms_norm(x, blk["ln2"], cfg.norm_eps)
+        x = x + swiglu(h2, blk["w_gate"], blk["w_up"], blk["w_down"])
+        if li in taps:
+            taps[li] = x
+
+    feats = jnp.concatenate([taps[i] for i in cfg.feature_layers], axis=-1)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return feats, logits, jnp.stack(new_kv)
+
+
+# ---------------------------------------------------------------------------
+# Serving entry points (lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: TargetConfig, tokens, prompt_len, kv):
+    """Prefill a padded prompt.
+
+    tokens: [B, P] (positions >= prompt_len[b] are PAD garbage);
+    prompt_len: [B] int32; kv: zeroed cache.
+
+    Returns (last_logits [B, V], feats [B, P, 3d], new_kv). Garbage rows
+    beyond prompt_len produce garbage feats/KV that are never attended
+    (overwrite-safety argument in DESIGN.md).
+    """
+    B, P = tokens.shape
+    start = jnp.zeros((B,), jnp.int32)
+    # position i attends cache keys < i+1 (self-causal); padding rows simply
+    # attend the real prefix — their outputs are discarded.
+    key_limit = jnp.broadcast_to(
+        jnp.arange(1, P + 1, dtype=jnp.int32)[None, :], (B, P)
+    )
+    feats, logits, new_kv = _chunk_forward(params, cfg, tokens, start, kv, key_limit)
+    last = prompt_len - 1
+    last_logits = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+    return last_logits, feats, new_kv
+
+
+def verify(params, cfg: TargetConfig, chunk, cache_len, kv):
+    """Verify a speculation chunk [bonus_token, d_1 .. d_K].
+
+    chunk: [B, K+1] int32; cache_len: [B] int32 (valid cache positions; the
+    chunk is written at cache_len .. cache_len+K); kv: running cache.
+
+    Returns (logits [B, K+1, V], feats [B, K+1, 3d], new_kv). logits[:, i]
+    is the target distribution for position cache_len+i+1 — i.e. the
+    verification signal for draft token d_{i+1} and the bonus sample.
+    """
+    B, T = chunk.shape
+    start = cache_len
+    key_limit = (cache_len[:, None]
+                 + jnp.arange(1, T + 1, dtype=jnp.int32)[None, :])
+    feats, logits, new_kv = _chunk_forward(params, cfg, chunk, start, kv, key_limit)
+    return logits, feats, new_kv
+
+
+def zero_kv(cfg: TargetConfig, batch):
+    return jnp.zeros(
+        (cfg.n_layers, 2, batch, S_MAX, cfg.n_heads, cfg.head_dim), jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Feature extraction for drafter training (full-sequence, no cache)
+# ---------------------------------------------------------------------------
+
+def target_features(params, cfg: TargetConfig, tokens):
+    """tokens [B, S] -> (feats [B, S, 3d], logits [B, S, V]) — training-data
+    generation for the drafter (the paper runs the frozen target over the
+    corpus to collect hidden states)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    bias = mask_to_bias(jnp.tril(jnp.ones((S, S), bool)))[None, None]
+    taps = {i: None for i in cfg.feature_layers}
+    for li, blk in enumerate(params["blocks"]):
+        x = run_block(x, blk, positions, bias, cfg.n_heads, cfg.rope_theta,
+                      cfg.norm_eps)
+        if li in taps:
+            taps[li] = x
+    feats = jnp.concatenate([taps[i] for i in cfg.feature_layers], axis=-1)
+    logits = rms_norm(x, params["ln_f"], cfg.norm_eps) @ params["lm_head"]
+    return feats, logits

@@ -1,0 +1,33 @@
+"""Minimal Adam + linear-warmup/decay schedule (hand-rolled; offline env)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    c1 = 1.0 - jnp.power(0.9, tf)
+    c2 = 1.0 - jnp.power(0.999, tf)
+    new = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ / c1) / (jnp.sqrt(v_ / c2) + eps),
+        params, m, v)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def linear_schedule(step, total, peak, warmup):
+    """Linear warmup to `peak` over `warmup` steps, then linear decay to 0
+    (the paper's schedule, warmup_ratio 0.0025)."""
+    s = jnp.asarray(step, jnp.float32)
+    w = jnp.maximum(jnp.asarray(warmup, jnp.float32), 1.0)
+    up = s / w
+    down = jnp.maximum(0.0, (total - s) / jnp.maximum(total - w, 1.0))
+    return peak * jnp.minimum(up, down)

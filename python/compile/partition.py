@@ -1,0 +1,136 @@
+"""Algorithm 1 — dependency-preserving sequence partitioning (paper §3.2).
+
+Splits one training example's sampled rows into S segments for
+*within-sequence gradient accumulation*: each segment is processed by a
+separate forward/backward pass and gradients are summed. The partition must
+preserve every attention dependency:
+
+  * chain: row (p, d) attends (p-1, d-1) ... — Phase 2 propagates the segment
+    assignment of a row's chain parent, so whole chains stay together;
+  * context: row (p, d) attends depth-0 rows q <= p - d — Phase 3 includes
+    depth-0 rows *cumulatively* up to each segment boundary as extra keys
+    (keys only: their loss is owned by their home segment).
+
+With those two closures, per-row attention outputs (and hence summed
+gradients) are bitwise the training-math equal of the unpartitioned pass —
+property-tested in python/tests/test_partition.py and rust/src/partition.
+"""
+
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+
+@dataclass
+class Partition:
+    """Result of Algorithm 1 over one example."""
+
+    # per-segment arrays of interleaved row ids (p*k+d) that OWN loss there
+    segment_rows: List[np.ndarray]
+    # per-segment arrays of depth-0 row ids included as keys only (Phase 3
+    # cumulative context), disjoint from segment_rows
+    segment_extra_keys: List[np.ndarray]
+    boundaries: np.ndarray  # segment boundaries over positions, len S+1
+
+    @property
+    def n_segments(self):
+        return len(self.segment_rows)
+
+
+def partition_rows(anchors, n, k, s):
+    """Algorithm 1 (paper pseudocode, in anchor coordinates).
+
+    anchors: nested COD anchor sets (masks.cod_sample); n: sequence length;
+    k: depths; s: number of segments. Returns a Partition over the row ids of
+    masks.rows_from_anchors(anchors, n, k).
+    """
+    # 1-2: segment boundaries over positions
+    bounds = np.array([(i * n) // s for i in range(s + 1)], dtype=np.int64)
+
+    assign = {}  # (p, d) -> segment
+
+    # Phase 1: depths 0 and 1 assigned by position p
+    for d in (0, 1):
+        if d >= k:
+            break
+        for a in anchors[d]:
+            p = a + d
+            if p > n - 2:
+                continue
+            seg = int(np.searchsorted(bounds, p, side="right") - 1)
+            seg = min(seg, s - 1)
+            assign[(p, d)] = seg
+
+    # Phase 2: depths >= 2 inherit from their chain parent (p-1, d-1)
+    for d in range(2, k):
+        for a in anchors[d]:
+            p = a + d
+            if p > n - 2:
+                continue
+            parent = (p - 1, d - 1)
+            if parent in assign:
+                assign[(p, d)] = assign[parent]
+            else:
+                # parent row was label-clipped (p-1 == n-1 can't happen since
+                # p <= n-2; parent missing only if anchors not nested —
+                # guarded against, but fall back to positional assignment)
+                seg = int(np.searchsorted(bounds, p, side="right") - 1)
+                assign[(p, d)] = min(seg, s - 1)
+
+    seg_rows = [[] for _ in range(s)]
+    for (p, d), seg in assign.items():
+        seg_rows[seg].append(p * k + d)
+    segment_rows = [np.sort(np.array(r, dtype=np.int64)) for r in seg_rows]
+
+    # Phase 3: cumulative depth-0 keys up to each segment's boundary
+    d0 = np.array(
+        [p * k for p in anchors[0] if p <= n - 2], dtype=np.int64
+    )
+    extra = []
+    for seg in range(s):
+        own = set(segment_rows[seg].tolist())
+        upto = bounds[seg + 1]
+        cum = np.array([r for r in d0 if (r // k) < upto and r not in own],
+                       dtype=np.int64)
+        extra.append(np.sort(cum))
+    return Partition(segment_rows=segment_rows, segment_extra_keys=extra,
+                     boundaries=bounds)
+
+
+def validate_partition(part: Partition, anchors, n, k):
+    """Check the paper's invariants. Returns list of violation strings."""
+    from .masks import rows_from_anchors
+
+    errs = []
+    all_rows = set(rows_from_anchors(anchors, n, k).tolist())
+    seen = {}
+    for s, rows in enumerate(part.segment_rows):
+        for r in rows:
+            if r in seen:
+                errs.append(f"row {r} owned by segments {seen[r]} and {s}")
+            seen[r] = s
+    if set(seen) != all_rows:
+        missing = all_rows - set(seen)
+        extra = set(seen) - all_rows
+        errs.append(f"ownership mismatch: missing={sorted(missing)[:5]} "
+                    f"extra={sorted(extra)[:5]}")
+
+    # every owned row's full attention set must be present in its segment
+    for s, rows in enumerate(part.segment_rows):
+        keys = set(rows.tolist()) | set(part.segment_extra_keys[s].tolist())
+        for r in rows:
+            p, d = r // k, r % k
+            # chain parents
+            for e in range(d):
+                q = p - d + e
+                rid = q * k + e
+                if rid in all_rows and rid not in keys:
+                    errs.append(f"seg {s}: row ({p},{d}) missing chain ({q},{e})")
+            # depth-0 context
+            for q in range(p - d + 1):
+                rid = q * k
+                if rid in all_rows and rid not in keys:
+                    errs.append(f"seg {s}: row ({p},{d}) missing ctx ({q},0)")
+                    break  # one per row is enough signal
+    return errs

@@ -1,0 +1,100 @@
+"""PEW — the P-EAGLE weight interchange format (Python writer/reader).
+
+Binary layout (little-endian), mirrored by rust/src/runtime/weights.rs:
+
+    magic   b"PEW1"
+    u32     tensor count
+    repeat:
+      u16   name length, then name bytes (utf-8)
+      u8    dtype (0 = f32, 1 = i32)
+      u8    ndim
+      u32*  dims
+      raw   data (dtype * prod(dims))
+
+Weights ride next to the HLO text artifacts because the executables take
+parameters as runtime arguments (uploaded once as device-resident PJRT
+buffers) instead of baked-in constants — keeps HLO text small and lets many
+executables share one weight file.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"PEW1"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+DTYPES_INV = {0: np.float32, 1: np.int32}
+
+
+def write_pew(path, tensors):
+    """tensors: list of (name, np.ndarray) in a deterministic order."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_pew(path):
+    """Returns list of (name, np.ndarray) preserving write order."""
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, f"{path}: bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            dt, nd = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd)) if nd else ()
+            dtype = np.dtype(DTYPES_INV[dt])
+            n = int(np.prod(dims)) if dims else 1
+            arr = np.frombuffer(f.read(n * dtype.itemsize), dtype=dtype)
+            out.append((name, arr.reshape(dims)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> named flat list (deterministic parameter ordering)
+# ---------------------------------------------------------------------------
+
+def flatten_named(params):
+    """Flatten a params pytree into [(path_name, array)] using jax's
+    canonical flatten order — the SAME order jit uses for lowered arguments."""
+    import jax
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def fmt(path):
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return ".".join(parts)
+
+    names = [fmt(p) for p, _ in paths]
+    return list(zip(names, [np.asarray(x) for x in flat])), treedef
+
+
+def unflatten_named(tensors, template):
+    """Rebuild a params pytree shaped like `template` from (name, arr) pairs
+    (order must match flatten_named(template))."""
+    import jax
+
+    flat, treedef = jax.tree_util.tree_flatten(template)
+    assert len(flat) == len(tensors), (len(flat), len(tensors))
+    import jax.numpy as jnp
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [jnp.asarray(a) for _, a in tensors])

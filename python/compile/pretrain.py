@@ -1,0 +1,49 @@
+"""Pretrain the mini target models on the synthetic corpus mixture.
+
+The paper's targets are frozen production models; ours must first *become*
+predictable language models so acceptance length is a meaningful signal
+(DESIGN.md §Hardware-Adaptation). One Adam run per target over the three
+regime mixture, a few hundred steps — enough to drive greedy continuations
+close to the Markov source's argmax structure.
+"""
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .configs import TargetConfig
+from .model import init_target, target_loss
+from .optim import adam_init, adam_update, linear_schedule
+
+
+def pretrain_target(cfg: TargetConfig, steps=500, batch=32, seq_len=128,
+                    lr=3e-3, seed=0, log_every=100, verbose=True):
+    key = jax.random.PRNGKey(seed + hash(cfg.name) % 1000)
+    params = init_target(key, cfg)
+    opt = adam_init(params)
+    regimes = {n: data_mod.MarkovRegime(n) for n in data_mod.REGIMES}
+    rng = np.random.default_rng(seed + 77)
+
+    @jax.jit
+    def step_fn(params, opt, tokens, lr_now):
+        loss, grads = jax.value_and_grad(target_loss)(params, cfg, tokens)
+        params, opt = adam_update(params, grads, opt, lr_now)
+        return params, opt, loss
+
+    history = []
+    t0 = time.time()
+    for s in range(steps):
+        tokens = jnp.asarray(
+            data_mod.training_batch(regimes, batch, seq_len, rng), jnp.int32)
+        lr_now = linear_schedule(s, steps, lr, max(1, int(steps * 0.02)))
+        params, opt, loss = step_fn(params, opt, tokens, lr_now)
+        if s % log_every == 0 or s == steps - 1:
+            history.append({"step": s, "loss": float(loss)})
+            if verbose:
+                print(f"  [{cfg.name}] step {s:4d} loss {float(loss):.4f} "
+                      f"({time.time()-t0:.1f}s)")
+    return params, history

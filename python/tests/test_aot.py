@@ -1,0 +1,93 @@
+"""AOT pipeline pieces: PEW round-trip, HLO text lowering, param ordering."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import to_hlo_text
+from compile.pew import flatten_named, read_pew, unflatten_named, write_pew
+
+
+def test_pew_roundtrip(tmp_path):
+    tensors = [
+        ("blocks.0.wq", np.arange(12, dtype=np.float32).reshape(3, 4)),
+        ("embed", np.ones((5, 2), np.float32) * 0.5),
+        ("ids", np.asarray([1, 2, 3], np.int32)),
+    ]
+    p = tmp_path / "t.pew"
+    write_pew(p, tensors)
+    back = read_pew(p)
+    assert [n for n, _ in back] == [n for n, _ in tensors]
+    for (_, a), (_, b) in zip(tensors, back):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_flatten_order_matches_jit_argument_order():
+    """The manifest's param_order must be exactly the order jax.jit flattens
+    the params pytree — otherwise the Rust runtime feeds weights to the
+    wrong executable arguments."""
+    params = {
+        "embed": jnp.ones((4, 2)),
+        "blocks": [{"wq": jnp.ones((2, 2)), "ln": jnp.ones((2,))}],
+        "lm_head": jnp.ones((2, 4)),
+    }
+    named, _ = flatten_named(params)
+    flat, _ = jax.tree_util.tree_flatten(params)
+    assert len(named) == len(flat)
+    for (name, a), b in zip(named, flat):
+        assert a.shape == np.asarray(b).shape, name
+
+    rebuilt = unflatten_named(named, params)
+    for x, y in zip(jax.tree_util.tree_leaves(rebuilt),
+                    jax.tree_util.tree_leaves(params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_hlo_text_lowering_multi_output():
+    def f(x, y):
+        return x @ y, x + 1.0
+
+    s = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = to_hlo_text(jax.jit(f).lower(s, s))
+    assert text.startswith("HloModule")
+    assert "f32[2,2]" in text
+    # untupled entry layout (return_tuple=False) — two results
+    assert "->(f32[2,2]{1,0}, f32[2,2]{1,0})" in text.replace(" ,", ",")
+
+
+def test_hlo_text_with_pallas_kernel():
+    from compile.kernels.draft_attention import draft_attention
+
+    def f(q, k, v, b):
+        return draft_attention(q, k, v, b)
+
+    q = jax.ShapeDtypeStruct((1, 2, 8, 8), jnp.float32)
+    b = jax.ShapeDtypeStruct((1, 1, 8, 8), jnp.float32)
+    text = to_hlo_text(jax.jit(f).lower(q, q, q, b))
+    assert text.startswith("HloModule")
+    # interpret-mode pallas must lower to plain HLO (no mosaic custom-call)
+    assert "custom-call" not in text or "mosaic" not in text.lower()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "artifacts", "manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_consistent_with_weights():
+    import json
+
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                        "artifacts"))
+    with open(os.path.join(root, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["vocab"] == 256
+    for name, t in m["targets"].items():
+        tensors = read_pew(os.path.join(root, t["weights"]))
+        assert [n for n, _ in tensors] == t["param_order"], name
+    # every executable file exists
+    for e in m["executables"]:
+        assert os.path.exists(os.path.join(root, e["path"])), e["name"]

@@ -1,0 +1,78 @@
+"""Synthetic corpora + Figure-1 length model."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import BOS_ID, VOCAB
+from compile import data as data_mod
+
+
+@settings(max_examples=20, deadline=None)
+@given(regime=st.sampled_from(list(data_mod.REGIMES)),
+       length=st.integers(1, 200), seed=st.integers(0, 999))
+def test_sample_seq_contract(regime, length, seed):
+    r = data_mod.PhraseRegime(regime)
+    rng = np.random.default_rng(seed)
+    s = r.sample_seq(length, rng)
+    assert len(s) == length
+    assert s[0] == BOS_ID
+    assert (s[1:] >= 4).all() and (s < VOCAB).all()
+
+
+def test_regimes_deterministic_across_instances():
+    a = data_mod.PhraseRegime("humaneval")
+    b = data_mod.PhraseRegime("humaneval")
+    assert all((x == y).all() for x, y in zip(a.phrases, b.phrases))
+    assert (a.succ == b.succ).all()
+    np.testing.assert_allclose(a.probs, b.probs)
+
+
+def test_regime_entropy_ordering():
+    """Regime predictability must order humaneval > gsm8k > mtbench (the
+    paper's per-dataset AL ordering driver)."""
+    def mean_boundary_entropy(r):
+        p = r.probs
+        return float(-(p * np.log(p + 1e-9)).sum(axis=1).mean())
+    hs = {n: mean_boundary_entropy(data_mod.PhraseRegime(n)) for n in data_mod.REGIMES}
+    assert hs["humaneval"] < hs["gsm8k"] < hs["mtbench"], hs
+
+
+def test_phrase_lengths_ordering():
+    ls = {
+        n: np.mean([len(p) for p in data_mod.PhraseRegime(n).phrases])
+        for n in data_mod.REGIMES
+    }
+    assert ls["humaneval"] > ls["gsm8k"] > ls["mtbench"], ls
+
+
+def test_eval_prompts_disjoint_from_training_stream():
+    prompts = data_mod.eval_prompts("gsm8k", 8, 24, seed=42)
+    assert prompts.shape == (8, 24)
+    # different seeds -> different prompt sets
+    other = data_mod.eval_prompts("gsm8k", 8, 24, seed=43)
+    assert (prompts != other).any()
+
+
+def test_export_tables_roundtrip():
+    r = data_mod.PhraseRegime("mtbench")
+    t = r.export_tables()
+    assert t["name"] == "mtbench"
+    assert len(t["phrases"]) == len(r.phrases)
+    assert all(isinstance(x, int) for x in t["phrases"][0])
+
+
+def test_training_batch_mixture():
+    regimes = {n: data_mod.PhraseRegime(n) for n in data_mod.REGIMES}
+    rng = np.random.default_rng(0)
+    b = data_mod.training_batch(regimes, 16, 64, rng)
+    assert b.shape == (16, 64)
+    assert (b[:, 0] == BOS_ID).all()
+
+
+def test_fig1_length_model_quantiles():
+    rng = np.random.default_rng(0)
+    xs = [data_mod.sample_paper_length(rng) for _ in range(40_000)]
+    stats = data_mod.length_distribution_stats(xs)
+    assert abs(stats["median"] - 3891) / 3891 < 0.2, stats
+    assert abs(stats["p90"] - 10800) / 10800 < 0.25, stats
+    assert abs(stats["p99"] - 20000) / 20000 < 0.3, stats

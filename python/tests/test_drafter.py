@@ -1,0 +1,152 @@
+"""Drafter models: P-EAGLE parallel drafting, AR chain consistency,
+hidden-state variants, Pallas-vs-jnp attention agreement in the full model."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import CTX_WINDOW, MASK_ID, TARGETS, DrafterConfig
+from compile.drafter import (
+    draft_ar,
+    draft_pe,
+    init_drafter,
+    mtp_hidden,
+    train_rows_forward,
+)
+from compile.model import init_target, target_features
+
+
+@pytest.fixture(scope="module")
+def setup():
+    tcfg = TARGETS["target-m"]
+    tp = init_target(jax.random.PRNGKey(0), tcfg)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(4, 250, size=(2, 40)), jnp.int32)
+    feats, _ = target_features(tp, tcfg, toks)
+    ctx_t = toks[:, -CTX_WINDOW:]
+    ctx_f = feats[:, -CTX_WINDOW - 1:-1, :]
+    pos0 = jnp.asarray([38, 38], jnp.int32)
+    return tcfg, tp, ctx_t, ctx_f, pos0
+
+
+def mk_drafter(tcfg, tp, **kw):
+    cfg = DrafterConfig(name="t", target="target-m", **kw)
+    params = init_drafter(jax.random.PRNGKey(1), cfg, tcfg,
+                          target_embed=tp["embed"])
+    return cfg, params
+
+
+def test_pe_shapes_and_range(setup):
+    tcfg, tp, ct, cf, p0 = setup
+    for k in (3, 5, 7):
+        cfg, dp = mk_drafter(tcfg, tp, n_layers=2)
+        out = draft_pe(dp, cfg, ct, cf, p0, k, attn_impl="jnp")
+        assert out.shape == (2, k)
+        assert (np.asarray(out) >= 0).all() and (np.asarray(out) < tcfg.vocab).all()
+
+
+def test_pe_pallas_equals_jnp(setup):
+    tcfg, tp, ct, cf, p0 = setup
+    cfg, dp = mk_drafter(tcfg, tp, n_layers=2)
+    a = draft_pe(dp, cfg, ct, cf, p0, 5, attn_impl="jnp")
+    b = draft_pe(dp, cfg, ct, cf, p0, 5, attn_impl="pallas")
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_ar_pallas_equals_jnp(setup):
+    tcfg, tp, ct, cf, p0 = setup
+    cfg, dp = mk_drafter(tcfg, tp, kind="ar", n_layers=1)
+    a = draft_ar(dp, cfg, ct, cf, p0, 5, attn_impl="jnp")
+    b = draft_ar(dp, cfg, ct, cf, p0, 5, attn_impl="pallas")
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_ar_first_token_matches_pe_ntp(setup):
+    """Both drafters share the NTP formulation: with identical weights, the
+    FIRST draft token (pure next-token prediction from the context) must
+    agree between AR and P-EAGLE."""
+    tcfg, tp, ct, cf, p0 = setup
+    cfg, dp = mk_drafter(tcfg, tp, n_layers=1)
+    t_pe = np.asarray(draft_pe(dp, cfg, ct, cf, p0, 5, attn_impl="jnp"))[:, 0]
+    cfg_ar = DrafterConfig(name="t", target="target-m", kind="ar", n_layers=1)
+    t_ar = np.asarray(draft_ar(dp, cfg_ar, ct, cf, p0, 5, attn_impl="jnp"))[:, 0]
+    assert (t_pe == t_ar).all()
+
+
+def test_ar_chain_prefix_stability(setup):
+    """AR drafting at depth K and K' > K must agree on the first K tokens
+    (the chain is sequential — later steps can't change earlier ones)."""
+    tcfg, tp, ct, cf, p0 = setup
+    cfg, dp = mk_drafter(tcfg, tp, kind="ar", n_layers=1)
+    t3 = np.asarray(draft_ar(dp, cfg, ct, cf, p0, 3, attn_impl="jnp"))
+    t7 = np.asarray(draft_ar(dp, cfg, ct, cf, p0, 7, attn_impl="jnp"))
+    assert (t7[:, :3] == t3).all()
+
+
+def test_pe_prefix_stability(setup):
+    """P-EAGLE MTP slots attend causally, so deeper speculation must not
+    change earlier draft tokens either."""
+    tcfg, tp, ct, cf, p0 = setup
+    cfg, dp = mk_drafter(tcfg, tp, n_layers=2)
+    t3 = np.asarray(draft_pe(dp, cfg, ct, cf, p0, 3, attn_impl="jnp"))
+    t7 = np.asarray(draft_pe(dp, cfg, ct, cf, p0, 7, attn_impl="jnp"))
+    assert (t7[:, :3] == t3).all()
+
+
+def test_hidden_variants_shapes(setup):
+    tcfg, tp, ct, cf, p0 = setup
+    for mode in ["shared", "depth", "ntp_depth", "ntp", "reg_ntp", "none"]:
+        cfg, dp = mk_drafter(tcfg, tp, n_layers=1, hidden_mode=mode)
+        out = draft_pe(dp, cfg, ct, cf, p0, 5, attn_impl="jnp")
+        assert out.shape == (2, 5), mode
+        h = mtp_hidden(dp, cfg, jnp.asarray([[1, 2]]),
+                       jnp.zeros((1, 2, tcfg.feature_dim)))
+        assert h.shape == (1, 2, cfg.d_model)
+
+
+def test_mask_token_embedding_used(setup):
+    """Perturbing the MASK embedding must change MTP drafts (slots 2+) but
+    not the NTP draft (slot 1) — the mask token is the MTP input."""
+    tcfg, tp, ct, cf, p0 = setup
+    cfg, dp = mk_drafter(tcfg, tp, n_layers=2)
+    base = np.asarray(draft_pe(dp, cfg, ct, cf, p0, 5, attn_impl="jnp"))
+    dp2 = jax.tree_util.tree_map(lambda x: x, dp)
+    dp2["embed"] = dp["embed"].at[MASK_ID].add(5.0)
+    pert = np.asarray(draft_pe(dp2, cfg, ct, cf, p0, 5, attn_impl="jnp"))
+    assert (base[:, 0] == pert[:, 0]).all(), "NTP must not see the mask token"
+    assert (base[:, 1:] != pert[:, 1:]).any(), "MTP must depend on it"
+
+
+def test_h_shared_perturbation_changes_mtp_only(setup):
+    tcfg, tp, ct, cf, p0 = setup
+    cfg, dp = mk_drafter(tcfg, tp, n_layers=2)
+    base = np.asarray(draft_pe(dp, cfg, ct, cf, p0, 5, attn_impl="jnp"))
+    dp2 = jax.tree_util.tree_map(lambda x: x, dp)
+    dp2["h_shared"] = dp["h_shared"] + 3.0
+    pert = np.asarray(draft_pe(dp2, cfg, ct, cf, p0, 5, attn_impl="jnp"))
+    assert (base[:, 0] == pert[:, 0]).all()
+    assert (base[:, 1:] != pert[:, 1:]).any()
+
+
+def test_train_rows_forward_smoke(setup):
+    tcfg, tp, _, _, _ = setup
+    cfg, dp = mk_drafter(tcfg, tp, n_layers=1)
+    R = 16
+    rng = np.random.default_rng(2)
+    batch = {
+        "tok_in": jnp.asarray(rng.integers(4, 250, (1, R)), jnp.int32),
+        "depth": jnp.asarray(rng.integers(0, 4, (1, R)), jnp.int32),
+        "pos": jnp.asarray(np.arange(R)[None], jnp.int32),
+        "feat": jnp.asarray(rng.standard_normal((1, R, tcfg.feature_dim)), jnp.float32),
+        "label": jnp.asarray(rng.integers(4, 250, (1, R)), jnp.int32),
+        "loss_w": jnp.ones((1, R), jnp.float32),
+        "valid": jnp.ones((1, R), bool),
+        "mask": jnp.asarray(np.tril(np.ones((R, R), bool))[None]),
+    }
+    loss, aux = train_rows_forward(dp, cfg, batch)
+    assert np.isfinite(float(loss))
+    assert 0.0 <= float(aux["acc"]) <= 1.0
+    g = jax.grad(lambda p: train_rows_forward(p, cfg, batch)[0])(dp)
+    gn = np.sqrt(sum(float(jnp.sum(x * x)) for x in jax.tree_util.tree_leaves(g)))
+    assert np.isfinite(gn) and gn > 0

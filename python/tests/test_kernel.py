@@ -1,0 +1,141 @@
+"""L1 correctness: the Pallas draft-attention kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/mask structures; assert_allclose against
+kernels/ref.py — the CORE correctness signal for the compiled hot path.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.draft_attention import (
+    draft_attention,
+    draft_attention_flash,
+    mxu_utilization_estimate,
+    vmem_estimate_bytes,
+)
+from compile.kernels.ref import ref_attention, ref_attention_varlen
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+def causal_bias(t, s):
+    m = np.tril(np.ones((t, s), bool), k=s - t)
+    return jnp.asarray(np.where(m, 0.0, -1e9), jnp.float32)[None, None]
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    t=st.integers(1, 18),
+    s=st.integers(1, 24),
+    dh=st.sampled_from([4, 8, 12, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_single_block_matches_ref(b, h, t, s, dh, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (b, h, t, dh), jnp.float32)
+    k = rand(rng, (b, h, s, dh), jnp.float32)
+    v = rand(rng, (b, h, s, dh), jnp.float32)
+    bias = jnp.asarray(rng.standard_normal((b, 1, t, s)), jnp.float32)
+    got = draft_attention(q, k, v, bias)
+    want = ref_attention(q, k, v, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 3),
+    tq=st.sampled_from([4, 8]),
+    nt=st.integers(1, 3),
+    ns=st.integers(1, 3),
+    dh=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_matches_ref(b, h, tq, nt, ns, dh, seed):
+    ts = 32
+    t, s = tq * nt, ts * ns
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (b, h, t, dh), jnp.float32)
+    k = rand(rng, (b, h, s, dh), jnp.float32)
+    v = rand(rng, (b, h, s, dh), jnp.float32)
+    bias = jnp.asarray(rng.standard_normal((1, 1, t, s)), jnp.float32)
+    got = draft_attention_flash(q, k, v, bias, tq=tq, ts=ts)
+    want = ref_attention(q, k, v, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5, rtol=3e-5)
+
+
+def test_causal_masked_agrees():
+    rng = np.random.default_rng(0)
+    b, h, t, s, dh = 2, 4, 15, 15, 16
+    q = rand(rng, (b, h, t, dh), jnp.float32)
+    k = rand(rng, (b, h, s, dh), jnp.float32)
+    v = rand(rng, (b, h, s, dh), jnp.float32)
+    bias = causal_bias(t, s)
+    got = draft_attention(q, k, v, bias)
+    want = ref_attention(q, k, v, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_fully_masked_rows_are_finite():
+    # a row with all keys masked must not produce NaNs (uniform fallback)
+    rng = np.random.default_rng(1)
+    b, h, t, s, dh = 1, 1, 4, 6, 8
+    q = rand(rng, (b, h, t, dh), jnp.float32)
+    k = rand(rng, (b, h, s, dh), jnp.float32)
+    v = rand(rng, (b, h, s, dh), jnp.float32)
+    bias = jnp.full((1, 1, t, s), -1e9, jnp.float32)
+    got = np.asarray(draft_attention(q, k, v, bias))
+    assert np.isfinite(got).all()
+
+
+def test_varlen_ref_masks_tail():
+    rng = np.random.default_rng(2)
+    b, h, t, s, dh = 2, 2, 3, 10, 8
+    q = rand(rng, (b, h, t, dh), jnp.float32)
+    k = rand(rng, (b, h, s, dh), jnp.float32)
+    v = rand(rng, (b, h, s, dh), jnp.float32)
+    bias = jnp.zeros((b, 1, t, s), jnp.float32)
+    kv_len = jnp.asarray([4, 10], jnp.int32)
+    out = ref_attention_varlen(q, k, v, bias, kv_len)
+    # batch 0 must ignore keys >= 4: perturbing them changes nothing
+    k2 = k.at[0, :, 4:, :].set(99.0)
+    v2 = v.at[0, :, 4:, :].set(-99.0)
+    out2 = ref_attention_varlen(q, k2, v2, bias, kv_len)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(out2[0]), atol=1e-5)
+    assert not np.allclose(np.asarray(out[1]), np.asarray(ref_attention_varlen(q, k2, v2, bias, jnp.asarray([4, 4]))[1]))
+
+
+def test_kernel_inside_jit_lowerable():
+    # the kernel must lower inside jit (the AOT path) without python leaks
+    b, h, t, dh = 1, 2, 10, 8
+
+    @jax.jit
+    def f(q, k, v, bias):
+        return draft_attention(q, k, v, bias)
+
+    rng = np.random.default_rng(3)
+    q = rand(rng, (b, h, t, dh), jnp.float32)
+    bias = jnp.zeros((1, 1, t, t), jnp.float32)
+    out = f(q, q, q, bias)
+    assert out.shape == (b, h, t, dh)
+
+
+def test_vmem_estimate_within_budget():
+    # serving shapes must fit a 16 MiB VMEM budget with the default tiles
+    assert vmem_estimate_bytes(8, 128, 64) < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_estimates():
+    assert mxu_utilization_estimate(15, 15, 16) <= 1.0
+    # perfectly-aligned shapes hit 1.0
+    assert mxu_utilization_estimate(8, 128, 128) == 1.0

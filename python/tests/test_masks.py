@@ -1,0 +1,92 @@
+"""§3.1 mask machinery: position-invariance (Fig 3), PARD equivalence, COD."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.masks import (
+    PrecomputedMask,
+    attend_allowed,
+    cod_sample,
+    expected_total_rows,
+    full_mask_dense,
+    pard_mask,
+    rows_from_anchors,
+)
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+def test_depth0_is_causal():
+    m = full_mask_dense(8, 1)
+    assert (m == np.tril(np.ones((8, 8), bool))).all()
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(2, 24), k=st.integers(1, 8))
+def test_dense_matches_scalar_predicate(n, k):
+    m = full_mask_dense(n, k)
+    ids = np.arange(n * k)
+    for r in ids[:: max(1, len(ids) // 40)]:
+        for c in ids[:: max(1, len(ids) // 40)]:
+            assert m[r, c] == attend_allowed(r // k, r % k, c // k, c % k)
+
+
+@settings(**SETTINGS)
+@given(n_long=st.integers(2, 40), k=st.integers(1, 8), data=st.data())
+def test_fig3_position_invariance(n_long, k, data):
+    """Paper Fig 3: shorter mask == top-left submatrix of a longer mask."""
+    n_short = data.draw(st.integers(1, n_long))
+    long = PrecomputedMask(n_long, k)
+    short = full_mask_dense(n_short, k)
+    view = long.slice_view(n_short)
+    assert view.shape == short.shape
+    assert (view == short).all()
+
+
+def test_slice_view_is_view_not_copy():
+    pm = PrecomputedMask(32, 4)
+    v = pm.slice_view(8)
+    assert v.base is pm.mask  # numpy view — O(1), no allocation
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(2, 24), k=st.integers(1, 6), seed=st.integers(0, 999))
+def test_pard_equals_amortized_gather(n, k, seed):
+    rng = np.random.default_rng(seed)
+    anchors = cod_sample(n, k, 0.8, rng)
+    rows = rows_from_anchors(anchors, n, k)
+    if len(rows) == 0:
+        return
+    pm = PrecomputedMask(n, k)
+    np.testing.assert_array_equal(pm.gather(rows), pard_mask(rows, k))
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(4, 100), k=st.integers(1, 8), seed=st.integers(0, 999))
+def test_cod_nested_and_counted(n, k, seed):
+    rng = np.random.default_rng(seed)
+    r = 0.8
+    anchors = cod_sample(n, k, r, rng)
+    assert (anchors[0] == np.arange(n)).all()
+    for d in range(1, k):
+        want = min(int(round(n * r ** d)), len(anchors[d - 1]))
+        assert len(anchors[d]) == want
+        assert set(anchors[d]) <= set(anchors[d - 1])  # nested (Alg 1 needs this)
+
+
+def test_chain_parents_always_sampled():
+    # nested anchors => every row (p,d) has its chain parent (p-1,d-1)
+    rng = np.random.default_rng(7)
+    n, k = 64, 8
+    anchors = cod_sample(n, k, 0.8, rng)
+    rowset = set(rows_from_anchors(anchors, n, k).tolist())
+    for rid in rowset:
+        p, d = rid // k, rid % k
+        if d >= 1 and p - 1 <= n - 2:
+            parent = (p - 1) * k + (d - 1)
+            assert parent in rowset, f"({p},{d}) missing parent"
+
+
+def test_expected_rows_formula():
+    # paper §3.2 example: 8192 tokens, K=8, r=0.8 -> ~34K positions
+    assert abs(expected_total_rows(8192, 8, 0.8) - 34e3) < 1.5e3

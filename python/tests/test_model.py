@@ -1,0 +1,152 @@
+"""L2 target model: shapes, KV-cache serving-path consistency, feature taps."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import S_MAX, TARGETS
+from compile.model import (
+    init_target,
+    prefill,
+    target_features,
+    target_forward_train,
+    target_loss,
+    verify,
+    zero_kv,
+)
+
+
+@pytest.fixture(scope="module")
+def tm():
+    cfg = TARGETS["target-m"]
+    params = init_target(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def toks(rng, shape):
+    return jnp.asarray(rng.integers(4, 250, size=shape), jnp.int32)
+
+
+def test_train_forward_shapes(tm):
+    cfg, p = tm
+    rng = np.random.default_rng(0)
+    t = toks(rng, (3, 20))
+    logits = target_forward_train(p, cfg, t)
+    assert logits.shape == (3, 20, cfg.vocab)
+    loss = target_loss(p, cfg, t)
+    assert np.isfinite(float(loss))
+    # random init ≈ uniform loss
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.0
+
+
+def test_feature_taps_shape_and_distinct(tm):
+    cfg, p = tm
+    rng = np.random.default_rng(1)
+    t = toks(rng, (2, 16))
+    feats, logits = target_features(p, cfg, t)
+    assert feats.shape == (2, 16, 3 * cfg.d_model)
+    d = cfg.d_model
+    f = np.asarray(feats)
+    # the three taps are different layers — they must differ
+    assert not np.allclose(f[..., :d], f[..., d:2 * d])
+    assert not np.allclose(f[..., d:2 * d], f[..., 2 * d:])
+
+
+def test_prefill_respects_prompt_len(tm):
+    """Padding garbage beyond prompt_len must not affect the last-position
+    logits or the features of real positions."""
+    cfg, p = tm
+    rng = np.random.default_rng(2)
+    P = 24
+    base = np.asarray(toks(rng, (1, P)))
+    a = base.copy()
+    b = base.copy()
+    b[0, 12:] = 77  # different garbage beyond prompt_len=12
+    plen = jnp.asarray([12], jnp.int32)
+    kv = zero_kv(cfg, 1)
+    la, fa, _ = prefill(p, cfg, jnp.asarray(a), plen, kv)
+    lb, fb, _ = prefill(p, cfg, jnp.asarray(b), plen, kv)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(fa)[:, :12], np.asarray(fb)[:, :12], atol=1e-5
+    )
+
+
+def test_prefill_verify_matches_full_forward(tm):
+    """The KV-cached serving path (prefill + chained verifies) must produce
+    the same logits/features as one full forward — the invariant the whole
+    engine rests on."""
+    cfg, p = tm
+    rng = np.random.default_rng(3)
+    plen, k = 18, 5
+    seq = np.asarray(toks(rng, (1, plen + 2 * (k + 1))))
+    prompt = np.full((1, 24), 0, np.int32)
+    prompt[:, :plen] = seq[:, :plen]
+
+    kv = zero_kv(cfg, 1)
+    last_logits, feats0, kv = prefill(
+        p, cfg, jnp.asarray(prompt), jnp.asarray([plen], jnp.int32), kv)
+
+    # two chained verify calls walking the sequence
+    c1 = seq[:, plen:plen + k + 1]
+    l1, f1, kv = verify(p, cfg, jnp.asarray(c1), jnp.asarray([plen], jnp.int32), kv)
+    c2 = seq[:, plen + k + 1:plen + 2 * (k + 1)]
+    l2, f2, kv = verify(
+        p, cfg, jnp.asarray(c2), jnp.asarray([plen + k + 1], jnp.int32), kv)
+
+    feats_full, logits_full = target_features(p, cfg, jnp.asarray(seq))
+    np.testing.assert_allclose(
+        np.asarray(l1[0]), np.asarray(logits_full[0, plen:plen + k + 1]),
+        atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(f2[0]), np.asarray(feats_full[0, plen + k + 1:plen + 2 * (k + 1)]),
+        atol=2e-4, rtol=2e-4)
+    # prefill last-position logits match too
+    np.testing.assert_allclose(
+        np.asarray(last_logits[0]), np.asarray(logits_full[0, plen - 1]),
+        atol=2e-4, rtol=2e-4)
+
+
+def test_verify_partial_accept_overwrite(tm):
+    """Rejected-draft KV entries must be safely overwritten by the next
+    verify (the overwrite-safety argument in DESIGN.md)."""
+    cfg, p = tm
+    rng = np.random.default_rng(4)
+    plen, k = 16, 4
+    prompt = np.zeros((1, 24), np.int32)
+    prompt[:, :plen] = np.asarray(toks(rng, (1, plen)))
+    kv = zero_kv(cfg, 1)
+    _, _, kv = prefill(p, cfg, jnp.asarray(prompt), jnp.asarray([plen], jnp.int32), kv)
+
+    # verify a junk chunk, accept only 1 token (cache_len advances by 2)
+    junk = toks(rng, (1, k + 1))
+    _, _, kv = verify(p, cfg, junk, jnp.asarray([plen], jnp.int32), kv)
+    good = toks(rng, (1, k + 1))
+    accepted = 2
+    l2, _, kv = verify(p, cfg, good, jnp.asarray([plen + accepted], jnp.int32), kv)
+
+    # reference: full forward over prompt + junk[:accepted] + good
+    ref_seq = np.concatenate(
+        [prompt[:, :plen], np.asarray(junk)[:, :accepted], np.asarray(good)], axis=1)
+    _, logits_full = target_features(p, cfg, jnp.asarray(ref_seq))
+    np.testing.assert_allclose(
+        np.asarray(l2[0]),
+        np.asarray(logits_full[0, plen + accepted:]),
+        atol=2e-4, rtol=2e-4)
+
+
+def test_kv_capacity_asserts():
+    cfg = TARGETS["target-m"]
+    kv = zero_kv(cfg, 2)
+    assert kv.shape == (cfg.n_layers, 2, 2, S_MAX, cfg.n_heads, cfg.head_dim)
+
+
+def test_all_targets_init():
+    for name, cfg in TARGETS.items():
+        p = init_target(jax.random.PRNGKey(1), cfg)
+        assert p["embed"].shape == (cfg.vocab, cfg.d_model)
+        assert len(p["blocks"]) == cfg.n_layers
+        lo, mid, hi = cfg.feature_layers
+        assert lo < cfg.n_layers and hi == cfg.n_layers - 1
+        assert len(set(cfg.feature_layers)) == 3, name

@@ -1,0 +1,154 @@
+"""Training framework: row preparation, loss descent, variant plumbing."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import (
+    MASK_ID, TARGETS, DrafterConfig, TrainConfig, all_drafters,
+    drafter_train_config, get_drafter,
+)
+from compile.masks import PrecomputedMask
+from compile.model import init_target, target_features
+from compile.optim import adam_init, adam_update, linear_schedule
+from compile.train import max_rows, prepare_ar_example, prepare_example, train_drafter
+
+
+@pytest.fixture(scope="module")
+def teacher():
+    cfg = TARGETS["target-m"]
+    params = init_target(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_prepare_example_contract(teacher):
+    cfg, tp = teacher
+    n = 48
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(4, 250, size=n).astype(np.int32)
+    feats = np.asarray(target_features(tp, cfg, jnp.asarray(tokens[None]))[0][0])
+    tc = TrainConfig(seq_len=n, k_train=6)
+    src = PrecomputedMask(n, 6)
+    rp = max_rows(tc.__class__(seq_len=n, k_train=6))
+    batches = prepare_example(tokens, feats, tc, src, rng, rp=rp)
+    assert len(batches) == 1
+    b = batches[0]
+    valid = b["valid"][0]
+    d = b["depth"][0][valid]
+    p = b["pos"][0][valid]
+    tok = b["tok_in"][0][valid]
+    lab = b["label"][0][valid]
+    # depth-0 rows carry real tokens; MTP rows carry MASK
+    assert (tok[d == 0] == tokens[p[d == 0] + 1]).all()
+    assert (tok[d > 0] == MASK_ID).all()
+    assert (lab == tokens[p + 2]).all()
+    # mask diag (self-attention) set for valid rows
+    m = b["mask"][0]
+    idx = np.where(valid)[0]
+    assert m[idx, idx].all()
+
+
+def test_prepare_example_segments_partition_losses(teacher):
+    cfg, tp = teacher
+    n = 64
+    rng = np.random.default_rng(1)
+    tokens = rng.integers(4, 250, size=n).astype(np.int32)
+    feats = np.asarray(target_features(tp, cfg, jnp.asarray(tokens[None]))[0][0])
+    tc = TrainConfig(seq_len=n, segments=3)
+    src = PrecomputedMask(n, tc.k_train)
+    rng2 = np.random.default_rng(1)
+    full = prepare_example(tokens, feats, TrainConfig(seq_len=n), src,
+                           np.random.default_rng(1))
+    segs = prepare_example(tokens, feats, tc, src, rng2)
+    n_loss_full = sum(b["loss_w"].sum() for b in full)
+    n_loss_segs = sum(b["loss_w"].sum() for b in segs)
+    assert n_loss_full == n_loss_segs  # every row's loss owned exactly once
+
+
+def test_prepare_ar_example(teacher):
+    cfg, tp = teacher
+    rng = np.random.default_rng(2)
+    tokens = rng.integers(4, 250, size=32).astype(np.int32)
+    feats = np.asarray(target_features(tp, cfg, jnp.asarray(tokens[None]))[0][0])
+    b = prepare_ar_example(tokens, feats)[0]
+    valid = b["valid"][0]
+    assert valid.sum() == 30  # m = n - 2
+    assert (b["depth"][0][valid] == 0).all()
+    m = b["mask"][0][:30, :30]
+    assert (m == np.tril(np.ones((30, 30), bool))).all()
+
+
+def test_max_rows_bounds_actual(teacher):
+    for seq_len, segments in [(32, 1), (48, 2), (96, 1), (96, 4)]:
+        tc = TrainConfig(seq_len=seq_len, segments=segments)
+        rp = max_rows(tc)
+        cfg, tp = teacher
+        rng = np.random.default_rng(seq_len)
+        tokens = rng.integers(4, 250, size=seq_len).astype(np.int32)
+        feats = np.zeros((seq_len, cfg.feature_dim), np.float32)
+        src = PrecomputedMask(seq_len, tc.k_train)
+        for b in prepare_example(tokens, feats, tc, src, rng, rp=rp):
+            assert b["valid"].shape[1] == rp
+
+
+def test_short_training_reduces_loss(teacher):
+    cfg, tp = teacher
+    dcfg = DrafterConfig(name="smoke", target="target-m", n_layers=1)
+    tc = TrainConfig(seq_len=48, steps=14, batch=2, lr=3e-3)
+    _, log, _ = train_drafter(tp, cfg, dcfg, tc, verbose=False)
+    assert log["loss"][-1] < log["loss"][0]
+
+
+def test_frozen_embeddings_stay_frozen(teacher):
+    cfg, tp = teacher
+    dcfg = DrafterConfig(name="fz", target="target-m", n_layers=1,
+                         freeze_embeddings=True)
+    tc = TrainConfig(seq_len=32, steps=4, batch=1)
+    params, _, _ = train_drafter(tp, cfg, dcfg, tc, verbose=False)
+    np.testing.assert_array_equal(
+        np.asarray(params["embed"]), np.asarray(tp["embed"][:, :dcfg.d_model]))
+
+
+def test_reg_variant_logs_alpha(teacher):
+    cfg, tp = teacher
+    dcfg = DrafterConfig(name="rg", target="target-m", n_layers=1,
+                         hidden_mode="reg_ntp")
+    tc = TrainConfig(seq_len=32, steps=4, batch=1)
+    params, log, _ = train_drafter(tp, cfg, dcfg, tc, verbose=False)
+    assert "alpha" in params and len(log["alpha"]) > 0
+
+
+def test_snapshots_taken(teacher):
+    cfg, tp = teacher
+    dcfg = DrafterConfig(name="sn", target="target-m", n_layers=1)
+    tc = TrainConfig(seq_len=32, steps=6, batch=1)
+    _, _, snaps = train_drafter(tp, cfg, dcfg, tc, snapshot_steps=(2, 4),
+                                verbose=False)
+    assert set(snaps) == {2, 4}
+
+
+def test_adam_and_schedule():
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.ones((4,))}
+    st_ = adam_init(p)
+    p2, st2 = adam_update(p, g, st_, 0.1)
+    assert (np.asarray(p2["w"]) < 1.0).all()
+    assert float(linear_schedule(0, 100, 1.0, 10)) == 0.0
+    assert abs(float(linear_schedule(10, 100, 1.0, 10)) - 1.0) < 1e-6
+    assert float(linear_schedule(100, 100, 1.0, 10)) == 0.0
+
+
+def test_variant_registry_complete():
+    names = {d.name for d in all_drafters()}
+    # every experiment's variants exist
+    for want in ["target-m-pe4", "target-m-pe2", "target-m-pe1", "target-m-ar",
+                 "target-m-hs-depth", "target-m-hs-reg", "target-m-frozen",
+                 "target-m-ktr5", "target-m-seq48", "target-l-pe-n512",
+                 "target-l-ps-n64", "target-l-pard-n64", "target-s-pe4"]:
+        assert want in names, want
+    # train-config plumbing
+    assert drafter_train_config(get_drafter("target-m-ktr5")).k_train == 5
+    assert drafter_train_config(get_drafter("target-m-seq48")).seq_len == 48
+    assert drafter_train_config(get_drafter("target-l-pard-n64")).mask_mode == "pard"
+    assert drafter_train_config(get_drafter("target-l-pe-n512")).segments == 4

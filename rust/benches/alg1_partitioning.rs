@@ -1,0 +1,41 @@
+//! Algorithm 1 — sequence partitioning: cost of the algorithm itself and
+//! the paper's O(L^2) -> O(L^2/S^2) peak-attention-memory claim (§3.2).
+//!
+//!     cargo bench --bench alg1_partitioning
+
+use p_eagle::masking::cod_sample_nested;
+use p_eagle::partition::{partition_rows, validate};
+use p_eagle::util::bench::{bench, Table};
+use p_eagle::util::rng::Rng;
+
+fn main() {
+    println!("=== Algorithm 1: sequence partitioning ===\n");
+    let (n, k, r) = (8192usize, 8usize, 0.8);
+    let mut rng = Rng::new(3);
+    let anchors = cod_sample_nested(n, k, r, &mut rng);
+
+    // partitioning cost
+    for s in [2usize, 4, 8] {
+        bench(&format!("partition n={n} K={k} S={s}"), 2, 20, || {
+            std::hint::black_box(partition_rows(&anchors, n, k, s));
+        });
+    }
+    println!();
+
+    // peak attention cells vs S (the memory claim) + validation
+    let mut tab = Table::new(&["S", "peak attn cells", "vs S=1", "paper model"]);
+    let base = partition_rows(&anchors, n, k, 1).peak_attention_cells();
+    for s in [1usize, 2, 4, 8, 16] {
+        let part = partition_rows(&anchors, n, k, s);
+        assert!(validate(&part, &anchors, n, k).is_empty());
+        let peak = part.peak_attention_cells();
+        tab.row(vec![
+            s.to_string(),
+            peak.to_string(),
+            format!("{:.1}%", peak as f64 / base as f64 * 100.0),
+            format!("O(L²/S²) → {:.1}%", 100.0 / (s * s) as f64),
+        ]);
+    }
+    tab.print();
+    println!("\n(the linear cumulative-key term makes large-S fall off slower than 1/S²,\n exactly as §3.2's 'plus cumulative depth-0 keys' notes)");
+}

@@ -1,0 +1,69 @@
+//! Table 10 — Output Tokens Per Second across speculation depths K ∈ {3,5,7}
+//! and concurrency C ∈ {2,4}, AR EAGLE-3 vs P-EAGLE, chain drafting.
+//!
+//! Paper shape to reproduce: AR throughput peaks at small K (drafting cost
+//! grows ~K); P-EAGLE keeps gaining to K=5-7 (one pass regardless of K);
+//! speedups ~1.1-1.36x at the best K; deeper drafter can lose at K=3.
+//!
+//!     cargo bench --bench table10_otps [-- --all-targets --quick]
+
+use p_eagle::report::bench_otps;
+use p_eagle::runtime::ModelRuntime;
+use p_eagle::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let all = args.iter().any(|a| a == "--all-targets");
+    let quick = args.iter().any(|a| a == "--quick");
+    let (reqs_per_c, max_new) = if quick { (2usize, 48) } else { (2usize, 64) };
+
+    let mut mr = ModelRuntime::load("artifacts")?;
+    let targets: Vec<&str> = if all {
+        vec!["target-l", "target-m", "target-s"]
+    } else {
+        vec!["target-m"]
+    };
+    let datasets = ["humaneval", "mtbench", "gsm8k"];
+
+    for target in targets {
+        println!("\n=== Table 10: OTPS — {target} ===");
+        for c in [2usize, 4] {
+            let total = reqs_per_c * c;
+            let mut tab = Table::new(&["method", "K", "HE", "MT", "GSM", "HE AL", "MT AL", "GSM AL"]);
+            let mut ar_best = [0f64; 3];
+            for method in ["ar", "pe4"] {
+                for k in [3usize, 5, 7] {
+                    let mut cells = Vec::new();
+                    let mut als = Vec::new();
+                    for (di, ds) in datasets.iter().enumerate() {
+                        let run = bench_otps(&mut mr, &format!("{target}-{method}"),
+                                             ds, k, c, total, max_new, 99)?;
+                        if method == "ar" {
+                            ar_best[di] = ar_best[di].max(run.otps);
+                        }
+                        cells.push(run.otps);
+                        als.push(run.acceptance_length);
+                    }
+                    let fmt_cell = |di: usize| {
+                        if method == "ar" {
+                            format!("{:.0}", cells[di])
+                        } else {
+                            format!("{:.0} ({:.2}x)", cells[di],
+                                    cells[di] / ar_best[di].max(1e-9))
+                        }
+                    };
+                    tab.row(vec![
+                        method.into(), k.to_string(),
+                        fmt_cell(0), fmt_cell(1), fmt_cell(2),
+                        format!("{:.2}", als[0]), format!("{:.2}", als[1]),
+                        format!("{:.2}", als[2]),
+                    ]);
+                }
+            }
+            println!("\nC={c} ({total} requests/cell, max_new={max_new}):");
+            tab.print();
+        }
+    }
+    println!("\npaper shape: AR optimal at K=3; P-EAGLE scales to K=5-7; speedup 1.04-1.36x");
+    Ok(())
+}

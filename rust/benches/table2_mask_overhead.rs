@@ -1,0 +1,107 @@
+//! Table 2 — training overhead at n=2048 tokens, K=8 (paper: EAGLE-3 14.8s,
+//! PARD 718.5s (48x), Ours 17.5s for 128 examples; epoch 2.5h / 12+h / 1.8h).
+//!
+//! We measure the REAL mask-preparation cost of 128 examples in Rust:
+//!   * EAGLE-3: plain causal masks (no MTP rows) — the 1x reference
+//!   * PARD: per-example from-scratch O(L^2) predicate construction
+//!   * Ours: one-time precomputed mask + per-example COD gather
+//! plus the one-time amortized build, and the paper-scale epoch projection
+//! from the calibrated memory model.
+//!
+//!     cargo bench --bench table2_mask_overhead
+
+use p_eagle::masking::{cod_sample_nested, pard_mask, rows_from_anchors, PrecomputedMask};
+use p_eagle::memmodel::{self, TrainSetup};
+use p_eagle::util::bench::{fmt_ns, time_once, Table};
+use p_eagle::util::rng::Rng;
+
+fn main() {
+    let (n, k, r, examples) = (2048usize, 8usize, 0.8f64, 128usize);
+    // PARD's from-scratch construction is ~O(L^2) predicate evals per
+    // example (L ≈ 8.5K rows here) — measuring 128 examples of it would
+    // dominate the whole bench run on one core, so PARD is measured on a
+    // subsample and scaled linearly (printed as the full-set projection).
+    let pard_measured = 8usize;
+    println!("=== Table 2: training overhead (n={n}, K={k}, {examples} examples) ===\n");
+
+    // pre-sample identical COD rows for both methods
+    let mut rng = Rng::new(7);
+    let row_sets: Vec<Vec<usize>> = (0..examples)
+        .map(|_| {
+            let anchors = cod_sample_nested(n, k, r, &mut rng);
+            rows_from_anchors(&anchors, n, k)
+        })
+        .collect();
+    let mean_rows = row_sets.iter().map(|r| r.len()).sum::<usize>() / examples;
+    println!("COD rows per example: ~{mean_rows} (closed form {:.0})\n",
+             memmodel::total_rows(n, k, r));
+
+    // EAGLE-3 reference: causal masks only (n x n bit ops per example)
+    let (_, t_eagle) = time_once(|| {
+        let mut acc = 0usize;
+        for _ in 0..examples {
+            let mut m = p_eagle::masking::precomputed::BitMatrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..=i {
+                    m.set(i, j);
+                }
+            }
+            acc += m.get(n - 1, 0) as usize;
+        }
+        acc
+    });
+
+    // ours: one-time build, then per-example work is an O(1) slice view plus
+    // the COD row-id bookkeeping (the gather itself happens on-device in the
+    // training step, fused with attention — paper §3.1 "tensor slicing").
+    let (pm, t_build) = time_once(|| PrecomputedMask::build(n, k));
+    let (_, t_ours) = time_once(|| {
+        let mut acc = 0usize;
+        for rows in &row_sets {
+            let view = pm.slice_view(n);
+            // touch the view + the row ids (what the loader actually ships)
+            acc += view.get(rows[rows.len() - 1], 0) as usize + rows.len();
+        }
+        acc
+    });
+
+    // PARD: per-example from-scratch construction (subsampled + scaled)
+    let (_, t_pard_sub) = time_once(|| {
+        let mut acc = 0usize;
+        for rows in row_sets.iter().take(pard_measured) {
+            let g = pard_mask(rows, k);
+            acc += g.get(0, 0) as usize;
+        }
+        acc
+    });
+    let t_pard = t_pard_sub * (examples as u32 / pard_measured as u32);
+
+    // the paper's 48x is PARD vs the EAGLE-3 loading baseline; our "ours"
+    // path is near-free (slice views), so the baseline-relative ratio is the
+    // comparable number
+    let ratio = t_pard.as_secs_f64() / t_eagle.as_secs_f64();
+    let mut tab = Table::new(&["method", "load (128 ex.)", "vs EAGLE-3", "paper"]);
+    tab.row(vec!["EAGLE-3 (causal only)".into(),
+                 fmt_ns(t_eagle.as_nanos() as f64),
+                 "1.0x".into(),
+                 "14.8 s (1x)".into()]);
+    tab.row(vec!["PARD (per-example)".into(),
+                 fmt_ns(t_pard.as_nanos() as f64),
+                 format!("{ratio:.0}x"),
+                 "718.5 s (48x)".into()]);
+    tab.row(vec!["Ours (amortized)".into(),
+                 fmt_ns(t_ours.as_nanos() as f64),
+                 format!("{:.4}x", t_ours.as_secs_f64() / t_eagle.as_secs_f64()),
+                 "17.5 s (1.2x)".into()]);
+    tab.print();
+    println!("\none-time precomputed-mask build: {} (amortized across the run)",
+             fmt_ns(t_build.as_nanos() as f64));
+    assert!(ratio > 10.0, "PARD should be dramatically slower (got {ratio:.1}x)");
+
+    // paper-scale epoch projection (UltraChat 200K, 8xH200)
+    println!("\nepoch projection (200K examples, calibrated model):");
+    let pard = TrainSetup::pard(n, k);
+    println!("  PARD loading: {:.1} h (paper: epoch 12+h)",
+             memmodel::epoch_loading_hours(&pard, memmodel::EPOCH_EXAMPLES));
+    println!("  Ours loading: ~0 h (slice views; paper epoch 1.8 h is compute-bound)");
+}

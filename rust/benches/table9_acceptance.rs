@@ -1,0 +1,53 @@
+//! Table 9 — acceptance length: AR EAGLE-3 vs P-EAGLE (4L) across the three
+//! target models and three OOD benchmarks (K=5).
+//!
+//! Paper shape to reproduce: P-EAGLE(4L) matches or exceeds AR EAGLE-3 on
+//! all 9 model x dataset cells (avg +2.0% to +4.5%); absolute values differ
+//! (mini testbed).
+//!
+//!     cargo bench --bench table9_acceptance [-- --quick]
+
+use p_eagle::report::eval_acceptance;
+use p_eagle::runtime::ModelRuntime;
+use p_eagle::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (n_req, max_new) = if quick { (3, 48) } else { (6, 80) };
+    let mut mr = ModelRuntime::load("artifacts")?;
+    let k = mr.manifest.default_k;
+    let datasets = ["humaneval", "mtbench", "gsm8k"];
+    let paper_name = [("target-l", "GPT-OSS 120B"), ("target-m", "GPT-OSS 20B"),
+                      ("target-s", "Qwen3-Coder 30B")];
+
+    println!("=== Table 9: acceptance length, K={k}, {n_req} requests/cell ===\n");
+    let mut tab = Table::new(&["model (paper analog)", "dataset", "AR EAGLE-3",
+                               "P-EAGLE (4L)", "Δ%"]);
+    for (target, paper) in paper_name {
+        let mut avg = (0.0, 0.0);
+        for ds in datasets {
+            let ar = eval_acceptance(&mut mr, &format!("{target}-ar"), ds, k, n_req, max_new)?;
+            let pe = eval_acceptance(&mut mr, &format!("{target}-pe4"), ds, k, n_req, max_new)?;
+            avg.0 += ar.acceptance_length;
+            avg.1 += pe.acceptance_length;
+            tab.row(vec![
+                format!("{target} ({paper})"),
+                ds.into(),
+                format!("{:.2}", ar.acceptance_length),
+                format!("{:.2}", pe.acceptance_length),
+                format!("{:+.1}%", (pe.acceptance_length - ar.acceptance_length)
+                        / ar.acceptance_length * 100.0),
+            ]);
+        }
+        tab.row(vec![
+            format!("{target} ({paper})"),
+            "Average".into(),
+            format!("{:.2}", avg.0 / 3.0),
+            format!("{:.2}", avg.1 / 3.0),
+            format!("{:+.1}%", (avg.1 - avg.0) / avg.0 * 100.0),
+        ]);
+    }
+    tab.print();
+    println!("\npaper: averages AR 3.1/3.7/3.5 vs P-EAGLE 3.3/3.7/3.6 (+4.5%/+2.5%/+2.0%)");
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! debug-probe — runtime diagnostics for the AOT artifacts.
+//!
+//!     cargo run --release --bin compile_probe -- [artifacts] [--exec NAME]
+//!
+//! Checks every manifest executable parses + compiles, cross-checks entry
+//! parameter counts against the manifest's param_order (the keep_unused and
+//! elided-constant failure modes documented in DESIGN.md §Interchange
+//! gotchas), and spot-runs the engine on one request per serving drafter.
+
+use p_eagle::config::Manifest;
+use p_eagle::coordinator::{run_closed_loop, EngineConfig, Sampling};
+use p_eagle::runtime::{ModelRuntime, Runtime};
+use p_eagle::util::cli::Args;
+use p_eagle::workload::corpus::load_eval_prompts;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let root = args.positional.first().cloned().unwrap_or_else(|| "artifacts".into());
+    let manifest = Manifest::load(&root)?;
+    let mut rt = Runtime::cpu()?;
+
+    let only = args.get("exec");
+    let mut bad = 0;
+    for e in &manifest.executables {
+        if let Some(name) = only {
+            if e.name != name {
+                continue;
+            }
+        }
+        let path = manifest.abs(&e.path);
+        let text = std::fs::read_to_string(&path)?;
+        // gotcha #1: elided constants parse as zeros
+        if text.contains("{...}") {
+            println!("FAIL {}: elided constant in HLO text", e.name);
+            bad += 1;
+            continue;
+        }
+        // gotcha #2: pruned parameters shift the weight argument order
+        let header = text.lines().next().unwrap_or_default();
+        let args_part = header.split("->").next().unwrap_or_default();
+        let n_args = args_part.matches("f32[").count()
+            + args_part.matches("s32[").count()
+            + args_part.matches("pred[").count();
+        let expected_weights = match e.kind.as_str() {
+            "prefill" | "verify" => Some(
+                manifest.target(e.model.as_deref().unwrap())?.param_order.len() + 3,
+            ),
+            "draft" => Some(
+                manifest.drafter(e.drafter.as_deref().unwrap())?.param_order.len() + 3,
+            ),
+            _ => None,
+        };
+        if let Some(want) = expected_weights {
+            if n_args != want {
+                println!("FAIL {}: {} entry args, manifest implies {}", e.name, n_args, want);
+                bad += 1;
+                continue;
+            }
+        }
+        if let Err(err) = rt.load(&e.name, &path) {
+            println!("FAIL {}: compile: {err:#}", e.name);
+            bad += 1;
+        }
+    }
+    println!(
+        "checked {} executables: {} ok, {bad} failed (compile time {:?})",
+        rt.loaded_count() + bad,
+        rt.loaded_count(),
+        rt.compile_time
+    );
+    anyhow::ensure!(bad == 0, "{bad} executables failed validation");
+
+    // engine spot-run per serving drafter
+    drop(rt);
+    let mut mr = ModelRuntime::load(&root)?;
+    let pool = load_eval_prompts(&mr.manifest.abs("eval/humaneval.json"))?;
+    for target in ["target-l", "target-m", "target-s"] {
+        for method in ["ar", "pe4"] {
+            let drafter = format!("{target}-{method}");
+            let cfg = EngineConfig {
+                target: target.into(),
+                drafter: drafter.clone(),
+                k: 5,
+                batch: 1,
+                max_new_tokens: 16,
+                sampling: Sampling::Greedy,
+                seed: 5,
+            };
+            let spec = p_eagle::workload::RequestSpec {
+                id: 0,
+                prompt: pool[0].clone(),
+                max_new_tokens: 16,
+                arrival_s: 0.0,
+            };
+            let mut g = Some(spec);
+            let (res, _) = run_closed_loop(&mut mr, &cfg, 1, 1, || g.take().unwrap())?;
+            println!("spot {drafter}: AL {:.2}, {} tokens", res[0].acceptance_length(), res[0].tokens.len());
+        }
+    }
+    Ok(())
+}

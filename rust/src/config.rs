@@ -1,0 +1,223 @@
+//! Typed view over artifacts/manifest.json — the contract between the
+//! Python build path (python/compile/aot.py) and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+use crate::workload::PhraseRegime;
+
+#[derive(Clone, Debug)]
+pub struct TargetInfo {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub feature_dim: usize,
+    pub vocab: usize,
+    pub weights: String,
+    pub param_order: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct DrafterInfo {
+    pub name: String,
+    pub target: String,
+    pub kind: String, // peagle | ar | parallelspec
+    pub n_layers: usize,
+    pub hidden_mode: String,
+    pub weights: String,
+    pub param_order: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExecutableInfo {
+    pub name: String,
+    pub path: String,
+    pub kind: String, // prefill | verify | draft | selftest
+    pub model: Option<String>,
+    pub drafter: Option<String>,
+    pub batch: Option<usize>,
+    pub k: Option<usize>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub vocab: usize,
+    pub s_max: usize,
+    pub prompt_pad: usize,
+    pub ctx_window: usize,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub mask_id: i32,
+    pub spec_depths: Vec<usize>,
+    pub batch_sizes: Vec<usize>,
+    pub default_k: usize,
+    pub targets: BTreeMap<String, TargetInfo>,
+    pub drafters: BTreeMap<String, DrafterInfo>,
+    pub executables: Vec<ExecutableInfo>,
+    pub regimes: BTreeMap<String, PhraseRegime>,
+    pub eval_prompts: BTreeMap<String, String>,
+    pub training_logs: Json,
+    pub table1_contexts: BTreeMap<usize, String>,
+}
+
+impl Manifest {
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+
+        let usize_arr = |key: &str| -> Vec<usize> {
+            v.req(key).as_arr().unwrap().iter().map(|x| x.as_usize().unwrap()).collect()
+        };
+
+        let mut targets = BTreeMap::new();
+        for (name, t) in v.req("targets").as_obj().unwrap() {
+            targets.insert(
+                name.clone(),
+                TargetInfo {
+                    name: name.clone(),
+                    d_model: t.usize_of("d_model"),
+                    n_layers: t.usize_of("n_layers"),
+                    n_heads: t.usize_of("n_heads"),
+                    head_dim: t.usize_of("head_dim"),
+                    feature_dim: t.usize_of("feature_dim"),
+                    vocab: t.usize_of("vocab"),
+                    weights: t.str_of("weights"),
+                    param_order: t
+                        .req("param_order")
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.as_str().unwrap().to_string())
+                        .collect(),
+                },
+            );
+        }
+
+        let mut drafters = BTreeMap::new();
+        for (name, d) in v.req("drafters").as_obj().unwrap() {
+            drafters.insert(
+                name.clone(),
+                DrafterInfo {
+                    name: name.clone(),
+                    target: d.str_of("target"),
+                    kind: d.str_or("kind", "peagle"),
+                    n_layers: d.usize_of("n_layers"),
+                    hidden_mode: d.str_or("hidden_mode", "shared"),
+                    weights: d.str_of("weights"),
+                    param_order: d
+                        .req("param_order")
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|x| x.as_str().unwrap().to_string())
+                        .collect(),
+                },
+            );
+        }
+
+        let executables = v
+            .req("executables")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| ExecutableInfo {
+                name: e.str_of("name"),
+                path: e.str_of("path"),
+                kind: e.str_of("kind"),
+                model: e.get("model").and_then(|x| x.as_str()).map(String::from),
+                drafter: e.get("drafter").and_then(|x| x.as_str()).map(String::from),
+                batch: e.get("batch").and_then(|x| x.as_usize()),
+                k: e.get("k").and_then(|x| x.as_usize()),
+            })
+            .collect();
+
+        let mut regimes = BTreeMap::new();
+        for (name, r) in v.req("regimes").as_obj().unwrap() {
+            regimes.insert(name.clone(), PhraseRegime::from_json(r));
+        }
+
+        let mut eval_prompts = BTreeMap::new();
+        for (name, p) in v.req("eval_prompts").as_obj().unwrap() {
+            eval_prompts.insert(name.clone(), p.as_str().unwrap().to_string());
+        }
+
+        let mut table1_contexts = BTreeMap::new();
+        if let Some(tc) = v.get("table1_contexts").and_then(|x| x.as_obj()) {
+            for (k, lbl) in tc {
+                table1_contexts
+                    .insert(k.parse().unwrap_or(0), lbl.as_str().unwrap_or("").to_string());
+            }
+        }
+
+        Ok(Manifest {
+            root,
+            vocab: v.usize_of("vocab"),
+            s_max: v.usize_of("s_max"),
+            prompt_pad: v.usize_of("prompt_pad"),
+            ctx_window: v.usize_of("ctx_window"),
+            pad_id: v.usize_of("pad_id") as i32,
+            bos_id: v.usize_of("bos_id") as i32,
+            eos_id: v.usize_of("eos_id") as i32,
+            mask_id: v.usize_of("mask_id") as i32,
+            spec_depths: usize_arr("spec_depths"),
+            batch_sizes: usize_arr("batch_sizes"),
+            default_k: v.usize_of("default_k"),
+            targets,
+            drafters,
+            executables,
+            regimes,
+            eval_prompts,
+            training_logs: v.get("training_logs").cloned().unwrap_or(Json::Obj(vec![])),
+            table1_contexts,
+        })
+    }
+
+    pub fn target(&self, name: &str) -> Result<&TargetInfo> {
+        self.targets.get(name).ok_or_else(|| anyhow!("unknown target {name}"))
+    }
+
+    pub fn drafter(&self, name: &str) -> Result<&DrafterInfo> {
+        self.drafters.get(name).ok_or_else(|| anyhow!("unknown drafter {name}"))
+    }
+
+    pub fn find_exec(
+        &self,
+        kind: &str,
+        model: Option<&str>,
+        drafter: Option<&str>,
+        batch: Option<usize>,
+        k: Option<usize>,
+    ) -> Result<&ExecutableInfo> {
+        self.executables
+            .iter()
+            .find(|e| {
+                e.kind == kind
+                    && (model.is_none() || e.model.as_deref() == model)
+                    && (drafter.is_none() || e.drafter.as_deref() == drafter)
+                    && (batch.is_none() || e.batch == batch)
+                    && (k.is_none() || e.k == k)
+            })
+            .ok_or_else(|| {
+                anyhow!("no executable kind={kind} model={model:?} drafter={drafter:?} b={batch:?} k={k:?}")
+            })
+    }
+
+    pub fn abs(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    /// Serving drafter name for (target, method) where method ∈ {ar, pe4, pe2}.
+    pub fn serving_drafter(&self, target: &str, method: &str) -> String {
+        format!("{target}-{method}")
+    }
+}

@@ -1,0 +1,288 @@
+//! The speculative-decoding engine: drives one *wave* (a fixed-batch group
+//! of requests sharing a KV buffer) through prefill → {draft → verify →
+//! accept} → finish.
+//!
+//! Drafting strategy is data: the `drafter` executable named in the config
+//! is either an AR EAGLE-3 scan (K sequential passes inside the HLO) or a
+//! P-EAGLE single-pass parallel drafter — the engine logic is identical,
+//! which is exactly the paper's deployment story (a drop-in drafter swap in
+//! vLLM).
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::kv_cache::SlotManager;
+use super::metrics::EngineMetrics;
+use super::request::{FinishReason, RequestResult, RequestSpec};
+use super::sampler::{accept_chain, sample, Sampling};
+use crate::runtime::{HostTensor, ModelRuntime};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub target: String,
+    /// manifest drafter name (e.g. "target-m-pe4" or "target-m-ar")
+    pub drafter: String,
+    pub k: usize,
+    /// wave width == executable batch size
+    pub batch: usize,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+    pub seed: u64,
+}
+
+struct WaveSlot {
+    spec: RequestSpec,
+    /// false for padding rows that fill the fixed batch
+    real: bool,
+    finished: Option<FinishReason>,
+    generated: Vec<i32>,
+    last_tok: i32,
+    /// rolling drafter context: tokens at consecutive positions
+    ctx_tokens: Vec<i32>,
+    /// features at those positions minus one, flattened [C * fdim]
+    ctx_feats: Vec<f32>,
+    /// absolute position of `last_tok`
+    pos_last: usize,
+    iterations: usize,
+    accepted_sum: usize,
+    t_start: Instant,
+}
+
+impl WaveSlot {
+    fn push_ctx(&mut self, token: i32, feat: &[f32], fdim: usize) {
+        self.ctx_tokens.rotate_left(1);
+        *self.ctx_tokens.last_mut().unwrap() = token;
+        self.ctx_feats.copy_within(fdim.., 0);
+        let off = self.ctx_feats.len() - fdim;
+        self.ctx_feats[off..].copy_from_slice(feat);
+    }
+}
+
+/// Process one wave of at most `cfg.batch` requests to completion.
+pub fn run_wave(
+    mr: &mut ModelRuntime,
+    cfg: &EngineConfig,
+    requests: Vec<RequestSpec>,
+    metrics: &mut EngineMetrics,
+) -> Result<Vec<RequestResult>> {
+    let b = cfg.batch;
+    let k = cfg.k;
+    assert!(!requests.is_empty() && requests.len() <= b);
+    let n_real = requests.len();
+
+    let te = mr.ensure_target(&cfg.target, b, k)?;
+    let de = mr.ensure_drafter(&cfg.drafter, b, k)?;
+    let fdim = mr.manifest.target(&cfg.target)?.feature_dim;
+    let c = mr.manifest.ctx_window;
+    let p_pad = mr.manifest.prompt_pad;
+    let s_max = mr.manifest.s_max;
+    let (pad_id, eos_id) = (mr.manifest.pad_id, mr.manifest.eos_id);
+    let mut rng = Rng::new(cfg.seed ^ 0xE4617E);
+
+    // --- assemble the padded wave -------------------------------------
+    let mut specs = requests;
+    while specs.len() < b {
+        // padding rows recycle the first request's prompt; results discarded
+        let mut pad = specs[0].clone();
+        pad.id = u64::MAX;
+        specs.push(pad);
+    }
+    for s in &specs {
+        if s.prompt.len() > p_pad {
+            bail!("prompt len {} > prompt_pad {p_pad}", s.prompt.len());
+        }
+        if s.prompt.len() < c {
+            bail!("prompt len {} < ctx_window {c}", s.prompt.len());
+        }
+    }
+
+    // --- prefill --------------------------------------------------------
+    let mut tok_buf = vec![pad_id; b * p_pad];
+    let mut len_buf = vec![0i32; b];
+    for (i, s) in specs.iter().enumerate() {
+        tok_buf[i * p_pad..i * p_pad + s.prompt.len()].copy_from_slice(&s.prompt);
+        len_buf[i] = s.prompt.len() as i32;
+    }
+    let kv0 = mr.zero_kv(&cfg.target, b)?;
+    let t0 = Instant::now();
+    let pre = mr.prefill(
+        &te,
+        &HostTensor::i32(&[b, p_pad], tok_buf),
+        &HostTensor::i32(&[b], len_buf),
+        &kv0,
+    )?;
+    metrics.prefill_time += t0.elapsed();
+    let mut kv = pre.kv;
+
+    let vocab = mr.manifest.vocab;
+    let mut slots: Vec<WaveSlot> = Vec::with_capacity(b);
+    let mut slotmgr = SlotManager::new(b, s_max, k + 1);
+    let pre_feats = pre.feats.as_f32()?;
+    let pre_logits = pre.last_logits.as_f32()?;
+    for (i, spec) in specs.iter().enumerate() {
+        let plen = spec.prompt.len();
+        let t_first = sample(&pre_logits[i * vocab..(i + 1) * vocab], cfg.sampling, &mut rng);
+        let mut ctx_tokens = Vec::with_capacity(c);
+        let mut ctx_feats = vec![0f32; c * fdim];
+        for j in 0..c {
+            let p = plen - c + 1 + j; // token position of ctx entry j
+            let token = if p < plen { spec.prompt[p] } else { t_first };
+            ctx_tokens.push(token);
+            // feature at position p-1 from the prefill features [B, P, fdim]
+            let off = (i * p_pad + (p - 1)) * fdim;
+            ctx_feats[j * fdim..(j + 1) * fdim].copy_from_slice(&pre_feats[off..off + fdim]);
+        }
+        slotmgr.claim(i, plen).map_err(|e| anyhow::anyhow!(e))?;
+        let real = i < n_real;
+        let mut slot = WaveSlot {
+            spec: spec.clone(),
+            real,
+            finished: None,
+            generated: vec![t_first],
+            last_tok: t_first,
+            ctx_tokens,
+            ctx_feats,
+            pos_last: plen,
+            iterations: 0,
+            accepted_sum: 0,
+            t_start: Instant::now(),
+        };
+        if t_first == eos_id {
+            slot.finished = Some(FinishReason::Eos);
+        } else if slot.generated.len() >= cfg.max_new_tokens {
+            slot.finished = Some(FinishReason::Length);
+        }
+        if real {
+            // the prefill's own sampled token counts toward throughput
+            metrics.tokens_emitted += 1;
+        }
+        slots.push(slot);
+    }
+
+    // --- spec-decode loop -------------------------------------------------
+    let max_iters = cfg.max_new_tokens * 2 + 8;
+    let mut ctx_tok_buf = vec![0i32; b * c];
+    let mut ctx_feat_buf = vec![0f32; b * c * fdim];
+    let mut pos_buf = vec![0i32; b];
+    let mut chunk_buf = vec![0i32; b * (k + 1)];
+    let mut emitted_now = vec![0usize; b];
+
+    for _iter in 0..max_iters {
+        if slots.iter().all(|s| s.finished.is_some()) {
+            break;
+        }
+        // draft inputs
+        let th = Instant::now();
+        for (i, s) in slots.iter().enumerate() {
+            ctx_tok_buf[i * c..(i + 1) * c].copy_from_slice(&s.ctx_tokens);
+            ctx_feat_buf[i * c * fdim..(i + 1) * c * fdim].copy_from_slice(&s.ctx_feats);
+            pos_buf[i] = (s.pos_last - 1) as i32; // row space = token pos - 1
+        }
+        metrics.host_time += th.elapsed();
+
+        let t1 = Instant::now();
+        let drafts = mr.draft(
+            &de,
+            &HostTensor::i32(&[b, c], ctx_tok_buf.clone()),
+            &HostTensor::f32(&[b, c, fdim], ctx_feat_buf.clone()),
+            &HostTensor::i32(&[b], pos_buf.clone()),
+        )?;
+        metrics.draft_time += t1.elapsed();
+        let draft_toks = drafts.as_i32()?;
+
+        // verify chunk = [last_tok, d_1..d_K]
+        for (i, s) in slots.iter().enumerate() {
+            chunk_buf[i * (k + 1)] = s.last_tok;
+            chunk_buf[i * (k + 1) + 1..(i + 1) * (k + 1)]
+                .copy_from_slice(&draft_toks[i * k..(i + 1) * k]);
+        }
+        let cache_len = slotmgr.cache_len_i32();
+        let t2 = Instant::now();
+        let ver = mr.verify(
+            &te,
+            &HostTensor::i32(&[b, k + 1], chunk_buf.clone()),
+            &HostTensor::i32(&[b], cache_len.clone()),
+            &kv,
+        )?;
+        metrics.verify_time += t2.elapsed();
+        kv = ver.kv;
+        let logits = ver.logits.as_f32()?;
+        let feats = ver.feats.as_f32()?;
+
+        // acceptance per live slot
+        let th2 = Instant::now();
+        for e in emitted_now.iter_mut() {
+            *e = 0;
+        }
+        for (i, s) in slots.iter_mut().enumerate() {
+            if s.finished.is_some() {
+                continue;
+            }
+            let rows: Vec<&[f32]> = (0..=k)
+                .map(|j| {
+                    let off = (i * (k + 1) + j) * vocab;
+                    &logits[off..off + vocab]
+                })
+                .collect();
+            let acc = accept_chain(
+                &draft_toks[i * k..(i + 1) * k],
+                &rows,
+                cfg.sampling,
+                &mut rng,
+            );
+            let q = cache_len[i] as usize; // chunk start = pos of last_tok
+            s.iterations += 1;
+            s.accepted_sum += acc.emitted.len();
+
+            let mut n_emit = 0usize;
+            for (m, &tok) in acc.emitted.iter().enumerate() {
+                let p = q + m + 1; // absolute position of this token
+                s.generated.push(tok);
+                n_emit += 1;
+                let foff = (i * (k + 1) + m) * fdim;
+                s.push_ctx(tok, &feats[foff..foff + fdim], fdim);
+                s.last_tok = tok;
+                s.pos_last = p;
+                if tok == eos_id {
+                    s.finished = Some(FinishReason::Eos);
+                    break;
+                }
+                if s.generated.len() >= cfg.max_new_tokens {
+                    s.finished = Some(FinishReason::Length);
+                    break;
+                }
+            }
+            emitted_now[i] = if s.real { n_emit } else { 0 };
+            if !slotmgr.advance(i, n_emit) && s.finished.is_none() {
+                s.finished = Some(FinishReason::CacheFull);
+            }
+        }
+        metrics.host_time += th2.elapsed();
+        metrics.record_iteration(&emitted_now);
+    }
+
+    // --- results -----------------------------------------------------------
+    let mut out = Vec::with_capacity(n_real);
+    for (i, s) in slots.into_iter().enumerate() {
+        if !s.real {
+            continue;
+        }
+        let finish = s.finished.unwrap_or(FinishReason::Length);
+        metrics.requests_finished += 1;
+        let latency = s.t_start.elapsed();
+        metrics.request_latencies.push(latency);
+        slotmgr.release(i);
+        out.push(RequestResult {
+            id: s.spec.id,
+            prompt_len: s.spec.prompt.len(),
+            tokens: s.generated,
+            finish,
+            iterations: s.iterations,
+            accepted_sum: s.accepted_sum,
+            latency,
+        });
+    }
+    Ok(out)
+}

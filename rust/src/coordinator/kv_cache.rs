@@ -1,0 +1,170 @@
+//! KV-cache slot accounting.
+//!
+//! The dense per-wave cache buffer (shape [L, 2, B, S_MAX, H, Dh]) lives on
+//! the PJRT device and is threaded through verify calls; this module owns
+//! the *accounting*: per-slot valid lengths, capacity admission (a slot must
+//! always fit prompt + chunk writes), and a vLLM-style paged utilization
+//! view (BLOCK_SIZE-token blocks) used by metrics and admission policy.
+
+pub const BLOCK_SIZE: usize = 16;
+
+#[derive(Clone, Debug)]
+pub struct SlotManager {
+    pub s_max: usize,
+    pub chunk: usize, // K+1: widest write a verify step performs
+    lens: Vec<usize>,
+    active: Vec<bool>,
+}
+
+impl SlotManager {
+    pub fn new(batch: usize, s_max: usize, chunk: usize) -> SlotManager {
+        SlotManager { s_max, chunk, lens: vec![0; batch], active: vec![false; batch] }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.lens.len()
+    }
+
+    /// Claim slot `i` for a request with `prompt_len` tokens. Fails if the
+    /// prompt plus one full speculation chunk cannot fit.
+    pub fn claim(&mut self, i: usize, prompt_len: usize) -> Result<(), String> {
+        if self.active[i] {
+            return Err(format!("slot {i} already active"));
+        }
+        if prompt_len + self.chunk > self.s_max {
+            return Err(format!("prompt {prompt_len} + chunk {} > s_max {}", self.chunk, self.s_max));
+        }
+        self.active[i] = true;
+        self.lens[i] = prompt_len;
+        Ok(())
+    }
+
+    /// Record `accepted + 1` new cached positions after a verify step.
+    /// Returns false when the slot can no longer fit another chunk (the
+    /// engine must finish the request — FinishReason::CacheFull).
+    pub fn advance(&mut self, i: usize, emitted: usize) -> bool {
+        debug_assert!(self.active[i]);
+        debug_assert!(emitted <= self.chunk);
+        self.lens[i] += emitted;
+        self.lens[i] + self.chunk <= self.s_max
+    }
+
+    pub fn release(&mut self, i: usize) {
+        self.active[i] = false;
+        self.lens[i] = 0;
+    }
+
+    pub fn len(&self, i: usize) -> usize {
+        self.lens[i]
+    }
+
+    pub fn is_active(&self, i: usize) -> bool {
+        self.active[i]
+    }
+
+    /// Paged-accounting view: blocks in use across all slots.
+    pub fn blocks_used(&self) -> usize {
+        self.lens
+            .iter()
+            .zip(&self.active)
+            .filter(|(_, &a)| a)
+            .map(|(&l, _)| l.div_ceil(BLOCK_SIZE))
+            .sum()
+    }
+
+    pub fn blocks_total(&self) -> usize {
+        self.batch() * self.s_max.div_ceil(BLOCK_SIZE)
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.blocks_used() as f64 / self.blocks_total() as f64
+    }
+
+    /// cache_len vector for the verify executable ([B] i32). Inactive slots
+    /// report 1 (a harmless minimal prefix) so padded rows stay in-bounds.
+    pub fn cache_len_i32(&self) -> Vec<i32> {
+        self.lens
+            .iter()
+            .zip(&self.active)
+            .map(|(&l, &a)| if a { l as i32 } else { 1 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Case};
+
+    #[test]
+    fn claim_advance_release() {
+        let mut m = SlotManager::new(2, 64, 6);
+        m.claim(0, 20).unwrap();
+        assert!(m.is_active(0));
+        assert_eq!(m.len(0), 20);
+        assert!(m.advance(0, 4));
+        assert_eq!(m.len(0), 24);
+        m.release(0);
+        assert!(!m.is_active(0));
+        assert_eq!(m.cache_len_i32(), vec![1, 1]);
+    }
+
+    #[test]
+    fn rejects_oversized_prompt() {
+        let mut m = SlotManager::new(1, 32, 6);
+        assert!(m.claim(0, 27).is_err());
+        assert!(m.claim(0, 26).is_ok());
+    }
+
+    #[test]
+    fn rejects_double_claim() {
+        let mut m = SlotManager::new(1, 64, 6);
+        m.claim(0, 8).unwrap();
+        assert!(m.claim(0, 8).is_err());
+    }
+
+    #[test]
+    fn advance_signals_capacity() {
+        let mut m = SlotManager::new(1, 32, 6);
+        m.claim(0, 20).unwrap();
+        assert!(m.advance(0, 6)); // 26 + 6 = 32 <= 32 ✓
+        assert!(!m.advance(0, 1)); // 27 + 6 > 32
+    }
+
+    #[test]
+    fn paged_accounting() {
+        let mut m = SlotManager::new(2, 64, 6);
+        m.claim(0, 17).unwrap(); // 2 blocks
+        m.claim(1, 16).unwrap(); // 1 block
+        assert_eq!(m.blocks_used(), 3);
+        assert_eq!(m.blocks_total(), 8);
+        assert!((m.utilization() - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_invariant_property() {
+        // a slot that claims + advances while advance() returns true can
+        // always fit one more chunk write
+        check("kv-capacity", 100, |rng| {
+            let s_max = 16 + rng.below(240);
+            let chunk = 2 + rng.below(8);
+            let mut m = SlotManager::new(1, s_max, chunk);
+            let prompt = 1 + rng.below(s_max);
+            if m.claim(0, prompt).is_err() {
+                return Case::Pass; // correctly rejected
+            }
+            loop {
+                if m.len(0) + chunk > s_max {
+                    return Case::Fail {
+                        desc: format!("len {} + chunk {chunk} > {s_max}", m.len(0)),
+                        size: s_max,
+                    };
+                }
+                let emitted = 1 + rng.below(chunk);
+                if !m.advance(0, emitted) {
+                    return Case::Pass;
+                }
+            }
+        });
+    }
+}

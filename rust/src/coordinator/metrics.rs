@@ -1,0 +1,125 @@
+//! Engine metrics: OTPS, acceptance length, latency percentiles, per-phase
+//! timing. Everything the Table 9/10 benches report comes from here.
+
+use std::time::Duration;
+
+#[derive(Clone, Debug, Default)]
+pub struct EngineMetrics {
+    pub requests_finished: usize,
+    pub tokens_emitted: usize,
+    pub iterations: usize,
+    pub accepted_sum: usize,
+    /// histogram over acceptance length (index = accepted drafts + bonus)
+    pub al_histogram: Vec<usize>,
+    pub draft_time: Duration,
+    pub verify_time: Duration,
+    pub prefill_time: Duration,
+    pub host_time: Duration,
+    pub wall_time: Duration,
+    pub request_latencies: Vec<Duration>,
+}
+
+impl EngineMetrics {
+    pub fn new(k: usize) -> EngineMetrics {
+        EngineMetrics { al_histogram: vec![0; k + 2], ..Default::default() }
+    }
+
+    pub fn record_iteration(&mut self, emitted_per_slot: &[usize]) {
+        self.iterations += 1;
+        for &e in emitted_per_slot {
+            if e > 0 {
+                self.tokens_emitted += e;
+                self.accepted_sum += e;
+                if e < self.al_histogram.len() {
+                    self.al_histogram[e] += 1;
+                } else {
+                    let n = self.al_histogram.len();
+                    self.al_histogram[n - 1] += 1;
+                }
+            }
+        }
+    }
+
+    /// Mean acceptance length (accepted drafts + bonus per live iteration).
+    pub fn acceptance_length(&self) -> f64 {
+        let n: usize = self.al_histogram.iter().sum();
+        if n == 0 {
+            return 0.0;
+        }
+        self.al_histogram
+            .iter()
+            .enumerate()
+            .map(|(al, &c)| al * c)
+            .sum::<usize>() as f64
+            / n as f64
+    }
+
+    /// Output tokens per second over the measured wall time (the paper's
+    /// OTPS: total across all concurrent requests).
+    pub fn otps(&self) -> f64 {
+        let s = self.wall_time.as_secs_f64();
+        if s == 0.0 {
+            0.0
+        } else {
+            self.tokens_emitted as f64 / s
+        }
+    }
+
+    pub fn latency_quantile(&self, p: f64) -> Duration {
+        if self.request_latencies.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut v = self.request_latencies.clone();
+        v.sort();
+        v[((p * v.len() as f64) as usize).min(v.len() - 1)]
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "req={} tok={} iters={} AL={:.2} OTPS={:.0} draft={:?} verify={:?} prefill={:?}",
+            self.requests_finished,
+            self.tokens_emitted,
+            self.iterations,
+            self.acceptance_length(),
+            self.otps(),
+            self.draft_time,
+            self.verify_time,
+            self.prefill_time,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn al_and_otps() {
+        let mut m = EngineMetrics::new(5);
+        m.record_iteration(&[3, 5]);
+        m.record_iteration(&[1, 0]);
+        assert_eq!(m.tokens_emitted, 9);
+        assert_eq!(m.iterations, 2);
+        // live slot-iterations: 3 (AL entries 3, 5, 1)
+        assert!((m.acceptance_length() - 3.0).abs() < 1e-9);
+        m.wall_time = Duration::from_secs(3);
+        assert!((m.otps() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_clamps() {
+        let mut m = EngineMetrics::new(2); // histogram len 4
+        m.record_iteration(&[10]);
+        assert_eq!(m.al_histogram[3], 1);
+    }
+
+    #[test]
+    fn latency_quantiles() {
+        let mut m = EngineMetrics::new(2);
+        for ms in [10u64, 20, 30, 40, 50] {
+            m.request_latencies.push(Duration::from_millis(ms));
+        }
+        assert_eq!(m.latency_quantile(0.0), Duration::from_millis(10));
+        assert_eq!(m.latency_quantile(0.99), Duration::from_millis(50));
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 coordinator: the serving engine (the paper's vLLM integration,
+//! §5.3) — wave-batched speculative decoding with swappable AR / P-EAGLE
+//! drafter executables, KV slot management, sampling/acceptance, metrics,
+//! and a threaded server front-end.
+
+pub mod engine;
+pub mod kv_cache;
+pub mod metrics;
+pub mod request;
+pub mod sampler;
+pub mod scheduler;
+pub mod server;
+
+pub use engine::{run_wave, EngineConfig};
+pub use metrics::EngineMetrics;
+pub use request::{FinishReason, RequestResult, RequestSpec};
+pub use sampler::Sampling;
+pub use scheduler::{run_closed_loop, Scheduler};

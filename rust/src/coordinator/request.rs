@@ -1,0 +1,73 @@
+//! Request lifecycle types.
+
+pub use crate::workload::RequestSpec;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// EOS token sampled/accepted.
+    Eos,
+    /// Hit max_new_tokens.
+    Length,
+    /// KV slot capacity (S_MAX) reached.
+    CacheFull,
+}
+
+#[derive(Clone, Debug)]
+pub struct RequestResult {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// generated tokens (excluding the prompt)
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// spec-decode iterations this request was live for
+    pub iterations: usize,
+    /// sum of acceptance lengths (accepted drafts + bonus) over iterations
+    pub accepted_sum: usize,
+    /// wall-clock from admission to finish
+    pub latency: std::time::Duration,
+}
+
+impl RequestResult {
+    /// Mean acceptance length (the paper's AL: accepted draft tokens + the
+    /// bonus token per iteration; max K+1).
+    pub fn acceptance_length(&self) -> f64 {
+        if self.iterations == 0 {
+            0.0
+        } else {
+            self.accepted_sum as f64 / self.iterations as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn al_math() {
+        let r = RequestResult {
+            id: 0,
+            prompt_len: 8,
+            tokens: vec![1; 20],
+            finish: FinishReason::Length,
+            iterations: 5,
+            accepted_sum: 20,
+            latency: std::time::Duration::from_millis(10),
+        };
+        assert_eq!(r.acceptance_length(), 4.0);
+    }
+
+    #[test]
+    fn al_zero_iterations() {
+        let r = RequestResult {
+            id: 0,
+            prompt_len: 1,
+            tokens: vec![],
+            finish: FinishReason::Eos,
+            iterations: 0,
+            accepted_sum: 0,
+            latency: std::time::Duration::ZERO,
+        };
+        assert_eq!(r.acceptance_length(), 0.0);
+    }
+}

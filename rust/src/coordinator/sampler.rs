@@ -1,0 +1,148 @@
+//! Token sampling + the speculative acceptance rule.
+//!
+//! The engine runs greedy (argmax) verification — the paper's acceptance
+//! length metric is defined under chain drafting with greedy target
+//! decoding. Temperature sampling is provided for the serving API; under
+//! temperature > 0 acceptance uses the standard exact-match-on-sample rule
+//! (draft accepted iff it equals the sampled target token), which preserves
+//! the target distribution for greedy and is the chain special case of
+//! rejection sampling.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub enum Sampling {
+    Greedy,
+    Temperature(f32),
+}
+
+/// Argmax over one logits row.
+pub fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in row.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Sample a token from one logits row.
+pub fn sample(row: &[f32], s: Sampling, rng: &mut Rng) -> i32 {
+    match s {
+        Sampling::Greedy => argmax(row),
+        Sampling::Temperature(t) => {
+            let t = t.max(1e-4);
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let weights: Vec<f32> = row.iter().map(|&x| ((x - m) / t).exp()).collect();
+            rng.categorical(&weights) as i32
+        }
+    }
+}
+
+/// Outcome of verifying one slot's draft chunk.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Acceptance {
+    /// number of draft tokens accepted (prefix match), 0..=K
+    pub n_accepted: usize,
+    /// tokens to emit this iteration: accepted drafts + 1 bonus token
+    pub emitted: Vec<i32>,
+}
+
+/// Chain-drafting acceptance: target logits row i is the distribution for
+/// the token *after* chunk position i. Draft token d[i] is accepted while it
+/// matches the target's token for that position; the first mismatch (or the
+/// end of the chain) contributes the target's own token as the bonus.
+pub fn accept_chain(
+    drafts: &[i32],
+    target_rows: &[&[f32]], // K+1 rows
+    s: Sampling,
+    rng: &mut Rng,
+) -> Acceptance {
+    assert_eq!(target_rows.len(), drafts.len() + 1);
+    let mut emitted = Vec::with_capacity(drafts.len() + 1);
+    let mut n_accepted = 0;
+    for (i, &d) in drafts.iter().enumerate() {
+        let t = sample(target_rows[i], s, rng);
+        if d == t {
+            emitted.push(d);
+            n_accepted += 1;
+        } else {
+            emitted.push(t); // correction token from the target
+            return Acceptance { n_accepted, emitted };
+        }
+    }
+    // all drafts accepted: bonus token from the last target row
+    emitted.push(sample(target_rows[drafts.len()], s, rng));
+    Acceptance { n_accepted, emitted }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn onehot(v: usize, n: usize) -> Vec<f32> {
+        let mut row = vec![0.0; n];
+        row[v] = 10.0;
+        row
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn full_acceptance_adds_bonus() {
+        let rows: Vec<Vec<f32>> =
+            vec![onehot(4, 8), onehot(5, 8), onehot(6, 8), onehot(7, 8)];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut rng = Rng::new(1);
+        let a = accept_chain(&[4, 5, 6], &refs, Sampling::Greedy, &mut rng);
+        assert_eq!(a.n_accepted, 3);
+        assert_eq!(a.emitted, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn mismatch_truncates_with_correction() {
+        let rows: Vec<Vec<f32>> = vec![onehot(4, 8), onehot(5, 8), onehot(6, 8)];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut rng = Rng::new(1);
+        let a = accept_chain(&[4, 1], &refs, Sampling::Greedy, &mut rng);
+        assert_eq!(a.n_accepted, 1);
+        assert_eq!(a.emitted, vec![4, 5]); // correction = target argmax
+    }
+
+    #[test]
+    fn zero_acceptance_still_emits_one() {
+        let rows: Vec<Vec<f32>> = vec![onehot(2, 8), onehot(3, 8)];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut rng = Rng::new(1);
+        let a = accept_chain(&[7], &refs, Sampling::Greedy, &mut rng);
+        assert_eq!(a.n_accepted, 0);
+        assert_eq!(a.emitted, vec![2]);
+    }
+
+    #[test]
+    fn temperature_zeroish_matches_greedy() {
+        let row = vec![0.0, 1.0, 8.0, 2.0];
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            assert_eq!(sample(&row, Sampling::Temperature(0.01), &mut rng), 2);
+        }
+    }
+
+    #[test]
+    fn al_equals_accepted_plus_one() {
+        // paper convention: AL counts accepted drafts + bonus, max K+1
+        let rows: Vec<Vec<f32>> = (0..6).map(|i| onehot(i, 8)).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut rng = Rng::new(3);
+        let a = accept_chain(&[0, 1, 2, 3, 4], &refs, Sampling::Greedy, &mut rng);
+        assert_eq!(a.emitted.len(), a.n_accepted + 1);
+        assert_eq!(a.emitted.len(), 6); // K+1 = theoretical max (paper: 6.0)
+    }
+}

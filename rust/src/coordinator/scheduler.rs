@@ -1,0 +1,145 @@
+//! Wave scheduler: admission queue + bucketed batch formation.
+//!
+//! Requests queue up and are grouped into waves of the largest available
+//! executable batch size ≤ the ready count (buckets {1, 2, 4} from the
+//! manifest). A wave runs to completion on one KV buffer, then the next
+//! forms — iteration-level batching with wave refill. For the paper's
+//! closed-loop concurrency benchmark (Table 10), the driver keeps C
+//! requests in flight so waves are always width C.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::engine::{run_wave, EngineConfig};
+use super::metrics::EngineMetrics;
+use super::request::{RequestResult, RequestSpec};
+use crate::runtime::ModelRuntime;
+
+pub struct Scheduler {
+    pub cfg: EngineConfig,
+    pub buckets: Vec<usize>,
+    queue: VecDeque<RequestSpec>,
+    pub results: Vec<RequestResult>,
+    pub metrics: EngineMetrics,
+}
+
+impl Scheduler {
+    pub fn new(cfg: EngineConfig, buckets: Vec<usize>) -> Scheduler {
+        let mut b = buckets;
+        b.sort_unstable();
+        let metrics = EngineMetrics::new(cfg.k);
+        Scheduler { cfg, buckets: b, queue: VecDeque::new(), results: Vec::new(), metrics }
+    }
+
+    pub fn submit(&mut self, r: RequestSpec) {
+        self.queue.push_back(r);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Largest bucket ≤ n (falls back to the smallest bucket).
+    pub fn pick_bucket(&self, n: usize) -> usize {
+        self.buckets
+            .iter()
+            .rev()
+            .find(|&&b| b <= n)
+            .copied()
+            .unwrap_or(self.buckets[0])
+    }
+
+    /// Form and run one wave. Returns how many requests completed.
+    pub fn step_wave(&mut self, mr: &mut ModelRuntime) -> Result<usize> {
+        if self.queue.is_empty() {
+            return Ok(0);
+        }
+        let width = self.pick_bucket(self.queue.len());
+        let take = width.min(self.queue.len());
+        let wave: Vec<RequestSpec> = self.queue.drain(..take).collect();
+        let mut cfg = self.cfg.clone();
+        cfg.batch = width;
+        let t0 = Instant::now();
+        let res = run_wave(mr, &cfg, wave, &mut self.metrics)?;
+        self.metrics.wall_time += t0.elapsed();
+        let n = res.len();
+        self.results.extend(res);
+        Ok(n)
+    }
+
+    /// Drain the whole queue.
+    pub fn run_to_completion(&mut self, mr: &mut ModelRuntime) -> Result<()> {
+        while !self.queue.is_empty() {
+            self.step_wave(mr)?;
+        }
+        Ok(())
+    }
+}
+
+/// Closed-loop driver at fixed concurrency C (the Table 10 client): keeps C
+/// requests in flight until `total` have completed.
+pub fn run_closed_loop(
+    mr: &mut ModelRuntime,
+    cfg: &EngineConfig,
+    concurrency: usize,
+    total: usize,
+    mut next_request: impl FnMut() -> RequestSpec,
+) -> Result<(Vec<RequestResult>, EngineMetrics)> {
+    let mut cfgc = cfg.clone();
+    cfgc.batch = concurrency;
+    let mut metrics = EngineMetrics::new(cfg.k);
+    let mut results = Vec::with_capacity(total);
+    let t0 = Instant::now();
+    while results.len() < total {
+        let take = concurrency.min(total - results.len());
+        let wave: Vec<RequestSpec> = (0..take).map(|_| next_request()).collect();
+        let res = run_wave(mr, &cfgc, wave, &mut metrics)?;
+        results.extend(res);
+    }
+    metrics.wall_time = t0.elapsed();
+    Ok((results, metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sampler::Sampling;
+
+    fn cfg() -> EngineConfig {
+        EngineConfig {
+            target: "t".into(),
+            drafter: "d".into(),
+            k: 5,
+            batch: 4,
+            max_new_tokens: 32,
+            sampling: Sampling::Greedy,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let s = Scheduler::new(cfg(), vec![1, 2, 4]);
+        assert_eq!(s.pick_bucket(1), 1);
+        assert_eq!(s.pick_bucket(2), 2);
+        assert_eq!(s.pick_bucket(3), 2);
+        assert_eq!(s.pick_bucket(4), 4);
+        assert_eq!(s.pick_bucket(9), 4);
+    }
+
+    #[test]
+    fn queue_accounting() {
+        let mut s = Scheduler::new(cfg(), vec![1, 2, 4]);
+        for i in 0..5 {
+            s.submit(RequestSpec {
+                id: i,
+                prompt: vec![1; 16],
+                max_new_tokens: 8,
+                arrival_s: 0.0,
+            });
+        }
+        assert_eq!(s.pending(), 5);
+    }
+}

@@ -1,0 +1,83 @@
+//! Threaded serving front-end: a submission channel + a worker thread that
+//! owns the ModelRuntime and drains the scheduler. This is the process
+//! shape of the vLLM-style deployment — request producers never touch PJRT.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::engine::EngineConfig;
+use super::metrics::EngineMetrics;
+use super::request::{RequestResult, RequestSpec};
+use super::scheduler::Scheduler;
+use crate::runtime::ModelRuntime;
+
+pub enum ServerMsg {
+    Submit(RequestSpec),
+    /// Flush: run all queued requests, reply when drained.
+    Drain,
+    Shutdown,
+}
+
+pub struct ServerHandle {
+    pub tx: mpsc::Sender<ServerMsg>,
+    pub results_rx: mpsc::Receiver<RequestResult>,
+    join: Option<JoinHandle<EngineMetrics>>,
+}
+
+impl ServerHandle {
+    pub fn submit(&self, r: RequestSpec) {
+        let _ = self.tx.send(ServerMsg::Submit(r));
+    }
+
+    pub fn drain(&self) {
+        let _ = self.tx.send(ServerMsg::Drain);
+    }
+
+    /// Shut down and return the engine metrics.
+    pub fn shutdown(mut self) -> EngineMetrics {
+        let _ = self.tx.send(ServerMsg::Shutdown);
+        self.join.take().map(|j| j.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+/// Spawn the serving worker. `artifacts_root` is loaded inside the worker so
+/// the PJRT client lives entirely on that thread.
+pub fn spawn(artifacts_root: String, cfg: EngineConfig, buckets: Vec<usize>) -> Result<ServerHandle> {
+    let (tx, rx) = mpsc::channel::<ServerMsg>();
+    let (res_tx, results_rx) = mpsc::channel::<RequestResult>();
+    let join = std::thread::Builder::new()
+        .name("p-eagle-engine".into())
+        .spawn(move || {
+            let mut mr = match ModelRuntime::load(&artifacts_root) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("engine worker failed to load artifacts: {e:#}");
+                    return EngineMetrics::default();
+                }
+            };
+            let mut sched = Scheduler::new(cfg, buckets);
+            loop {
+                match rx.recv() {
+                    Ok(ServerMsg::Submit(r)) => sched.submit(r),
+                    Ok(ServerMsg::Drain) => {
+                        if let Err(e) = sched.run_to_completion(&mut mr) {
+                            eprintln!("engine error: {e:#}");
+                        }
+                        for r in sched.results.drain(..) {
+                            let _ = res_tx.send(r);
+                        }
+                    }
+                    Ok(ServerMsg::Shutdown) | Err(_) => break,
+                }
+            }
+            // final drain on shutdown
+            let _ = sched.run_to_completion(&mut mr);
+            for r in sched.results.drain(..) {
+                let _ = res_tx.send(r);
+            }
+            sched.metrics
+        })?;
+    Ok(ServerHandle { tx, results_rx, join: Some(join) })
+}

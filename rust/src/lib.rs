@@ -1,0 +1,24 @@
+//! # P-EAGLE — Parallel-Drafting EAGLE with Scalable Training
+//!
+//! Rust + JAX + Pallas reproduction of the paper (see README.md / DESIGN.md).
+//! Three layers:
+//!
+//! * **L1** (`python/compile/kernels/`): the Pallas fused draft-attention
+//!   kernel (interpret mode, lowered into the HLO artifacts).
+//! * **L2** (`python/compile/`): JAX target + drafter models, the scalable
+//!   long-context training framework (amortized masks, COD, Algorithm 1),
+//!   AOT lowering to HLO text.
+//! * **L3** (this crate): the serving coordinator — PJRT runtime,
+//!   wave-batched speculative decoding engine, schedulers, workload
+//!   generation, the paper-scale mask/partition/memory substrates, and the
+//!   bench harnesses that regenerate every table and figure.
+
+pub mod config;
+pub mod coordinator;
+pub mod masking;
+pub mod memmodel;
+pub mod partition;
+pub mod report;
+pub mod runtime;
+pub mod util;
+pub mod workload;

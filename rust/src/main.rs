@@ -1,0 +1,175 @@
+//! p-eagle CLI — leader entrypoint for the serving engine and the
+//! paper-experiment reports.
+//!
+//! Subcommands:
+//!   selftest                          runtime smoke test (loads artifacts)
+//!   serve      --target --method --k --concurrency --requests [--dataset]
+//!   eval-acceptance --drafter --dataset [--k --requests --max-new]
+//!   bench-otps --target --method --k --concurrency [--dataset ...]
+//!   report     --fig1 | --fig5 | --memmodel
+//!   info                              manifest summary
+
+use anyhow::{anyhow, Result};
+
+use p_eagle::config::Manifest;
+use p_eagle::memmodel;
+use p_eagle::report;
+use p_eagle::runtime::{Arg, HostTensor, ModelRuntime, Runtime};
+use p_eagle::util::cli::Args;
+
+fn artifacts_root(args: &Args) -> String {
+    args.get_or("artifacts", "artifacts")
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("selftest") => selftest(&args),
+        Some("info") => info(&args),
+        Some("serve") => serve(&args),
+        Some("eval-acceptance") => eval_acceptance(&args),
+        Some("bench-otps") => bench_otps(&args),
+        Some("report") => run_report(&args),
+        other => {
+            eprintln!("unknown subcommand {other:?}");
+            eprintln!("usage: p-eagle <selftest|info|serve|eval-acceptance|bench-otps|report> [options]");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Load the selftest HLO (2x2 matmul) and check the numbers end-to-end.
+fn selftest(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(artifacts_root(args))?;
+    let mut rt = Runtime::cpu()?;
+    println!("platform: {}", rt.client.platform_name());
+    let e = manifest.find_exec("selftest", None, None, None, None)?;
+    rt.load(&e.name, &manifest.abs(&e.path))?;
+    let x = HostTensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+    let y = HostTensor::f32(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+    let out = rt.call("selftest", &[Arg::Host(&x), Arg::Host(&y)])?;
+    let t = rt.download(&out[0])?;
+    let got = t.as_f32()?;
+    anyhow::ensure!(got == [5.0, 5.0, 9.0, 9.0], "selftest numerics: {got:?}");
+    println!("selftest OK: {got:?}");
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    let m = Manifest::load(artifacts_root(args))?;
+    println!("P-EAGLE artifacts @ {:?}", m.root);
+    println!("vocab={} s_max={} prompt_pad={} ctx_window={}", m.vocab, m.s_max, m.prompt_pad, m.ctx_window);
+    println!("targets:");
+    for (n, t) in &m.targets {
+        println!("  {n}: d={} L={} H={} feat={}", t.d_model, t.n_layers, t.n_heads, t.feature_dim);
+    }
+    println!("drafters ({}):", m.drafters.len());
+    for (n, d) in &m.drafters {
+        println!("  {n}: kind={} L={} hidden={} target={}", d.kind, d.n_layers, d.hidden_mode, d.target);
+    }
+    println!("executables: {}", m.executables.len());
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let mut mr = ModelRuntime::load(artifacts_root(args))?;
+    let target = args.get_or("target", "target-m");
+    let method = args.get_or("method", "pe4");
+    let drafter = mr.manifest.serving_drafter(&target, &method);
+    let k = args.usize_or("k", mr.manifest.default_k);
+    let conc = args.usize_or("concurrency", 2);
+    let total = args.usize_or("requests", 8);
+    let max_new = args.usize_or("max-new", 96);
+    let dataset = args.get_or("dataset", "mtbench");
+
+    let run = report::bench_otps(&mut mr, &drafter, &dataset, k, conc, total, max_new, 7)?;
+    println!(
+        "served {total} requests  target={target} method={method} K={k} C={conc} dataset={dataset}"
+    );
+    println!(
+        "OTPS {:.0}  AL {:.2}  p50 latency {:?}  p99 latency {:?}",
+        run.otps,
+        run.acceptance_length,
+        run.metrics.latency_quantile(0.5),
+        run.metrics.latency_quantile(0.99),
+    );
+    println!("{}", run.metrics.summary());
+    Ok(())
+}
+
+fn eval_acceptance(args: &Args) -> Result<()> {
+    let mut mr = ModelRuntime::load(artifacts_root(args))?;
+    let drafter = args
+        .get("drafter")
+        .ok_or_else(|| anyhow!("--drafter required"))?
+        .to_string();
+    let dataset = args.get_or("dataset", "humaneval");
+    let k = args.usize_or("k", mr.manifest.default_k);
+    let n = args.usize_or("requests", 16);
+    let max_new = args.usize_or("max-new", 96);
+    let e = report::eval_acceptance(&mut mr, &drafter, &dataset, k, n, max_new)?;
+    println!(
+        "AL({}, {}, K={}) = {:.3}  [{} requests]",
+        e.drafter, e.dataset, e.k, e.acceptance_length, e.requests
+    );
+    Ok(())
+}
+
+fn bench_otps(args: &Args) -> Result<()> {
+    let mut mr = ModelRuntime::load(artifacts_root(args))?;
+    let target = args.get_or("target", "target-m");
+    let method = args.get_or("method", "pe4");
+    let drafter = mr.manifest.serving_drafter(&target, &method);
+    let k = args.usize_or("k", mr.manifest.default_k);
+    let conc = args.usize_or("concurrency", 2);
+    let total = args.usize_or("requests", 8);
+    let max_new = args.usize_or("max-new", 96);
+    let dataset = args.get_or("dataset", "gsm8k");
+    let run = report::bench_otps(&mut mr, &drafter, &dataset, k, conc, total, max_new, 11)?;
+    println!(
+        "OTPS[{target}/{method} K={k} C={conc} {dataset}] = {:.0} (AL {:.2})",
+        run.otps, run.acceptance_length
+    );
+    if args.flag("profile") {
+        let m = &run.metrics;
+        println!(
+            "breakdown: prefill {:?}  draft {:?}  verify {:?}  host {:?}  \
+             (engine wall {:?}, {} iterations)",
+            m.prefill_time, m.draft_time, m.verify_time, m.host_time,
+            m.wall_time, m.iterations
+        );
+        println!(
+            "runtime: {} exec calls, exec {:?}, untuple {:?}, compile {:?}",
+            mr.rt.exec_calls, mr.rt.exec_time, mr.rt.untuple_time, mr.rt.compile_time
+        );
+    }
+    Ok(())
+}
+
+fn run_report(args: &Args) -> Result<()> {
+    if args.flag("fig1") {
+        println!("{}", report::fig1_report(40_000));
+        return Ok(());
+    }
+    if args.flag("fig5") {
+        let mr = ModelRuntime::load(artifacts_root(args))?;
+        println!("{}", report::fig5_report(&mr));
+        return Ok(());
+    }
+    if args.flag("memmodel") {
+        println!("Table 1 feasibility classification (paper-scale memory model)");
+        for (label, n) in [("1K", 1024usize), ("4K", 4096), ("8K", 8192), ("20K", 20480)] {
+            let ps = memmodel::classify(&memmodel::TrainSetup::parallelspec(n, 8), 200_000);
+            let pd = memmodel::classify(&memmodel::TrainSetup::pard(n, 8), 200_000);
+            let pe = memmodel::classify(&memmodel::TrainSetup::peagle(n, 8), 200_000);
+            println!(
+                "  {label:>4}: ParallelSpec={:<8} PARD={:<8} P-EAGLE={:<8}",
+                ps.label(),
+                pd.label(),
+                pe.label()
+            );
+        }
+        return Ok(());
+    }
+    Err(anyhow!("report: pass --fig1, --fig5, or --memmodel"))
+}

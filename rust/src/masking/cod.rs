@@ -1,0 +1,131 @@
+//! COD (Conditional Drop-token) sampling — geometric retention per depth.
+//!
+//! Depth d keeps round(n·r^d) anchors, sampled NESTED (A_d ⊆ A_{d-1}) so
+//! every kept row's chain parent exists — the property Algorithm 1's Phase 2
+//! requires, and which the paper's own Figure 4 example satisfies
+//! (see python/compile/masks.py for the derivation).
+
+use crate::util::rng::Rng;
+
+/// Expected anchor count per depth (paper §3.2: n·(1-r^K)/(1-r) total).
+pub fn cod_counts(n: usize, k: usize, ratio: f64) -> Vec<usize> {
+    (0..k)
+        .map(|d| ((n as f64) * ratio.powi(d as i32)).round() as usize)
+        .collect()
+}
+
+/// Nested anchor sets: anchors[d] ⊆ anchors[d-1], |anchors[d]| = round(n·r^d).
+pub fn cod_sample_nested(n: usize, k: usize, ratio: f64, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut anchors: Vec<Vec<usize>> = vec![(0..n).collect()];
+    let counts = cod_counts(n, k, ratio);
+    for d in 1..k {
+        let prev = &anchors[d - 1];
+        let want = counts[d].min(prev.len());
+        let idx = rng.sample_without_replacement(prev.len(), want);
+        anchors.push(idx.into_iter().map(|i| prev[i]).collect());
+    }
+    anchors
+}
+
+/// Interleaved row ids for the sampled anchors, sorted; drops rows whose
+/// label would fall outside the sequence (p > n-2).
+pub fn rows_from_anchors(anchors: &[Vec<usize>], n: usize, k: usize) -> Vec<usize> {
+    let mut ids = Vec::new();
+    for (d, anc) in anchors.iter().enumerate() {
+        for &a in anc {
+            let p = a + d;
+            if n >= 2 && p <= n - 2 {
+                ids.push(p * k + d);
+            }
+        }
+    }
+    ids.sort_unstable();
+    ids
+}
+
+/// Total row count estimate (paper §3.2 closed form).
+pub fn expected_total_rows(n: usize, k: usize, ratio: f64) -> f64 {
+    n as f64 * (1.0 - ratio.powi(k as i32)) / (1.0 - ratio)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Case};
+
+    #[test]
+    fn nested_and_sized() {
+        check("cod-nested", 60, |rng| {
+            let n = 4 + rng.below(200);
+            let k = 1 + rng.below(8);
+            let r = 0.5 + rng.f64() * 0.45;
+            let anchors = cod_sample_nested(n, k, r, rng);
+            let counts = cod_counts(n, k, r);
+            for d in 1..k {
+                let prev: std::collections::HashSet<_> =
+                    anchors[d - 1].iter().collect();
+                if anchors[d].len() != counts[d].min(anchors[d - 1].len()) {
+                    return Case::Fail {
+                        desc: format!("depth {d} size {}", anchors[d].len()),
+                        size: n,
+                    };
+                }
+                for a in &anchors[d] {
+                    if !prev.contains(a) {
+                        return Case::Fail {
+                            desc: format!("anchor {a} at depth {d} not nested"),
+                            size: n,
+                        };
+                    }
+                }
+            }
+            Case::Pass
+        });
+    }
+
+    #[test]
+    fn rows_sorted_distinct_in_range() {
+        check("cod-rows", 60, |rng| {
+            let n = 4 + rng.below(120);
+            let k = 1 + rng.below(8);
+            let anchors = cod_sample_nested(n, k, 0.8, rng);
+            let rows = rows_from_anchors(&anchors, n, k);
+            for w in rows.windows(2) {
+                if w[0] >= w[1] {
+                    return Case::Fail { desc: format!("{w:?}"), size: n };
+                }
+            }
+            for &r in &rows {
+                let (p, d) = (r / k, r % k);
+                if p > n - 2 || d >= k || p < d {
+                    return Case::Fail { desc: format!("row ({p},{d})"), size: n };
+                }
+            }
+            Case::Pass
+        });
+    }
+
+    #[test]
+    fn paper_fig4_example_is_nested() {
+        // The paper's Figure 4 example: n=16, K=4, r=0.7 —
+        // depth1 {1,3,4,6,7,9,10,12,14,15}, depth2 {2,5,7,8,11,13,15},
+        // depth3 {3,6,9,12,14}; in anchor coordinates (p - d):
+        let d1: Vec<usize> = vec![1, 3, 4, 6, 7, 9, 10, 12, 14, 15]
+            .into_iter().map(|p| p - 1).collect();
+        let d2: Vec<usize> = vec![2, 5, 7, 8, 11, 13, 15]
+            .into_iter().map(|p| p - 2).collect();
+        let d3: Vec<usize> = vec![3, 6, 9, 12, 14]
+            .into_iter().map(|p| p - 3).collect();
+        let s1: std::collections::HashSet<_> = d1.iter().collect();
+        let s2: std::collections::HashSet<_> = d2.iter().collect();
+        assert!(d2.iter().all(|a| s1.contains(a)), "depth2 ⊆ depth1");
+        assert!(d3.iter().all(|a| s2.contains(a)), "depth3 ⊆ depth2");
+    }
+
+    #[test]
+    fn total_rows_formula() {
+        // paper's example: 8192 tokens, K=8, r=0.8 -> ~34K positions
+        let t = expected_total_rows(8192, 8, 0.8);
+        assert!((t - 34000.0).abs() < 1500.0, "{t}");
+    }
+}

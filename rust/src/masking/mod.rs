@@ -1,0 +1,85 @@
+//! Attention-mask machinery for parallel-prediction training (paper §3) —
+//! the Rust mirror of `python/compile/masks.py`, used by the Table 2 / Fig 3
+//! benches at *paper scale* (n = 2048, K = 8) where the Python baseline is
+//! exactly the bottleneck the paper measures.
+//!
+//! Row coordinates: a training row (p, d) = sequence position p, prediction
+//! depth d (PARD "group" G_d). Under the position-major interleaved layout
+//! `row_id = p*K + d`, the attention predicate depends only on (p,d,q,e), so
+//! the mask for any n is the top-left submatrix of the max-length mask
+//! (paper Fig. 3) — `PrecomputedMask::slice_view` is O(1).
+
+pub mod cod;
+pub mod pard;
+pub mod precomputed;
+
+pub use cod::{cod_counts, cod_sample_nested, rows_from_anchors};
+pub use pard::{pard_full_mask, pard_mask};
+pub use precomputed::PrecomputedMask;
+
+/// The attention predicate shared by every construction path.
+///
+/// Row (p, d) may attend row (q, e) iff
+///   * `e == 0 && q <= p - d`           — the real NTP context, or
+///   * `q - e == p - d && e <= d`       — its own mask chain (incl. self).
+/// Rows with p < d (or q < e) never arise in training (their anchor would
+/// precede the sequence) — the predicate reports false for them so every
+/// construction path agrees bit-for-bit.
+#[inline]
+pub fn attend_allowed(p: usize, d: usize, q: usize, e: usize) -> bool {
+    if d > p || e > q {
+        return false;
+    }
+    let anchor = (p - d) as isize;
+    (e == 0 && (q as isize) <= anchor)
+        || ((q - e) as isize == anchor && e <= d)
+}
+
+/// Decompose an interleaved row id.
+#[inline]
+pub fn row_pd(row: usize, k: usize) -> (usize, usize) {
+    (row / k, row % k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predicate_matches_inference_chain() {
+        // At inference, the MTP slot at depth d anchored at position a
+        // attends the context (depth-0 rows <= a) and every earlier chain
+        // slot — i.e. full causal over the window (DESIGN.md).
+        let (a, d) = (10usize, 3usize);
+        let p = a + d;
+        for e in 0..=d {
+            let q = a + e;
+            assert!(attend_allowed(p, d, q, e), "chain ({q},{e})");
+        }
+        for q in 0..=a {
+            assert!(attend_allowed(p, d, q, 0), "ctx ({q},0)");
+        }
+        // no attending the future or foreign chains
+        assert!(!attend_allowed(p, d, a + 1, 0));
+        assert!(!attend_allowed(p, d, a + 1, 2));
+        assert!(!attend_allowed(p, d, p, d + 1));
+    }
+
+    #[test]
+    fn depth0_is_plain_causal() {
+        for p in 0..20 {
+            for q in 0..20 {
+                assert_eq!(attend_allowed(p, 0, q, 0), q <= p);
+            }
+        }
+    }
+
+    #[test]
+    fn self_attention_always_allowed() {
+        for p in 0..16 {
+            for d in 0..=p.min(7) {
+                assert!(attend_allowed(p, d, p, d));
+            }
+        }
+    }
+}

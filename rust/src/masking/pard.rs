@@ -1,0 +1,85 @@
+//! PARD baseline — per-example from-scratch mask construction.
+//!
+//! PARD (An et al., 2025) samples a fresh COD row subset per training
+//! example and rebuilds the cross-depth causal mask by evaluating the
+//! attention predicate over every row pair: O((nK)²) work *per example*,
+//! inside the data loader. The paper's Table 2 measures this as a 48× data
+//! loading slowdown at n = 2048, K = 8; `benches/table2_mask_overhead.rs`
+//! reproduces the comparison against `PrecomputedMask::gather`.
+
+use super::{attend_allowed, precomputed::BitMatrix};
+
+/// Build the attention mask over `rows` (interleaved ids) from scratch.
+pub fn pard_mask(rows: &[usize], k: usize) -> BitMatrix {
+    let m = rows.len();
+    let mut out = BitMatrix::zeros(m, m);
+    for i in 0..m {
+        let (p, d) = (rows[i] / k, rows[i] % k);
+        for j in 0..m {
+            let (q, e) = (rows[j] / k, rows[j] % k);
+            // deliberate scalar predicate per pair — the baseline's cost
+            if attend_allowed(p, d, q, e) {
+                out.set(i, j);
+            }
+        }
+    }
+    out
+}
+
+/// The full-mask variant (no COD): all n*K rows, O((nK)²).
+pub fn pard_full_mask(n: usize, k: usize) -> BitMatrix {
+    let rows: Vec<usize> = (0..n * k).collect();
+    pard_mask(&rows, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masking::PrecomputedMask;
+    use crate::util::prop::{check, Case};
+    use crate::util::rng::Rng;
+
+    fn random_rows(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+        let total = n * k;
+        let count = 1 + rng.below(total);
+        rng.sample_without_replacement(total, count)
+    }
+
+    #[test]
+    fn equals_amortized_gather() {
+        // PARD's from-scratch mask and our precomputed-gather mask must be
+        // identical — the paper's point is cost, not semantics.
+        check("pard-vs-amortized", 40, |rng| {
+            let k = 1 + rng.below(8);
+            let n = 2 + rng.below(24);
+            let rows = random_rows(rng, n, k);
+            let pm = PrecomputedMask::build(n, k);
+            let a = pm.gather(&rows);
+            let b = pard_mask(&rows, k);
+            for i in 0..rows.len() {
+                for j in 0..rows.len() {
+                    if a.get(i, j) != b.get(i, j) {
+                        return Case::Fail {
+                            desc: format!("({i},{j}) rows={rows:?} k={k}"),
+                            size: n * k,
+                        };
+                    }
+                }
+            }
+            Case::Pass
+        });
+    }
+
+    #[test]
+    fn full_mask_density_sane() {
+        // depth-0 rows form a causal triangle; total ones must be at least
+        // that and at most the full causal triangle over all rows.
+        let (n, k) = (16, 4);
+        let m = pard_full_mask(n, k);
+        let ones = m.count_ones();
+        let tri0 = n * (n + 1) / 2;
+        let tri_all = (n * k) * (n * k + 1) / 2;
+        assert!(ones >= tri0, "{ones} < {tri0}");
+        assert!(ones <= tri_all, "{ones} > {tri_all}");
+    }
+}

@@ -1,0 +1,207 @@
+//! Paper §3.1 — amortized mask construction.
+//!
+//! The full (n_max*K)² mask is built ONCE (vectorized, bit-packed rows);
+//! per-example masks are O(1) slice views and COD row subsets are cheap
+//! gathers. This is "ours" in Table 2; `pard.rs` is the 48×-slower baseline.
+
+#[cfg(test)]
+use super::attend_allowed;
+
+/// Bit-packed boolean matrix (row-major, 64 cells per word).
+pub struct BitMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    words_per_row: usize,
+    data: Vec<u64>,
+}
+
+impl BitMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> BitMatrix {
+        let wpr = cols.div_ceil(64);
+        BitMatrix { rows, cols, words_per_row: wpr, data: vec![0; wpr * rows] }
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize) {
+        self.data[r * self.words_per_row + c / 64] |= 1u64 << (c % 64);
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        (self.data[r * self.words_per_row + c / 64] >> (c % 64)) & 1 == 1
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.data.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+/// Zero-copy view over the top-left square of a `PrecomputedMask`.
+pub struct MaskView<'a> {
+    mask: &'a BitMatrix,
+    pub size: usize,
+}
+
+impl<'a> MaskView<'a> {
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.size && c < self.size);
+        self.mask.get(r, c)
+    }
+}
+
+pub struct PrecomputedMask {
+    pub n_max: usize,
+    pub k: usize,
+    mask: BitMatrix,
+    pub build_time: std::time::Duration,
+}
+
+impl PrecomputedMask {
+    /// One-time construction for the maximum sequence length (amortized
+    /// across the whole training run — paper §3.1).
+    pub fn build(n_max: usize, k: usize) -> PrecomputedMask {
+        let t0 = std::time::Instant::now();
+        let m = n_max * k;
+        let mut mask = BitMatrix::zeros(m, m);
+        for row in 0..m {
+            let (p, d) = (row / k, row % k);
+            let anchor = p as isize - d as isize;
+            if anchor < 0 {
+                continue;
+            }
+            let a = anchor as usize;
+            // context cells: (q, 0) for q <= anchor
+            for q in 0..=a {
+                mask.set(row, q * k);
+            }
+            // chain cells: (a + e, e) for 1 <= e <= d
+            for e in 1..=d {
+                let q = a + e;
+                if q < n_max {
+                    mask.set(row, q * k + e);
+                }
+            }
+        }
+        PrecomputedMask { n_max, k, mask, build_time: t0.elapsed() }
+    }
+
+    /// O(1) per-example mask: the top-left (n*K)² submatrix (paper Fig. 3).
+    pub fn slice_view(&self, n: usize) -> MaskView<'_> {
+        assert!(n <= self.n_max, "n={n} exceeds n_max={}", self.n_max);
+        MaskView { mask: &self.mask, size: n * self.k }
+    }
+
+    /// Gather the mask over a sampled row subset (COD). Cost is proportional
+    /// to the OUTPUT size, not (nK)² predicate evaluations.
+    pub fn gather(&self, rows: &[usize]) -> BitMatrix {
+        let m = rows.len();
+        let mut out = BitMatrix::zeros(m, m);
+        for (i, &r) in rows.iter().enumerate() {
+            for (j, &c) in rows.iter().enumerate() {
+                if self.mask.get(r, c) {
+                    out.set(i, j);
+                }
+            }
+        }
+        out
+    }
+
+    /// Bytes held by the precomputed mask (fixed, dataset-size independent).
+    pub fn memory_bytes(&self) -> usize {
+        self.mask.data.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure, Case};
+
+    #[test]
+    fn matches_predicate_exhaustively() {
+        let pm = PrecomputedMask::build(12, 4);
+        let v = pm.slice_view(12);
+        for r in 0..v.size {
+            for c in 0..v.size {
+                let (p, d) = (r / 4, r % 4);
+                let (q, e) = (c / 4, c % 4);
+                assert_eq!(
+                    v.get(r, c),
+                    attend_allowed(p, d, q, e),
+                    "({p},{d}) -> ({q},{e})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fig3_position_invariance() {
+        // The mask for a shorter sequence is exactly the top-left submatrix
+        // of a longer sequence's mask (paper Figure 3).
+        let long = PrecomputedMask::build(32, 4);
+        let short = PrecomputedMask::build(9, 4);
+        let lv = long.slice_view(9);
+        let sv = short.slice_view(9);
+        for r in 0..sv.size {
+            for c in 0..sv.size {
+                assert_eq!(lv.get(r, c), sv.get(r, c), "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn fig3_invariance_property() {
+        check("fig3-submatrix", 60, |rng| {
+            let k = 1 + rng.below(8);
+            let n_long = 2 + rng.below(40);
+            let n_short = 1 + rng.below(n_long);
+            let long = PrecomputedMask::build(n_long, k);
+            let short = PrecomputedMask::build(n_short, k);
+            let lv = long.slice_view(n_short);
+            let sv = short.slice_view(n_short);
+            for r in 0..sv.size {
+                for c in 0..sv.size {
+                    if lv.get(r, c) != sv.get(r, c) {
+                        return Case::Fail {
+                            desc: format!("mismatch at ({r},{c}) n={n_short}/{n_long} k={k}"),
+                            size: n_long,
+                        };
+                    }
+                }
+            }
+            ensure(true, "", n_long)
+        });
+    }
+
+    #[test]
+    fn gather_matches_direct() {
+        let pm = PrecomputedMask::build(16, 4);
+        let rows = vec![0, 4, 5, 9, 14, 21, 30];
+        let g = pm.gather(&rows);
+        for (i, &r) in rows.iter().enumerate() {
+            for (j, &c) in rows.iter().enumerate() {
+                assert_eq!(g.get(i, j), pm.slice_view(16).get(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn memory_is_fixed() {
+        let pm = PrecomputedMask::build(64, 8);
+        let m: usize = 64 * 8;
+        assert_eq!(pm.memory_bytes(), m.div_ceil(64) * 8 * m);
+    }
+
+    #[test]
+    fn bitmatrix_basics() {
+        let mut b = BitMatrix::zeros(3, 130);
+        assert!(!b.get(2, 129));
+        b.set(2, 129);
+        b.set(0, 0);
+        assert!(b.get(2, 129));
+        assert!(b.get(0, 0));
+        assert!(!b.get(1, 64));
+        assert_eq!(b.count_ones(), 2);
+    }
+}

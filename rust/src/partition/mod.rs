@@ -1,0 +1,252 @@
+//! Algorithm 1 — dependency-preserving sequence partitioning (paper §3.2).
+//!
+//! Splits one example's COD-sampled rows into S segments for within-sequence
+//! gradient accumulation while preserving every attention dependency:
+//! Phase 1 assigns depths 0-1 by position, Phase 2 propagates each row's
+//! chain-parent assignment ((p,d) inherits from (p-1,d-1)), Phase 3 adds the
+//! cumulative depth-0 rows to each segment as extra keys. Mirror of
+//! `python/compile/partition.py` (which carries the gradient-equivalence
+//! property test against actual JAX gradients).
+
+use std::collections::HashMap;
+
+/// Result of Algorithm 1 over one example.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// Per segment: interleaved row ids that OWN their loss here (sorted).
+    pub segment_rows: Vec<Vec<usize>>,
+    /// Per segment: depth-0 row ids included as attention keys only
+    /// (cumulative context; disjoint from `segment_rows`).
+    pub segment_extra_keys: Vec<Vec<usize>>,
+    /// Position-space boundaries, length S+1.
+    pub boundaries: Vec<usize>,
+}
+
+impl Partition {
+    pub fn n_segments(&self) -> usize {
+        self.segment_rows.len()
+    }
+
+    /// Peak "attention cells" across segments: rows × keys per segment —
+    /// the quantity the paper's O(L²/S²) memory claim is about.
+    pub fn peak_attention_cells(&self) -> usize {
+        self.segment_rows
+            .iter()
+            .zip(&self.segment_extra_keys)
+            .map(|(own, extra)| {
+                let keys = own.len() + extra.len();
+                own.len() * keys
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Algorithm 1 (paper pseudocode). `anchors` are the nested COD anchor sets;
+/// `n` is the sequence length (row space); `k` the depth count; `s` segments.
+pub fn partition_rows(anchors: &[Vec<usize>], n: usize, k: usize, s: usize) -> Partition {
+    assert!(s >= 1 && n >= 2);
+    // lines 1-2: segment boundaries
+    let boundaries: Vec<usize> = (0..=s).map(|i| i * n / s).collect();
+    let seg_of = |p: usize| -> usize {
+        // max { s : B_s <= p }
+        match boundaries.binary_search(&p) {
+            Ok(i) => i.min(s - 1),
+            Err(i) => (i - 1).min(s - 1),
+        }
+    };
+
+    let mut assign: HashMap<(usize, usize), usize> = HashMap::new();
+
+    // Phase 1: depths 0 and 1 by position
+    for d in 0..2.min(k) {
+        for &a in &anchors[d] {
+            let p = a + d;
+            if p <= n - 2 {
+                assign.insert((p, d), seg_of(p));
+            }
+        }
+    }
+
+    // Phase 2: depths >= 2 inherit from the chain parent (p-1, d-1)
+    for d in 2..k {
+        for &a in &anchors[d] {
+            let p = a + d;
+            if p > n - 2 {
+                continue;
+            }
+            let seg = assign
+                .get(&(p - 1, d - 1))
+                .copied()
+                .unwrap_or_else(|| seg_of(p)); // guarded: nested COD ⇒ parent exists
+            assign.insert((p, d), seg);
+        }
+    }
+
+    let mut segment_rows: Vec<Vec<usize>> = vec![Vec::new(); s];
+    for (&(p, d), &seg) in &assign {
+        segment_rows[seg].push(p * k + d);
+    }
+    for rows in &mut segment_rows {
+        rows.sort_unstable();
+    }
+
+    // Phase 3: cumulative depth-0 keys up to each segment's upper boundary
+    let mut d0: Vec<usize> = anchors[0]
+        .iter()
+        .filter(|&&p| p <= n - 2)
+        .map(|&p| p * k)
+        .collect();
+    d0.sort_unstable();
+    let mut segment_extra_keys = Vec::with_capacity(s);
+    for seg in 0..s {
+        let own: std::collections::HashSet<usize> =
+            segment_rows[seg].iter().copied().collect();
+        let upto = boundaries[seg + 1];
+        let keys: Vec<usize> = d0
+            .iter()
+            .copied()
+            .filter(|r| r / k < upto && !own.contains(r))
+            .collect();
+        segment_extra_keys.push(keys);
+    }
+
+    Partition { segment_rows, segment_extra_keys, boundaries }
+}
+
+/// Validate the paper's invariants; returns violations (empty = valid).
+pub fn validate(part: &Partition, anchors: &[Vec<usize>], n: usize, k: usize) -> Vec<String> {
+    use crate::masking::rows_from_anchors;
+    let mut errs = Vec::new();
+    let all_rows: std::collections::HashSet<usize> =
+        rows_from_anchors(anchors, n, k).into_iter().collect();
+
+    // each row owned exactly once, ownership covers all rows
+    let mut owner: HashMap<usize, usize> = HashMap::new();
+    for (s, rows) in part.segment_rows.iter().enumerate() {
+        for &r in rows {
+            if let Some(prev) = owner.insert(r, s) {
+                errs.push(format!("row {r} owned by segments {prev} and {s}"));
+            }
+        }
+    }
+    if owner.len() != all_rows.len() || !all_rows.iter().all(|r| owner.contains_key(r)) {
+        errs.push(format!(
+            "ownership mismatch: {} owned vs {} rows",
+            owner.len(),
+            all_rows.len()
+        ));
+    }
+
+    // every owned row's attention set present in its segment
+    for (s, rows) in part.segment_rows.iter().enumerate() {
+        let keys: std::collections::HashSet<usize> = rows
+            .iter()
+            .chain(part.segment_extra_keys[s].iter())
+            .copied()
+            .collect();
+        for &r in rows {
+            let (p, d) = (r / k, r % k);
+            let anchor = p - d;
+            for e in 1..=d {
+                let rid = (anchor + e) * k + e;
+                if all_rows.contains(&rid) && !keys.contains(&rid) {
+                    errs.push(format!("seg {s}: row ({p},{d}) missing chain depth {e}"));
+                }
+            }
+            for q in 0..=anchor {
+                let rid = q * k;
+                if all_rows.contains(&rid) && !keys.contains(&rid) {
+                    errs.push(format!("seg {s}: row ({p},{d}) missing ctx ({q},0)"));
+                    break;
+                }
+            }
+        }
+    }
+    errs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masking::cod_sample_nested;
+    use crate::util::prop::{check, Case};
+
+    #[test]
+    fn paper_fig4_example() {
+        // n=16, K=4, r=0.7, the paper's exact sampled sets, 2 segments.
+        let anchors = vec![
+            (0..16).collect::<Vec<_>>(),
+            vec![0, 2, 3, 5, 6, 8, 9, 11, 13, 14],
+            vec![0, 3, 5, 6, 9, 11, 13],
+            vec![0, 3, 6, 9, 11],
+        ];
+        let part = partition_rows(&anchors, 16, 4, 2);
+        let errs = validate(&part, &anchors, 16, 4);
+        assert!(errs.is_empty(), "{errs:?}");
+        // the paper's highlighted violation case: position 8 at depth 2
+        // (anchor 6) must share a segment with its chain parent (7, 1)
+        let k = 4;
+        let row_82 = 8 * k + 2;
+        let row_71 = 7 * k + 1;
+        let seg_of = |row| {
+            part.segment_rows.iter().position(|rs| rs.contains(&row)).unwrap()
+        };
+        assert_eq!(seg_of(row_82), seg_of(row_71));
+    }
+
+    #[test]
+    fn invariants_hold_randomly() {
+        check("alg1-invariants", 80, |rng| {
+            let n = 4 + rng.below(160);
+            let k = 1 + rng.below(8);
+            let s = 1 + rng.below(6);
+            let r = 0.5 + rng.f64() * 0.45;
+            let anchors = cod_sample_nested(n, k, r, rng);
+            let part = partition_rows(&anchors, n, k, s);
+            let errs = validate(&part, &anchors, n, k);
+            if errs.is_empty() {
+                Case::Pass
+            } else {
+                Case::Fail { desc: format!("n={n} k={k} s={s}: {}", errs[0]), size: n }
+            }
+        });
+    }
+
+    #[test]
+    fn memory_shrinks_with_segments() {
+        // paper §3.2: peak attention memory drops ~O(1/S²) in the owned-row
+        // quadratic term (cumulative keys add a linear term).
+        let mut rng = crate::util::rng::Rng::new(1);
+        let anchors = cod_sample_nested(512, 8, 0.8, &mut rng);
+        let p1 = partition_rows(&anchors, 512, 8, 1).peak_attention_cells();
+        let p4 = partition_rows(&anchors, 512, 8, 4).peak_attention_cells();
+        assert!(
+            (p4 as f64) < (p1 as f64) * 0.45,
+            "S=4 peak {p4} not ≪ S=1 peak {p1}"
+        );
+    }
+
+    #[test]
+    fn single_segment_owns_everything() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let anchors = cod_sample_nested(64, 4, 0.8, &mut rng);
+        let part = partition_rows(&anchors, 64, 4, 1);
+        assert_eq!(part.n_segments(), 1);
+        assert!(part.segment_extra_keys[0].is_empty());
+        let rows = crate::masking::rows_from_anchors(&anchors, 64, 4);
+        assert_eq!(part.segment_rows[0], rows);
+    }
+
+    #[test]
+    fn boundaries_cover_sequence() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        for s in 1..6 {
+            let anchors = cod_sample_nested(50, 4, 0.8, &mut rng);
+            let part = partition_rows(&anchors, 50, 4, s);
+            assert_eq!(part.boundaries.first(), Some(&0));
+            assert_eq!(part.boundaries.last(), Some(&50));
+            assert_eq!(part.boundaries.len(), s + 1);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once on the CPU
+//! client, execute with device-resident weights/KV buffers.
+//!
+//! Layering: `weights` reads .pew files, `tensors` marshals host data,
+//! `executable` owns the client + compiled-executable registry, and
+//! `models` assembles them into typed prefill/verify/draft invocations the
+//! coordinator uses.
+
+pub mod executable;
+pub mod models;
+pub mod tensors;
+pub mod weights;
+
+pub use executable::{Arg, Runtime};
+pub use models::{DraftExec, ModelRuntime, TargetExec};
+pub use tensors::{HostData, HostTensor};

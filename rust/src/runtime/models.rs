@@ -1,0 +1,185 @@
+//! Typed model invocations over the executable registry: prefill / verify
+//! for targets, draft for drafters. Weights are uploaded once per model as
+//! device-resident buffers and shared across every executable that uses
+//! them; KV caches round-trip as device buffers between verify calls.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use super::executable::{Arg, Runtime};
+use super::tensors::HostTensor;
+use super::weights::{check_order, read_pew, TensorData};
+use crate::config::Manifest;
+
+pub struct ModelRuntime {
+    pub rt: Runtime,
+    pub manifest: Manifest,
+    /// weight-set name (target or drafter) -> uploaded parameter buffers
+    weights: HashMap<String, Vec<xla::PjRtBuffer>>,
+}
+
+/// Outputs of a target prefill call.
+pub struct PrefillOut {
+    pub last_logits: HostTensor, // [B, V]
+    pub feats: HostTensor,       // [B, P, 3d]
+    pub kv: xla::PjRtBuffer,     // device-resident cache
+}
+
+/// Outputs of a target verify call.
+pub struct VerifyOut {
+    pub logits: HostTensor, // [B, K+1, V]
+    pub feats: HostTensor,  // [B, K+1, 3d]
+    pub kv: xla::PjRtBuffer,
+}
+
+/// Identifies a loaded target executable pair.
+#[derive(Clone, Debug)]
+pub struct TargetExec {
+    pub target: String,
+    pub batch: usize,
+    pub k: usize,
+}
+
+/// Identifies a loaded drafter executable.
+#[derive(Clone, Debug)]
+pub struct DraftExec {
+    pub drafter: String,
+    pub batch: usize,
+    pub k: usize,
+}
+
+impl ModelRuntime {
+    pub fn load(artifacts_root: impl Into<PathBuf>) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(artifacts_root.into())?;
+        let rt = Runtime::cpu()?;
+        Ok(ModelRuntime { rt, manifest, weights: HashMap::new() })
+    }
+
+    /// Upload a weight set (target or drafter) once; validates the file's
+    /// tensor order against the manifest's lowering order.
+    fn ensure_weights(&mut self, name: &str, rel_path: &str, order: &[String]) -> Result<()> {
+        if self.weights.contains_key(name) {
+            return Ok(());
+        }
+        let tensors = read_pew(&self.manifest.abs(rel_path))
+            .with_context(|| format!("weights for {name}"))?;
+        check_order(&tensors, order)?;
+        let mut bufs = Vec::with_capacity(tensors.len());
+        for t in &tensors {
+            let host = match &t.data {
+                TensorData::F32(v) => HostTensor::f32(&t.dims, v.clone()),
+                TensorData::I32(v) => HostTensor::i32(&t.dims, v.clone()),
+            };
+            bufs.push(self.rt.upload(&host)?);
+        }
+        self.weights.insert(name.to_string(), bufs);
+        Ok(())
+    }
+
+    pub fn ensure_target(&mut self, target: &str, batch: usize, k: usize) -> Result<TargetExec> {
+        let info = self.manifest.target(target)?.clone();
+        self.ensure_weights(target, &info.weights, &info.param_order)?;
+        let pre = self
+            .manifest
+            .find_exec("prefill", Some(target), None, Some(batch), None)?
+            .clone();
+        let ver = self
+            .manifest
+            .find_exec("verify", Some(target), None, Some(batch), Some(k))?
+            .clone();
+        self.rt.load(&pre.name, &self.manifest.abs(&pre.path))?;
+        self.rt.load(&ver.name, &self.manifest.abs(&ver.path))?;
+        Ok(TargetExec { target: target.to_string(), batch, k })
+    }
+
+    pub fn ensure_drafter(&mut self, drafter: &str, batch: usize, k: usize) -> Result<DraftExec> {
+        let info = self.manifest.drafter(drafter)?.clone();
+        self.ensure_weights(drafter, &info.weights, &info.param_order)?;
+        let d = self
+            .manifest
+            .find_exec("draft", None, Some(drafter), Some(batch), Some(k))?
+            .clone();
+        self.rt.load(&d.name, &self.manifest.abs(&d.path))?;
+        Ok(DraftExec { drafter: drafter.to_string(), batch, k })
+    }
+
+    /// Fresh zeroed KV cache for a wave of `batch` slots.
+    pub fn zero_kv(&mut self, target: &str, batch: usize) -> Result<xla::PjRtBuffer> {
+        let t = self.manifest.target(target)?;
+        let dims = [t.n_layers, 2, batch, self.manifest.s_max, t.n_heads, t.head_dim];
+        let host = HostTensor::zeros_f32(&dims);
+        self.rt.upload(&host)
+    }
+
+    pub fn prefill(
+        &mut self,
+        te: &TargetExec,
+        tokens: &HostTensor,     // [B, P] i32 (padded)
+        prompt_len: &HostTensor, // [B] i32
+        kv: &xla::PjRtBuffer,
+    ) -> Result<PrefillOut> {
+        let name = format!("{}-prefill-b{}", te.target, te.batch);
+        // direct field borrows keep self.weights (shared) and self.rt
+        // (mutable) disjoint for the borrow checker
+        let wbufs = &self.weights[&te.target];
+        let mut args: Vec<Arg> = wbufs.iter().map(Arg::Buf).collect();
+        args.push(Arg::Host(tokens));
+        args.push(Arg::Host(prompt_len));
+        args.push(Arg::Buf(kv));
+        let out = self.rt.call(&name, &args)?;
+        let mut it = out.into_iter();
+        let last_logits = self.rt.download(&it.next().context("missing logits")?)?;
+        let feats = self.rt.download(&it.next().context("missing feats")?)?;
+        let kv = it.next().context("missing kv")?;
+        Ok(PrefillOut { last_logits, feats, kv })
+    }
+
+    pub fn verify(
+        &mut self,
+        te: &TargetExec,
+        chunk: &HostTensor,     // [B, K+1] i32
+        cache_len: &HostTensor, // [B] i32
+        kv: &xla::PjRtBuffer,
+    ) -> Result<VerifyOut> {
+        let name = format!("{}-verify-b{}-k{}", te.target, te.batch, te.k);
+        let wbufs = &self.weights[&te.target];
+        let mut args: Vec<Arg> = wbufs.iter().map(Arg::Buf).collect();
+        args.push(Arg::Host(chunk));
+        args.push(Arg::Host(cache_len));
+        args.push(Arg::Buf(kv));
+        let out = self.rt.call(&name, &args)?;
+        let mut it = out.into_iter();
+        let logits = self.rt.download(&it.next().context("missing logits")?)?;
+        let feats = self.rt.download(&it.next().context("missing feats")?)?;
+        let mut kv = it.next().context("missing kv")?;
+        if std::env::var("PEAGLE_FORCE_HOST_KV").is_ok() {
+            // §Perf baseline knob: emulate the pre-patch stock-crate path
+            // where the KV cache round-trips through the host every verify
+            // (see EXPERIMENTS.md §Perf L3 iteration 1)
+            let host = self.rt.download(&kv)?;
+            kv = self.rt.upload(&host)?;
+        }
+        Ok(VerifyOut { logits, feats, kv })
+    }
+
+    /// Draft K tokens. ctx_tokens [B,C] i32, ctx_feats [B,C,3d] f32,
+    /// row_pos0 [B] i32 -> [B,K] i32.
+    pub fn draft(
+        &mut self,
+        de: &DraftExec,
+        ctx_tokens: &HostTensor,
+        ctx_feats: &HostTensor,
+        row_pos0: &HostTensor,
+    ) -> Result<HostTensor> {
+        let name = format!("{}-draft-b{}-k{}", de.drafter, de.batch, de.k);
+        let wbufs = &self.weights[&de.drafter];
+        let mut args: Vec<Arg> = wbufs.iter().map(Arg::Buf).collect();
+        args.push(Arg::Host(ctx_tokens));
+        args.push(Arg::Host(ctx_feats));
+        args.push(Arg::Host(row_pos0));
+        let out = self.rt.call(&name, &args)?;
+        self.rt.download(&out[0])
+    }
+}

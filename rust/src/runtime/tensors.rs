@@ -1,0 +1,101 @@
+//! Host-side tensor views + PJRT buffer marshalling helpers.
+
+use anyhow::{bail, Result};
+
+/// A host tensor (f32 or i32) with explicit dims — the runtime's lingua
+/// franca between the coordinator's Rust-owned state and PJRT buffers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: HostData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(dims: &[usize], data: Vec<f32>) -> HostTensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { dims: dims.to_vec(), data: HostData::F32(data) }
+    }
+
+    pub fn i32(dims: &[usize], data: Vec<i32>) -> HostTensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { dims: dims.to_vec(), data: HostData::I32(data) }
+    }
+
+    pub fn zeros_f32(dims: &[usize]) -> HostTensor {
+        HostTensor::f32(dims, vec![0.0; dims.iter().product()])
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            HostData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            HostData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Row-major offset for an index tuple.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.dims.len());
+        let mut off = 0;
+        for (i, (&x, &d)) in idx.iter().zip(&self.dims).enumerate() {
+            assert!(x < d, "index {x} out of dim {d} at axis {i}");
+            off = off * d + x;
+        }
+        off
+    }
+}
+
+/// Convert an xla Literal (already untupled) into a HostTensor.
+pub fn literal_to_host(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(HostTensor::f32(&dims, lit.to_vec::<f32>()?)),
+        xla::ElementType::S32 => Ok(HostTensor::i32(&dims, lit.to_vec::<i32>()?)),
+        other => bail!("unsupported element type {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_row_major() {
+        let t = HostTensor::zeros_f32(&[2, 3, 4]);
+        assert_eq!(t.offset(&[0, 0, 0]), 0);
+        assert_eq!(t.offset(&[0, 0, 3]), 3);
+        assert_eq!(t.offset(&[0, 1, 0]), 4);
+        assert_eq!(t.offset(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    #[should_panic]
+    fn offset_bounds_checked() {
+        let t = HostTensor::zeros_f32(&[2, 2]);
+        t.offset(&[2, 0]);
+    }
+
+    #[test]
+    fn constructors_check_len() {
+        let t = HostTensor::i32(&[3], vec![1, 2, 3]);
+        assert_eq!(t.as_i32().unwrap(), &[1, 2, 3]);
+        assert!(t.as_f32().is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! PEW weight-file reader (the Python writer is python/compile/pew.py).
+//!
+//! Binary layout (little-endian):
+//!   magic b"PEW1"; u32 count; per tensor: u16 name_len + name, u8 dtype
+//!   (0=f32, 1=i32), u8 ndim, u32*ndim dims, raw data.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("{}: not f32", self.name),
+        }
+    }
+}
+
+pub fn read_pew(path: &Path) -> Result<Vec<Tensor>> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"PEW1" {
+        bail!("{path:?}: bad magic {magic:?}");
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let nlen = read_u16(&mut f)? as usize;
+        let mut name = vec![0u8; nlen];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let mut hdr = [0u8; 2];
+        f.read_exact(&mut hdr)?;
+        let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut f)? as usize);
+        }
+        let numel: usize = dims.iter().product::<usize>().max(1);
+        let mut raw = vec![0u8; numel * 4];
+        f.read_exact(&mut raw)?;
+        let data = match dtype {
+            0 => TensorData::F32(
+                raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            1 => TensorData::I32(
+                raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            other => bail!("{path:?}: unknown dtype {other}"),
+        };
+        out.push(Tensor { name, dims, data });
+    }
+    Ok(out)
+}
+
+/// Check a weight file against the manifest's declared parameter order.
+pub fn check_order(tensors: &[Tensor], expected: &[String]) -> Result<()> {
+    if tensors.len() != expected.len() {
+        bail!("weight count {} != manifest {}", tensors.len(), expected.len());
+    }
+    for (t, e) in tensors.iter().zip(expected) {
+        if &t.name != e {
+            return Err(anyhow!("weight order mismatch: file {:?} vs manifest {:?}", t.name, e));
+        }
+    }
+    Ok(())
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(f: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    f.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_test_pew(path: &Path) {
+        // mirror of the python writer for a 2-tensor file
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"PEW1").unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        // "a": f32 [2,3]
+        f.write_all(&1u16.to_le_bytes()).unwrap();
+        f.write_all(b"a").unwrap();
+        f.write_all(&[0u8, 2u8]).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        for i in 0..6 {
+            f.write_all(&(i as f32).to_le_bytes()).unwrap();
+        }
+        // "b": i32 scalar-ish [1]
+        f.write_all(&1u16.to_le_bytes()).unwrap();
+        f.write_all(b"b").unwrap();
+        f.write_all(&[1u8, 1u8]).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&42i32.to_le_bytes()).unwrap();
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("pew_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.pew");
+        write_test_pew(&path);
+        let ts = read_pew(&path).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "a");
+        assert_eq!(ts[0].dims, vec![2, 3]);
+        assert_eq!(ts[0].f32s().unwrap(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(ts[1].name, "b");
+        match &ts[1].data {
+            TensorData::I32(v) => assert_eq!(v, &[42]),
+            _ => panic!("wrong dtype"),
+        }
+        check_order(&ts, &["a".into(), "b".into()]).unwrap();
+        assert!(check_order(&ts, &["b".into(), "a".into()]).is_err());
+        assert!(check_order(&ts, &["a".into()]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("pew_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.pew");
+        std::fs::write(&path, b"NOPE\x00\x00\x00\x00").unwrap();
+        assert!(read_pew(&path).is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Criterion-style measurement harness (offline env: no criterion crate).
+//!
+//! Benches are `harness = false` binaries; this module provides warmup +
+//! timed iterations + robust statistics and a stable textual output format
+//! that EXPERIMENTS.md quotes directly.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p90_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub std_ns: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let q = |p: f64| ns[((p * n as f64) as usize).min(n - 1)];
+        Stats {
+            iters: n,
+            mean_ns: mean,
+            p50_ns: q(0.50),
+            p90_ns: q(0.90),
+            p99_ns: q(0.99),
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+            std_ns: var.sqrt(),
+        }
+    }
+
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run `f` with warmup, then measure `iters` samples (one call per sample).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let s = Stats::from_samples(samples);
+    println!(
+        "{name:<48} mean {:>10}  p50 {:>10}  p99 {:>10}  (n={})",
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.p50_ns),
+        fmt_ns(s.p99_ns),
+        s.iters
+    );
+    s
+}
+
+/// Time a single invocation (for long end-to-end measurements).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed())
+}
+
+/// Markdown-ish table printer shared by bench binaries.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<width$} | ", c, width = w[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.header));
+        println!(
+            "|{}|",
+            w.iter().map(|n| "-".repeat(n + 2)).collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_quantiles() {
+        let s = Stats::from_samples((1..=100).map(|x| x as f64).collect());
+        assert_eq!(s.iters, 100);
+        assert!((s.mean_ns - 50.5).abs() < 1e-9);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 100.0);
+        assert!(s.p50_ns >= 50.0 && s.p50_ns <= 52.0);
+        assert!(s.p99_ns >= 99.0);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(1.5e3).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(fmt_ns(3.0e9).contains(" s"));
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0;
+        let s = bench("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.iters, 5);
+    }
+}

@@ -1,0 +1,15 @@
+//! In-tree utility layer. The build environment is fully offline with only
+//! the `xla` + `anyhow` crates vendored, so the pieces a serving framework
+//! normally pulls from the ecosystem live here instead:
+//!
+//! * [`rng`]   — seeded SplitMix64 PRNG (rand replacement)
+//! * [`json`]  — JSON parse/serialize (serde_json replacement)
+//! * [`cli`]   — argument parsing (clap replacement)
+//! * [`bench`] — measurement harness + stats (criterion replacement)
+//! * [`prop`]  — property-testing loop (proptest replacement)
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

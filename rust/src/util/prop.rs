@@ -1,0 +1,83 @@
+//! Tiny property-testing harness (offline env: no proptest crate).
+//!
+//! `check(name, cases, |rng| ...)` runs a seeded-random property many times
+//! and panics with the *smallest* failing case (by the size metric the
+//! property reports), which approximates proptest's shrinking.
+
+use super::rng::Rng;
+
+const P_SEED: u64 = 0x5EED_CAFE_F00D_1234;
+
+/// Outcome of a single property case.
+pub enum Case {
+    Pass,
+    /// Failure with a human-readable description and a size metric used to
+    /// keep the smallest counterexample.
+    Fail { desc: String, size: usize },
+}
+
+pub fn check<F: FnMut(&mut Rng) -> Case>(name: &str, cases: usize, mut prop: F) {
+    let mut smallest: Option<(usize, String, usize)> = None;
+    for i in 0..cases {
+        let mut rng = Rng::new(P_SEED ^ (i as u64).wrapping_mul(0x9E37_79B9));
+        if let Case::Fail { desc, size } = prop(&mut rng) {
+            let better = smallest.as_ref().map(|(s, _, _)| size < *s).unwrap_or(true);
+            if better {
+                smallest = Some((size, desc, i));
+            }
+        }
+    }
+    if let Some((size, desc, case)) = smallest {
+        panic!("property {name} failed (smallest size {size}, case #{case}): {desc}");
+    }
+}
+
+/// Assert-style helper for use inside properties.
+pub fn ensure(cond: bool, desc: impl Into<String>, size: usize) -> Case {
+    if cond {
+        Case::Pass
+    } else {
+        Case::Fail { desc: desc.into(), size }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially() {
+        check("always-true", 50, |_| Case::Pass);
+    }
+
+    #[test]
+    #[should_panic(expected = "property sometimes-false failed")]
+    fn reports_failure() {
+        check("sometimes-false", 50, |rng| {
+            let x = rng.below(10);
+            ensure(x < 9, format!("x={x}"), x)
+        });
+    }
+
+    #[test]
+    fn keeps_smallest() {
+        let result = std::panic::catch_unwind(|| {
+            check("always-false", 20, |rng| {
+                let x = rng.below(100);
+                Case::Fail { desc: format!("x={x}"), size: x }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // the reported size must be the minimum over all 20 cases
+        let reported: usize = msg
+            .split("smallest size ")
+            .nth(1)
+            .unwrap()
+            .split(',')
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(reported <= 20, "unlikely large minimum: {msg}");
+    }
+}

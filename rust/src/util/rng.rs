@@ -1,0 +1,173 @@
+//! Seeded PRNG (SplitMix64 core + helpers). Deterministic across runs and
+//! platforms — every stochastic component in the coordinator (workloads,
+//! COD sampling mirrors, property tests) threads one of these explicitly.
+
+/// SplitMix64: tiny, high-quality-enough, and trivially reproducible.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    /// Derive an independent stream (stable under call-site reordering).
+    pub fn fork(&self, stream: u64) -> Rng {
+        let mut r = Rng::new(self.state ^ stream.wrapping_mul(0xA24B_AED4_963E_E407));
+        r.next_u64();
+        r
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // multiply-shift; bias negligible for our n << 2^32
+        ((self.next_u64() >> 32).wrapping_mul(n as u64) >> 32) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Lognormal with the given mu/sigma (paper Fig. 1 length model).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential inter-arrival with rate `lambda` (requests/sec).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.f64().max(1e-12).ln() / lambda
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f32 = weights.iter().sum();
+        let mut x = self.f64() as f32 * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// `count` distinct values from [0, n), sorted ascending.
+    pub fn sample_without_replacement(&mut self, n: usize, count: usize) -> Vec<usize> {
+        assert!(count <= n);
+        // Floyd's algorithm
+        let mut chosen = std::collections::BTreeSet::new();
+        for j in (n - count)..n {
+            let t = self.below(j + 1);
+            if !chosen.insert(t) {
+                chosen.insert(j);
+            }
+        }
+        chosen.into_iter().collect()
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.below(13);
+            assert!(x < 13);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn swr_distinct_sorted() {
+        let mut r = Rng::new(5);
+        for _ in 0..200 {
+            let n = 1 + r.below(50);
+            let c = r.below(n + 1);
+            let s = r.sample_without_replacement(n, c);
+            assert_eq!(s.len(), c);
+            for w in s.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(s.iter().all(|&x| x < n));
+        }
+    }
+
+    #[test]
+    fn categorical_prefers_heavy() {
+        let mut r = Rng::new(9);
+        let mut counts = [0usize; 3];
+        for _ in 0..9000 {
+            counts[r.categorical(&[0.1, 0.1, 0.8])] += 1;
+        }
+        assert!(counts[2] > counts[0] + counts[1]);
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let r = Rng::new(1);
+        let mut a = r.fork(1);
+        let mut b = r.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,118 @@
+//! Request arrival generation for the serving benches.
+//!
+//! Table 10 measures OTPS at fixed concurrency C ∈ {2, 4}: a closed-loop
+//! driver keeps exactly C requests in flight (each completion immediately
+//! admits the next), which is how the paper's vLLM benchmark client behaves.
+//! An open-loop Poisson mode exists for latency-under-load experiments.
+
+use super::corpus::PhraseRegime;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RequestSpec {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// arrival offset in seconds (0 for closed-loop)
+    pub arrival_s: f64,
+}
+
+pub struct ArrivalProcess {
+    pub regime: PhraseRegime,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    rng: Rng,
+    next_id: u64,
+    clock_s: f64,
+}
+
+impl ArrivalProcess {
+    pub fn closed_loop(
+        regime: PhraseRegime,
+        prompt_len: usize,
+        max_new_tokens: usize,
+        seed: u64,
+    ) -> ArrivalProcess {
+        ArrivalProcess {
+            regime,
+            prompt_len,
+            max_new_tokens,
+            rng: Rng::new(seed),
+            next_id: 0,
+            clock_s: 0.0,
+        }
+    }
+
+    /// Next request, immediately available (closed loop).
+    pub fn next(&mut self) -> RequestSpec {
+        let id = self.next_id;
+        self.next_id += 1;
+        RequestSpec {
+            id,
+            prompt: self.regime.sample_seq(self.prompt_len, &mut self.rng),
+            max_new_tokens: self.max_new_tokens,
+            arrival_s: self.clock_s,
+        }
+    }
+
+    /// Next request under Poisson arrivals at `rate` req/s (open loop).
+    pub fn next_poisson(&mut self, rate: f64) -> RequestSpec {
+        self.clock_s += self.rng.exponential(rate);
+        self.next()
+    }
+
+    /// Fixed prompt pool variant used by acceptance evals (prompts come from
+    /// the exported OOD eval sets instead of fresh sampling).
+    pub fn from_pool(pool: &[Vec<i32>], count: usize, max_new: usize) -> Vec<RequestSpec> {
+        (0..count)
+            .map(|i| RequestSpec {
+                id: i as u64,
+                prompt: pool[i % pool.len()].clone(),
+                max_new_tokens: max_new,
+                arrival_s: 0.0,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn regime() -> PhraseRegime {
+        PhraseRegime {
+            name: "toy".into(),
+            phrases: vec![vec![10, 11], vec![20]],
+            succ: vec![vec![1], vec![0]],
+            probs: vec![vec![1.0], vec![1.0]],
+        }
+    }
+
+    #[test]
+    fn ids_monotone_prompts_sized() {
+        let mut ap = ArrivalProcess::closed_loop(regime(), 12, 32, 7);
+        for i in 0..10 {
+            let r = ap.next();
+            assert_eq!(r.id, i);
+            assert_eq!(r.prompt.len(), 12);
+            assert_eq!(r.max_new_tokens, 32);
+        }
+    }
+
+    #[test]
+    fn poisson_clock_advances() {
+        let mut ap = ArrivalProcess::closed_loop(regime(), 8, 16, 3);
+        let a = ap.next_poisson(10.0);
+        let b = ap.next_poisson(10.0);
+        assert!(b.arrival_s > a.arrival_s);
+    }
+
+    #[test]
+    fn pool_cycles() {
+        let pool = vec![vec![1, 2, 3], vec![1, 4, 5]];
+        let reqs = ArrivalProcess::from_pool(&pool, 5, 64);
+        assert_eq!(reqs.len(), 5);
+        assert_eq!(reqs[0].prompt, reqs[2].prompt);
+        assert_eq!(reqs[1].prompt, reqs[3].prompt);
+    }
+}

@@ -1,0 +1,153 @@
+//! Phrase-bank corpus mirror — reconstructs the Python regimes from the
+//! tables exported in artifacts/manifest.json so the Rust engine can sample
+//! an unbounded stream of in-distribution prompts (serving benches) beyond
+//! the fixed eval prompt sets.
+
+use crate::util::{json::Json, rng::Rng};
+
+pub const BOS_ID: i32 = 1;
+pub const EOS_ID: i32 = 2;
+
+#[derive(Clone, Debug)]
+pub struct PhraseRegime {
+    pub name: String,
+    pub phrases: Vec<Vec<i32>>,
+    /// [n_phrases][branch] successor phrase ids
+    pub succ: Vec<Vec<usize>>,
+    /// [n_phrases][branch] transition probabilities
+    pub probs: Vec<Vec<f32>>,
+}
+
+impl PhraseRegime {
+    pub fn from_json(v: &Json) -> PhraseRegime {
+        let arr_i32 = |x: &Json| -> Vec<i32> {
+            x.as_arr().unwrap().iter().map(|t| t.as_i64().unwrap() as i32).collect()
+        };
+        PhraseRegime {
+            name: v.str_of("name"),
+            phrases: v.req("phrases").as_arr().unwrap().iter().map(arr_i32).collect(),
+            succ: v
+                .req("succ")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|r| r.as_arr().unwrap().iter().map(|x| x.as_usize().unwrap()).collect())
+                .collect(),
+            probs: v
+                .req("probs")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|r| r.as_arr().unwrap().iter().map(|x| x.as_f64().unwrap() as f32).collect())
+                .collect(),
+        }
+    }
+
+    /// Sample `[BOS, tokens...]` of exactly `length` tokens — the same
+    /// process as python/compile/data.py PhraseRegime::sample_seq.
+    pub fn sample_seq(&self, length: usize, rng: &mut Rng) -> Vec<i32> {
+        assert!(length >= 1);
+        let mut out = Vec::with_capacity(length);
+        out.push(BOS_ID);
+        let mut pid = rng.below(self.phrases.len());
+        while out.len() < length {
+            let ph = &self.phrases[pid];
+            let take = ph.len().min(length - out.len());
+            out.extend_from_slice(&ph[..take]);
+            pid = self.succ[pid][rng.categorical(&self.probs[pid])];
+        }
+        out
+    }
+
+    /// Mean within-phrase determinism — higher values mean a drafter can
+    /// predict longer runs (regime-entropy diagnostic used by tests).
+    pub fn mean_phrase_len(&self) -> f64 {
+        self.phrases.iter().map(|p| p.len() as f64).sum::<f64>() / self.phrases.len() as f64
+    }
+}
+
+/// Fixed eval prompt set loaded from artifacts/eval/<regime>.json.
+pub fn load_eval_prompts(path: &std::path::Path) -> anyhow::Result<Vec<Vec<i32>>> {
+    let text = std::fs::read_to_string(path)?;
+    let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+    Ok(v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("prompts not an array"))?
+        .iter()
+        .map(|row| row.as_arr().unwrap().iter().map(|t| t.as_i64().unwrap() as i32).collect())
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_regime() -> PhraseRegime {
+        PhraseRegime {
+            name: "toy".into(),
+            phrases: vec![vec![10, 11, 12], vec![20, 21], vec![30, 31, 32, 33]],
+            succ: vec![vec![1, 2], vec![0, 2], vec![0, 1]],
+            probs: vec![vec![0.9, 0.1], vec![0.5, 0.5], vec![0.2, 0.8]],
+        }
+    }
+
+    #[test]
+    fn exact_length_and_bos() {
+        let r = toy_regime();
+        let mut rng = Rng::new(1);
+        for len in [1usize, 2, 5, 17, 64] {
+            let s = r.sample_seq(len, &mut rng);
+            assert_eq!(s.len(), len);
+            assert_eq!(s[0], BOS_ID);
+        }
+    }
+
+    #[test]
+    fn tokens_come_from_phrases() {
+        let r = toy_regime();
+        let mut rng = Rng::new(2);
+        let s = r.sample_seq(50, &mut rng);
+        let valid: std::collections::HashSet<i32> =
+            r.phrases.iter().flatten().copied().collect();
+        for &t in &s[1..] {
+            assert!(valid.contains(&t), "token {t}");
+        }
+    }
+
+    #[test]
+    fn phrases_appear_contiguously() {
+        // any maximal run starting at a phrase anchor must match the phrase
+        let r = toy_regime();
+        let mut rng = Rng::new(3);
+        let s = r.sample_seq(60, &mut rng);
+        let mut i = 1;
+        while i < s.len() {
+            let ph = r
+                .phrases
+                .iter()
+                .find(|p| p[0] == s[i])
+                .unwrap_or_else(|| panic!("no phrase starts with {}", s[i]));
+            let take = ph.len().min(s.len() - i);
+            assert_eq!(&s[i..i + take], &ph[..take]);
+            i += take;
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let r = toy_regime();
+        let a = r.sample_seq(40, &mut Rng::new(9));
+        let b = r.sample_seq(40, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let src = r#"{"name":"x","phrases":[[4,5],[6]],"succ":[[1],[0]],"probs":[[1.0],[1.0]]}"#;
+        let r = PhraseRegime::from_json(&Json::parse(src).unwrap());
+        assert_eq!(r.phrases.len(), 2);
+        assert_eq!(r.succ[0][0], 1);
+        let mut rng = Rng::new(4);
+        let s = r.sample_seq(10, &mut rng);
+        assert_eq!(s.len(), 10);
+    }
+}

@@ -1,0 +1,116 @@
+//! Figure 1 — sequence-length (prompt + generation) distribution.
+//!
+//! The paper reports UltraChat × GPT-OSS-120B (reasoning: medium) lengths of
+//! median 3,891 / P90 10,800 / P99 20,000 tokens. We model this as a
+//! two-mode lognormal mixture fit to those quantiles (same constants as
+//! python/compile/data.py) and expose both the paper-scale sampler (the
+//! Fig 1 report) and the testbed-scaled sampler the serving workload uses.
+
+use crate::util::rng::Rng;
+
+/// (weight, mu, sigma) over paper-scale token counts.
+pub const MODES: [(f64, f64, f64); 2] = [
+    (0.80, 8.10, 0.60), // main reasoning mass (~median 3.3K)
+    (0.20, 9.20, 0.40), // long-tail reasoning traces
+];
+
+/// Paper-scale -> testbed scale (max_new_tokens 160 vs ~20K tail).
+pub const LEN_SCALE: f64 = 1.0 / 32.0;
+
+#[derive(Clone, Debug)]
+pub struct LengthModel {
+    pub scale: f64,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl LengthModel {
+    pub fn paper() -> LengthModel {
+        LengthModel { scale: 1.0, min_len: 16, max_len: 120_000 }
+    }
+
+    pub fn testbed(max_len: usize) -> LengthModel {
+        LengthModel { scale: LEN_SCALE, min_len: 4, max_len }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let w = rng.f64();
+        let mut acc = 0.0;
+        let mut pick = MODES[MODES.len() - 1];
+        for m in MODES {
+            acc += m.0;
+            if w <= acc {
+                pick = m;
+                break;
+            }
+        }
+        let x = rng.lognormal(pick.1, pick.2) * self.scale;
+        (x as usize).clamp(self.min_len, self.max_len)
+    }
+
+    pub fn quantiles(&self, samples: usize, rng: &mut Rng) -> Quantiles {
+        let mut xs: Vec<usize> = (0..samples).map(|_| self.sample(rng)).collect();
+        xs.sort_unstable();
+        let q = |p: f64| xs[((p * samples as f64) as usize).min(samples - 1)];
+        Quantiles { median: q(0.50), p90: q(0.90), p99: q(0.99) }
+    }
+
+    /// Histogram over log-spaced bins (the Fig 1 shape).
+    pub fn histogram(&self, samples: usize, bins: usize, rng: &mut Rng) -> Vec<(usize, usize)> {
+        let xs: Vec<usize> = (0..samples).map(|_| self.sample(rng)).collect();
+        let lo = (*xs.iter().min().unwrap() as f64).ln();
+        let hi = (*xs.iter().max().unwrap() as f64 + 1.0).ln();
+        let mut hist = vec![0usize; bins];
+        for &x in &xs {
+            let b = (((x as f64).ln() - lo) / (hi - lo) * bins as f64) as usize;
+            hist[b.min(bins - 1)] += 1;
+        }
+        hist.iter()
+            .enumerate()
+            .map(|(i, &c)| ((lo + (i as f64 + 0.5) / bins as f64 * (hi - lo)).exp() as usize, c))
+            .collect()
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Quantiles {
+    pub median: usize,
+    pub p90: usize,
+    pub p99: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_quantiles_match() {
+        // the fit must land near the paper's reported quantiles
+        let m = LengthModel::paper();
+        let q = m.quantiles(60_000, &mut Rng::new(1));
+        let close = |got: usize, want: f64, tol: f64| {
+            (got as f64 - want).abs() / want < tol
+        };
+        assert!(close(q.median, 3891.0, 0.20), "median {}", q.median);
+        assert!(close(q.p90, 10_800.0, 0.25), "p90 {}", q.p90);
+        assert!(close(q.p99, 20_000.0, 0.30), "p99 {}", q.p99);
+    }
+
+    #[test]
+    fn testbed_respects_bounds() {
+        let m = LengthModel::testbed(160);
+        let mut rng = Rng::new(2);
+        for _ in 0..5000 {
+            let x = m.sample(&mut rng);
+            assert!((4..=160).contains(&x));
+        }
+    }
+
+    #[test]
+    fn histogram_mass_conserved() {
+        let m = LengthModel::paper();
+        let h = m.histogram(5000, 24, &mut Rng::new(3));
+        assert_eq!(h.iter().map(|(_, c)| c).sum::<usize>(), 5000);
+        assert_eq!(h.len(), 24);
+    }
+}

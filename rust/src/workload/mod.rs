@@ -1,0 +1,12 @@
+//! Workload generation: synthetic corpora (the Python phrase-bank regimes,
+//! reconstructed from the exported manifest tables), the paper's Figure-1
+//! sequence-length distribution, and request arrival processes for the
+//! serving benches.
+
+pub mod arrivals;
+pub mod corpus;
+pub mod lengths;
+
+pub use arrivals::{ArrivalProcess, RequestSpec};
+pub use corpus::PhraseRegime;
+pub use lengths::LengthModel;

@@ -1,0 +1,203 @@
+//! Engine integration tests — require `make artifacts`.
+//!
+//! The headline property: greedy speculative decoding is LOSSLESS — the
+//! engine's output must be byte-identical to the target model's own greedy
+//! continuation, for BOTH drafting methods. This is the invariant that makes
+//! the paper's OTPS comparison an apples-to-apples one.
+
+use p_eagle::coordinator::{run_closed_loop, EngineConfig, FinishReason, Sampling};
+use p_eagle::runtime::{HostTensor, ModelRuntime};
+use p_eagle::workload::RequestSpec;
+
+fn artifacts() -> Option<String> {
+    let root = std::env::var("PEAGLE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&root).join("manifest.json").exists().then_some(root)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(r) => r,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+/// Reference greedy decode using only the target executables (no drafter):
+/// chunk = [last, PAD...], take row 0's argmax each iteration.
+fn reference_greedy(
+    mr: &mut ModelRuntime,
+    target: &str,
+    prompt: &[i32],
+    max_new: usize,
+) -> Vec<i32> {
+    let k = mr.manifest.default_k;
+    let te = mr.ensure_target(target, 1, k).unwrap();
+    let p = mr.manifest.prompt_pad;
+    let vocab = mr.manifest.vocab;
+    let mut padded = vec![mr.manifest.pad_id; p];
+    padded[..prompt.len()].copy_from_slice(prompt);
+    let kv = mr.zero_kv(target, 1).unwrap();
+    let pre = mr
+        .prefill(
+            &te,
+            &HostTensor::i32(&[1, p], padded),
+            &HostTensor::i32(&[1], vec![prompt.len() as i32]),
+            &kv,
+        )
+        .unwrap();
+    let argmax = |row: &[f32]| -> i32 {
+        let mut bi = 0;
+        for (i, &x) in row.iter().enumerate() {
+            if x > row[bi] {
+                bi = i;
+            }
+        }
+        bi as i32
+    };
+    let mut out = vec![argmax(pre.last_logits.as_f32().unwrap())];
+    let mut kv = pre.kv;
+    let mut cache_len = prompt.len();
+    while out.len() < max_new && *out.last().unwrap() != mr.manifest.eos_id {
+        let mut chunk = vec![0i32; k + 1];
+        chunk[0] = *out.last().unwrap();
+        let v = mr
+            .verify(
+                &te,
+                &HostTensor::i32(&[1, k + 1], chunk),
+                &HostTensor::i32(&[1], vec![cache_len as i32]),
+                &kv,
+            )
+            .unwrap();
+        kv = v.kv;
+        let logits = v.logits.as_f32().unwrap();
+        out.push(argmax(&logits[..vocab]));
+        cache_len += 1;
+    }
+    out
+}
+
+fn engine_greedy(mr: &mut ModelRuntime, drafter: &str, prompt: &[i32], max_new: usize) -> Vec<i32> {
+    let target = mr.manifest.drafter(drafter).unwrap().target.clone();
+    let cfg = EngineConfig {
+        target,
+        drafter: drafter.into(),
+        k: mr.manifest.default_k,
+        batch: 1,
+        max_new_tokens: max_new,
+        sampling: Sampling::Greedy,
+        seed: 5,
+    };
+    let spec = RequestSpec { id: 0, prompt: prompt.to_vec(), max_new_tokens: max_new, arrival_s: 0.0 };
+    let mut given = Some(spec);
+    let (results, _) = run_closed_loop(mr, &cfg, 1, 1, || given.take().unwrap()).unwrap();
+    results.into_iter().next().unwrap().tokens
+}
+
+fn test_prompt(mr: &ModelRuntime, seed: u64) -> Vec<i32> {
+    let regime = mr.manifest.regimes["humaneval"].clone();
+    let mut rng = p_eagle::util::rng::Rng::new(seed);
+    regime.sample_seq(16, &mut rng)
+}
+
+#[test]
+fn spec_decoding_is_lossless_peagle() {
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    for seed in [1u64, 2, 3] {
+        let prompt = test_prompt(&mr, seed);
+        let want = reference_greedy(&mut mr, "target-m", &prompt, 40);
+        let got = engine_greedy(&mut mr, "target-m-pe4", &prompt, 40);
+        assert_eq!(got, want, "P-EAGLE engine diverged from greedy (seed {seed})");
+    }
+}
+
+#[test]
+fn spec_decoding_is_lossless_ar() {
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    for seed in [4u64, 5] {
+        let prompt = test_prompt(&mr, seed);
+        let want = reference_greedy(&mut mr, "target-m", &prompt, 40);
+        let got = engine_greedy(&mut mr, "target-m-ar", &prompt, 40);
+        assert_eq!(got, want, "AR engine diverged from greedy (seed {seed})");
+    }
+}
+
+#[test]
+fn both_methods_emit_identical_tokens() {
+    // corollary of losslessness, checked directly across methods + batch>1
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let prompt = test_prompt(&mr, 9);
+    let a = engine_greedy(&mut mr, "target-m-pe4", &prompt, 32);
+    let b = engine_greedy(&mut mr, "target-m-ar", &prompt, 32);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn batched_wave_matches_single() {
+    // each request in a C=2 wave must produce the same tokens as alone
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let p1 = test_prompt(&mr, 11);
+    let p2 = test_prompt(&mr, 12);
+    let solo1 = engine_greedy(&mut mr, "target-m-pe4", &p1, 24);
+    let solo2 = engine_greedy(&mut mr, "target-m-pe4", &p2, 24);
+
+    let cfg = EngineConfig {
+        target: "target-m".into(),
+        drafter: "target-m-pe4".into(),
+        k: 5,
+        batch: 2,
+        max_new_tokens: 24,
+        sampling: Sampling::Greedy,
+        seed: 5,
+    };
+    let mut reqs = vec![
+        RequestSpec { id: 0, prompt: p1, max_new_tokens: 24, arrival_s: 0.0 },
+        RequestSpec { id: 1, prompt: p2, max_new_tokens: 24, arrival_s: 0.0 },
+    ]
+    .into_iter();
+    let (mut results, _) = run_closed_loop(&mut mr, &cfg, 2, 2, || reqs.next().unwrap()).unwrap();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results[0].tokens, solo1);
+    assert_eq!(results[1].tokens, solo2);
+}
+
+#[test]
+fn acceptance_length_in_valid_range() {
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let prompt = test_prompt(&mr, 21);
+    let cfg = EngineConfig {
+        target: "target-m".into(),
+        drafter: "target-m-pe4".into(),
+        k: 5,
+        batch: 1,
+        max_new_tokens: 40,
+        sampling: Sampling::Greedy,
+        seed: 5,
+    };
+    let spec = RequestSpec { id: 0, prompt, max_new_tokens: 40, arrival_s: 0.0 };
+    let mut given = Some(spec);
+    let (results, metrics) = run_closed_loop(&mut mr, &cfg, 1, 1, || given.take().unwrap()).unwrap();
+    let al = results[0].acceptance_length();
+    assert!(al >= 1.0 && al <= 6.0, "AL {al} outside [1, K+1]");
+    assert!(metrics.acceptance_length() >= 1.0);
+    assert_eq!(results[0].finish, FinishReason::Length);
+}
+
+#[test]
+fn max_new_tokens_respected() {
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let prompt = test_prompt(&mr, 31);
+    for max_new in [1usize, 7, 23] {
+        let got = engine_greedy(&mut mr, "target-m-pe4", &prompt, max_new);
+        assert!(got.len() <= max_new, "{} > {max_new}", got.len());
+    }
+}

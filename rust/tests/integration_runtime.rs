@@ -1,0 +1,158 @@
+//! Runtime integration tests — require `make artifacts`.
+//!
+//! These exercise the real PJRT path: HLO text parsing, compilation,
+//! weight upload, KV-cache buffer threading.
+
+use p_eagle::runtime::{Arg, HostTensor, ModelRuntime, Runtime};
+
+fn artifacts() -> Option<String> {
+    let root = std::env::var("PEAGLE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&root).join("manifest.json").exists().then_some(root)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(r) => r,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn selftest_executable_roundtrip() {
+    let root = require_artifacts!();
+    let m = p_eagle::config::Manifest::load(&root).unwrap();
+    let mut rt = Runtime::cpu().unwrap();
+    let e = m.find_exec("selftest", None, None, None, None).unwrap();
+    rt.load(&e.name, &m.abs(&e.path)).unwrap();
+    let x = HostTensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+    let y = HostTensor::f32(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+    let out = rt.call(&e.name, &[Arg::Host(&x), Arg::Host(&y)]).unwrap();
+    let t = rt.download(&out[0]).unwrap();
+    assert_eq!(t.as_f32().unwrap(), &[5.0, 5.0, 9.0, 9.0]);
+}
+
+#[test]
+fn prefill_is_deterministic_and_padding_insensitive() {
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let te = mr.ensure_target("target-m", 1, 5).unwrap();
+    let p = mr.manifest.prompt_pad;
+
+    let mut toks = vec![0i32; p];
+    for (i, t) in toks.iter_mut().enumerate().take(16) {
+        *t = 4 + (i as i32 * 7) % 200;
+    }
+    let lens = HostTensor::i32(&[1], vec![16]);
+    let kv = mr.zero_kv("target-m", 1).unwrap();
+    let a = mr
+        .prefill(&te, &HostTensor::i32(&[1, p], toks.clone()), &lens, &kv)
+        .unwrap();
+
+    // same prompt, different garbage in the padding region
+    let mut toks2 = toks.clone();
+    for t in toks2.iter_mut().skip(16) {
+        *t = 99;
+    }
+    let kv2 = mr.zero_kv("target-m", 1).unwrap();
+    let b = mr
+        .prefill(&te, &HostTensor::i32(&[1, p], toks2), &lens, &kv2)
+        .unwrap();
+
+    let (la, lb) = (a.last_logits.as_f32().unwrap(), b.last_logits.as_f32().unwrap());
+    for (x, y) in la.iter().zip(lb) {
+        assert!((x - y).abs() < 1e-4, "padding affected last logits");
+    }
+    // features of REAL positions must match too
+    let fdim = mr.manifest.target("target-m").unwrap().feature_dim;
+    let (fa, fb) = (a.feats.as_f32().unwrap(), b.feats.as_f32().unwrap());
+    for i in 0..16 * fdim {
+        assert!((fa[i] - fb[i]).abs() < 1e-4, "padding affected real feats");
+    }
+}
+
+#[test]
+fn verify_kv_threading_consistent() {
+    // verifying [a,b,c,d,e,f] in one chunk must equal verifying it after a
+    // longer cached prefix — chunk positions line up through cache_len.
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let te = mr.ensure_target("target-m", 1, 5).unwrap();
+    let p = mr.manifest.prompt_pad;
+    let vocab = mr.manifest.vocab;
+
+    let prompt: Vec<i32> = (0..16).map(|i| 4 + (i * 11) % 200).collect();
+    let mut padded = vec![0i32; p];
+    padded[..16].copy_from_slice(&prompt);
+    let kv = mr.zero_kv("target-m", 1).unwrap();
+    let pre = mr
+        .prefill(&te, &HostTensor::i32(&[1, p], padded), &HostTensor::i32(&[1], vec![16]), &kv)
+        .unwrap();
+
+    let chunk: Vec<i32> = (0..6).map(|i| 30 + i * 3).collect();
+    let v1 = mr
+        .verify(&te, &HostTensor::i32(&[1, 6], chunk.clone()),
+                &HostTensor::i32(&[1], vec![16]), &pre.kv)
+        .unwrap();
+
+    // now verify the same chunk in two halves, threading kv + cache_len
+    let v2a = mr
+        .verify(&te, &HostTensor::i32(&[1, 6], {
+            let mut c = chunk.clone();
+            c[3..].iter_mut().for_each(|x| *x = 7); // junk tail, will be overwritten
+            c
+        }), &HostTensor::i32(&[1], vec![16]), &pre.kv)
+        .unwrap();
+    // accept 2 tokens (positions 16,17 cached) then re-verify the rest
+    let v2b = mr
+        .verify(&te, &HostTensor::i32(&[1, 6], chunk[2..].iter().copied().chain([5, 6]).collect()),
+                &HostTensor::i32(&[1], vec![18]), &v2a.kv)
+        .unwrap();
+
+    // v2b row i corresponds to v1 row i+2 for the overlapping positions
+    let (l1, l2) = (v1.logits.as_f32().unwrap(), v2b.logits.as_f32().unwrap());
+    for i in 0..4 {
+        for v in 0..vocab {
+            let a = l1[(i + 2) * vocab + v];
+            let b = l2[i * vocab + v];
+            assert!((a - b).abs() < 1e-3, "row {i} logit {v}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn draft_shapes_and_determinism() {
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let de = mr.ensure_drafter("target-m-pe4", 1, 5).unwrap();
+    let c = mr.manifest.ctx_window;
+    let fdim = mr.manifest.target("target-m").unwrap().feature_dim;
+
+    let ct = HostTensor::i32(&[1, c], (0..c as i32).map(|i| 10 + i).collect());
+    let cf = HostTensor::f32(&[1, c, fdim], vec![0.1; c * fdim]);
+    let p0 = HostTensor::i32(&[1], vec![20]);
+    let a = mr.draft(&de, &ct, &cf, &p0).unwrap();
+    let b = mr.draft(&de, &ct, &cf, &p0).unwrap();
+    assert_eq!(a.dims, vec![1, 5]);
+    assert_eq!(a.as_i32().unwrap(), b.as_i32().unwrap());
+    let vocab = mr.manifest.vocab as i32;
+    assert!(a.as_i32().unwrap().iter().all(|&t| t >= 0 && t < vocab));
+}
+
+#[test]
+fn weight_order_validation_catches_mismatch() {
+    let root = require_artifacts!();
+    let m = p_eagle::config::Manifest::load(&root).unwrap();
+    let t = m.target("target-m").unwrap();
+    let tensors = p_eagle::runtime::weights::read_pew(&m.abs(&t.weights)).unwrap();
+    // correct order passes
+    p_eagle::runtime::weights::check_order(&tensors, &t.param_order).unwrap();
+    // shuffled order fails
+    let mut wrong = t.param_order.clone();
+    wrong.reverse();
+    assert!(p_eagle::runtime::weights::check_order(&tensors, &wrong).is_err());
+}

@@ -1,0 +1,61 @@
+//! Threaded server front-end integration test — requires `make artifacts`.
+
+use p_eagle::coordinator::server::spawn;
+use p_eagle::coordinator::{EngineConfig, RequestSpec, Sampling};
+
+fn artifacts() -> Option<String> {
+    let root = std::env::var("PEAGLE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&root).join("manifest.json").exists().then_some(root)
+}
+
+#[test]
+fn server_round_trip() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let cfg = EngineConfig {
+        target: "target-m".into(),
+        drafter: "target-m-pe4".into(),
+        k: 5,
+        batch: 2,
+        max_new_tokens: 16,
+        sampling: Sampling::Greedy,
+        seed: 1,
+    };
+    let handle = spawn(root, cfg, vec![1, 2]).unwrap();
+    // submit from a separate producer thread (the server contract)
+    let tx = handle.tx.clone();
+    let producer = std::thread::spawn(move || {
+        for i in 0..3u64 {
+            let prompt: Vec<i32> = std::iter::once(1)
+                .chain((0..15).map(|j| 4 + ((i as i32) * 31 + j) % 200))
+                .collect();
+            let _ = tx.send(p_eagle::coordinator::server::ServerMsg::Submit(RequestSpec {
+                id: i,
+                prompt,
+                max_new_tokens: 16,
+                arrival_s: 0.0,
+            }));
+        }
+    });
+    producer.join().unwrap();
+    handle.drain();
+
+    let mut got = Vec::new();
+    for _ in 0..3 {
+        let r = handle
+            .results_rx
+            .recv_timeout(std::time::Duration::from_secs(300))
+            .expect("server result");
+        assert!(!r.tokens.is_empty());
+        assert!(r.tokens.len() <= 16);
+        got.push(r.id);
+    }
+    got.sort_unstable();
+    assert_eq!(got, vec![0, 1, 2]);
+
+    let metrics = handle.shutdown();
+    assert!(metrics.requests_finished >= 3);
+    assert!(metrics.tokens_emitted >= 3);
+}
