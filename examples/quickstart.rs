@@ -4,10 +4,10 @@
 //!     make artifacts && cargo run --release --example quickstart
 //!
 //! Walks the full public API surface: Manifest -> ModelRuntime -> engine
-//! config -> closed-loop serving -> metrics.
+//! config -> stepped EngineCore serving -> streamed events -> metrics.
 
 use anyhow::Result;
-use p_eagle::coordinator::{EngineConfig, Sampling};
+use p_eagle::coordinator::{EngineConfig, EngineCore, EngineEvent, Sampling};
 use p_eagle::report::{bench_otps, eval_acceptance};
 use p_eagle::runtime::{Arg, HostTensor, ModelRuntime};
 
@@ -39,16 +39,18 @@ fn main() -> Result<()> {
         al.acceptance_length
     );
 
-    // 4. serve a small closed-loop batch and report throughput
-    let run = bench_otps(&mut mr, "target-m-pe4", "mtbench", 5, 2, 4, 64, 7)?;
+    // 4. serve a small closed-loop batch and report throughput + occupancy
+    let run = bench_otps(&mut mr, "target-m-pe4", "mtbench", 5, 2, 4, 64, 7, false)?;
     println!(
-        "served 4 requests @ C=2: OTPS {:.0}, AL {:.2}, p50 latency {:?}",
+        "served 4 requests @ C=2: OTPS {:.0}, AL {:.2}, occupancy {:.2}, p50 latency {:?}",
         run.otps,
         run.acceptance_length,
+        run.mean_occupancy,
         run.metrics.latency_quantile(0.5)
     );
 
-    // 5. peek at one generation
+    // 5. drive the stepped engine core by hand and stream one generation:
+    //    add_request -> step until the Finished event arrives
     let cfg = EngineConfig {
         target: "target-m".into(),
         drafter: "target-m-pe4".into(),
@@ -58,15 +60,28 @@ fn main() -> Result<()> {
         sampling: Sampling::Greedy,
         seed: 3,
     };
+    let mut core = EngineCore::new(&mut mr, cfg)?;
     let regime = mr.manifest.regimes["humaneval"].clone();
     let mut arr = p_eagle::workload::ArrivalProcess::closed_loop(regime, 16, 24, 9);
-    let (results, _) =
-        p_eagle::coordinator::run_closed_loop(&mut mr, &cfg, 1, 1, || arr.next())?;
-    println!(
-        "sample generation ({} tokens, finish {:?}): {:?}",
-        results[0].tokens.len(),
-        results[0].finish,
-        &results[0].tokens
-    );
+    core.add_request(arr.next())?;
+    let mut streamed: Vec<i32> = Vec::new();
+    'outer: while !core.is_idle() {
+        for ev in core.step(&mut mr)?.events {
+            match ev {
+                EngineEvent::Admitted { id, slot } => println!("admitted req {id} to slot {slot}"),
+                EngineEvent::Tokens { tokens, .. } => streamed.extend(tokens),
+                EngineEvent::Finished(r) => {
+                    println!(
+                        "sample generation ({} tokens, finish {:?}): {:?}",
+                        r.tokens.len(),
+                        r.finish,
+                        &r.tokens
+                    );
+                    assert_eq!(streamed, r.tokens, "streamed tokens match the final result");
+                    break 'outer;
+                }
+            }
+        }
+    }
     Ok(())
 }

@@ -30,10 +30,11 @@ fn main() -> Result<()> {
 
     println!("=== P-EAGLE end-to-end serving: reasoning-length workload ===");
     println!("target={target}  concurrency={conc}  requests={total}");
-    println!("generation lengths ~ paper Fig.1 distribution (scaled 1/32)\n");
+    println!("generation lengths ~ paper Fig.1 distribution (scaled 1/32)");
+    println!("(stepped engine: short requests evict early, freed slots re-admit mid-flight)\n");
 
     let mut table = Table::new(&[
-        "method", "K", "OTPS", "AL", "p50 latency", "p99 latency", "tokens",
+        "method", "K", "OTPS", "AL", "occ", "p50 TTFT", "p99 latency", "tokens",
     ]);
 
     for (method, k) in [("ar", 3), ("ar", 5), ("pe4", 5), ("pe4", 7)] {
@@ -68,7 +69,8 @@ fn main() -> Result<()> {
             k.to_string(),
             format!("{:.0}", metrics.otps()),
             format!("{:.2}", metrics.acceptance_length()),
-            format!("{:?}", metrics.latency_quantile(0.5)),
+            format!("{:.2}", metrics.mean_occupancy()),
+            format!("{:?}", metrics.ttft_quantile(0.5)),
             format!("{:?}", metrics.latency_quantile(0.99)),
             toks.to_string(),
         ]);

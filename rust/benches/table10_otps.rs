@@ -5,7 +5,11 @@
 //! grows ~K); P-EAGLE keeps gaining to K=5-7 (one pass regardless of K);
 //! speedups ~1.1-1.36x at the best K; deeper drafter can lose at K=3.
 //!
-//!     cargo bench --bench table10_otps [-- --all-targets --quick]
+//!     cargo bench --bench table10_otps [-- --all-targets --quick --mixed]
+//!
+//! `--mixed` draws per-request generation budgets from the Fig.1 length
+//! model instead of a fixed max_new — the workload where the stepped
+//! engine's mid-flight admission shows up as high slot occupancy.
 
 use p_eagle::report::bench_otps;
 use p_eagle::runtime::ModelRuntime;
@@ -15,6 +19,7 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let all = args.iter().any(|a| a == "--all-targets");
     let quick = args.iter().any(|a| a == "--quick");
+    let mixed = args.iter().any(|a| a == "--mixed");
     let (reqs_per_c, max_new) = if quick { (2usize, 48) } else { (2usize, 64) };
 
     let mut mr = ModelRuntime::load("artifacts")?;
@@ -29,20 +34,23 @@ fn main() -> anyhow::Result<()> {
         println!("\n=== Table 10: OTPS — {target} ===");
         for c in [2usize, 4] {
             let total = reqs_per_c * c;
-            let mut tab = Table::new(&["method", "K", "HE", "MT", "GSM", "HE AL", "MT AL", "GSM AL"]);
+            let mut tab =
+                Table::new(&["method", "K", "HE", "MT", "GSM", "HE AL", "MT AL", "GSM AL", "occ"]);
             let mut ar_best = [0f64; 3];
             for method in ["ar", "pe4"] {
                 for k in [3usize, 5, 7] {
                     let mut cells = Vec::new();
                     let mut als = Vec::new();
+                    let mut occ = 0f64;
                     for (di, ds) in datasets.iter().enumerate() {
                         let run = bench_otps(&mut mr, &format!("{target}-{method}"),
-                                             ds, k, c, total, max_new, 99)?;
+                                             ds, k, c, total, max_new, 99, mixed)?;
                         if method == "ar" {
                             ar_best[di] = ar_best[di].max(run.otps);
                         }
                         cells.push(run.otps);
                         als.push(run.acceptance_length);
+                        occ += run.mean_occupancy / datasets.len() as f64;
                     }
                     let fmt_cell = |di: usize| {
                         if method == "ar" {
@@ -56,7 +64,7 @@ fn main() -> anyhow::Result<()> {
                         method.into(), k.to_string(),
                         fmt_cell(0), fmt_cell(1), fmt_cell(2),
                         format!("{:.2}", als[0]), format!("{:.2}", als[1]),
-                        format!("{:.2}", als[2]),
+                        format!("{:.2}", als[2]), format!("{:.2}", occ),
                     ]);
                 }
             }

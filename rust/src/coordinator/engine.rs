@@ -1,13 +1,23 @@
-//! The speculative-decoding engine: drives one *wave* (a fixed-batch group
-//! of requests sharing a KV buffer) through prefill → {draft → verify →
-//! accept} → finish.
+//! The stepped speculative-decoding engine core.
+//!
+//! `EngineCore` is a vLLM-v1-style iteration-level engine: callers
+//! `add_request` at any time, and each `step()` performs exactly one
+//! {draft -> verify -> accept} iteration across all occupied KV slots.
+//! Finished requests are evicted *immediately* and their slots refilled from
+//! the admission queue at the start of the next step (per-slot batch-1
+//! prefill spliced into the shared KV buffer — see
+//! `ModelRuntime::prefill_into_slot`), so a long request never stalls the
+//! batch behind it and freed rows never idle. Rows without a live request
+//! are masked (inert inputs, outputs ignored) instead of running cloned
+//! padding requests.
 //!
 //! Drafting strategy is data: the `drafter` executable named in the config
 //! is either an AR EAGLE-3 scan (K sequential passes inside the HLO) or a
 //! P-EAGLE single-pass parallel drafter — the engine logic is identical,
 //! which is exactly the paper's deployment story (a drop-in drafter swap in
-//! vLLM).
+//! vLLM's continuously batched engine).
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -16,7 +26,7 @@ use super::kv_cache::SlotManager;
 use super::metrics::EngineMetrics;
 use super::request::{FinishReason, RequestResult, RequestSpec};
 use super::sampler::{accept_chain, sample, Sampling};
-use crate::runtime::{HostTensor, ModelRuntime};
+use crate::runtime::{splice_kv_row, DraftExec, HostTensor, ModelRuntime, TargetExec};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -25,17 +35,61 @@ pub struct EngineConfig {
     /// manifest drafter name (e.g. "target-m-pe4" or "target-m-ar")
     pub drafter: String,
     pub k: usize,
-    /// wave width == executable batch size
+    /// engine width == executable batch size (KV slots)
     pub batch: usize,
+    /// engine-wide cap; each request also honors its own
+    /// `RequestSpec::max_new_tokens` (the lower bound wins)
     pub max_new_tokens: usize,
     pub sampling: Sampling,
     pub seed: u64,
 }
 
-struct WaveSlot {
+/// One streamed engine occurrence, in emission order within a step.
+#[derive(Clone, Debug)]
+pub enum EngineEvent {
+    /// Request left the queue and owns KV slot `slot` (prefill done, first
+    /// token sampled).
+    Admitted { id: u64, slot: usize },
+    /// Tokens emitted for `id` this step (first token at admission, then one
+    /// acceptance chain per step).
+    Tokens { id: u64, tokens: Vec<i32> },
+    /// Request finished and its slot was freed. Carries the full result.
+    Finished(RequestResult),
+}
+
+/// What one `step()` did.
+#[derive(Debug, Default)]
+pub struct StepReport {
+    pub events: Vec<EngineEvent>,
+    /// requests admitted at the start of this step
+    pub admitted: usize,
+    /// slots that held a live request during this step's iteration
+    pub occupied: usize,
+}
+
+impl StepReport {
+    /// Results of requests that finished during this step.
+    pub fn finished(&self) -> impl Iterator<Item = &RequestResult> {
+        self.events.iter().filter_map(|e| match e {
+            EngineEvent::Finished(r) => Some(r),
+            _ => None,
+        })
+    }
+
+    pub fn into_finished(self) -> Vec<RequestResult> {
+        self.events
+            .into_iter()
+            .filter_map(|e| match e {
+                EngineEvent::Finished(r) => Some(r),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// Per-slot decode state for one in-flight request.
+struct ActiveSlot {
     spec: RequestSpec,
-    /// false for padding rows that fill the fixed batch
-    real: bool,
     finished: Option<FinishReason>,
     generated: Vec<i32>,
     last_tok: i32,
@@ -45,12 +99,14 @@ struct WaveSlot {
     ctx_feats: Vec<f32>,
     /// absolute position of `last_tok`
     pos_last: usize,
+    /// effective generation budget: min(spec, engine config)
+    max_new: usize,
     iterations: usize,
     accepted_sum: usize,
-    t_start: Instant,
+    t_submit: Instant,
 }
 
-impl WaveSlot {
+impl ActiveSlot {
     fn push_ctx(&mut self, token: i32, feat: &[f32], fdim: usize) {
         self.ctx_tokens.rotate_left(1);
         *self.ctx_tokens.last_mut().unwrap() = token;
@@ -58,168 +114,352 @@ impl WaveSlot {
         let off = self.ctx_feats.len() - fdim;
         self.ctx_feats[off..].copy_from_slice(feat);
     }
+
+    fn result(self, reason: FinishReason) -> RequestResult {
+        RequestResult {
+            id: self.spec.id,
+            prompt_len: self.spec.prompt.len(),
+            tokens: self.generated,
+            finish: reason,
+            iterations: self.iterations,
+            accepted_sum: self.accepted_sum,
+            latency: self.t_submit.elapsed(),
+        }
+    }
 }
 
-/// Process one wave of at most `cfg.batch` requests to completion.
-pub fn run_wave(
-    mr: &mut ModelRuntime,
-    cfg: &EngineConfig,
-    requests: Vec<RequestSpec>,
-    metrics: &mut EngineMetrics,
-) -> Result<Vec<RequestResult>> {
-    let b = cfg.batch;
-    let k = cfg.k;
-    assert!(!requests.is_empty() && requests.len() <= b);
-    let n_real = requests.len();
+/// The stepped engine core: fixed executable width, continuous admission.
+pub struct EngineCore {
+    pub cfg: EngineConfig,
+    te: TargetExec,
+    te1: TargetExec, // batch-1 prefill executable for per-slot admission
+    de: DraftExec,
+    /// reusable zeroed batch-1 KV input for admission prefills (PJRT does
+    /// not donate inputs, so one buffer serves every admission)
+    kv1_zero: xla::PjRtBuffer,
+    // manifest-derived shape constants
+    fdim: usize,
+    ctx: usize,
+    p_pad: usize,
+    vocab: usize,
+    pad_id: i32,
+    eos_id: i32,
+    kv: xla::PjRtBuffer,
+    slots: Vec<Option<ActiveSlot>>,
+    slotmgr: SlotManager,
+    queue: VecDeque<(RequestSpec, Instant)>,
+    rng: Rng,
+    pub metrics: EngineMetrics,
+}
 
-    let te = mr.ensure_target(&cfg.target, b, k)?;
-    let de = mr.ensure_drafter(&cfg.drafter, b, k)?;
-    let fdim = mr.manifest.target(&cfg.target)?.feature_dim;
-    let c = mr.manifest.ctx_window;
-    let p_pad = mr.manifest.prompt_pad;
-    let s_max = mr.manifest.s_max;
-    let (pad_id, eos_id) = (mr.manifest.pad_id, mr.manifest.eos_id);
-    let mut rng = Rng::new(cfg.seed ^ 0xE4617E);
-
-    // --- assemble the padded wave -------------------------------------
-    let mut specs = requests;
-    while specs.len() < b {
-        // padding rows recycle the first request's prompt; results discarded
-        let mut pad = specs[0].clone();
-        pad.id = u64::MAX;
-        specs.push(pad);
-    }
-    for s in &specs {
-        if s.prompt.len() > p_pad {
-            bail!("prompt len {} > prompt_pad {p_pad}", s.prompt.len());
+impl EngineCore {
+    /// Build an engine of width `cfg.batch`: loads/compiles exactly the
+    /// executables the step loop runs (batch-wide verify, batch-1 admission
+    /// prefill, batch-wide drafter) and allocates the shared zeroed KV
+    /// buffer.
+    pub fn new(mr: &mut ModelRuntime, cfg: EngineConfig) -> Result<EngineCore> {
+        let b = cfg.batch;
+        if b == 0 {
+            bail!("engine width must be >= 1");
         }
-        if s.prompt.len() < c {
-            bail!("prompt len {} < ctx_window {c}", s.prompt.len());
-        }
+        let te = mr.ensure_verify(&cfg.target, b, cfg.k)?;
+        let te1 = mr.ensure_prefill(&cfg.target, 1)?;
+        let de = mr.ensure_drafter(&cfg.drafter, b, cfg.k)?;
+        let info = mr.manifest.target(&cfg.target)?;
+        let fdim = info.feature_dim;
+        let kv = mr.zero_kv(&cfg.target, b)?;
+        let kv1_zero = mr.zero_kv(&cfg.target, 1)?;
+        let slotmgr = SlotManager::new(b, mr.manifest.s_max, cfg.k + 1);
+        let mut slots = Vec::with_capacity(b);
+        slots.resize_with(b, || None);
+        Ok(EngineCore {
+            rng: Rng::new(cfg.seed ^ 0xE4617E),
+            metrics: EngineMetrics::new(cfg.k),
+            te,
+            te1,
+            de,
+            kv1_zero,
+            fdim,
+            ctx: mr.manifest.ctx_window,
+            p_pad: mr.manifest.prompt_pad,
+            vocab: mr.manifest.vocab,
+            pad_id: mr.manifest.pad_id,
+            eos_id: mr.manifest.eos_id,
+            kv,
+            slots,
+            slotmgr,
+            queue: VecDeque::new(),
+            cfg,
+        })
     }
 
-    // --- prefill --------------------------------------------------------
-    let mut tok_buf = vec![pad_id; b * p_pad];
-    let mut len_buf = vec![0i32; b];
-    for (i, s) in specs.iter().enumerate() {
-        tok_buf[i * p_pad..i * p_pad + s.prompt.len()].copy_from_slice(&s.prompt);
-        len_buf[i] = s.prompt.len() as i32;
-    }
-    let kv0 = mr.zero_kv(&cfg.target, b)?;
-    let t0 = Instant::now();
-    let pre = mr.prefill(
-        &te,
-        &HostTensor::i32(&[b, p_pad], tok_buf),
-        &HostTensor::i32(&[b], len_buf),
-        &kv0,
-    )?;
-    metrics.prefill_time += t0.elapsed();
-    let mut kv = pre.kv;
-
-    let vocab = mr.manifest.vocab;
-    let mut slots: Vec<WaveSlot> = Vec::with_capacity(b);
-    let mut slotmgr = SlotManager::new(b, s_max, k + 1);
-    let pre_feats = pre.feats.as_f32()?;
-    let pre_logits = pre.last_logits.as_f32()?;
-    for (i, spec) in specs.iter().enumerate() {
+    /// Enqueue a request. Validation happens here (not mid-flight): the
+    /// prompt must fit the prefill pad, cover the drafter context window,
+    /// and leave room for at least one speculation chunk in the KV slot.
+    pub fn add_request(&mut self, spec: RequestSpec) -> Result<()> {
         let plen = spec.prompt.len();
-        let t_first = sample(&pre_logits[i * vocab..(i + 1) * vocab], cfg.sampling, &mut rng);
-        let mut ctx_tokens = Vec::with_capacity(c);
-        let mut ctx_feats = vec![0f32; c * fdim];
-        for j in 0..c {
-            let p = plen - c + 1 + j; // token position of ctx entry j
-            let token = if p < plen { spec.prompt[p] } else { t_first };
-            ctx_tokens.push(token);
-            // feature at position p-1 from the prefill features [B, P, fdim]
-            let off = (i * p_pad + (p - 1)) * fdim;
-            ctx_feats[j * fdim..(j + 1) * fdim].copy_from_slice(&pre_feats[off..off + fdim]);
+        if plen > self.p_pad {
+            bail!("request {}: prompt len {plen} > prompt_pad {}", spec.id, self.p_pad);
         }
-        slotmgr.claim(i, plen).map_err(|e| anyhow::anyhow!(e))?;
-        let real = i < n_real;
-        let mut slot = WaveSlot {
-            spec: spec.clone(),
-            real,
-            finished: None,
-            generated: vec![t_first],
-            last_tok: t_first,
-            ctx_tokens,
-            ctx_feats,
-            pos_last: plen,
-            iterations: 0,
-            accepted_sum: 0,
-            t_start: Instant::now(),
-        };
-        if t_first == eos_id {
-            slot.finished = Some(FinishReason::Eos);
-        } else if slot.generated.len() >= cfg.max_new_tokens {
-            slot.finished = Some(FinishReason::Length);
+        if plen < self.ctx {
+            bail!("request {}: prompt len {plen} < ctx_window {}", spec.id, self.ctx);
         }
-        if real {
-            // the prefill's own sampled token counts toward throughput
-            metrics.tokens_emitted += 1;
+        if plen + self.cfg.k + 1 > self.slotmgr.s_max {
+            bail!(
+                "request {}: prompt len {plen} + chunk {} > s_max {}",
+                spec.id,
+                self.cfg.k + 1,
+                self.slotmgr.s_max
+            );
         }
-        slots.push(slot);
+        self.queue.push_back((spec, Instant::now()));
+        Ok(())
     }
 
-    // --- spec-decode loop -------------------------------------------------
-    let max_iters = cfg.max_new_tokens * 2 + 8;
-    let mut ctx_tok_buf = vec![0i32; b * c];
-    let mut ctx_feat_buf = vec![0f32; b * c * fdim];
-    let mut pos_buf = vec![0i32; b];
-    let mut chunk_buf = vec![0i32; b * (k + 1)];
-    let mut emitted_now = vec![0usize; b];
+    /// Abort a queued or in-flight request. Returns its (partial) result —
+    /// `None` if the id is unknown. In-flight aborts free the slot
+    /// immediately; the next `step()` refills it from the queue.
+    pub fn abort(&mut self, id: u64) -> Option<RequestResult> {
+        if let Some(qi) = self.queue.iter().position(|(s, _)| s.id == id) {
+            let (spec, _) = self.queue.remove(qi).unwrap();
+            self.metrics.requests_aborted += 1;
+            return Some(RequestResult {
+                id: spec.id,
+                prompt_len: spec.prompt.len(),
+                tokens: Vec::new(),
+                finish: FinishReason::Aborted,
+                iterations: 0,
+                accepted_sum: 0,
+                latency: std::time::Duration::ZERO,
+            });
+        }
+        let i = self
+            .slots
+            .iter()
+            .position(|s| s.as_ref().is_some_and(|s| s.spec.id == id))?;
+        let slot = self.slots[i].take().unwrap();
+        self.slotmgr.release(i);
+        self.metrics.requests_aborted += 1;
+        Some(slot.result(FinishReason::Aborted))
+    }
 
-    for _iter in 0..max_iters {
-        if slots.iter().all(|s| s.finished.is_some()) {
-            break;
+    pub fn capacity(&self) -> usize {
+        self.cfg.batch
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Queued + in-slot requests (the closed-loop drivers keep this at C).
+    pub fn in_flight(&self) -> usize {
+        self.occupied() + self.queued()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.in_flight() == 0
+    }
+
+    /// Consume the engine and return its accumulated metrics.
+    pub fn into_metrics(self) -> EngineMetrics {
+        self.metrics
+    }
+
+    /// Admit queued requests into free slots: one batch-1 prefill per
+    /// request, spliced into the shared KV buffer, first token sampled from
+    /// the prefill logits.
+    ///
+    /// The prefill HLO scatters K/V for *every* row at offset 0, so a
+    /// batch-wide prefill mid-flight would clobber occupied slots. Instead
+    /// each fresh row is computed alone (rows are independent) and spliced
+    /// in through the host — the shared cache makes ONE download/upload
+    /// round trip per step no matter how many slots fill, and the whole
+    /// admission cost is tracked as `EngineMetrics::admission_time`.
+    fn admit_pending(
+        &mut self,
+        mr: &mut ModelRuntime,
+        events: &mut Vec<EngineEvent>,
+    ) -> Result<usize> {
+        let mut admitted = 0;
+        if self.queue.is_empty() {
+            return Ok(admitted);
         }
-        // draft inputs
+        let mut shared_host: Option<HostTensor> = None; // lazy: skip if no free slot
+        for i in 0..self.slots.len() {
+            if self.slots[i].is_some() {
+                continue;
+            }
+            let Some((spec, t_submit)) = self.queue.pop_front() else { break };
+            let t0 = Instant::now();
+            let plen = spec.prompt.len();
+            self.slotmgr.claim(i, plen).map_err(|e| anyhow::anyhow!(e))?;
+
+            let mut tok_buf = vec![self.pad_id; self.p_pad];
+            tok_buf[..plen].copy_from_slice(&spec.prompt);
+            let pre = mr.prefill(
+                &self.te1,
+                &HostTensor::i32(&[1, self.p_pad], tok_buf),
+                &HostTensor::i32(&[1], vec![plen as i32]),
+                &self.kv1_zero,
+            )?;
+            let row = mr.rt.download(&pre.kv)?;
+            if shared_host.is_none() {
+                shared_host = Some(mr.rt.download(&self.kv)?);
+            }
+            splice_kv_row(shared_host.as_mut().unwrap(), &row, i)?;
+
+            let pre_logits = pre.last_logits.as_f32()?;
+            let pre_feats = pre.feats.as_f32()?;
+            let t_first = sample(&pre_logits[..self.vocab], self.cfg.sampling, &mut self.rng);
+
+            // seed the drafter's rolling (token, feature) context from the
+            // prompt tail; entry j covers position plen - ctx + 1 + j
+            let mut ctx_tokens = Vec::with_capacity(self.ctx);
+            let mut ctx_feats = vec![0f32; self.ctx * self.fdim];
+            for j in 0..self.ctx {
+                let p = plen - self.ctx + 1 + j;
+                let token = if p < plen { spec.prompt[p] } else { t_first };
+                ctx_tokens.push(token);
+                let off = (p - 1) * self.fdim;
+                ctx_feats[j * self.fdim..(j + 1) * self.fdim]
+                    .copy_from_slice(&pre_feats[off..off + self.fdim]);
+            }
+
+            let max_new = spec.max_new_tokens.min(self.cfg.max_new_tokens).max(1);
+            let mut slot = ActiveSlot {
+                finished: None,
+                generated: vec![t_first],
+                last_tok: t_first,
+                ctx_tokens,
+                ctx_feats,
+                pos_last: plen,
+                max_new,
+                iterations: 0,
+                accepted_sum: 0,
+                t_submit,
+                spec,
+            };
+            if t_first == self.eos_id {
+                slot.finished = Some(FinishReason::Eos);
+            } else if slot.generated.len() >= slot.max_new {
+                slot.finished = Some(FinishReason::Length);
+            }
+
+            self.metrics.admissions += 1;
+            self.metrics.admission_time += t0.elapsed();
+            // the prefill's own sampled token counts toward throughput, and
+            // defines TTFT (measured from submit, so queue wait is included)
+            self.metrics.tokens_emitted += 1;
+            self.metrics.ttfts.push(t_submit.elapsed());
+            events.push(EngineEvent::Admitted { id: slot.spec.id, slot: i });
+            events.push(EngineEvent::Tokens { id: slot.spec.id, tokens: vec![t_first] });
+            self.slots[i] = Some(slot);
+            admitted += 1;
+        }
+        if let Some(h) = shared_host {
+            let t_up = Instant::now();
+            self.kv = mr.rt.upload(&h)?;
+            self.metrics.admission_time += t_up.elapsed();
+        }
+        Ok(admitted)
+    }
+
+    /// Evict every slot whose request finished; emits `Finished` events.
+    fn evict_finished(&mut self, events: &mut Vec<EngineEvent>) {
+        for i in 0..self.slots.len() {
+            let done = self.slots[i]
+                .as_ref()
+                .and_then(|s| s.finished)
+                .is_some();
+            if !done {
+                continue;
+            }
+            let slot = self.slots[i].take().unwrap();
+            self.slotmgr.release(i);
+            let reason = slot.finished.unwrap();
+            let res = slot.result(reason);
+            self.metrics.requests_finished += 1;
+            self.metrics.request_latencies.push(res.latency);
+            events.push(EngineEvent::Finished(res));
+        }
+    }
+
+    /// One engine iteration: admit into free slots, then a single
+    /// {draft -> verify -> accept} pass over all occupied slots, then evict
+    /// whatever finished. Free rows run inert masked inputs and are skipped
+    /// on the host side; their outputs are ignored and their KV rows are
+    /// fully overwritten at the next admission.
+    pub fn step(&mut self, mr: &mut ModelRuntime) -> Result<StepReport> {
+        let mut events = Vec::new();
+        let admitted = self.admit_pending(mr, &mut events)?;
+        // a request can finish at admission (EOS / max_new == 1)
+        self.evict_finished(&mut events);
+
+        let b = self.cfg.batch;
+        let k = self.cfg.k;
+        let occupied = self.occupied();
+        if occupied == 0 {
+            return Ok(StepReport { events, admitted, occupied });
+        }
+        self.metrics.record_occupancy(occupied, b);
+
+        // --- draft inputs (masked rows: PAD tokens, zero feats, pos 0) ----
         let th = Instant::now();
-        for (i, s) in slots.iter().enumerate() {
-            ctx_tok_buf[i * c..(i + 1) * c].copy_from_slice(&s.ctx_tokens);
-            ctx_feat_buf[i * c * fdim..(i + 1) * c * fdim].copy_from_slice(&s.ctx_feats);
-            pos_buf[i] = (s.pos_last - 1) as i32; // row space = token pos - 1
+        let (c, fdim) = (self.ctx, self.fdim);
+        let mut ctx_tok_buf = vec![self.pad_id; b * c];
+        let mut ctx_feat_buf = vec![0f32; b * c * fdim];
+        let mut pos_buf = vec![0i32; b];
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(s) = s {
+                ctx_tok_buf[i * c..(i + 1) * c].copy_from_slice(&s.ctx_tokens);
+                ctx_feat_buf[i * c * fdim..(i + 1) * c * fdim].copy_from_slice(&s.ctx_feats);
+                pos_buf[i] = (s.pos_last - 1) as i32; // row space = token pos - 1
+            }
         }
-        metrics.host_time += th.elapsed();
+        self.metrics.host_time += th.elapsed();
 
         let t1 = Instant::now();
         let drafts = mr.draft(
-            &de,
-            &HostTensor::i32(&[b, c], ctx_tok_buf.clone()),
-            &HostTensor::f32(&[b, c, fdim], ctx_feat_buf.clone()),
-            &HostTensor::i32(&[b], pos_buf.clone()),
+            &self.de,
+            &HostTensor::i32(&[b, c], ctx_tok_buf),
+            &HostTensor::f32(&[b, c, fdim], ctx_feat_buf),
+            &HostTensor::i32(&[b], pos_buf),
         )?;
-        metrics.draft_time += t1.elapsed();
+        self.metrics.draft_time += t1.elapsed();
         let draft_toks = drafts.as_i32()?;
 
-        // verify chunk = [last_tok, d_1..d_K]
-        for (i, s) in slots.iter().enumerate() {
-            chunk_buf[i * (k + 1)] = s.last_tok;
-            chunk_buf[i * (k + 1) + 1..(i + 1) * (k + 1)]
-                .copy_from_slice(&draft_toks[i * k..(i + 1) * k]);
+        // --- verify chunk = [last_tok, d_1..d_K]; masked rows all-PAD -----
+        let mut chunk_buf = vec![self.pad_id; b * (k + 1)];
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(s) = s {
+                chunk_buf[i * (k + 1)] = s.last_tok;
+                chunk_buf[i * (k + 1) + 1..(i + 1) * (k + 1)]
+                    .copy_from_slice(&draft_toks[i * k..(i + 1) * k]);
+            }
         }
-        let cache_len = slotmgr.cache_len_i32();
+        let cache_len = self.slotmgr.cache_len_i32();
         let t2 = Instant::now();
         let ver = mr.verify(
-            &te,
-            &HostTensor::i32(&[b, k + 1], chunk_buf.clone()),
+            &self.te,
+            &HostTensor::i32(&[b, k + 1], chunk_buf),
             &HostTensor::i32(&[b], cache_len.clone()),
-            &kv,
+            &self.kv,
         )?;
-        metrics.verify_time += t2.elapsed();
-        kv = ver.kv;
+        self.metrics.verify_time += t2.elapsed();
+        self.kv = ver.kv;
         let logits = ver.logits.as_f32()?;
         let feats = ver.feats.as_f32()?;
 
-        // acceptance per live slot
+        // --- acceptance per occupied slot ---------------------------------
         let th2 = Instant::now();
-        for e in emitted_now.iter_mut() {
-            *e = 0;
-        }
-        for (i, s) in slots.iter_mut().enumerate() {
-            if s.finished.is_some() {
-                continue;
-            }
+        let vocab = self.vocab;
+        let mut emitted_now = vec![0usize; b];
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            let Some(s) = s.as_mut() else { continue };
             let rows: Vec<&[f32]> = (0..=k)
                 .map(|j| {
                     let off = (i * (k + 1) + j) * vocab;
@@ -229,60 +469,52 @@ pub fn run_wave(
             let acc = accept_chain(
                 &draft_toks[i * k..(i + 1) * k],
                 &rows,
-                cfg.sampling,
-                &mut rng,
+                self.cfg.sampling,
+                &mut self.rng,
             );
             let q = cache_len[i] as usize; // chunk start = pos of last_tok
             s.iterations += 1;
             s.accepted_sum += acc.emitted.len();
 
-            let mut n_emit = 0usize;
+            let mut step_toks = Vec::with_capacity(acc.emitted.len());
             for (m, &tok) in acc.emitted.iter().enumerate() {
                 let p = q + m + 1; // absolute position of this token
                 s.generated.push(tok);
-                n_emit += 1;
+                step_toks.push(tok);
                 let foff = (i * (k + 1) + m) * fdim;
                 s.push_ctx(tok, &feats[foff..foff + fdim], fdim);
                 s.last_tok = tok;
                 s.pos_last = p;
-                if tok == eos_id {
+                if tok == self.eos_id {
                     s.finished = Some(FinishReason::Eos);
                     break;
                 }
-                if s.generated.len() >= cfg.max_new_tokens {
+                if s.generated.len() >= s.max_new {
                     s.finished = Some(FinishReason::Length);
                     break;
                 }
             }
-            emitted_now[i] = if s.real { n_emit } else { 0 };
-            if !slotmgr.advance(i, n_emit) && s.finished.is_none() {
+            emitted_now[i] = step_toks.len();
+            if !self.slotmgr.advance(i, step_toks.len()) && s.finished.is_none() {
                 s.finished = Some(FinishReason::CacheFull);
             }
+            events.push(EngineEvent::Tokens { id: s.spec.id, tokens: step_toks });
         }
-        metrics.host_time += th2.elapsed();
-        metrics.record_iteration(&emitted_now);
+        self.metrics.host_time += th2.elapsed();
+        self.metrics.record_iteration(&emitted_now);
+
+        self.evict_finished(&mut events);
+        Ok(StepReport { events, admitted, occupied })
     }
 
-    // --- results -----------------------------------------------------------
-    let mut out = Vec::with_capacity(n_real);
-    for (i, s) in slots.into_iter().enumerate() {
-        if !s.real {
-            continue;
+    /// Drive `step()` until queue and slots are empty; returns all results
+    /// in finish order. (Small convenience used by the thin scheduler and
+    /// the drain paths; streaming callers consume `step()` directly.)
+    pub fn run_until_idle(&mut self, mr: &mut ModelRuntime) -> Result<Vec<RequestResult>> {
+        let mut out = Vec::new();
+        while !self.is_idle() {
+            out.extend(self.step(mr)?.into_finished());
         }
-        let finish = s.finished.unwrap_or(FinishReason::Length);
-        metrics.requests_finished += 1;
-        let latency = s.t_start.elapsed();
-        metrics.request_latencies.push(latency);
-        slotmgr.release(i);
-        out.push(RequestResult {
-            id: s.spec.id,
-            prompt_len: s.spec.prompt.len(),
-            tokens: s.generated,
-            finish,
-            iterations: s.iterations,
-            accepted_sum: s.accepted_sum,
-            latency,
-        });
+        Ok(out)
     }
-    Ok(out)
 }

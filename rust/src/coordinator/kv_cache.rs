@@ -1,10 +1,12 @@
 //! KV-cache slot accounting.
 //!
-//! The dense per-wave cache buffer (shape [L, 2, B, S_MAX, H, Dh]) lives on
-//! the PJRT device and is threaded through verify calls; this module owns
-//! the *accounting*: per-slot valid lengths, capacity admission (a slot must
-//! always fit prompt + chunk writes), and a vLLM-style paged utilization
-//! view (BLOCK_SIZE-token blocks) used by metrics and admission policy.
+//! The dense engine-wide cache buffer (shape [L, 2, B, S_MAX, H, Dh]) lives
+//! on the PJRT device and is threaded through verify calls; this module owns
+//! the *accounting*: per-slot valid lengths with independent claim/release
+//! lifecycles (slots are claimed at different prefill lengths as the stepped
+//! engine admits mid-flight), capacity admission (a slot must always fit
+//! prompt + chunk writes), and a vLLM-style paged utilization view
+//! (BLOCK_SIZE-token blocks) used by metrics and admission policy.
 
 pub const BLOCK_SIZE: usize = 16;
 

@@ -1,22 +1,34 @@
 //! Engine metrics: OTPS, acceptance length, latency percentiles, per-phase
-//! timing. Everything the Table 9/10 benches report comes from here.
+//! timing, and — for the stepped engine — slot-occupancy and time-to-first-
+//! token tracking. Everything the Table 9/10 benches report comes from here.
 
 use std::time::Duration;
 
 #[derive(Clone, Debug, Default)]
 pub struct EngineMetrics {
     pub requests_finished: usize,
+    pub requests_aborted: usize,
+    /// requests admitted into a KV slot (per-slot prefill runs)
+    pub admissions: usize,
     pub tokens_emitted: usize,
     pub iterations: usize,
     pub accepted_sum: usize,
     /// histogram over acceptance length (index = accepted drafts + bonus)
     pub al_histogram: Vec<usize>,
+    /// slot-steps with a live request, over all slot-steps the engine ran.
+    /// occupied / total is the continuous-batching utilization of the fixed
+    /// executable width (1.0 = every row does useful work every step).
+    pub slot_steps_occupied: usize,
+    pub slot_steps_total: usize,
     pub draft_time: Duration,
     pub verify_time: Duration,
-    pub prefill_time: Duration,
+    /// per-slot admission overhead: batch-1 prefill + KV row splice
+    pub admission_time: Duration,
     pub host_time: Duration,
     pub wall_time: Duration,
     pub request_latencies: Vec<Duration>,
+    /// submit -> first emitted token, per request (includes queue wait)
+    pub ttfts: Vec<Duration>,
 }
 
 impl EngineMetrics {
@@ -37,6 +49,24 @@ impl EngineMetrics {
                     self.al_histogram[n - 1] += 1;
                 }
             }
+        }
+    }
+
+    /// Record one engine step's slot occupancy (`occupied` live rows out of
+    /// `width` executable rows).
+    pub fn record_occupancy(&mut self, occupied: usize, width: usize) {
+        debug_assert!(occupied <= width);
+        self.slot_steps_occupied += occupied;
+        self.slot_steps_total += width;
+    }
+
+    /// Mean slot occupancy over all steps: the fraction of executable rows
+    /// that carried a live request (1.0 = no masked/idle rows).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.slot_steps_total == 0 {
+            0.0
+        } else {
+            self.slot_steps_occupied as f64 / self.slot_steps_total as f64
         }
     }
 
@@ -66,27 +96,64 @@ impl EngineMetrics {
     }
 
     pub fn latency_quantile(&self, p: f64) -> Duration {
-        if self.request_latencies.is_empty() {
-            return Duration::ZERO;
+        quantile(&self.request_latencies, p)
+    }
+
+    /// Time-to-first-token quantile (submit -> first token, queue included).
+    pub fn ttft_quantile(&self, p: f64) -> Duration {
+        quantile(&self.ttfts, p)
+    }
+
+    /// Fold another metrics block into this one (e.g. per-EngineCore metrics
+    /// accumulated by a scheduler across widths). Wall times add.
+    pub fn merge(&mut self, other: &EngineMetrics) {
+        self.requests_finished += other.requests_finished;
+        self.requests_aborted += other.requests_aborted;
+        self.admissions += other.admissions;
+        self.tokens_emitted += other.tokens_emitted;
+        self.iterations += other.iterations;
+        self.accepted_sum += other.accepted_sum;
+        if self.al_histogram.len() < other.al_histogram.len() {
+            self.al_histogram.resize(other.al_histogram.len(), 0);
         }
-        let mut v = self.request_latencies.clone();
-        v.sort();
-        v[((p * v.len() as f64) as usize).min(v.len() - 1)]
+        for (i, &c) in other.al_histogram.iter().enumerate() {
+            self.al_histogram[i] += c;
+        }
+        self.slot_steps_occupied += other.slot_steps_occupied;
+        self.slot_steps_total += other.slot_steps_total;
+        self.draft_time += other.draft_time;
+        self.verify_time += other.verify_time;
+        self.admission_time += other.admission_time;
+        self.host_time += other.host_time;
+        self.wall_time += other.wall_time;
+        self.request_latencies.extend_from_slice(&other.request_latencies);
+        self.ttfts.extend_from_slice(&other.ttfts);
     }
 
     pub fn summary(&self) -> String {
         format!(
-            "req={} tok={} iters={} AL={:.2} OTPS={:.0} draft={:?} verify={:?} prefill={:?}",
+            "req={} tok={} iters={} AL={:.2} OTPS={:.0} occ={:.2} \
+             draft={:?} verify={:?} admit={:?}",
             self.requests_finished,
             self.tokens_emitted,
             self.iterations,
             self.acceptance_length(),
             self.otps(),
+            self.mean_occupancy(),
             self.draft_time,
             self.verify_time,
-            self.prefill_time,
+            self.admission_time,
         )
     }
+}
+
+fn quantile(v: &[Duration], p: f64) -> Duration {
+    if v.is_empty() {
+        return Duration::ZERO;
+    }
+    let mut v = v.to_vec();
+    v.sort();
+    v[((p * v.len() as f64) as usize).min(v.len() - 1)]
 }
 
 #[cfg(test)]
@@ -121,5 +188,49 @@ mod tests {
         }
         assert_eq!(m.latency_quantile(0.0), Duration::from_millis(10));
         assert_eq!(m.latency_quantile(0.99), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn occupancy_tracking() {
+        let mut m = EngineMetrics::new(2);
+        assert_eq!(m.mean_occupancy(), 0.0);
+        m.record_occupancy(4, 4);
+        m.record_occupancy(2, 4);
+        m.record_occupancy(1, 4);
+        assert!((m.mean_occupancy() - 7.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ttft_quantiles() {
+        let mut m = EngineMetrics::new(2);
+        for ms in [5u64, 15, 25] {
+            m.ttfts.push(Duration::from_millis(ms));
+        }
+        assert_eq!(m.ttft_quantile(0.0), Duration::from_millis(5));
+        assert_eq!(m.ttft_quantile(0.99), Duration::from_millis(25));
+    }
+
+    #[test]
+    fn merge_sums_and_extends() {
+        let mut a = EngineMetrics::new(2);
+        a.record_iteration(&[2]);
+        a.record_occupancy(1, 2);
+        a.requests_finished = 1;
+        a.wall_time = Duration::from_secs(1);
+        let mut b = EngineMetrics::new(5); // longer histogram
+        b.record_iteration(&[5]);
+        b.record_occupancy(2, 2);
+        b.requests_finished = 2;
+        b.wall_time = Duration::from_secs(2);
+        b.ttfts.push(Duration::from_millis(7));
+        a.merge(&b);
+        assert_eq!(a.requests_finished, 3);
+        assert_eq!(a.tokens_emitted, 7);
+        assert_eq!(a.al_histogram.len(), 7);
+        assert_eq!(a.al_histogram[2], 1);
+        assert_eq!(a.al_histogram[5], 1);
+        assert_eq!(a.wall_time, Duration::from_secs(3));
+        assert!((a.mean_occupancy() - 3.0 / 4.0).abs() < 1e-12);
+        assert_eq!(a.ttfts.len(), 1);
     }
 }

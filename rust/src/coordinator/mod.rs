@@ -1,7 +1,8 @@
 //! L3 coordinator: the serving engine (the paper's vLLM integration,
-//! §5.3) — wave-batched speculative decoding with swappable AR / P-EAGLE
-//! drafter executables, KV slot management, sampling/acceptance, metrics,
-//! and a threaded server front-end.
+//! §5.3) — a stepped, continuously batched speculative-decoding core
+//! (`EngineCore`) with swappable AR / P-EAGLE drafter executables, per-slot
+//! KV lifecycles, sampling/acceptance, occupancy/TTFT metrics, a thin
+//! bucket-admission scheduler, and a threaded streaming server front-end.
 
 pub mod engine;
 pub mod kv_cache;
@@ -11,8 +12,9 @@ pub mod sampler;
 pub mod scheduler;
 pub mod server;
 
-pub use engine::{run_wave, EngineConfig};
+pub use engine::{EngineConfig, EngineCore, EngineEvent, StepReport};
 pub use metrics::EngineMetrics;
 pub use request::{FinishReason, RequestResult, RequestSpec};
 pub use sampler::Sampling;
 pub use scheduler::{run_closed_loop, Scheduler};
+pub use server::{ServerEvent, ServerHandle, ServerMsg};

@@ -10,6 +10,8 @@ pub enum FinishReason {
     Length,
     /// KV slot capacity (S_MAX) reached.
     CacheFull,
+    /// Evicted by `EngineCore::abort` (partial tokens are returned).
+    Aborted,
 }
 
 #[derive(Clone, Debug)]
@@ -23,7 +25,8 @@ pub struct RequestResult {
     pub iterations: usize,
     /// sum of acceptance lengths (accepted drafts + bonus) over iterations
     pub accepted_sum: usize,
-    /// wall-clock from admission to finish
+    /// wall-clock from submission to finish (queue wait included — the
+    /// serving latency a client observes, not just slot residency)
     pub latency: std::time::Duration,
 }
 

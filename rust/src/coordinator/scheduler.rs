@@ -1,24 +1,25 @@
-//! Wave scheduler: admission queue + bucketed batch formation.
+//! Admission policy over the stepped `EngineCore`.
 //!
-//! Requests queue up and are grouped into waves of the largest available
-//! executable batch size ≤ the ready count (buckets {1, 2, 4} from the
-//! manifest). A wave runs to completion on one KV buffer, then the next
-//! forms — iteration-level batching with wave refill. For the paper's
-//! closed-loop concurrency benchmark (Table 10), the driver keeps C
-//! requests in flight so waves are always width C.
+//! With the engine itself handling iteration-level batching (immediate
+//! eviction + mid-flight refill), the scheduler shrinks to a *policy* layer:
+//! it buffers submissions, picks the executable width (bucket) to spin the
+//! core up at, and feeds the core's queue. Unlike the old wave scheduler it
+//! never runs padded batches to completion — an undersized backlog admits
+//! into the smallest bucket and the core masks the empty rows.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use super::engine::{run_wave, EngineConfig};
+use super::engine::{EngineConfig, EngineCore};
 use super::metrics::EngineMetrics;
 use super::request::{RequestResult, RequestSpec};
 use crate::runtime::ModelRuntime;
 
 pub struct Scheduler {
     pub cfg: EngineConfig,
+    /// available executable widths, sorted ascending (manifest batch_sizes)
     pub buckets: Vec<usize>,
     queue: VecDeque<RequestSpec>,
     pub results: Vec<RequestResult>,
@@ -29,6 +30,8 @@ impl Scheduler {
     pub fn new(cfg: EngineConfig, buckets: Vec<usize>) -> Scheduler {
         let mut b = buckets;
         b.sort_unstable();
+        b.dedup();
+        assert!(!b.is_empty(), "scheduler needs at least one width bucket");
         let metrics = EngineMetrics::new(cfg.k);
         Scheduler { cfg, buckets: b, queue: VecDeque::new(), results: Vec::new(), metrics }
     }
@@ -41,45 +44,66 @@ impl Scheduler {
         self.queue.len()
     }
 
-    /// Largest bucket ≤ n (falls back to the smallest bucket).
-    pub fn pick_bucket(&self, n: usize) -> usize {
-        self.buckets
-            .iter()
-            .rev()
-            .find(|&&b| b <= n)
-            .copied()
-            .unwrap_or(self.buckets[0])
+    /// Engine width for a backlog of `n` requests: the largest bucket that
+    /// `n` can fill, or — when `n` is smaller than every bucket — the
+    /// smallest bucket, explicitly undersized (the core masks the empty
+    /// rows; nothing is padded with fake requests). `None` iff `n == 0`:
+    /// an empty backlog never spins up an engine.
+    pub fn pick_bucket(&self, n: usize) -> Option<usize> {
+        if n == 0 {
+            return None;
+        }
+        Some(
+            self.buckets
+                .iter()
+                .rev()
+                .find(|&&b| b <= n)
+                .copied()
+                .unwrap_or(self.buckets[0]),
+        )
     }
 
-    /// Form and run one wave. Returns how many requests completed.
-    pub fn step_wave(&mut self, mr: &mut ModelRuntime) -> Result<usize> {
-        if self.queue.is_empty() {
+    /// Drain the backlog: spin up one `EngineCore` sized for the current
+    /// backlog, hand it every queued request (the core admits into freed
+    /// slots mid-flight), and step it until idle. Returns how many requests
+    /// completed.
+    ///
+    /// A request that fails admission validation stops the handoff: the
+    /// requests already accepted still run to completion (their results land
+    /// in `self.results`), the rest stay queued for the next call, and only
+    /// the invalid request is dropped — its error is returned.
+    pub fn run_to_completion(&mut self, mr: &mut ModelRuntime) -> Result<usize> {
+        let Some(width) = self.pick_bucket(self.queue.len()) else {
             return Ok(0);
-        }
-        let width = self.pick_bucket(self.queue.len());
-        let take = width.min(self.queue.len());
-        let wave: Vec<RequestSpec> = self.queue.drain(..take).collect();
+        };
         let mut cfg = self.cfg.clone();
         cfg.batch = width;
+        let mut core = EngineCore::new(mr, cfg)?;
+        let mut rejected = None;
+        while let Some(r) = self.queue.pop_front() {
+            if let Err(e) = core.add_request(r) {
+                rejected = Some(e);
+                break;
+            }
+        }
         let t0 = Instant::now();
-        let res = run_wave(mr, &cfg, wave, &mut self.metrics)?;
-        self.metrics.wall_time += t0.elapsed();
+        let res = core.run_until_idle(mr)?;
         let n = res.len();
         self.results.extend(res);
-        Ok(n)
-    }
-
-    /// Drain the whole queue.
-    pub fn run_to_completion(&mut self, mr: &mut ModelRuntime) -> Result<()> {
-        while !self.queue.is_empty() {
-            self.step_wave(mr)?;
+        let mut m = core.into_metrics();
+        m.wall_time = t0.elapsed();
+        self.metrics.merge(&m);
+        match rejected {
+            Some(e) => Err(e),
+            None => Ok(n),
         }
-        Ok(())
     }
 }
 
 /// Closed-loop driver at fixed concurrency C (the Table 10 client): keeps C
-/// requests in flight until `total` have completed.
+/// requests in flight on a width-C core until `total` have completed. Each
+/// eviction immediately admits the next request — no wave barriers, so a
+/// short request never waits on a long one finishing the batch.
 pub fn run_closed_loop(
     mr: &mut ModelRuntime,
     cfg: &EngineConfig,
@@ -89,15 +113,24 @@ pub fn run_closed_loop(
 ) -> Result<(Vec<RequestResult>, EngineMetrics)> {
     let mut cfgc = cfg.clone();
     cfgc.batch = concurrency;
-    let mut metrics = EngineMetrics::new(cfg.k);
+    let mut core = EngineCore::new(mr, cfgc)?;
     let mut results = Vec::with_capacity(total);
+    let mut submitted = 0usize;
     let t0 = Instant::now();
     while results.len() < total {
-        let take = concurrency.min(total - results.len());
-        let wave: Vec<RequestSpec> = (0..take).map(|_| next_request()).collect();
-        let res = run_wave(mr, &cfgc, wave, &mut metrics)?;
-        results.extend(res);
+        while submitted < total && core.in_flight() < concurrency {
+            core.add_request(next_request())?;
+            submitted += 1;
+        }
+        let report = core.step(mr)?;
+        if report.occupied == 0 && report.admitted == 0 && core.is_idle() && submitted >= total
+        {
+            // defensive: nothing live and nothing left to submit
+            return Err(anyhow!("closed loop stalled at {}/{total} results", results.len()));
+        }
+        results.extend(report.into_finished());
     }
+    let mut metrics = core.into_metrics();
     metrics.wall_time = t0.elapsed();
     Ok((results, metrics))
 }
@@ -122,11 +155,34 @@ mod tests {
     #[test]
     fn bucket_selection() {
         let s = Scheduler::new(cfg(), vec![1, 2, 4]);
-        assert_eq!(s.pick_bucket(1), 1);
-        assert_eq!(s.pick_bucket(2), 2);
-        assert_eq!(s.pick_bucket(3), 2);
-        assert_eq!(s.pick_bucket(4), 4);
-        assert_eq!(s.pick_bucket(9), 4);
+        assert_eq!(s.pick_bucket(1), Some(1));
+        assert_eq!(s.pick_bucket(2), Some(2));
+        assert_eq!(s.pick_bucket(3), Some(2));
+        assert_eq!(s.pick_bucket(4), Some(4));
+        assert_eq!(s.pick_bucket(9), Some(4));
+    }
+
+    #[test]
+    fn empty_backlog_picks_nothing() {
+        // the old API silently fell back to the smallest bucket here, which
+        // spun up a padded width-1 engine for zero requests
+        let s = Scheduler::new(cfg(), vec![1, 2, 4]);
+        assert_eq!(s.pick_bucket(0), None);
+    }
+
+    #[test]
+    fn undersized_backlog_is_explicit_smallest_bucket() {
+        // n below every bucket: admit undersized into the smallest width —
+        // the core masks the empty rows (no fake padding requests)
+        let s = Scheduler::new(cfg(), vec![2, 4]);
+        assert_eq!(s.pick_bucket(1), Some(2));
+        assert_eq!(s.pick_bucket(0), None);
+    }
+
+    #[test]
+    fn buckets_sorted_and_deduped() {
+        let s = Scheduler::new(cfg(), vec![4, 1, 2, 2]);
+        assert_eq!(s.buckets, vec![1, 2, 4]);
     }
 
     #[test]

@@ -1,28 +1,50 @@
 //! Threaded serving front-end: a submission channel + a worker thread that
-//! owns the ModelRuntime and drains the scheduler. This is the process
-//! shape of the vLLM-style deployment — request producers never touch PJRT.
+//! owns the ModelRuntime and steps an `EngineCore`, streaming per-token and
+//! per-request events back as they happen. This is the process shape of the
+//! vLLM-style deployment — request producers never touch PJRT, and results
+//! stream out at iteration granularity instead of batch drains.
+//!
+//! Startup is a ready/error handshake: `spawn()` only returns once the
+//! worker has loaded the artifacts and compiled the engine executables, and
+//! propagates any load failure as an error to the caller instead of a dead
+//! channel.
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use super::engine::EngineConfig;
+use super::engine::{EngineConfig, EngineCore, EngineEvent};
 use super::metrics::EngineMetrics;
 use super::request::{RequestResult, RequestSpec};
-use super::scheduler::Scheduler;
 use crate::runtime::ModelRuntime;
 
 pub enum ServerMsg {
     Submit(RequestSpec),
-    /// Flush: run all queued requests, reply when drained.
-    Drain,
+    /// Abort a queued or in-flight request by id.
+    Abort(u64),
+    /// Finish everything in flight/queued, then stop the worker.
     Shutdown,
+}
+
+/// Streamed serving events, in engine emission order.
+#[derive(Clone, Debug)]
+pub enum ServerEvent {
+    /// Request was admitted into KV slot `slot`.
+    Admitted { id: u64, slot: usize },
+    /// Tokens emitted for `id` this step (the streaming payload).
+    Tokens { id: u64, tokens: Vec<i32> },
+    /// Request finished (including aborts — see `RequestResult::finish`).
+    Finished(RequestResult),
+    /// A submission was rejected at validation (bad prompt length etc.).
+    Rejected { id: u64, error: String },
+    /// The engine hit a fatal error; the worker stops after sending this.
+    EngineError(String),
 }
 
 pub struct ServerHandle {
     pub tx: mpsc::Sender<ServerMsg>,
-    pub results_rx: mpsc::Receiver<RequestResult>,
+    pub events_rx: mpsc::Receiver<ServerEvent>,
     join: Option<JoinHandle<EngineMetrics>>,
 }
 
@@ -31,11 +53,11 @@ impl ServerHandle {
         let _ = self.tx.send(ServerMsg::Submit(r));
     }
 
-    pub fn drain(&self) {
-        let _ = self.tx.send(ServerMsg::Drain);
+    pub fn abort(&self, id: u64) {
+        let _ = self.tx.send(ServerMsg::Abort(id));
     }
 
-    /// Shut down and return the engine metrics.
+    /// Finish outstanding work, shut down, and return the engine metrics.
     pub fn shutdown(mut self) -> EngineMetrics {
         let _ = self.tx.send(ServerMsg::Shutdown);
         self.join.take().map(|j| j.join().unwrap_or_default()).unwrap_or_default()
@@ -43,41 +65,105 @@ impl ServerHandle {
 }
 
 /// Spawn the serving worker. `artifacts_root` is loaded inside the worker so
-/// the PJRT client lives entirely on that thread.
-pub fn spawn(artifacts_root: String, cfg: EngineConfig, buckets: Vec<usize>) -> Result<ServerHandle> {
+/// the PJRT client lives entirely on that thread; the engine runs at width
+/// `cfg.batch`. Blocks until the worker is ready (artifacts loaded, engine
+/// executables compiled) and returns its startup error if that fails.
+pub fn spawn(artifacts_root: String, cfg: EngineConfig) -> Result<ServerHandle> {
     let (tx, rx) = mpsc::channel::<ServerMsg>();
-    let (res_tx, results_rx) = mpsc::channel::<RequestResult>();
+    let (evt_tx, events_rx) = mpsc::channel::<ServerEvent>();
+    let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(), String>>();
     let join = std::thread::Builder::new()
         .name("p-eagle-engine".into())
         .spawn(move || {
-            let mut mr = match ModelRuntime::load(&artifacts_root) {
-                Ok(m) => m,
+            let (mut mr, mut core) = match ModelRuntime::load(&artifacts_root)
+                .and_then(|mut mr| {
+                    let core = EngineCore::new(&mut mr, cfg)?;
+                    Ok((mr, core))
+                }) {
+                Ok(v) => {
+                    let _ = ready_tx.send(Ok(()));
+                    v
+                }
                 Err(e) => {
-                    eprintln!("engine worker failed to load artifacts: {e:#}");
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
                     return EngineMetrics::default();
                 }
             };
-            let mut sched = Scheduler::new(cfg, buckets);
+
+            let mut shutting_down = false;
             loop {
-                match rx.recv() {
-                    Ok(ServerMsg::Submit(r)) => sched.submit(r),
-                    Ok(ServerMsg::Drain) => {
-                        if let Err(e) = sched.run_to_completion(&mut mr) {
-                            eprintln!("engine error: {e:#}");
-                        }
-                        for r in sched.results.drain(..) {
-                            let _ = res_tx.send(r);
+                // block for work only when idle; otherwise poll between steps
+                if core.is_idle() {
+                    if shutting_down {
+                        break;
+                    }
+                    match rx.recv() {
+                        Ok(m) => handle(&mut core, m, &evt_tx, &mut shutting_down),
+                        Err(_) => break,
+                    }
+                }
+                while let Ok(m) = rx.try_recv() {
+                    handle(&mut core, m, &evt_tx, &mut shutting_down);
+                }
+                if core.is_idle() {
+                    continue;
+                }
+                let t_step = std::time::Instant::now();
+                match core.step(&mut mr) {
+                    Ok(report) => {
+                        core.metrics.wall_time += t_step.elapsed();
+                        for ev in report.events {
+                            let _ = evt_tx.send(match ev {
+                                EngineEvent::Admitted { id, slot } => {
+                                    ServerEvent::Admitted { id, slot }
+                                }
+                                EngineEvent::Tokens { id, tokens } => {
+                                    ServerEvent::Tokens { id, tokens }
+                                }
+                                EngineEvent::Finished(r) => ServerEvent::Finished(r),
+                            });
                         }
                     }
-                    Ok(ServerMsg::Shutdown) | Err(_) => break,
+                    Err(e) => {
+                        let _ = evt_tx.send(ServerEvent::EngineError(format!("{e:#}")));
+                        break;
+                    }
                 }
             }
-            // final drain on shutdown
-            let _ = sched.run_to_completion(&mut mr);
-            for r in sched.results.drain(..) {
-                let _ = res_tx.send(r);
-            }
-            sched.metrics
+            core.into_metrics()
         })?;
-    Ok(ServerHandle { tx, results_rx, join: Some(join) })
+
+    match ready_rx.recv() {
+        Ok(Ok(())) => Ok(ServerHandle { tx, events_rx, join: Some(join) }),
+        Ok(Err(msg)) => {
+            let _ = join.join();
+            Err(anyhow!("engine worker failed to start: {msg}"))
+        }
+        Err(_) => {
+            let _ = join.join();
+            Err(anyhow!("engine worker died before signalling readiness"))
+        }
+    }
+}
+
+fn handle(
+    core: &mut EngineCore,
+    msg: ServerMsg,
+    evt_tx: &mpsc::Sender<ServerEvent>,
+    shutting_down: &mut bool,
+) {
+    match msg {
+        ServerMsg::Submit(r) => {
+            let id = r.id;
+            if let Err(e) = core.add_request(r) {
+                let _ = evt_tx.send(ServerEvent::Rejected { id, error: format!("{e:#}") });
+            }
+        }
+        ServerMsg::Abort(id) => {
+            if let Some(res) = core.abort(id) {
+                let _ = evt_tx.send(ServerEvent::Finished(res));
+            }
+        }
+        ServerMsg::Shutdown => *shutting_down = true,
+    }
 }

@@ -8,10 +8,17 @@
 //! * **L2** (`python/compile/`): JAX target + drafter models, the scalable
 //!   long-context training framework (amortized masks, COD, Algorithm 1),
 //!   AOT lowering to HLO text.
-//! * **L3** (this crate): the serving coordinator — PJRT runtime,
-//!   wave-batched speculative decoding engine, schedulers, workload
-//!   generation, the paper-scale mask/partition/memory substrates, and the
-//!   bench harnesses that regenerate every table and figure.
+//! * **L3** (this crate): the serving coordinator — PJRT runtime and a
+//!   stepped, continuously batched speculative-decoding core. `EngineCore`
+//!   exposes `add_request` / `step` / `abort`: every `step()` is one
+//!   {draft -> verify -> accept} iteration over all occupied KV slots,
+//!   finished requests are evicted immediately, and queued requests are
+//!   admitted into freed slots mid-flight via per-slot batch-1 prefill
+//!   spliced into the shared KV buffer (empty rows are masked, never padded
+//!   with fake requests). A thin bucket scheduler picks engine widths, a
+//!   threaded server streams per-token events, and the workload +
+//!   mask/partition/memory substrates feed the bench harnesses that
+//!   regenerate every table and figure.
 
 pub mod config;
 pub mod coordinator;

@@ -3,15 +3,18 @@
 //!
 //! Subcommands:
 //!   selftest                          runtime smoke test (loads artifacts)
-//!   serve      --target --method --k --concurrency --requests [--dataset]
+//!   serve      --target --method --k --concurrency --requests
+//!              [--dataset --max-new --quiet]   (streams engine step events)
 //!   eval-acceptance --drafter --dataset [--k --requests --max-new]
-//!   bench-otps --target --method --k --concurrency [--dataset ...]
+//!   bench-otps --target --method --k --concurrency [--dataset --mixed --profile]
 //!   report     --fig1 | --fig5 | --memmodel
 //!   info                              manifest summary
 
 use anyhow::{anyhow, Result};
 
 use p_eagle::config::Manifest;
+use p_eagle::coordinator::server::spawn;
+use p_eagle::coordinator::{EngineConfig, Sampling, ServerEvent};
 use p_eagle::memmodel;
 use p_eagle::report;
 use p_eagle::runtime::{Arg, HostTensor, ModelRuntime, Runtime};
@@ -71,29 +74,84 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Drive the threaded streaming server: submit `requests` and print events
+/// as they arrive from the step loop (admissions, per-step token chunks,
+/// finishes), then shut down and report occupancy/TTFT/latency.
 fn serve(args: &Args) -> Result<()> {
-    let mut mr = ModelRuntime::load(artifacts_root(args))?;
+    let root = artifacts_root(args);
+    let manifest = Manifest::load(&root)?;
     let target = args.get_or("target", "target-m");
     let method = args.get_or("method", "pe4");
-    let drafter = mr.manifest.serving_drafter(&target, &method);
-    let k = args.usize_or("k", mr.manifest.default_k);
+    let drafter = manifest.serving_drafter(&target, &method);
+    let k = args.usize_or("k", manifest.default_k);
     let conc = args.usize_or("concurrency", 2);
     let total = args.usize_or("requests", 8);
     let max_new = args.usize_or("max-new", 96);
     let dataset = args.get_or("dataset", "mtbench");
+    let quiet = args.flag("quiet");
 
-    let run = report::bench_otps(&mut mr, &drafter, &dataset, k, conc, total, max_new, 7)?;
+    let mut arr = report::closed_loop_arrivals(&manifest, &dataset, max_new, 7)?;
+
+    let cfg = EngineConfig {
+        target: target.clone(),
+        drafter,
+        k,
+        batch: conc,
+        max_new_tokens: max_new,
+        sampling: Sampling::Greedy,
+        seed: 7,
+    };
+    // ready/error handshake: a bad artifacts root fails here, not in a log
+    let handle = spawn(root, cfg)?;
+    for _ in 0..total {
+        handle.submit(arr.next());
+    }
+    let mut finished = 0usize;
+    while finished < total {
+        match handle.events_rx.recv() {
+            Ok(ServerEvent::Admitted { id, slot }) => {
+                if !quiet {
+                    println!("[admit]  req {id} -> slot {slot}");
+                }
+            }
+            Ok(ServerEvent::Tokens { id, tokens }) => {
+                if !quiet {
+                    println!("[tokens] req {id} += {tokens:?}");
+                }
+            }
+            Ok(ServerEvent::Finished(r)) => {
+                finished += 1;
+                println!(
+                    "[done]   req {} ({} tokens, {:?}, AL {:.2}, {:?})",
+                    r.id,
+                    r.tokens.len(),
+                    r.finish,
+                    r.acceptance_length(),
+                    r.latency
+                );
+            }
+            Ok(ServerEvent::Rejected { id, error }) => {
+                finished += 1;
+                println!("[reject] req {id}: {error}");
+            }
+            Ok(ServerEvent::EngineError(e)) => return Err(anyhow!("engine error: {e}")),
+            Err(_) => return Err(anyhow!("server died with {finished}/{total} finished")),
+        }
+    }
+    let metrics = handle.shutdown();
     println!(
         "served {total} requests  target={target} method={method} K={k} C={conc} dataset={dataset}"
     );
     println!(
-        "OTPS {:.0}  AL {:.2}  p50 latency {:?}  p99 latency {:?}",
-        run.otps,
-        run.acceptance_length,
-        run.metrics.latency_quantile(0.5),
-        run.metrics.latency_quantile(0.99),
+        "OTPS {:.0}  AL {:.2}  occupancy {:.2}  p50 TTFT {:?}  p50 latency {:?}  p99 latency {:?}",
+        metrics.otps(),
+        metrics.acceptance_length(),
+        metrics.mean_occupancy(),
+        metrics.ttft_quantile(0.5),
+        metrics.latency_quantile(0.5),
+        metrics.latency_quantile(0.99),
     );
-    println!("{}", run.metrics.summary());
+    println!("{}", metrics.summary());
     Ok(())
 }
 
@@ -125,18 +183,25 @@ fn bench_otps(args: &Args) -> Result<()> {
     let total = args.usize_or("requests", 8);
     let max_new = args.usize_or("max-new", 96);
     let dataset = args.get_or("dataset", "gsm8k");
-    let run = report::bench_otps(&mut mr, &drafter, &dataset, k, conc, total, max_new, 11)?;
+    // --mixed: per-request generation budgets from the Fig.1 length model —
+    // the head-of-line workload the stepped engine exists for
+    let mixed = args.flag("mixed");
+    let run =
+        report::bench_otps(&mut mr, &drafter, &dataset, k, conc, total, max_new, 11, mixed)?;
     println!(
-        "OTPS[{target}/{method} K={k} C={conc} {dataset}] = {:.0} (AL {:.2})",
-        run.otps, run.acceptance_length
+        "OTPS[{target}/{method} K={k} C={conc} {dataset}{}] = {:.0} (AL {:.2}, occupancy {:.2})",
+        if mixed { " mixed" } else { "" },
+        run.otps,
+        run.acceptance_length,
+        run.mean_occupancy,
     );
     if args.flag("profile") {
         let m = &run.metrics;
         println!(
-            "breakdown: prefill {:?}  draft {:?}  verify {:?}  host {:?}  \
-             (engine wall {:?}, {} iterations)",
-            m.prefill_time, m.draft_time, m.verify_time, m.host_time,
-            m.wall_time, m.iterations
+            "breakdown: admission {:?} ({} admits)  draft {:?}  verify {:?}  host {:?}  \
+             (engine wall {:?}, {} iterations, p50 TTFT {:?})",
+            m.admission_time, m.admissions, m.draft_time, m.verify_time, m.host_time,
+            m.wall_time, m.iterations, m.ttft_quantile(0.5)
         );
         println!(
             "runtime: {} exec calls, exec {:?}, untuple {:?}, compile {:?}",

@@ -4,12 +4,32 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::config::Manifest;
 use crate::coordinator::{
-    run_closed_loop, EngineConfig, EngineMetrics, RequestResult, Sampling,
+    run_closed_loop, EngineConfig, EngineCore, EngineMetrics, RequestResult, Sampling,
 };
 use crate::runtime::ModelRuntime;
 use crate::util::rng::Rng;
 use crate::workload::{corpus::load_eval_prompts, ArrivalProcess, LengthModel};
+
+/// Closed-loop arrival stream for one manifest dataset, with prompts sized
+/// to satisfy engine admission (>= ctx_window; 16 keeps the paper's fixed
+/// prompt budget for benchmark comparability). The single source of that
+/// sizing rule for the CLI and the benches.
+pub fn closed_loop_arrivals(
+    manifest: &Manifest,
+    dataset: &str,
+    max_new: usize,
+    seed: u64,
+) -> Result<ArrivalProcess> {
+    let regime = manifest
+        .regimes
+        .get(dataset)
+        .ok_or_else(|| anyhow!("unknown dataset {dataset}"))?
+        .clone();
+    let prompt_len = 16.max(manifest.ctx_window + 1);
+    Ok(ArrivalProcess::closed_loop(regime, prompt_len, max_new, seed))
+}
 
 /// Acceptance-length evaluation of one drafter on one regime's OOD prompt
 /// set (the paper's AL metric: accepted drafts + bonus per iteration).
@@ -74,9 +94,17 @@ pub struct OtpsRun {
     pub concurrency: usize,
     pub otps: f64,
     pub acceptance_length: f64,
+    /// mean fraction of engine rows doing useful work per step
+    pub mean_occupancy: f64,
     pub metrics: EngineMetrics,
 }
 
+/// Closed-loop OTPS at concurrency C. With `mixed_lengths`, each request
+/// draws its own generation budget from the paper's Figure-1 length
+/// distribution (testbed-scaled, capped at `max_new`) — the workload where
+/// iteration-level batching matters: short requests evict early and freed
+/// slots re-admit mid-flight instead of idling behind the longest request.
+#[allow(clippy::too_many_arguments)]
 pub fn bench_otps(
     mr: &mut ModelRuntime,
     drafter: &str,
@@ -86,16 +114,12 @@ pub fn bench_otps(
     total_requests: usize,
     max_new: usize,
     seed: u64,
+    mixed_lengths: bool,
 ) -> Result<OtpsRun> {
     let info = mr.manifest.drafter(drafter)?.clone();
-    let regime = mr
-        .manifest
-        .regimes
-        .get(dataset)
-        .ok_or_else(|| anyhow!("unknown dataset {dataset}"))?
-        .clone();
-    let prompt_len = 16.max(mr.manifest.ctx_window + 1);
-    let mut arr = ArrivalProcess::closed_loop(regime, prompt_len, max_new, seed);
+    let mut arr = closed_loop_arrivals(&mr.manifest, dataset, max_new, seed)?;
+    let lens = LengthModel::testbed(max_new.max(8));
+    let mut lrng = Rng::new(seed ^ 0x1E46);
     let cfg = EngineConfig {
         target: info.target.clone(),
         drafter: drafter.to_string(),
@@ -106,18 +130,21 @@ pub fn bench_otps(
         seed,
     };
     // warmup: compile/load the executables + weights outside the timed loop
-    // (one throwaway wave, like the paper's benchmark warmup requests)
+    // (one throwaway 2-token request, like the paper's benchmark warmup)
     {
-        let mut warm = EngineMetrics::new(k);
-        let warm_spec = arr.next();
         let mut cfg_w = cfg.clone();
         cfg_w.max_new_tokens = 2;
-        let mut w = Some(crate::coordinator::RequestSpec { max_new_tokens: 2, ..warm_spec });
-        crate::coordinator::engine::run_wave(
-            mr, &cfg_w, vec![w.take().unwrap()], &mut warm)?;
+        let mut warm = EngineCore::new(mr, cfg_w)?;
+        warm.add_request(arr.next())?;
+        warm.run_until_idle(mr)?;
     }
-    let (_results, metrics) =
-        run_closed_loop(mr, &cfg, concurrency, total_requests, || arr.next())?;
+    let (_results, metrics) = run_closed_loop(mr, &cfg, concurrency, total_requests, || {
+        let mut spec = arr.next();
+        if mixed_lengths {
+            spec.max_new_tokens = lens.sample(&mut lrng).clamp(4, max_new);
+        }
+        spec
+    })?;
     Ok(OtpsRun {
         drafter: drafter.to_string(),
         dataset: dataset.to_string(),
@@ -125,6 +152,7 @@ pub fn bench_otps(
         concurrency,
         otps: metrics.otps(),
         acceptance_length: metrics.acceptance_length(),
+        mean_occupancy: metrics.mean_occupancy(),
         metrics,
     })
 }

@@ -164,6 +164,35 @@ impl ModelRuntime {
         Ok(VerifyOut { logits, feats, kv })
     }
 
+    /// Load just the prefill executable for a target at `batch` (used by the
+    /// stepped engine's per-slot admission path, which never runs a verify
+    /// at that width). `TargetExec::k` is irrelevant to prefill and set to 0.
+    pub fn ensure_prefill(&mut self, target: &str, batch: usize) -> Result<TargetExec> {
+        let info = self.manifest.target(target)?.clone();
+        self.ensure_weights(target, &info.weights, &info.param_order)?;
+        let pre = self
+            .manifest
+            .find_exec("prefill", Some(target), None, Some(batch), None)?
+            .clone();
+        self.rt.load(&pre.name, &self.manifest.abs(&pre.path))?;
+        Ok(TargetExec { target: target.to_string(), batch, k: 0 })
+    }
+
+    /// Load just the verify executable for a target at (`batch`, `k`) — the
+    /// stepped engine's decode width never runs a prefill (admission uses
+    /// the batch-1 prefill instead), so the batch-wide prefill HLO is not
+    /// compiled.
+    pub fn ensure_verify(&mut self, target: &str, batch: usize, k: usize) -> Result<TargetExec> {
+        let info = self.manifest.target(target)?.clone();
+        self.ensure_weights(target, &info.weights, &info.param_order)?;
+        let ver = self
+            .manifest
+            .find_exec("verify", Some(target), None, Some(batch), Some(k))?
+            .clone();
+        self.rt.load(&ver.name, &self.manifest.abs(&ver.path))?;
+        Ok(TargetExec { target: target.to_string(), batch, k })
+    }
+
     /// Draft K tokens. ctx_tokens [B,C] i32, ctx_feats [B,C,3d] f32,
     /// row_pos0 [B] i32 -> [B,K] i32.
     pub fn draft(
@@ -181,5 +210,100 @@ impl ModelRuntime {
         args.push(Arg::Host(row_pos0));
         let out = self.rt.call(&name, &args)?;
         self.rt.download(&out[0])
+    }
+}
+
+/// Copy the single batch row of `src` (a [L, 2, 1, S, H, Dh] KV cache) into
+/// batch row `slot` of `dst` (a [L, 2, B, S, H, Dh] KV cache). Pure host
+/// arithmetic over the row-major layout; shape-checked.
+pub fn splice_kv_row(dst: &mut HostTensor, src: &HostTensor, slot: usize) -> Result<()> {
+    anyhow::ensure!(
+        dst.dims.len() == 6 && src.dims.len() == 6,
+        "KV caches must be rank 6, got {:?} / {:?}",
+        dst.dims,
+        src.dims
+    );
+    anyhow::ensure!(src.dims[2] == 1, "source KV must be batch 1, got {:?}", src.dims);
+    anyhow::ensure!(
+        dst.dims[0] == src.dims[0]
+            && dst.dims[1] == src.dims[1]
+            && dst.dims[3..] == src.dims[3..],
+        "KV cache shape mismatch: {:?} vs {:?}",
+        dst.dims,
+        src.dims
+    );
+    let batch = dst.dims[2];
+    anyhow::ensure!(slot < batch, "slot {slot} out of batch {batch}");
+    let planes = dst.dims[0] * dst.dims[1]; // L * 2
+    let row: usize = dst.dims[3..].iter().product(); // S * H * Dh
+    let (dst_v, src_v) = match (&mut dst.data, &src.data) {
+        (super::tensors::HostData::F32(d), super::tensors::HostData::F32(s)) => (d, s),
+        _ => anyhow::bail!("KV caches must both be f32"),
+    };
+    for p in 0..planes {
+        let doff = (p * batch + slot) * row;
+        let soff = p * row;
+        dst_v[doff..doff + row].copy_from_slice(&src_v[soff..soff + row]);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(dims: &[usize], fill: impl Fn(usize) -> f32) -> HostTensor {
+        let n: usize = dims.iter().product();
+        HostTensor::f32(dims, (0..n).map(fill).collect())
+    }
+
+    #[test]
+    fn splice_writes_exactly_one_row() {
+        // L=2, 2, B=3, S=4, H=1, Dh=2 -> plane stride 3*8, row 8
+        let mut dst = kv(&[2, 2, 3, 4, 1, 2], |_| 0.0);
+        let src = kv(&[2, 2, 1, 4, 1, 2], |i| i as f32 + 1.0);
+        splice_kv_row(&mut dst, &src, 1).unwrap();
+        let d = dst.as_f32().unwrap();
+        let row = 4 * 1 * 2;
+        for p in 0..4 {
+            for b in 0..3 {
+                let block = &d[(p * 3 + b) * row..(p * 3 + b + 1) * row];
+                if b == 1 {
+                    let want: Vec<f32> =
+                        (0..row).map(|j| (p * row + j) as f32 + 1.0).collect();
+                    assert_eq!(block, &want[..], "plane {p}");
+                } else {
+                    assert!(block.iter().all(|&x| x == 0.0), "plane {p} row {b} touched");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn splice_preserves_other_rows() {
+        let mut dst = kv(&[1, 2, 2, 2, 1, 1], |i| i as f32);
+        let before: Vec<f32> = dst.as_f32().unwrap().to_vec();
+        let src = kv(&[1, 2, 1, 2, 1, 1], |_| 99.0);
+        splice_kv_row(&mut dst, &src, 0).unwrap();
+        let d = dst.as_f32().unwrap();
+        // layout per plane: [row0 (2 elems), row1 (2 elems)]; row1 untouched
+        for p in 0..2 {
+            assert_eq!(d[p * 4], 99.0);
+            assert_eq!(d[p * 4 + 1], 99.0);
+            assert_eq!(d[p * 4 + 2], before[p * 4 + 2]);
+            assert_eq!(d[p * 4 + 3], before[p * 4 + 3]);
+        }
+    }
+
+    #[test]
+    fn splice_shape_checked() {
+        let mut dst = kv(&[1, 2, 2, 2, 1, 1], |_| 0.0);
+        let src_bad_batch = kv(&[1, 2, 2, 2, 1, 1], |_| 0.0);
+        assert!(splice_kv_row(&mut dst, &src_bad_batch, 0).is_err());
+        let src_bad_shape = kv(&[1, 2, 1, 3, 1, 1], |_| 0.0);
+        assert!(splice_kv_row(&mut dst, &src_bad_shape, 0).is_err());
+        let src = kv(&[1, 2, 1, 2, 1, 1], |_| 0.0);
+        assert!(splice_kv_row(&mut dst, &src, 2).is_err());
+        assert!(splice_kv_row(&mut dst, &src, 1).is_ok());
     }
 }

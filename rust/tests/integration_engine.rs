@@ -3,9 +3,14 @@
 //! The headline property: greedy speculative decoding is LOSSLESS — the
 //! engine's output must be byte-identical to the target model's own greedy
 //! continuation, for BOTH drafting methods. This is the invariant that makes
-//! the paper's OTPS comparison an apples-to-apples one.
+//! the paper's OTPS comparison an apples-to-apples one. The stepped
+//! `EngineCore` additionally has to preserve it under continuous batching:
+//! mid-flight admission into a freed slot must not perturb the rows that
+//! stayed live.
 
-use p_eagle::coordinator::{run_closed_loop, EngineConfig, FinishReason, Sampling};
+use p_eagle::coordinator::{
+    run_closed_loop, EngineConfig, EngineCore, EngineEvent, FinishReason, Sampling,
+};
 use p_eagle::runtime::{HostTensor, ModelRuntime};
 use p_eagle::workload::RequestSpec;
 
@@ -139,8 +144,8 @@ fn both_methods_emit_identical_tokens() {
 }
 
 #[test]
-fn batched_wave_matches_single() {
-    // each request in a C=2 wave must produce the same tokens as alone
+fn batched_core_matches_single() {
+    // each request in a width-2 core must produce the same tokens as alone
     let root = require_artifacts!();
     let mut mr = ModelRuntime::load(&root).unwrap();
     let p1 = test_prompt(&mr, 11);
@@ -166,6 +171,171 @@ fn batched_wave_matches_single() {
     results.sort_by_key(|r| r.id);
     assert_eq!(results[0].tokens, solo1);
     assert_eq!(results[1].tokens, solo2);
+}
+
+fn core_cfg(batch: usize, max_new: usize) -> EngineConfig {
+    EngineConfig {
+        target: "target-m".into(),
+        drafter: "target-m-pe4".into(),
+        k: 5,
+        batch,
+        max_new_tokens: max_new,
+        sampling: Sampling::Greedy,
+        seed: 5,
+    }
+}
+
+fn spec(id: u64, prompt: &[i32], max_new: usize) -> RequestSpec {
+    RequestSpec { id, prompt: prompt.to_vec(), max_new_tokens: max_new, arrival_s: 0.0 }
+}
+
+#[test]
+fn midflight_admission_matches_solo() {
+    // 3 requests through a width-2 core: the short one evicts early and the
+    // queued third request is admitted into the freed slot while the second
+    // is still decoding. Every request's tokens must match its solo greedy
+    // run — per-slot prefill + KV splice must not perturb live rows.
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let prompts: Vec<Vec<i32>> =
+        [41u64, 42, 43].iter().map(|&s| test_prompt(&mr, s)).collect();
+    let solo: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| engine_greedy(&mut mr, "target-m-pe4", p, 24))
+        .collect();
+
+    let budgets = [6usize, 24, 24]; // request 0 finishes first
+    let mut core = EngineCore::new(&mut mr, core_cfg(2, 24)).unwrap();
+    for (i, p) in prompts.iter().enumerate() {
+        core.add_request(spec(i as u64, p, budgets[i])).unwrap();
+    }
+    assert_eq!(core.queued(), 3);
+
+    let mut results = Vec::new();
+    let mut saw_midflight = false;
+    while !core.is_idle() {
+        let report = core.step(&mut mr).unwrap();
+        if report.admitted > 0 && !results.is_empty() {
+            saw_midflight = true; // an admission happened after an eviction
+        }
+        results.extend(report.into_finished());
+    }
+    assert!(saw_midflight, "request 2 was never admitted mid-flight");
+    assert_eq!(results.len(), 3);
+    results.sort_by_key(|r| r.id);
+    // truncated request: prefix of its solo run (greedy => prefix-stable)
+    assert_eq!(results[0].tokens[..], solo[0][..results[0].tokens.len()]);
+    assert_eq!(results[0].tokens.len(), 6);
+    assert_eq!(results[1].tokens, solo[1], "live row perturbed by admission");
+    assert_eq!(results[2].tokens, solo[2], "mid-flight admitted row diverged");
+    assert!(core.metrics.mean_occupancy() > 0.0);
+    assert_eq!(core.metrics.admissions, 3);
+}
+
+#[test]
+fn abort_frees_slot_for_reuse() {
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let prompt = test_prompt(&mr, 51);
+    let mut core = EngineCore::new(&mut mr, core_cfg(1, 40)).unwrap();
+
+    // abort while queued: empty partial result
+    core.add_request(spec(6, &prompt, 40)).unwrap();
+    core.add_request(spec(9, &prompt, 40)).unwrap();
+    let queued = core.abort(9).expect("queued abort");
+    assert_eq!(queued.finish, FinishReason::Aborted);
+    assert!(queued.tokens.is_empty());
+
+    // abort in-flight: partial tokens, slot freed immediately
+    core.step(&mut mr).unwrap();
+    core.step(&mut mr).unwrap();
+    let res = core.abort(6).expect("in-flight abort");
+    assert_eq!(res.finish, FinishReason::Aborted);
+    assert!(!res.tokens.is_empty(), "in-flight abort returns partial tokens");
+    assert!(core.is_idle());
+    assert!(core.abort(6).is_none(), "double abort");
+
+    // the freed slot admits a fresh request
+    core.add_request(spec(8, &prompt, 8)).unwrap();
+    let out = core.run_until_idle(&mut mr).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].id, 8);
+    assert!(!out[0].tokens.is_empty() && out[0].tokens.len() <= 8);
+    assert_eq!(core.metrics.requests_aborted, 2);
+}
+
+#[test]
+fn single_request_deterministic_vs_seed() {
+    // identical config + seed => identical token stream, twice over, for
+    // both greedy and temperature sampling (the engine has no hidden
+    // wall-clock or ordering dependence)
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let prompt = test_prompt(&mr, 61);
+    for sampling in [Sampling::Greedy, Sampling::Temperature(0.8)] {
+        let mut run = |mr: &mut ModelRuntime| {
+            let cfg = EngineConfig { sampling, ..core_cfg(1, 24) };
+            let mut g = Some(spec(0, &prompt, 24));
+            let (results, _) =
+                run_closed_loop(mr, &cfg, 1, 1, || g.take().unwrap()).unwrap();
+            results.into_iter().next().unwrap().tokens
+        };
+        let a = run(&mut mr);
+        let b = run(&mut mr);
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "nondeterministic under {sampling:?}");
+    }
+}
+
+#[test]
+fn step_events_are_ordered_and_complete() {
+    // per request: exactly one Admitted, then Tokens chunks, then one
+    // Finished; concatenated Tokens == the final result's tokens
+    use std::collections::HashMap;
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let mut core = EngineCore::new(&mut mr, core_cfg(2, 16)).unwrap();
+    for i in 0..4u64 {
+        let p = test_prompt(&mr, 70 + i);
+        core.add_request(spec(i, &p, 4 + 4 * i as usize)).unwrap();
+    }
+    #[derive(Default)]
+    struct Seen {
+        admitted: usize,
+        streamed: Vec<i32>,
+        finished: Option<Vec<i32>>,
+    }
+    let mut seen: HashMap<u64, Seen> = HashMap::new();
+    while !core.is_idle() {
+        for ev in core.step(&mut mr).unwrap().events {
+            match ev {
+                EngineEvent::Admitted { id, slot } => {
+                    let s = seen.entry(id).or_default();
+                    assert_eq!(s.admitted, 0, "req {id} admitted twice");
+                    assert!(s.streamed.is_empty(), "req {id} tokens before admission");
+                    assert!(slot < 2);
+                    s.admitted += 1;
+                }
+                EngineEvent::Tokens { id, tokens } => {
+                    let s = seen.entry(id).or_default();
+                    assert_eq!(s.admitted, 1, "req {id} tokens without admission");
+                    assert!(s.finished.is_none(), "req {id} tokens after finish");
+                    s.streamed.extend(tokens);
+                }
+                EngineEvent::Finished(r) => {
+                    let s = seen.entry(r.id).or_default();
+                    assert_eq!(s.admitted, 1, "req {} finished without admission", r.id);
+                    assert!(s.finished.is_none(), "req {} finished twice", r.id);
+                    s.finished = Some(r.tokens);
+                }
+            }
+        }
+    }
+    assert_eq!(seen.len(), 4);
+    for (id, s) in seen {
+        let fin = s.finished.unwrap_or_else(|| panic!("req {id} never finished"));
+        assert_eq!(s.streamed, fin, "req {id}: streamed tokens != result tokens");
+    }
 }
 
 #[test]

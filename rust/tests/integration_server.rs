@@ -1,61 +1,169 @@
-//! Threaded server front-end integration test — requires `make artifacts`.
+//! Threaded streaming-server integration tests. The spawn-failure handshake
+//! test runs everywhere; the round-trip tests require `make artifacts`.
+
+use std::collections::HashMap;
 
 use p_eagle::coordinator::server::spawn;
-use p_eagle::coordinator::{EngineConfig, RequestSpec, Sampling};
+use p_eagle::coordinator::{EngineConfig, FinishReason, RequestSpec, Sampling, ServerEvent};
 
 fn artifacts() -> Option<String> {
     let root = std::env::var("PEAGLE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     std::path::Path::new(&root).join("manifest.json").exists().then_some(root)
 }
 
+fn cfg(batch: usize, max_new: usize) -> EngineConfig {
+    EngineConfig {
+        target: "target-m".into(),
+        drafter: "target-m-pe4".into(),
+        k: 5,
+        batch,
+        max_new_tokens: max_new,
+        sampling: Sampling::Greedy,
+        seed: 1,
+    }
+}
+
+fn prompt(i: u64) -> Vec<i32> {
+    std::iter::once(1)
+        .chain((0..15).map(|j| 4 + ((i as i32) * 31 + j) % 200))
+        .collect()
+}
+
 #[test]
-fn server_round_trip() {
+fn spawn_propagates_artifact_load_failure() {
+    // the ready/error handshake: a missing artifacts root must surface as an
+    // error from spawn() itself, not a stderr line + default metrics.
+    // (No artifacts needed — this exercises the failure path.)
+    let err = spawn("definitely/not/an/artifacts/root".into(), cfg(2, 8))
+        .err()
+        .expect("spawn must fail for a missing artifacts root");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("failed to start"),
+        "error should come from the readiness handshake: {msg}"
+    );
+}
+
+#[test]
+fn server_streams_ordered_events() {
     let Some(root) = artifacts() else {
         eprintln!("skipping: artifacts not built");
         return;
     };
-    let cfg = EngineConfig {
-        target: "target-m".into(),
-        drafter: "target-m-pe4".into(),
-        k: 5,
-        batch: 2,
-        max_new_tokens: 16,
-        sampling: Sampling::Greedy,
-        seed: 1,
-    };
-    let handle = spawn(root, cfg, vec![1, 2]).unwrap();
+    let handle = spawn(root, cfg(2, 16)).unwrap();
     // submit from a separate producer thread (the server contract)
     let tx = handle.tx.clone();
     let producer = std::thread::spawn(move || {
         for i in 0..3u64 {
-            let prompt: Vec<i32> = std::iter::once(1)
-                .chain((0..15).map(|j| 4 + ((i as i32) * 31 + j) % 200))
-                .collect();
-            let _ = tx.send(p_eagle::coordinator::server::ServerMsg::Submit(RequestSpec {
+            let _ = tx.send(p_eagle::coordinator::ServerMsg::Submit(RequestSpec {
                 id: i,
-                prompt,
-                max_new_tokens: 16,
+                prompt: prompt(i),
+                max_new_tokens: 4 + 4 * i as usize,
                 arrival_s: 0.0,
             }));
         }
     });
     producer.join().unwrap();
-    handle.drain();
 
-    let mut got = Vec::new();
-    for _ in 0..3 {
-        let r = handle
-            .results_rx
-            .recv_timeout(std::time::Duration::from_secs(300))
-            .expect("server result");
-        assert!(!r.tokens.is_empty());
-        assert!(r.tokens.len() <= 16);
-        got.push(r.id);
+    // results stream out as requests finish — no Drain round-trip
+    #[derive(Default)]
+    struct Seen {
+        admitted: usize,
+        streamed: Vec<i32>,
+        finished: Option<Vec<i32>>,
     }
-    got.sort_unstable();
-    assert_eq!(got, vec![0, 1, 2]);
+    let mut seen: HashMap<u64, Seen> = HashMap::new();
+    let mut finished = 0usize;
+    while finished < 3 {
+        let ev = handle
+            .events_rx
+            .recv_timeout(std::time::Duration::from_secs(300))
+            .expect("server event");
+        match ev {
+            ServerEvent::Admitted { id, slot } => {
+                let s = seen.entry(id).or_default();
+                assert_eq!(s.admitted, 0);
+                assert!(slot < 2);
+                s.admitted += 1;
+            }
+            ServerEvent::Tokens { id, tokens } => {
+                let s = seen.entry(id).or_default();
+                assert_eq!(s.admitted, 1, "req {id} tokens before admission");
+                assert!(s.finished.is_none());
+                s.streamed.extend(tokens);
+            }
+            ServerEvent::Finished(r) => {
+                assert!(!r.tokens.is_empty());
+                assert!(r.tokens.len() <= 16);
+                let s = seen.entry(r.id).or_default();
+                assert_eq!(s.admitted, 1);
+                s.finished = Some(r.tokens);
+                finished += 1;
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    let mut ids: Vec<u64> = seen.keys().copied().collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2]);
+    for (id, s) in &seen {
+        let fin = s.finished.as_ref().unwrap();
+        assert_eq!(&s.streamed, fin, "req {id}: streamed != final tokens");
+    }
 
     let metrics = handle.shutdown();
     assert!(metrics.requests_finished >= 3);
     assert!(metrics.tokens_emitted >= 3);
+    assert!(metrics.mean_occupancy() > 0.0);
+    assert_eq!(metrics.ttfts.len(), 3);
+}
+
+#[test]
+fn server_abort_and_reject() {
+    let Some(root) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let handle = spawn(root, cfg(1, 64)).unwrap();
+
+    // a prompt below the drafter context window is rejected at validation
+    handle.submit(RequestSpec { id: 50, prompt: vec![1, 2], max_new_tokens: 8, arrival_s: 0.0 });
+    // a long request we abort mid-stream
+    handle.submit(RequestSpec { id: 51, prompt: prompt(0), max_new_tokens: 64, arrival_s: 0.0 });
+
+    let mut finish: Option<FinishReason> = None;
+    let mut rejected = false;
+    let mut sent_abort = false;
+    while !(finish.is_some() && rejected) {
+        let ev = handle
+            .events_rx
+            .recv_timeout(std::time::Duration::from_secs(300))
+            .expect("server event");
+        match ev {
+            ServerEvent::Rejected { id, .. } => {
+                assert_eq!(id, 50);
+                rejected = true;
+            }
+            ServerEvent::Tokens { id, .. } => {
+                assert_eq!(id, 51);
+                if !sent_abort {
+                    handle.abort(51);
+                    sent_abort = true;
+                }
+            }
+            ServerEvent::Finished(r) => {
+                assert_eq!(r.id, 51);
+                finish = Some(r.finish);
+            }
+            ServerEvent::Admitted { .. } => {}
+            ServerEvent::EngineError(e) => panic!("engine error: {e}"),
+        }
+    }
+    assert!(sent_abort, "request 51 never streamed a token");
+    let metrics = handle.shutdown();
+    // the abort usually lands mid-flight; if the request finished in the
+    // race window the abort becomes a no-op, which is also correct
+    if finish == Some(FinishReason::Aborted) {
+        assert_eq!(metrics.requests_aborted, 1);
+    }
 }
