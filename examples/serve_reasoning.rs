@@ -46,6 +46,7 @@ fn main() -> Result<()> {
             batch: conc,
             max_new_tokens: 96,
             sampling: Sampling::Greedy,
+            tree: None,
             seed: 1234,
         };
         // identical request stream for both methods (seeded)

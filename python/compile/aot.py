@@ -30,12 +30,13 @@ from . import data as data_mod
 from .configs import (
     BATCH_SIZES, BOS_ID, CTX_WINDOW, DATASETS, DEFAULT_K, EOS_ID,
     EPOCH_SNAPSHOTS, MASK_ID, PAD_ID, PROMPT_PAD, S_MAX, SPEC_DEPTHS,
-    TABLE1_CONTEXTS, TARGETS, VOCAB, DrafterConfig, all_drafters,
-    ablation_drafters, config_dict, drafter_train_config, serving_drafters,
-    table1_drafters,
+    TABLE1_CONTEXTS, TARGETS, TREE_DRAFTERS, TREE_TARGETS, TREE_TOPOLOGIES,
+    VOCAB, DrafterConfig, all_drafters, ablation_drafters, config_dict,
+    drafter_train_config, serving_drafters, table1_drafters,
 )
-from .drafter import draft_ar, draft_pe, init_drafter
-from .model import init_target, prefill, verify, zero_kv
+from .drafter import draft_ar, draft_pe, draft_pe_tree, init_drafter
+from .masks import tree_depths, tree_topology_id
+from .model import init_target, prefill, verify, verify_tree, zero_kv
 from .pew import flatten_named, read_pew, unflatten_named, write_pew
 from .pretrain import pretrain_target
 from .train import train_drafter
@@ -285,6 +286,54 @@ def stage_lower(art: Artifacts, target_params, drafter_params):
                 (dspec, ct, cf, p0), "draft",
                 {"model": dcfg.target, "drafter": dname, "batch": b, "k": k},
                 [{"name": "tokens"}])
+
+    # --- tree executables (static topologies; target-m workhorse only) -----
+    # The Rust engine passes the cross-node ancestor mask as a RUNTIME input
+    # (it precomputes it once per topology — masking/tree.rs); per-slot depth
+    # offsets are static and baked into the HLO. Argument order after the
+    # params must match ModelRuntime::verify_tree: chunk, cache_len,
+    # tree_mask, kv.
+    for topo in TREE_TOPOLOGIES:
+        tid = tree_topology_id(topo)
+        n_nodes = sum(topo)
+        depths = tuple(tree_depths(topo))
+        for tname in TREE_TARGETS:
+            tcfg = TARGETS[tname]
+            pspec = spec_of(target_params[tname])
+            for b in BATCH_SIZES:
+                chunk = jax.ShapeDtypeStruct((b, n_nodes + 1), jnp.int32)
+                clen = jax.ShapeDtypeStruct((b,), jnp.int32)
+                tmask = jax.ShapeDtypeStruct((n_nodes + 1, n_nodes + 1),
+                                             jnp.int32)
+                kv = jax.ShapeDtypeStruct(
+                    (tcfg.n_layers, 2, b, S_MAX, tcfg.n_heads, tcfg.head_dim),
+                    jnp.float32)
+                _maybe_lower(
+                    art, f"{tname}-verify-tree-{tid}-b{b}",
+                    lambda p, c, l, m, cache, _cfg=tcfg, _d=depths: verify_tree(
+                        p, _cfg, c, l, cache, m, _d),
+                    (pspec, chunk, clen, tmask, kv), "verify-tree",
+                    {"model": tname, "batch": b, "k": n_nodes, "topology": tid},
+                    [{"name": "logits"}, {"name": "feats"}, {"name": "kv"}])
+        for dname in TREE_DRAFTERS:
+            dmeta = art.manifest["drafters"][dname]
+            dcfg = DrafterConfig(**{k: v for k, v in dmeta.items()
+                                    if k in DrafterConfig.__dataclass_fields__})
+            tcfg = TARGETS[dcfg.target]
+            dspec = spec_of(drafter_params[dname])
+            for b in BATCH_SIZES:
+                ct = jax.ShapeDtypeStruct((b, CTX_WINDOW), jnp.int32)
+                cf = jax.ShapeDtypeStruct((b, CTX_WINDOW, tcfg.feature_dim),
+                                          jnp.float32)
+                p0 = jax.ShapeDtypeStruct((b,), jnp.int32)
+                _maybe_lower(
+                    art, f"{dname}-draft-tree-{tid}-b{b}",
+                    lambda p, c, f, q, _cfg=dcfg, _w=tuple(topo): draft_pe_tree(
+                        p, _cfg, c, f, q, _w, attn_impl=KERNEL),
+                    (dspec, ct, cf, p0), "draft-tree",
+                    {"model": dcfg.target, "drafter": dname, "batch": b,
+                     "k": n_nodes, "topology": tid},
+                    [{"name": "tokens"}])
 
     # --- runtime selftest (load_hlo-style smoke executable) -----------------
     def smoke(x, y):

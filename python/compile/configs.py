@@ -143,6 +143,16 @@ BATCH_SIZES = [1, 2, 4]
 SPEC_DEPTHS = [3, 5, 7]
 DEFAULT_K = 5
 
+# Static draft-tree width profiles lowered as tree executables (aot.py):
+# widths[d] nodes at depth d+1, level-major ids — see masks.tree_parents and
+# rust/src/masking/tree.rs. The all-ones profile is the chain-as-degenerate-
+# tree parity case; the branching profile is the serving default of
+# `bench-otps --tree`. Tree executables are lowered for the target-m
+# workhorse + its pe4 drafter only (each topology × batch costs a lowering).
+TREE_TOPOLOGIES = [(1,) * DEFAULT_K, (3, 2, 1, 1, 1)]
+TREE_TARGETS = ["target-m"]
+TREE_DRAFTERS = ["target-m-pe4"]
+
 
 def serving_drafters():
     """The drafters used in Tables 9/10/11: AR EAGLE-3 + P-EAGLE 4L (+2L)."""

@@ -133,14 +133,15 @@ def fuse_rows(params, tok_emb, h_in):
 # Serving: P-EAGLE parallel drafting (single forward pass)
 # ---------------------------------------------------------------------------
 
-def draft_pe(params, cfg: DrafterConfig, ctx_tokens, ctx_feats, row_pos0, k,
-             attn_impl="pallas"):
-    """One-pass parallel drafting (the paper's contribution).
+def _pe_depth_logits(params, cfg: DrafterConfig, ctx_tokens, ctx_feats,
+                     row_pos0, k, attn_impl="pallas"):
+    """One parallel forward -> per-depth draft logits [B, k, V].
 
-    ctx_tokens: [B, C] tokens at consecutive absolute positions ending at the
-    last verified token; ctx_feats: [B, C, 3dt] target features at those
-    positions minus one; row_pos0: [B] RoPE position of the last context row.
-    Returns draft tokens [B, k] int32.
+    Row j of the result is the drafter's distribution for the token at depth
+    j+1 beyond the last verified token (row 0 comes from the last context
+    row, rows 1..k-1 from the MTP slots). Shared by chain drafting
+    (`draft_pe` takes the argmax) and tree drafting (`draft_pe_tree` takes
+    each level's top-w tokens).
     """
     B, C = ctx_tokens.shape
     T = C + k - 1
@@ -169,8 +170,50 @@ def draft_pe(params, cfg: DrafterConfig, ctx_tokens, ctx_feats, row_pos0, k,
     bias = mask_to_bias(jnp.tril(jnp.ones((T, T), bool)))[None, None]
 
     h = drafter_blocks(params, cfg, x, positions, bias, attn_impl)
-    logits = h[:, C - 1:, :] @ params["lm_head"]                # [B,k,V]
+    return h[:, C - 1:, :] @ params["lm_head"]                  # [B,k,V]
+
+
+def draft_pe(params, cfg: DrafterConfig, ctx_tokens, ctx_feats, row_pos0, k,
+             attn_impl="pallas"):
+    """One-pass parallel drafting (the paper's contribution).
+
+    ctx_tokens: [B, C] tokens at consecutive absolute positions ending at the
+    last verified token; ctx_feats: [B, C, 3dt] target features at those
+    positions minus one; row_pos0: [B] RoPE position of the last context row.
+    Returns draft tokens [B, k] int32.
+    """
+    logits = _pe_depth_logits(params, cfg, ctx_tokens, ctx_feats, row_pos0, k,
+                              attn_impl)
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def draft_pe_tree(params, cfg: DrafterConfig, ctx_tokens, ctx_feats, row_pos0,
+                  widths, attn_impl="pallas"):
+    """One-pass parallel TREE drafting over a static width profile.
+
+    `widths` (STATIC python tuple, baked into the HLO) gives the node count
+    per depth; the level's nodes take that depth's top-w tokens in rank
+    order, so node j of a level is the (j+1)-th most likely continuation at
+    that depth. P-EAGLE's MTP slots are anchored at the last context row —
+    depth distributions are path-independent — so the whole tree still costs
+    ONE drafter forward, the paper's parallel-drafting property extended to
+    trees. Returns [B, N] int32 node tokens in level-major order (matching
+    rust/src/masking/tree.rs node ids 1..N); tokens within a level are
+    distinct by construction.
+
+    widths == (1,)*k reproduces `draft_pe` exactly (argmax per depth).
+    """
+    k = len(widths)
+    logits = _pe_depth_logits(params, cfg, ctx_tokens, ctx_feats, row_pos0, k,
+                              attn_impl)
+    levels = []
+    for d, w in enumerate(widths):
+        if w == 1:
+            levels.append(jnp.argmax(logits[:, d], axis=-1)[:, None])
+        else:
+            _, idx = jax.lax.top_k(logits[:, d], w)
+            levels.append(idx)
+    return jnp.concatenate(levels, axis=1).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

@@ -138,3 +138,68 @@ def rows_from_anchors(anchors, n, k):
 def expected_total_rows(n, k, ratio):
     """Paper §3.2: total positions ≈ n * (1 - r^K) / (1 - r)."""
     return n * (1.0 - ratio ** k) / (1.0 - ratio)
+
+
+# ---------------------------------------------------------------------------
+# Serve-time draft-tree topologies (mirror of rust/src/masking/tree.rs)
+# ---------------------------------------------------------------------------
+#
+# A static draft tree is a width profile: widths[d] nodes at depth d+1,
+# level-major node ids 1..N below an implicit root (id 0, the last committed
+# token), children attached round-robin so rank-0 parents fill first. The
+# chain is the degenerate profile [1]*K. The cross-node ancestor mask is the
+# chunk-internal attention rule of one-pass tree verification; the Rust
+# engine builds it once per topology and passes it to the tree-verify
+# executable as a runtime input.
+
+def tree_topology_id(widths):
+    """Canonical topology id shared with the Rust engine
+    (masking/tree.rs TreeTopology::id): "chain<K>" for all-ones profiles,
+    "w<w1>x<w2>x.." otherwise. Used in executable names and the manifest
+    `topology` field — the two sides must agree byte-for-byte."""
+    if all(w == 1 for w in widths):
+        return f"chain{len(widths)}"
+    return "w" + "x".join(str(w) for w in widths)
+
+
+def tree_parents(widths):
+    """Parent id per node (ids 1..N level-major; root = 0).
+
+    Returns an int list of length N where entry i-1 is node i's parent."""
+    parents = []
+    prev_start, prev_w = 0, 1
+    for d, w in enumerate(widths):
+        assert w >= 1, f"zero-width tree level in {widths}"
+        level_start = len(parents) + 1
+        for j in range(w):
+            parents.append(0 if d == 0 else prev_start + (j % prev_w))
+        prev_start, prev_w = level_start, w
+    return parents
+
+
+def tree_depths(widths):
+    """Depth offset per CHUNK slot: [0, depth_1 .. depth_N] (root included).
+
+    Slot j's RoPE position at serve time is cache_len + tree_depths[j]."""
+    out = [0]
+    for d, w in enumerate(widths):
+        out.extend([d + 1] * w)
+    return out
+
+
+def tree_ancestor_mask(widths):
+    """Cross-node causal mask over the verify chunk: bool [N+1, N+1] where
+    entry (i, j) allows chunk slot i to attend chunk slot j iff j is an
+    ancestor-or-self of i. For widths == [1]*K this is exactly the lower
+    triangle (chain verification)."""
+    parents = tree_parents(widths)
+    n = len(parents) + 1
+    mask = np.zeros((n, n), dtype=bool)
+    for i in range(n):
+        cur = i
+        while True:
+            mask[i, cur] = True
+            if cur == 0:
+                break
+            cur = parents[cur - 1]
+    return mask

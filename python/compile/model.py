@@ -79,7 +79,8 @@ def target_loss(params, cfg: TargetConfig, tokens):
 # Shared serving forward over a token chunk with explicit KV cache
 # ---------------------------------------------------------------------------
 
-def _chunk_forward(params, cfg: TargetConfig, tokens, start, kv, key_limit):
+def _chunk_forward(params, cfg: TargetConfig, tokens, start, kv, key_limit,
+                   pos_offsets=None, chunk_mask=None):
     """Run a [B, T] token chunk at per-batch offset `start` against the cache.
 
     tokens: [B, T] int32; start: [B] int32 (chunk position offsets);
@@ -88,16 +89,33 @@ def _chunk_forward(params, cfg: TargetConfig, tokens, start, kv, key_limit):
     the cache *before* attention, so chunk-causal structure is expressed
     through key_limit too).
 
+    Tree chunks break both linearities: `pos_offsets` ([T] int32) replaces
+    the implicit arange for RoPE (slot j's position is start + depth(j), not
+    start + j), and `chunk_mask` (bool [T, T]) ORs chunk-internal
+    attendability on top of key_limit (slot i may attend the cache slot
+    holding chunk slot j iff chunk_mask[i, j] — the cross-node ancestor
+    mask). Chain verification is the degenerate case pos_offsets=arange,
+    chunk_mask=tril (expressed through key_limit instead).
+
     Returns (features [B,T,3d], logits [B,T,V], new_kv).
     """
     L, H, Dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
     B, T = tokens.shape
     x = params["embed"][tokens]
-    positions = start[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    offs = (jnp.arange(T, dtype=jnp.int32) if pos_offsets is None
+            else jnp.asarray(pos_offsets, jnp.int32))
+    positions = start[:, None] + offs[None, :]
 
     key_pos = jnp.arange(S_MAX, dtype=jnp.int32)
     # [B, T, S_MAX] -> [B, 1, T, S_MAX]
     allow = key_pos[None, None, :] < key_limit[:, :, None]
+    if chunk_mask is not None:
+        # cache slot q holds chunk slot q - start[b] (the verify scatter
+        # below writes chunk slot j at start + j)
+        q_rel = key_pos[None, :] - start[:, None]              # [B, S_MAX]
+        in_chunk = (q_rel >= 0) & (q_rel < T)
+        gathered = chunk_mask[:, jnp.clip(q_rel, 0, T - 1)]    # [T, B, S_MAX]
+        allow = allow | (jnp.transpose(gathered, (1, 0, 2)) & in_chunk[:, None, :])
     bias = mask_to_bias(allow)[:, None]
 
     taps = {i: None for i in cfg.feature_layers}
@@ -181,6 +199,36 @@ def verify(params, cfg: TargetConfig, chunk, cache_len, kv):
     key_limit = (cache_len[:, None]
                  + jnp.arange(1, T + 1, dtype=jnp.int32)[None, :])
     feats, logits, new_kv = _chunk_forward(params, cfg, chunk, start, kv, key_limit)
+    return logits, feats, new_kv
+
+
+def verify_tree(params, cfg: TargetConfig, chunk, cache_len, kv, tree_mask,
+                depths):
+    """One-pass tree verification of a chunk [root, node_1 .. node_N].
+
+    chunk: [B, N+1] int32 in chunk-slot order (slot 0 = last committed
+    token, slots 1..N the draft-tree nodes, level-major); cache_len: [B]
+    int32; tree_mask: [N+1, N+1] int32 runtime input — the cross-node
+    ancestor mask (1 = slot i may attend slot j), built once per topology by
+    `masks.tree_ancestor_mask` (Python) / `masking::tree` (Rust);
+    depths: STATIC per-slot depth offsets (`masks.tree_depths(widths)`),
+    baked into the lowered HLO — slot j's RoPE position is
+    cache_len + depths[j], so an accepted path's entries stay RoPE-valid
+    after the engine compacts them to contiguous cache positions.
+
+    Every chunk slot also attends all committed cache positions
+    (q < cache_len). Returns (logits [B,N+1,V], feats [B,N+1,3d], new_kv);
+    logits[:, j] is the target distribution for the token AFTER chunk slot j
+    — the verification signal for slot j's children and the bonus sample.
+
+    With depths = arange(N+1) and a lower-triangular mask this reproduces
+    `verify` exactly (chain = degenerate tree; see tests/test_tree.py).
+    """
+    B, T = chunk.shape
+    key_limit = jnp.broadcast_to(cache_len[:, None], (B, T))
+    feats, logits, new_kv = _chunk_forward(
+        params, cfg, chunk, cache_len, kv, key_limit,
+        pos_offsets=depths, chunk_mask=tree_mask != 0)
     return logits, feats, new_kv
 
 

@@ -1,0 +1,225 @@
+"""Tree-structured speculation: topology helpers, one-pass tree verification,
+and parallel tree drafting.
+
+The two load-bearing properties:
+  * chain-as-degenerate-tree — widths (1,)*K must reproduce the chain path
+    (verify / draft_pe) exactly, which is what lets the Rust engine treat
+    chain decoding as a topology choice;
+  * path consistency — the tree-verify logits at node j must equal a plain
+    chained verify over j's root path, i.e. one tree pass really does verify
+    every branch as if it were decoded linearly.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import TARGETS, TREE_TOPOLOGIES, get_drafter
+from compile.drafter import draft_pe, draft_pe_tree, init_drafter
+from compile.masks import (
+    tree_ancestor_mask,
+    tree_depths,
+    tree_parents,
+    tree_topology_id,
+)
+from compile.model import init_target, prefill, verify, verify_tree, zero_kv
+
+
+# ---------------------------------------------------------------------------
+# topology helpers
+# ---------------------------------------------------------------------------
+
+def test_tree_parents_level_major_round_robin():
+    # widths [3, 2]: nodes 1..3 at depth 1 (parent 0), nodes 4, 5 at depth 2
+    # attached round-robin to nodes 1 and 2
+    assert tree_parents([3, 2]) == [0, 0, 0, 1, 2]
+    assert tree_parents([1, 1, 1]) == [0, 1, 2]
+    assert tree_depths([3, 2]) == [0, 1, 1, 1, 2, 2]
+
+
+def test_tree_parents_precede_children():
+    for widths in [[1], [2, 2, 1], [3, 2, 1, 1, 1], [1, 3, 2]]:
+        parents = tree_parents(widths)
+        for i, p in enumerate(parents, start=1):
+            assert p < i, (widths, i, p)
+
+
+def test_chain_ancestor_mask_is_lower_triangular():
+    m = tree_ancestor_mask([1, 1, 1, 1])
+    np.testing.assert_array_equal(m, np.tril(np.ones((5, 5), bool)))
+
+
+def test_ancestor_mask_matches_paths():
+    widths = [2, 2, 1]
+    parents = tree_parents(widths)
+    m = tree_ancestor_mask(widths)
+    n = len(parents) + 1
+    for i in range(n):
+        path, cur = set(), i
+        while True:
+            path.add(cur)
+            if cur == 0:
+                break
+            cur = parents[cur - 1]
+        for j in range(n):
+            assert m[i, j] == (j in path), (i, j)
+
+
+def test_topology_id_matches_rust_convention():
+    assert tree_topology_id([1, 1, 1, 1, 1]) == "chain5"
+    assert tree_topology_id([3, 2, 1, 1, 1]) == "w3x2x1x1x1"
+    for topo in TREE_TOPOLOGIES:
+        assert tree_topology_id(topo)  # well-formed for every registered one
+
+
+# ---------------------------------------------------------------------------
+# tree verification
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tm():
+    cfg = TARGETS["target-m"]
+    params = init_target(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def toks(rng, shape):
+    return jnp.asarray(rng.integers(4, 250, size=shape), jnp.int32)
+
+
+def prefilled(cfg, params, rng, plen=14):
+    prompt = np.zeros((1, 24), np.int32)
+    prompt[:, :plen] = np.asarray(toks(rng, (1, plen)))
+    kv = zero_kv(cfg, 1)
+    _, _, kv = prefill(params, cfg, jnp.asarray(prompt),
+                       jnp.asarray([plen], jnp.int32), kv)
+    return kv, plen
+
+
+def test_verify_tree_chain_equals_verify(tm):
+    """Degenerate chain tree: tril mask + arange depths == plain verify."""
+    cfg, p = tm
+    rng = np.random.default_rng(5)
+    kv, plen = prefilled(cfg, p, rng)
+    k = 5
+    chunk = toks(rng, (1, k + 1))
+    clen = jnp.asarray([plen], jnp.int32)
+
+    l_ref, f_ref, kv_ref = verify(p, cfg, chunk, clen, kv)
+    mask = jnp.asarray(tree_ancestor_mask([1] * k), jnp.int32)
+    depths = tuple(tree_depths([1] * k))
+    l_tree, f_tree, kv_tree = verify_tree(p, cfg, chunk, clen, kv, mask, depths)
+
+    np.testing.assert_allclose(np.asarray(l_tree), np.asarray(l_ref),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(f_tree), np.asarray(f_ref),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(kv_tree), np.asarray(kv_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_verify_tree_rows_match_linear_path_verify(tm):
+    """Path consistency: node j's tree-verify logits equal a chained verify
+    over [root, path tokens] at row depth(j) — for every node of a branching
+    topology. This is what makes one-pass tree verification sound."""
+    cfg, p = tm
+    rng = np.random.default_rng(6)
+    kv, plen = prefilled(cfg, p, rng)
+    widths = [2, 2, 1]
+    parents = tree_parents(widths)
+    depths = tree_depths(widths)
+    n = len(parents)
+    chunk = toks(rng, (1, n + 1))
+    clen = jnp.asarray([plen], jnp.int32)
+    mask = jnp.asarray(tree_ancestor_mask(widths), jnp.int32)
+    l_tree, _, _ = verify_tree(p, cfg, chunk, clen, kv, mask, tuple(depths))
+
+    chunk_np = np.asarray(chunk)
+    for j in range(n + 1):
+        # root path of chunk slot j, root-first
+        path, cur = [], j
+        while cur != 0:
+            path.append(cur)
+            cur = parents[cur - 1]
+        path = [0] + path[::-1]
+        lin = jnp.asarray(chunk_np[:, path], jnp.int32)
+        l_lin, _, _ = verify(p, cfg, lin, clen, kv)
+        np.testing.assert_allclose(
+            np.asarray(l_tree[0, j]), np.asarray(l_lin[0, len(path) - 1]),
+            atol=2e-4, rtol=2e-4,
+            err_msg=f"node {j} (path {path}) diverges from linear verify")
+
+
+def test_verify_tree_isolates_sibling_branches(tm):
+    """A node's logits must not depend on tokens in OTHER branches — mutate a
+    sibling subtree and check the untouched branch's rows are unchanged."""
+    cfg, p = tm
+    rng = np.random.default_rng(7)
+    kv, plen = prefilled(cfg, p, rng)
+    widths = [2, 2]
+    depths = tuple(tree_depths(widths))
+    mask = jnp.asarray(tree_ancestor_mask(widths), jnp.int32)
+    clen = jnp.asarray([plen], jnp.int32)
+    a = np.asarray(toks(rng, (1, 5)))
+    b = a.copy()
+    b[0, 2] = (a[0, 2] + 50) % 250 + 4  # node 2 (the sibling branch root)
+    b[0, 4] = (a[0, 4] + 50) % 250 + 4  # node 4 (child of node 2)
+    la, _, _ = verify_tree(p, cfg, jnp.asarray(a), clen, kv, mask, depths)
+    lb, _, _ = verify_tree(p, cfg, jnp.asarray(b), clen, kv, mask, depths)
+    # branch {0, 1, 3} (root, node 1, its child node 3) is unperturbed
+    for j in [0, 1, 3]:
+        np.testing.assert_allclose(np.asarray(la[0, j]), np.asarray(lb[0, j]),
+                                   atol=1e-5, rtol=1e-5, err_msg=f"row {j}")
+    # sanity: the mutated branch did change
+    assert not np.allclose(np.asarray(la[0, 2]), np.asarray(lb[0, 2]))
+
+
+# ---------------------------------------------------------------------------
+# tree drafting
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dm(tm):
+    tcfg, _ = tm
+    dcfg = get_drafter("target-m-pe4")
+    params = init_drafter(jax.random.PRNGKey(3), dcfg, tcfg)
+    return dcfg, tcfg, params
+
+
+def draft_inputs(tcfg, rng, c=8):
+    ct = toks(rng, (2, c))
+    cf = jnp.asarray(rng.normal(size=(2, c, tcfg.feature_dim)), jnp.float32)
+    p0 = jnp.asarray([c - 1, c + 3], jnp.int32)
+    return ct, cf, p0
+
+
+def test_draft_pe_tree_chain_equals_draft_pe(dm):
+    dcfg, tcfg, dp = dm
+    rng = np.random.default_rng(8)
+    ct, cf, p0 = draft_inputs(tcfg, rng)
+    chain = draft_pe(dp, dcfg, ct, cf, p0, 5, attn_impl="jnp")
+    tree = draft_pe_tree(dp, dcfg, ct, cf, p0, (1,) * 5, attn_impl="jnp")
+    np.testing.assert_array_equal(np.asarray(chain), np.asarray(tree))
+
+
+def test_draft_pe_tree_levels_are_depth_topk(dm):
+    """Level-major output: each level's tokens are that depth's top-w chain
+    candidates, rank order, distinct within the level — and rank 0 of every
+    level is the chain draft."""
+    dcfg, tcfg, dp = dm
+    rng = np.random.default_rng(9)
+    ct, cf, p0 = draft_inputs(tcfg, rng)
+    widths = (3, 2, 1)
+    tree = np.asarray(draft_pe_tree(dp, dcfg, ct, cf, p0, widths,
+                                    attn_impl="jnp"))
+    assert tree.shape == (2, sum(widths))
+    chain = np.asarray(draft_pe(dp, dcfg, ct, cf, p0, len(widths),
+                                attn_impl="jnp"))
+    off = 0
+    for d, w in enumerate(widths):
+        level = tree[:, off:off + w]
+        for b in range(level.shape[0]):
+            assert len(set(level[b])) == w, f"depth {d+1} tokens not distinct"
+            assert level[b, 0] == chain[b, d], f"rank-0 != chain at depth {d+1}"
+        off += w

@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
                     let mut occ = 0f64;
                     for (di, ds) in datasets.iter().enumerate() {
                         let run = bench_otps(&mut mr, &format!("{target}-{method}"),
-                                             ds, k, c, total, max_new, 99, mixed)?;
+                                             ds, k, c, total, max_new, 99, mixed, None)?;
                         if method == "ar" {
                             ar_best[di] = ar_best[di].max(run.otps);
                         }

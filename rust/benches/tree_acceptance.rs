@@ -1,0 +1,67 @@
+//! Chain-vs-tree acceptance length — the EAGLE-3 argument at mini scale.
+//!
+//! Same drafter, same workload seed, same per-step depth budget: a K-chain
+//! verifies one candidate continuation per step, a static draft tree
+//! verifies every sibling branch of the same depth in the SAME single
+//! target pass (cross-node ancestor mask, masking/tree.rs). Because every
+//! lowered tree embeds the rank-0 chain, its acceptance length can only
+//! match or beat the chain's — the delta column is the speed headroom tree
+//! speculation buys before any kernel work.
+//!
+//!     cargo bench --bench tree_acceptance [-- --quick]
+//!
+//! Topologies must exist in the manifest (configs.TREE_TOPOLOGIES — rebuild
+//! artifacts after adding profiles). Reports AL, OTPS, and the tree's
+//! accepted-path KV commit overhead.
+
+use p_eagle::masking::TreeTopology;
+use p_eagle::report::compare_chain_tree;
+use p_eagle::runtime::ModelRuntime;
+use p_eagle::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (reqs, max_new) = if quick { (4usize, 48) } else { (8usize, 64) };
+    let mut mr = ModelRuntime::load("artifacts")?;
+    let drafter = "target-m-pe4";
+    let datasets = ["humaneval", "mtbench", "gsm8k"];
+    let tree = TreeTopology::from_widths(&[3, 2, 1, 1, 1]);
+
+    println!(
+        "=== chain vs tree acceptance — {drafter}, {} ({} nodes, depth {}), \
+         C=2, {reqs} requests/cell ===\n",
+        tree.id(),
+        tree.len(),
+        tree.max_depth()
+    );
+    let mut tab = Table::new(&[
+        "dataset", "chain AL", "tree AL", "ΔAL", "chain OTPS", "tree OTPS", "commit",
+    ]);
+    for ds in datasets {
+        let (chain, treed) =
+            compare_chain_tree(&mut mr, drafter, ds, &tree, 2, reqs, max_new, 99, false)?;
+        assert!(
+            treed.acceptance_length + 1e-9 >= chain.acceptance_length,
+            "{ds}: tree AL {:.3} < chain AL {:.3} — the rank-0 chain embedding \
+             guarantee is broken",
+            treed.acceptance_length,
+            chain.acceptance_length
+        );
+        tab.row(vec![
+            ds.into(),
+            format!("{:.2}", chain.acceptance_length),
+            format!("{:.2}", treed.acceptance_length),
+            format!("{:+.2}", treed.acceptance_length - chain.acceptance_length),
+            format!("{:.0}", chain.otps),
+            format!("{:.0}", treed.otps),
+            format!("{:?}", treed.metrics.commit_time),
+        ]);
+    }
+    tab.print();
+    println!(
+        "\ntree verifies {}x the candidates of the chain per step at one extra \
+         mask input; AL >= chain is asserted per cell",
+        tree.len() as f64 / tree.max_depth() as f64
+    );
+    Ok(())
+}

@@ -84,6 +84,7 @@ fn main() -> anyhow::Result<()> {
                 batch: 1,
                 max_new_tokens: 16,
                 sampling: Sampling::Greedy,
+                tree: None,
                 seed: 5,
             };
             let spec = p_eagle::workload::RequestSpec {

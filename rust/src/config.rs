@@ -37,11 +37,14 @@ pub struct DrafterInfo {
 pub struct ExecutableInfo {
     pub name: String,
     pub path: String,
-    pub kind: String, // prefill | verify | draft | selftest
+    pub kind: String, // prefill | verify | draft | verify-tree | draft-tree | selftest
     pub model: Option<String>,
     pub drafter: Option<String>,
     pub batch: Option<usize>,
+    /// chain depth K for chain executables; node count N for tree ones
     pub k: Option<usize>,
+    /// static tree topology id (e.g. "chain5", "w3x2x1") for *-tree kinds
+    pub topology: Option<String>,
 }
 
 #[derive(Debug)]
@@ -138,6 +141,7 @@ impl Manifest {
                 drafter: e.get("drafter").and_then(|x| x.as_str()).map(String::from),
                 batch: e.get("batch").and_then(|x| x.as_usize()),
                 k: e.get("k").and_then(|x| x.as_usize()),
+                topology: e.get("topology").and_then(|x| x.as_str()).map(String::from),
             })
             .collect();
 
@@ -209,6 +213,36 @@ impl Manifest {
             })
             .ok_or_else(|| {
                 anyhow!("no executable kind={kind} model={model:?} drafter={drafter:?} b={batch:?} k={k:?}")
+            })
+    }
+
+    /// Tree executables carry an extra `topology` id next to the usual keys
+    /// (the static tree is baked into the lowered HLO; the id must match the
+    /// [`TreeTopology::id`](crate::masking::TreeTopology::id) the engine was
+    /// configured with).
+    pub fn find_exec_tree(
+        &self,
+        kind: &str,
+        model: Option<&str>,
+        drafter: Option<&str>,
+        batch: Option<usize>,
+        topology: &str,
+    ) -> Result<&ExecutableInfo> {
+        self.executables
+            .iter()
+            .find(|e| {
+                e.kind == kind
+                    && (model.is_none() || e.model.as_deref() == model)
+                    && (drafter.is_none() || e.drafter.as_deref() == drafter)
+                    && (batch.is_none() || e.batch == batch)
+                    && e.topology.as_deref() == Some(topology)
+            })
+            .ok_or_else(|| {
+                anyhow!(
+                    "no executable kind={kind} model={model:?} drafter={drafter:?} \
+                     b={batch:?} topology={topology:?} — rebuild artifacts with tree \
+                     lowering (python/compile/aot.py, TREE_TOPOLOGIES)"
+                )
             })
     }
 

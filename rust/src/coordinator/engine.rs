@@ -16,6 +16,19 @@
 //! P-EAGLE single-pass parallel drafter — the engine logic is identical,
 //! which is exactly the paper's deployment story (a drop-in drafter swap in
 //! vLLM's continuously batched engine).
+//!
+//! Speculation *shape* is data too: with [`EngineConfig::tree`] set, each
+//! step drafts a static N-node token tree and verifies it in ONE target
+//! pass using the precomputed cross-node ancestor mask
+//! ([`crate::masking::tree`]). Acceptance generalizes from prefix-of-chain
+//! to longest-accepted-root-path ([`super::sampler::accept_tree`]), and the
+//! KV cache commits only the accepted path: tree chunks scatter K/V at
+//! `base + chunk_slot`, so a non-contiguous accepted path is compacted
+//! through the host ([`crate::runtime::compact_kv_path`], one shared
+//! download/upload per step, tracked as `EngineMetrics::commit_time`). The
+//! chain-shaped topology (`TreeTopology::chain(k)`) takes the exact same
+//! code path but never needs compaction, and is byte-identical to classic
+//! chain decoding (`tree: None`).
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -25,8 +38,11 @@ use anyhow::{bail, Result};
 use super::kv_cache::SlotManager;
 use super::metrics::EngineMetrics;
 use super::request::{FinishReason, RequestResult, RequestSpec};
-use super::sampler::{accept_chain, sample, Sampling};
-use crate::runtime::{splice_kv_row, DraftExec, HostTensor, ModelRuntime, TargetExec};
+use super::sampler::{accept_chain, accept_tree, sample, Sampling};
+use crate::masking::TreeTopology;
+use crate::runtime::{
+    compact_kv_path, splice_kv_row, DraftExec, HostTensor, ModelRuntime, TargetExec,
+};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -34,6 +50,7 @@ pub struct EngineConfig {
     pub target: String,
     /// manifest drafter name (e.g. "target-m-pe4" or "target-m-ar")
     pub drafter: String,
+    /// chain speculation depth (ignored when `tree` is set)
     pub k: usize,
     /// engine width == executable batch size (KV slots)
     pub batch: usize,
@@ -42,6 +59,11 @@ pub struct EngineConfig {
     pub max_new_tokens: usize,
     pub sampling: Sampling,
     pub seed: u64,
+    /// tree-structured speculation: draft/verify this static topology each
+    /// step instead of a linear K-chain. `None` = classic chain decoding;
+    /// `Some(TreeTopology::chain(k))` is the degenerate tree and must emit
+    /// byte-identical tokens (integration-tested).
+    pub tree: Option<TreeTopology>,
 }
 
 /// One streamed engine occurrence, in emission order within a step.
@@ -145,6 +167,10 @@ pub struct EngineCore {
     pad_id: i32,
     eos_id: i32,
     kv: xla::PjRtBuffer,
+    /// draft width per step: tree node count N, or chain depth K
+    n_draft: usize,
+    /// precomputed cross-node ancestor mask ([N+1, N+1] i32), tree mode only
+    tree_mask: Option<HostTensor>,
     slots: Vec<Option<ActiveSlot>>,
     slotmgr: SlotManager,
     queue: VecDeque<(RequestSpec, Instant)>,
@@ -155,26 +181,43 @@ pub struct EngineCore {
 impl EngineCore {
     /// Build an engine of width `cfg.batch`: loads/compiles exactly the
     /// executables the step loop runs (batch-wide verify, batch-1 admission
-    /// prefill, batch-wide drafter) and allocates the shared zeroed KV
-    /// buffer.
+    /// prefill, batch-wide drafter — the tree-shaped variants when
+    /// `cfg.tree` is set), allocates the shared zeroed KV buffer, and in
+    /// tree mode builds the cross-node ancestor mask ONCE for the engine's
+    /// lifetime.
     pub fn new(mr: &mut ModelRuntime, cfg: EngineConfig) -> Result<EngineCore> {
         let b = cfg.batch;
         if b == 0 {
             bail!("engine width must be >= 1");
         }
-        let te = mr.ensure_verify(&cfg.target, b, cfg.k)?;
+        let (te, de, n_draft, tree_mask) = match &cfg.tree {
+            Some(tree) => {
+                let te = mr.ensure_verify_tree(&cfg.target, b, tree)?;
+                let de = mr.ensure_drafter_tree(&cfg.drafter, b, tree)?;
+                let m = tree.build_mask();
+                let mask = HostTensor::i32(&[m.n, m.n], m.to_i32());
+                (te, de, tree.len(), Some(mask))
+            }
+            None => (
+                mr.ensure_verify(&cfg.target, b, cfg.k)?,
+                mr.ensure_drafter(&cfg.drafter, b, cfg.k)?,
+                cfg.k,
+                None,
+            ),
+        };
         let te1 = mr.ensure_prefill(&cfg.target, 1)?;
-        let de = mr.ensure_drafter(&cfg.drafter, b, cfg.k)?;
         let info = mr.manifest.target(&cfg.target)?;
         let fdim = info.feature_dim;
         let kv = mr.zero_kv(&cfg.target, b)?;
         let kv1_zero = mr.zero_kv(&cfg.target, 1)?;
-        let slotmgr = SlotManager::new(b, mr.manifest.s_max, cfg.k + 1);
+        let slotmgr = SlotManager::new(b, mr.manifest.s_max, n_draft + 1);
         let mut slots = Vec::with_capacity(b);
         slots.resize_with(b, || None);
+        // AL ceiling = max accepted path + bonus: tree depth (or K) + 1
+        let al_max = cfg.tree.as_ref().map(|t| t.max_depth()).unwrap_or(cfg.k);
         Ok(EngineCore {
             rng: Rng::new(cfg.seed ^ 0xE4617E),
-            metrics: EngineMetrics::new(cfg.k),
+            metrics: EngineMetrics::new(al_max),
             te,
             te1,
             de,
@@ -186,6 +229,8 @@ impl EngineCore {
             pad_id: mr.manifest.pad_id,
             eos_id: mr.manifest.eos_id,
             kv,
+            n_draft,
+            tree_mask,
             slots,
             slotmgr,
             queue: VecDeque::new(),
@@ -204,11 +249,11 @@ impl EngineCore {
         if plen < self.ctx {
             bail!("request {}: prompt len {plen} < ctx_window {}", spec.id, self.ctx);
         }
-        if plen + self.cfg.k + 1 > self.slotmgr.s_max {
+        if plen + self.slotmgr.chunk > self.slotmgr.s_max {
             bail!(
                 "request {}: prompt len {plen} + chunk {} > s_max {}",
                 spec.id,
-                self.cfg.k + 1,
+                self.slotmgr.chunk,
                 self.slotmgr.s_max
             );
         }
@@ -393,6 +438,12 @@ impl EngineCore {
     /// whatever finished. Free rows run inert masked inputs and are skipped
     /// on the host side; their outputs are ignored and their KV rows are
     /// fully overwritten at the next admission.
+    ///
+    /// In tree mode the drafter emits N node tokens, verification scores
+    /// the whole tree in one pass against the precomputed ancestor mask,
+    /// and only the longest accepted root path is committed to the KV cache
+    /// (non-contiguous paths are compacted through the host — ONE shared
+    /// download/upload per step regardless of how many slots need it).
     pub fn step(&mut self, mr: &mut ModelRuntime) -> Result<StepReport> {
         let mut events = Vec::new();
         let admitted = self.admit_pending(mr, &mut events)?;
@@ -400,7 +451,7 @@ impl EngineCore {
         self.evict_finished(&mut events);
 
         let b = self.cfg.batch;
-        let k = self.cfg.k;
+        let n = self.n_draft; // tree nodes, or chain depth K
         let occupied = self.occupied();
         if occupied == 0 {
             return Ok(StepReport { events, admitted, occupied });
@@ -432,23 +483,24 @@ impl EngineCore {
         self.metrics.draft_time += t1.elapsed();
         let draft_toks = drafts.as_i32()?;
 
-        // --- verify chunk = [last_tok, d_1..d_K]; masked rows all-PAD -----
-        let mut chunk_buf = vec![self.pad_id; b * (k + 1)];
+        // --- verify chunk = [last_tok, node_1..node_N]; masked rows PAD ---
+        let mut chunk_buf = vec![self.pad_id; b * (n + 1)];
         for (i, s) in self.slots.iter().enumerate() {
             if let Some(s) = s {
-                chunk_buf[i * (k + 1)] = s.last_tok;
-                chunk_buf[i * (k + 1) + 1..(i + 1) * (k + 1)]
-                    .copy_from_slice(&draft_toks[i * k..(i + 1) * k]);
+                chunk_buf[i * (n + 1)] = s.last_tok;
+                chunk_buf[i * (n + 1) + 1..(i + 1) * (n + 1)]
+                    .copy_from_slice(&draft_toks[i * n..(i + 1) * n]);
+                self.slotmgr.begin_spec(i); // chunk KV lands in scratch
             }
         }
         let cache_len = self.slotmgr.cache_len_i32();
         let t2 = Instant::now();
-        let ver = mr.verify(
-            &self.te,
-            &HostTensor::i32(&[b, k + 1], chunk_buf),
-            &HostTensor::i32(&[b], cache_len.clone()),
-            &self.kv,
-        )?;
+        let chunk_t = HostTensor::i32(&[b, n + 1], chunk_buf);
+        let clen_t = HostTensor::i32(&[b], cache_len.clone());
+        let ver = match &self.tree_mask {
+            Some(mask) => mr.verify_tree(&self.te, &chunk_t, &clen_t, mask, &self.kv)?,
+            None => mr.verify(&self.te, &chunk_t, &clen_t, &self.kv)?,
+        };
         self.metrics.verify_time += t2.elapsed();
         self.kv = ver.kv;
         let logits = ver.logits.as_f32()?;
@@ -458,30 +510,41 @@ impl EngineCore {
         let th2 = Instant::now();
         let vocab = self.vocab;
         let mut emitted_now = vec![0usize; b];
+        // slots whose committed path is non-contiguous: (slot, base, path)
+        let mut to_compact: Vec<(usize, usize, Vec<usize>)> = Vec::new();
         for (i, s) in self.slots.iter_mut().enumerate() {
             let Some(s) = s.as_mut() else { continue };
-            let rows: Vec<&[f32]> = (0..=k)
+            let rows: Vec<&[f32]> = (0..=n)
                 .map(|j| {
-                    let off = (i * (k + 1) + j) * vocab;
+                    let off = (i * (n + 1) + j) * vocab;
                     &logits[off..off + vocab]
                 })
                 .collect();
-            let acc = accept_chain(
-                &draft_toks[i * k..(i + 1) * k],
-                &rows,
-                self.cfg.sampling,
-                &mut self.rng,
-            );
+            let slot_drafts = &draft_toks[i * n..(i + 1) * n];
+            // accepted path as chunk-slot ids (chain: the identity prefix)
+            let (path, emitted) = match &self.cfg.tree {
+                Some(tree) => {
+                    let a = accept_tree(tree, slot_drafts, &rows, self.cfg.sampling, &mut self.rng);
+                    (a.accepted_path, a.emitted)
+                }
+                None => {
+                    let a = accept_chain(slot_drafts, &rows, self.cfg.sampling, &mut self.rng);
+                    ((1..=a.n_accepted).collect(), a.emitted)
+                }
+            };
             let q = cache_len[i] as usize; // chunk start = pos of last_tok
             s.iterations += 1;
-            s.accepted_sum += acc.emitted.len();
+            s.accepted_sum += emitted.len();
 
-            let mut step_toks = Vec::with_capacity(acc.emitted.len());
-            for (m, &tok) in acc.emitted.iter().enumerate() {
-                let p = q + m + 1; // absolute position of this token
+            let mut step_toks = Vec::with_capacity(emitted.len());
+            for (m, &tok) in emitted.iter().enumerate() {
+                let p = q + m + 1; // absolute (compacted) position
                 s.generated.push(tok);
                 step_toks.push(tok);
-                let foff = (i * (k + 1) + m) * fdim;
+                // features of this token's predecessor: the accepted node
+                // that drafted position p - 1 (the root for m == 0)
+                let pred = if m == 0 { 0 } else { path[m - 1] };
+                let foff = (i * (n + 1) + pred) * fdim;
                 s.push_ctx(tok, &feats[foff..foff + fdim], fdim);
                 s.last_tok = tok;
                 s.pos_last = p;
@@ -495,13 +558,32 @@ impl EngineCore {
                 }
             }
             emitted_now[i] = step_toks.len();
-            if !self.slotmgr.advance(i, step_toks.len()) && s.finished.is_none() {
+            // commit root + the accepted nodes actually kept (truncation at
+            // EOS/length only happens when the request finishes)
+            if !self.slotmgr.commit_spec(i, step_toks.len()) && s.finished.is_none() {
                 s.finished = Some(FinishReason::CacheFull);
+            }
+            if s.finished.is_none() {
+                let kept = step_toks.len().saturating_sub(1).min(path.len());
+                if !path[..kept].iter().enumerate().all(|(j, &node)| node == j + 1) {
+                    to_compact.push((i, q, path[..kept].to_vec()));
+                }
             }
             events.push(EngineEvent::Tokens { id: s.spec.id, tokens: step_toks });
         }
         self.metrics.host_time += th2.elapsed();
         self.metrics.record_iteration(&emitted_now);
+
+        // --- accepted-path KV compaction (tree mode, non-contiguous paths)
+        if !to_compact.is_empty() {
+            let tc = Instant::now();
+            let mut host = mr.rt.download(&self.kv)?;
+            for (slot, base, path) in &to_compact {
+                compact_kv_path(&mut host, *slot, *base, path)?;
+            }
+            self.kv = mr.rt.upload(&host)?;
+            self.metrics.commit_time += tc.elapsed();
+        }
 
         self.evict_finished(&mut events);
         Ok(StepReport { events, admitted, occupied })

@@ -1,26 +1,39 @@
 //! KV-cache slot accounting.
 //!
-//! The dense engine-wide cache buffer (shape [L, 2, B, S_MAX, H, Dh]) lives
-//! on the PJRT device and is threaded through verify calls; this module owns
-//! the *accounting*: per-slot valid lengths with independent claim/release
-//! lifecycles (slots are claimed at different prefill lengths as the stepped
-//! engine admits mid-flight), capacity admission (a slot must always fit
-//! prompt + chunk writes), and a vLLM-style paged utilization view
-//! (BLOCK_SIZE-token blocks) used by metrics and admission policy.
+//! The dense engine-wide cache buffer (shape `[L, 2, B, S_MAX, H, Dh]`)
+//! lives on the PJRT device and is threaded through verify calls; this
+//! module owns the *accounting*: per-slot valid lengths with independent
+//! claim/release lifecycles (slots are claimed at different prefill lengths
+//! as the stepped engine admits mid-flight), capacity admission (a slot must
+//! always fit prompt + chunk writes), a speculative scratch region with an
+//! explicit commit/rollback lifecycle (tree verification keeps only the
+//! accepted root path of each chunk — see
+//! [`EngineCore::step`](super::engine::EngineCore::step)), and a vLLM-style
+//! paged utilization view (BLOCK_SIZE-token blocks) used by metrics and
+//! admission policy.
 
 pub const BLOCK_SIZE: usize = 16;
 
 #[derive(Clone, Debug)]
 pub struct SlotManager {
     pub s_max: usize,
-    pub chunk: usize, // K+1: widest write a verify step performs
+    pub chunk: usize, // N+1: widest write a verify step performs
     lens: Vec<usize>,
     active: Vec<bool>,
+    /// slots with an open speculative scratch region (positions
+    /// len .. len+chunk freshly written by a verify call, not yet committed)
+    specing: Vec<bool>,
 }
 
 impl SlotManager {
     pub fn new(batch: usize, s_max: usize, chunk: usize) -> SlotManager {
-        SlotManager { s_max, chunk, lens: vec![0; batch], active: vec![false; batch] }
+        SlotManager {
+            s_max,
+            chunk,
+            lens: vec![0; batch],
+            active: vec![false; batch],
+            specing: vec![false; batch],
+        }
     }
 
     pub fn batch(&self) -> usize {
@@ -44,15 +57,54 @@ impl SlotManager {
     /// Record `accepted + 1` new cached positions after a verify step.
     /// Returns false when the slot can no longer fit another chunk (the
     /// engine must finish the request — FinishReason::CacheFull).
+    /// Shorthand for [`begin_spec`](Self::begin_spec) +
+    /// [`commit_spec`](Self::commit_spec) (the chain path, where the chunk
+    /// prefix is the accepted path by construction).
     pub fn advance(&mut self, i: usize, emitted: usize) -> bool {
+        self.begin_spec(i);
+        self.commit_spec(i, emitted)
+    }
+
+    /// Open the speculative scratch region of slot `i`: a verify call is
+    /// about to write `chunk` fresh positions at `len .. len + chunk`. The
+    /// region is invisible to [`len`](Self::len)/[`cache_len_i32`](Self::cache_len_i32)
+    /// until committed — attention masks everything at or beyond `cache_len`,
+    /// so an uncommitted (or rolled-back) region is inert garbage.
+    pub fn begin_spec(&mut self, i: usize) {
         debug_assert!(self.active[i]);
-        debug_assert!(emitted <= self.chunk);
-        self.lens[i] += emitted;
+        debug_assert!(!self.specing[i], "slot {i}: speculation already open");
+        debug_assert!(self.lens[i] + self.chunk <= self.s_max);
+        self.specing[i] = true;
+    }
+
+    /// Commit the accepted prefix of slot `i`'s scratch region: `kept`
+    /// positions (root + accepted draft nodes, already compacted to be
+    /// contiguous) become part of the valid cache. Returns false when the
+    /// slot can no longer fit another chunk (the engine must finish the
+    /// request — FinishReason::CacheFull).
+    pub fn commit_spec(&mut self, i: usize, kept: usize) -> bool {
+        debug_assert!(self.specing[i], "slot {i}: commit without begin_spec");
+        debug_assert!(kept <= self.chunk);
+        self.specing[i] = false;
+        self.lens[i] += kept;
         self.lens[i] + self.chunk <= self.s_max
+    }
+
+    /// Abandon slot `i`'s scratch region entirely (commit nothing). The
+    /// written positions stay masked and are overwritten by the next chunk.
+    pub fn rollback_spec(&mut self, i: usize) {
+        debug_assert!(self.specing[i], "slot {i}: rollback without begin_spec");
+        self.specing[i] = false;
+    }
+
+    /// Whether slot `i` has an open (uncommitted) scratch region.
+    pub fn is_specing(&self, i: usize) -> bool {
+        self.specing[i]
     }
 
     pub fn release(&mut self, i: usize) {
         self.active[i] = false;
+        self.specing[i] = false;
         self.lens[i] = 0;
     }
 
@@ -82,7 +134,7 @@ impl SlotManager {
         self.blocks_used() as f64 / self.blocks_total() as f64
     }
 
-    /// cache_len vector for the verify executable ([B] i32). Inactive slots
+    /// cache_len vector for the verify executable (`[B]` i32). Inactive slots
     /// report 1 (a harmless minimal prefix) so padded rows stay in-bounds.
     pub fn cache_len_i32(&self) -> Vec<i32> {
         self.lens
@@ -141,6 +193,57 @@ mod tests {
         assert_eq!(m.blocks_used(), 3);
         assert_eq!(m.blocks_total(), 8);
         assert!((m.utilization() - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spec_commit_advances_by_kept_prefix() {
+        let mut m = SlotManager::new(2, 64, 6);
+        m.claim(0, 20).unwrap();
+        m.begin_spec(0);
+        assert!(m.is_specing(0));
+        // scratch region is invisible until committed
+        assert_eq!(m.len(0), 20);
+        assert_eq!(m.cache_len_i32(), vec![20, 1]);
+        assert!(m.commit_spec(0, 4));
+        assert!(!m.is_specing(0));
+        assert_eq!(m.len(0), 24);
+    }
+
+    #[test]
+    fn spec_rollback_commits_nothing() {
+        let mut m = SlotManager::new(1, 64, 6);
+        m.claim(0, 20).unwrap();
+        m.begin_spec(0);
+        m.rollback_spec(0);
+        assert!(!m.is_specing(0));
+        assert_eq!(m.len(0), 20);
+        // the slot is immediately reusable for the next chunk
+        m.begin_spec(0);
+        assert!(m.commit_spec(0, 6));
+        assert_eq!(m.len(0), 26);
+    }
+
+    #[test]
+    fn spec_commit_signals_capacity_like_advance() {
+        let mut m = SlotManager::new(1, 32, 6);
+        m.claim(0, 20).unwrap();
+        m.begin_spec(0);
+        assert!(m.commit_spec(0, 6)); // 26 + 6 = 32 <= 32 ✓
+        m.begin_spec(0);
+        assert!(!m.commit_spec(0, 1)); // 27 + 6 > 32
+    }
+
+    #[test]
+    fn release_clears_open_speculation() {
+        let mut m = SlotManager::new(1, 64, 6);
+        m.claim(0, 8).unwrap();
+        m.begin_spec(0);
+        m.release(0);
+        assert!(!m.is_specing(0));
+        // a fresh claim starts with a clean scratch lifecycle
+        m.claim(0, 8).unwrap();
+        m.begin_spec(0);
+        assert!(m.commit_spec(0, 2));
     }
 
     #[test]

@@ -24,6 +24,10 @@ pub struct EngineMetrics {
     pub verify_time: Duration,
     /// per-slot admission overhead: batch-1 prefill + KV row splice
     pub admission_time: Duration,
+    /// tree-mode accepted-path KV compaction (shared host round trip per
+    /// step when some slot's accepted path is non-contiguous; always zero
+    /// for chain decoding and chain-shaped trees)
+    pub commit_time: Duration,
     pub host_time: Duration,
     pub wall_time: Duration,
     pub request_latencies: Vec<Duration>,
@@ -124,6 +128,7 @@ impl EngineMetrics {
         self.draft_time += other.draft_time;
         self.verify_time += other.verify_time;
         self.admission_time += other.admission_time;
+        self.commit_time += other.commit_time;
         self.host_time += other.host_time;
         self.wall_time += other.wall_time;
         self.request_latencies.extend_from_slice(&other.request_latencies);
@@ -133,7 +138,7 @@ impl EngineMetrics {
     pub fn summary(&self) -> String {
         format!(
             "req={} tok={} iters={} AL={:.2} OTPS={:.0} occ={:.2} \
-             draft={:?} verify={:?} admit={:?}",
+             draft={:?} verify={:?} admit={:?} commit={:?}",
             self.requests_finished,
             self.tokens_emitted,
             self.iterations,
@@ -143,6 +148,7 @@ impl EngineMetrics {
             self.draft_time,
             self.verify_time,
             self.admission_time,
+            self.commit_time,
         )
     }
 }

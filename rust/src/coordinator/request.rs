@@ -1,4 +1,10 @@
-//! Request lifecycle types.
+//! Request lifecycle types: what a request IS once it leaves the workload
+//! generator ([`RequestSpec`], re-exported from `workload::arrivals`), why
+//! it stopped ([`FinishReason`]), and what the engine hands back
+//! ([`RequestResult`], including the per-request acceptance-length
+//! accounting the paper's AL metric is computed from). Everything here is
+//! engine-agnostic data — the serving server, scheduler, benches, and tests
+//! all speak these types.
 
 pub use crate::workload::RequestSpec;
 

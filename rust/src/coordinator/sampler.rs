@@ -1,4 +1,4 @@
-//! Token sampling + the speculative acceptance rule.
+//! Token sampling + the speculative acceptance rules (chain and tree).
 //!
 //! The engine runs greedy (argmax) verification — the paper's acceptance
 //! length metric is defined under chain drafting with greedy target
@@ -7,7 +7,16 @@
 //! (draft accepted iff it equals the sampled target token), which preserves
 //! the target distribution for greedy and is the chain special case of
 //! rejection sampling.
+//!
+//! [`accept_tree`] generalizes [`accept_chain`] to tree-structured drafts
+//! (EAGLE-3-style): it walks the longest root path of the draft tree whose
+//! node tokens match the target's sampled continuation, emitting the
+//! target's own token as the correction/bonus where the walk stops. A
+//! chain-shaped [`TreeTopology`] reproduces `accept_chain` token-for-token
+//! (property-tested below), which is what lets the engine treat the chain
+//! as the degenerate tree.
 
+use crate::masking::TreeTopology;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug)]
@@ -52,7 +61,7 @@ pub struct Acceptance {
 }
 
 /// Chain-drafting acceptance: target logits row i is the distribution for
-/// the token *after* chunk position i. Draft token d[i] is accepted while it
+/// the token *after* chunk position i. Draft token `d[i]` is accepted while it
 /// matches the target's token for that position; the first mismatch (or the
 /// end of the chain) contributes the target's own token as the bonus.
 pub fn accept_chain(
@@ -77,6 +86,59 @@ pub fn accept_chain(
     // all drafts accepted: bonus token from the last target row
     emitted.push(sample(target_rows[drafts.len()], s, rng));
     Acceptance { n_accepted, emitted }
+}
+
+/// Outcome of verifying one slot's draft TREE.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TreeAcceptance {
+    /// accepted node ids, root-path order (ids ascend; empty if the first
+    /// sampled target token matched no depth-1 node)
+    pub accepted_path: Vec<usize>,
+    /// tokens to emit this iteration: accepted path tokens + 1 bonus token
+    pub emitted: Vec<i32>,
+}
+
+impl TreeAcceptance {
+    pub fn n_accepted(&self) -> usize {
+        self.accepted_path.len()
+    }
+}
+
+/// Tree acceptance: walk the longest accepted root path.
+///
+/// `drafts[i - 1]` is the token drafted at tree node `i`; `target_rows[j]`
+/// (N+1 rows, chunk-slot order) is the target's distribution for the token
+/// *after* chunk slot `j`. Starting at the root, sample the target's token
+/// for the current node and descend into the child drafted with that exact
+/// token; where no child matches (or at a leaf) the target's own sample is
+/// emitted as the correction/bonus. Node tokens are distinct within a level
+/// (the drafter assigns distinct top-k ranks), so at most one child can
+/// match.
+pub fn accept_tree(
+    tree: &TreeTopology,
+    drafts: &[i32],
+    target_rows: &[&[f32]], // N+1 rows
+    s: Sampling,
+    rng: &mut Rng,
+) -> TreeAcceptance {
+    assert_eq!(drafts.len(), tree.len());
+    assert_eq!(target_rows.len(), tree.len() + 1);
+    let mut accepted_path = Vec::new();
+    let mut emitted = Vec::with_capacity(tree.max_depth() + 1);
+    let mut cur = 0usize; // chunk slot of the current path head (0 = root)
+    loop {
+        let t = sample(target_rows[cur], s, rng);
+        emitted.push(t);
+        let next = tree.children(cur).into_iter().find(|&c| drafts[c - 1] == t);
+        match next {
+            Some(c) => {
+                accepted_path.push(c);
+                cur = c;
+            }
+            // mismatch or leaf: the sampled token stands as correction/bonus
+            None => return TreeAcceptance { accepted_path, emitted },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -133,6 +195,161 @@ mod tests {
         for _ in 0..50 {
             assert_eq!(sample(&row, Sampling::Temperature(0.01), &mut rng), 2);
         }
+    }
+
+    #[test]
+    fn tree_accepts_longest_matching_root_path() {
+        // widths [2, 1]: nodes 1,2 at depth 1 (parents 0,0), node 3 at
+        // depth 2 (parent 1). Target greedy path: 5 then 9.
+        let t = TreeTopology::from_widths(&[2, 1]);
+        let rows: Vec<Vec<f32>> =
+            vec![onehot(5, 16), onehot(9, 16), onehot(7, 16), onehot(1, 16)];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut rng = Rng::new(1);
+        // drafts: node1=4 (miss), node2=5 (hit via the rank-1 sibling!),
+        // node3 is a child of node1 so it is off the accepted path
+        let a = accept_tree(&t, &[4, 5, 3], &refs, Sampling::Greedy, &mut rng);
+        assert_eq!(a.accepted_path, vec![2]);
+        // node 2's target row is rows[2] -> correction 7
+        assert_eq!(a.emitted, vec![5, 7]);
+    }
+
+    #[test]
+    fn tree_mismatch_everywhere_still_emits_one() {
+        let t = TreeTopology::from_widths(&[3]);
+        let rows: Vec<Vec<f32>> =
+            vec![onehot(9, 16), onehot(1, 16), onehot(2, 16), onehot(3, 16)];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut rng = Rng::new(1);
+        let a = accept_tree(&t, &[4, 5, 6], &refs, Sampling::Greedy, &mut rng);
+        assert_eq!(a.accepted_path, Vec::<usize>::new());
+        assert_eq!(a.emitted, vec![9]);
+    }
+
+    #[test]
+    fn tree_full_depth_adds_bonus_from_leaf_row() {
+        let t = TreeTopology::from_widths(&[2, 2]);
+        // accepted path 0 -> 2 -> 4 (node 4 is the depth-2 rank-0 child of
+        // node 2 under round-robin? parents of 3,4 are 1,2 — so child of 2
+        // is node 4). drafts: node2=6, node4=8.
+        let mut rows = vec![onehot(6, 16); 5];
+        rows[2] = onehot(8, 16); // after node 2, target wants 8
+        rows[4] = onehot(3, 16); // after node 4: bonus 3
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut rng = Rng::new(1);
+        let a = accept_tree(&t, &[1, 6, 7, 8], &refs, Sampling::Greedy, &mut rng);
+        assert_eq!(a.accepted_path, vec![2, 4]);
+        assert_eq!(a.emitted, vec![6, 8, 3]);
+    }
+
+    fn rand_rows(rng: &mut Rng, n: usize, vocab: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| (0..vocab).map(|_| rng.below(1000) as f32 / 100.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn tree_chain_topology_matches_accept_chain_exactly() {
+        // the degenerate chain tree must reproduce accept_chain
+        // token-for-token, including rng consumption, for random logits and
+        // random drafts under both sampling modes
+        use crate::util::prop::{check, Case};
+        check("tree-chain-parity", 120, |rng| {
+            let k = 1 + rng.below(7);
+            let vocab = 4 + rng.below(12);
+            let rows = rand_rows(rng, k + 1, vocab);
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            // drafts partially agree with the greedy path to exercise both
+            // acceptance and mismatch branches
+            let drafts: Vec<i32> = refs
+                .iter()
+                .take(k)
+                .map(|r| {
+                    if rng.below(2) == 0 {
+                        argmax(r)
+                    } else {
+                        rng.below(vocab) as i32
+                    }
+                })
+                .collect();
+            let s = if rng.below(2) == 0 {
+                Sampling::Greedy
+            } else {
+                Sampling::Temperature(0.7)
+            };
+            let seed = rng.next_u64();
+            let chain = accept_chain(&drafts, &refs, s, &mut Rng::new(seed));
+            let tree = accept_tree(
+                &TreeTopology::chain(k),
+                &drafts,
+                &refs,
+                s,
+                &mut Rng::new(seed),
+            );
+            if tree.emitted != chain.emitted || tree.n_accepted() != chain.n_accepted {
+                return Case::Fail {
+                    desc: format!(
+                        "k={k} chain {:?}/{} vs tree {:?}/{}",
+                        chain.emitted,
+                        chain.n_accepted,
+                        tree.emitted,
+                        tree.n_accepted()
+                    ),
+                    size: k,
+                };
+            }
+            Case::Pass
+        });
+    }
+
+    #[test]
+    fn tree_accepted_path_is_always_a_root_prefix() {
+        // whatever the logits and drafts, the accepted path must be a
+        // connected root path: node m's parent is node m-1 of the path (or
+        // the root), depths ascend 1,2,3,..., and emitted = path + bonus
+        use crate::util::prop::{check, Case};
+        check("tree-root-prefix", 120, |rng| {
+            let levels = 1 + rng.below(4);
+            let widths: Vec<usize> = (0..levels).map(|_| 1 + rng.below(3)).collect();
+            let t = TreeTopology::from_widths(&widths);
+            let vocab = 4 + rng.below(8);
+            let rows = rand_rows(rng, t.len() + 1, vocab);
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            // bias drafts toward the greedy continuation so paths get deep
+            let drafts: Vec<i32> = (1..=t.len())
+                .map(|_| {
+                    if rng.below(3) == 0 {
+                        rng.below(vocab) as i32
+                    } else {
+                        argmax(refs[rng.below(t.len() + 1)])
+                    }
+                })
+                .collect();
+            let a = accept_tree(&t, &drafts, &refs, Sampling::Greedy, &mut rng.clone());
+            if a.emitted.len() != a.n_accepted() + 1 {
+                return Case::Fail {
+                    desc: format!("emitted {} != path {} + 1", a.emitted.len(), a.n_accepted()),
+                    size: t.len(),
+                };
+            }
+            let mut prev = 0usize;
+            for (m, &node) in a.accepted_path.iter().enumerate() {
+                if t.parent(node) != prev || t.depth(node) != m + 1 {
+                    return Case::Fail {
+                        desc: format!("path {:?} not a root prefix ({widths:?})", a.accepted_path),
+                        size: t.len(),
+                    };
+                }
+                if a.emitted[m] != drafts[node - 1] {
+                    return Case::Fail {
+                        desc: format!("emitted[{m}] != draft of node {node}"),
+                        size: t.len(),
+                    };
+                }
+                prev = node;
+            }
+            Case::Pass
+        });
     }
 
     #[test]

@@ -148,6 +148,7 @@ mod tests {
             batch: 4,
             max_new_tokens: 32,
             sampling: Sampling::Greedy,
+            tree: None,
             seed: 0,
         }
     }

@@ -1,7 +1,7 @@
 //! # P-EAGLE — Parallel-Drafting EAGLE with Scalable Training
 //!
-//! Rust + JAX + Pallas reproduction of the paper (see README.md / DESIGN.md).
-//! Three layers:
+//! Rust + JAX + Pallas reproduction of the paper (front door: README.md;
+//! layer map + step lifecycle: ARCHITECTURE.md). Three layers:
 //!
 //! * **L1** (`python/compile/kernels/`): the Pallas fused draft-attention
 //!   kernel (interpret mode, lowered into the HLO artifacts).
@@ -15,10 +15,13 @@
 //!   finished requests are evicted immediately, and queued requests are
 //!   admitted into freed slots mid-flight via per-slot batch-1 prefill
 //!   spliced into the shared KV buffer (empty rows are masked, never padded
-//!   with fake requests). A thin bucket scheduler picks engine widths, a
-//!   threaded server streams per-token events, and the workload +
-//!   mask/partition/memory substrates feed the bench harnesses that
-//!   regenerate every table and figure.
+//!   with fake requests). Speculation shape is a config choice: a linear
+//!   K-chain or a static draft tree verified in one pass against a
+//!   precomputed cross-node mask ([`masking::tree`]), with only the longest
+//!   accepted root path committed to the KV cache. A thin bucket scheduler
+//!   picks engine widths, a threaded server streams per-token events, and
+//!   the workload + mask/partition/memory substrates feed the bench
+//!   harnesses that regenerate every table and figure.
 
 pub mod config;
 pub mod coordinator;

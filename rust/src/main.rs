@@ -6,7 +6,12 @@
 //!   serve      --target --method --k --concurrency --requests
 //!              [--dataset --max-new --quiet]   (streams engine step events)
 //!   eval-acceptance --drafter --dataset [--k --requests --max-new]
-//!   bench-otps --target --method --k --concurrency [--dataset --mixed --profile]
+//!   bench-otps --target --method --k --concurrency
+//!              [--dataset --mixed --profile]
+//!              [--tree [--tree-topo chain:K|w:w1,w2,..]]
+//!                                     (--tree runs a chain-vs-tree pair on
+//!                                      the same workload seed and reports
+//!                                      the acceptance-length delta)
 //!   report     --fig1 | --fig5 | --memmodel
 //!   info                              manifest summary
 
@@ -15,6 +20,7 @@ use anyhow::{anyhow, Result};
 use p_eagle::config::Manifest;
 use p_eagle::coordinator::server::spawn;
 use p_eagle::coordinator::{EngineConfig, Sampling, ServerEvent};
+use p_eagle::masking::TreeTopology;
 use p_eagle::memmodel;
 use p_eagle::report;
 use p_eagle::runtime::{Arg, HostTensor, ModelRuntime, Runtime};
@@ -99,6 +105,7 @@ fn serve(args: &Args) -> Result<()> {
         batch: conc,
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
+        tree: None,
         seed: 7,
     };
     // ready/error handshake: a bad artifacts root fails here, not in a log
@@ -186,8 +193,63 @@ fn bench_otps(args: &Args) -> Result<()> {
     // --mixed: per-request generation budgets from the Fig.1 length model —
     // the head-of-line workload the stepped engine exists for
     let mixed = args.flag("mixed");
-    let run =
-        report::bench_otps(&mut mr, &drafter, &dataset, k, conc, total, max_new, 11, mixed)?;
+
+    // --tree: chain-vs-tree pair on the same workload seed. The topology
+    // defaults to the serving profile the artifacts lower (w:3,2,1,1,1 —
+    // configs.TREE_TOPOLOGIES); --tree-topo overrides it.
+    if args.flag("tree") {
+        let spec = args.get_or("tree-topo", "w:3,2,1,1,1");
+        let tree = TreeTopology::parse(&spec).map_err(|e| anyhow!(e))?;
+        if args.get("k").is_some() {
+            eprintln!(
+                "note: --tree compares at the tree's own depth budget \
+                 (K = {}); --k is ignored",
+                tree.max_depth()
+            );
+        }
+        let (chain, treed) = report::compare_chain_tree(
+            &mut mr, &drafter, &dataset, &tree, conc, total, max_new, 11, mixed,
+        )?;
+        println!(
+            "chain[{target}/{method} K={} C={conc} {dataset}{}] OTPS {:.0}  AL {:.2}  occ {:.2}",
+            tree.max_depth(),
+            if mixed { " mixed" } else { "" },
+            chain.otps,
+            chain.acceptance_length,
+            chain.mean_occupancy,
+        );
+        println!(
+            "tree [{} = {} nodes, depth {}]      OTPS {:.0}  AL {:.2}  occ {:.2}  commit {:?}",
+            tree.id(),
+            tree.len(),
+            tree.max_depth(),
+            treed.otps,
+            treed.acceptance_length,
+            treed.mean_occupancy,
+            treed.metrics.commit_time,
+        );
+        println!(
+            "AL delta: {:+.2} ({:+.1}%)  — tree accepts every chain path plus deeper \
+             sibling paths, so AL >= chain on the same seed",
+            treed.acceptance_length - chain.acceptance_length,
+            (treed.acceptance_length / chain.acceptance_length.max(1e-9) - 1.0) * 100.0,
+        );
+        if args.flag("profile") {
+            for (label, m) in [("chain", &chain.metrics), ("tree ", &treed.metrics)] {
+                println!(
+                    "{label} breakdown: admission {:?} ({} admits)  draft {:?}  \
+                     verify {:?}  commit {:?}  host {:?}  ({} iterations)",
+                    m.admission_time, m.admissions, m.draft_time, m.verify_time,
+                    m.commit_time, m.host_time, m.iterations
+                );
+            }
+        }
+        return Ok(());
+    }
+
+    let run = report::bench_otps(
+        &mut mr, &drafter, &dataset, k, conc, total, max_new, 11, mixed, None,
+    )?;
     println!(
         "OTPS[{target}/{method} K={k} C={conc} {dataset}{}] = {:.0} (AL {:.2}, occupancy {:.2})",
         if mixed { " mixed" } else { "" },

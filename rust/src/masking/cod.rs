@@ -14,7 +14,7 @@ pub fn cod_counts(n: usize, k: usize, ratio: f64) -> Vec<usize> {
         .collect()
 }
 
-/// Nested anchor sets: anchors[d] ⊆ anchors[d-1], |anchors[d]| = round(n·r^d).
+/// Nested anchor sets: `anchors[d] ⊆ anchors[d-1]`, `|anchors[d]|` = round(n·r^d).
 pub fn cod_sample_nested(n: usize, k: usize, ratio: f64, rng: &mut Rng) -> Vec<Vec<usize>> {
     let mut anchors: Vec<Vec<usize>> = vec![(0..n).collect()];
     let counts = cod_counts(n, k, ratio);

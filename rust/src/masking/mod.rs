@@ -9,13 +9,21 @@
 //! the mask for any n is the top-left submatrix of the max-length mask
 //! (paper Fig. 3) — `PrecomputedMask::slice_view` is O(1).
 
+//!
+//! Serve-time masking lives here too: [`tree`] builds the cross-node
+//! ancestor mask for tree-structured speculation once per topology (the same
+//! build-once / gather-per-use discipline, applied to the verify chunk
+//! instead of the training batch).
+
 pub mod cod;
 pub mod pard;
 pub mod precomputed;
+pub mod tree;
 
 pub use cod::{cod_counts, cod_sample_nested, rows_from_anchors};
 pub use pard::{pard_full_mask, pard_mask};
 pub use precomputed::PrecomputedMask;
+pub use tree::{TreeMask, TreeTopology};
 
 /// The attention predicate shared by every construction path.
 ///

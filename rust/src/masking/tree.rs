@@ -1,0 +1,388 @@
+//! Static draft-tree topologies and their cross-node attention masks — the
+//! serve-time twin of the training-side precomputed-mask machinery
+//! ([`super::precomputed`]).
+//!
+//! Tree-structured speculation (EAGLE-3-style) verifies a *tree* of draft
+//! tokens in one target pass instead of a single K-chain: the chunk is
+//! `[root, node_1 .. node_N]` where the root is the last committed token and
+//! each node continues its parent's branch. The target may only let node `i`
+//! attend the committed context plus node `i`'s own ancestors — a cross-node
+//! causal mask that depends only on the topology, so (exactly like the
+//! Table-2 training trick) it is built ONCE per engine as a bit-packed
+//! [`BitMatrix`] and re-used every step; per-step work is a cheap gather of
+//! the rows actually in play.
+//!
+//! Topologies here are **width profiles**: `widths[d]` nodes at depth `d+1`,
+//! level-major (BFS) node numbering, children attached round-robin to the
+//! previous level so lower-rank (better) parents fill first. The K-chain is
+//! the degenerate profile `[1; K]` — [`TreeTopology::is_chain`] lets the
+//! engine keep that path byte-identical to classic chain decoding.
+
+use super::precomputed::BitMatrix;
+
+/// A static draft-tree topology: N draft nodes below an implicit root.
+///
+/// Node ids are 1..=N in level-major order (the root is id 0 and is not
+/// stored); `parent[i - 1]` is the id of node `i`'s parent. Invariant:
+/// `parent[i - 1] < i`, so any prefix of the id range is closed under
+/// parents.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TreeTopology {
+    widths: Vec<usize>,
+    parent: Vec<usize>,
+    depth: Vec<usize>,
+    /// rank of each node within its level (0 = best) — the drafter assigns
+    /// the level's rank-r node the (r+1)-th most likely token of that depth
+    level_rank: Vec<usize>,
+}
+
+impl TreeTopology {
+    /// Linear K-chain: the degenerate tree that reproduces classic chain
+    /// speculation exactly.
+    pub fn chain(k: usize) -> TreeTopology {
+        TreeTopology::from_widths(&vec![1; k])
+    }
+
+    /// Build from a width profile: `widths[d]` nodes at depth `d + 1`.
+    /// Children attach round-robin over the previous level, so the rank-0
+    /// chain (every level's best node) is always a root path of the tree.
+    ///
+    /// Panics on an empty profile or a zero-width level; widths may
+    /// otherwise grow or shrink freely (round-robin revisits parents as
+    /// needed).
+    pub fn from_widths(widths: &[usize]) -> TreeTopology {
+        assert!(!widths.is_empty(), "tree needs at least one level");
+        assert!(widths.iter().all(|&w| w > 0), "zero-width tree level");
+        let mut parent = Vec::new();
+        let mut depth = Vec::new();
+        let mut level_rank = Vec::new();
+        let mut prev_level_start = 0usize; // id of previous level's first node
+        let mut prev_w = 1usize; // level 0 is the root alone
+        for (d, &w) in widths.iter().enumerate() {
+            let level_start = parent.len() + 1;
+            for j in 0..w {
+                // round-robin: best parents get children first
+                let p = if d == 0 { 0 } else { prev_level_start + (j % prev_w) };
+                parent.push(p);
+                depth.push(d + 1);
+                level_rank.push(j);
+            }
+            prev_level_start = level_start;
+            prev_w = w;
+        }
+        TreeTopology { widths: widths.to_vec(), parent, depth, level_rank }
+    }
+
+    /// Parse a CLI/config spec: `"chain:5"` or a width profile `"w:3,2,1"`.
+    pub fn parse(spec: &str) -> Result<TreeTopology, String> {
+        if let Some(k) = spec.strip_prefix("chain:") {
+            let k: usize =
+                k.parse().map_err(|_| format!("bad chain depth in {spec:?}"))?;
+            if k == 0 {
+                return Err("chain depth must be >= 1".into());
+            }
+            return Ok(TreeTopology::chain(k));
+        }
+        if let Some(ws) = spec.strip_prefix("w:") {
+            let widths: Result<Vec<usize>, _> =
+                ws.split(',').map(|x| x.trim().parse::<usize>()).collect();
+            let widths = widths.map_err(|_| format!("bad width profile in {spec:?}"))?;
+            if widths.is_empty() || widths.iter().any(|&w| w == 0) {
+                return Err(format!("empty/zero width level in {spec:?}"));
+            }
+            return Ok(TreeTopology::from_widths(&widths));
+        }
+        Err(format!("unknown tree spec {spec:?} (want chain:<K> or w:<w1,w2,..>)"))
+    }
+
+    /// Canonical id used in executable names and the manifest `topology`
+    /// field: `chain<K>` for chains, `w<w1>x<w2>x..` otherwise.
+    pub fn id(&self) -> String {
+        match self.is_chain() {
+            Some(k) => format!("chain{k}"),
+            None => {
+                let parts: Vec<String> =
+                    self.widths.iter().map(|w| w.to_string()).collect();
+                format!("w{}", parts.join("x"))
+            }
+        }
+    }
+
+    /// Number of draft nodes N (the verify chunk is N + 1 wide).
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// `Some(K)` iff this is the degenerate linear chain of depth K.
+    pub fn is_chain(&self) -> Option<usize> {
+        self.widths.iter().all(|&w| w == 1).then_some(self.widths.len())
+    }
+
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.widths.len()
+    }
+
+    /// Depth of node `i` (1..=N); the root (id 0) has depth 0.
+    pub fn depth(&self, i: usize) -> usize {
+        if i == 0 {
+            0
+        } else {
+            self.depth[i - 1]
+        }
+    }
+
+    /// Parent id of node `i` (1..=N).
+    pub fn parent(&self, i: usize) -> usize {
+        self.parent[i - 1]
+    }
+
+    /// Rank of node `i` within its level (0 = that depth's most likely
+    /// token).
+    pub fn level_rank(&self, i: usize) -> usize {
+        self.level_rank[i - 1]
+    }
+
+    /// Children of node `i` (0 = root) in ascending id (= ascending rank)
+    /// order.
+    pub fn children(&self, i: usize) -> Vec<usize> {
+        (1..=self.len()).filter(|&c| self.parent(c) == i).collect()
+    }
+
+    /// Ancestor chain of node `i`, root-first, ending at `i` itself.
+    pub fn path_to(&self, i: usize) -> Vec<usize> {
+        let mut path = Vec::new();
+        let mut cur = i;
+        while cur != 0 {
+            path.push(cur);
+            cur = self.parent(cur);
+        }
+        path.push(0);
+        path.reverse();
+        path
+    }
+
+    /// Per-node depth offsets for the whole chunk (`[0, depth_1 .. depth_N]`)
+    /// — the RoPE position of chunk slot `j` is `cache_len + depth_offsets[j]`.
+    pub fn depth_offsets(&self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.len() + 1);
+        out.push(0);
+        out.extend(self.depth.iter().map(|&d| d as i32));
+        out
+    }
+
+    /// Build the (N+1)² cross-node attention mask ONCE: chunk slot `i` may
+    /// attend chunk slot `j` iff `j` is an ancestor-or-self of `i`. Row/col 0
+    /// is the root. Bit-packed; per-step use is [`TreeMask::gather`] or the
+    /// dense export [`TreeMask::to_i32`].
+    pub fn build_mask(&self) -> TreeMask {
+        let n = self.len() + 1;
+        let mut bits = BitMatrix::zeros(n, n);
+        for i in 0..n {
+            for &a in &self.path_to(i) {
+                bits.set(i, a);
+            }
+        }
+        TreeMask { bits, n }
+    }
+}
+
+/// Precomputed ancestor mask for one topology (chunk-internal attention).
+pub struct TreeMask {
+    bits: BitMatrix,
+    pub n: usize,
+}
+
+impl TreeMask {
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        self.bits.get(i, j)
+    }
+
+    /// Dense row-major i32 export ([N+1, N+1], 1 = may attend) — the runtime
+    /// input format of the tree-verify executable (the stub dtype lattice has
+    /// no bool).
+    pub fn to_i32(&self) -> Vec<i32> {
+        let mut out = vec![0i32; self.n * self.n];
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if self.bits.get(i, j) {
+                    out[i * self.n + j] = 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Gather the mask over a chunk-slot subset (e.g. the slots still in
+    /// play after partial acceptance). Cost proportional to the output, like
+    /// [`super::PrecomputedMask::gather`].
+    pub fn gather(&self, slots: &[usize]) -> BitMatrix {
+        let m = slots.len();
+        let mut out = BitMatrix::zeros(m, m);
+        for (i, &r) in slots.iter().enumerate() {
+            for (j, &c) in slots.iter().enumerate() {
+                if self.bits.get(r, c) {
+                    out.set(i, j);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Case};
+
+    #[test]
+    fn chain_shape() {
+        let t = TreeTopology::chain(5);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.is_chain(), Some(5));
+        assert_eq!(t.id(), "chain5");
+        for i in 1..=5 {
+            assert_eq!(t.parent(i), i - 1);
+            assert_eq!(t.depth(i), i);
+            assert_eq!(t.level_rank(i), 0);
+        }
+        assert_eq!(t.path_to(5), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(t.depth_offsets(), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn widths_level_major_round_robin() {
+        // widths [3, 2]: nodes 1,2,3 at depth 1; nodes 4,5 at depth 2
+        // attached round-robin to parents 1 and 2.
+        let t = TreeTopology::from_widths(&[3, 2]);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.is_chain(), None);
+        assert_eq!(t.id(), "w3x2");
+        assert_eq!((t.parent(1), t.parent(2), t.parent(3)), (0, 0, 0));
+        assert_eq!((t.parent(4), t.parent(5)), (1, 2));
+        assert_eq!((t.depth(4), t.level_rank(4)), (2, 0));
+        assert_eq!((t.depth(5), t.level_rank(5)), (2, 1));
+        assert_eq!(t.children(0), vec![1, 2, 3]);
+        assert_eq!(t.children(1), vec![4]);
+        assert_eq!(t.path_to(5), vec![0, 2, 5]);
+    }
+
+    #[test]
+    fn rank0_chain_is_always_embedded() {
+        // every level's rank-0 node parents the next level's rank-0 node, so
+        // the pure argmax chain is a root path of any profile
+        let t = TreeTopology::from_widths(&[3, 2, 2, 1]);
+        let mut cur = 0usize;
+        for d in 1..=t.max_depth() {
+            let next = t
+                .children(cur)
+                .into_iter()
+                .find(|&c| t.level_rank(c) == 0)
+                .expect("rank-0 child missing");
+            assert_eq!(t.depth(next), d);
+            cur = next;
+        }
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(TreeTopology::parse("chain:7").unwrap(), TreeTopology::chain(7));
+        assert_eq!(
+            TreeTopology::parse("w:3,2,1").unwrap(),
+            TreeTopology::from_widths(&[3, 2, 1])
+        );
+        // a w: profile of all-1s normalizes to the chain id
+        assert_eq!(TreeTopology::parse("w:1,1,1").unwrap().id(), "chain3");
+        assert!(TreeTopology::parse("chain:0").is_err());
+        assert!(TreeTopology::parse("w:2,0").is_err());
+        assert!(TreeTopology::parse("ring:4").is_err());
+    }
+
+    #[test]
+    fn mask_is_ancestor_closure() {
+        let t = TreeTopology::from_widths(&[2, 2, 1]);
+        let m = t.build_mask();
+        for i in 0..=t.len() {
+            let path: Vec<usize> = t.path_to(i);
+            for j in 0..=t.len() {
+                assert_eq!(m.get(i, j), path.contains(&j), "({i},{j})");
+            }
+        }
+        // everyone attends the root; nobody (but the root) is attended by it
+        for i in 0..=t.len() {
+            assert!(m.get(i, 0));
+        }
+        assert!(!m.get(0, 1));
+    }
+
+    #[test]
+    fn chain_mask_is_lower_triangular() {
+        let t = TreeTopology::chain(4);
+        let m = t.build_mask();
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(m.get(i, j), j <= i, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn mask_export_and_gather_agree() {
+        let t = TreeTopology::from_widths(&[2, 3]);
+        let m = t.build_mask();
+        let dense = m.to_i32();
+        for i in 0..m.n {
+            for j in 0..m.n {
+                assert_eq!(dense[i * m.n + j] == 1, m.get(i, j));
+            }
+        }
+        let slots = vec![0, 2, 4];
+        let g = m.gather(&slots);
+        for (i, &r) in slots.iter().enumerate() {
+            for (j, &c) in slots.iter().enumerate() {
+                assert_eq!(g.get(i, j), m.get(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn topology_invariants_property() {
+        // parents precede children; depths are parent depth + 1; level-major
+        // ids are depth-sorted — for random width profiles
+        check("tree-topology", 80, |rng| {
+            let levels = 1 + rng.below(5);
+            let widths: Vec<usize> = (0..levels).map(|_| 1 + rng.below(4)).collect();
+            let t = TreeTopology::from_widths(&widths);
+            for i in 1..=t.len() {
+                let p = t.parent(i);
+                if p >= i {
+                    return Case::Fail {
+                        desc: format!("parent {p} !< node {i} ({widths:?})"),
+                        size: t.len(),
+                    };
+                }
+                if t.depth(i) != t.depth(p) + 1 {
+                    return Case::Fail {
+                        desc: format!("depth chain broken at {i} ({widths:?})"),
+                        size: t.len(),
+                    };
+                }
+                if i > 1 && t.depth(i) < t.depth(i - 1) {
+                    return Case::Fail {
+                        desc: format!("ids not level-major at {i} ({widths:?})"),
+                        size: t.len(),
+                    };
+                }
+            }
+            Case::Pass
+        });
+    }
+}

@@ -1,6 +1,7 @@
 //! Shared evaluation + report routines used by the CLI and the bench
 //! binaries: acceptance-length evaluation (Tables 1/3-9/11), OTPS sweeps
-//! (Table 10), and the Figure 1 / Figure 5 reports.
+//! (Table 10, chain or tree speculation), the chain-vs-tree comparison, and
+//! the Figure 1 / Figure 5 reports.
 
 use anyhow::{anyhow, Result};
 
@@ -8,6 +9,7 @@ use crate::config::Manifest;
 use crate::coordinator::{
     run_closed_loop, EngineConfig, EngineCore, EngineMetrics, RequestResult, Sampling,
 };
+use crate::masking::TreeTopology;
 use crate::runtime::ModelRuntime;
 use crate::util::rng::Rng;
 use crate::workload::{corpus::load_eval_prompts, ArrivalProcess, LengthModel};
@@ -67,6 +69,7 @@ pub fn eval_acceptance(
         batch: 1,
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
+        tree: None,
         seed: 42,
     };
     let mut queue = reqs.into_iter();
@@ -92,6 +95,8 @@ pub struct OtpsRun {
     pub dataset: String,
     pub k: usize,
     pub concurrency: usize,
+    /// tree topology id when this run used tree speculation
+    pub topology: Option<String>,
     pub otps: f64,
     pub acceptance_length: f64,
     /// mean fraction of engine rows doing useful work per step
@@ -104,6 +109,9 @@ pub struct OtpsRun {
 /// distribution (testbed-scaled, capped at `max_new`) — the workload where
 /// iteration-level batching matters: short requests evict early and freed
 /// slots re-admit mid-flight instead of idling behind the longest request.
+/// With `tree` set, the engine drafts/verifies that static topology instead
+/// of a K-chain (`k` is then ignored); the same workload seed makes
+/// chain-vs-tree runs directly comparable.
 #[allow(clippy::too_many_arguments)]
 pub fn bench_otps(
     mr: &mut ModelRuntime,
@@ -115,6 +123,7 @@ pub fn bench_otps(
     max_new: usize,
     seed: u64,
     mixed_lengths: bool,
+    tree: Option<&TreeTopology>,
 ) -> Result<OtpsRun> {
     let info = mr.manifest.drafter(drafter)?.clone();
     let mut arr = closed_loop_arrivals(&mr.manifest, dataset, max_new, seed)?;
@@ -127,6 +136,7 @@ pub fn bench_otps(
         batch: concurrency,
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
+        tree: tree.cloned(),
         seed,
     };
     // warmup: compile/load the executables + weights outside the timed loop
@@ -150,11 +160,42 @@ pub fn bench_otps(
         dataset: dataset.to_string(),
         k,
         concurrency,
+        topology: tree.map(|t| t.id()),
         otps: metrics.otps(),
         acceptance_length: metrics.acceptance_length(),
         mean_occupancy: metrics.mean_occupancy(),
         metrics,
     })
+}
+
+/// Chain-vs-tree comparison on the SAME workload seed (and the same
+/// mixed-length setting): one K-chain run and one tree run (K = the tree's
+/// max depth, so per-step depth budgets match). The acceptance-length delta
+/// is the whole point of tree speculation — a tree that embeds the rank-0
+/// chain can only match or beat the chain's AL per iteration (it accepts
+/// the chain path whenever the chain would, plus any deeper sibling path).
+#[allow(clippy::too_many_arguments)]
+pub fn compare_chain_tree(
+    mr: &mut ModelRuntime,
+    drafter: &str,
+    dataset: &str,
+    tree: &TreeTopology,
+    concurrency: usize,
+    total_requests: usize,
+    max_new: usize,
+    seed: u64,
+    mixed_lengths: bool,
+) -> Result<(OtpsRun, OtpsRun)> {
+    let k = tree.max_depth();
+    let chain = bench_otps(
+        mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
+        mixed_lengths, None,
+    )?;
+    let treed = bench_otps(
+        mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
+        mixed_lengths, Some(tree),
+    )?;
+    Ok((chain, treed))
 }
 
 /// Figure 1: sequence-length distribution report (paper-scale quantiles +

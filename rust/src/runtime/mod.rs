@@ -12,5 +12,5 @@ pub mod tensors;
 pub mod weights;
 
 pub use executable::{Arg, Runtime};
-pub use models::{splice_kv_row, DraftExec, ModelRuntime, TargetExec};
+pub use models::{compact_kv_path, splice_kv_row, DraftExec, ModelRuntime, TargetExec};
 pub use tensors::{HostData, HostTensor};

@@ -1,7 +1,16 @@
-//! Typed model invocations over the executable registry: prefill / verify
-//! for targets, draft for drafters. Weights are uploaded once per model as
-//! device-resident buffers and shared across every executable that uses
-//! them; KV caches round-trip as device buffers between verify calls.
+//! Typed model invocations over the executable registry: prefill / verify /
+//! tree-verify for targets, chain or tree draft for drafters. Weights are
+//! uploaded once per model as device-resident buffers and shared across
+//! every executable that uses them; KV caches round-trip as device buffers
+//! between verify calls.
+//!
+//! Tree executables (`verify-tree` / `draft-tree` manifest kinds) bake a
+//! static [`TreeTopology`](crate::masking::TreeTopology) into the lowered
+//! HLO; the cross-node ancestor mask is NOT baked — the engine precomputes
+//! it once and passes it as a runtime input to [`ModelRuntime::verify_tree`]
+//! (see `masking::tree`). [`compact_kv_path`] is the host half of the
+//! accepted-path commit: tree chunks scatter KV at `base + node_id`, and
+//! only the accepted root path survives, compacted to contiguous positions.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -12,6 +21,7 @@ use super::executable::{Arg, Runtime};
 use super::tensors::HostTensor;
 use super::weights::{check_order, read_pew, TensorData};
 use crate::config::Manifest;
+use crate::masking::TreeTopology;
 
 pub struct ModelRuntime {
     pub rt: Runtime,
@@ -39,7 +49,10 @@ pub struct VerifyOut {
 pub struct TargetExec {
     pub target: String,
     pub batch: usize,
+    /// chain depth K (chunk = K+1), or node count N for tree executables
     pub k: usize,
+    /// set iff this is a tree-verify executable for that topology id
+    pub topo: Option<String>,
 }
 
 /// Identifies a loaded drafter executable.
@@ -47,7 +60,10 @@ pub struct TargetExec {
 pub struct DraftExec {
     pub drafter: String,
     pub batch: usize,
+    /// chain depth K, or node count N for tree executables
     pub k: usize,
+    /// set iff this is a tree drafter executable for that topology id
+    pub topo: Option<String>,
 }
 
 impl ModelRuntime {
@@ -91,7 +107,7 @@ impl ModelRuntime {
             .clone();
         self.rt.load(&pre.name, &self.manifest.abs(&pre.path))?;
         self.rt.load(&ver.name, &self.manifest.abs(&ver.path))?;
-        Ok(TargetExec { target: target.to_string(), batch, k })
+        Ok(TargetExec { target: target.to_string(), batch, k, topo: None })
     }
 
     pub fn ensure_drafter(&mut self, drafter: &str, batch: usize, k: usize) -> Result<DraftExec> {
@@ -102,7 +118,48 @@ impl ModelRuntime {
             .find_exec("draft", None, Some(drafter), Some(batch), Some(k))?
             .clone();
         self.rt.load(&d.name, &self.manifest.abs(&d.path))?;
-        Ok(DraftExec { drafter: drafter.to_string(), batch, k })
+        Ok(DraftExec { drafter: drafter.to_string(), batch, k, topo: None })
+    }
+
+    /// Load the tree-verify executable for `target` at `batch` and the given
+    /// static topology. `TargetExec::k` carries the node count N (the chunk
+    /// is N+1 wide).
+    pub fn ensure_verify_tree(
+        &mut self,
+        target: &str,
+        batch: usize,
+        tree: &TreeTopology,
+    ) -> Result<TargetExec> {
+        let info = self.manifest.target(target)?.clone();
+        self.ensure_weights(target, &info.weights, &info.param_order)?;
+        let id = tree.id();
+        let ver = self
+            .manifest
+            .find_exec_tree("verify-tree", Some(target), None, Some(batch), &id)?
+            .clone();
+        self.rt.load(&ver.name, &self.manifest.abs(&ver.path))?;
+        Ok(TargetExec { target: target.to_string(), batch, k: tree.len(), topo: Some(id) })
+    }
+
+    /// Load the tree drafter executable for `drafter` at `batch` and the
+    /// given static topology (node tokens per level are the level's top-w
+    /// tokens of that depth's distribution — see python/compile/drafter.py
+    /// `draft_pe_tree`).
+    pub fn ensure_drafter_tree(
+        &mut self,
+        drafter: &str,
+        batch: usize,
+        tree: &TreeTopology,
+    ) -> Result<DraftExec> {
+        let info = self.manifest.drafter(drafter)?.clone();
+        self.ensure_weights(drafter, &info.weights, &info.param_order)?;
+        let id = tree.id();
+        let d = self
+            .manifest
+            .find_exec_tree("draft-tree", None, Some(drafter), Some(batch), &id)?
+            .clone();
+        self.rt.load(&d.name, &self.manifest.abs(&d.path))?;
+        Ok(DraftExec { drafter: drafter.to_string(), batch, k: tree.len(), topo: Some(id) })
     }
 
     /// Fresh zeroed KV cache for a wave of `batch` slots.
@@ -164,6 +221,45 @@ impl ModelRuntime {
         Ok(VerifyOut { logits, feats, kv })
     }
 
+    /// One-pass tree verification: score an [root, node_1 .. node_N] chunk
+    /// against the cache in a single target forward.
+    ///
+    /// `chunk`: `[B, N+1]` i32 in chunk-slot order (slot 0 = the last
+    /// committed token, slots 1..=N the draft-tree nodes, level-major);
+    /// `tree_mask`: `[N+1, N+1]` i32 cross-node ancestor mask (1 = slot i
+    /// may attend slot j), precomputed once per topology by
+    /// [`TreeMask::to_i32`](crate::masking::TreeMask::to_i32). Each chunk
+    /// slot additionally attends every committed cache position; RoPE
+    /// positions follow node *depth*, not slot index (baked into the HLO
+    /// from the topology), so accepted-path KV entries stay valid after
+    /// [`compact_kv_path`]. Returns logits/feats rows in chunk-slot order.
+    pub fn verify_tree(
+        &mut self,
+        te: &TargetExec,
+        chunk: &HostTensor,     // [B, N+1] i32
+        cache_len: &HostTensor, // [B] i32
+        tree_mask: &HostTensor, // [N+1, N+1] i32
+        kv: &xla::PjRtBuffer,
+    ) -> Result<VerifyOut> {
+        let topo = te
+            .topo
+            .as_deref()
+            .context("verify_tree called with a non-tree TargetExec")?;
+        let name = format!("{}-verify-tree-{}-b{}", te.target, topo, te.batch);
+        let wbufs = &self.weights[&te.target];
+        let mut args: Vec<Arg> = wbufs.iter().map(Arg::Buf).collect();
+        args.push(Arg::Host(chunk));
+        args.push(Arg::Host(cache_len));
+        args.push(Arg::Host(tree_mask));
+        args.push(Arg::Buf(kv));
+        let out = self.rt.call(&name, &args)?;
+        let mut it = out.into_iter();
+        let logits = self.rt.download(&it.next().context("missing logits")?)?;
+        let feats = self.rt.download(&it.next().context("missing feats")?)?;
+        let kv = it.next().context("missing kv")?;
+        Ok(VerifyOut { logits, feats, kv })
+    }
+
     /// Load just the prefill executable for a target at `batch` (used by the
     /// stepped engine's per-slot admission path, which never runs a verify
     /// at that width). `TargetExec::k` is irrelevant to prefill and set to 0.
@@ -175,7 +271,7 @@ impl ModelRuntime {
             .find_exec("prefill", Some(target), None, Some(batch), None)?
             .clone();
         self.rt.load(&pre.name, &self.manifest.abs(&pre.path))?;
-        Ok(TargetExec { target: target.to_string(), batch, k: 0 })
+        Ok(TargetExec { target: target.to_string(), batch, k: 0, topo: None })
     }
 
     /// Load just the verify executable for a target at (`batch`, `k`) — the
@@ -190,11 +286,14 @@ impl ModelRuntime {
             .find_exec("verify", Some(target), None, Some(batch), Some(k))?
             .clone();
         self.rt.load(&ver.name, &self.manifest.abs(&ver.path))?;
-        Ok(TargetExec { target: target.to_string(), batch, k })
+        Ok(TargetExec { target: target.to_string(), batch, k, topo: None })
     }
 
-    /// Draft K tokens. ctx_tokens [B,C] i32, ctx_feats [B,C,3d] f32,
-    /// row_pos0 [B] i32 -> [B,K] i32.
+    /// Draft K chain tokens — or N tree-node tokens when `de` was loaded by
+    /// [`ensure_drafter_tree`](Self::ensure_drafter_tree) (same I/O shape:
+    /// the topology is baked into the HLO, only the output width differs).
+    /// ctx_tokens `[B,C]` i32, ctx_feats `[B,C,3d]` f32, row_pos0 `[B]` i32
+    /// -> `[B,K]` (or `[B,N]`) i32.
     pub fn draft(
         &mut self,
         de: &DraftExec,
@@ -202,7 +301,10 @@ impl ModelRuntime {
         ctx_feats: &HostTensor,
         row_pos0: &HostTensor,
     ) -> Result<HostTensor> {
-        let name = format!("{}-draft-b{}-k{}", de.drafter, de.batch, de.k);
+        let name = match &de.topo {
+            Some(t) => format!("{}-draft-tree-{}-b{}", de.drafter, t, de.batch),
+            None => format!("{}-draft-b{}-k{}", de.drafter, de.batch, de.k),
+        };
         let wbufs = &self.weights[&de.drafter];
         let mut args: Vec<Arg> = wbufs.iter().map(Arg::Buf).collect();
         args.push(Arg::Host(ctx_tokens));
@@ -244,6 +346,54 @@ pub fn splice_kv_row(dst: &mut HostTensor, src: &HostTensor, slot: usize) -> Res
         let doff = (p * batch + slot) * row;
         let soff = p * row;
         dst_v[doff..doff + row].copy_from_slice(&src_v[soff..soff + row]);
+    }
+    Ok(())
+}
+
+/// Compact an accepted tree path's KV entries to contiguous positions.
+///
+/// A tree-verify call scatters the K/V of chunk slot `j` at sequence
+/// position `base + j` of batch row `slot` (`kv` is the engine-wide
+/// `[L, 2, B, S, H, Dh]` cache, `base` the slot's committed length). After
+/// acceptance only the root path survives: the m-th accepted node (1-based,
+/// chunk slot `path[m-1]`) must end up at position `base + m` so the cache
+/// stays dense. Node ids are level-major, so `path[m-1] >= m` and copying in
+/// ascending `m` never clobbers a later source. RoPE positions were applied
+/// by node depth (== m), so moved entries remain valid — for a chain path
+/// (`path[m-1] == m` for all m) every copy is a no-op and the caller should
+/// skip the host round trip entirely.
+pub fn compact_kv_path(
+    kv: &mut HostTensor,
+    slot: usize,
+    base: usize,
+    path: &[usize],
+) -> Result<()> {
+    anyhow::ensure!(kv.dims.len() == 6, "KV cache must be rank 6, got {:?}", kv.dims);
+    let (batch, s_max) = (kv.dims[2], kv.dims[3]);
+    anyhow::ensure!(slot < batch, "slot {slot} out of batch {batch}");
+    let row: usize = kv.dims[4] * kv.dims[5]; // H * Dh per position
+    let planes = kv.dims[0] * kv.dims[1]; // L * 2
+    let v = match &mut kv.data {
+        super::tensors::HostData::F32(d) => d,
+        _ => anyhow::bail!("KV cache must be f32"),
+    };
+    for (m, &node) in path.iter().enumerate() {
+        let m = m + 1; // destination chunk slot (0 is the root, never moved)
+        anyhow::ensure!(node >= m, "path slot {node} precedes destination {m}");
+        anyhow::ensure!(
+            base + node < s_max,
+            "path position {} out of cache {s_max}",
+            base + node
+        );
+        if node == m {
+            continue; // chain-shaped prefix: already in place
+        }
+        for p in 0..planes {
+            let seq0 = ((p * batch) + slot) * s_max * row;
+            let src = seq0 + (base + node) * row;
+            let dst = seq0 + (base + m) * row;
+            v.copy_within(src..src + row, dst);
+        }
     }
     Ok(())
 }
@@ -293,6 +443,51 @@ mod tests {
             assert_eq!(d[p * 4 + 2], before[p * 4 + 2]);
             assert_eq!(d[p * 4 + 3], before[p * 4 + 3]);
         }
+    }
+
+    #[test]
+    fn compact_moves_path_nodes_into_place() {
+        // L=1, 2, B=2, S=8, H=1, Dh=1: each position holds one element whose
+        // value encodes (plane, batch, seq) so moves are easy to assert
+        let mut cache = kv(&[1, 2, 2, 8, 1, 1], |i| i as f32);
+        let before: Vec<f32> = cache.as_f32().unwrap().to_vec();
+        // slot 1, base 2: chunk slots live at positions 2..8; accepted path
+        // chunk slots [2, 5] must land at positions 3 and 4
+        compact_kv_path(&mut cache, 1, 2, &[2, 5]).unwrap();
+        let d = cache.as_f32().unwrap();
+        for p in 0..2 {
+            let seq0 = (p * 2 + 1) * 8;
+            assert_eq!(d[seq0 + 3], before[seq0 + 2 + 2], "plane {p}: node 2 -> pos 3");
+            assert_eq!(d[seq0 + 4], before[seq0 + 2 + 5], "plane {p}: node 5 -> pos 4");
+            // root and committed prefix untouched
+            for s in 0..3 {
+                assert_eq!(d[seq0 + s], before[seq0 + s], "plane {p} pos {s}");
+            }
+            // slot 0 fully untouched
+            let other = p * 2 * 8;
+            for s in 0..8 {
+                assert_eq!(d[other + s], before[other + s]);
+            }
+        }
+    }
+
+    #[test]
+    fn compact_chain_path_is_identity() {
+        let mut cache = kv(&[2, 2, 1, 6, 1, 2], |i| (i * 7 % 13) as f32);
+        let before: Vec<f32> = cache.as_f32().unwrap().to_vec();
+        compact_kv_path(&mut cache, 0, 1, &[1, 2, 3]).unwrap();
+        assert_eq!(cache.as_f32().unwrap(), &before[..]);
+    }
+
+    #[test]
+    fn compact_rejects_bad_paths() {
+        let mut cache = kv(&[1, 2, 1, 8, 1, 1], |_| 0.0);
+        // node id below its destination index (not a valid level-major path)
+        assert!(compact_kv_path(&mut cache, 0, 0, &[2, 1]).is_err());
+        // out of cache
+        assert!(compact_kv_path(&mut cache, 0, 6, &[3]).is_err());
+        // out of batch
+        assert!(compact_kv_path(&mut cache, 1, 0, &[1]).is_err());
     }
 
     #[test]

@@ -12,9 +12,9 @@ pub const EOS_ID: i32 = 2;
 pub struct PhraseRegime {
     pub name: String,
     pub phrases: Vec<Vec<i32>>,
-    /// [n_phrases][branch] successor phrase ids
+    /// `[n_phrases][branch]` successor phrase ids
     pub succ: Vec<Vec<usize>>,
-    /// [n_phrases][branch] transition probabilities
+    /// `[n_phrases][branch]` transition probabilities
     pub probs: Vec<Vec<f32>>,
 }
 

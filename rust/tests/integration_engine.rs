@@ -94,6 +94,7 @@ fn engine_greedy(mr: &mut ModelRuntime, drafter: &str, prompt: &[i32], max_new: 
         batch: 1,
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
+        tree: None,
         seed: 5,
     };
     let spec = RequestSpec { id: 0, prompt: prompt.to_vec(), max_new_tokens: max_new, arrival_s: 0.0 };
@@ -160,6 +161,7 @@ fn batched_core_matches_single() {
         batch: 2,
         max_new_tokens: 24,
         sampling: Sampling::Greedy,
+        tree: None,
         seed: 5,
     };
     let mut reqs = vec![
@@ -181,6 +183,7 @@ fn core_cfg(batch: usize, max_new: usize) -> EngineConfig {
         batch,
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
+        tree: None,
         seed: 5,
     }
 }
@@ -350,6 +353,7 @@ fn acceptance_length_in_valid_range() {
         batch: 1,
         max_new_tokens: 40,
         sampling: Sampling::Greedy,
+        tree: None,
         seed: 5,
     };
     let spec = RequestSpec { id: 0, prompt, max_new_tokens: 40, arrival_s: 0.0 };
@@ -359,6 +363,70 @@ fn acceptance_length_in_valid_range() {
     assert!(al >= 1.0 && al <= 6.0, "AL {al} outside [1, K+1]");
     assert!(metrics.acceptance_length() >= 1.0);
     assert_eq!(results[0].finish, FinishReason::Length);
+}
+
+#[test]
+fn chain_topology_tree_is_byte_identical_to_chain() {
+    // THE degenerate-tree parity criterion: an engine configured with the
+    // linear chain-5 topology (tree executables, tree acceptance, tree KV
+    // commit) must produce byte-identical tokens AND acceptance lengths to
+    // the classic chain path, on the same seeds. This is what licenses
+    // shipping tree speculation as a topology choice rather than a fork.
+    use p_eagle::masking::TreeTopology;
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    for seed in [81u64, 82, 83] {
+        let prompt = test_prompt(&mr, seed);
+        let run = |mr: &mut ModelRuntime, tree: Option<TreeTopology>| {
+            let cfg = EngineConfig { tree, ..core_cfg(1, 32) };
+            let mut g =
+                Some(spec(0, &prompt, 32));
+            let (results, metrics) =
+                run_closed_loop(mr, &cfg, 1, 1, || g.take().unwrap()).unwrap();
+            let r = results.into_iter().next().unwrap();
+            (r.tokens, r.accepted_sum, r.iterations, metrics.acceptance_length())
+        };
+        let chain = run(&mut mr, None);
+        let tree = run(&mut mr, Some(TreeTopology::chain(5)));
+        assert_eq!(tree.0, chain.0, "tokens diverged (seed {seed})");
+        assert_eq!(tree.1, chain.1, "accepted_sum diverged (seed {seed})");
+        assert_eq!(tree.2, chain.2, "iterations diverged (seed {seed})");
+        assert!((tree.3 - chain.3).abs() < 1e-12, "AL diverged (seed {seed})");
+    }
+}
+
+#[test]
+fn branching_tree_is_lossless_and_al_dominates_chain() {
+    // A branching tree must (a) stay lossless — greedy tree speculation
+    // still emits exactly the target's own greedy continuation — and
+    // (b) match or beat the chain's acceptance length on the same workload
+    // (it embeds the rank-0 chain, so it accepts at least as deep).
+    use p_eagle::masking::TreeTopology;
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let tree = TreeTopology::from_widths(&[3, 2, 1, 1, 1]);
+    let mut chain_al = 0.0;
+    let mut tree_al = 0.0;
+    for seed in [91u64, 92] {
+        let prompt = test_prompt(&mr, seed);
+        let want = reference_greedy(&mut mr, "target-m", &prompt, 32);
+        let run = |mr: &mut ModelRuntime, t: Option<TreeTopology>| {
+            let cfg = EngineConfig { tree: t, ..core_cfg(1, 32) };
+            let mut g = Some(spec(0, &prompt, 32));
+            let (results, _) =
+                run_closed_loop(mr, &cfg, 1, 1, || g.take().unwrap()).unwrap();
+            results.into_iter().next().unwrap()
+        };
+        let rc = run(&mut mr, None);
+        let rt = run(&mut mr, Some(tree.clone()));
+        assert_eq!(rt.tokens, want, "tree engine diverged from greedy (seed {seed})");
+        chain_al += rc.acceptance_length();
+        tree_al += rt.acceptance_length();
+    }
+    assert!(
+        tree_al + 1e-9 >= chain_al,
+        "tree AL {tree_al:.3} < chain AL {chain_al:.3} on the same seeds"
+    );
 }
 
 #[test]

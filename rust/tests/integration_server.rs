@@ -19,6 +19,7 @@ fn cfg(batch: usize, max_new: usize) -> EngineConfig {
         batch,
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
+        tree: None,
         seed: 1,
     }
 }
