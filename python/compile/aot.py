@@ -29,14 +29,18 @@ from jax._src.lib import xla_client as xc
 from . import data as data_mod
 from .configs import (
     BATCH_SIZES, BOS_ID, CTX_WINDOW, DATASETS, DEFAULT_K, EOS_ID,
-    EPOCH_SNAPSHOTS, MASK_ID, PAD_ID, PROMPT_PAD, S_MAX, SPEC_DEPTHS,
-    TABLE1_CONTEXTS, TARGETS, TREE_DRAFTERS, TREE_TARGETS, TREE_TOPOLOGIES,
-    VOCAB, DrafterConfig, all_drafters, ablation_drafters, config_dict,
-    drafter_train_config, serving_drafters, table1_drafters,
+    EPOCH_SNAPSHOTS, KV_BLOCK_SIZE, MASK_ID, PAD_ID, PROMPT_PAD, S_MAX,
+    SPEC_DEPTHS, TABLE1_CONTEXTS, TARGETS, TREE_DRAFTERS, TREE_TARGETS,
+    TREE_TOPOLOGIES, VOCAB, DrafterConfig, all_drafters, ablation_drafters,
+    config_dict, drafter_train_config, kv_blocks_per_slot, num_kv_blocks,
+    serving_drafters, table1_drafters,
 )
 from .drafter import draft_ar, draft_pe, draft_pe_tree, init_drafter
 from .masks import tree_depths, tree_topology_id
-from .model import init_target, prefill, verify, verify_tree, zero_kv
+from .model import (
+    init_target, prefill, verify, verify_paged, verify_tree,
+    verify_tree_paged, zero_kv,
+)
 from .pew import flatten_named, read_pew, unflatten_named, write_pew
 from .pretrain import pretrain_target
 from .train import train_drafter
@@ -97,7 +101,8 @@ class Artifacts:
             "ctx_window": CTX_WINDOW, "pad_id": PAD_ID, "bos_id": BOS_ID,
             "eos_id": EOS_ID, "mask_id": MASK_ID,
             "spec_depths": SPEC_DEPTHS, "batch_sizes": BATCH_SIZES,
-            "default_k": DEFAULT_K, "kernel": KERNEL, "fast": FAST,
+            "default_k": DEFAULT_K, "kv_block_size": KV_BLOCK_SIZE,
+            "kernel": KERNEL, "fast": FAST,
             "targets": {}, "drafters": {}, "executables": [],
             "regimes": {}, "eval_prompts": {}, "training_logs": {},
             "table1_contexts": {str(k): v for k, v in TABLE1_CONTEXTS.items()},
@@ -253,6 +258,14 @@ def stage_lower(art: Artifacts, target_params, drafter_params):
                 (pspec, toks, plen, kv), "prefill",
                 {"model": tname, "batch": b},
                 [{"name": "last_logits"}, {"name": "feats"}, {"name": "kv"}])
+            # paged twin shapes: block pool + per-slot block table (the
+            # engine passes the table as a runtime input each step). Argument
+            # order after the params must match ModelRuntime::verify_paged:
+            # chunk, cache_len, block_table, pool.
+            table = jax.ShapeDtypeStruct((b, kv_blocks_per_slot()), jnp.int32)
+            pool = jax.ShapeDtypeStruct(
+                (tcfg.n_layers, 2, num_kv_blocks(b), KV_BLOCK_SIZE,
+                 tcfg.n_heads, tcfg.head_dim), jnp.float32)
             for k in SPEC_DEPTHS:
                 chunk = jax.ShapeDtypeStruct((b, k + 1), jnp.int32)
                 clen = jax.ShapeDtypeStruct((b,), jnp.int32)
@@ -261,6 +274,14 @@ def stage_lower(art: Artifacts, target_params, drafter_params):
                     lambda p, c, l, cache, _cfg=tcfg: verify(p, _cfg, c, l, cache),
                     (pspec, chunk, clen, kv), "verify",
                     {"model": tname, "batch": b, "k": k},
+                    [{"name": "logits"}, {"name": "feats"}, {"name": "kv"}])
+                _maybe_lower(
+                    art, f"{tname}-verify-paged-b{b}-k{k}",
+                    lambda p, c, l, t, pl, _cfg=tcfg: verify_paged(
+                        p, _cfg, c, l, t, pl),
+                    (pspec, chunk, clen, table, pool), "verify-paged",
+                    {"model": tname, "batch": b, "k": k,
+                     "block_size": KV_BLOCK_SIZE, "num_blocks": num_kv_blocks(b)},
                     [{"name": "logits"}, {"name": "feats"}, {"name": "kv"}])
 
     # --- drafter executables -----------------------------------------------
@@ -314,6 +335,23 @@ def stage_lower(art: Artifacts, target_params, drafter_params):
                         p, _cfg, c, l, cache, m, _d),
                     (pspec, chunk, clen, tmask, kv), "verify-tree",
                     {"model": tname, "batch": b, "k": n_nodes, "topology": tid},
+                    [{"name": "logits"}, {"name": "feats"}, {"name": "kv"}])
+                # paged twin — arg order after the mask matches
+                # ModelRuntime::verify_tree_paged: chunk, cache_len,
+                # tree_mask, block_table, pool.
+                table = jax.ShapeDtypeStruct((b, kv_blocks_per_slot()),
+                                             jnp.int32)
+                pool = jax.ShapeDtypeStruct(
+                    (tcfg.n_layers, 2, num_kv_blocks(b), KV_BLOCK_SIZE,
+                     tcfg.n_heads, tcfg.head_dim), jnp.float32)
+                _maybe_lower(
+                    art, f"{tname}-verify-tree-paged-{tid}-b{b}",
+                    lambda p, c, l, m, t, pl, _cfg=tcfg, _d=depths:
+                        verify_tree_paged(p, _cfg, c, l, t, pl, m, _d),
+                    (pspec, chunk, clen, tmask, table, pool),
+                    "verify-tree-paged",
+                    {"model": tname, "batch": b, "k": n_nodes, "topology": tid,
+                     "block_size": KV_BLOCK_SIZE, "num_blocks": num_kv_blocks(b)},
                     [{"name": "logits"}, {"name": "feats"}, {"name": "kv"}])
         for dname in TREE_DRAFTERS:
             dmeta = art.manifest["drafters"][dname]

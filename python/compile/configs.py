@@ -26,6 +26,29 @@ PROMPT_PAD = 64      # prefill executable prompt width
 CTX_WINDOW = 8       # drafter rolling (token, feature) context width
 MAX_NEW_TOKENS = 160
 
+# Paged KV cache (block-table indirection, vLLM-style). The physical cache of
+# the paged executables is a block pool [L, 2, NUM_BLOCKS, KV_BLOCK_SIZE, H,
+# Dh]; each engine slot owns a table of pool block ids covering its logical
+# positions. Block 0 is the reserved null block: inactive rows and unused
+# table entries point at it, so their gather reads and scatter write-backs
+# are inert. Must divide S_MAX, and must match the Rust engine's configured
+# block size (manifest `kv_block_size`).
+KV_BLOCK_SIZE = 16
+assert S_MAX % KV_BLOCK_SIZE == 0
+
+
+def kv_blocks_per_slot() -> int:
+    """Block-table width per engine slot (covers the full S_MAX window)."""
+    return S_MAX // KV_BLOCK_SIZE
+
+
+def num_kv_blocks(batch: int) -> int:
+    """Physical pool size lowered for a batch-`batch` paged executable:
+    full per-slot provisioning plus the reserved null block 0 (the Rust
+    engine may budget FEWER logical blocks for preemption-pressure tests,
+    but never more than the lowered pool holds)."""
+    return batch * kv_blocks_per_slot() + 1
+
 
 @dataclass
 class TargetConfig:

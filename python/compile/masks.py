@@ -187,6 +187,26 @@ def tree_depths(widths):
     return out
 
 
+# ---------------------------------------------------------------------------
+# Paged KV reference (mirror of rust/src/runtime/kv_blocks.rs)
+# ---------------------------------------------------------------------------
+
+def paged_logical_view(pool, block_table):
+    """Pure-numpy reference for block-table indirection: pool
+    [L,2,NB,BS,H,Dh] + block_table [B,M] int -> the dense logical view
+    [L,2,B,M*BS,H,Dh] (logical position q of row b lives in pool block
+    block_table[b, q // BS] at offset q % BS).
+
+    This is the contract `model.paged_gather` lowers and the Rust engine's
+    host-side block surgery (`runtime::kv_blocks`) must preserve; the paged
+    parity tests diff both against it."""
+    pool = np.asarray(pool)
+    table = np.asarray(block_table)
+    g = pool[:, :, table]                       # [L,2,B,M,BS,H,Dh]
+    L, two, B, M, BS, H, Dh = g.shape
+    return g.reshape(L, two, B, M * BS, H, Dh)
+
+
 def tree_ancestor_mask(widths):
     """Cross-node causal mask over the verify chunk: bool [N+1, N+1] where
     entry (i, j) allows chunk slot i to attend chunk slot j iff j is an

@@ -239,6 +239,70 @@ def zero_kv(cfg: TargetConfig, batch):
 
 
 # ---------------------------------------------------------------------------
+# Paged-KV serving entry points (block-table indirection; lowered by aot.py)
+# ---------------------------------------------------------------------------
+#
+# The paged physical cache is a block pool [L, 2, NB, BS, H, Dh]; a slot's
+# logical position q lives in pool block block_table[b, q // BS] at offset
+# q % BS. The paged executables are exact functional twins of the dense ones:
+# gather the pool through the table into the dense per-slot layout, run the
+# IDENTICAL chunk forward, scatter the written blocks back. Every attended
+# position is covered by a real table entry (the engine's allocator reserves
+# scratch blocks before verify), so the indirection is numerically invisible
+# — the dense-vs-paged parity tests assert bitwise-equal logits.
+#
+# Block 0 is the reserved null block: inactive rows and unused table entries
+# point at it. Its contents are garbage, but garbage that is (a) never
+# attended (masked beyond cache_len / key_limit) and (b) only ever written
+# back with more garbage — the same overwrite-safety argument as the dense
+# cache's masked rows.
+
+def paged_gather(pool, block_table):
+    """pool [L,2,NB,BS,H,Dh] + block_table [B,M] int32 -> dense
+    [L,2,B,M*BS,H,Dh] logical view (M*BS must equal S_MAX)."""
+    g = pool[:, :, block_table]                 # [L,2,B,M,BS,H,Dh]
+    L, two, B, M, BS, H, Dh = g.shape
+    return g.reshape(L, two, B, M * BS, H, Dh)
+
+
+def paged_scatter(pool, block_table, dense):
+    """Write a dense [L,2,B,S,H,Dh] logical view back into the pool through
+    the table. Rows never share real blocks (allocator exclusivity), so the
+    only duplicate index is the null block 0 — garbage writes racing over
+    garbage."""
+    L, two, B, S, H, Dh = dense.shape
+    M = block_table.shape[1]
+    blocks = dense.reshape(L, two, B, M, S // M, H, Dh)
+    return pool.at[:, :, block_table].set(blocks)
+
+
+def verify_paged(params, cfg: TargetConfig, chunk, cache_len, block_table,
+                 pool):
+    """Block-paged twin of `verify`: chunk [B,K+1] int32, cache_len [B] int32,
+    block_table [B, S_MAX // BS] int32 pool-block ids, pool
+    [L,2,NB,BS,H,Dh]. Returns (logits, feats, new_pool)."""
+    dense = paged_gather(pool, block_table)
+    logits, feats, new_dense = verify(params, cfg, chunk, cache_len, dense)
+    return logits, feats, paged_scatter(pool, block_table, new_dense)
+
+
+def verify_tree_paged(params, cfg: TargetConfig, chunk, cache_len,
+                      block_table, pool, tree_mask, depths):
+    """Block-paged twin of `verify_tree` (same mask/depth semantics)."""
+    dense = paged_gather(pool, block_table)
+    logits, feats, new_dense = verify_tree(params, cfg, chunk, cache_len,
+                                           dense, tree_mask, depths)
+    return logits, feats, paged_scatter(pool, block_table, new_dense)
+
+
+def zero_kv_paged(cfg: TargetConfig, num_blocks, block_size):
+    return jnp.zeros(
+        (cfg.n_layers, 2, num_blocks, block_size, cfg.n_heads, cfg.head_dim),
+        jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Feature extraction for drafter training (full-sequence, no cache)
 # ---------------------------------------------------------------------------
 

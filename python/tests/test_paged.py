@@ -1,0 +1,199 @@
+"""Paged KV cache: block-table indirection parity against the dense path.
+
+The load-bearing property: the paged executables are *numerically invisible*
+indirection — gather-through-table + the identical dense chunk forward +
+scatter-back must produce bitwise-equal logits/feats to the dense `verify` /
+`verify_tree` on the same logical cache state. That is what licenses the Rust
+engine's dense-vs-paged byte-parity integration test (same tokens, same
+acceptance lengths), and what makes `paged: true` a deployment choice rather
+than a fork.
+
+Block 0 is the reserved null block (inactive rows / unused table entries);
+its garbage is never attended and only ever overwritten with more garbage.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import (
+    KV_BLOCK_SIZE, S_MAX, TARGETS, kv_blocks_per_slot, num_kv_blocks,
+)
+from compile.masks import paged_logical_view, tree_ancestor_mask, tree_depths
+from compile.model import (
+    init_target, paged_gather, paged_scatter, prefill, verify, verify_paged,
+    verify_tree, verify_tree_paged, zero_kv, zero_kv_paged,
+)
+
+M = kv_blocks_per_slot()  # table width per slot
+
+
+@pytest.fixture(scope="module")
+def tm():
+    cfg = TARGETS["target-m"]
+    params = init_target(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def toks(rng, shape):
+    return jnp.asarray(rng.integers(4, 250, size=shape), jnp.int32)
+
+
+def fresh_table(batch, rng=None, shuffle=False):
+    """Disjoint per-row block tables over a fully provisioned pool, block 0
+    reserved as the null block. Optionally shuffled — block ids are opaque,
+    so any permutation must behave identically."""
+    ids = np.arange(1, batch * M + 1)
+    if shuffle:
+        ids = rng.permutation(ids)
+    return jnp.asarray(ids.reshape(batch, M), jnp.int32)
+
+
+def pool_from_dense(cfg, dense, table):
+    """Embed a dense [L,2,B,S_MAX,H,Dh] cache into a pool through `table`."""
+    pool = zero_kv_paged(cfg, num_kv_blocks(dense.shape[2]), KV_BLOCK_SIZE)
+    return paged_scatter(pool, table, dense)
+
+
+def prefilled(cfg, params, rng, batch=1, plen=14):
+    prompt = np.zeros((batch, 24), np.int32)
+    prompt[:, :plen] = np.asarray(toks(rng, (batch, plen)))
+    kv = zero_kv(cfg, batch)
+    _, _, kv = prefill(params, cfg, jnp.asarray(prompt),
+                       jnp.asarray([plen] * batch, jnp.int32), kv)
+    return kv, plen
+
+
+# ---------------------------------------------------------------------------
+# gather / scatter mechanics
+# ---------------------------------------------------------------------------
+
+def test_gather_scatter_roundtrip(tm):
+    cfg, _ = tm
+    rng = np.random.default_rng(0)
+    table = fresh_table(2, rng, shuffle=True)
+    pool = zero_kv_paged(cfg, num_kv_blocks(2), KV_BLOCK_SIZE)
+    dense = jnp.asarray(
+        rng.normal(size=(cfg.n_layers, 2, 2, S_MAX, cfg.n_heads,
+                         cfg.head_dim)), jnp.float32)
+    pool2 = paged_scatter(pool, table, dense)
+    back = paged_gather(pool2, table)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(dense))
+    # the numpy reference agrees with the lowered gather
+    np.testing.assert_array_equal(
+        paged_logical_view(pool2, table), np.asarray(dense))
+
+
+def test_scatter_only_touches_owned_blocks(tm):
+    cfg, _ = tm
+    rng = np.random.default_rng(1)
+    # row 0 owns blocks 1..M; everything else (incl. a sentinel block M+1)
+    # must be untouched by a scatter through row 0's table
+    table = jnp.asarray(np.arange(1, M + 1).reshape(1, M), jnp.int32)
+    pool = jnp.full(
+        (cfg.n_layers, 2, num_kv_blocks(1) + 1, KV_BLOCK_SIZE, cfg.n_heads,
+         cfg.head_dim), 7.25, jnp.float32)
+    dense = jnp.asarray(
+        rng.normal(size=(cfg.n_layers, 2, 1, S_MAX, cfg.n_heads,
+                         cfg.head_dim)), jnp.float32)
+    pool2 = np.asarray(paged_scatter(pool, table, dense))
+    assert (pool2[:, :, 0] == 7.25).all(), "null block written by real table"
+    assert (pool2[:, :, M + 1:] == 7.25).all(), "unowned blocks clobbered"
+
+
+# ---------------------------------------------------------------------------
+# verify parity (bitwise)
+# ---------------------------------------------------------------------------
+
+def test_verify_paged_matches_dense(tm):
+    cfg, p = tm
+    rng = np.random.default_rng(2)
+    kv, plen = prefilled(cfg, p, rng, batch=2)
+    table = fresh_table(2, rng, shuffle=True)
+    pool = pool_from_dense(cfg, kv, table)
+    k = 5
+    chunk = toks(rng, (2, k + 1))
+    clen = jnp.asarray([plen, plen], jnp.int32)
+
+    l_ref, f_ref, kv_ref = verify(p, cfg, chunk, clen, kv)
+    l_pg, f_pg, pool2 = verify_paged(p, cfg, chunk, clen, table, pool)
+
+    np.testing.assert_array_equal(np.asarray(l_pg), np.asarray(l_ref))
+    np.testing.assert_array_equal(np.asarray(f_pg), np.asarray(f_ref))
+    # the written-back pool holds the same logical cache as the dense result
+    # everywhere the cache is valid (committed prefix + the fresh chunk)
+    view = paged_logical_view(pool2, table)
+    ref = np.asarray(kv_ref)
+    np.testing.assert_array_equal(view[:, :, :, :plen + k + 1],
+                                  ref[:, :, :, :plen + k + 1])
+
+
+def test_verify_tree_paged_matches_dense(tm):
+    cfg, p = tm
+    rng = np.random.default_rng(3)
+    kv, plen = prefilled(cfg, p, rng)
+    table = fresh_table(1, rng, shuffle=True)
+    pool = pool_from_dense(cfg, kv, table)
+    widths = [3, 2, 1]
+    n = sum(widths)
+    chunk = toks(rng, (1, n + 1))
+    clen = jnp.asarray([plen], jnp.int32)
+    mask = jnp.asarray(tree_ancestor_mask(widths), jnp.int32)
+    depths = tuple(tree_depths(widths))
+
+    l_ref, f_ref, kv_ref = verify_tree(p, cfg, chunk, clen, kv, mask, depths)
+    l_pg, f_pg, pool2 = verify_tree_paged(p, cfg, chunk, clen, table, pool,
+                                          mask, depths)
+
+    np.testing.assert_array_equal(np.asarray(l_pg), np.asarray(l_ref))
+    np.testing.assert_array_equal(np.asarray(f_pg), np.asarray(f_ref))
+    view = paged_logical_view(pool2, table)
+    ref = np.asarray(kv_ref)
+    np.testing.assert_array_equal(view[:, :, :, :plen + n + 1],
+                                  ref[:, :, :, :plen + n + 1])
+
+
+def test_verify_paged_rows_are_isolated(tm):
+    """Mutating row 1's chunk must not perturb row 0's logits or blocks —
+    block exclusivity is what makes the pool scatter race-free."""
+    cfg, p = tm
+    rng = np.random.default_rng(4)
+    kv, plen = prefilled(cfg, p, rng, batch=2)
+    table = fresh_table(2)
+    pool = pool_from_dense(cfg, kv, table)
+    clen = jnp.asarray([plen, plen], jnp.int32)
+    a = np.asarray(toks(rng, (2, 6)))
+    b = a.copy()
+    b[1] = (a[1] + 50) % 250 + 4
+    la, _, pa = verify_paged(p, cfg, jnp.asarray(a), clen, table, pool)
+    lb, _, pb = verify_paged(p, cfg, jnp.asarray(b), clen, table, pool)
+    np.testing.assert_array_equal(np.asarray(la[0]), np.asarray(lb[0]))
+    row0_blocks = np.asarray(table)[0]
+    np.testing.assert_array_equal(np.asarray(pa)[:, :, row0_blocks],
+                                  np.asarray(pb)[:, :, row0_blocks])
+    assert not np.array_equal(np.asarray(la[1]), np.asarray(lb[1]))
+
+
+def test_multistep_decode_parity(tm):
+    """Thread the cache through several greedy verify steps: the dense and
+    paged paths must pick identical argmax tokens at every step."""
+    cfg, p = tm
+    rng = np.random.default_rng(5)
+    kv, plen = prefilled(cfg, p, rng)
+    table = fresh_table(1, rng, shuffle=True)
+    pool = pool_from_dense(cfg, kv, table)
+    k = 3
+    clen_v, tok_d, tok_p = plen, 5, 5
+    for step in range(4):
+        chunk = np.full((1, k + 1), 4 + step, np.int32)
+        chunk[0, 0] = tok_d
+        clen = jnp.asarray([clen_v], jnp.int32)
+        ld, _, kv = verify(p, cfg, jnp.asarray(chunk), clen, kv)
+        chunk[0, 0] = tok_p
+        lp, _, pool = verify_paged(p, cfg, jnp.asarray(chunk), clen, table,
+                                   pool)
+        tok_d = int(np.argmax(np.asarray(ld)[0, 0]))
+        tok_p = int(np.argmax(np.asarray(lp)[0, 0]))
+        assert tok_d == tok_p, f"step {step}: {tok_d} != {tok_p}"
+        clen_v += 1

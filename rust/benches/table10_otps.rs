@@ -11,6 +11,7 @@
 //! model instead of a fixed max_new — the workload where the stepped
 //! engine's mid-flight admission shows up as high slot occupancy.
 
+use p_eagle::coordinator::paged_from_env;
 use p_eagle::report::bench_otps;
 use p_eagle::runtime::ModelRuntime;
 use p_eagle::util::bench::Table;
@@ -44,7 +45,8 @@ fn main() -> anyhow::Result<()> {
                     let mut occ = 0f64;
                     for (di, ds) in datasets.iter().enumerate() {
                         let run = bench_otps(&mut mr, &format!("{target}-{method}"),
-                                             ds, k, c, total, max_new, 99, mixed, None)?;
+                                             ds, k, c, total, max_new, 99, mixed, None,
+                                             paged_from_env())?;
                         if method == "ar" {
                             ar_best[di] = ar_best[di].max(run.otps);
                         }

@@ -14,6 +14,7 @@
 //! artifacts after adding profiles). Reports AL, OTPS, and the tree's
 //! accepted-path KV commit overhead.
 
+use p_eagle::coordinator::paged_from_env;
 use p_eagle::masking::TreeTopology;
 use p_eagle::report::compare_chain_tree;
 use p_eagle::runtime::ModelRuntime;
@@ -38,8 +39,9 @@ fn main() -> anyhow::Result<()> {
         "dataset", "chain AL", "tree AL", "ΔAL", "chain OTPS", "tree OTPS", "commit",
     ]);
     for ds in datasets {
-        let (chain, treed) =
-            compare_chain_tree(&mut mr, drafter, ds, &tree, 2, reqs, max_new, 99, false)?;
+        let (chain, treed) = compare_chain_tree(
+            &mut mr, drafter, ds, &tree, 2, reqs, max_new, 99, false, paged_from_env(),
+        )?;
         assert!(
             treed.acceptance_length + 1e-9 >= chain.acceptance_length,
             "{ds}: tree AL {:.3} < chain AL {:.3} — the rank-0 chain embedding \

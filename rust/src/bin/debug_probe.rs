@@ -85,6 +85,7 @@ fn main() -> anyhow::Result<()> {
                 max_new_tokens: 16,
                 sampling: Sampling::Greedy,
                 tree: None,
+                paged: None,
                 seed: 5,
             };
             let spec = p_eagle::workload::RequestSpec {

@@ -37,7 +37,9 @@ pub struct DrafterInfo {
 pub struct ExecutableInfo {
     pub name: String,
     pub path: String,
-    pub kind: String, // prefill | verify | draft | verify-tree | draft-tree | selftest
+    /// prefill | verify | verify-paged | draft | verify-tree |
+    /// verify-tree-paged | draft-tree | selftest
+    pub kind: String,
     pub model: Option<String>,
     pub drafter: Option<String>,
     pub batch: Option<usize>,
@@ -45,6 +47,10 @@ pub struct ExecutableInfo {
     pub k: Option<usize>,
     /// static tree topology id (e.g. "chain5", "w3x2x1") for *-tree kinds
     pub topology: Option<String>,
+    /// *-paged kinds: token width of one KV pool block (baked into the HLO)
+    pub block_size: Option<usize>,
+    /// *-paged kinds: physical pool size the executable was lowered with
+    pub num_blocks: Option<usize>,
 }
 
 #[derive(Debug)]
@@ -52,6 +58,9 @@ pub struct Manifest {
     pub root: PathBuf,
     pub vocab: usize,
     pub s_max: usize,
+    /// token width of one paged-KV pool block (python `configs.KV_BLOCK_SIZE`;
+    /// 16 when the manifest predates paged lowering)
+    pub kv_block_size: usize,
     pub prompt_pad: usize,
     pub ctx_window: usize,
     pub pad_id: i32,
@@ -142,6 +151,8 @@ impl Manifest {
                 batch: e.get("batch").and_then(|x| x.as_usize()),
                 k: e.get("k").and_then(|x| x.as_usize()),
                 topology: e.get("topology").and_then(|x| x.as_str()).map(String::from),
+                block_size: e.get("block_size").and_then(|x| x.as_usize()),
+                num_blocks: e.get("num_blocks").and_then(|x| x.as_usize()),
             })
             .collect();
 
@@ -167,6 +178,7 @@ impl Manifest {
             root,
             vocab: v.usize_of("vocab"),
             s_max: v.usize_of("s_max"),
+            kv_block_size: v.get("kv_block_size").and_then(|x| x.as_usize()).unwrap_or(16),
             prompt_pad: v.usize_of("prompt_pad"),
             ctx_window: v.usize_of("ctx_window"),
             pad_id: v.usize_of("pad_id") as i32,

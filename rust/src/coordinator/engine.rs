@@ -29,6 +29,16 @@
 //! chain-shaped topology (`TreeTopology::chain(k)`) takes the exact same
 //! code path but never needs compaction, and is byte-identical to classic
 //! chain decoding (`tree: None`).
+//!
+//! The KV cache *layout* is a config choice too: with [`EngineConfig::paged`]
+//! set, the device cache is a block pool addressed through per-slot block
+//! tables ([`SlotManager`] becomes a real allocator), admission is gated on
+//! free-block headroom, and the tree accepted-path commit becomes
+//! block-table rewires plus block-confined copies
+//! ([`crate::runtime::kv_blocks`]) instead of the dense host-side
+//! compaction. A fully provisioned paged engine is byte-identical to the
+//! dense one; a constrained block budget trades queueing (tracked as
+//! `admissions_blocked`) for a KV footprint that scales with tokens held.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -41,9 +51,33 @@ use super::request::{FinishReason, RequestResult, RequestSpec};
 use super::sampler::{accept_chain, accept_tree, sample, Sampling};
 use crate::masking::TreeTopology;
 use crate::runtime::{
-    compact_kv_path, splice_kv_row, DraftExec, HostTensor, ModelRuntime, TargetExec,
+    apply_path_copies, compact_kv_path, plan_path_commit, splice_kv_row,
+    splice_kv_row_blocks, DraftExec, HostTensor, ModelRuntime, TargetExec,
 };
 use crate::util::rng::Rng;
+
+/// Block-paged KV cache configuration ([`EngineConfig::paged`]).
+///
+/// `block_size`: `None` (the default) uses the manifest's `kv_block_size` —
+/// the pool layout is baked into the lowered paged executables, so there is
+/// exactly one right answer; `Some(bs)` additionally *asserts* that the
+/// manifest agrees (a guard against serving stale artifacts). `num_blocks`
+/// caps the *logical* block budget the allocator may hand out — `None`
+/// means fully provisioned (`batch * s_max / block_size`, byte-identical
+/// behavior to the dense cache), smaller values create real admission
+/// pressure (requests queue on free blocks, tracked as
+/// `EngineMetrics::admissions_blocked`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PagedKvConfig {
+    pub block_size: Option<usize>,
+    pub num_blocks: Option<usize>,
+}
+
+/// `PEAGLE_PAGED=1` flips engines built by the test helpers / benches into
+/// paged mode (the CI paged job sets it); anything else returns `None`.
+pub fn paged_from_env() -> Option<PagedKvConfig> {
+    (std::env::var("PEAGLE_PAGED").ok().as_deref() == Some("1")).then(PagedKvConfig::default)
+}
 
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -64,6 +98,12 @@ pub struct EngineConfig {
     /// `Some(TreeTopology::chain(k))` is the degenerate tree and must emit
     /// byte-identical tokens (integration-tested).
     pub tree: Option<TreeTopology>,
+    /// block-paged KV cache: the device cache becomes a block pool addressed
+    /// through per-slot block tables and admission is gated on free-block
+    /// headroom. `None` = the dense `[L, 2, B, S_MAX, H, Dh]` cache. A fully
+    /// provisioned paged engine must emit byte-identical tokens to the dense
+    /// one (integration-tested for chain and tree modes).
+    pub paged: Option<PagedKvConfig>,
 }
 
 /// One streamed engine occurrence, in emission order within a step.
@@ -190,15 +230,38 @@ impl EngineCore {
         if b == 0 {
             bail!("engine width must be >= 1");
         }
-        let (te, de, n_draft, tree_mask) = match &cfg.tree {
-            Some(tree) => {
-                let te = mr.ensure_verify_tree(&cfg.target, b, tree)?;
+        if let Some(p) = cfg.paged {
+            let bs = mr.manifest.kv_block_size;
+            if let Some(want) = p.block_size {
+                if want != bs {
+                    bail!(
+                        "paged block_size {want} != manifest kv_block_size {bs} (the pool \
+                         layout is baked into the lowered paged executables)"
+                    );
+                }
+            }
+            if mr.manifest.s_max % bs != 0 {
+                bail!("s_max {} not divisible by kv_block_size {bs}", mr.manifest.s_max);
+            }
+        }
+        let (te, de, n_draft, tree_mask) = match (&cfg.tree, cfg.paged) {
+            (Some(tree), paged) => {
+                let te = match paged {
+                    Some(_) => mr.ensure_verify_tree_paged(&cfg.target, b, tree)?,
+                    None => mr.ensure_verify_tree(&cfg.target, b, tree)?,
+                };
                 let de = mr.ensure_drafter_tree(&cfg.drafter, b, tree)?;
                 let m = tree.build_mask();
                 let mask = HostTensor::i32(&[m.n, m.n], m.to_i32());
                 (te, de, tree.len(), Some(mask))
             }
-            None => (
+            (None, Some(_)) => (
+                mr.ensure_verify_paged(&cfg.target, b, cfg.k)?,
+                mr.ensure_drafter(&cfg.drafter, b, cfg.k)?,
+                cfg.k,
+                None,
+            ),
+            (None, None) => (
                 mr.ensure_verify(&cfg.target, b, cfg.k)?,
                 mr.ensure_drafter(&cfg.drafter, b, cfg.k)?,
                 cfg.k,
@@ -208,9 +271,27 @@ impl EngineCore {
         let te1 = mr.ensure_prefill(&cfg.target, 1)?;
         let info = mr.manifest.target(&cfg.target)?;
         let fdim = info.feature_dim;
-        let kv = mr.zero_kv(&cfg.target, b)?;
+        // paged: the physical pool matches the lowered executable; the
+        // allocator's logical budget may be smaller (block 0 stays reserved
+        // as the null block either way)
+        let (kv, slotmgr) = match cfg.paged {
+            Some(p) => {
+                let bs = mr.manifest.kv_block_size;
+                let phys = te
+                    .num_blocks
+                    .ok_or_else(|| anyhow::anyhow!("paged executable carries no num_blocks"))?;
+                let budget = p.num_blocks.unwrap_or(phys - 1).min(phys - 1);
+                (
+                    mr.zero_kv_pool(&cfg.target, phys, bs)?,
+                    SlotManager::new_paged(b, mr.manifest.s_max, n_draft + 1, bs, budget),
+                )
+            }
+            None => (
+                mr.zero_kv(&cfg.target, b)?,
+                SlotManager::new(b, mr.manifest.s_max, n_draft + 1),
+            ),
+        };
         let kv1_zero = mr.zero_kv(&cfg.target, 1)?;
-        let slotmgr = SlotManager::new(b, mr.manifest.s_max, n_draft + 1);
         let mut slots = Vec::with_capacity(b);
         slots.resize_with(b, || None);
         // AL ceiling = max accepted path + bonus: tree depth (or K) + 1
@@ -255,6 +336,15 @@ impl EngineCore {
                 spec.id,
                 self.slotmgr.chunk,
                 self.slotmgr.s_max
+            );
+        }
+        if !self.slotmgr.request_fits(plen) {
+            bail!(
+                "request {}: prompt len {plen} + chunk {} needs more KV blocks than \
+                 the paged pool's {} total",
+                spec.id,
+                self.slotmgr.chunk,
+                self.slotmgr.blocks_total()
             );
         }
         self.queue.push_back((spec, Instant::now()));
@@ -338,6 +428,18 @@ impl EngineCore {
             if self.slots[i].is_some() {
                 continue;
             }
+            // paged gating: a free SLOT is not enough — the queue head also
+            // needs free BLOCKS for prompt + one speculation chunk. FIFO: a
+            // blocked head defers the whole queue (no head-of-line bypass),
+            // counted as preemption pressure. Requests that could never fit
+            // were rejected at add_request, so blocks freed by evictions
+            // always unblock the head eventually.
+            if let Some((front, _)) = self.queue.front() {
+                if !self.slotmgr.can_admit(front.prompt.len()) {
+                    self.metrics.admissions_blocked += 1;
+                    break;
+                }
+            }
             let Some((spec, t_submit)) = self.queue.pop_front() else { break };
             let t0 = Instant::now();
             let plen = spec.prompt.len();
@@ -355,7 +457,11 @@ impl EngineCore {
             if shared_host.is_none() {
                 shared_host = Some(mr.rt.download(&self.kv)?);
             }
-            splice_kv_row(shared_host.as_mut().unwrap(), &row, i)?;
+            if self.slotmgr.is_paged() {
+                splice_kv_row_blocks(shared_host.as_mut().unwrap(), &row, self.slotmgr.table(i), plen)?;
+            } else {
+                splice_kv_row(shared_host.as_mut().unwrap(), &row, i)?;
+            }
 
             let pre_logits = pre.last_logits.as_f32()?;
             let pre_feats = pre.feats.as_f32()?;
@@ -457,6 +563,10 @@ impl EngineCore {
             return Ok(StepReport { events, admitted, occupied });
         }
         self.metrics.record_occupancy(occupied, b);
+        if self.slotmgr.is_paged() {
+            self.metrics
+                .record_block_occupancy(self.slotmgr.blocks_used(), self.slotmgr.blocks_total());
+        }
 
         // --- draft inputs (masked rows: PAD tokens, zero feats, pos 0) ----
         let th = Instant::now();
@@ -497,9 +607,21 @@ impl EngineCore {
         let t2 = Instant::now();
         let chunk_t = HostTensor::i32(&[b, n + 1], chunk_buf);
         let clen_t = HostTensor::i32(&[b], cache_len.clone());
-        let ver = match &self.tree_mask {
-            Some(mask) => mr.verify_tree(&self.te, &chunk_t, &clen_t, mask, &self.kv)?,
-            None => mr.verify(&self.te, &chunk_t, &clen_t, &self.kv)?,
+        // paged: the per-slot block tables are an executable input each step
+        // (scratch blocks are already reserved — the allocator's coverage
+        // invariant — so the chunk scatter always lands in owned blocks)
+        let table_t = self.slotmgr.is_paged().then(|| {
+            let bs = self.slotmgr.block_size().unwrap();
+            let width = self.slotmgr.s_max / bs;
+            HostTensor::i32(&[b, width], self.slotmgr.block_table_i32())
+        });
+        let ver = match (&self.tree_mask, &table_t) {
+            (Some(mask), Some(table)) => {
+                mr.verify_tree_paged(&self.te, &chunk_t, &clen_t, mask, table, &self.kv)?
+            }
+            (Some(mask), None) => mr.verify_tree(&self.te, &chunk_t, &clen_t, mask, &self.kv)?,
+            (None, Some(table)) => mr.verify_paged(&self.te, &chunk_t, &clen_t, table, &self.kv)?,
+            (None, None) => mr.verify(&self.te, &chunk_t, &clen_t, &self.kv)?,
         };
         self.metrics.verify_time += t2.elapsed();
         self.kv = ver.kv;
@@ -574,14 +696,45 @@ impl EngineCore {
         self.metrics.host_time += th2.elapsed();
         self.metrics.record_iteration(&emitted_now);
 
-        // --- accepted-path KV compaction (tree mode, non-contiguous paths)
+        // --- accepted-path KV commit (tree mode, non-contiguous paths) -----
+        // Dense: compact rows through one shared host round trip
+        // (compact_kv_path). Paged: NEVER calls compact_kv_path — each path
+        // gets a block-granular plan: table-entry swaps (pure pointer
+        // surgery, no pool round trip) when the path is a block-aligned
+        // uniform shift, position copies confined to the chunk's blocks
+        // otherwise; the pool round-trips through the host only when some
+        // plan actually has copies.
         if !to_compact.is_empty() {
             let tc = Instant::now();
-            let mut host = mr.rt.download(&self.kv)?;
-            for (slot, base, path) in &to_compact {
-                compact_kv_path(&mut host, *slot, *base, path)?;
+            if self.slotmgr.is_paged() {
+                let bs = self.slotmgr.block_size().unwrap();
+                let mut copy_jobs: Vec<(usize, Vec<(usize, usize)>)> = Vec::new();
+                for (slot, base, path) in &to_compact {
+                    let plan = plan_path_commit(*base, path, bs);
+                    self.metrics.block_rewires += plan.swaps.len();
+                    for &(a, c) in &plan.swaps {
+                        self.slotmgr.swap_blocks(*slot, a, c);
+                    }
+                    if !plan.copies.is_empty() {
+                        copy_jobs.push((*slot, plan.copies));
+                    }
+                }
+                self.metrics.paged_path_commits += to_compact.len();
+                if !copy_jobs.is_empty() {
+                    let mut host = mr.rt.download(&self.kv)?;
+                    for (slot, copies) in &copy_jobs {
+                        apply_path_copies(&mut host, self.slotmgr.table(*slot), copies)?;
+                    }
+                    self.kv = mr.rt.upload(&host)?;
+                }
+            } else {
+                self.metrics.dense_compactions += to_compact.len();
+                let mut host = mr.rt.download(&self.kv)?;
+                for (slot, base, path) in &to_compact {
+                    compact_kv_path(&mut host, *slot, *base, path)?;
+                }
+                self.kv = mr.rt.upload(&host)?;
             }
-            self.kv = mr.rt.upload(&host)?;
             self.metrics.commit_time += tc.elapsed();
         }
 

@@ -1,18 +1,44 @@
-//! KV-cache slot accounting.
+//! KV-cache slot accounting and (in paged mode) a real block allocator.
 //!
-//! The dense engine-wide cache buffer (shape `[L, 2, B, S_MAX, H, Dh]`)
-//! lives on the PJRT device and is threaded through verify calls; this
-//! module owns the *accounting*: per-slot valid lengths with independent
+//! Dense mode: the engine-wide cache buffer (shape `[L, 2, B, S_MAX, H, Dh]`)
+//! lives on the PJRT device and is threaded through verify calls; this module
+//! owns the *accounting*: per-slot valid lengths with independent
 //! claim/release lifecycles (slots are claimed at different prefill lengths
 //! as the stepped engine admits mid-flight), capacity admission (a slot must
-//! always fit prompt + chunk writes), a speculative scratch region with an
-//! explicit commit/rollback lifecycle (tree verification keeps only the
+//! always fit prompt + chunk writes), and a speculative scratch region with
+//! an explicit commit/rollback lifecycle (tree verification keeps only the
 //! accepted root path of each chunk — see
-//! [`EngineCore::step`](super::engine::EngineCore::step)), and a vLLM-style
-//! paged utilization view (BLOCK_SIZE-token blocks) used by metrics and
-//! admission policy.
+//! [`EngineCore::step`](super::engine::EngineCore::step)).
+//!
+//! Paged mode ([`SlotManager::new_paged`]): the physical cache is a block
+//! pool `[L, 2, NB, BLOCK, H, Dh]` and this module becomes a vLLM-style
+//! allocator — a free list of `block_size`-token blocks plus a per-slot
+//! block table mapping logical position `q` to pool block `table[q / bs]`
+//! at offset `q % bs`. Block id 0 is the reserved *null block*: it is never
+//! allocated, and [`SlotManager::block_table_i32`] pads inactive rows and
+//! unused table entries with it so the lowered gather/scatter stays inert
+//! there. Invariant kept at all times: an active slot's table covers
+//! `len + chunk` positions, so the next verify's speculative scratch is
+//! *pre-reserved* — `begin_spec` never allocates, `commit_spec` extends the
+//! reservation for the following chunk (returning `false`, i.e. CacheFull,
+//! when the free list cannot supply it), and `rollback_spec` keeps the
+//! scratch blocks for reuse. Frees happen only at [`SlotManager::release`]
+//! and are idempotent. Admission is gated on free-*block* headroom
+//! ([`SlotManager::can_admit`]), not just free slots.
 
+/// Dense-mode utilization granularity, and the default paged block size
+/// (must match the Python lowering's `configs.KV_BLOCK_SIZE`).
 pub const BLOCK_SIZE: usize = 16;
+
+#[derive(Clone, Debug)]
+struct PagedState {
+    block_size: usize,
+    /// allocatable blocks (ids `1..=capacity`; 0 is the null block)
+    capacity: usize,
+    /// LIFO free list; initialized descending so pops hand out ascending ids
+    free: Vec<usize>,
+    tables: Vec<Vec<usize>>,
+}
 
 #[derive(Clone, Debug)]
 pub struct SlotManager {
@@ -23,6 +49,7 @@ pub struct SlotManager {
     /// slots with an open speculative scratch region (positions
     /// len .. len+chunk freshly written by a verify call, not yet committed)
     specing: Vec<bool>,
+    paged: Option<PagedState>,
 }
 
 impl SlotManager {
@@ -33,6 +60,39 @@ impl SlotManager {
             lens: vec![0; batch],
             active: vec![false; batch],
             specing: vec![false; batch],
+            paged: None,
+        }
+    }
+
+    /// Paged allocator over `capacity` blocks of `block_size` tokens.
+    /// `s_max` stays the per-slot logical ceiling (the lowered table width is
+    /// `s_max / block_size`); a capacity below `batch * s_max / block_size`
+    /// is a real memory budget — admission and growth then compete for
+    /// blocks instead of each slot owning a dense `s_max` stripe.
+    pub fn new_paged(
+        batch: usize,
+        s_max: usize,
+        chunk: usize,
+        block_size: usize,
+        capacity: usize,
+    ) -> SlotManager {
+        assert!(block_size >= 1, "block_size must be >= 1");
+        assert!(
+            s_max % block_size == 0,
+            "s_max {s_max} not divisible by block_size {block_size}"
+        );
+        SlotManager {
+            s_max,
+            chunk,
+            lens: vec![0; batch],
+            active: vec![false; batch],
+            specing: vec![false; batch],
+            paged: Some(PagedState {
+                block_size,
+                capacity,
+                free: (1..=capacity).rev().collect(),
+                tables: vec![Vec::new(); batch],
+            }),
         }
     }
 
@@ -40,14 +100,65 @@ impl SlotManager {
         self.lens.len()
     }
 
+    pub fn is_paged(&self) -> bool {
+        self.paged.is_some()
+    }
+
+    /// Paged block size; `None` in dense mode.
+    pub fn block_size(&self) -> Option<usize> {
+        self.paged.as_ref().map(|p| p.block_size)
+    }
+
+    /// Blocks needed to cover `tokens` logical positions (paged mode).
+    fn blocks_for(&self, tokens: usize) -> usize {
+        let bs = self.paged.as_ref().map(|p| p.block_size).unwrap_or(BLOCK_SIZE);
+        tokens.div_ceil(bs)
+    }
+
+    /// Whether a request of `prompt_len` tokens could EVER be admitted (fits
+    /// the logical window and, in paged mode, the total block capacity).
+    pub fn request_fits(&self, prompt_len: usize) -> bool {
+        prompt_len + self.chunk <= self.s_max
+            && self
+                .paged
+                .as_ref()
+                .is_none_or(|p| self.blocks_for(prompt_len + self.chunk) <= p.capacity)
+    }
+
+    /// Whether a request of `prompt_len` tokens can be admitted NOW: dense
+    /// mode only needs the logical window; paged mode additionally needs
+    /// enough free blocks to cover prompt + one speculation chunk.
+    pub fn can_admit(&self, prompt_len: usize) -> bool {
+        prompt_len + self.chunk <= self.s_max
+            && self
+                .paged
+                .as_ref()
+                .is_none_or(|p| p.free.len() >= self.blocks_for(prompt_len + self.chunk))
+    }
+
     /// Claim slot `i` for a request with `prompt_len` tokens. Fails if the
-    /// prompt plus one full speculation chunk cannot fit.
+    /// prompt plus one full speculation chunk cannot fit — in paged mode
+    /// that includes claiming the covering blocks from the free list.
     pub fn claim(&mut self, i: usize, prompt_len: usize) -> Result<(), String> {
         if self.active[i] {
             return Err(format!("slot {i} already active"));
         }
         if prompt_len + self.chunk > self.s_max {
             return Err(format!("prompt {prompt_len} + chunk {} > s_max {}", self.chunk, self.s_max));
+        }
+        let need = self.blocks_for(prompt_len + self.chunk);
+        if let Some(p) = &mut self.paged {
+            if p.free.len() < need {
+                return Err(format!(
+                    "slot {i}: need {need} KV blocks, {} free (capacity {})",
+                    p.free.len(),
+                    p.capacity
+                ));
+            }
+            debug_assert!(p.tables[i].is_empty(), "slot {i}: stale block table");
+            for _ in 0..need {
+                p.tables[i].push(p.free.pop().unwrap());
+            }
         }
         self.active[i] = true;
         self.lens[i] = prompt_len;
@@ -69,29 +180,54 @@ impl SlotManager {
     /// about to write `chunk` fresh positions at `len .. len + chunk`. The
     /// region is invisible to [`len`](Self::len)/[`cache_len_i32`](Self::cache_len_i32)
     /// until committed — attention masks everything at or beyond `cache_len`,
-    /// so an uncommitted (or rolled-back) region is inert garbage.
+    /// so an uncommitted (or rolled-back) region is inert garbage. In paged
+    /// mode the scratch blocks are already owned (the coverage invariant),
+    /// so this never touches the free list.
     pub fn begin_spec(&mut self, i: usize) {
         debug_assert!(self.active[i]);
         debug_assert!(!self.specing[i], "slot {i}: speculation already open");
         debug_assert!(self.lens[i] + self.chunk <= self.s_max);
+        if let Some(p) = &self.paged {
+            debug_assert!(
+                p.tables[i].len() * p.block_size >= self.lens[i] + self.chunk,
+                "slot {i}: scratch blocks not reserved"
+            );
+        }
         self.specing[i] = true;
     }
 
     /// Commit the accepted prefix of slot `i`'s scratch region: `kept`
-    /// positions (root + accepted draft nodes, already compacted to be
-    /// contiguous) become part of the valid cache. Returns false when the
-    /// slot can no longer fit another chunk (the engine must finish the
-    /// request — FinishReason::CacheFull).
+    /// positions (root + accepted draft nodes, already contiguous — the
+    /// paged tree path rewires/copies blocks first, see
+    /// [`commit planning`](crate::runtime::kv_blocks::plan_path_commit))
+    /// become part of the valid cache. Returns false when the slot can no
+    /// longer fit another chunk — because the logical window is exhausted
+    /// or, in paged mode, because the free list cannot supply the next
+    /// chunk's scratch blocks (the engine must finish the request —
+    /// FinishReason::CacheFull).
     pub fn commit_spec(&mut self, i: usize, kept: usize) -> bool {
         debug_assert!(self.specing[i], "slot {i}: commit without begin_spec");
         debug_assert!(kept <= self.chunk);
         self.specing[i] = false;
         self.lens[i] += kept;
-        self.lens[i] + self.chunk <= self.s_max
+        if self.lens[i] + self.chunk > self.s_max {
+            return false;
+        }
+        let need = self.blocks_for(self.lens[i] + self.chunk);
+        if let Some(p) = &mut self.paged {
+            while p.tables[i].len() < need {
+                match p.free.pop() {
+                    Some(b) => p.tables[i].push(b),
+                    None => return false, // block budget exhausted
+                }
+            }
+        }
+        true
     }
 
     /// Abandon slot `i`'s scratch region entirely (commit nothing). The
-    /// written positions stay masked and are overwritten by the next chunk.
+    /// written positions stay masked and are overwritten by the next chunk;
+    /// in paged mode the scratch blocks stay claimed for that reuse.
     pub fn rollback_spec(&mut self, i: usize) {
         debug_assert!(self.specing[i], "slot {i}: rollback without begin_spec");
         self.specing[i] = false;
@@ -102,10 +238,17 @@ impl SlotManager {
         self.specing[i]
     }
 
+    /// Free slot `i` (idempotent): paged tables drain back to the free list
+    /// exactly once — a second release finds an empty table and frees
+    /// nothing, so the free list never double-holds a block.
     pub fn release(&mut self, i: usize) {
         self.active[i] = false;
         self.specing[i] = false;
         self.lens[i] = 0;
+        if let Some(p) = &mut self.paged {
+            let drained = std::mem::take(&mut p.tables[i]);
+            p.free.extend(drained);
+        }
     }
 
     pub fn len(&self, i: usize) -> usize {
@@ -116,18 +259,51 @@ impl SlotManager {
         self.active[i]
     }
 
-    /// Paged-accounting view: blocks in use across all slots.
+    /// Slot `i`'s block table (pool block per covered logical-block index).
+    /// Empty in dense mode.
+    pub fn table(&self, i: usize) -> &[usize] {
+        self.paged.as_ref().map(|p| p.tables[i].as_slice()).unwrap_or(&[])
+    }
+
+    /// Swap two of slot `i`'s table entries (logical block indices) — the
+    /// paged tree-commit's rewire: an accepted scratch block becomes the
+    /// committed block at its destination position without copying a row,
+    /// and the displaced block takes its place in the (don't-care) scratch
+    /// region, so no block is ever orphaned.
+    pub fn swap_blocks(&mut self, i: usize, a: usize, b: usize) {
+        let p = self.paged.as_mut().expect("swap_blocks on a dense SlotManager");
+        debug_assert!(self.active[i]);
+        p.tables[i].swap(a, b);
+    }
+
+    /// Blocks in use across all slots. Paged mode counts actually allocated
+    /// blocks (== the sum of table lengths); dense mode reports the
+    /// utilization *view* (blocks a paged cache would need).
     pub fn blocks_used(&self) -> usize {
-        self.lens
-            .iter()
-            .zip(&self.active)
-            .filter(|(_, &a)| a)
-            .map(|(&l, _)| l.div_ceil(BLOCK_SIZE))
-            .sum()
+        match &self.paged {
+            Some(p) => p.tables.iter().map(|t| t.len()).sum(),
+            None => self
+                .lens
+                .iter()
+                .zip(&self.active)
+                .filter(|(_, &a)| a)
+                .map(|(&l, _)| l.div_ceil(BLOCK_SIZE))
+                .sum(),
+        }
     }
 
     pub fn blocks_total(&self) -> usize {
-        self.batch() * self.s_max.div_ceil(BLOCK_SIZE)
+        match &self.paged {
+            Some(p) => p.capacity,
+            None => self.batch() * self.s_max.div_ceil(BLOCK_SIZE),
+        }
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        match &self.paged {
+            Some(p) => p.free.len(),
+            None => self.blocks_total() - self.blocks_used(),
+        }
     }
 
     pub fn utilization(&self) -> f64 {
@@ -142,6 +318,21 @@ impl SlotManager {
             .zip(&self.active)
             .map(|(&l, &a)| if a { l as i32 } else { 1 })
             .collect()
+    }
+
+    /// Flat `[B * (s_max / block_size)]` i32 block table for the paged
+    /// verify executables; unused entries and inactive rows are padded with
+    /// the null block 0. Panics in dense mode.
+    pub fn block_table_i32(&self) -> Vec<i32> {
+        let p = self.paged.as_ref().expect("block_table_i32 on a dense SlotManager");
+        let width = self.s_max / p.block_size;
+        let mut out = vec![0i32; self.batch() * width];
+        for (i, t) in p.tables.iter().enumerate() {
+            for (j, &b) in t.iter().enumerate() {
+                out[i * width + j] = b as i32;
+            }
+        }
+        out
     }
 }
 
@@ -270,6 +461,226 @@ mod tests {
                     return Case::Pass;
                 }
             }
+        });
+    }
+
+    // --- paged allocator ---------------------------------------------------
+
+    fn paged(batch: usize, s_max: usize, chunk: usize, bs: usize, cap: usize) -> SlotManager {
+        SlotManager::new_paged(batch, s_max, chunk, bs, cap)
+    }
+
+    #[test]
+    fn paged_claim_takes_covering_blocks() {
+        let mut m = paged(2, 64, 6, 16, 8);
+        m.claim(0, 20).unwrap(); // 20 + 6 = 26 -> 2 blocks
+        assert_eq!(m.table(0).len(), 2);
+        assert_eq!(m.blocks_used(), 2);
+        assert_eq!(m.free_blocks(), 6);
+        // block ids are 1-based (0 is the null block), handed out ascending
+        assert_eq!(m.table(0), &[1, 2]);
+    }
+
+    #[test]
+    fn paged_claim_refuses_without_free_blocks() {
+        let mut m = paged(2, 64, 6, 16, 2);
+        m.claim(0, 20).unwrap(); // takes both blocks
+        let err = m.claim(1, 20).unwrap_err();
+        assert!(err.contains("KV blocks"), "undescriptive error: {err}");
+        assert!(!m.can_admit(20));
+        assert!(m.request_fits(20)); // fits capacity, just not right now
+        m.release(0);
+        assert!(m.can_admit(20));
+    }
+
+    #[test]
+    fn paged_commit_extends_coverage_and_signals_exhaustion() {
+        // bs 4, capacity 5: prompt 6 + chunk 3 -> 3 blocks at claim
+        let mut m = paged(1, 32, 3, 4, 5);
+        m.claim(0, 6).unwrap();
+        assert_eq!(m.table(0).len(), 3);
+        // len 6 -> 9: need ceil(12/4) = 3 blocks, still covered
+        assert!(m.advance(0, 3));
+        assert_eq!(m.table(0).len(), 3);
+        // len 9 -> 12: need ceil(15/4) = 4, takes one more
+        assert!(m.advance(0, 3));
+        assert_eq!(m.table(0).len(), 4);
+        // len 12 -> 15: need ceil(18/4) = 5, takes the last
+        assert!(m.advance(0, 3));
+        assert_eq!(m.table(0).len(), 5);
+        assert_eq!(m.free_blocks(), 0);
+        // len 15 -> 18: need 6 blocks, free list empty -> CacheFull signal
+        assert!(!m.advance(0, 3));
+    }
+
+    #[test]
+    fn paged_release_is_idempotent() {
+        let mut m = paged(1, 64, 6, 16, 4);
+        m.claim(0, 20).unwrap();
+        assert_eq!(m.free_blocks(), 2);
+        m.release(0);
+        assert_eq!(m.free_blocks(), 4);
+        m.release(0); // second release must not double-free
+        assert_eq!(m.free_blocks(), 4);
+        assert_eq!(m.blocks_used(), 0);
+    }
+
+    #[test]
+    fn paged_block_table_pads_with_null_block() {
+        let mut m = paged(2, 64, 6, 16, 8); // table width 4 per slot
+        m.claim(1, 20).unwrap(); // 2 blocks
+        let t = m.block_table_i32();
+        assert_eq!(t.len(), 8);
+        assert_eq!(&t[..4], &[0, 0, 0, 0], "inactive row must be all null");
+        assert_eq!(&t[4..6], &[1, 2]);
+        assert_eq!(&t[6..], &[0, 0], "unused entries must be null");
+        assert!(t.iter().all(|&b| b >= 0));
+    }
+
+    #[test]
+    fn paged_swap_blocks_rewires_table() {
+        let mut m = paged(1, 64, 6, 16, 4);
+        m.claim(0, 40).unwrap(); // 40 + 6 -> 3 blocks [1, 2, 3]
+        m.swap_blocks(0, 1, 2);
+        assert_eq!(m.table(0), &[1, 3, 2]);
+        // swapped tables release cleanly
+        m.release(0);
+        assert_eq!(m.free_blocks(), 4);
+    }
+
+    #[test]
+    fn paged_allocator_never_leaks_or_double_assigns() {
+        // The satellite property: under a randomized claim / spec-commit /
+        // rollback / release interleaving across slots, (a) no block is ever
+        // owned twice, (b) free ∪ owned is exactly the id range, (c)
+        // blocks_used() == the sum of table lengths, and (d) every active
+        // slot keeps its len+chunk coverage reservation.
+        check("paged-allocator", 150, |rng| {
+            let bs = 1 + rng.below(8);
+            let blocks_per_slot = 2 + rng.below(8);
+            let s_max = bs * blocks_per_slot;
+            let chunk = 1 + rng.below(s_max.min(7));
+            let batch = 1 + rng.below(4);
+            let cap = 1 + rng.below(batch * blocks_per_slot + 3);
+            let mut m = SlotManager::new_paged(batch, s_max, chunk, bs, cap);
+            for step in 0..60 {
+                let i = rng.below(batch);
+                match rng.below(5) {
+                    0 => {
+                        if !m.is_active(i) {
+                            let _ = m.claim(i, 1 + rng.below(s_max));
+                        }
+                    }
+                    1 => {
+                        if m.is_active(i) && !m.is_specing(i) {
+                            m.begin_spec(i);
+                        }
+                    }
+                    2 => {
+                        if m.is_specing(i) {
+                            if !m.commit_spec(i, rng.below(chunk + 1)) {
+                                m.release(i); // the engine evicts on CacheFull
+                            }
+                        }
+                    }
+                    3 => {
+                        if m.is_specing(i) {
+                            m.rollback_spec(i);
+                        }
+                    }
+                    _ => m.release(i), // releases are legal (and idempotent) any time
+                }
+                // (a) + (b): free ∪ tables is a permutation of 1..=cap
+                let mut seen = vec![false; cap + 1];
+                let mut owned = 0usize;
+                for s in 0..batch {
+                    for &b in m.table(s) {
+                        if b == 0 || b > cap || seen[b] {
+                            return Case::Fail {
+                                desc: format!("step {step}: block {b} double-assigned or out of range"),
+                                size: cap,
+                            };
+                        }
+                        seen[b] = true;
+                        owned += 1;
+                    }
+                }
+                if owned + m.free_blocks() != cap {
+                    return Case::Fail {
+                        desc: format!(
+                            "step {step}: {} owned + {} free != capacity {cap} (leak or dup)",
+                            owned,
+                            m.free_blocks()
+                        ),
+                        size: cap,
+                    };
+                }
+                // (c)
+                if m.blocks_used() != owned {
+                    return Case::Fail {
+                        desc: format!("step {step}: blocks_used {} != table sum {owned}", m.blocks_used()),
+                        size: cap,
+                    };
+                }
+                // (d) coverage reservation for every live slot
+                for s in 0..batch {
+                    if m.is_active(s) && m.table(s).len() * bs < m.len(s) + chunk {
+                        return Case::Fail {
+                            desc: format!(
+                                "step {step}: slot {s} coverage {} blocks < len {} + chunk {chunk}",
+                                m.table(s).len(),
+                                m.len(s)
+                            ),
+                            size: cap,
+                        };
+                    }
+                }
+            }
+            Case::Pass
+        });
+    }
+
+    #[test]
+    fn paged_parity_with_dense_accounting_when_fully_provisioned() {
+        // fully provisioned paged manager must accept/advance/refuse at
+        // exactly the same points as the dense one (the engine-level
+        // dense-vs-paged byte parity rests on this)
+        check("paged-dense-lockstep", 100, |rng| {
+            let bs = 1 + rng.below(8);
+            let blocks_per_slot = 2 + rng.below(8);
+            let s_max = bs * blocks_per_slot;
+            let chunk = 1 + rng.below(s_max.min(7));
+            let mut d = SlotManager::new(1, s_max, chunk);
+            let mut p = SlotManager::new_paged(1, s_max, chunk, bs, blocks_per_slot);
+            let prompt = 1 + rng.below(s_max);
+            let (rd, rp) = (d.claim(0, prompt), p.claim(0, prompt));
+            if rd.is_ok() != rp.is_ok() {
+                return Case::Fail {
+                    desc: format!("claim({prompt}) dense {rd:?} vs paged {rp:?}"),
+                    size: s_max,
+                };
+            }
+            if rd.is_err() {
+                return Case::Pass;
+            }
+            for _ in 0..40 {
+                let emitted = 1 + rng.below(chunk);
+                let (ad, ap) = (d.advance(0, emitted), p.advance(0, emitted));
+                if ad != ap || d.len(0) != p.len(0) {
+                    return Case::Fail {
+                        desc: format!(
+                            "advance({emitted}): dense ({ad}, len {}) vs paged ({ap}, len {})",
+                            d.len(0),
+                            p.len(0)
+                        ),
+                        size: s_max,
+                    };
+                }
+                if !ad {
+                    return Case::Pass;
+                }
+            }
+            Case::Pass
         });
     }
 }

@@ -20,6 +20,24 @@ pub struct EngineMetrics {
     /// executable width (1.0 = every row does useful work every step).
     pub slot_steps_occupied: usize,
     pub slot_steps_total: usize,
+    /// paged mode: KV blocks actually allocated per step, over the block
+    /// budget — TRUE cache occupancy (tokens held, not slots held). Zero in
+    /// dense mode.
+    pub block_steps_used: usize,
+    pub block_steps_total: usize,
+    /// paged mode: peak blocks allocated at any step
+    pub blocks_peak: usize,
+    /// paged preemption pressure: steps where the queue head had a free slot
+    /// but not enough free KV blocks to admit
+    pub admissions_blocked: usize,
+    /// paged tree commits resolved by pure block-table swaps (no data moved)
+    pub block_rewires: usize,
+    /// paged tree-mode accepted paths committed via the block planner
+    /// (rewires and/or block-confined copies — never `compact_kv_path`)
+    pub paged_path_commits: usize,
+    /// dense tree-mode accepted paths committed via host compaction
+    /// (`compact_kv_path`); must stay 0 when paged mode is on
+    pub dense_compactions: usize,
     pub draft_time: Duration,
     pub verify_time: Duration,
     /// per-slot admission overhead: batch-1 prefill + KV row splice
@@ -74,6 +92,26 @@ impl EngineMetrics {
         }
     }
 
+    /// Record one paged step's true block occupancy (`used` allocated blocks
+    /// out of a `budget`-block pool).
+    pub fn record_block_occupancy(&mut self, used: usize, budget: usize) {
+        debug_assert!(used <= budget);
+        self.block_steps_used += used;
+        self.block_steps_total += budget;
+        self.blocks_peak = self.blocks_peak.max(used);
+    }
+
+    /// Mean fraction of the paged block budget actually allocated per step —
+    /// the occupancy the dense cache cannot report (it always holds
+    /// `B * S_MAX` tokens' worth). 0.0 in dense mode.
+    pub fn mean_block_occupancy(&self) -> f64 {
+        if self.block_steps_total == 0 {
+            0.0
+        } else {
+            self.block_steps_used as f64 / self.block_steps_total as f64
+        }
+    }
+
     /// Mean acceptance length (accepted drafts + bonus per live iteration).
     pub fn acceptance_length(&self) -> f64 {
         let n: usize = self.al_histogram.iter().sum();
@@ -125,6 +163,13 @@ impl EngineMetrics {
         }
         self.slot_steps_occupied += other.slot_steps_occupied;
         self.slot_steps_total += other.slot_steps_total;
+        self.block_steps_used += other.block_steps_used;
+        self.block_steps_total += other.block_steps_total;
+        self.blocks_peak = self.blocks_peak.max(other.blocks_peak);
+        self.admissions_blocked += other.admissions_blocked;
+        self.block_rewires += other.block_rewires;
+        self.paged_path_commits += other.paged_path_commits;
+        self.dense_compactions += other.dense_compactions;
         self.draft_time += other.draft_time;
         self.verify_time += other.verify_time;
         self.admission_time += other.admission_time;
@@ -136,7 +181,7 @@ impl EngineMetrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "req={} tok={} iters={} AL={:.2} OTPS={:.0} occ={:.2} \
              draft={:?} verify={:?} admit={:?} commit={:?}",
             self.requests_finished,
@@ -149,7 +194,17 @@ impl EngineMetrics {
             self.verify_time,
             self.admission_time,
             self.commit_time,
-        )
+        );
+        if self.block_steps_total > 0 {
+            s.push_str(&format!(
+                " blkocc={:.2} blkpeak={} blocked={} rewires={}",
+                self.mean_block_occupancy(),
+                self.blocks_peak,
+                self.admissions_blocked,
+                self.block_rewires,
+            ));
+        }
+        s
     }
 }
 
@@ -214,6 +269,27 @@ mod tests {
         }
         assert_eq!(m.ttft_quantile(0.0), Duration::from_millis(5));
         assert_eq!(m.ttft_quantile(0.99), Duration::from_millis(25));
+    }
+
+    #[test]
+    fn block_occupancy_tracking() {
+        let mut m = EngineMetrics::new(2);
+        assert_eq!(m.mean_block_occupancy(), 0.0); // dense engines report 0
+        m.record_block_occupancy(3, 8);
+        m.record_block_occupancy(5, 8);
+        assert!((m.mean_block_occupancy() - 8.0 / 16.0).abs() < 1e-12);
+        assert_eq!(m.blocks_peak, 5);
+        let mut other = EngineMetrics::new(2);
+        other.record_block_occupancy(7, 8);
+        other.admissions_blocked = 2;
+        other.block_rewires = 1;
+        other.paged_path_commits = 4;
+        m.merge(&other);
+        assert_eq!(m.blocks_peak, 7);
+        assert_eq!(m.admissions_blocked, 2);
+        assert_eq!(m.block_rewires, 1);
+        assert_eq!(m.paged_path_commits, 4);
+        assert!(m.summary().contains("blkocc"));
     }
 
     #[test]

@@ -12,7 +12,9 @@ pub mod sampler;
 pub mod scheduler;
 pub mod server;
 
-pub use engine::{EngineConfig, EngineCore, EngineEvent, StepReport};
+pub use engine::{
+    paged_from_env, EngineConfig, EngineCore, EngineEvent, PagedKvConfig, StepReport,
+};
 pub use metrics::EngineMetrics;
 pub use request::{FinishReason, RequestResult, RequestSpec};
 pub use sampler::Sampling;

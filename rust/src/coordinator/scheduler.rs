@@ -49,15 +49,42 @@ impl Scheduler {
     /// smallest bucket, explicitly undersized (the core masks the empty
     /// rows; nothing is padded with fake requests). `None` iff `n == 0`:
     /// an empty backlog never spins up an engine.
+    ///
+    /// Paged mode with a finite block budget additionally consults
+    /// free-block headroom: width beyond `budget / blocks_per_request` slots
+    /// can never be concurrently admitted (the engine would gate them on
+    /// free blocks anyway), so the pick is capped there, and a budget that
+    /// cannot host even ONE minimal request (a single chunk + bonus root)
+    /// refuses outright — spinning up an engine whose every admission must
+    /// fail helps nobody.
     pub fn pick_bucket(&self, n: usize) -> Option<usize> {
         if n == 0 {
             return None;
+        }
+        let mut want = n;
+        if let Some(p) = self.cfg.paged {
+            if let Some(budget) = p.num_blocks {
+                // floor per request: the smallest admissible footprint is a
+                // 1-token prompt + one speculation chunk of scratch — N+1
+                // chunk slots, where N is the tree's node count (NOT k,
+                // which tree mode ignores) or the chain depth K. A
+                // block_size left to default-from-manifest is estimated at
+                // the dense BLOCK_SIZE; the engine's own admission gate
+                // re-checks with exact numbers.
+                let n_draft = self.cfg.tree.as_ref().map(|t| t.len()).unwrap_or(self.cfg.k);
+                let bs = p.block_size.unwrap_or(crate::coordinator::kv_cache::BLOCK_SIZE);
+                let per_req = (n_draft + 2).div_ceil(bs).max(1);
+                if budget < per_req {
+                    return None;
+                }
+                want = want.min(budget / per_req);
+            }
         }
         Some(
             self.buckets
                 .iter()
                 .rev()
-                .find(|&&b| b <= n)
+                .find(|&&b| b <= want)
                 .copied()
                 .unwrap_or(self.buckets[0]),
         )
@@ -149,6 +176,7 @@ mod tests {
             max_new_tokens: 32,
             sampling: Sampling::Greedy,
             tree: None,
+            paged: None,
             seed: 0,
         }
     }
@@ -178,6 +206,45 @@ mod tests {
         let s = Scheduler::new(cfg(), vec![2, 4]);
         assert_eq!(s.pick_bucket(1), Some(2));
         assert_eq!(s.pick_bucket(0), None);
+    }
+
+    #[test]
+    fn paged_bucket_consults_block_headroom() {
+        use crate::coordinator::engine::PagedKvConfig;
+        // K=5, block_size 4 => a minimal request needs ceil(7/4) = 2 blocks
+        let paged = |num_blocks| {
+            let mut c = cfg();
+            c.paged =
+                Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(num_blocks) });
+            Scheduler::new(c, vec![1, 2, 4])
+        };
+        // the refusal case: a 1-block budget cannot host ANY request — no
+        // engine width is admissible even with a deep backlog
+        assert_eq!(paged(1).pick_bucket(4), None);
+        // 5 blocks host at most 2 concurrent requests: width capped at 2
+        assert_eq!(paged(5).pick_bucket(4), Some(2));
+        // an ample budget changes nothing vs the slot-only policy
+        assert_eq!(paged(64).pick_bucket(4), Some(4));
+        assert_eq!(paged(64).pick_bucket(0), None);
+        // unlimited (fully provisioned) budget: slot-only policy
+        let mut c = cfg();
+        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: None });
+        assert_eq!(Scheduler::new(c, vec![1, 2, 4]).pick_bucket(3), Some(2));
+    }
+
+    #[test]
+    fn paged_bucket_uses_tree_chunk_width_not_k() {
+        use crate::coordinator::engine::PagedKvConfig;
+        use crate::masking::TreeTopology;
+        // tree w:3,2,1,1,1 = 8 nodes -> minimal footprint ceil(10/4) = 3
+        // blocks, even though cfg.k (5) alone would suggest 2. A 2-block
+        // budget must refuse (every add_request would bail on capacity).
+        let mut c = cfg();
+        c.tree = Some(TreeTopology::from_widths(&[3, 2, 1, 1, 1]));
+        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(2) });
+        assert_eq!(Scheduler::new(c.clone(), vec![1, 2, 4]).pick_bucket(4), None);
+        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(7) });
+        assert_eq!(Scheduler::new(c, vec![1, 2, 4]).pick_bucket(4), Some(2));
     }
 
     #[test]

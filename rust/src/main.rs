@@ -5,9 +5,12 @@
 //!   selftest                          runtime smoke test (loads artifacts)
 //!   serve      --target --method --k --concurrency --requests
 //!              [--dataset --max-new --quiet]   (streams engine step events)
+//!              [--paged [--kv-blocks N]]       (block-paged KV cache;
+//!                                      --kv-blocks caps the block budget)
 //!   eval-acceptance --drafter --dataset [--k --requests --max-new]
 //!   bench-otps --target --method --k --concurrency
 //!              [--dataset --mixed --profile]
+//!              [--paged [--kv-blocks N]]
 //!              [--tree [--tree-topo chain:K|w:w1,w2,..]]
 //!                                     (--tree runs a chain-vs-tree pair on
 //!                                      the same workload seed and reports
@@ -19,7 +22,7 @@ use anyhow::{anyhow, Result};
 
 use p_eagle::config::Manifest;
 use p_eagle::coordinator::server::spawn;
-use p_eagle::coordinator::{EngineConfig, Sampling, ServerEvent};
+use p_eagle::coordinator::{paged_from_env, EngineConfig, PagedKvConfig, Sampling, ServerEvent};
 use p_eagle::masking::TreeTopology;
 use p_eagle::memmodel;
 use p_eagle::report;
@@ -28,6 +31,19 @@ use p_eagle::util::cli::Args;
 
 fn artifacts_root(args: &Args) -> String {
     args.get_or("artifacts", "artifacts")
+}
+
+/// `--paged [--kv-blocks N]` (or the `PEAGLE_PAGED=1` env the CI paged job
+/// sets): serve from the block-paged KV cache; `--kv-blocks` budgets the
+/// allocator below full provisioning (admission then queues on free blocks)
+/// and implies `--paged` — a block budget on the dense cache would be
+/// silently meaningless. Block size always comes from the manifest.
+fn paged_opts(args: &Args) -> Option<PagedKvConfig> {
+    let kv_blocks = args
+        .get("kv-blocks")
+        .map(|n| n.parse().unwrap_or_else(|_| panic!("--kv-blocks expects a number")));
+    let on = args.flag("paged") || kv_blocks.is_some() || paged_from_env().is_some();
+    on.then(|| PagedKvConfig { block_size: None, num_blocks: kv_blocks })
 }
 
 fn main() -> Result<()> {
@@ -106,6 +122,7 @@ fn serve(args: &Args) -> Result<()> {
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         tree: None,
+        paged: paged_opts(args),
         seed: 7,
     };
     // ready/error handshake: a bad artifacts root fails here, not in a log
@@ -209,6 +226,7 @@ fn bench_otps(args: &Args) -> Result<()> {
         }
         let (chain, treed) = report::compare_chain_tree(
             &mut mr, &drafter, &dataset, &tree, conc, total, max_new, 11, mixed,
+            paged_opts(args),
         )?;
         println!(
             "chain[{target}/{method} K={} C={conc} {dataset}{}] OTPS {:.0}  AL {:.2}  occ {:.2}",
@@ -249,6 +267,7 @@ fn bench_otps(args: &Args) -> Result<()> {
 
     let run = report::bench_otps(
         &mut mr, &drafter, &dataset, k, conc, total, max_new, 11, mixed, None,
+        paged_opts(args),
     )?;
     println!(
         "OTPS[{target}/{method} K={k} C={conc} {dataset}{}] = {:.0} (AL {:.2}, occupancy {:.2})",
@@ -257,6 +276,15 @@ fn bench_otps(args: &Args) -> Result<()> {
         run.acceptance_length,
         run.mean_occupancy,
     );
+    if run.metrics.block_steps_total > 0 {
+        println!(
+            "paged: block occupancy {:.2} (peak {} blocks), admissions blocked {}, rewires {}",
+            run.metrics.mean_block_occupancy(),
+            run.metrics.blocks_peak,
+            run.metrics.admissions_blocked,
+            run.metrics.block_rewires,
+        );
+    }
     if args.flag("profile") {
         let m = &run.metrics;
         println!(

@@ -73,22 +73,62 @@ impl TreeTopology {
         TreeTopology { widths: widths.to_vec(), parent, depth, level_rank }
     }
 
+    /// Largest depth [`parse`](Self::parse) accepts. The verify chunk is
+    /// N+1 wide and must fit a KV slot with room to decode — depths past
+    /// this are always a typo, not a topology.
+    pub const MAX_PARSE_DEPTH: usize = 64;
+    /// Largest node count [`parse`](Self::parse) accepts — caps the
+    /// per-step verify width (and what a malformed spec can allocate).
+    pub const MAX_PARSE_NODES: usize = 1024;
+
     /// Parse a CLI/config spec: `"chain:5"` or a width profile `"w:3,2,1"`.
+    ///
+    /// Untrusted-input safe (fuzz-tested): never panics, never allocates
+    /// proportionally to a hostile spec (depth/node ceilings
+    /// [`MAX_PARSE_DEPTH`](Self::MAX_PARSE_DEPTH) /
+    /// [`MAX_PARSE_NODES`](Self::MAX_PARSE_NODES) are checked before
+    /// construction), and every rejection names the offending spec.
     pub fn parse(spec: &str) -> Result<TreeTopology, String> {
         if let Some(k) = spec.strip_prefix("chain:") {
-            let k: usize =
-                k.parse().map_err(|_| format!("bad chain depth in {spec:?}"))?;
+            let k: usize = k
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad chain depth in {spec:?} (want chain:<K>)"))?;
             if k == 0 {
-                return Err("chain depth must be >= 1".into());
+                return Err(format!("chain depth must be >= 1 in {spec:?}"));
+            }
+            if k > Self::MAX_PARSE_DEPTH {
+                return Err(format!(
+                    "chain depth {k} exceeds the maximum {} in {spec:?}",
+                    Self::MAX_PARSE_DEPTH
+                ));
             }
             return Ok(TreeTopology::chain(k));
         }
         if let Some(ws) = spec.strip_prefix("w:") {
             let widths: Result<Vec<usize>, _> =
                 ws.split(',').map(|x| x.trim().parse::<usize>()).collect();
-            let widths = widths.map_err(|_| format!("bad width profile in {spec:?}"))?;
+            let widths = widths
+                .map_err(|_| format!("bad width profile in {spec:?} (want w:<w1,w2,..>)"))?;
             if widths.is_empty() || widths.iter().any(|&w| w == 0) {
                 return Err(format!("empty/zero width level in {spec:?}"));
+            }
+            if widths.len() > Self::MAX_PARSE_DEPTH {
+                return Err(format!(
+                    "{} levels exceed the maximum depth {} in {spec:?}",
+                    widths.len(),
+                    Self::MAX_PARSE_DEPTH
+                ));
+            }
+            let nodes = widths
+                .iter()
+                .try_fold(0usize, |a, &w| a.checked_add(w))
+                .filter(|&n| n <= Self::MAX_PARSE_NODES);
+            if nodes.is_none() {
+                return Err(format!(
+                    "width profile totals more than {} nodes in {spec:?}",
+                    Self::MAX_PARSE_NODES
+                ));
             }
             return Ok(TreeTopology::from_widths(&widths));
         }
@@ -241,7 +281,7 @@ impl TreeMask {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::prop::{check, Case};
+    use crate::util::prop::{check, ensure, Case};
 
     #[test]
     fn chain_shape() {
@@ -304,6 +344,78 @@ mod tests {
         assert!(TreeTopology::parse("chain:0").is_err());
         assert!(TreeTopology::parse("w:2,0").is_err());
         assert!(TreeTopology::parse("ring:4").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs_descriptively() {
+        // every rejection must be an Err (never a panic) whose message names
+        // the offending spec or constraint — these feed straight back to CLI
+        // users via `--tree-topo`
+        for spec in [
+            "", "w:", "w:,", "w:1,", "w:1,,2", "w:-1", "w:1.5", "w: ", "chain:",
+            "chain:abc", "chain:-3", "chain:1e3", "w:0", "w:3,0,1", "tree:3",
+            "w:18446744073709551616", "chain:18446744073709551616", "🌲", "w:🌲",
+        ] {
+            let err = TreeTopology::parse(spec).unwrap_err();
+            assert!(!err.is_empty(), "empty error for {spec:?}");
+            assert!(
+                err.contains("spec") || err.contains('"') || err.contains(">="),
+                "error for {spec:?} lacks context: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_caps_oversized_profiles() {
+        // zero-width levels and oversized profiles error instead of
+        // allocating (the satellite's DoS-shaped inputs)
+        assert!(TreeTopology::parse("chain:64").is_ok());
+        let err = TreeTopology::parse("chain:65").unwrap_err();
+        assert!(err.contains("maximum"), "{err}");
+        assert!(TreeTopology::parse("w:1024").is_ok());
+        let err = TreeTopology::parse("w:1025").unwrap_err();
+        assert!(err.contains("1024"), "{err}");
+        // sum overflow must not wrap into a small accepted profile
+        let err =
+            TreeTopology::parse("w:9223372036854775807,9223372036854775807").unwrap_err();
+        assert!(err.contains("nodes"), "{err}");
+        let deep = format!("w:{}", vec!["1"; 65].join(","));
+        let err = TreeTopology::parse(&deep).unwrap_err();
+        assert!(err.contains("depth"), "{err}");
+    }
+
+    #[test]
+    fn parse_fuzz_never_panics() {
+        // proptest-style fuzz: structured mutations around the grammar plus
+        // raw printable noise. parse must return Ok or a non-empty Err —
+        // never panic, never hang, never allocate past the caps.
+        let fragments = [
+            "chain", "w", ":", ",", "0", "1", "9", "99999999999999999999", "-",
+            " ", ".", "x", "🌲", "chain:", "w:", "\0", "\n",
+        ];
+        check("tree-parse-fuzz", 500, |rng| {
+            let mut spec = String::new();
+            for _ in 0..rng.below(8) {
+                spec.push_str(fragments[rng.below(fragments.len())]);
+            }
+            let result = std::panic::catch_unwind(|| TreeTopology::parse(&spec));
+            match result {
+                Ok(Ok(t)) => ensure(
+                    !t.is_empty() && t.len() <= TreeTopology::MAX_PARSE_NODES,
+                    format!("accepted {spec:?} with {} nodes", t.len()),
+                    spec.len(),
+                ),
+                Ok(Err(e)) => ensure(
+                    !e.is_empty(),
+                    format!("empty error for {spec:?}"),
+                    spec.len(),
+                ),
+                Err(_) => Case::Fail {
+                    desc: format!("parse PANICKED on {spec:?}"),
+                    size: spec.len(),
+                },
+            }
+        });
     }
 
     #[test]

@@ -7,7 +7,8 @@ use anyhow::{anyhow, Result};
 
 use crate::config::Manifest;
 use crate::coordinator::{
-    run_closed_loop, EngineConfig, EngineCore, EngineMetrics, RequestResult, Sampling,
+    run_closed_loop, EngineConfig, EngineCore, EngineMetrics, PagedKvConfig, RequestResult,
+    Sampling,
 };
 use crate::masking::TreeTopology;
 use crate::runtime::ModelRuntime;
@@ -70,6 +71,7 @@ pub fn eval_acceptance(
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         tree: None,
+        paged: None,
         seed: 42,
     };
     let mut queue = reqs.into_iter();
@@ -111,7 +113,9 @@ pub struct OtpsRun {
 /// slots re-admit mid-flight instead of idling behind the longest request.
 /// With `tree` set, the engine drafts/verifies that static topology instead
 /// of a K-chain (`k` is then ignored); the same workload seed makes
-/// chain-vs-tree runs directly comparable.
+/// chain-vs-tree runs directly comparable. With `paged` set, the engine
+/// serves from the block-paged KV cache (same workload seed ⇒ directly
+/// comparable to the dense run, and byte-identical when fully provisioned).
 #[allow(clippy::too_many_arguments)]
 pub fn bench_otps(
     mr: &mut ModelRuntime,
@@ -124,6 +128,7 @@ pub fn bench_otps(
     seed: u64,
     mixed_lengths: bool,
     tree: Option<&TreeTopology>,
+    paged: Option<PagedKvConfig>,
 ) -> Result<OtpsRun> {
     let info = mr.manifest.drafter(drafter)?.clone();
     let mut arr = closed_loop_arrivals(&mr.manifest, dataset, max_new, seed)?;
@@ -137,6 +142,7 @@ pub fn bench_otps(
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         tree: tree.cloned(),
+        paged,
         seed,
     };
     // warmup: compile/load the executables + weights outside the timed loop
@@ -185,15 +191,16 @@ pub fn compare_chain_tree(
     max_new: usize,
     seed: u64,
     mixed_lengths: bool,
+    paged: Option<PagedKvConfig>,
 ) -> Result<(OtpsRun, OtpsRun)> {
     let k = tree.max_depth();
     let chain = bench_otps(
         mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
-        mixed_lengths, None,
+        mixed_lengths, None, paged,
     )?;
     let treed = bench_otps(
         mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
-        mixed_lengths, Some(tree),
+        mixed_lengths, Some(tree), paged,
     )?;
     Ok((chain, treed))
 }

@@ -1,0 +1,378 @@
+//! Block-granular host-side KV surgery for the paged cache — the paged
+//! replacements for [`splice_kv_row`](super::models::splice_kv_row) and
+//! [`compact_kv_path`](super::models::compact_kv_path).
+//!
+//! The paged physical cache is a block pool `[L, 2, NB, BS, H, Dh]`; logical
+//! position `q` of a slot lives in pool block `table[q / BS]` at offset
+//! `q % BS` (block 0 is the reserved null block — see
+//! [`SlotManager`](crate::coordinator::kv_cache::SlotManager)).
+//!
+//! Two operations need host arithmetic:
+//!
+//! * **Admission** ([`splice_kv_row_blocks`]): the batch-1 prefill still
+//!   produces a dense `[L, 2, 1, S, H, Dh]` row; its first `prompt_len`
+//!   positions are scattered into the slot's freshly claimed blocks.
+//! * **Tree accepted-path commit** ([`plan_path_commit`]): after tree
+//!   verification, chunk slot `path[m-1]` (written at logical `base + path
+//!   [m-1]`) must end up at logical `base + m`. Dense mode copies rows
+//!   through the whole downloaded cache; paged mode first tries to *rewire*
+//!   — when the accepted path is a uniform block-aligned shift, whole table
+//!   entries swap places (pure pointer surgery, no pool round trip at all)
+//!   — and otherwise falls back to position copies confined to the ≤ 2
+//!   blocks the chunk spans. With the default `BLOCK_SIZE = 16 > chunk`,
+//!   rewires only fire on smaller configured block sizes; the copies path
+//!   is still block-mapped and never touches unrelated slots' data.
+
+use anyhow::Result;
+
+use super::tensors::{HostData, HostTensor};
+
+/// How one accepted tree path commits into a paged cache.
+///
+/// `swaps` are pairs of LOGICAL block indices of the owning slot's table
+/// (apply via `SlotManager::swap_blocks` — no data moves); `copies` are
+/// `(src, dst)` LOGICAL positions to copy through the table
+/// ([`apply_path_copies`]). A plan is either swaps-only or copies-only:
+/// mixing them would let a copy read a block a swap already moved.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct PathCommitPlan {
+    pub swaps: Vec<(usize, usize)>,
+    pub copies: Vec<(usize, usize)>,
+}
+
+impl PathCommitPlan {
+    pub fn is_noop(&self) -> bool {
+        self.swaps.is_empty() && self.copies.is_empty()
+    }
+}
+
+/// Plan the paged commit of an accepted tree path: the m-th accepted node
+/// (1-based) sits at logical `base + path[m-1]` and must land at
+/// `base + m`. `path` is strictly increasing with `path[m-1] >= m`
+/// (level-major node ids along a root path), so ascending copies never
+/// clobber a pending source — the same argument as the dense
+/// [`compact_kv_path`](super::models::compact_kv_path).
+///
+/// Fast path: when the path is a uniform shift `path[m-1] == m + d` with
+/// `d % block_size == 0`, and both the destination run `[base+1, base+len]`
+/// and its length are block-aligned, every destination block's content is
+/// exactly some scratch block's content — the plan is pure table swaps
+/// (ascending, chain-safe: each swap's source entry is untouched by the
+/// previous ones because sources always lie strictly ahead of
+/// destinations).
+pub fn plan_path_commit(base: usize, path: &[usize], block_size: usize) -> PathCommitPlan {
+    let bs = block_size;
+    let mut plan = PathCommitPlan::default();
+    if path.is_empty() || path.iter().enumerate().all(|(m, &node)| node == m + 1) {
+        return plan; // chain-shaped prefix: already in place
+    }
+    let d = path[0] - 1;
+    let uniform = path.iter().enumerate().all(|(m, &node)| node == m + 1 + d);
+    if uniform && d > 0 && d % bs == 0 && (base + 1) % bs == 0 && path.len() % bs == 0 {
+        let first = (base + 1) / bs;
+        for j in 0..path.len() / bs {
+            plan.swaps.push((first + j, first + j + d / bs));
+        }
+        return plan;
+    }
+    for (m, &node) in path.iter().enumerate() {
+        let m = m + 1;
+        if node != m {
+            plan.copies.push((base + node, base + m));
+        }
+    }
+    plan
+}
+
+fn pool_dims(pool: &HostTensor) -> Result<(usize, usize, usize, usize)> {
+    anyhow::ensure!(pool.dims.len() == 6, "KV pool must be rank 6, got {:?}", pool.dims);
+    // [L, 2, NB, BS, H, Dh]
+    let planes = pool.dims[0] * pool.dims[1];
+    let nb = pool.dims[2];
+    let bs = pool.dims[3];
+    let elems = pool.dims[4] * pool.dims[5];
+    Ok((planes, nb, bs, elems))
+}
+
+/// Physical element offset of logical position `pos` within one plane of the
+/// pool (caller adds `plane * nb * bs * elems`).
+fn phys_off(table: &[usize], bs: usize, elems: usize, pos: usize) -> usize {
+    (table[pos / bs] * bs + pos % bs) * elems
+}
+
+/// Scatter the single batch row of `row` (a dense `[L, 2, 1, S, H, Dh]` KV
+/// cache, e.g. an admission prefill output) into the pool blocks named by
+/// `table`, positions `0 .. valid_len`. The paged twin of
+/// [`splice_kv_row`](super::models::splice_kv_row): only the owning slot's
+/// blocks are written, so no other slot can be perturbed by construction.
+pub fn splice_kv_row_blocks(
+    pool: &mut HostTensor,
+    row: &HostTensor,
+    table: &[usize],
+    valid_len: usize,
+) -> Result<()> {
+    let (planes, nb, bs, elems) = pool_dims(pool)?;
+    anyhow::ensure!(row.dims.len() == 6, "KV row must be rank 6, got {:?}", row.dims);
+    anyhow::ensure!(row.dims[2] == 1, "source KV must be batch 1, got {:?}", row.dims);
+    anyhow::ensure!(
+        pool.dims[0] == row.dims[0]
+            && pool.dims[1] == row.dims[1]
+            && pool.dims[4..] == row.dims[4..],
+        "KV pool/row shape mismatch: {:?} vs {:?}",
+        pool.dims,
+        row.dims
+    );
+    let row_s = row.dims[3];
+    anyhow::ensure!(valid_len <= row_s, "valid_len {valid_len} > row length {row_s}");
+    anyhow::ensure!(
+        valid_len <= table.len() * bs,
+        "valid_len {valid_len} not covered by {} blocks of {bs}",
+        table.len()
+    );
+    anyhow::ensure!(
+        table.iter().all(|&b| b > 0 && b < nb),
+        "block table entry out of pool range 1..{nb}: {table:?}"
+    );
+    let (pool_v, row_v) = match (&mut pool.data, &row.data) {
+        (HostData::F32(d), HostData::F32(s)) => (d, s),
+        _ => anyhow::bail!("KV caches must both be f32"),
+    };
+    for p in 0..planes {
+        let pool0 = p * nb * bs * elems;
+        let row0 = p * row_s * elems;
+        let mut pos = 0usize;
+        while pos < valid_len {
+            // contiguous run within one block
+            let run = (bs - pos % bs).min(valid_len - pos);
+            let dst = pool0 + phys_off(table, bs, elems, pos);
+            let src = row0 + pos * elems;
+            pool_v[dst..dst + run * elems].copy_from_slice(&row_v[src..src + run * elems]);
+            pos += run;
+        }
+    }
+    Ok(())
+}
+
+/// Apply a [`PathCommitPlan`]'s position copies to the pool through `table`.
+/// Copies must be ascending in destination with sources strictly ahead
+/// (guaranteed by [`plan_path_commit`]); each copy moves one position's
+/// `H * Dh` elements per plane, so the touched bytes are confined to the
+/// blocks the chunk spans.
+pub fn apply_path_copies(
+    pool: &mut HostTensor,
+    table: &[usize],
+    copies: &[(usize, usize)],
+) -> Result<()> {
+    let (planes, nb, bs, elems) = pool_dims(pool)?;
+    for &(src, dst) in copies {
+        anyhow::ensure!(src > dst, "copy source {src} must lie ahead of destination {dst}");
+        anyhow::ensure!(
+            src / bs < table.len() && table[src / bs] < nb && table[dst / bs] < nb,
+            "copy {src}->{dst} outside the slot's {} covered blocks",
+            table.len()
+        );
+    }
+    let pool_v = match &mut pool.data {
+        HostData::F32(d) => d,
+        _ => anyhow::bail!("KV pool must be f32"),
+    };
+    for p in 0..planes {
+        let pool0 = p * nb * bs * elems;
+        for &(src, dst) in copies {
+            let s = pool0 + phys_off(table, bs, elems, src);
+            let d = pool0 + phys_off(table, bs, elems, dst);
+            pool_v.copy_within(s..s + elems, d);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Case};
+
+    fn pool(nb: usize, bs: usize, fill: impl Fn(usize) -> f32) -> HostTensor {
+        // [L=1, 2, NB, BS, H=1, Dh=1]: one element per position
+        let dims = [1, 2, nb, bs, 1, 1];
+        let n: usize = dims.iter().product();
+        HostTensor::f32(&dims, (0..n).map(fill).collect())
+    }
+
+    /// Read logical position `pos` of plane `p` through `table`.
+    fn read(t: &HostTensor, table: &[usize], p: usize, pos: usize) -> f32 {
+        let (nb, bs) = (t.dims[2], t.dims[3]);
+        t.as_f32().unwrap()[p * nb * bs + table[pos / bs] * bs + pos % bs]
+    }
+
+    #[test]
+    fn splice_writes_only_owned_blocks() {
+        let (nb, bs) = (6, 4);
+        let mut pl = pool(nb, bs, |_| 0.0);
+        let row_dims = [1, 2, 1, 16, 1, 1];
+        let row = HostTensor::f32(&row_dims, (0..32).map(|i| i as f32 + 1.0).collect());
+        let table = [2usize, 5];
+        splice_kv_row_blocks(&mut pl, &row, &table, 6).unwrap();
+        for p in 0..2 {
+            for pos in 0..6 {
+                assert_eq!(read(&pl, &table, p, pos), (p * 16 + pos) as f32 + 1.0, "plane {p} pos {pos}");
+            }
+            // tail of the last covered block stays zero
+            for pos in 6..8 {
+                assert_eq!(read(&pl, &table, p, pos), 0.0);
+            }
+        }
+        // unowned blocks (incl. the null block 0) untouched
+        let v = pl.as_f32().unwrap();
+        for p in 0..2 {
+            for b in [0usize, 1, 3, 4] {
+                for o in 0..bs {
+                    assert_eq!(v[(p * nb + b) * bs + o], 0.0, "plane {p} block {b} touched");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn splice_rejects_bad_inputs() {
+        let mut pl = pool(4, 4, |_| 0.0);
+        let row = HostTensor::f32(&[1, 2, 1, 16, 1, 1], vec![0.0; 32]);
+        // valid_len beyond table coverage
+        assert!(splice_kv_row_blocks(&mut pl, &row, &[1], 5).is_err());
+        // null block in the table
+        assert!(splice_kv_row_blocks(&mut pl, &row, &[0, 1], 5).is_err());
+        // block id out of pool
+        assert!(splice_kv_row_blocks(&mut pl, &row, &[4], 2).is_err());
+        // batch > 1 source
+        let bad = HostTensor::f32(&[1, 2, 2, 8, 1, 1], vec![0.0; 32]);
+        assert!(splice_kv_row_blocks(&mut pl, &bad, &[1], 2).is_err());
+        assert!(splice_kv_row_blocks(&mut pl, &row, &[1, 2], 6).is_ok());
+    }
+
+    #[test]
+    fn plan_chain_prefix_is_noop() {
+        assert!(plan_path_commit(7, &[1, 2, 3], 4).is_noop());
+        assert!(plan_path_commit(0, &[], 4).is_noop());
+    }
+
+    #[test]
+    fn plan_general_path_is_block_mapped_copies() {
+        // path [2, 5]: node 2 -> pos base+1, node 5 -> pos base+2
+        let plan = plan_path_commit(10, &[2, 5], 4);
+        assert!(plan.swaps.is_empty());
+        assert_eq!(plan.copies, vec![(12, 11), (15, 12)]);
+    }
+
+    #[test]
+    fn plan_uniform_aligned_shift_is_pure_swaps() {
+        // bs 2, base 3 => destinations 4..=7 (blocks 2, 3); path [7,8,9,10]
+        // is the uniform shift d = 6 = 3 blocks: sources 10..=13 (blocks
+        // 5, 6) swap into place, no data moves
+        let plan = plan_path_commit(3, &[7, 8, 9, 10], 2);
+        assert_eq!(plan.swaps, vec![(2, 5), (3, 6)]);
+        assert!(plan.copies.is_empty());
+        // same path, unaligned base: falls back to copies
+        let plan = plan_path_commit(4, &[7, 8, 9, 10], 2);
+        assert!(plan.swaps.is_empty());
+        assert_eq!(plan.copies.len(), 4);
+        // odd shift: never block-aligned
+        let plan = plan_path_commit(3, &[6, 7, 8, 9], 2);
+        assert!(plan.swaps.is_empty());
+        assert_eq!(plan.copies.len(), 4);
+    }
+
+    /// Reference model: dense compaction over a logical array.
+    fn dense_reference(vals: &mut [f32], base: usize, path: &[usize]) {
+        for (m, &node) in path.iter().enumerate() {
+            vals[base + m + 1] = vals[base + node];
+        }
+    }
+
+    #[test]
+    fn plan_apply_matches_dense_compaction_property() {
+        // For random (bs, base, strictly-increasing path): applying the plan
+        // (copies through the table, swaps on the table) to a paged pool
+        // must leave the logical view of positions 0..=base+path.len()
+        // identical to the dense reference compaction.
+        check("paged-path-commit", 200, |rng| {
+            let bs = 1 + rng.below(6);
+            let base = rng.below(3 * bs);
+            let n = 1 + rng.below(10); // draft nodes
+            // strictly increasing path with path[m-1] >= m
+            let mut path = Vec::new();
+            let mut prev = 0usize;
+            for _ in 0..1 + rng.below(n.min(5)) {
+                let next = prev + 1 + rng.below(3);
+                if next > n.max(5) + 5 {
+                    break;
+                }
+                path.push(next);
+                prev = next;
+            }
+            let span = base + path.last().copied().unwrap_or(0) + 1;
+            let blocks_needed = span.div_ceil(bs);
+            let nb = blocks_needed + 2;
+            // offset table: logical block j -> physical 1 + j (ids are
+            // opaque, the null block 0 stays out — the indirection itself is
+            // what the property exercises)
+            let table: Vec<usize> = (1..=blocks_needed).collect();
+
+            // logical contents: distinct values per position
+            let mut logical: Vec<f32> = (0..blocks_needed * bs).map(|i| i as f32 + 1.0).collect();
+            let mut pl = pool(nb, bs, |_| 0.0);
+            if let HostData::F32(v) = &mut pl.data {
+                for p in 0..2 {
+                    for (pos, &val) in logical.iter().enumerate() {
+                        v[p * nb * bs + table[pos / bs] * bs + pos % bs] = val + (p * 1000) as f32;
+                    }
+                }
+            }
+
+            let plan = plan_path_commit(base, &path, bs);
+            let mut table_after = table.clone();
+            for &(a, b) in &plan.swaps {
+                if a.max(b) >= table_after.len() {
+                    return Case::Fail {
+                        desc: format!("swap ({a},{b}) outside table of {}", table_after.len()),
+                        size: bs,
+                    };
+                }
+                table_after.swap(a, b);
+            }
+            if !plan.copies.is_empty() && !plan.swaps.is_empty() {
+                return Case::Fail { desc: "mixed swap+copy plan".into(), size: bs };
+            }
+            if apply_path_copies(&mut pl, &table, &plan.copies).is_err() {
+                return Case::Fail {
+                    desc: format!("copies rejected: base {base} path {path:?} bs {bs}"),
+                    size: bs,
+                };
+            }
+
+            dense_reference(&mut logical, base, &path);
+            for p in 0..2 {
+                for pos in 0..=base + path.len() {
+                    let got = read(&pl, &table_after, p, pos);
+                    let want = logical[pos] + (p * 1000) as f32;
+                    if got != want {
+                        return Case::Fail {
+                            desc: format!(
+                                "plane {p} pos {pos}: {got} != {want} (base {base}, path {path:?}, bs {bs}, plan {plan:?})"
+                            ),
+                            size: bs + path.len(),
+                        };
+                    }
+                }
+            }
+            Case::Pass
+        });
+    }
+
+    #[test]
+    fn apply_copies_rejects_backward_moves() {
+        let mut pl = pool(4, 4, |i| i as f32);
+        assert!(apply_path_copies(&mut pl, &[1, 2], &[(3, 5)]).is_err());
+        assert!(apply_path_copies(&mut pl, &[1, 2], &[(9, 2)]).is_err()); // src beyond coverage
+        assert!(apply_path_copies(&mut pl, &[1, 2], &[(5, 3)]).is_ok());
+    }
+}

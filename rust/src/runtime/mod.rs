@@ -7,10 +7,12 @@
 //! coordinator uses.
 
 pub mod executable;
+pub mod kv_blocks;
 pub mod models;
 pub mod tensors;
 pub mod weights;
 
 pub use executable::{Arg, Runtime};
+pub use kv_blocks::{apply_path_copies, plan_path_commit, splice_kv_row_blocks, PathCommitPlan};
 pub use models::{compact_kv_path, splice_kv_row, DraftExec, ModelRuntime, TargetExec};
 pub use tensors::{HostData, HostTensor};

@@ -11,6 +11,11 @@
 //! (see `masking::tree`). [`compact_kv_path`] is the host half of the
 //! accepted-path commit: tree chunks scatter KV at `base + node_id`, and
 //! only the accepted root path survives, compacted to contiguous positions.
+//!
+//! Paged twins (`verify-paged` / `verify-tree-paged` kinds) address a block
+//! pool `[L, 2, NB, BS, H, Dh]` through a per-slot block table passed as a
+//! runtime input; their host-side surgery (admission splice, accepted-path
+//! rewire/copy) lives in [`super::kv_blocks`].
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -53,6 +58,10 @@ pub struct TargetExec {
     pub k: usize,
     /// set iff this is a tree-verify executable for that topology id
     pub topo: Option<String>,
+    /// set iff this is a block-paged verify executable
+    pub paged: bool,
+    /// physical pool size the paged executable was lowered with
+    pub num_blocks: Option<usize>,
 }
 
 /// Identifies a loaded drafter executable.
@@ -107,7 +116,7 @@ impl ModelRuntime {
             .clone();
         self.rt.load(&pre.name, &self.manifest.abs(&pre.path))?;
         self.rt.load(&ver.name, &self.manifest.abs(&ver.path))?;
-        Ok(TargetExec { target: target.to_string(), batch, k, topo: None })
+        Ok(TargetExec { target: target.to_string(), batch, k, topo: None, paged: false, num_blocks: None })
     }
 
     pub fn ensure_drafter(&mut self, drafter: &str, batch: usize, k: usize) -> Result<DraftExec> {
@@ -138,7 +147,14 @@ impl ModelRuntime {
             .find_exec_tree("verify-tree", Some(target), None, Some(batch), &id)?
             .clone();
         self.rt.load(&ver.name, &self.manifest.abs(&ver.path))?;
-        Ok(TargetExec { target: target.to_string(), batch, k: tree.len(), topo: Some(id) })
+        Ok(TargetExec {
+            target: target.to_string(),
+            batch,
+            k: tree.len(),
+            topo: Some(id),
+            paged: false,
+            num_blocks: None,
+        })
     }
 
     /// Load the tree drafter executable for `drafter` at `batch` and the
@@ -168,6 +184,73 @@ impl ModelRuntime {
         let dims = [t.n_layers, 2, batch, self.manifest.s_max, t.n_heads, t.head_dim];
         let host = HostTensor::zeros_f32(&dims);
         self.rt.upload(&host)
+    }
+
+    /// Fresh zeroed block-pool KV cache (`[L, 2, NB, BS, H, Dh]`) for the
+    /// paged executables.
+    pub fn zero_kv_pool(
+        &mut self,
+        target: &str,
+        num_blocks: usize,
+        block_size: usize,
+    ) -> Result<xla::PjRtBuffer> {
+        let t = self.manifest.target(target)?;
+        let dims = [t.n_layers, 2, num_blocks, block_size, t.n_heads, t.head_dim];
+        let host = HostTensor::zeros_f32(&dims);
+        self.rt.upload(&host)
+    }
+
+    /// Load the block-paged verify executable for `target` at (`batch`, `k`).
+    /// `TargetExec::num_blocks` reports the physical pool size the HLO was
+    /// lowered with; the engine allocates the pool to match (it may budget
+    /// fewer *logical* blocks, never more).
+    pub fn ensure_verify_paged(
+        &mut self,
+        target: &str,
+        batch: usize,
+        k: usize,
+    ) -> Result<TargetExec> {
+        let info = self.manifest.target(target)?.clone();
+        self.ensure_weights(target, &info.weights, &info.param_order)?;
+        let ver = self
+            .manifest
+            .find_exec("verify-paged", Some(target), None, Some(batch), Some(k))?
+            .clone();
+        self.rt.load(&ver.name, &self.manifest.abs(&ver.path))?;
+        Ok(TargetExec {
+            target: target.to_string(),
+            batch,
+            k,
+            topo: None,
+            paged: true,
+            num_blocks: ver.num_blocks,
+        })
+    }
+
+    /// Load the block-paged tree-verify executable for `target` at `batch`
+    /// and the given static topology.
+    pub fn ensure_verify_tree_paged(
+        &mut self,
+        target: &str,
+        batch: usize,
+        tree: &TreeTopology,
+    ) -> Result<TargetExec> {
+        let info = self.manifest.target(target)?.clone();
+        self.ensure_weights(target, &info.weights, &info.param_order)?;
+        let id = tree.id();
+        let ver = self
+            .manifest
+            .find_exec_tree("verify-tree-paged", Some(target), None, Some(batch), &id)?
+            .clone();
+        self.rt.load(&ver.name, &self.manifest.abs(&ver.path))?;
+        Ok(TargetExec {
+            target: target.to_string(),
+            batch,
+            k: tree.len(),
+            topo: Some(id),
+            paged: true,
+            num_blocks: ver.num_blocks,
+        })
     }
 
     pub fn prefill(
@@ -260,6 +343,68 @@ impl ModelRuntime {
         Ok(VerifyOut { logits, feats, kv })
     }
 
+    /// Block-paged twin of [`verify`](Self::verify): the cache argument is
+    /// the block pool, addressed through `block_table`
+    /// (`[B, s_max / block_size]` i32 pool-block ids; 0 = the reserved null
+    /// block for unused entries). Returns the same outputs with the new pool
+    /// as the threaded KV state.
+    pub fn verify_paged(
+        &mut self,
+        te: &TargetExec,
+        chunk: &HostTensor,       // [B, K+1] i32
+        cache_len: &HostTensor,   // [B] i32
+        block_table: &HostTensor, // [B, M] i32
+        pool: &xla::PjRtBuffer,
+    ) -> Result<VerifyOut> {
+        anyhow::ensure!(te.paged, "verify_paged called with a non-paged TargetExec");
+        let name = format!("{}-verify-paged-b{}-k{}", te.target, te.batch, te.k);
+        let wbufs = &self.weights[&te.target];
+        let mut args: Vec<Arg> = wbufs.iter().map(Arg::Buf).collect();
+        args.push(Arg::Host(chunk));
+        args.push(Arg::Host(cache_len));
+        args.push(Arg::Host(block_table));
+        args.push(Arg::Buf(pool));
+        let out = self.rt.call(&name, &args)?;
+        let mut it = out.into_iter();
+        let logits = self.rt.download(&it.next().context("missing logits")?)?;
+        let feats = self.rt.download(&it.next().context("missing feats")?)?;
+        let kv = it.next().context("missing kv")?;
+        Ok(VerifyOut { logits, feats, kv })
+    }
+
+    /// Block-paged twin of [`verify_tree`](Self::verify_tree); mask and
+    /// depth semantics are identical, the cache is the block pool addressed
+    /// through `block_table`.
+    pub fn verify_tree_paged(
+        &mut self,
+        te: &TargetExec,
+        chunk: &HostTensor,       // [B, N+1] i32
+        cache_len: &HostTensor,   // [B] i32
+        tree_mask: &HostTensor,   // [N+1, N+1] i32
+        block_table: &HostTensor, // [B, M] i32
+        pool: &xla::PjRtBuffer,
+    ) -> Result<VerifyOut> {
+        anyhow::ensure!(te.paged, "verify_tree_paged called with a non-paged TargetExec");
+        let topo = te
+            .topo
+            .as_deref()
+            .context("verify_tree_paged called with a non-tree TargetExec")?;
+        let name = format!("{}-verify-tree-paged-{}-b{}", te.target, topo, te.batch);
+        let wbufs = &self.weights[&te.target];
+        let mut args: Vec<Arg> = wbufs.iter().map(Arg::Buf).collect();
+        args.push(Arg::Host(chunk));
+        args.push(Arg::Host(cache_len));
+        args.push(Arg::Host(tree_mask));
+        args.push(Arg::Host(block_table));
+        args.push(Arg::Buf(pool));
+        let out = self.rt.call(&name, &args)?;
+        let mut it = out.into_iter();
+        let logits = self.rt.download(&it.next().context("missing logits")?)?;
+        let feats = self.rt.download(&it.next().context("missing feats")?)?;
+        let kv = it.next().context("missing kv")?;
+        Ok(VerifyOut { logits, feats, kv })
+    }
+
     /// Load just the prefill executable for a target at `batch` (used by the
     /// stepped engine's per-slot admission path, which never runs a verify
     /// at that width). `TargetExec::k` is irrelevant to prefill and set to 0.
@@ -271,7 +416,7 @@ impl ModelRuntime {
             .find_exec("prefill", Some(target), None, Some(batch), None)?
             .clone();
         self.rt.load(&pre.name, &self.manifest.abs(&pre.path))?;
-        Ok(TargetExec { target: target.to_string(), batch, k: 0, topo: None })
+        Ok(TargetExec { target: target.to_string(), batch, k: 0, topo: None, paged: false, num_blocks: None })
     }
 
     /// Load just the verify executable for a target at (`batch`, `k`) — the
@@ -286,7 +431,7 @@ impl ModelRuntime {
             .find_exec("verify", Some(target), None, Some(batch), Some(k))?
             .clone();
         self.rt.load(&ver.name, &self.manifest.abs(&ver.path))?;
-        Ok(TargetExec { target: target.to_string(), batch, k, topo: None })
+        Ok(TargetExec { target: target.to_string(), batch, k, topo: None, paged: false, num_blocks: None })
     }
 
     /// Draft K chain tokens — or N tree-node tokens when `de` was loaded by

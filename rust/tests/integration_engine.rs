@@ -9,7 +9,8 @@
 //! stayed live.
 
 use p_eagle::coordinator::{
-    run_closed_loop, EngineConfig, EngineCore, EngineEvent, FinishReason, Sampling,
+    paged_from_env, run_closed_loop, EngineConfig, EngineCore, EngineEvent, FinishReason,
+    Sampling,
 };
 use p_eagle::runtime::{HostTensor, ModelRuntime};
 use p_eagle::workload::RequestSpec;
@@ -95,6 +96,8 @@ fn engine_greedy(mr: &mut ModelRuntime, drafter: &str, prompt: &[i32], max_new: 
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         tree: None,
+        // PEAGLE_PAGED=1 (the CI paged job) runs this suite on the paged KV cache
+        paged: paged_from_env(),
         seed: 5,
     };
     let spec = RequestSpec { id: 0, prompt: prompt.to_vec(), max_new_tokens: max_new, arrival_s: 0.0 };
@@ -162,6 +165,8 @@ fn batched_core_matches_single() {
         max_new_tokens: 24,
         sampling: Sampling::Greedy,
         tree: None,
+        // PEAGLE_PAGED=1 (the CI paged job) runs this suite on the paged KV cache
+        paged: paged_from_env(),
         seed: 5,
     };
     let mut reqs = vec![
@@ -184,6 +189,8 @@ fn core_cfg(batch: usize, max_new: usize) -> EngineConfig {
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         tree: None,
+        // PEAGLE_PAGED=1 (the CI paged job) runs this suite on the paged KV cache
+        paged: paged_from_env(),
         seed: 5,
     }
 }
@@ -354,6 +361,8 @@ fn acceptance_length_in_valid_range() {
         max_new_tokens: 40,
         sampling: Sampling::Greedy,
         tree: None,
+        // PEAGLE_PAGED=1 (the CI paged job) runs this suite on the paged KV cache
+        paged: paged_from_env(),
         seed: 5,
     };
     let spec = RequestSpec { id: 0, prompt, max_new_tokens: 40, arrival_s: 0.0 };

@@ -1,0 +1,189 @@
+//! Dense-vs-paged KV cache parity — requires `make artifacts`.
+//!
+//! The headline property: a fully provisioned block-paged engine is
+//! byte-identical to the dense engine — same seed, same corpus, same token
+//! streams AND acceptance lengths, for chain and tree speculation. The
+//! indirection (pool gather → identical chunk forward → block scatter-back,
+//! python/tests/test_paged.py pins the bitwise-logits half) plus the
+//! lockstep allocator accounting (kv_cache.rs property tests pin that half)
+//! make paged serving a deployment choice, not a fork.
+//!
+//! Also pinned here: paged tree commits never call the dense
+//! `compact_kv_path` (`dense_compactions == 0`; accepted paths go through
+//! the block planner), and a constrained block budget serializes admissions
+//! without corrupting anyone's tokens.
+
+use p_eagle::coordinator::{
+    run_closed_loop, EngineConfig, EngineCore, EngineMetrics, PagedKvConfig, Sampling,
+};
+use p_eagle::masking::TreeTopology;
+use p_eagle::runtime::ModelRuntime;
+use p_eagle::workload::RequestSpec;
+
+fn artifacts() -> Option<String> {
+    let root = std::env::var("PEAGLE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&root).join("manifest.json").exists().then_some(root)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(r) => r,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn cfg(batch: usize, max_new: usize, paged: Option<PagedKvConfig>) -> EngineConfig {
+    EngineConfig {
+        target: "target-m".into(),
+        drafter: "target-m-pe4".into(),
+        k: 5,
+        batch,
+        max_new_tokens: max_new,
+        sampling: Sampling::Greedy,
+        tree: None,
+        paged,
+        seed: 5,
+    }
+}
+
+fn test_prompt(mr: &ModelRuntime, seed: u64) -> Vec<i32> {
+    let regime = mr.manifest.regimes["humaneval"].clone();
+    let mut rng = p_eagle::util::rng::Rng::new(seed);
+    regime.sample_seq(16, &mut rng)
+}
+
+fn spec(id: u64, prompt: &[i32], max_new: usize) -> RequestSpec {
+    RequestSpec { id, prompt: prompt.to_vec(), max_new_tokens: max_new, arrival_s: 0.0 }
+}
+
+/// Run one closed-loop request; returns (tokens, accepted_sum, iterations)
+/// plus the engine metrics.
+fn run_one(
+    mr: &mut ModelRuntime,
+    cfg: EngineConfig,
+    prompt: &[i32],
+    max_new: usize,
+) -> ((Vec<i32>, usize, usize), EngineMetrics) {
+    let mut g = Some(spec(0, prompt, max_new));
+    let (results, metrics) = run_closed_loop(mr, &cfg, 1, 1, || g.take().unwrap()).unwrap();
+    let r = results.into_iter().next().unwrap();
+    ((r.tokens, r.accepted_sum, r.iterations), metrics)
+}
+
+#[test]
+fn dense_and_paged_chain_are_byte_identical() {
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    for seed in [101u64, 102, 103] {
+        let prompt = test_prompt(&mr, seed);
+        let (dense, _) = run_one(&mut mr, cfg(1, 32, None), &prompt, 32);
+        let (paged, pm) =
+            run_one(&mut mr, cfg(1, 32, Some(PagedKvConfig::default())), &prompt, 32);
+        assert_eq!(paged.0, dense.0, "tokens diverged (seed {seed})");
+        assert_eq!(paged.1, dense.1, "accepted_sum diverged (seed {seed})");
+        assert_eq!(paged.2, dense.2, "iterations diverged (seed {seed})");
+        assert!(pm.mean_block_occupancy() > 0.0, "paged run reported no block occupancy");
+        assert_eq!(pm.dense_compactions, 0);
+    }
+}
+
+#[test]
+fn dense_and_paged_tree_are_byte_identical() {
+    // tree mode is the stress case: speculative scratch + non-contiguous
+    // accepted-path commits. Byte parity must hold AND the paged engine must
+    // commit through the block planner, never compact_kv_path.
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let tree = TreeTopology::from_widths(&[3, 2, 1, 1, 1]);
+    let mut dense_commits = 0usize;
+    let mut paged_commits = 0usize;
+    for seed in [111u64, 112, 113] {
+        let prompt = test_prompt(&mr, seed);
+        let mut cd = cfg(1, 32, None);
+        cd.tree = Some(tree.clone());
+        let mut cp = cfg(1, 32, Some(PagedKvConfig::default()));
+        cp.tree = Some(tree.clone());
+        let (dense, dm) = run_one(&mut mr, cd, &prompt, 32);
+        let (paged, pm) = run_one(&mut mr, cp, &prompt, 32);
+        assert_eq!(paged.0, dense.0, "tree tokens diverged (seed {seed})");
+        assert_eq!(paged.1, dense.1, "tree accepted_sum diverged (seed {seed})");
+        assert_eq!(paged.2, dense.2, "tree iterations diverged (seed {seed})");
+        // the acceptance criterion: paged tree commits bypass compact_kv_path
+        assert_eq!(pm.dense_compactions, 0, "paged engine used dense compaction");
+        // both engines see the same accepted paths, so they must agree on
+        // how many needed a non-contiguous commit
+        assert_eq!(pm.paged_path_commits, dm.dense_compactions, "commit counts diverged");
+        dense_commits += dm.dense_compactions;
+        paged_commits += pm.paged_path_commits;
+    }
+    assert_eq!(paged_commits, dense_commits);
+}
+
+#[test]
+fn chain_topology_tree_paged_matches_dense_chain() {
+    // transitivity check across BOTH axes at once: paged + chain-shaped tree
+    // == dense + classic chain, byte for byte
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let prompt = test_prompt(&mr, 121);
+    let (dense, _) = run_one(&mut mr, cfg(1, 24, None), &prompt, 24);
+    let mut cp = cfg(1, 24, Some(PagedKvConfig::default()));
+    cp.tree = Some(TreeTopology::chain(5));
+    let (paged, pm) = run_one(&mut mr, cp, &prompt, 24);
+    assert_eq!(paged.0, dense.0);
+    assert_eq!(paged.1, dense.1);
+    // chain paths are contiguous: nothing to commit on either path
+    assert_eq!(pm.paged_path_commits, 0);
+    assert_eq!(pm.block_rewires, 0);
+}
+
+#[test]
+fn constrained_block_budget_serializes_without_corruption() {
+    // A width-2 engine with a 3-block budget: prompt 16 + chunk 6 needs 2
+    // blocks, so only one request fits at a time. The second must queue on
+    // free blocks (admissions_blocked pressure), then run to completion —
+    // and BOTH token streams must equal their unconstrained solo runs.
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let p1 = test_prompt(&mr, 131);
+    let p2 = test_prompt(&mr, 132);
+    let (solo1, _) = run_one(&mut mr, cfg(1, 24, None), &p1, 24);
+    let (solo2, _) = run_one(&mut mr, cfg(1, 24, None), &p2, 24);
+
+    let paged = PagedKvConfig { block_size: None, num_blocks: Some(3) };
+    let mut core = EngineCore::new(&mut mr, cfg(2, 24, Some(paged))).unwrap();
+    core.add_request(spec(0, &p1, 24)).unwrap();
+    core.add_request(spec(1, &p2, 24)).unwrap();
+    let mut results = Vec::new();
+    while !core.is_idle() {
+        results.extend(core.step(&mut mr).unwrap().into_finished());
+    }
+    let metrics = core.into_metrics();
+    assert_eq!(results.len(), 2);
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results[0].tokens, solo1.0, "constrained run corrupted request 0");
+    assert_eq!(results[1].tokens, solo2.0, "constrained run corrupted request 1");
+    assert!(
+        metrics.admissions_blocked > 0,
+        "3-block budget never blocked an admission — gating is not engaged"
+    );
+    assert!(metrics.blocks_peak <= 3, "allocator exceeded its block budget");
+}
+
+#[test]
+fn oversized_request_rejected_at_add_under_tight_budget() {
+    // a request whose prompt + chunk can NEVER fit the block budget must be
+    // rejected at add_request (not deadlock the admission queue)
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let paged = PagedKvConfig { block_size: None, num_blocks: Some(1) };
+    let mut core = EngineCore::new(&mut mr, cfg(1, 8, Some(paged))).unwrap();
+    let prompt = test_prompt(&mr, 141);
+    let err = core.add_request(spec(0, &prompt, 8)).unwrap_err();
+    assert!(err.to_string().contains("KV blocks"), "undescriptive error: {err}");
+}

@@ -20,6 +20,8 @@ fn cfg(batch: usize, max_new: usize) -> EngineConfig {
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         tree: None,
+        // PEAGLE_PAGED=1 (the CI paged job) runs this suite on the paged KV cache
+        paged: p_eagle::coordinator::paged_from_env(),
         seed: 1,
     }
 }
