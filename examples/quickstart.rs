@@ -40,7 +40,7 @@ fn main() -> Result<()> {
     );
 
     // 4. serve a small closed-loop batch and report throughput + occupancy
-    let run = bench_otps(&mut mr, "target-m-pe4", "mtbench", 5, 2, 4, 64, 7, false, None, None)?;
+    let run = bench_otps(&mut mr, "target-m-pe4", "mtbench", 5, 2, 4, 64, 7, false, None, None, None)?;
     println!(
         "served 4 requests @ C=2: OTPS {:.0}, AL {:.2}, occupancy {:.2}, p50 latency {:?}",
         run.otps,
@@ -59,6 +59,7 @@ fn main() -> Result<()> {
         max_new_tokens: 24,
         sampling: Sampling::Greedy,
         tree: None,
+        tree_dynamic: None,
         paged: None,
         seed: 3,
     };

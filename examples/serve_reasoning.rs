@@ -47,6 +47,7 @@ fn main() -> Result<()> {
             max_new_tokens: 96,
             sampling: Sampling::Greedy,
             tree: None,
+            tree_dynamic: None,
             paged: None,
             seed: 1234,
         };

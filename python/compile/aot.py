@@ -30,16 +30,16 @@ from . import data as data_mod
 from .configs import (
     BATCH_SIZES, BOS_ID, CTX_WINDOW, DATASETS, DEFAULT_K, EOS_ID,
     EPOCH_SNAPSHOTS, KV_BLOCK_SIZE, MASK_ID, PAD_ID, PROMPT_PAD, S_MAX,
-    SPEC_DEPTHS, TABLE1_CONTEXTS, TARGETS, TREE_DRAFTERS, TREE_TARGETS,
-    TREE_TOPOLOGIES, VOCAB, DrafterConfig, all_drafters, ablation_drafters,
-    config_dict, drafter_train_config, kv_blocks_per_slot, num_kv_blocks,
-    serving_drafters, table1_drafters,
+    SPEC_DEPTHS, TABLE1_CONTEXTS, TARGETS, TREE_DRAFTERS, TREE_DYN_ENVELOPES,
+    TREE_TARGETS, TREE_TOPOLOGIES, VOCAB, DrafterConfig, all_drafters,
+    ablation_drafters, config_dict, drafter_train_config, kv_blocks_per_slot,
+    num_kv_blocks, serving_drafters, table1_drafters,
 )
 from .drafter import draft_ar, draft_pe, draft_pe_tree, init_drafter
 from .masks import tree_depths, tree_topology_id
 from .model import (
     init_target, prefill, verify, verify_paged, verify_tree,
-    verify_tree_paged, zero_kv,
+    verify_tree_dyn, verify_tree_dyn_paged, verify_tree_paged, zero_kv,
 )
 from .pew import flatten_named, read_pew, unflatten_named, write_pew
 from .pretrain import pretrain_target
@@ -372,6 +372,72 @@ def stage_lower(art: Artifacts, target_params, drafter_params):
                     {"model": dcfg.target, "drafter": dname, "batch": b,
                      "k": n_nodes, "topology": tid},
                     [{"name": "tokens"}])
+
+    # --- dynamic-tree (max-shape envelope) executables ----------------------
+    # One lowering per ENVELOPE: the cross-node mask ([B, N+1, N+1]) and the
+    # per-slot RoPE depth offsets ([B, N+1]) are per-batch RUNTIME inputs, so
+    # the Rust engine activates a different confidence-selected, compacted
+    # node subset per slot per step (rust/src/masking/dynamic.rs). The scored
+    # drafter returns (tokens, joint logp) — the selection signal. Argument
+    # order after the params must match ModelRuntime::verify_tree_dyn
+    # (chunk, cache_len, tree_mask, depth_offsets, kv) and its paged twin
+    # (.., block_table, pool).
+    for topo in TREE_DYN_ENVELOPES:
+        tid = tree_topology_id(topo)
+        n_nodes = sum(topo)
+        for tname in TREE_TARGETS:
+            tcfg = TARGETS[tname]
+            pspec = spec_of(target_params[tname])
+            for b in BATCH_SIZES:
+                chunk = jax.ShapeDtypeStruct((b, n_nodes + 1), jnp.int32)
+                clen = jax.ShapeDtypeStruct((b,), jnp.int32)
+                tmask = jax.ShapeDtypeStruct((b, n_nodes + 1, n_nodes + 1),
+                                             jnp.int32)
+                doffs = jax.ShapeDtypeStruct((b, n_nodes + 1), jnp.int32)
+                kv = jax.ShapeDtypeStruct(
+                    (tcfg.n_layers, 2, b, S_MAX, tcfg.n_heads, tcfg.head_dim),
+                    jnp.float32)
+                _maybe_lower(
+                    art, f"{tname}-verify-tree-dyn-{tid}-b{b}",
+                    lambda p, c, l, m, o, cache, _cfg=tcfg: verify_tree_dyn(
+                        p, _cfg, c, l, cache, m, o),
+                    (pspec, chunk, clen, tmask, doffs, kv), "verify-tree-dyn",
+                    {"model": tname, "batch": b, "k": n_nodes, "topology": tid},
+                    [{"name": "logits"}, {"name": "feats"}, {"name": "kv"}])
+                table = jax.ShapeDtypeStruct((b, kv_blocks_per_slot()),
+                                             jnp.int32)
+                pool = jax.ShapeDtypeStruct(
+                    (tcfg.n_layers, 2, num_kv_blocks(b), KV_BLOCK_SIZE,
+                     tcfg.n_heads, tcfg.head_dim), jnp.float32)
+                _maybe_lower(
+                    art, f"{tname}-verify-tree-dyn-paged-{tid}-b{b}",
+                    lambda p, c, l, m, o, t, pl, _cfg=tcfg:
+                        verify_tree_dyn_paged(p, _cfg, c, l, t, pl, m, o),
+                    (pspec, chunk, clen, tmask, doffs, table, pool),
+                    "verify-tree-dyn-paged",
+                    {"model": tname, "batch": b, "k": n_nodes, "topology": tid,
+                     "block_size": KV_BLOCK_SIZE, "num_blocks": num_kv_blocks(b)},
+                    [{"name": "logits"}, {"name": "feats"}, {"name": "kv"}])
+        for dname in TREE_DRAFTERS:
+            dmeta = art.manifest["drafters"][dname]
+            dcfg = DrafterConfig(**{k: v for k, v in dmeta.items()
+                                    if k in DrafterConfig.__dataclass_fields__})
+            tcfg = TARGETS[dcfg.target]
+            dspec = spec_of(drafter_params[dname])
+            for b in BATCH_SIZES:
+                ct = jax.ShapeDtypeStruct((b, CTX_WINDOW), jnp.int32)
+                cf = jax.ShapeDtypeStruct((b, CTX_WINDOW, tcfg.feature_dim),
+                                          jnp.float32)
+                p0 = jax.ShapeDtypeStruct((b,), jnp.int32)
+                _maybe_lower(
+                    art, f"{dname}-draft-tree-logp-{tid}-b{b}",
+                    lambda p, c, f, q, _cfg=dcfg, _w=tuple(topo): draft_pe_tree(
+                        p, _cfg, c, f, q, _w, attn_impl=KERNEL,
+                        return_logp=True),
+                    (dspec, ct, cf, p0), "draft-tree-logp",
+                    {"model": dcfg.target, "drafter": dname, "batch": b,
+                     "k": n_nodes, "topology": tid},
+                    [{"name": "tokens"}, {"name": "logp"}])
 
     # --- runtime selftest (load_hlo-style smoke executable) -----------------
     def smoke(x, y):

@@ -176,6 +176,21 @@ TREE_TOPOLOGIES = [(1,) * DEFAULT_K, (3, 2, 1, 1, 1)]
 TREE_TARGETS = ["target-m"]
 TREE_DRAFTERS = ["target-m-pe4"]
 
+# Dynamic-tree max-shape envelopes (aot.py lowers a `verify-tree-dyn` /
+# `verify-tree-dyn-paged` / `draft-tree-logp` triple per envelope): the
+# cross-node mask AND the per-slot RoPE depth offsets are per-batch RUNTIME
+# inputs, so the Rust engine can activate a different confidence-selected
+# node subset per slot per step (rust/src/masking/dynamic.rs). The static
+# topologies are included so the degenerate case (budget == envelope nodes)
+# can be parity-tested against the static executables; the wide serving
+# envelope gives confidence selection room that no static profile commits
+# to. DEFAULT_TREE_BUDGET matches the static serving tree's node count so
+# default comparisons spend an equal verified-node budget.
+TREE_DYN_ENVELOPE = (4, 4, 2, 2, 1)
+TREE_DYN_ENVELOPES = TREE_TOPOLOGIES + [TREE_DYN_ENVELOPE]
+DEFAULT_TREE_BUDGET = sum(TREE_TOPOLOGIES[1])
+assert DEFAULT_TREE_BUDGET <= sum(TREE_DYN_ENVELOPE)
+
 
 def serving_drafters():
     """The drafters used in Tables 9/10/11: AR EAGLE-3 + P-EAGLE 4L (+2L)."""

@@ -188,7 +188,7 @@ def draft_pe(params, cfg: DrafterConfig, ctx_tokens, ctx_feats, row_pos0, k,
 
 
 def draft_pe_tree(params, cfg: DrafterConfig, ctx_tokens, ctx_feats, row_pos0,
-                  widths, attn_impl="pallas"):
+                  widths, attn_impl="pallas", return_logp=False):
     """One-pass parallel TREE drafting over a static width profile.
 
     `widths` (STATIC python tuple, baked into the HLO) gives the node count
@@ -201,19 +201,44 @@ def draft_pe_tree(params, cfg: DrafterConfig, ctx_tokens, ctx_feats, row_pos0,
     rust/src/masking/tree.rs node ids 1..N); tokens within a level are
     distinct by construction.
 
+    With `return_logp` (the `draft-tree-logp` lowering for dynamic-tree
+    serving) additionally returns each node's JOINT log-probability
+    [B, N] f32: the node's own level log-softmax probability plus its
+    parent's joint — i.e. the drafter's log-confidence in the whole root
+    path ending at that node, the signal EAGLE-2-style selection ranks by.
+    Monotone non-increasing along every path by construction.
+
     widths == (1,)*k reproduces `draft_pe` exactly (argmax per depth).
     """
     k = len(widths)
     logits = _pe_depth_logits(params, cfg, ctx_tokens, ctx_feats, row_pos0, k,
                               attn_impl)
-    levels = []
+    levels, level_logps = [], []
+    logp = jax.nn.log_softmax(logits, axis=-1) if return_logp else None
     for d, w in enumerate(widths):
         if w == 1:
-            levels.append(jnp.argmax(logits[:, d], axis=-1)[:, None])
+            idx = jnp.argmax(logits[:, d], axis=-1)[:, None]
         else:
             _, idx = jax.lax.top_k(logits[:, d], w)
-            levels.append(idx)
-    return jnp.concatenate(levels, axis=1).astype(jnp.int32)
+        levels.append(idx)
+        if return_logp:
+            level_logps.append(jnp.take_along_axis(logp[:, d], idx, axis=1))
+    tokens = jnp.concatenate(levels, axis=1).astype(jnp.int32)
+    if not return_logp:
+        return tokens
+    # joint[node] = level logp + parent's joint; parents are static
+    # (masks.tree_parents), so this is a static unrolled accumulation
+    from .masks import tree_parents
+    own = jnp.concatenate(level_logps, axis=1)                  # [B, N]
+    parents = tree_parents(list(widths))
+    joint_cols = []
+    for i, p in enumerate(parents, start=1):
+        j = own[:, i - 1]
+        if p != 0:
+            j = j + joint_cols[p - 1]
+        joint_cols.append(j)
+    joint = jnp.stack(joint_cols, axis=1)                       # [B, N]
+    return tokens, joint
 
 
 # ---------------------------------------------------------------------------

@@ -207,6 +207,58 @@ def paged_logical_view(pool, block_table):
     return g.reshape(L, two, B, M * BS, H, Dh)
 
 
+def tree_select_nodes(widths, joint_logp, budget):
+    """Reference dynamic-tree node selection (mirror of
+    rust/src/masking/dynamic.rs `select_nodes`): greedy frontier expansion
+    by joint log-probability, ties broken by ascending node id, NaN treated
+    as -inf. Returns the selected envelope node ids (1..N) sorted ascending
+    — always an ancestor-closed set of size min(budget, N), and (because a
+    child's joint log-probability never exceeds its parent's) the global
+    top-`budget` by score."""
+    parents = tree_parents(widths)
+    n = len(parents)
+    joint = np.where(np.isnan(joint_logp), -np.inf, np.asarray(joint_logp, float))
+    assert joint.shape == (n,), f"need one joint logp per node, got {joint.shape}"
+    selected = {0}
+    out = []
+    for _ in range(min(budget, n)):
+        best = None
+        for i in range(1, n + 1):
+            if i in selected or parents[i - 1] not in selected:
+                continue
+            if best is None or joint[i - 1] > joint[best - 1]:
+                best = i
+        selected.add(best)
+        out.append(best)
+    return sorted(out)
+
+
+def tree_subset_mask(widths, selected):
+    """Reference per-step subset mask in the COMPACTED chunk layout (mirror
+    of rust/src/masking/dynamic.rs `subset_mask_i32`): the envelope ancestor
+    mask gathered over [root] + selected occupies the top-left, everything
+    else is 0 — inactive tail slots attend nothing in the chunk and are
+    attended by nobody. `selected` must be sorted ascending and
+    ancestor-closed (the `tree_select_nodes` contract). Shape stays the
+    envelope's [N+1, N+1] (the executable's lowered mask input)."""
+    full = tree_ancestor_mask(widths)
+    slots = [0] + list(selected)
+    n = full.shape[0]
+    out = np.zeros((n, n), dtype=bool)
+    out[:len(slots), :len(slots)] = full[np.ix_(slots, slots)]
+    return out
+
+
+def tree_subset_depths(widths, selected):
+    """Per-chunk-slot RoPE depth offsets in the compacted layout (mirror of
+    rust `compacted_depths_i32`): [0, depth(selected_1), .., 0-padding]."""
+    depths = tree_depths(widths)
+    out = [0] * (len(tree_parents(widths)) + 1)
+    for j, node in enumerate(selected):
+        out[j + 1] = depths[node]
+    return out
+
+
 def tree_ancestor_mask(widths):
     """Cross-node causal mask over the verify chunk: bool [N+1, N+1] where
     entry (i, j) allows chunk slot i to attend chunk slot j iff j is an

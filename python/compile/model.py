@@ -97,6 +97,11 @@ def _chunk_forward(params, cfg: TargetConfig, tokens, start, kv, key_limit,
     mask). Chain verification is the degenerate case pos_offsets=arange,
     chunk_mask=tril (expressed through key_limit instead).
 
+    Dynamic-tree chunks break them PER BATCH ROW: `pos_offsets` may be
+    [B, T] and `chunk_mask` [B, T, T] (each slot activates its own
+    confidence-selected node subset — see verify_tree_dyn). Static inputs
+    take the shared fast path unchanged.
+
     Returns (features [B,T,3d], logits [B,T,V], new_kv).
     """
     L, H, Dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
@@ -104,7 +109,7 @@ def _chunk_forward(params, cfg: TargetConfig, tokens, start, kv, key_limit,
     x = params["embed"][tokens]
     offs = (jnp.arange(T, dtype=jnp.int32) if pos_offsets is None
             else jnp.asarray(pos_offsets, jnp.int32))
-    positions = start[:, None] + offs[None, :]
+    positions = start[:, None] + (offs if offs.ndim == 2 else offs[None, :])
 
     key_pos = jnp.arange(S_MAX, dtype=jnp.int32)
     # [B, T, S_MAX] -> [B, 1, T, S_MAX]
@@ -114,8 +119,16 @@ def _chunk_forward(params, cfg: TargetConfig, tokens, start, kv, key_limit,
         # below writes chunk slot j at start + j)
         q_rel = key_pos[None, :] - start[:, None]              # [B, S_MAX]
         in_chunk = (q_rel >= 0) & (q_rel < T)
-        gathered = chunk_mask[:, jnp.clip(q_rel, 0, T - 1)]    # [T, B, S_MAX]
-        allow = allow | (jnp.transpose(gathered, (1, 0, 2)) & in_chunk[:, None, :])
+        q_clip = jnp.clip(q_rel, 0, T - 1)
+        if chunk_mask.ndim == 3:
+            # per-batch mask: gather each row's own columns
+            gathered = jnp.take_along_axis(
+                chunk_mask, jnp.broadcast_to(q_clip[:, None, :], (B, T, S_MAX)),
+                axis=2)                                        # [B, T, S_MAX]
+            allow = allow | (gathered & in_chunk[:, None, :])
+        else:
+            gathered = chunk_mask[:, q_clip]                   # [T, B, S_MAX]
+            allow = allow | (jnp.transpose(gathered, (1, 0, 2)) & in_chunk[:, None, :])
     bias = mask_to_bias(allow)[:, None]
 
     taps = {i: None for i in cfg.feature_layers}
@@ -232,6 +245,31 @@ def verify_tree(params, cfg: TargetConfig, chunk, cache_len, kv, tree_mask,
     return logits, feats, new_kv
 
 
+def verify_tree_dyn(params, cfg: TargetConfig, chunk, cache_len, kv, tree_mask,
+                    depth_offsets):
+    """Dynamic-tree verification over a max-shape envelope.
+
+    Like `verify_tree`, but lowered ONCE per envelope with the topology as
+    per-batch RUNTIME inputs: tree_mask [B, N+1, N+1] int32 (each row's
+    compacted subset mask — masks.tree_subset_mask / masking/dynamic.rs;
+    inactive tail rows/cols all-zero, so tail slots attend only the
+    committed cache and are attended by nobody) and depth_offsets
+    [B, N+1] int32 (each compacted slot's envelope depth, 0-padded). The
+    chunk carries [root, selected nodes.., PAD..] in compacted layout.
+
+    With every node selected this reproduces `verify_tree` bitwise — the
+    degenerate case that licenses dynamic mode (tests/test_tree_dyn.py) —
+    and each active slot's logits still equal a linear verify over its root
+    path (path consistency holds per subset).
+    """
+    B, T = chunk.shape
+    key_limit = jnp.broadcast_to(cache_len[:, None], (B, T))
+    feats, logits, new_kv = _chunk_forward(
+        params, cfg, chunk, cache_len, kv, key_limit,
+        pos_offsets=depth_offsets, chunk_mask=tree_mask != 0)
+    return logits, feats, new_kv
+
+
 def zero_kv(cfg: TargetConfig, batch):
     return jnp.zeros(
         (cfg.n_layers, 2, batch, S_MAX, cfg.n_heads, cfg.head_dim), jnp.float32
@@ -292,6 +330,20 @@ def verify_tree_paged(params, cfg: TargetConfig, chunk, cache_len,
     dense = paged_gather(pool, block_table)
     logits, feats, new_dense = verify_tree(params, cfg, chunk, cache_len,
                                            dense, tree_mask, depths)
+    return logits, feats, paged_scatter(pool, block_table, new_dense)
+
+
+def verify_tree_dyn_paged(params, cfg: TargetConfig, chunk, cache_len,
+                          block_table, pool, tree_mask, depth_offsets):
+    """Block-paged twin of `verify_tree_dyn` (same mask/depth semantics).
+
+    The envelope scatter's inactive tail lands in blocks beyond the slot's
+    table coverage — i.e. the reserved null block — which is exactly why the
+    Rust allocator charges dynamic scratch by the node budget, not the
+    envelope width (kv_cache.rs `chunk` vs `write_width`)."""
+    dense = paged_gather(pool, block_table)
+    logits, feats, new_dense = verify_tree_dyn(params, cfg, chunk, cache_len,
+                                               dense, tree_mask, depth_offsets)
     return logits, feats, paged_scatter(pool, block_table, new_dense)
 
 

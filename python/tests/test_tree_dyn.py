@@ -1,0 +1,350 @@
+"""Dynamic-tree speculation: confidence selection, subset masks, scored
+drafting, and max-shape-envelope verification with runtime topologies.
+
+The load-bearing properties:
+  * reference selection (masks.tree_select_nodes) is always ancestor-closed
+    and — under monotone drafter scores — exactly the global top-budget;
+  * the compacted subset mask/depths (masks.tree_subset_*) are the envelope
+    ancestor mask gathered over [root] + selected, zero elsewhere — the
+    numpy reference the Rust masking/dynamic.rs property tests mirror;
+  * draft_pe_tree(return_logp=True) returns the same tokens plus joint
+    log-probabilities that really are the per-level log-softmax terms summed
+    along each root path (monotone non-increasing down every path);
+  * verify_tree_dyn with every node selected reproduces verify_tree (the
+    degenerate case that licenses dynamic mode), per-subset path consistency
+    holds (an active slot's logits equal a linear verify over its compacted
+    root path), and inactive tail slots neither perturb active rows nor leak
+    into them.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import (
+    TARGETS, TREE_DYN_ENVELOPE, TREE_DYN_ENVELOPES, DEFAULT_TREE_BUDGET,
+    get_drafter,
+)
+from compile.drafter import _pe_depth_logits, draft_pe_tree, init_drafter
+from compile.masks import (
+    tree_ancestor_mask,
+    tree_depths,
+    tree_parents,
+    tree_select_nodes,
+    tree_subset_depths,
+    tree_subset_mask,
+    tree_topology_id,
+)
+from compile.model import init_target, prefill, verify, verify_tree, verify_tree_dyn, zero_kv
+
+
+# ---------------------------------------------------------------------------
+# selection reference
+# ---------------------------------------------------------------------------
+
+def monotone_joint(widths, rng):
+    """Random drafter-shaped joints: child = parent + level term (<= 0)."""
+    parents = tree_parents(widths)
+    joint = np.zeros(len(parents))
+    for i, p in enumerate(parents, start=1):
+        joint[i - 1] = -rng.uniform(0.01, 4.0) + (0.0 if p == 0 else joint[p - 1])
+    return joint
+
+
+def test_registry_is_well_formed():
+    assert DEFAULT_TREE_BUDGET == 8
+    assert sum(TREE_DYN_ENVELOPE) == 13
+    for topo in TREE_DYN_ENVELOPES:
+        assert tree_topology_id(topo)
+    assert tree_topology_id(TREE_DYN_ENVELOPE) == "w4x4x2x2x1"
+
+
+def test_select_nodes_chain_envelope_is_prefix():
+    joint = np.array([-1.0, -2.0, -3.0, -4.0, -5.0])
+    for b in range(1, 6):
+        assert tree_select_nodes([1] * 5, joint, b) == list(range(1, b + 1))
+
+
+def test_select_nodes_prefers_confident_branch():
+    # widths [2, 2]: parents [0, 0, 1, 2]; node 2's branch dominates
+    joint = np.array([-5.0, -0.1, -9.0, -0.2])
+    assert tree_select_nodes([2, 2], joint, 2) == [2, 4]
+    assert tree_select_nodes([2, 2], joint, 3) == [1, 2, 4]
+
+
+def test_select_nodes_always_ancestor_closed():
+    rng = np.random.default_rng(0)
+    for _ in range(60):
+        levels = rng.integers(1, 5)
+        widths = list(rng.integers(1, 4, size=levels))
+        parents = tree_parents(widths)
+        n = len(parents)
+        # adversarial scores, including NaN and non-monotone
+        joint = rng.normal(size=n)
+        joint[rng.random(n) < 0.1] = np.nan
+        budget = int(rng.integers(1, n + 2))
+        sel = tree_select_nodes(widths, joint, budget)
+        assert sel == sorted(sel)
+        assert len(sel) == min(budget, n)
+        for node in sel:
+            p = parents[node - 1]
+            assert p == 0 or p in sel, (widths, joint, sel)
+
+
+def test_select_nodes_is_global_topn_under_monotone_scores():
+    rng = np.random.default_rng(1)
+    for _ in range(40):
+        levels = rng.integers(1, 5)
+        widths = list(rng.integers(1, 4, size=levels))
+        joint = monotone_joint(widths, rng)
+        n = len(joint)
+        budget = int(rng.integers(1, n + 1))
+        sel = tree_select_nodes(widths, joint, budget)
+        want = sorted(np.argsort(-joint, kind="stable")[:budget] + 1)
+        assert sel == [int(w) for w in want], (widths, joint)
+
+
+# ---------------------------------------------------------------------------
+# subset mask / depths references
+# ---------------------------------------------------------------------------
+
+def test_subset_mask_is_gathered_envelope_mask():
+    rng = np.random.default_rng(2)
+    for _ in range(40):
+        levels = rng.integers(1, 5)
+        widths = list(rng.integers(1, 4, size=levels))
+        joint = monotone_joint(widths, rng)
+        n = len(joint)
+        budget = int(rng.integers(1, n + 1))
+        sel = tree_select_nodes(widths, joint, budget)
+        full = tree_ancestor_mask(widths)
+        sub = tree_subset_mask(widths, sel)
+        assert sub.shape == full.shape
+        slots = [0] + sel
+        m = len(slots)
+        np.testing.assert_array_equal(sub[:m, :m], full[np.ix_(slots, slots)])
+        assert not sub[m:, :].any() and not sub[:, m:].any()
+
+
+def test_subset_mask_full_selection_is_envelope_mask():
+    widths = [3, 2, 1, 1, 1]
+    every = list(range(1, len(tree_parents(widths)) + 1))
+    np.testing.assert_array_equal(
+        tree_subset_mask(widths, every), tree_ancestor_mask(widths))
+    assert tree_subset_depths(widths, every) == tree_depths(widths)
+
+
+def test_subset_depths_follow_envelope_depths():
+    # widths [2, 2]: selecting {2, 4} compacts to depths [0, 1, 2, 0, 0]
+    assert tree_subset_depths([2, 2], [2, 4]) == [0, 1, 2, 0, 0]
+
+
+# ---------------------------------------------------------------------------
+# scored drafting
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tm():
+    cfg = TARGETS["target-m"]
+    params = init_target(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def dm(tm):
+    tcfg, _ = tm
+    dcfg = get_drafter("target-m-pe4")
+    params = init_drafter(jax.random.PRNGKey(3), dcfg, tcfg)
+    return dcfg, tcfg, params
+
+
+def toks(rng, shape):
+    return jnp.asarray(rng.integers(4, 250, size=shape), jnp.int32)
+
+
+def draft_inputs(tcfg, rng, c=8):
+    ct = toks(rng, (2, c))
+    cf = jnp.asarray(rng.normal(size=(2, c, tcfg.feature_dim)), jnp.float32)
+    p0 = jnp.asarray([c - 1, c + 3], jnp.int32)
+    return ct, cf, p0
+
+
+def test_scored_draft_tokens_match_unscored(dm):
+    dcfg, tcfg, dp = dm
+    rng = np.random.default_rng(10)
+    ct, cf, p0 = draft_inputs(tcfg, rng)
+    widths = TREE_DYN_ENVELOPE
+    plain = draft_pe_tree(dp, dcfg, ct, cf, p0, widths, attn_impl="jnp")
+    tokens, joint = draft_pe_tree(dp, dcfg, ct, cf, p0, widths,
+                                  attn_impl="jnp", return_logp=True)
+    # bitwise: scoring must not perturb the drafted tokens (the Rust
+    # degenerate-parity test swaps drafter executables and expects identity)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(tokens))
+    assert np.asarray(joint).shape == (2, sum(widths))
+
+
+def test_scored_draft_joint_is_path_sum_of_level_logps(dm):
+    dcfg, tcfg, dp = dm
+    rng = np.random.default_rng(11)
+    ct, cf, p0 = draft_inputs(tcfg, rng)
+    widths = (3, 2, 1)
+    tokens, joint = draft_pe_tree(dp, dcfg, ct, cf, p0, widths,
+                                  attn_impl="jnp", return_logp=True)
+    tokens, joint = np.asarray(tokens), np.asarray(joint)
+    level_logits = np.asarray(_pe_depth_logits(dp, dcfg, ct, cf, p0,
+                                               len(widths), attn_impl="jnp"))
+    logp = level_logits - np.log(
+        np.exp(level_logits - level_logits.max(-1, keepdims=True)).sum(-1, keepdims=True)
+    ) - level_logits.max(-1, keepdims=True)
+    parents = tree_parents(list(widths))
+    depths = tree_depths(list(widths))
+    for b in range(tokens.shape[0]):
+        for i, p in enumerate(parents, start=1):
+            own = logp[b, depths[i] - 1, tokens[b, i - 1]]
+            want = own + (0.0 if p == 0 else joint[b, p - 1])
+            np.testing.assert_allclose(joint[b, i - 1], want, atol=1e-5, rtol=1e-5)
+
+
+def test_scored_draft_joint_is_monotone_down_every_path(dm):
+    dcfg, tcfg, dp = dm
+    rng = np.random.default_rng(12)
+    ct, cf, p0 = draft_inputs(tcfg, rng)
+    widths = TREE_DYN_ENVELOPE
+    _, joint = draft_pe_tree(dp, dcfg, ct, cf, p0, widths,
+                             attn_impl="jnp", return_logp=True)
+    joint = np.asarray(joint)
+    parents = tree_parents(list(widths))
+    for b in range(joint.shape[0]):
+        for i, p in enumerate(parents, start=1):
+            if p != 0:
+                assert joint[b, i - 1] <= joint[b, p - 1] + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# envelope verification with runtime topology
+# ---------------------------------------------------------------------------
+
+def prefilled(cfg, params, rng, plen=14):
+    prompt = np.zeros((1, 24), np.int32)
+    prompt[:, :plen] = np.asarray(toks(rng, (1, plen)))
+    kv = zero_kv(cfg, 1)
+    _, _, kv = prefill(params, cfg, jnp.asarray(prompt),
+                       jnp.asarray([plen], jnp.int32), kv)
+    return kv, plen
+
+
+def test_verify_tree_dyn_full_selection_equals_verify_tree(tm):
+    """Degenerate case: every envelope node selected -> the runtime-topology
+    executable must reproduce the static tree verify."""
+    cfg, p = tm
+    rng = np.random.default_rng(13)
+    kv, plen = prefilled(cfg, p, rng)
+    widths = [2, 2, 1]
+    n = len(tree_parents(widths))
+    chunk = toks(rng, (1, n + 1))
+    clen = jnp.asarray([plen], jnp.int32)
+    mask = jnp.asarray(tree_ancestor_mask(widths), jnp.int32)
+    depths = tuple(tree_depths(widths))
+    l_ref, f_ref, kv_ref = verify_tree(p, cfg, chunk, clen, kv, mask, depths)
+
+    every = list(range(1, n + 1))
+    mask_b = jnp.asarray(tree_subset_mask(widths, every), jnp.int32)[None]
+    depths_b = jnp.asarray([tree_subset_depths(widths, every)], jnp.int32)
+    l_dyn, f_dyn, kv_dyn = verify_tree_dyn(p, cfg, chunk, clen, kv, mask_b,
+                                           depths_b)
+    # BITWISE: the per-batch mask/depth plumbing feeds the identical chunk
+    # forward, so the degenerate case is exact — the engine-level byte
+    # parity (rust/tests/integration_tree_dyn.rs) rests on this
+    np.testing.assert_array_equal(np.asarray(l_dyn), np.asarray(l_ref))
+    np.testing.assert_array_equal(np.asarray(f_dyn), np.asarray(f_ref))
+    np.testing.assert_array_equal(np.asarray(kv_dyn), np.asarray(kv_ref))
+
+
+def test_verify_tree_dyn_subset_rows_match_linear_path_verify(tm):
+    """Path consistency per subset: active compacted slot j's logits equal a
+    chained verify over [root] + its compacted path tokens."""
+    cfg, p = tm
+    rng = np.random.default_rng(14)
+    kv, plen = prefilled(cfg, p, rng)
+    widths = [2, 2]
+    # selection {2, 4}: node 4 is node 2's child -> compacted chain 0->1->2
+    sel = [2, 4]
+    n = len(tree_parents(widths))
+    node_toks = np.asarray(toks(rng, (1, n)))
+    chunk = np.zeros((1, n + 1), np.int32)
+    chunk[0, 0] = int(toks(rng, (1, 1))[0, 0])
+    for j, node in enumerate(sel):
+        chunk[0, 1 + j] = node_toks[0, node - 1]
+    clen = jnp.asarray([plen], jnp.int32)
+    mask_b = jnp.asarray(tree_subset_mask(widths, sel), jnp.int32)[None]
+    depths_b = jnp.asarray([tree_subset_depths(widths, sel)], jnp.int32)
+    l_dyn, _, _ = verify_tree_dyn(p, cfg, jnp.asarray(chunk), clen, kv,
+                                  mask_b, depths_b)
+    # compacted slots form a chain here: slot m's path is slots 0..m
+    for m in range(len(sel) + 1):
+        lin = jnp.asarray(chunk[:, :m + 1], jnp.int32)
+        l_lin, _, _ = verify(p, cfg, lin, clen, kv)
+        np.testing.assert_allclose(
+            np.asarray(l_dyn[0, m]), np.asarray(l_lin[0, m]),
+            atol=2e-4, rtol=2e-4,
+            err_msg=f"compacted slot {m} diverges from linear verify")
+
+
+def test_verify_tree_dyn_inactive_tail_does_not_perturb_active_rows(tm):
+    """PAD tail slots are inert: mutating their tokens must not change any
+    active row's logits (they are masked out of every active row's keys)."""
+    cfg, p = tm
+    rng = np.random.default_rng(15)
+    kv, plen = prefilled(cfg, p, rng)
+    widths = [2, 2]
+    sel = [1, 3]
+    n = len(tree_parents(widths))
+    a = np.asarray(toks(rng, (1, n + 1)))
+    b = a.copy()
+    b[0, len(sel) + 1:] = (a[0, len(sel) + 1:] + 77) % 250 + 4  # mutate tail
+    clen = jnp.asarray([plen], jnp.int32)
+    mask_b = jnp.asarray(tree_subset_mask(widths, sel), jnp.int32)[None]
+    depths_b = jnp.asarray([tree_subset_depths(widths, sel)], jnp.int32)
+    la, _, _ = verify_tree_dyn(p, cfg, jnp.asarray(a), clen, kv, mask_b, depths_b)
+    lb, _, _ = verify_tree_dyn(p, cfg, jnp.asarray(b), clen, kv, mask_b, depths_b)
+    for j in range(len(sel) + 1):
+        np.testing.assert_allclose(np.asarray(la[0, j]), np.asarray(lb[0, j]),
+                                   atol=1e-5, rtol=1e-5, err_msg=f"row {j}")
+
+
+def test_verify_tree_dyn_batches_independent_subsets(tm):
+    """Each batch row carries its OWN subset mask/depths: a [B=2] call with
+    different selections must reproduce the two [B=1] calls row-for-row."""
+    cfg, p = tm
+    rng = np.random.default_rng(16)
+    widths = [2, 2]
+    n = len(tree_parents(widths))
+    sels = [[1, 3], [2, 4]]
+    plen = 14
+    prompt = np.zeros((2, 24), np.int32)
+    prompt[:, :plen] = np.asarray(toks(rng, (2, plen)))
+    kv2 = zero_kv(cfg, 2)
+    _, _, kv2 = prefill(p, cfg, jnp.asarray(prompt),
+                        jnp.asarray([plen, plen], jnp.int32), kv2)
+    chunk2 = np.asarray(toks(rng, (2, n + 1)))
+    clen2 = jnp.asarray([plen, plen], jnp.int32)
+    mask2 = jnp.asarray(
+        np.stack([tree_subset_mask(widths, s) for s in sels]), jnp.int32)
+    depths2 = jnp.asarray([tree_subset_depths(widths, s) for s in sels],
+                          jnp.int32)
+    l2, f2, _ = verify_tree_dyn(p, cfg, jnp.asarray(chunk2), clen2, kv2,
+                                mask2, depths2)
+    for b, s in enumerate(sels):
+        kv1 = zero_kv(cfg, 1)
+        _, _, kv1 = prefill(p, cfg, jnp.asarray(prompt[b:b + 1]),
+                            jnp.asarray([plen], jnp.int32), kv1)
+        mask1 = jnp.asarray(tree_subset_mask(widths, s), jnp.int32)[None]
+        depths1 = jnp.asarray([tree_subset_depths(widths, s)], jnp.int32)
+        l1, f1, _ = verify_tree_dyn(p, cfg, jnp.asarray(chunk2[b:b + 1]),
+                                    jnp.asarray([plen], jnp.int32), kv1,
+                                    mask1, depths1)
+        np.testing.assert_allclose(np.asarray(l2[b]), np.asarray(l1[0]),
+                                   atol=2e-4, rtol=2e-4, err_msg=f"row {b}")
+        np.testing.assert_allclose(np.asarray(f2[b]), np.asarray(f1[0]),
+                                   atol=2e-4, rtol=2e-4, err_msg=f"row {b}")

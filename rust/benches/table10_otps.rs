@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
                     for (di, ds) in datasets.iter().enumerate() {
                         let run = bench_otps(&mut mr, &format!("{target}-{method}"),
                                              ds, k, c, total, max_new, 99, mixed, None,
-                                             paged_from_env())?;
+                                             None, paged_from_env())?;
                         if method == "ar" {
                             ar_best[di] = ar_best[di].max(run.otps);
                         }

@@ -14,7 +14,7 @@
 //! artifacts after adding profiles). Reports AL, OTPS, and the tree's
 //! accepted-path KV commit overhead.
 
-use p_eagle::coordinator::paged_from_env;
+use p_eagle::coordinator::{paged_from_env, tree_dyn_from_env};
 use p_eagle::masking::TreeTopology;
 use p_eagle::report::compare_chain_tree;
 use p_eagle::runtime::ModelRuntime;
@@ -27,6 +27,9 @@ fn main() -> anyhow::Result<()> {
     let drafter = "target-m-pe4";
     let datasets = ["humaneval", "mtbench", "gsm8k"];
     let tree = TreeTopology::from_widths(&[3, 2, 1, 1, 1]);
+    // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) adds a dynamic-envelope run at
+    // the same verified-node budget to every cell
+    let dynamic = tree_dyn_from_env();
 
     println!(
         "=== chain vs tree acceptance — {drafter}, {} ({} nodes, depth {}), \
@@ -36,11 +39,12 @@ fn main() -> anyhow::Result<()> {
         tree.max_depth()
     );
     let mut tab = Table::new(&[
-        "dataset", "chain AL", "tree AL", "ΔAL", "chain OTPS", "tree OTPS", "commit",
+        "dataset", "chain AL", "tree AL", "dyn AL", "ΔAL", "chain OTPS", "tree OTPS", "commit",
     ]);
     for ds in datasets {
-        let (chain, treed) = compare_chain_tree(
-            &mut mr, drafter, ds, &tree, 2, reqs, max_new, 99, false, paged_from_env(),
+        let (chain, treed, dyned) = compare_chain_tree(
+            &mut mr, drafter, ds, &tree, dynamic.as_ref(), 2, reqs, max_new, 99, false,
+            paged_from_env(),
         )?;
         assert!(
             treed.acceptance_length + 1e-9 >= chain.acceptance_length,
@@ -53,6 +57,10 @@ fn main() -> anyhow::Result<()> {
             ds.into(),
             format!("{:.2}", chain.acceptance_length),
             format!("{:.2}", treed.acceptance_length),
+            dyned
+                .as_ref()
+                .map(|d| format!("{:.2}", d.acceptance_length))
+                .unwrap_or_else(|| "-".into()),
             format!("{:+.2}", treed.acceptance_length - chain.acceptance_length),
             format!("{:.0}", chain.otps),
             format!("{:.0}", treed.otps),

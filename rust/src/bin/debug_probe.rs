@@ -85,6 +85,7 @@ fn main() -> anyhow::Result<()> {
                 max_new_tokens: 16,
                 sampling: Sampling::Greedy,
                 tree: None,
+                tree_dynamic: None,
                 paged: None,
                 seed: 5,
             };

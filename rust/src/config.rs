@@ -38,7 +38,8 @@ pub struct ExecutableInfo {
     pub name: String,
     pub path: String,
     /// prefill | verify | verify-paged | draft | verify-tree |
-    /// verify-tree-paged | draft-tree | selftest
+    /// verify-tree-paged | draft-tree | verify-tree-dyn |
+    /// verify-tree-dyn-paged | draft-tree-logp | selftest
     pub kind: String,
     pub model: Option<String>,
     pub drafter: Option<String>,
@@ -253,7 +254,7 @@ impl Manifest {
                 anyhow!(
                     "no executable kind={kind} model={model:?} drafter={drafter:?} \
                      b={batch:?} topology={topology:?} — rebuild artifacts with tree \
-                     lowering (python/compile/aot.py, TREE_TOPOLOGIES)"
+                     lowering (python/compile/aot.py, TREE_TOPOLOGIES / TREE_DYN_ENVELOPES)"
                 )
             })
     }

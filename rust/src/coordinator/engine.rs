@@ -30,6 +30,21 @@
 //! code path but never needs compaction, and is byte-identical to classic
 //! chain decoding (`tree: None`).
 //!
+//! Speculation shape can also be *per-step data*: with
+//! [`EngineConfig::tree_dynamic`] set, one executable pair is lowered for a
+//! max-shape ENVELOPE and each step activates only the `node_budget`
+//! envelope nodes the drafter is most confident in
+//! ([`crate::masking::dynamic`]): the scored drafter returns per-node joint
+//! log-probabilities, selection is greedy frontier expansion (provably the
+//! top-budget ancestor-closed subset), and the selected subtree is
+//! compacted into the leading chunk slots with its subset mask and RoPE
+//! depth offsets passed as per-batch runtime inputs. Acceptance walks the
+//! selected subtree ([`super::sampler::accept_tree_subset`]), and the
+//! allocator charges speculative scratch and paged admission headroom by
+//! the node BUDGET (`SlotManager::chunk`) while the `s_max` fit honors the
+//! envelope-wide scatter (`SlotManager::write_width`). A budget equal to
+//! the envelope size is byte-identical to the static-topology path.
+//!
 //! The KV cache *layout* is a config choice too: with [`EngineConfig::paged`]
 //! set, the device cache is a block pool addressed through per-slot block
 //! tables ([`SlotManager`] becomes a real allocator), admission is gated on
@@ -48,8 +63,11 @@ use anyhow::{bail, Result};
 use super::kv_cache::SlotManager;
 use super::metrics::EngineMetrics;
 use super::request::{FinishReason, RequestResult, RequestSpec};
-use super::sampler::{accept_chain, accept_tree, sample, Sampling};
-use crate::masking::TreeTopology;
+use super::sampler::{accept_chain, accept_tree, accept_tree_subset, sample, Sampling};
+use crate::masking::dynamic::{
+    compacted_depths_i32, compacted_parents, select_nodes, subset_mask_i32,
+};
+use crate::masking::{DynamicTreeConfig, TreeMask, TreeTopology};
 use crate::runtime::{
     apply_path_copies, compact_kv_path, plan_path_commit, splice_kv_row,
     splice_kv_row_blocks, DraftExec, HostTensor, ModelRuntime, TargetExec,
@@ -79,6 +97,17 @@ pub fn paged_from_env() -> Option<PagedKvConfig> {
     (std::env::var("PEAGLE_PAGED").ok().as_deref() == Some("1")).then(PagedKvConfig::default)
 }
 
+/// `PEAGLE_TREE_DYN=1` flips engines built by the test helpers / benches
+/// into dynamic tree mode (the CI `rust-tree-dyn` job sets it): the
+/// serving-default envelope + budget
+/// ([`DynamicTreeConfig::serving_default`] — the budget equals the static
+/// serving tree's node count, so AL comparisons stay apples-to-apples).
+/// Anything else returns `None`.
+pub fn tree_dyn_from_env() -> Option<DynamicTreeConfig> {
+    (std::env::var("PEAGLE_TREE_DYN").ok().as_deref() == Some("1"))
+        .then(DynamicTreeConfig::serving_default)
+}
+
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub target: String,
@@ -98,6 +127,13 @@ pub struct EngineConfig {
     /// `Some(TreeTopology::chain(k))` is the degenerate tree and must emit
     /// byte-identical tokens (integration-tested).
     pub tree: Option<TreeTopology>,
+    /// dynamic confidence-driven tree speculation: one executable per
+    /// max-shape ENVELOPE, with a per-step per-slot node subset picked from
+    /// the drafter's joint log-probabilities ([`crate::masking::dynamic`]).
+    /// Mutually exclusive with `tree`; `node_budget == envelope.len()` is
+    /// the degenerate case and must emit byte-identical tokens to the
+    /// static topology path (integration-tested).
+    pub tree_dynamic: Option<DynamicTreeConfig>,
     /// block-paged KV cache: the device cache becomes a block pool addressed
     /// through per-slot block tables and admission is gated on free-block
     /// headroom. `None` = the dense `[L, 2, B, S_MAX, H, Dh]` cache. A fully
@@ -207,10 +243,14 @@ pub struct EngineCore {
     pad_id: i32,
     eos_id: i32,
     kv: xla::PjRtBuffer,
-    /// draft width per step: tree node count N, or chain depth K
+    /// draft width per step: tree/envelope node count N, or chain depth K
     n_draft: usize,
-    /// precomputed cross-node ancestor mask ([N+1, N+1] i32), tree mode only
+    /// precomputed cross-node ancestor mask ([N+1, N+1] i32), static tree
+    /// mode only
     tree_mask: Option<HostTensor>,
+    /// dynamic mode: the envelope's bit-packed ancestor mask, gathered into
+    /// per-slot subset masks each step
+    envelope_mask: Option<TreeMask>,
     slots: Vec<Option<ActiveSlot>>,
     slotmgr: SlotManager,
     queue: VecDeque<(RequestSpec, Instant)>,
@@ -244,36 +284,65 @@ impl EngineCore {
                 bail!("s_max {} not divisible by kv_block_size {bs}", mr.manifest.s_max);
             }
         }
-        let (te, de, n_draft, tree_mask) = match (&cfg.tree, cfg.paged) {
-            (Some(tree), paged) => {
-                let te = match paged {
-                    Some(_) => mr.ensure_verify_tree_paged(&cfg.target, b, tree)?,
-                    None => mr.ensure_verify_tree(&cfg.target, b, tree)?,
-                };
-                let de = mr.ensure_drafter_tree(&cfg.drafter, b, tree)?;
-                let m = tree.build_mask();
-                let mask = HostTensor::i32(&[m.n, m.n], m.to_i32());
-                (te, de, tree.len(), Some(mask))
-            }
-            (None, Some(_)) => (
-                mr.ensure_verify_paged(&cfg.target, b, cfg.k)?,
-                mr.ensure_drafter(&cfg.drafter, b, cfg.k)?,
-                cfg.k,
-                None,
-            ),
-            (None, None) => (
-                mr.ensure_verify(&cfg.target, b, cfg.k)?,
-                mr.ensure_drafter(&cfg.drafter, b, cfg.k)?,
-                cfg.k,
-                None,
-            ),
-        };
+        if cfg.tree.is_some() && cfg.tree_dynamic.is_some() {
+            bail!(
+                "EngineConfig::tree and EngineConfig::tree_dynamic are mutually \
+                 exclusive (the dynamic envelope IS the topology)"
+            );
+        }
+        let (te, de, n_draft, tree_mask, envelope_mask) =
+            match (&cfg.tree, &cfg.tree_dynamic, cfg.paged) {
+                (Some(tree), None, paged) => {
+                    let te = match paged {
+                        Some(_) => mr.ensure_verify_tree_paged(&cfg.target, b, tree)?,
+                        None => mr.ensure_verify_tree(&cfg.target, b, tree)?,
+                    };
+                    let de = mr.ensure_drafter_tree(&cfg.drafter, b, tree)?;
+                    let m = tree.build_mask();
+                    let mask = HostTensor::i32(&[m.n, m.n], m.to_i32());
+                    (te, de, tree.len(), Some(mask), None)
+                }
+                (None, Some(dync), paged) => {
+                    let env = &dync.envelope;
+                    let te = match paged {
+                        Some(_) => mr.ensure_verify_tree_dyn_paged(&cfg.target, b, env)?,
+                        None => mr.ensure_verify_tree_dyn(&cfg.target, b, env)?,
+                    };
+                    let de = mr.ensure_drafter_tree_scored(&cfg.drafter, b, env)?;
+                    (te, de, env.len(), None, Some(env.build_mask()))
+                }
+                (None, None, Some(_)) => (
+                    mr.ensure_verify_paged(&cfg.target, b, cfg.k)?,
+                    mr.ensure_drafter(&cfg.drafter, b, cfg.k)?,
+                    cfg.k,
+                    None,
+                    None,
+                ),
+                (None, None, None) => (
+                    mr.ensure_verify(&cfg.target, b, cfg.k)?,
+                    mr.ensure_drafter(&cfg.drafter, b, cfg.k)?,
+                    cfg.k,
+                    None,
+                    None,
+                ),
+                (Some(_), Some(_), _) => unreachable!("rejected above"),
+            };
         let te1 = mr.ensure_prefill(&cfg.target, 1)?;
         let info = mr.manifest.target(&cfg.target)?;
         let fdim = info.feature_dim;
         // paged: the physical pool matches the lowered executable; the
         // allocator's logical budget may be smaller (block 0 stays reserved
         // as the null block either way)
+        // dynamic tree mode splits the accounting: blocks/admission charge
+        // the COMMITTABLE chunk (node budget + 1 — the over-reservation
+        // fix), while the s_max fit keeps honoring the envelope-wide scatter
+        // the lowered executable performs (write_width).
+        let write_width = n_draft + 1;
+        let commit_chunk = cfg
+            .tree_dynamic
+            .as_ref()
+            .map(|d| d.active_nodes() + 1)
+            .unwrap_or(write_width);
         let (kv, slotmgr) = match cfg.paged {
             Some(p) => {
                 let bs = mr.manifest.kv_block_size;
@@ -283,19 +352,27 @@ impl EngineCore {
                 let budget = p.num_blocks.unwrap_or(phys - 1).min(phys - 1);
                 (
                     mr.zero_kv_pool(&cfg.target, phys, bs)?,
-                    SlotManager::new_paged(b, mr.manifest.s_max, n_draft + 1, bs, budget),
+                    SlotManager::new_paged(b, mr.manifest.s_max, commit_chunk, bs, budget)
+                        .with_write_width(write_width),
                 )
             }
             None => (
                 mr.zero_kv(&cfg.target, b)?,
-                SlotManager::new(b, mr.manifest.s_max, n_draft + 1),
+                SlotManager::new(b, mr.manifest.s_max, commit_chunk)
+                    .with_write_width(write_width),
             ),
         };
         let kv1_zero = mr.zero_kv(&cfg.target, 1)?;
         let mut slots = Vec::with_capacity(b);
         slots.resize_with(b, || None);
-        // AL ceiling = max accepted path + bonus: tree depth (or K) + 1
-        let al_max = cfg.tree.as_ref().map(|t| t.max_depth()).unwrap_or(cfg.k);
+        // AL ceiling = max accepted path + bonus: tree depth (or K) + 1;
+        // dynamic mode can accept at most budget nodes, and never deeper
+        // than the envelope
+        let al_max = match (&cfg.tree, &cfg.tree_dynamic) {
+            (Some(t), _) => t.max_depth(),
+            (_, Some(d)) => d.envelope.max_depth().min(d.active_nodes()),
+            _ => cfg.k,
+        };
         Ok(EngineCore {
             rng: Rng::new(cfg.seed ^ 0xE4617E),
             metrics: EngineMetrics::new(al_max),
@@ -312,6 +389,7 @@ impl EngineCore {
             kv,
             n_draft,
             tree_mask,
+            envelope_mask,
             slots,
             slotmgr,
             queue: VecDeque::new(),
@@ -330,11 +408,11 @@ impl EngineCore {
         if plen < self.ctx {
             bail!("request {}: prompt len {plen} < ctx_window {}", spec.id, self.ctx);
         }
-        if plen + self.slotmgr.chunk > self.slotmgr.s_max {
+        if plen + self.slotmgr.write_width() > self.slotmgr.s_max {
             bail!(
-                "request {}: prompt len {plen} + chunk {} > s_max {}",
+                "request {}: prompt len {plen} + write width {} > s_max {}",
                 spec.id,
-                self.slotmgr.chunk,
+                self.slotmgr.write_width(),
                 self.slotmgr.s_max
             );
         }
@@ -584,22 +662,50 @@ impl EngineCore {
         self.metrics.host_time += th.elapsed();
 
         let t1 = Instant::now();
-        let drafts = mr.draft(
-            &self.de,
-            &HostTensor::i32(&[b, c], ctx_tok_buf),
-            &HostTensor::f32(&[b, c, fdim], ctx_feat_buf),
-            &HostTensor::i32(&[b], pos_buf),
-        )?;
+        let ct_t = HostTensor::i32(&[b, c], ctx_tok_buf);
+        let cf_t = HostTensor::f32(&[b, c, fdim], ctx_feat_buf);
+        let p0_t = HostTensor::i32(&[b], pos_buf);
+        let (drafts, draft_logp) = if self.cfg.tree_dynamic.is_some() {
+            let (t, l) = mr.draft_tree_scored(&self.de, &ct_t, &cf_t, &p0_t)?;
+            (t, Some(l))
+        } else {
+            (mr.draft(&self.de, &ct_t, &cf_t, &p0_t)?, None)
+        };
         self.metrics.draft_time += t1.elapsed();
         let draft_toks = drafts.as_i32()?;
 
+        // --- dynamic mode: per-slot confidence-driven node selection -------
+        // The drafter scored every envelope node; each occupied slot keeps
+        // its top-budget ancestor-closed subset, compacted into the first
+        // chunk slots (masking::dynamic).
+        let th_sel = Instant::now();
+        let mut selections: Vec<Option<Vec<usize>>> = vec![None; b];
+        if let Some(dync) = &self.cfg.tree_dynamic {
+            let logp = draft_logp.as_ref().unwrap().as_f32()?;
+            for (i, s) in self.slots.iter().enumerate() {
+                if s.is_some() {
+                    let row = &logp[i * n..(i + 1) * n];
+                    selections[i] = Some(select_nodes(&dync.envelope, row, dync.node_budget));
+                }
+            }
+        }
+        self.metrics.host_time += th_sel.elapsed();
+
         // --- verify chunk = [last_tok, node_1..node_N]; masked rows PAD ---
+        // (dynamic: [last_tok, selected nodes.., PAD..] in compacted layout)
         let mut chunk_buf = vec![self.pad_id; b * (n + 1)];
         for (i, s) in self.slots.iter().enumerate() {
             if let Some(s) = s {
                 chunk_buf[i * (n + 1)] = s.last_tok;
-                chunk_buf[i * (n + 1) + 1..(i + 1) * (n + 1)]
-                    .copy_from_slice(&draft_toks[i * n..(i + 1) * n]);
+                match &selections[i] {
+                    Some(sel) => {
+                        for (j, &id) in sel.iter().enumerate() {
+                            chunk_buf[i * (n + 1) + 1 + j] = draft_toks[i * n + id - 1];
+                        }
+                    }
+                    None => chunk_buf[i * (n + 1) + 1..(i + 1) * (n + 1)]
+                        .copy_from_slice(&draft_toks[i * n..(i + 1) * n]),
+                }
                 self.slotmgr.begin_spec(i); // chunk KV lands in scratch
             }
         }
@@ -615,13 +721,45 @@ impl EngineCore {
             let width = self.slotmgr.s_max / bs;
             HostTensor::i32(&[b, width], self.slotmgr.block_table_i32())
         });
-        let ver = match (&self.tree_mask, &table_t) {
-            (Some(mask), Some(table)) => {
-                mr.verify_tree_paged(&self.te, &chunk_t, &clen_t, mask, table, &self.kv)?
+        let ver = if let Some(dync) = &self.cfg.tree_dynamic {
+            // per-slot subset mask + depth offsets are runtime inputs each
+            // step (inactive rows stay all-zero: attend only the committed
+            // cache, attended by nobody)
+            let env_mask = self.envelope_mask.as_ref().expect("dynamic engine without mask");
+            let w = n + 1;
+            let mut mask_buf = vec![0i32; b * w * w];
+            let mut depth_buf = vec![0i32; b * w];
+            for (i, sel) in selections.iter().enumerate() {
+                if let Some(sel) = sel {
+                    mask_buf[i * w * w..(i + 1) * w * w]
+                        .copy_from_slice(&subset_mask_i32(env_mask, sel, w));
+                    depth_buf[i * w..(i + 1) * w]
+                        .copy_from_slice(&compacted_depths_i32(&dync.envelope, sel, w));
+                }
             }
-            (Some(mask), None) => mr.verify_tree(&self.te, &chunk_t, &clen_t, mask, &self.kv)?,
-            (None, Some(table)) => mr.verify_paged(&self.te, &chunk_t, &clen_t, table, &self.kv)?,
-            (None, None) => mr.verify(&self.te, &chunk_t, &clen_t, &self.kv)?,
+            let mask_t = HostTensor::i32(&[b, w, w], mask_buf);
+            let depth_t = HostTensor::i32(&[b, w], depth_buf);
+            match &table_t {
+                Some(table) => mr.verify_tree_dyn_paged(
+                    &self.te, &chunk_t, &clen_t, &mask_t, &depth_t, table, &self.kv,
+                )?,
+                None => {
+                    mr.verify_tree_dyn(&self.te, &chunk_t, &clen_t, &mask_t, &depth_t, &self.kv)?
+                }
+            }
+        } else {
+            match (&self.tree_mask, &table_t) {
+                (Some(mask), Some(table)) => {
+                    mr.verify_tree_paged(&self.te, &chunk_t, &clen_t, mask, table, &self.kv)?
+                }
+                (Some(mask), None) => {
+                    mr.verify_tree(&self.te, &chunk_t, &clen_t, mask, &self.kv)?
+                }
+                (None, Some(table)) => {
+                    mr.verify_paged(&self.te, &chunk_t, &clen_t, table, &self.kv)?
+                }
+                (None, None) => mr.verify(&self.te, &chunk_t, &clen_t, &self.kv)?,
+            }
         };
         self.metrics.verify_time += t2.elapsed();
         self.kv = ver.kv;
@@ -643,20 +781,47 @@ impl EngineCore {
                 })
                 .collect();
             let slot_drafts = &draft_toks[i * n..(i + 1) * n];
-            // accepted path as chunk-slot ids (chain: the identity prefix)
-            let (path, emitted) = match &self.cfg.tree {
-                Some(tree) => {
-                    let a = accept_tree(tree, slot_drafts, &rows, self.cfg.sampling, &mut self.rng);
-                    (a.accepted_path, a.emitted)
-                }
-                None => {
-                    let a = accept_chain(slot_drafts, &rows, self.cfg.sampling, &mut self.rng);
-                    ((1..=a.n_accepted).collect(), a.emitted)
+            // accepted path as chunk-slot ids (chain: the identity prefix;
+            // dynamic: COMPACTED chunk slots — the walk is confined to the
+            // selected subtree)
+            let (path, emitted) = if let Some(dync) = &self.cfg.tree_dynamic {
+                let sel = selections[i].as_ref().expect("occupied slot without selection");
+                let parents = compacted_parents(&dync.envelope, sel);
+                let compacted: Vec<i32> =
+                    sel.iter().map(|&id| slot_drafts[id - 1]).collect();
+                let a = accept_tree_subset(
+                    &parents,
+                    &compacted,
+                    &rows[..=sel.len()],
+                    self.cfg.sampling,
+                    &mut self.rng,
+                );
+                (a.accepted_path, a.emitted)
+            } else {
+                match &self.cfg.tree {
+                    Some(tree) => {
+                        let a = accept_tree(
+                            tree, slot_drafts, &rows, self.cfg.sampling, &mut self.rng,
+                        );
+                        (a.accepted_path, a.emitted)
+                    }
+                    None => {
+                        let a =
+                            accept_chain(slot_drafts, &rows, self.cfg.sampling, &mut self.rng);
+                        ((1..=a.n_accepted).collect(), a.emitted)
+                    }
                 }
             };
             let q = cache_len[i] as usize; // chunk start = pos of last_tok
             s.iterations += 1;
             s.accepted_sum += emitted.len();
+            // raw (pre-truncation) acceptance depth: the envelope/budget
+            // tuning signal printed by bench-otps
+            self.metrics.record_accepted_depth(path.len());
+            if self.cfg.tree.is_some() || self.cfg.tree_dynamic.is_some() {
+                let active = selections[i].as_ref().map(|sel| sel.len()).unwrap_or(n);
+                self.metrics.record_active_nodes(active);
+            }
 
             let mut step_toks = Vec::with_capacity(emitted.len());
             for (m, &tok) in emitted.iter().enumerate() {

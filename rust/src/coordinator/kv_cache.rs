@@ -43,7 +43,19 @@ struct PagedState {
 #[derive(Clone, Debug)]
 pub struct SlotManager {
     pub s_max: usize,
-    pub chunk: usize, // N+1: widest write a verify step performs
+    /// Positions a verify step can COMMIT (accepted path + bonus root):
+    /// static modes N+1; dynamic tree mode `node_budget + 1` — the charge
+    /// unit for paged block coverage and admission headroom.
+    pub chunk: usize,
+    /// Positions a verify step physically WRITES (the lowered scatter
+    /// width). Equal to `chunk` except in dynamic tree mode, where the
+    /// envelope executable scatters `envelope + 1` slots but only the first
+    /// `chunk` are ever committed: the tail lands beyond the block-table
+    /// coverage (the reserved null block — garbage over garbage), so blocks
+    /// are charged by `chunk` while the dense `s_max` fit must still respect
+    /// `write_width` (a dense scatter past `s_max` would clamp and corrupt
+    /// committed positions).
+    write_width: usize,
     lens: Vec<usize>,
     active: Vec<bool>,
     /// slots with an open speculative scratch region (positions
@@ -57,11 +69,31 @@ impl SlotManager {
         SlotManager {
             s_max,
             chunk,
+            write_width: chunk,
             lens: vec![0; batch],
             active: vec![false; batch],
             specing: vec![false; batch],
             paged: None,
         }
+    }
+
+    /// Widen the physical scatter width past the commit/charge width
+    /// (dynamic tree mode: `chunk = budget + 1`, `write_width = envelope
+    /// nodes + 1`). The `s_max` fit checks switch to the wider value; block
+    /// charging stays on `chunk`.
+    pub fn with_write_width(mut self, write_width: usize) -> SlotManager {
+        assert!(
+            write_width >= self.chunk,
+            "write width {write_width} below commit chunk {}",
+            self.chunk
+        );
+        self.write_width = write_width;
+        self
+    }
+
+    /// Positions a verify step physically writes (>= `chunk`).
+    pub fn write_width(&self) -> usize {
+        self.write_width
     }
 
     /// Paged allocator over `capacity` blocks of `block_size` tokens.
@@ -84,6 +116,7 @@ impl SlotManager {
         SlotManager {
             s_max,
             chunk,
+            write_width: chunk,
             lens: vec![0; batch],
             active: vec![false; batch],
             specing: vec![false; batch],
@@ -115,10 +148,11 @@ impl SlotManager {
         tokens.div_ceil(bs)
     }
 
-    /// Whether a request of `prompt_len` tokens could EVER be admitted (fits
-    /// the logical window and, in paged mode, the total block capacity).
+    /// Whether a request of `prompt_len` tokens could EVER be admitted (the
+    /// full scatter fits the logical window and, in paged mode, the
+    /// committable chunk fits the total block capacity).
     pub fn request_fits(&self, prompt_len: usize) -> bool {
-        prompt_len + self.chunk <= self.s_max
+        prompt_len + self.write_width <= self.s_max
             && self
                 .paged
                 .as_ref()
@@ -127,9 +161,11 @@ impl SlotManager {
 
     /// Whether a request of `prompt_len` tokens can be admitted NOW: dense
     /// mode only needs the logical window; paged mode additionally needs
-    /// enough free blocks to cover prompt + one speculation chunk.
+    /// enough free blocks to cover prompt + one committable speculation
+    /// chunk (dynamic tree mode charges the node BUDGET here, not the
+    /// envelope — the over-reservation fix).
     pub fn can_admit(&self, prompt_len: usize) -> bool {
-        prompt_len + self.chunk <= self.s_max
+        prompt_len + self.write_width <= self.s_max
             && self
                 .paged
                 .as_ref()
@@ -143,8 +179,11 @@ impl SlotManager {
         if self.active[i] {
             return Err(format!("slot {i} already active"));
         }
-        if prompt_len + self.chunk > self.s_max {
-            return Err(format!("prompt {prompt_len} + chunk {} > s_max {}", self.chunk, self.s_max));
+        if prompt_len + self.write_width > self.s_max {
+            return Err(format!(
+                "prompt {prompt_len} + write width {} > s_max {}",
+                self.write_width, self.s_max
+            ));
         }
         let need = self.blocks_for(prompt_len + self.chunk);
         if let Some(p) = &mut self.paged {
@@ -186,7 +225,7 @@ impl SlotManager {
     pub fn begin_spec(&mut self, i: usize) {
         debug_assert!(self.active[i]);
         debug_assert!(!self.specing[i], "slot {i}: speculation already open");
-        debug_assert!(self.lens[i] + self.chunk <= self.s_max);
+        debug_assert!(self.lens[i] + self.write_width <= self.s_max);
         if let Some(p) = &self.paged {
             debug_assert!(
                 p.tables[i].len() * p.block_size >= self.lens[i] + self.chunk,
@@ -210,7 +249,7 @@ impl SlotManager {
         debug_assert!(kept <= self.chunk);
         self.specing[i] = false;
         self.lens[i] += kept;
-        if self.lens[i] + self.chunk > self.s_max {
+        if self.lens[i] + self.write_width > self.s_max {
             return false;
         }
         let need = self.blocks_for(self.lens[i] + self.chunk);
@@ -546,6 +585,56 @@ mod tests {
         // swapped tables release cleanly
         m.release(0);
         assert_eq!(m.free_blocks(), 4);
+    }
+
+    #[test]
+    fn write_width_defaults_to_chunk_and_rejects_narrowing() {
+        let m = SlotManager::new(1, 64, 6);
+        assert_eq!(m.write_width(), 6);
+        let m = SlotManager::new(1, 64, 6).with_write_width(14);
+        assert_eq!(m.write_width(), 14);
+        assert_eq!(m.chunk, 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "below commit chunk")]
+    fn write_width_below_chunk_panics() {
+        let _ = SlotManager::new(1, 64, 6).with_write_width(5);
+    }
+
+    #[test]
+    fn write_width_governs_the_s_max_fit() {
+        // dynamic tree mode: commits at most chunk=4 positions per step but
+        // physically scatters 9 — the fit checks must use the wider value or
+        // the dense scatter would clamp into committed cache
+        let mut m = SlotManager::new(1, 32, 4).with_write_width(9);
+        assert!(m.claim(0, 24).is_err()); // 24 + 9 > 32
+        m.claim(0, 23).unwrap(); // 23 + 9 == 32 ✓
+        m.begin_spec(0);
+        assert!(!m.commit_spec(0, 1), "24 + 9 > 32 must signal CacheFull");
+        m.release(0);
+        assert!(!m.request_fits(24));
+        assert!(m.request_fits(23));
+    }
+
+    #[test]
+    fn paged_charges_blocks_by_chunk_not_write_width() {
+        // THE over-reservation regression: a dynamic engine with an 8-node
+        // envelope but a 3-node budget must reserve blocks for budget+1=4
+        // scratch positions, not envelope+1=9. bs=4: prompt 8 + chunk 4 ->
+        // 3 blocks (charging by write width 9 would take 5).
+        let mut m = SlotManager::new_paged(2, 64, 4, 4, 8).with_write_width(9);
+        assert!(m.can_admit(8));
+        m.claim(0, 8).unwrap();
+        assert_eq!(m.table(0).len(), 3, "charged by envelope, not budget");
+        // a second identical request still fits the remaining 5 blocks
+        assert!(m.can_admit(8));
+        m.claim(1, 8).unwrap();
+        assert_eq!(m.blocks_used(), 6);
+        // coverage invariant stays budget-denominated across commits
+        m.begin_spec(0);
+        assert!(m.commit_spec(0, 4));
+        assert!(m.table(0).len() * 4 >= m.len(0) + m.chunk);
     }
 
     #[test]

@@ -15,6 +15,18 @@ pub struct EngineMetrics {
     pub accepted_sum: usize,
     /// histogram over acceptance length (index = accepted drafts + bonus)
     pub al_histogram: Vec<usize>,
+    /// per-depth acceptance histogram: `accepted_by_depth[d]` counts the
+    /// slot-iterations whose raw accepted path reached depth `d` (one
+    /// accepted draft node at that depth), before EOS/length truncation —
+    /// the signal for tuning tree envelopes and node budgets (a depth whose
+    /// count is near zero is wasted draft width). Index 0 is unused.
+    pub accepted_by_depth: Vec<usize>,
+    /// tree modes: draft nodes activated per slot-iteration, summed (static
+    /// trees: the topology size; dynamic trees: the node budget actually
+    /// selected). Zero in chain mode.
+    pub active_node_sum: usize,
+    /// slot-iterations contributing to `active_node_sum`
+    pub active_node_steps: usize,
     /// slot-steps with a live request, over all slot-steps the engine ran.
     /// occupied / total is the continuous-batching utilization of the fixed
     /// executable width (1.0 = every row does useful work every step).
@@ -55,7 +67,53 @@ pub struct EngineMetrics {
 
 impl EngineMetrics {
     pub fn new(k: usize) -> EngineMetrics {
-        EngineMetrics { al_histogram: vec![0; k + 2], ..Default::default() }
+        EngineMetrics {
+            al_histogram: vec![0; k + 2],
+            accepted_by_depth: vec![0; k + 1],
+            ..Default::default()
+        }
+    }
+
+    /// Record one slot-iteration's raw accepted-path depth (`depth` accepted
+    /// draft nodes before truncation): every depth `1..=depth` gained one
+    /// accepted node. Depths beyond the histogram clamp into the last bin.
+    pub fn record_accepted_depth(&mut self, depth: usize) {
+        if self.accepted_by_depth.len() <= 1 {
+            return;
+        }
+        let max_d = self.accepted_by_depth.len() - 1;
+        for d in 1..=depth.min(max_d) {
+            self.accepted_by_depth[d] += 1;
+        }
+    }
+
+    /// Record one tree-mode slot-iteration's active draft-node count.
+    pub fn record_active_nodes(&mut self, nodes: usize) {
+        self.active_node_sum += nodes;
+        self.active_node_steps += 1;
+    }
+
+    /// Mean draft nodes activated per slot-iteration (tree modes; 0.0 for
+    /// chain decoding).
+    pub fn mean_active_nodes(&self) -> f64 {
+        if self.active_node_steps == 0 {
+            0.0
+        } else {
+            self.active_node_sum as f64 / self.active_node_steps as f64
+        }
+    }
+
+    /// Per-depth acceptance rates (`accepted_by_depth[d] / live iterations`)
+    /// for depths `1..`, the bench-otps tuning printout.
+    pub fn depth_acceptance_rates(&self) -> Vec<f64> {
+        let iters: usize = self.al_histogram.iter().sum();
+        if iters == 0 {
+            return Vec::new();
+        }
+        self.accepted_by_depth[1..]
+            .iter()
+            .map(|&c| c as f64 / iters as f64)
+            .collect()
     }
 
     pub fn record_iteration(&mut self, emitted_per_slot: &[usize]) {
@@ -161,6 +219,14 @@ impl EngineMetrics {
         for (i, &c) in other.al_histogram.iter().enumerate() {
             self.al_histogram[i] += c;
         }
+        if self.accepted_by_depth.len() < other.accepted_by_depth.len() {
+            self.accepted_by_depth.resize(other.accepted_by_depth.len(), 0);
+        }
+        for (i, &c) in other.accepted_by_depth.iter().enumerate() {
+            self.accepted_by_depth[i] += c;
+        }
+        self.active_node_sum += other.active_node_sum;
+        self.active_node_steps += other.active_node_steps;
         self.slot_steps_occupied += other.slot_steps_occupied;
         self.slot_steps_total += other.slot_steps_total;
         self.block_steps_used += other.block_steps_used;
@@ -290,6 +356,33 @@ mod tests {
         assert_eq!(m.block_rewires, 1);
         assert_eq!(m.paged_path_commits, 4);
         assert!(m.summary().contains("blkocc"));
+    }
+
+    #[test]
+    fn depth_histogram_and_active_nodes() {
+        let mut m = EngineMetrics::new(5); // depths 1..=5
+        m.record_iteration(&[3, 1]); // 2 live iterations
+        m.record_accepted_depth(2); // depths 1, 2
+        m.record_accepted_depth(0); // nothing
+        assert_eq!(m.accepted_by_depth, vec![0, 1, 1, 0, 0, 0]);
+        m.record_accepted_depth(9); // clamps into 1..=5
+        assert_eq!(m.accepted_by_depth, vec![0, 2, 2, 1, 1, 1]);
+        let rates = m.depth_acceptance_rates();
+        assert_eq!(rates.len(), 5);
+        assert!((rates[0] - 1.0).abs() < 1e-12); // 2 of 2 iterations hit depth 1
+        assert!((rates[4] - 0.5).abs() < 1e-12);
+        assert_eq!(m.mean_active_nodes(), 0.0);
+        m.record_active_nodes(8);
+        m.record_active_nodes(6);
+        assert!((m.mean_active_nodes() - 7.0).abs() < 1e-12);
+        // merge folds both
+        let mut o = EngineMetrics::new(7);
+        o.record_accepted_depth(6);
+        o.record_active_nodes(4);
+        m.merge(&o);
+        assert_eq!(m.accepted_by_depth.len(), 8);
+        assert_eq!(m.accepted_by_depth[6], 1);
+        assert_eq!(m.active_node_steps, 3);
     }
 
     #[test]

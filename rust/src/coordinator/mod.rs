@@ -13,7 +13,8 @@ pub mod scheduler;
 pub mod server;
 
 pub use engine::{
-    paged_from_env, EngineConfig, EngineCore, EngineEvent, PagedKvConfig, StepReport,
+    paged_from_env, tree_dyn_from_env, EngineConfig, EngineCore, EngineEvent, PagedKvConfig,
+    StepReport,
 };
 pub use metrics::EngineMetrics;
 pub use request::{FinishReason, RequestResult, RequestSpec};

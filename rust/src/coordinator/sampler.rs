@@ -122,14 +122,41 @@ pub fn accept_tree(
     rng: &mut Rng,
 ) -> TreeAcceptance {
     assert_eq!(drafts.len(), tree.len());
-    assert_eq!(target_rows.len(), tree.len() + 1);
+    let parents: Vec<usize> = (1..=tree.len()).map(|i| tree.parent(i)).collect();
+    accept_tree_subset(&parents, drafts, target_rows, s, rng)
+}
+
+/// Tree acceptance over an arbitrary (compacted) subtree, described by a
+/// parent array instead of a width-profile topology — the dynamic-tree
+/// engine's acceptance rule ([`crate::masking::dynamic`] compacts the
+/// per-step selected subtree into slots `1..=m`, which is a valid level-major
+/// tree but not a round-robin width profile).
+///
+/// `parents[i - 1]` is the chunk slot of node `i`'s parent (0 = root;
+/// parents precede children); `drafts[i - 1]` its token; `target_rows` has
+/// `parents.len() + 1` rows in chunk-slot order. Children are scanned in
+/// ascending slot order, exactly like [`TreeTopology::children`], so
+/// [`accept_tree`] (which delegates here) is unchanged token-for-token AND
+/// rng-draw-for-rng-draw — and a chain-shaped parent array `[0, 1, 2, ..]`
+/// reproduces [`accept_chain`] the same way (property-tested below).
+pub fn accept_tree_subset(
+    parents: &[usize],
+    drafts: &[i32],
+    target_rows: &[&[f32]], // parents.len() + 1 rows
+    s: Sampling,
+    rng: &mut Rng,
+) -> TreeAcceptance {
+    assert_eq!(drafts.len(), parents.len());
+    assert_eq!(target_rows.len(), parents.len() + 1);
+    debug_assert!(parents.iter().enumerate().all(|(i, &p)| p <= i), "parents must precede children");
     let mut accepted_path = Vec::new();
-    let mut emitted = Vec::with_capacity(tree.max_depth() + 1);
+    let mut emitted = Vec::new();
     let mut cur = 0usize; // chunk slot of the current path head (0 = root)
     loop {
         let t = sample(target_rows[cur], s, rng);
         emitted.push(t);
-        let next = tree.children(cur).into_iter().find(|&c| drafts[c - 1] == t);
+        let next =
+            (1..=parents.len()).find(|&c| parents[c - 1] == cur && drafts[c - 1] == t);
         match next {
             Some(c) => {
                 accepted_path.push(c);
@@ -347,6 +374,97 @@ mod tests {
                     };
                 }
                 prev = node;
+            }
+            Case::Pass
+        });
+    }
+
+    #[test]
+    fn tree_subset_chain_prefix_matches_accept_chain_exactly() {
+        // the dynamic-tree chain-equivalence satellite: selecting the first
+        // b nodes of a chain envelope (what confidence selection always does
+        // on a chain — one node per depth) must reproduce accept_chain over
+        // the truncated draft, token-for-token INCLUDING rng consumption,
+        // under both sampling modes
+        use crate::util::prop::{check, Case};
+        check("tree-subset-chain-parity", 120, |rng| {
+            let k = 1 + rng.below(7);
+            let b = 1 + rng.below(k); // selected chain prefix depth
+            let vocab = 4 + rng.below(12);
+            let rows = rand_rows(rng, b + 1, vocab);
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let drafts: Vec<i32> = refs
+                .iter()
+                .take(b)
+                .map(|r| {
+                    if rng.below(2) == 0 {
+                        argmax(r)
+                    } else {
+                        rng.below(vocab) as i32
+                    }
+                })
+                .collect();
+            let s = if rng.below(2) == 0 {
+                Sampling::Greedy
+            } else {
+                Sampling::Temperature(0.7)
+            };
+            let seed = rng.next_u64();
+            let chain = accept_chain(&drafts, &refs, s, &mut Rng::new(seed));
+            let parents: Vec<usize> = (0..b).collect(); // compacted chain prefix
+            let sub = accept_tree_subset(&parents, &drafts, &refs, s, &mut Rng::new(seed));
+            if sub.emitted != chain.emitted || sub.n_accepted() != chain.n_accepted {
+                return Case::Fail {
+                    desc: format!(
+                        "k={k} b={b} chain {:?}/{} vs subset {:?}/{}",
+                        chain.emitted,
+                        chain.n_accepted,
+                        sub.emitted,
+                        sub.n_accepted()
+                    ),
+                    size: k,
+                };
+            }
+            Case::Pass
+        });
+    }
+
+    #[test]
+    fn tree_subset_full_selection_matches_accept_tree() {
+        // degenerate selection (every node active) must be accept_tree
+        // exactly — the identity relabeling changes nothing
+        use crate::util::prop::{check, Case};
+        check("tree-subset-full-parity", 100, |rng| {
+            let levels = 1 + rng.below(4);
+            let widths: Vec<usize> = (0..levels).map(|_| 1 + rng.below(3)).collect();
+            let t = TreeTopology::from_widths(&widths);
+            let vocab = 4 + rng.below(8);
+            let rows = rand_rows(rng, t.len() + 1, vocab);
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let drafts: Vec<i32> = (0..t.len())
+                .map(|_| {
+                    if rng.below(3) == 0 {
+                        rng.below(vocab) as i32
+                    } else {
+                        argmax(refs[rng.below(t.len() + 1)])
+                    }
+                })
+                .collect();
+            let seed = rng.next_u64();
+            let a = accept_tree(&t, &drafts, &refs, Sampling::Greedy, &mut Rng::new(seed));
+            let parents: Vec<usize> = (1..=t.len()).map(|i| t.parent(i)).collect();
+            let b = accept_tree_subset(
+                &parents,
+                &drafts,
+                &refs,
+                Sampling::Greedy,
+                &mut Rng::new(seed),
+            );
+            if a.emitted != b.emitted || a.accepted_path != b.accepted_path {
+                return Case::Fail {
+                    desc: format!("{:?} vs {:?} ({widths:?})", a, b),
+                    size: t.len(),
+                };
             }
             Case::Pass
         });

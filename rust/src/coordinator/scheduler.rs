@@ -65,13 +65,21 @@ impl Scheduler {
         if let Some(p) = self.cfg.paged {
             if let Some(budget) = p.num_blocks {
                 // floor per request: the smallest admissible footprint is a
-                // 1-token prompt + one speculation chunk of scratch — N+1
-                // chunk slots, where N is the tree's node count (NOT k,
-                // which tree mode ignores) or the chain depth K. A
-                // block_size left to default-from-manifest is estimated at
-                // the dense BLOCK_SIZE; the engine's own admission gate
-                // re-checks with exact numbers.
-                let n_draft = self.cfg.tree.as_ref().map(|t| t.len()).unwrap_or(self.cfg.k);
+                // 1-token prompt + one COMMITTABLE speculation chunk of
+                // scratch — N+1 chunk slots, where N is the tree's node
+                // count (NOT k, which tree mode ignores), the chain depth K,
+                // or — dynamic tree mode — the per-step node BUDGET (the
+                // envelope's tail scatter lands in the null block and is
+                // never charged; charging the envelope here was the
+                // over-reservation bug). A block_size left to
+                // default-from-manifest is estimated at the dense
+                // BLOCK_SIZE; the engine's own admission gate re-checks
+                // with exact numbers.
+                let n_draft = match (&self.cfg.tree_dynamic, &self.cfg.tree) {
+                    (Some(d), _) => d.active_nodes(),
+                    (None, Some(t)) => t.len(),
+                    (None, None) => self.cfg.k,
+                };
                 let bs = p.block_size.unwrap_or(crate::coordinator::kv_cache::BLOCK_SIZE);
                 let per_req = (n_draft + 2).div_ceil(bs).max(1);
                 if budget < per_req {
@@ -176,6 +184,7 @@ mod tests {
             max_new_tokens: 32,
             sampling: Sampling::Greedy,
             tree: None,
+            tree_dynamic: None,
             paged: None,
             seed: 0,
         }
@@ -245,6 +254,26 @@ mod tests {
         assert_eq!(Scheduler::new(c.clone(), vec![1, 2, 4]).pick_bucket(4), None);
         c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(7) });
         assert_eq!(Scheduler::new(c, vec![1, 2, 4]).pick_bucket(4), Some(2));
+    }
+
+    #[test]
+    fn paged_bucket_charges_dynamic_trees_by_budget_not_envelope() {
+        use crate::coordinator::engine::PagedKvConfig;
+        use crate::masking::DynamicTreeConfig;
+        // THE over-reservation regression: envelope w:4,4,2,2,1 has 13
+        // nodes, but a 3-node budget commits at most 4 scratch positions.
+        // block_size 4 => per-request floor ceil(5/4) = 2 blocks, NOT the
+        // envelope's ceil(15/4) = 4.
+        let mut c = cfg();
+        c.tree_dynamic = Some(DynamicTreeConfig::parse("w:4,4,2,2,1", 3).unwrap());
+        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(5) });
+        // 5 blocks at 2 per request host 2 concurrent requests: width 2.
+        // Charging by the envelope (4 per request) would cap this at 1.
+        assert_eq!(Scheduler::new(c.clone(), vec![1, 2, 4]).pick_bucket(4), Some(2));
+        // and a budget the envelope could never fit still admits: 3 blocks
+        // host one 2-block request (envelope charging would refuse at < 4)
+        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(3) });
+        assert_eq!(Scheduler::new(c, vec![1, 2, 4]).pick_bucket(4), Some(1));
     }
 
     #[test]

@@ -7,6 +7,10 @@
 //!              [--dataset --max-new --quiet]   (streams engine step events)
 //!              [--paged [--kv-blocks N]]       (block-paged KV cache;
 //!                                      --kv-blocks caps the block budget)
+//!              [--tree-dyn [--tree-envelope w:..] [--tree-budget N]]
+//!                                     (dynamic confidence-driven tree
+//!                                      speculation inside a max-shape
+//!                                      envelope)
 //!   eval-acceptance --drafter --dataset [--k --requests --max-new]
 //!   bench-otps --target --method --k --concurrency
 //!              [--dataset --mixed --profile]
@@ -15,6 +19,12 @@
 //!                                     (--tree runs a chain-vs-tree pair on
 //!                                      the same workload seed and reports
 //!                                      the acceptance-length delta)
+//!              [--tree-dyn [--tree-envelope w:..] [--tree-budget N]]
+//!                                     (adds a dynamic-tree run at an equal
+//!                                      verified-node budget — default
+//!                                      budget = the static tree's node
+//!                                      count — plus the accepted-by-depth
+//!                                      tuning histogram)
 //!   report     --fig1 | --fig5 | --memmodel
 //!   info                              manifest summary
 
@@ -22,8 +32,10 @@ use anyhow::{anyhow, Result};
 
 use p_eagle::config::Manifest;
 use p_eagle::coordinator::server::spawn;
-use p_eagle::coordinator::{paged_from_env, EngineConfig, PagedKvConfig, Sampling, ServerEvent};
-use p_eagle::masking::TreeTopology;
+use p_eagle::coordinator::{
+    paged_from_env, tree_dyn_from_env, EngineConfig, PagedKvConfig, Sampling, ServerEvent,
+};
+use p_eagle::masking::{DynamicTreeConfig, TreeTopology};
 use p_eagle::memmodel;
 use p_eagle::report;
 use p_eagle::runtime::{Arg, HostTensor, ModelRuntime, Runtime};
@@ -44,6 +56,36 @@ fn paged_opts(args: &Args) -> Option<PagedKvConfig> {
         .map(|n| n.parse().unwrap_or_else(|_| panic!("--kv-blocks expects a number")));
     let on = args.flag("paged") || kv_blocks.is_some() || paged_from_env().is_some();
     on.then(|| PagedKvConfig { block_size: None, num_blocks: kv_blocks })
+}
+
+/// `--tree-dyn [--tree-envelope w:..] [--tree-budget N]` (or the
+/// `PEAGLE_TREE_DYN=1` env the CI tree-dyn job sets): dynamic
+/// confidence-driven tree speculation inside a max-shape envelope. The
+/// envelope defaults to the lowered serving envelope
+/// (`DynamicTreeConfig::DEFAULT_ENVELOPE_SPEC`); the budget defaults to
+/// `default_budget` (bench-otps passes the static comparison tree's node
+/// count, so the three-way comparison spends an equal verified-node
+/// budget), clamped to the envelope's node count so a small
+/// `--tree-envelope` without an explicit budget just degrades to its own
+/// degenerate case. `--tree-budget`/`--tree-envelope` imply `--tree-dyn`.
+/// Oversized or malformed specs fail here with the descriptive
+/// `TreeTopology::parse` errors, never a panic downstream.
+fn tree_dyn_opts(args: &Args, default_budget: usize) -> Result<Option<DynamicTreeConfig>> {
+    let budget = args.get("tree-budget").map(|n| {
+        n.parse::<usize>()
+            .unwrap_or_else(|_| panic!("--tree-budget expects a number"))
+    });
+    let envelope = args.get("tree-envelope").map(String::from);
+    let on = args.flag("tree-dyn") || budget.is_some() || envelope.is_some()
+        || tree_dyn_from_env().is_some();
+    if !on {
+        return Ok(None);
+    }
+    let spec = envelope.unwrap_or_else(|| DynamicTreeConfig::DEFAULT_ENVELOPE_SPEC.into());
+    let envelope = TreeTopology::parse(&spec).map_err(|e| anyhow!(e))?;
+    let budget = budget.unwrap_or_else(|| default_budget.min(envelope.len()));
+    let cfg = DynamicTreeConfig::new(envelope, budget).map_err(|e| anyhow!(e))?;
+    Ok(Some(cfg))
 }
 
 fn main() -> Result<()> {
@@ -114,6 +156,15 @@ fn serve(args: &Args) -> Result<()> {
 
     let mut arr = report::closed_loop_arrivals(&manifest, &dataset, max_new, 7)?;
 
+    let tree_dynamic = tree_dyn_opts(args, DynamicTreeConfig::DEFAULT_NODE_BUDGET)?;
+    if let Some(d) = &tree_dynamic {
+        println!(
+            "dynamic tree speculation: envelope {} ({} nodes), budget {} nodes/step",
+            d.envelope.id(),
+            d.envelope.len(),
+            d.active_nodes()
+        );
+    }
     let cfg = EngineConfig {
         target: target.clone(),
         drafter,
@@ -122,6 +173,7 @@ fn serve(args: &Args) -> Result<()> {
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         tree: None,
+        tree_dynamic,
         paged: paged_opts(args),
         seed: 7,
     };
@@ -211,12 +263,18 @@ fn bench_otps(args: &Args) -> Result<()> {
     // the head-of-line workload the stepped engine exists for
     let mixed = args.flag("mixed");
 
-    // --tree: chain-vs-tree pair on the same workload seed. The topology
-    // defaults to the serving profile the artifacts lower (w:3,2,1,1,1 —
-    // configs.TREE_TOPOLOGIES); --tree-topo overrides it.
-    if args.flag("tree") {
-        let spec = args.get_or("tree-topo", "w:3,2,1,1,1");
-        let tree = TreeTopology::parse(&spec).map_err(|e| anyhow!(e))?;
+    // --tree: chain / static-tree / (with --tree-dyn) dynamic-tree runs on
+    // the same workload seed. The static topology defaults to the serving
+    // profile the artifacts lower (w:3,2,1,1,1 — configs.TREE_TOPOLOGIES);
+    // --tree-topo overrides it. --tree-dyn (or --tree-budget /
+    // --tree-envelope / PEAGLE_TREE_DYN=1, which imply it — tree_dyn_opts
+    // is the single source of that rule) adds the dynamic run, its node
+    // budget defaulting to the static tree's node count so the comparison
+    // spends an equal verified-node budget.
+    let spec = args.get_or("tree-topo", "w:3,2,1,1,1");
+    let tree = TreeTopology::parse(&spec).map_err(|e| anyhow!(e))?;
+    let dynamic = tree_dyn_opts(args, tree.len())?;
+    if args.flag("tree") || dynamic.is_some() {
         if args.get("k").is_some() {
             eprintln!(
                 "note: --tree compares at the tree's own depth budget \
@@ -224,9 +282,9 @@ fn bench_otps(args: &Args) -> Result<()> {
                 tree.max_depth()
             );
         }
-        let (chain, treed) = report::compare_chain_tree(
-            &mut mr, &drafter, &dataset, &tree, conc, total, max_new, 11, mixed,
-            paged_opts(args),
+        let (chain, treed, dyned) = report::compare_chain_tree(
+            &mut mr, &drafter, &dataset, &tree, dynamic.as_ref(), conc, total, max_new,
+            11, mixed, paged_opts(args),
         )?;
         println!(
             "chain[{target}/{method} K={} C={conc} {dataset}{}] OTPS {:.0}  AL {:.2}  occ {:.2}",
@@ -252,8 +310,49 @@ fn bench_otps(args: &Args) -> Result<()> {
             treed.acceptance_length - chain.acceptance_length,
             (treed.acceptance_length / chain.acceptance_length.max(1e-9) - 1.0) * 100.0,
         );
+        if let (Some(d), Some(dr)) = (&dynamic, &dyned) {
+            println!(
+                "dyn  [{} envelope {} nodes, budget {}] OTPS {:.0}  AL {:.2}  occ {:.2}  commit {:?}",
+                d.envelope.id(),
+                d.envelope.len(),
+                d.active_nodes(),
+                dr.otps,
+                dr.acceptance_length,
+                dr.mean_occupancy,
+                dr.metrics.commit_time,
+            );
+            println!(
+                "AL delta vs static tree: {:+.2} ({:+.1}%) at {} verified nodes/step \
+                 (static spends {})",
+                dr.acceptance_length - treed.acceptance_length,
+                (dr.acceptance_length / treed.acceptance_length.max(1e-9) - 1.0) * 100.0,
+                d.active_nodes(),
+                tree.len(),
+            );
+        }
+        // the envelope/budget tuning printout: which depths actually accept,
+        // and how many nodes each mode spends to get them
+        for (label, run) in std::iter::once(("tree", &treed))
+            .chain(dyned.as_ref().map(|d| ("dyn ", d)))
+        {
+            let rates: Vec<String> = run
+                .metrics
+                .depth_acceptance_rates()
+                .iter()
+                .map(|r| format!("{r:.2}"))
+                .collect();
+            println!(
+                "{label} accepted-by-depth [{}]  mean active nodes {:.1}",
+                rates.join(" "),
+                run.metrics.mean_active_nodes(),
+            );
+        }
         if args.flag("profile") {
-            for (label, m) in [("chain", &chain.metrics), ("tree ", &treed.metrics)] {
+            let mut rows = vec![("chain", &chain.metrics), ("tree ", &treed.metrics)];
+            if let Some(dr) = &dyned {
+                rows.push(("dyn  ", &dr.metrics));
+            }
+            for (label, m) in rows {
                 println!(
                     "{label} breakdown: admission {:?} ({} admits)  draft {:?}  \
                      verify {:?}  commit {:?}  host {:?}  ({} iterations)",
@@ -266,7 +365,7 @@ fn bench_otps(args: &Args) -> Result<()> {
     }
 
     let run = report::bench_otps(
-        &mut mr, &drafter, &dataset, k, conc, total, max_new, 11, mixed, None,
+        &mut mr, &drafter, &dataset, k, conc, total, max_new, 11, mixed, None, None,
         paged_opts(args),
     )?;
     println!(

@@ -1,0 +1,453 @@
+//! Dynamic confidence-driven tree topologies over a max-shape envelope
+//! (EAGLE-2 style), the serve-time twin of [`super::tree`]'s static
+//! profiles.
+//!
+//! The static tree path lowers one executable per topology; this module
+//! turns the topology into per-step *data*. One executable pair is lowered
+//! for a **max-shape envelope** (e.g. `w:4,4,2,2,1`) whose cross-node
+//! ancestor mask and per-slot RoPE depth offsets are RUNTIME inputs. Each
+//! step, the drafter's per-node joint log-probabilities pick the
+//! `node_budget` most promising envelope nodes (greedy frontier expansion —
+//! provably the top-budget joint-scored ancestor-closed subset, because a
+//! child's joint log-probability never exceeds its parent's), and the
+//! selected subtree is **compacted** into the first `m + 1` chunk slots:
+//!
+//! * chunk slot 0 stays the root (last committed token), slots `1..=m` hold
+//!   the selected nodes in ascending envelope-id (= level-major) order, the
+//!   tail is PAD;
+//! * the runtime mask is the envelope ancestor mask gathered over
+//!   `[root] + selected` ([`TreeMask::gather`] — the subset machinery
+//!   `masking/tree.rs` was built for) embedded top-left in the envelope
+//!   shape, inactive rows/cols all-zero (inert: tail slots attend only the
+//!   committed cache and are never attended);
+//! * the runtime depth offsets carry each selected node's envelope depth,
+//!   so RoPE positions — and therefore the accepted-path KV compaction
+//!   story — are identical to the static path.
+//!
+//! Compaction is what lets the allocator charge speculative scratch by the
+//! node **budget** instead of the envelope size: every position a step can
+//! commit lives in the first `budget + 1` chunk slots, so paged admission
+//! reserves `budget + 1` covered positions while the (wider) envelope
+//! scatter's tail harmlessly lands in the null block (see
+//! [`SlotManager`](crate::coordinator::kv_cache::SlotManager)'s
+//! `write_width` vs `chunk` split).
+//!
+//! Static topologies fall out as the degenerate case: with
+//! `node_budget >= envelope.len()` every node is selected, the compacted
+//! chunk is the envelope chunk, the subset mask is the full ancestor mask,
+//! and the engine is byte-identical to the static-topology path
+//! (integration-tested).
+
+use super::tree::{TreeMask, TreeTopology};
+
+/// Configuration of dynamic tree speculation
+/// ([`EngineConfig::tree_dynamic`](crate::coordinator::EngineConfig::tree_dynamic)).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DynamicTreeConfig {
+    /// The max-shape envelope the executables were lowered with; per-step
+    /// selection happens inside it.
+    pub envelope: TreeTopology,
+    /// Nodes activated per step. [`new`](Self::new)/[`parse`](Self::parse)
+    /// reject budgets above the envelope's node count (a larger budget buys
+    /// nothing); [`active_nodes`](Self::active_nodes) additionally clamps,
+    /// so a hand-built oversized config degrades to the degenerate case
+    /// instead of overrunning. `node_budget == envelope.len()` reproduces
+    /// the static topology byte-for-byte.
+    pub node_budget: usize,
+}
+
+impl DynamicTreeConfig {
+    /// The serving-default envelope spec — the ONE place the Rust side
+    /// states it. Must stay in lockstep with python
+    /// `configs.TREE_DYN_ENVELOPE` (the lowering that makes the default
+    /// resolvable at executable lookup).
+    pub const DEFAULT_ENVELOPE_SPEC: &'static str = "w:4,4,2,2,1";
+    /// Serving-default node budget: the static serving tree's node count
+    /// (`w:3,2,1,1,1` = 8), so default comparisons spend an equal
+    /// verified-node budget. Mirrors python `configs.DEFAULT_TREE_BUDGET`.
+    pub const DEFAULT_NODE_BUDGET: usize = 8;
+
+    /// The serving-default configuration (envelope
+    /// [`DEFAULT_ENVELOPE_SPEC`](Self::DEFAULT_ENVELOPE_SPEC) at budget
+    /// [`DEFAULT_NODE_BUDGET`](Self::DEFAULT_NODE_BUDGET)).
+    pub fn serving_default() -> DynamicTreeConfig {
+        DynamicTreeConfig::parse(Self::DEFAULT_ENVELOPE_SPEC, Self::DEFAULT_NODE_BUDGET)
+            .expect("serving-default dynamic tree config")
+    }
+
+    /// Validated constructor. Reuses the [`TreeTopology::parse`] ceilings
+    /// ([`TreeTopology::MAX_PARSE_DEPTH`] / [`TreeTopology::MAX_PARSE_NODES`])
+    /// so an oversized envelope from the CLI fails with a descriptive error
+    /// instead of a panic deeper in the engine.
+    pub fn new(envelope: TreeTopology, node_budget: usize) -> Result<DynamicTreeConfig, String> {
+        if node_budget == 0 {
+            return Err("dynamic tree node budget must be >= 1".into());
+        }
+        if envelope.len() > TreeTopology::MAX_PARSE_NODES {
+            return Err(format!(
+                "envelope has {} nodes, exceeding the maximum {}",
+                envelope.len(),
+                TreeTopology::MAX_PARSE_NODES
+            ));
+        }
+        if envelope.max_depth() > TreeTopology::MAX_PARSE_DEPTH {
+            return Err(format!(
+                "envelope depth {} exceeds the maximum {}",
+                envelope.max_depth(),
+                TreeTopology::MAX_PARSE_DEPTH
+            ));
+        }
+        if node_budget > envelope.len() {
+            return Err(format!(
+                "node budget {} exceeds the envelope's {} nodes (budget == nodes is \
+                 the static degenerate case; larger buys nothing)",
+                node_budget,
+                envelope.len()
+            ));
+        }
+        Ok(DynamicTreeConfig { envelope, node_budget })
+    }
+
+    /// Parse a CLI pair: envelope spec (`"w:4,4,2,2,1"` / `"chain:5"`) plus
+    /// a node budget. Untrusted-input safe like [`TreeTopology::parse`].
+    pub fn parse(envelope_spec: &str, node_budget: usize) -> Result<DynamicTreeConfig, String> {
+        let envelope = TreeTopology::parse(envelope_spec)?;
+        DynamicTreeConfig::new(envelope, node_budget)
+    }
+
+    /// Nodes actually activated per step.
+    pub fn active_nodes(&self) -> usize {
+        self.node_budget.min(self.envelope.len())
+    }
+
+    /// Whether every envelope node is activated every step (the static
+    /// byte-parity case).
+    pub fn is_degenerate(&self) -> bool {
+        self.node_budget >= self.envelope.len()
+    }
+
+    /// Canonical id for display: `dyn:<envelope>@<budget>`.
+    pub fn id(&self) -> String {
+        format!("dyn:{}@{}", self.envelope.id(), self.node_budget)
+    }
+}
+
+/// Select the `budget` envelope nodes with the highest joint (cumulative)
+/// draft log-probability, as an ancestor-closed set.
+///
+/// `joint_logp[i - 1]` is node `i`'s joint log-probability: the sum of the
+/// drafter's per-level log-probabilities along node `i`'s root path (the
+/// `draft-tree-logp` executable's second output). Greedy frontier
+/// expansion: start from the root's children and repeatedly take the
+/// highest-scoring node whose parent is already selected (ties broken by
+/// ascending id, NaN treated as -inf). Because `joint(child) = joint(parent)
+/// + level_logp(child) <= joint(parent)`, this IS the global top-`budget`
+/// by joint score — and closure holds by construction even if device floats
+/// misbehave.
+///
+/// Returns the selected envelope ids sorted ascending (level-major order is
+/// preserved, so parents precede children and the compacted chunk keeps the
+/// `path[m-1] >= m` invariant the KV compaction relies on).
+pub fn select_nodes(envelope: &TreeTopology, joint_logp: &[f32], budget: usize) -> Vec<usize> {
+    let n = envelope.len();
+    assert_eq!(joint_logp.len(), n, "joint_logp must cover every envelope node");
+    let budget = budget.min(n);
+    let score = |i: usize| -> f32 {
+        let s = joint_logp[i - 1];
+        if s.is_nan() {
+            f32::NEG_INFINITY
+        } else {
+            s
+        }
+    };
+    let mut selected = vec![false; n + 1];
+    selected[0] = true; // the root is implicit, always active
+    let mut out = Vec::with_capacity(budget);
+    for _ in 0..budget {
+        let mut best: Option<usize> = None;
+        for i in 1..=n {
+            if selected[i] || !selected[envelope.parent(i)] {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => score(i) > score(b), // ties keep the smaller id
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        // the frontier is never empty before all n nodes are selected:
+        // every unselected id-minimal node has a selected parent
+        let pick = best.expect("frontier exhausted before budget");
+        selected[pick] = true;
+        out.push(pick);
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Compacted chunk-slot parents for a selected subtree: entry `j - 1` is
+/// the compacted slot of compacted node `j`'s parent (0 = root). `nodes`
+/// must be ascending and ancestor-closed (the [`select_nodes`] contract).
+pub fn compacted_parents(envelope: &TreeTopology, nodes: &[usize]) -> Vec<usize> {
+    nodes
+        .iter()
+        .map(|&id| {
+            let p = envelope.parent(id);
+            if p == 0 {
+                0
+            } else {
+                1 + nodes
+                    .iter()
+                    .position(|&s| s == p)
+                    .expect("selection not ancestor-closed")
+            }
+        })
+        .collect()
+}
+
+/// Per-chunk-slot RoPE depth offsets in the compacted layout, padded to
+/// `width` slots: slot 0 is the root (depth 0), slot `j` carries
+/// `envelope.depth(nodes[j - 1])`, tail slots (inert PAD) report 0.
+pub fn compacted_depths_i32(envelope: &TreeTopology, nodes: &[usize], width: usize) -> Vec<i32> {
+    let mut out = vec![0i32; width];
+    for (j, &id) in nodes.iter().enumerate() {
+        out[j + 1] = envelope.depth(id) as i32;
+    }
+    out
+}
+
+/// The per-step subset mask in the compacted layout, padded to
+/// `width x width` (the envelope chunk shape the executable was lowered
+/// with): the envelope ancestor mask gathered over `[root] + nodes`
+/// ([`TreeMask::gather`]) occupies the top-left, everything else is 0 —
+/// inactive tail slots attend nothing in the chunk (only the committed
+/// cache) and are attended by nobody.
+pub fn subset_mask_i32(mask: &TreeMask, nodes: &[usize], width: usize) -> Vec<i32> {
+    let mut slots = Vec::with_capacity(nodes.len() + 1);
+    slots.push(0);
+    slots.extend_from_slice(nodes);
+    let g = mask.gather(&slots);
+    let m = slots.len();
+    let mut out = vec![0i32; width * width];
+    for i in 0..m {
+        for j in 0..m {
+            if g.get(i, j) {
+                out[i * width + j] = 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Case};
+
+    fn env(widths: &[usize]) -> TreeTopology {
+        TreeTopology::from_widths(widths)
+    }
+
+    /// Joint log-probs consistent with a drafter: child = parent + level
+    /// term (<= 0), randomized.
+    fn random_joint(t: &TreeTopology, rng: &mut crate::util::rng::Rng) -> Vec<f32> {
+        let mut joint = vec![0f32; t.len()];
+        for i in 1..=t.len() {
+            let level = -(rng.below(1000) as f32) / 250.0; // [-4, 0]
+            let parent = t.parent(i);
+            joint[i - 1] = level + if parent == 0 { 0.0 } else { joint[parent - 1] };
+        }
+        joint
+    }
+
+    #[test]
+    fn config_validates_with_descriptive_errors() {
+        let e = env(&[3, 2, 1]);
+        assert!(DynamicTreeConfig::new(e.clone(), 6).is_ok());
+        let err = DynamicTreeConfig::new(e.clone(), 0).unwrap_err();
+        assert!(err.contains(">= 1"), "{err}");
+        let err = DynamicTreeConfig::new(e.clone(), 7).unwrap_err();
+        assert!(err.contains("budget 7"), "{err}");
+        // the parse caps are reused, so CLI errors stay descriptive
+        let err = DynamicTreeConfig::parse("w:1025", 4).unwrap_err();
+        assert!(err.contains("1024"), "{err}");
+        let deep = format!("w:{}", vec!["1"; 65].join(","));
+        let err = DynamicTreeConfig::parse(&deep, 4).unwrap_err();
+        assert!(err.contains("depth"), "{err}");
+        // oversized envelopes built programmatically hit the same ceilings
+        let wide = TreeTopology::from_widths(&[TreeTopology::MAX_PARSE_NODES + 1]);
+        let err = DynamicTreeConfig::new(wide, 4).unwrap_err();
+        assert!(err.contains("maximum"), "{err}");
+        let cfg = DynamicTreeConfig::parse("w:4,4,2,2,1", 8).unwrap();
+        assert_eq!(cfg.active_nodes(), 8);
+        assert!(!cfg.is_degenerate());
+        assert_eq!(cfg.id(), "dyn:w4x4x2x2x1@8");
+        assert!(DynamicTreeConfig::parse("chain:5", 5).unwrap().is_degenerate());
+    }
+
+    #[test]
+    fn chain_envelope_selects_prefix() {
+        // a chain envelope's top-b selection is always the first b nodes —
+        // the chain-of-depth-b degenerate case
+        let t = TreeTopology::chain(6);
+        let joint: Vec<f32> = (1..=6).map(|i| -(i as f32)).collect();
+        for b in 1..=6 {
+            assert_eq!(select_nodes(&t, &joint, b), (1..=b).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn selection_picks_confident_branch() {
+        // widths [2, 2]: nodes 1,2 at depth 1; 3,4 at depth 2 (parents 1,2).
+        // Node 2's branch is far more confident: budget 2 must take {2, 4}.
+        let t = env(&[2, 2]);
+        let joint = [-5.0f32, -0.1, -9.0, -0.2];
+        assert_eq!(select_nodes(&t, &joint, 2), vec![2, 4]);
+        // budget 3 adds the next best frontier node (node 1)
+        assert_eq!(select_nodes(&t, &joint, 3), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn selection_is_ancestor_closed_and_root_anchored() {
+        // THE satellite property: whatever the scores (even adversarial,
+        // non-monotone, or NaN), the selection is ancestor-closed, sized to
+        // the budget, and ascending
+        check("dyn-selection-closed", 150, |rng| {
+            let levels = 1 + rng.below(5);
+            let widths: Vec<usize> = (0..levels).map(|_| 1 + rng.below(4)).collect();
+            let t = TreeTopology::from_widths(&widths);
+            let joint: Vec<f32> = (0..t.len())
+                .map(|_| match rng.below(12) {
+                    0 => f32::NAN,
+                    1 => f32::NEG_INFINITY,
+                    _ => -(rng.below(2000) as f32) / 100.0,
+                })
+                .collect();
+            let budget = 1 + rng.below(t.len() + 2);
+            let sel = select_nodes(&t, &joint, budget);
+            if sel.len() != budget.min(t.len()) {
+                return Case::Fail {
+                    desc: format!("selected {} of budget {budget}", sel.len()),
+                    size: t.len(),
+                };
+            }
+            if !sel.windows(2).all(|w| w[0] < w[1]) {
+                return Case::Fail { desc: format!("not ascending: {sel:?}"), size: t.len() };
+            }
+            for &id in &sel {
+                let p = t.parent(id);
+                if p != 0 && !sel.contains(&p) {
+                    return Case::Fail {
+                        desc: format!("node {id}'s parent {p} missing from {sel:?} ({widths:?})"),
+                        size: t.len(),
+                    };
+                }
+            }
+            Case::Pass
+        });
+    }
+
+    #[test]
+    fn selection_is_global_top_budget_under_monotone_scores() {
+        // with drafter-shaped (monotone) joints, frontier-greedy == the
+        // global top-budget by score (tie-break: smaller id)
+        check("dyn-selection-topn", 120, |rng| {
+            let levels = 1 + rng.below(4);
+            let widths: Vec<usize> = (0..levels).map(|_| 1 + rng.below(4)).collect();
+            let t = TreeTopology::from_widths(&widths);
+            let joint = random_joint(&t, rng);
+            let budget = 1 + rng.below(t.len());
+            let sel = select_nodes(&t, &joint, budget);
+            let mut order: Vec<usize> = (1..=t.len()).collect();
+            order.sort_by(|&a, &b| {
+                joint[b - 1].partial_cmp(&joint[a - 1]).unwrap().then(a.cmp(&b))
+            });
+            let mut want: Vec<usize> = order[..budget].to_vec();
+            want.sort_unstable();
+            if sel != want {
+                return Case::Fail {
+                    desc: format!("greedy {sel:?} != top-{budget} {want:?} ({joint:?})"),
+                    size: t.len(),
+                };
+            }
+            Case::Pass
+        });
+    }
+
+    #[test]
+    fn degenerate_budget_selects_everything() {
+        let t = env(&[3, 2, 1]);
+        let joint = random_joint(&t, &mut crate::util::rng::Rng::new(7));
+        assert_eq!(select_nodes(&t, &joint, 6), (1..=6).collect::<Vec<_>>());
+        assert_eq!(select_nodes(&t, &joint, 99), (1..=6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn compacted_parents_relabel_the_subtree() {
+        // widths [2, 2]: selecting {2, 4} compacts node 2 -> slot 1,
+        // node 4 -> slot 2 with parent chain 0 -> 1 -> 2
+        let t = env(&[2, 2]);
+        assert_eq!(compacted_parents(&t, &[2, 4]), vec![0, 1]);
+        assert_eq!(compacted_parents(&t, &[1, 2, 4]), vec![0, 0, 2]);
+        // full selection is the identity relabeling
+        let all: Vec<usize> = (1..=t.len()).collect();
+        let parents: Vec<usize> = (1..=t.len()).map(|i| t.parent(i)).collect();
+        assert_eq!(compacted_parents(&t, &all), parents);
+    }
+
+    #[test]
+    fn compacted_depths_follow_envelope_depths() {
+        let t = env(&[2, 2]);
+        assert_eq!(compacted_depths_i32(&t, &[2, 4], 5), vec![0, 1, 2, 0, 0]);
+        assert_eq!(compacted_depths_i32(&t, &[1, 2, 3, 4], 5), vec![0, 1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn subset_mask_matches_envelope_gather() {
+        // the satellite reference property (mirrored in numpy as
+        // masks.tree_subset_mask): row i / col j of the subset mask equal
+        // the envelope ancestor mask at the selected slots, and everything
+        // outside the active block is zero
+        check("dyn-subset-mask", 100, |rng| {
+            let levels = 1 + rng.below(4);
+            let widths: Vec<usize> = (0..levels).map(|_| 1 + rng.below(3)).collect();
+            let t = TreeTopology::from_widths(&widths);
+            let mask = t.build_mask();
+            let joint = random_joint(&t, rng);
+            let budget = 1 + rng.below(t.len());
+            let sel = select_nodes(&t, &joint, budget);
+            let width = t.len() + 1;
+            let out = subset_mask_i32(&mask, &sel, width);
+            let mut slots = vec![0usize];
+            slots.extend_from_slice(&sel);
+            for i in 0..width {
+                for j in 0..width {
+                    let want = if i < slots.len() && j < slots.len() {
+                        mask.get(slots[i], slots[j]) as i32
+                    } else {
+                        0
+                    };
+                    if out[i * width + j] != want {
+                        return Case::Fail {
+                            desc: format!("({i},{j}) = {} want {want} sel {sel:?}", out[i * width + j]),
+                            size: t.len(),
+                        };
+                    }
+                }
+            }
+            Case::Pass
+        });
+    }
+
+    #[test]
+    fn full_selection_subset_mask_equals_envelope_mask() {
+        // degenerate case: the subset mask must be byte-identical to the
+        // static path's full ancestor mask export
+        let t = env(&[3, 2, 1, 1, 1]);
+        let mask = t.build_mask();
+        let all: Vec<usize> = (1..=t.len()).collect();
+        assert_eq!(subset_mask_i32(&mask, &all, t.len() + 1), mask.to_i32());
+    }
+}

@@ -13,14 +13,20 @@
 //! Serve-time masking lives here too: [`tree`] builds the cross-node
 //! ancestor mask for tree-structured speculation once per topology (the same
 //! build-once / gather-per-use discipline, applied to the verify chunk
-//! instead of the training batch).
+//! instead of the training batch), and [`dynamic`] selects a per-step
+//! confidence-driven node subset inside a max-shape envelope and derives its
+//! compacted subset mask from the envelope mask via the same gather.
 
 pub mod cod;
+pub mod dynamic;
 pub mod pard;
 pub mod precomputed;
 pub mod tree;
 
 pub use cod::{cod_counts, cod_sample_nested, rows_from_anchors};
+pub use dynamic::{
+    compacted_depths_i32, compacted_parents, select_nodes, subset_mask_i32, DynamicTreeConfig,
+};
 pub use pard::{pard_full_mask, pard_mask};
 pub use precomputed::PrecomputedMask;
 pub use tree::{TreeMask, TreeTopology};

@@ -10,7 +10,7 @@ use crate::coordinator::{
     run_closed_loop, EngineConfig, EngineCore, EngineMetrics, PagedKvConfig, RequestResult,
     Sampling,
 };
-use crate::masking::TreeTopology;
+use crate::masking::{DynamicTreeConfig, TreeTopology};
 use crate::runtime::ModelRuntime;
 use crate::util::rng::Rng;
 use crate::workload::{corpus::load_eval_prompts, ArrivalProcess, LengthModel};
@@ -71,6 +71,7 @@ pub fn eval_acceptance(
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         tree: None,
+        tree_dynamic: None,
         paged: None,
         seed: 42,
     };
@@ -112,10 +113,13 @@ pub struct OtpsRun {
 /// iteration-level batching matters: short requests evict early and freed
 /// slots re-admit mid-flight instead of idling behind the longest request.
 /// With `tree` set, the engine drafts/verifies that static topology instead
-/// of a K-chain (`k` is then ignored); the same workload seed makes
-/// chain-vs-tree runs directly comparable. With `paged` set, the engine
-/// serves from the block-paged KV cache (same workload seed ⇒ directly
-/// comparable to the dense run, and byte-identical when fully provisioned).
+/// of a K-chain (`k` is then ignored); with `tree_dynamic` set (mutually
+/// exclusive with `tree`), it activates a per-step confidence-selected node
+/// subset inside the given envelope; the same workload seed makes
+/// chain-vs-tree(-vs-dynamic) runs directly comparable. With `paged` set,
+/// the engine serves from the block-paged KV cache (same workload seed ⇒
+/// directly comparable to the dense run, and byte-identical when fully
+/// provisioned).
 #[allow(clippy::too_many_arguments)]
 pub fn bench_otps(
     mr: &mut ModelRuntime,
@@ -128,6 +132,7 @@ pub fn bench_otps(
     seed: u64,
     mixed_lengths: bool,
     tree: Option<&TreeTopology>,
+    tree_dynamic: Option<&DynamicTreeConfig>,
     paged: Option<PagedKvConfig>,
 ) -> Result<OtpsRun> {
     let info = mr.manifest.drafter(drafter)?.clone();
@@ -142,6 +147,7 @@ pub fn bench_otps(
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         tree: tree.cloned(),
+        tree_dynamic: tree_dynamic.cloned(),
         paged,
         seed,
     };
@@ -166,7 +172,7 @@ pub fn bench_otps(
         dataset: dataset.to_string(),
         k,
         concurrency,
-        topology: tree.map(|t| t.id()),
+        topology: tree.map(|t| t.id()).or_else(|| tree_dynamic.map(|d| d.id())),
         otps: metrics.otps(),
         acceptance_length: metrics.acceptance_length(),
         mean_occupancy: metrics.mean_occupancy(),
@@ -174,35 +180,46 @@ pub fn bench_otps(
     })
 }
 
-/// Chain-vs-tree comparison on the SAME workload seed (and the same
-/// mixed-length setting): one K-chain run and one tree run (K = the tree's
-/// max depth, so per-step depth budgets match). The acceptance-length delta
-/// is the whole point of tree speculation — a tree that embeds the rank-0
-/// chain can only match or beat the chain's AL per iteration (it accepts
-/// the chain path whenever the chain would, plus any deeper sibling path).
+/// Chain / static-tree / (optionally) dynamic-tree comparison on the SAME
+/// workload seed (and the same mixed-length setting): one K-chain run
+/// (K = the static tree's max depth, so per-step depth budgets match), one
+/// static tree run, and — when `dynamic` is set — one dynamic run. The
+/// acceptance-length deltas are the whole point: a static tree that embeds
+/// the rank-0 chain can only match or beat the chain's AL per iteration,
+/// and a dynamic budget equal to the static tree's node count spends the
+/// SAME verified-node budget where the drafter is confident instead of
+/// where the width profile was frozen at lowering time.
 #[allow(clippy::too_many_arguments)]
 pub fn compare_chain_tree(
     mr: &mut ModelRuntime,
     drafter: &str,
     dataset: &str,
     tree: &TreeTopology,
+    dynamic: Option<&DynamicTreeConfig>,
     concurrency: usize,
     total_requests: usize,
     max_new: usize,
     seed: u64,
     mixed_lengths: bool,
     paged: Option<PagedKvConfig>,
-) -> Result<(OtpsRun, OtpsRun)> {
+) -> Result<(OtpsRun, OtpsRun, Option<OtpsRun>)> {
     let k = tree.max_depth();
     let chain = bench_otps(
         mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
-        mixed_lengths, None, paged,
+        mixed_lengths, None, None, paged,
     )?;
     let treed = bench_otps(
         mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
-        mixed_lengths, Some(tree), paged,
+        mixed_lengths, Some(tree), None, paged,
     )?;
-    Ok((chain, treed))
+    let dyned = match dynamic {
+        Some(d) => Some(bench_otps(
+            mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
+            mixed_lengths, None, Some(d), paged,
+        )?),
+        None => None,
+    };
+    Ok((chain, treed, dyned))
 }
 
 /// Figure 1: sequence-length distribution report (paper-scale quantiles +

@@ -16,6 +16,14 @@
 //! pool `[L, 2, NB, BS, H, Dh]` through a per-slot block table passed as a
 //! runtime input; their host-side surgery (admission splice, accepted-path
 //! rewire/copy) lives in [`super::kv_blocks`].
+//!
+//! Dynamic-tree executables (`verify-tree-dyn` / `verify-tree-dyn-paged` /
+//! `draft-tree-logp` kinds) are lowered once per max-shape ENVELOPE: the
+//! cross-node mask *and* the per-slot RoPE depth offsets become per-batch
+//! runtime inputs (each slot activates a different confidence-selected node
+//! subset — see [`crate::masking::dynamic`]), and the scored drafter returns
+//! per-node joint log-probabilities next to the node tokens so the engine
+//! can do the selecting.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -60,6 +68,9 @@ pub struct TargetExec {
     pub topo: Option<String>,
     /// set iff this is a block-paged verify executable
     pub paged: bool,
+    /// set iff this is a dynamic-tree (max-shape envelope) verify
+    /// executable: mask AND depth offsets are per-batch runtime inputs
+    pub dynamic: bool,
     /// physical pool size the paged executable was lowered with
     pub num_blocks: Option<usize>,
 }
@@ -73,6 +84,9 @@ pub struct DraftExec {
     pub k: usize,
     /// set iff this is a tree drafter executable for that topology id
     pub topo: Option<String>,
+    /// set iff this is a scored tree drafter (`draft-tree-logp`): returns
+    /// per-node joint log-probabilities next to the node tokens
+    pub scored: bool,
 }
 
 impl ModelRuntime {
@@ -116,7 +130,7 @@ impl ModelRuntime {
             .clone();
         self.rt.load(&pre.name, &self.manifest.abs(&pre.path))?;
         self.rt.load(&ver.name, &self.manifest.abs(&ver.path))?;
-        Ok(TargetExec { target: target.to_string(), batch, k, topo: None, paged: false, num_blocks: None })
+        Ok(TargetExec { target: target.to_string(), batch, k, topo: None, paged: false, dynamic: false, num_blocks: None })
     }
 
     pub fn ensure_drafter(&mut self, drafter: &str, batch: usize, k: usize) -> Result<DraftExec> {
@@ -127,7 +141,7 @@ impl ModelRuntime {
             .find_exec("draft", None, Some(drafter), Some(batch), Some(k))?
             .clone();
         self.rt.load(&d.name, &self.manifest.abs(&d.path))?;
-        Ok(DraftExec { drafter: drafter.to_string(), batch, k, topo: None })
+        Ok(DraftExec { drafter: drafter.to_string(), batch, k, topo: None, scored: false })
     }
 
     /// Load the tree-verify executable for `target` at `batch` and the given
@@ -153,6 +167,7 @@ impl ModelRuntime {
             k: tree.len(),
             topo: Some(id),
             paged: false,
+            dynamic: false,
             num_blocks: None,
         })
     }
@@ -175,7 +190,7 @@ impl ModelRuntime {
             .find_exec_tree("draft-tree", None, Some(drafter), Some(batch), &id)?
             .clone();
         self.rt.load(&d.name, &self.manifest.abs(&d.path))?;
-        Ok(DraftExec { drafter: drafter.to_string(), batch, k: tree.len(), topo: Some(id) })
+        Ok(DraftExec { drafter: drafter.to_string(), batch, k: tree.len(), topo: Some(id), scored: false })
     }
 
     /// Fresh zeroed KV cache for a wave of `batch` slots.
@@ -223,6 +238,7 @@ impl ModelRuntime {
             k,
             topo: None,
             paged: true,
+            dynamic: false,
             num_blocks: ver.num_blocks,
         })
     }
@@ -249,7 +265,89 @@ impl ModelRuntime {
             k: tree.len(),
             topo: Some(id),
             paged: true,
+            dynamic: false,
             num_blocks: ver.num_blocks,
+        })
+    }
+
+    /// Load the dynamic-tree verify executable for `target` at `batch` and
+    /// the given max-shape envelope: the ancestor mask AND the depth offsets
+    /// are per-batch runtime inputs ([`Self::verify_tree_dyn`]).
+    pub fn ensure_verify_tree_dyn(
+        &mut self,
+        target: &str,
+        batch: usize,
+        envelope: &TreeTopology,
+    ) -> Result<TargetExec> {
+        let info = self.manifest.target(target)?.clone();
+        self.ensure_weights(target, &info.weights, &info.param_order)?;
+        let id = envelope.id();
+        let ver = self
+            .manifest
+            .find_exec_tree("verify-tree-dyn", Some(target), None, Some(batch), &id)?
+            .clone();
+        self.rt.load(&ver.name, &self.manifest.abs(&ver.path))?;
+        Ok(TargetExec {
+            target: target.to_string(),
+            batch,
+            k: envelope.len(),
+            topo: Some(id),
+            paged: false,
+            dynamic: true,
+            num_blocks: None,
+        })
+    }
+
+    /// Block-paged twin of [`ensure_verify_tree_dyn`](Self::ensure_verify_tree_dyn).
+    pub fn ensure_verify_tree_dyn_paged(
+        &mut self,
+        target: &str,
+        batch: usize,
+        envelope: &TreeTopology,
+    ) -> Result<TargetExec> {
+        let info = self.manifest.target(target)?.clone();
+        self.ensure_weights(target, &info.weights, &info.param_order)?;
+        let id = envelope.id();
+        let ver = self
+            .manifest
+            .find_exec_tree("verify-tree-dyn-paged", Some(target), None, Some(batch), &id)?
+            .clone();
+        self.rt.load(&ver.name, &self.manifest.abs(&ver.path))?;
+        Ok(TargetExec {
+            target: target.to_string(),
+            batch,
+            k: envelope.len(),
+            topo: Some(id),
+            paged: true,
+            dynamic: true,
+            num_blocks: ver.num_blocks,
+        })
+    }
+
+    /// Load the scored tree drafter (`draft-tree-logp`) for `drafter` at
+    /// `batch` and the given envelope: same inputs as the plain tree
+    /// drafter, but the outputs are (node tokens, per-node joint
+    /// log-probabilities) — the confidence signal dynamic selection runs on.
+    pub fn ensure_drafter_tree_scored(
+        &mut self,
+        drafter: &str,
+        batch: usize,
+        envelope: &TreeTopology,
+    ) -> Result<DraftExec> {
+        let info = self.manifest.drafter(drafter)?.clone();
+        self.ensure_weights(drafter, &info.weights, &info.param_order)?;
+        let id = envelope.id();
+        let d = self
+            .manifest
+            .find_exec_tree("draft-tree-logp", None, Some(drafter), Some(batch), &id)?
+            .clone();
+        self.rt.load(&d.name, &self.manifest.abs(&d.path))?;
+        Ok(DraftExec {
+            drafter: drafter.to_string(),
+            batch,
+            k: envelope.len(),
+            topo: Some(id),
+            scored: true,
         })
     }
 
@@ -405,6 +503,108 @@ impl ModelRuntime {
         Ok(VerifyOut { logits, feats, kv })
     }
 
+    /// Dynamic-tree verification over a max-shape envelope: like
+    /// [`verify_tree`](Self::verify_tree), but the mask is PER-BATCH
+    /// (`[B, N+1, N+1]` — each slot activates its own compacted node subset,
+    /// inactive tail rows/cols all-zero) and the RoPE depth offsets are a
+    /// runtime input too (`[B, N+1]`, each compacted slot's envelope depth).
+    /// The chunk carries `[root, selected nodes.., PAD..]` in compacted
+    /// layout (see [`crate::masking::dynamic`]).
+    pub fn verify_tree_dyn(
+        &mut self,
+        te: &TargetExec,
+        chunk: &HostTensor,         // [B, N+1] i32 (compacted + PAD tail)
+        cache_len: &HostTensor,     // [B] i32
+        tree_mask: &HostTensor,     // [B, N+1, N+1] i32
+        depth_offsets: &HostTensor, // [B, N+1] i32
+        kv: &xla::PjRtBuffer,
+    ) -> Result<VerifyOut> {
+        anyhow::ensure!(te.dynamic, "verify_tree_dyn called with a static TargetExec");
+        let topo = te
+            .topo
+            .as_deref()
+            .context("verify_tree_dyn called with a non-tree TargetExec")?;
+        let name = format!("{}-verify-tree-dyn-{}-b{}", te.target, topo, te.batch);
+        let wbufs = &self.weights[&te.target];
+        let mut args: Vec<Arg> = wbufs.iter().map(Arg::Buf).collect();
+        args.push(Arg::Host(chunk));
+        args.push(Arg::Host(cache_len));
+        args.push(Arg::Host(tree_mask));
+        args.push(Arg::Host(depth_offsets));
+        args.push(Arg::Buf(kv));
+        let out = self.rt.call(&name, &args)?;
+        let mut it = out.into_iter();
+        let logits = self.rt.download(&it.next().context("missing logits")?)?;
+        let feats = self.rt.download(&it.next().context("missing feats")?)?;
+        let kv = it.next().context("missing kv")?;
+        Ok(VerifyOut { logits, feats, kv })
+    }
+
+    /// Block-paged twin of [`verify_tree_dyn`](Self::verify_tree_dyn); the
+    /// cache is the block pool addressed through `block_table`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn verify_tree_dyn_paged(
+        &mut self,
+        te: &TargetExec,
+        chunk: &HostTensor,         // [B, N+1] i32
+        cache_len: &HostTensor,     // [B] i32
+        tree_mask: &HostTensor,     // [B, N+1, N+1] i32
+        depth_offsets: &HostTensor, // [B, N+1] i32
+        block_table: &HostTensor,   // [B, M] i32
+        pool: &xla::PjRtBuffer,
+    ) -> Result<VerifyOut> {
+        anyhow::ensure!(te.paged, "verify_tree_dyn_paged called with a non-paged TargetExec");
+        anyhow::ensure!(te.dynamic, "verify_tree_dyn_paged called with a static TargetExec");
+        let topo = te
+            .topo
+            .as_deref()
+            .context("verify_tree_dyn_paged called with a non-tree TargetExec")?;
+        let name = format!("{}-verify-tree-dyn-paged-{}-b{}", te.target, topo, te.batch);
+        let wbufs = &self.weights[&te.target];
+        let mut args: Vec<Arg> = wbufs.iter().map(Arg::Buf).collect();
+        args.push(Arg::Host(chunk));
+        args.push(Arg::Host(cache_len));
+        args.push(Arg::Host(tree_mask));
+        args.push(Arg::Host(depth_offsets));
+        args.push(Arg::Host(block_table));
+        args.push(Arg::Buf(pool));
+        let out = self.rt.call(&name, &args)?;
+        let mut it = out.into_iter();
+        let logits = self.rt.download(&it.next().context("missing logits")?)?;
+        let feats = self.rt.download(&it.next().context("missing feats")?)?;
+        let kv = it.next().context("missing kv")?;
+        Ok(VerifyOut { logits, feats, kv })
+    }
+
+    /// Scored tree draft: same inputs as [`draft`](Self::draft), returning
+    /// `([B, N]` node tokens, `[B, N]` joint log-probabilities`)` — node
+    /// `i`'s joint log-probability is the sum of the drafter's per-level
+    /// log-probabilities along `i`'s root path (the dynamic-selection
+    /// confidence signal).
+    pub fn draft_tree_scored(
+        &mut self,
+        de: &DraftExec,
+        ctx_tokens: &HostTensor,
+        ctx_feats: &HostTensor,
+        row_pos0: &HostTensor,
+    ) -> Result<(HostTensor, HostTensor)> {
+        anyhow::ensure!(de.scored, "draft_tree_scored called with an unscored DraftExec");
+        let topo = de
+            .topo
+            .as_deref()
+            .context("draft_tree_scored called with a non-tree DraftExec")?;
+        let name = format!("{}-draft-tree-logp-{}-b{}", de.drafter, topo, de.batch);
+        let wbufs = &self.weights[&de.drafter];
+        let mut args: Vec<Arg> = wbufs.iter().map(Arg::Buf).collect();
+        args.push(Arg::Host(ctx_tokens));
+        args.push(Arg::Host(ctx_feats));
+        args.push(Arg::Host(row_pos0));
+        let out = self.rt.call(&name, &args)?;
+        let tokens = self.rt.download(&out[0])?;
+        let logp = self.rt.download(&out[1])?;
+        Ok((tokens, logp))
+    }
+
     /// Load just the prefill executable for a target at `batch` (used by the
     /// stepped engine's per-slot admission path, which never runs a verify
     /// at that width). `TargetExec::k` is irrelevant to prefill and set to 0.
@@ -416,7 +616,7 @@ impl ModelRuntime {
             .find_exec("prefill", Some(target), None, Some(batch), None)?
             .clone();
         self.rt.load(&pre.name, &self.manifest.abs(&pre.path))?;
-        Ok(TargetExec { target: target.to_string(), batch, k: 0, topo: None, paged: false, num_blocks: None })
+        Ok(TargetExec { target: target.to_string(), batch, k: 0, topo: None, paged: false, dynamic: false, num_blocks: None })
     }
 
     /// Load just the verify executable for a target at (`batch`, `k`) — the
@@ -431,7 +631,7 @@ impl ModelRuntime {
             .find_exec("verify", Some(target), None, Some(batch), Some(k))?
             .clone();
         self.rt.load(&ver.name, &self.manifest.abs(&ver.path))?;
-        Ok(TargetExec { target: target.to_string(), batch, k, topo: None, paged: false, num_blocks: None })
+        Ok(TargetExec { target: target.to_string(), batch, k, topo: None, paged: false, dynamic: false, num_blocks: None })
     }
 
     /// Draft K chain tokens — or N tree-node tokens when `de` was loaded by

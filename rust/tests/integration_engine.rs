@@ -9,8 +9,8 @@
 //! stayed live.
 
 use p_eagle::coordinator::{
-    paged_from_env, run_closed_loop, EngineConfig, EngineCore, EngineEvent, FinishReason,
-    Sampling,
+    paged_from_env, run_closed_loop, tree_dyn_from_env, EngineConfig, EngineCore,
+    EngineEvent, FinishReason, Sampling,
 };
 use p_eagle::runtime::{HostTensor, ModelRuntime};
 use p_eagle::workload::RequestSpec;
@@ -96,7 +96,9 @@ fn engine_greedy(mr: &mut ModelRuntime, drafter: &str, prompt: &[i32], max_new: 
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         tree: None,
-        // PEAGLE_PAGED=1 (the CI paged job) runs this suite on the paged KV cache
+        // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
+        // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache
+        tree_dynamic: tree_dyn_from_env(),
         paged: paged_from_env(),
         seed: 5,
     };
@@ -165,7 +167,9 @@ fn batched_core_matches_single() {
         max_new_tokens: 24,
         sampling: Sampling::Greedy,
         tree: None,
-        // PEAGLE_PAGED=1 (the CI paged job) runs this suite on the paged KV cache
+        // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
+        // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache
+        tree_dynamic: tree_dyn_from_env(),
         paged: paged_from_env(),
         seed: 5,
     };
@@ -189,7 +193,9 @@ fn core_cfg(batch: usize, max_new: usize) -> EngineConfig {
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         tree: None,
-        // PEAGLE_PAGED=1 (the CI paged job) runs this suite on the paged KV cache
+        // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
+        // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache
+        tree_dynamic: tree_dyn_from_env(),
         paged: paged_from_env(),
         seed: 5,
     }
@@ -361,7 +367,9 @@ fn acceptance_length_in_valid_range() {
         max_new_tokens: 40,
         sampling: Sampling::Greedy,
         tree: None,
-        // PEAGLE_PAGED=1 (the CI paged job) runs this suite on the paged KV cache
+        // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
+        // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache
+        tree_dynamic: tree_dyn_from_env(),
         paged: paged_from_env(),
         seed: 5,
     };
@@ -387,7 +395,8 @@ fn chain_topology_tree_is_byte_identical_to_chain() {
     for seed in [81u64, 82, 83] {
         let prompt = test_prompt(&mr, seed);
         let run = |mr: &mut ModelRuntime, tree: Option<TreeTopology>| {
-            let cfg = EngineConfig { tree, ..core_cfg(1, 32) };
+            // explicit static tree: the env-driven dynamic mode must yield
+            let cfg = EngineConfig { tree, tree_dynamic: None, ..core_cfg(1, 32) };
             let mut g =
                 Some(spec(0, &prompt, 32));
             let (results, metrics) =
@@ -420,7 +429,7 @@ fn branching_tree_is_lossless_and_al_dominates_chain() {
         let prompt = test_prompt(&mr, seed);
         let want = reference_greedy(&mut mr, "target-m", &prompt, 32);
         let run = |mr: &mut ModelRuntime, t: Option<TreeTopology>| {
-            let cfg = EngineConfig { tree: t, ..core_cfg(1, 32) };
+            let cfg = EngineConfig { tree: t, tree_dynamic: None, ..core_cfg(1, 32) };
             let mut g = Some(spec(0, &prompt, 32));
             let (results, _) =
                 run_closed_loop(mr, &cfg, 1, 1, || g.take().unwrap()).unwrap();

@@ -46,6 +46,10 @@ fn cfg(batch: usize, max_new: usize, paged: Option<PagedKvConfig>) -> EngineConf
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         tree: None,
+        // dense-vs-paged parity is asserted per explicit mode below, so the
+        // env-driven dynamic default is NOT wired here (several tests set
+        // `tree` directly, which excludes it)
+        tree_dynamic: None,
         paged,
         seed: 5,
     }

@@ -20,7 +20,9 @@ fn cfg(batch: usize, max_new: usize) -> EngineConfig {
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         tree: None,
-        // PEAGLE_PAGED=1 (the CI paged job) runs this suite on the paged KV cache
+        // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
+        // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache
+        tree_dynamic: p_eagle::coordinator::tree_dyn_from_env(),
         paged: p_eagle::coordinator::paged_from_env(),
         seed: 1,
     }
