@@ -7,7 +7,7 @@
 //! config -> stepped EngineCore serving -> streamed events -> metrics.
 
 use anyhow::Result;
-use p_eagle::coordinator::{EngineConfig, EngineCore, EngineEvent, Sampling};
+use p_eagle::coordinator::{EngineConfig, EngineCore, EngineEvent, SpecPolicy};
 use p_eagle::report::{bench_otps, eval_acceptance};
 use p_eagle::runtime::{Arg, HostTensor, ModelRuntime};
 
@@ -51,18 +51,11 @@ fn main() -> Result<()> {
 
     // 5. drive the stepped engine core by hand and stream one generation:
     //    add_request -> step until the Finished event arrives
-    let cfg = EngineConfig {
-        target: "target-m".into(),
-        drafter: "target-m-pe4".into(),
-        k: 5,
-        batch: 1,
-        max_new_tokens: 24,
-        sampling: Sampling::Greedy,
-        tree: None,
-        tree_dynamic: None,
-        paged: None,
-        seed: 3,
-    };
+    // the speculation policy is per-request data: this engine defaults every
+    // request to P-EAGLE chain drafting at K=5 (requests may carry their own
+    // SpecPolicy — see the serve CLI's --drafters/--policy)
+    let cfg = EngineConfig::new("target-m", SpecPolicy::chain("target-m-pe4", 5), 1, 24)
+        .with_seed(3);
     let mut core = EngineCore::new(&mut mr, cfg)?;
     let regime = mr.manifest.regimes["humaneval"].clone();
     let mut arr = p_eagle::workload::ArrivalProcess::closed_loop(regime, 16, 24, 9);

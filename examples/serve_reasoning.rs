@@ -10,11 +10,11 @@
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
 use anyhow::Result;
-use p_eagle::coordinator::{run_closed_loop, EngineConfig, Sampling};
+use p_eagle::coordinator::{run_closed_loop, EngineConfig, SpecPolicy};
 use p_eagle::runtime::ModelRuntime;
 use p_eagle::util::bench::Table;
 use p_eagle::util::rng::Rng;
-use p_eagle::workload::{LengthModel, RequestSpec};
+use p_eagle::workload::{LengthModel, Request};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -39,18 +39,8 @@ fn main() -> Result<()> {
 
     for (method, k) in [("ar", 3), ("ar", 5), ("pe4", 5), ("pe4", 7)] {
         let drafter = format!("{target}-{method}");
-        let cfg = EngineConfig {
-            target: target.into(),
-            drafter,
-            k,
-            batch: conc,
-            max_new_tokens: 96,
-            sampling: Sampling::Greedy,
-            tree: None,
-            tree_dynamic: None,
-            paged: None,
-            seed: 1234,
-        };
+        let cfg = EngineConfig::new(target, SpecPolicy::chain(&drafter, k), conc, 96)
+            .with_seed(1234);
         // identical request stream for both methods (seeded)
         let mut rng = Rng::new(777);
         let mut lrng = Rng::new(778);
@@ -59,12 +49,11 @@ fn main() -> Result<()> {
         let lens = lens.clone();
         let (results, metrics) = run_closed_loop(&mut mr, &cfg, conc, total, || {
             id += 1;
-            RequestSpec {
+            Request::new(
                 id,
-                prompt: regime.sample_seq(16, &mut rng),
-                max_new_tokens: lens.sample(&mut lrng).clamp(8, 96),
-                arrival_s: 0.0,
-            }
+                regime.sample_seq(16, &mut rng),
+                lens.sample(&mut lrng).clamp(8, 96),
+            )
         })?;
         let toks: usize = results.iter().map(|r| r.tokens.len()).sum();
         table.row(vec![

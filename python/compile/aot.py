@@ -30,10 +30,11 @@ from . import data as data_mod
 from .configs import (
     BATCH_SIZES, BOS_ID, CTX_WINDOW, DATASETS, DEFAULT_K, EOS_ID,
     EPOCH_SNAPSHOTS, KV_BLOCK_SIZE, MASK_ID, PAD_ID, PROMPT_PAD, S_MAX,
-    SPEC_DEPTHS, TABLE1_CONTEXTS, TARGETS, TREE_DRAFTERS, TREE_DYN_ENVELOPES,
+    SPEC_DEPTHS, TABLE1_CONTEXTS, TARGETS, TREE_DYN_ENVELOPES,
     TREE_TARGETS, TREE_TOPOLOGIES, VOCAB, DrafterConfig, all_drafters,
-    ablation_drafters, config_dict, drafter_train_config, kv_blocks_per_slot,
-    num_kv_blocks, serving_drafters, table1_drafters,
+    ablation_drafters, config_dict, drafter_modes, drafter_train_config,
+    kv_blocks_per_slot, num_kv_blocks, serving_drafters, table1_drafters,
+    tree_drafters,
 )
 from .drafter import draft_ar, draft_pe, draft_pe_tree, init_drafter
 from .masks import tree_depths, tree_topology_id
@@ -207,6 +208,10 @@ def stage_drafters(art: Artifacts, target_params):
             **config_dict(dcfg),
             "weights": f"weights/{dcfg.name}.pew",
             "param_order": order,
+            # per-drafter capability record: which speculation modes this
+            # drafter's executables support (the Rust policy registry's
+            # gate for per-request SpecPolicy validation)
+            "modes": drafter_modes(dcfg),
             "train": {"seq_len": tc.seq_len, "k_train": tc.k_train,
                       "cod_ratio": tc.cod_ratio, "segments": tc.segments,
                       "mask_mode": tc.mask_mode, "steps": tc.steps},
@@ -221,6 +226,7 @@ def stage_drafters(art: Artifacts, target_params):
                     **config_dict(dcfg), "name": sname,
                     "weights": f"weights/{sname}.pew",
                     "param_order": order,
+                    "modes": drafter_modes(dcfg),
                 }
     return out
 
@@ -285,7 +291,9 @@ def stage_lower(art: Artifacts, target_params, drafter_params):
                     [{"name": "logits"}, {"name": "feats"}, {"name": "kv"}])
 
     # --- drafter executables -----------------------------------------------
-    serving = {d.name for d in serving_drafters() if not d.name.endswith("pe2")}
+    # every serving drafter (pe2 included — the multi-drafter engine serves
+    # it next to pe4/ar from one batch) gets the full chain grid
+    serving = {d.name for d in serving_drafters()}
     for dname, dmeta in art.manifest["drafters"].items():
         dcfg = DrafterConfig(**{k: v for k, v in dmeta.items()
                                 if k in DrafterConfig.__dataclass_fields__})
@@ -353,7 +361,7 @@ def stage_lower(art: Artifacts, target_params, drafter_params):
                     {"model": tname, "batch": b, "k": n_nodes, "topology": tid,
                      "block_size": KV_BLOCK_SIZE, "num_blocks": num_kv_blocks(b)},
                     [{"name": "logits"}, {"name": "feats"}, {"name": "kv"}])
-        for dname in TREE_DRAFTERS:
+        for dname in tree_drafters():
             dmeta = art.manifest["drafters"][dname]
             dcfg = DrafterConfig(**{k: v for k, v in dmeta.items()
                                     if k in DrafterConfig.__dataclass_fields__})
@@ -418,7 +426,7 @@ def stage_lower(art: Artifacts, target_params, drafter_params):
                     {"model": tname, "batch": b, "k": n_nodes, "topology": tid,
                      "block_size": KV_BLOCK_SIZE, "num_blocks": num_kv_blocks(b)},
                     [{"name": "logits"}, {"name": "feats"}, {"name": "kv"}])
-        for dname in TREE_DRAFTERS:
+        for dname in tree_drafters():
             dmeta = art.manifest["drafters"][dname]
             dcfg = DrafterConfig(**{k: v for k, v in dmeta.items()
                                     if k in DrafterConfig.__dataclass_fields__})

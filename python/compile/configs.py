@@ -170,11 +170,28 @@ DEFAULT_K = 5
 # widths[d] nodes at depth d+1, level-major ids — see masks.tree_parents and
 # rust/src/masking/tree.rs. The all-ones profile is the chain-as-degenerate-
 # tree parity case; the branching profile is the serving default of
-# `bench-otps --tree`. Tree executables are lowered for the target-m
-# workhorse + its pe4 drafter only (each topology × batch costs a lowering).
+# `bench-otps --tree`. Tree/dyn executables are lowered for the target-m
+# workhorse and EVERY tree-capable serving drafter of it (pe4 + pe2 — each
+# topology × drafter × batch costs a lowering, so other targets keep chain
+# only); the Rust engine can then mix drafters per request inside one batch.
 TREE_TOPOLOGIES = [(1,) * DEFAULT_K, (3, 2, 1, 1, 1)]
 TREE_TARGETS = ["target-m"]
-TREE_DRAFTERS = ["target-m-pe4"]
+
+
+def drafter_modes(d: "DrafterConfig") -> list:
+    """Speculation modes a drafter's executables support, recorded in the
+    manifest per drafter (the Rust policy registry's capability gate —
+    `SpecPolicy::mode_name` values). The AR scan drafts chains only
+    (`draft_ar` has no single-pass tree form); parallel drafters
+    (`draft_pe` / `draft_pe_tree`) draft every shape."""
+    return ["chain"] if d.kind == "ar" else ["chain", "tree", "dyn"]
+
+
+def tree_drafters() -> list:
+    """Serving drafters whose tree/dyn executables are lowered: every
+    tree-capable serving drafter of the TREE_TARGETS workhorses."""
+    return [d.name for d in serving_drafters()
+            if d.target in TREE_TARGETS and "tree" in drafter_modes(d)]
 
 # Dynamic-tree max-shape envelopes (aot.py lowers a `verify-tree-dyn` /
 # `verify-tree-dyn-paged` / `draft-tree-logp` triple per envelope): the

@@ -8,7 +8,35 @@ import jax.numpy as jnp
 import pytest
 
 from compile.aot import to_hlo_text
+from compile.configs import (
+    TREE_TARGETS, drafter_modes, get_drafter, serving_drafters, tree_drafters,
+)
 from compile.pew import flatten_named, read_pew, unflatten_named, write_pew
+
+
+def test_drafter_capability_modes():
+    """The per-drafter capability record the manifest carries: AR scans are
+    chain-only (no single-pass tree draft); parallel drafters support every
+    speculation mode the engine serves."""
+    assert drafter_modes(get_drafter("target-m-ar")) == ["chain"]
+    assert drafter_modes(get_drafter("target-m-pe4")) == ["chain", "tree", "dyn"]
+    assert drafter_modes(get_drafter("target-m-pe2")) == ["chain", "tree", "dyn"]
+    for d in serving_drafters():
+        assert "chain" in drafter_modes(d), d.name
+
+
+def test_tree_drafters_cover_all_tree_capable_serving_drafters():
+    """Tree/dyn executables are lowered for EVERY tree-capable serving
+    drafter of the tree targets (multi-drafter serving needs more than the
+    old single pe4 entry), and never for the chain-only AR scan."""
+    td = tree_drafters()
+    assert "target-m-pe4" in td
+    assert "target-m-pe2" in td
+    assert "target-m-ar" not in td
+    for name in td:
+        d = get_drafter(name)
+        assert d.target in TREE_TARGETS
+        assert "tree" in drafter_modes(d)
 
 
 def test_pew_roundtrip(tmp_path):

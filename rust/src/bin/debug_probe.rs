@@ -8,7 +8,7 @@
 //! gotchas), and spot-runs the engine on one request per serving drafter.
 
 use p_eagle::config::Manifest;
-use p_eagle::coordinator::{run_closed_loop, EngineConfig, Sampling};
+use p_eagle::coordinator::{run_closed_loop, EngineConfig, Request, SpecPolicy};
 use p_eagle::runtime::{ModelRuntime, Runtime};
 use p_eagle::util::cli::Args;
 use p_eagle::workload::corpus::load_eval_prompts;
@@ -77,25 +77,9 @@ fn main() -> anyhow::Result<()> {
     for target in ["target-l", "target-m", "target-s"] {
         for method in ["ar", "pe4"] {
             let drafter = format!("{target}-{method}");
-            let cfg = EngineConfig {
-                target: target.into(),
-                drafter: drafter.clone(),
-                k: 5,
-                batch: 1,
-                max_new_tokens: 16,
-                sampling: Sampling::Greedy,
-                tree: None,
-                tree_dynamic: None,
-                paged: None,
-                seed: 5,
-            };
-            let spec = p_eagle::workload::RequestSpec {
-                id: 0,
-                prompt: pool[0].clone(),
-                max_new_tokens: 16,
-                arrival_s: 0.0,
-            };
-            let mut g = Some(spec);
+            let cfg =
+                EngineConfig::new(target, SpecPolicy::chain(&drafter, 5), 1, 16).with_seed(5);
+            let mut g = Some(Request::new(0, pool[0].clone(), 16));
             let (res, _) = run_closed_loop(&mut mr, &cfg, 1, 1, || g.take().unwrap())?;
             println!("spot {drafter}: AL {:.2}, {} tokens", res[0].acceptance_length(), res[0].tokens.len());
         }

@@ -31,6 +31,28 @@ pub struct DrafterInfo {
     pub hidden_mode: String,
     pub weights: String,
     pub param_order: Vec<String>,
+    /// Speculation modes this drafter's executables were lowered for
+    /// (python `configs.drafter_modes`): `chain` always; `tree` / `dyn` for
+    /// parallel drafters (the AR scan has no single-pass tree draft).
+    /// Manifests predating the capability field fall back to the kind rule.
+    pub modes: Vec<String>,
+}
+
+impl DrafterInfo {
+    /// Whether this drafter supports the given speculation mode
+    /// (`SpecPolicy::mode_name`): the policy registry's capability gate.
+    pub fn supports(&self, mode: &str) -> bool {
+        self.modes.iter().any(|m| m == mode)
+    }
+}
+
+/// Capability fallback for manifests predating the `modes` field: the AR
+/// scan drafts chains only; parallel drafters draft every shape.
+fn default_modes(kind: &str) -> Vec<String> {
+    match kind {
+        "ar" => vec!["chain".into()],
+        _ => vec!["chain".into(), "tree".into(), "dyn".into()],
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -118,12 +140,23 @@ impl Manifest {
 
         let mut drafters = BTreeMap::new();
         for (name, d) in v.req("drafters").as_obj().unwrap() {
+            let kind = d.str_or("kind", "peagle");
+            let modes = d
+                .get("modes")
+                .and_then(|x| x.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str())
+                        .map(String::from)
+                        .collect::<Vec<_>>()
+                })
+                .unwrap_or_else(|| default_modes(&kind));
             drafters.insert(
                 name.clone(),
                 DrafterInfo {
                     name: name.clone(),
                     target: d.str_of("target"),
-                    kind: d.str_or("kind", "peagle"),
+                    kind,
                     n_layers: d.usize_of("n_layers"),
                     hidden_mode: d.str_or("hidden_mode", "shared"),
                     weights: d.str_of("weights"),
@@ -134,6 +167,7 @@ impl Manifest {
                         .iter()
                         .map(|x| x.as_str().unwrap().to_string())
                         .collect(),
+                    modes,
                 },
             );
         }

@@ -11,59 +11,63 @@
 //! are masked (inert inputs, outputs ignored) instead of running cloned
 //! padding requests.
 //!
-//! Drafting strategy is data: the `drafter` executable named in the config
-//! is either an AR EAGLE-3 scan (K sequential passes inside the HLO) or a
-//! P-EAGLE single-pass parallel drafter — the engine logic is identical,
-//! which is exactly the paper's deployment story (a drop-in drafter swap in
-//! vLLM's continuously batched engine).
+//! Drafting strategy is **per-request data**: every request resolves to a
+//! [`SpecPolicy`] — a manifest drafter plus a speculation shape (linear
+//! chain, static tree, or dynamic confidence-selected subtree of a
+//! max-shape envelope) — either its own or the engine's
+//! [`default_policy`](EngineConfig::default_policy). One engine batch can
+//! mix an AR chain drafter, a parallel static-tree drafter, and a
+//! dynamic-envelope drafter: `step()` groups occupied slots by policy
+//! ([`SpecPolicy::exec_key`]) and runs one {draft -> verify -> accept ->
+//! commit} pass per bucket over that policy's own executables (loaded on
+//! first use from the [`ModelRuntime`] policy registry; all buckets share
+//! one target's weights and one KV cache). Acceptance, sampling (per-request
+//! [`SamplingParams`](super::request::SamplingParams) with a private rng
+//! stream), and KV commit stay
+//! per-slot.
 //!
-//! Speculation *shape* is data too: with [`EngineConfig::tree`] set, each
-//! step drafts a static N-node token tree and verifies it in ONE target
-//! pass using the precomputed cross-node ancestor mask
-//! ([`crate::masking::tree`]). Acceptance generalizes from prefix-of-chain
-//! to longest-accepted-root-path ([`super::sampler::accept_tree`]), and the
-//! KV cache commits only the accepted path: tree chunks scatter K/V at
-//! `base + chunk_slot`, so a non-contiguous accepted path is compacted
-//! through the host ([`crate::runtime::compact_kv_path`], one shared
-//! download/upload per step, tracked as `EngineMetrics::commit_time`). The
-//! chain-shaped topology (`TreeTopology::chain(k)`) takes the exact same
-//! code path but never needs compaction, and is byte-identical to classic
-//! chain decoding (`tree: None`).
+//! **Why mixed buckets are safe**: every bucket's verify executable
+//! scatters chunk K/V into *every* row (masked rows get PAD chunks), so a
+//! bucket's pass writes garbage into the speculative-scratch region of live
+//! rows belonging to other buckets. Two invariants make that inert: (1)
+//! each live row's scatter always lands at `[len, len + write_width)` where
+//! `len` is its *current committed* length (the bucket passes rebuild
+//! `cache_len` from the allocator after every bucket's commits) and
+//! `write_width` is the engine-wide maximum chunk width over all serveable
+//! policies (the `s_max` fit honors it — [`SlotManager`]'s `write_width` vs
+//! per-slot `chunk` split), and (2) buckets run *sequentially to
+//! completion* — a slot's own verify rewrites its scratch after any earlier
+//! bucket's garbage, and its accepted-path commit (including dense
+//! compaction / paged block surgery) happens before any later bucket
+//! writes. Every committed position is therefore freshly written by the
+//! slot's own policy executables in its committing step. A homogeneous
+//! batch is exactly one bucket and is byte-identical to the old engine-wide
+//! configuration (integration-tested for chain, static tree, and dynamic
+//! modes, dense and paged).
 //!
-//! Speculation shape can also be *per-step data*: with
-//! [`EngineConfig::tree_dynamic`] set, one executable pair is lowered for a
-//! max-shape ENVELOPE and each step activates only the `node_budget`
-//! envelope nodes the drafter is most confident in
-//! ([`crate::masking::dynamic`]): the scored drafter returns per-node joint
-//! log-probabilities, selection is greedy frontier expansion (provably the
-//! top-budget ancestor-closed subset), and the selected subtree is
-//! compacted into the leading chunk slots with its subset mask and RoPE
-//! depth offsets passed as per-batch runtime inputs. Acceptance walks the
-//! selected subtree ([`super::sampler::accept_tree_subset`]), and the
-//! allocator charges speculative scratch and paged admission headroom by
-//! the node BUDGET (`SlotManager::chunk`) while the `s_max` fit honors the
-//! envelope-wide scatter (`SlotManager::write_width`). A budget equal to
-//! the envelope size is byte-identical to the static-topology path.
-//!
-//! The KV cache *layout* is a config choice too: with [`EngineConfig::paged`]
-//! set, the device cache is a block pool addressed through per-slot block
-//! tables ([`SlotManager`] becomes a real allocator), admission is gated on
-//! free-block headroom, and the tree accepted-path commit becomes
-//! block-table rewires plus block-confined copies
-//! ([`crate::runtime::kv_blocks`]) instead of the dense host-side
-//! compaction. A fully provisioned paged engine is byte-identical to the
-//! dense one; a constrained block budget trades queueing (tracked as
-//! `admissions_blocked`) for a KV footprint that scales with tokens held.
+//! Speculation shape per policy matches PR 2-4's modes: `Tree` drafts a
+//! static N-node token tree and verifies it in ONE target pass against the
+//! precomputed cross-node ancestor mask ([`crate::masking::tree`]);
+//! `Dynamic` lowers one executable pair per max-shape ENVELOPE and each
+//! step activates only the `budget` envelope nodes the drafter is most
+//! confident in ([`crate::masking::dynamic`]) — and because the budget is
+//! *runtime data*, every request may carry its own (per-slot adaptive
+//! budgets: the allocator charges each slot's paged blocks and admission
+//! headroom by `budget + 1` while the `s_max` fit honors the envelope-wide
+//! scatter). The KV cache *layout* stays an engine-wide choice
+//! ([`EngineConfig::paged`]): a block pool addressed through per-slot block
+//! tables, admission gated on free-block headroom, accepted-path commits as
+//! block-table rewires plus block-confined copies.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use super::kv_cache::SlotManager;
 use super::metrics::EngineMetrics;
-use super::request::{FinishReason, RequestResult, RequestSpec};
-use super::sampler::{accept_chain, accept_tree, accept_tree_subset, sample, Sampling};
+use super::request::{FinishReason, Request, RequestResult, SpecPolicy};
+use super::sampler::{accept_chain, accept_tree, accept_tree_subset, sample};
 use crate::masking::dynamic::{
     compacted_depths_i32, compacted_parents, select_nodes, subset_mask_i32,
 };
@@ -108,38 +112,144 @@ pub fn tree_dyn_from_env() -> Option<DynamicTreeConfig> {
         .then(DynamicTreeConfig::serving_default)
 }
 
+/// `PEAGLE_MULTI_DRAFTER=1` (the CI `rust-multidrafter` job) makes the test
+/// helpers widen their engine configs with extra allowlisted policies
+/// (typically the AR chain drafter + the serving static tree), so the whole
+/// suite runs with the multi-policy surface active — write-width maxing,
+/// per-slot chunk accounting, allowlist validation — while requests still
+/// use the default policy, which must stay byte-identical.
+pub fn multi_drafter_from_env() -> bool {
+    std::env::var("PEAGLE_MULTI_DRAFTER").ok().as_deref() == Some("1")
+}
+
+/// Engine configuration: one target, one executable width, a default
+/// speculation policy, and an allowlist of additional serveable policies.
+///
+/// # Migration (engine-wide speculation -> per-request policies)
+///
+/// The old engine-wide fields collapsed into [`SpecPolicy`] /
+/// [`SamplingParams`](super::request::SamplingParams):
+///
+/// * `drafter` + `k` -> `default_policy: SpecPolicy::Chain { drafter, k }`;
+/// * `drafter` + `tree: Some(t)` -> `SpecPolicy::Tree { drafter, topology: t }`;
+/// * `drafter` + `tree_dynamic: Some(d)` ->
+///   `SpecPolicy::Dynamic { drafter, envelope: d.envelope, budget: d.node_budget }`;
+/// * `sampling` -> per-request [`Request::sampling`] (greedy by default;
+///   each request owns a private rng stream seeded from
+///   `engine seed ^ request sampling seed`, so greedy output is unchanged
+///   and temperature runs are reproducible per request instead of
+///   batch-order dependent).
+///
+/// Requests that carry `policy: None` use `default_policy` — a stream of
+/// policy-free requests behaves exactly like the old engine-wide
+/// configuration (integration-tested byte parity). Requests may instead
+/// carry any policy whose [`SpecPolicy::exec_key`] matches an allowlisted
+/// one (`default_policy` or `policies`); dynamic-budget variations share an
+/// exec key, so per-request budgets need no extra allowlist entries.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub target: String,
-    /// manifest drafter name (e.g. "target-m-pe4" or "target-m-ar")
-    pub drafter: String,
-    /// chain speculation depth (ignored when `tree` is set)
-    pub k: usize,
     /// engine width == executable batch size (KV slots)
     pub batch: usize,
     /// engine-wide cap; each request also honors its own
-    /// `RequestSpec::max_new_tokens` (the lower bound wins)
+    /// `Request::max_new_tokens` (the lower bound wins)
     pub max_new_tokens: usize,
-    pub sampling: Sampling,
+    /// policy applied to requests that don't carry their own
+    pub default_policy: SpecPolicy,
+    /// additional serveable policies (the allowlist); the default is always
+    /// serveable. Entries are validated against the manifest (drafter
+    /// exists, serves `target`, supports the mode) at engine construction;
+    /// their executables are loaded lazily on first use.
+    pub policies: Vec<SpecPolicy>,
     pub seed: u64,
-    /// tree-structured speculation: draft/verify this static topology each
-    /// step instead of a linear K-chain. `None` = classic chain decoding;
-    /// `Some(TreeTopology::chain(k))` is the degenerate tree and must emit
-    /// byte-identical tokens (integration-tested).
-    pub tree: Option<TreeTopology>,
-    /// dynamic confidence-driven tree speculation: one executable per
-    /// max-shape ENVELOPE, with a per-step per-slot node subset picked from
-    /// the drafter's joint log-probabilities ([`crate::masking::dynamic`]).
-    /// Mutually exclusive with `tree`; `node_budget == envelope.len()` is
-    /// the degenerate case and must emit byte-identical tokens to the
-    /// static topology path (integration-tested).
-    pub tree_dynamic: Option<DynamicTreeConfig>,
     /// block-paged KV cache: the device cache becomes a block pool addressed
     /// through per-slot block tables and admission is gated on free-block
     /// headroom. `None` = the dense `[L, 2, B, S_MAX, H, Dh]` cache. A fully
     /// provisioned paged engine must emit byte-identical tokens to the dense
-    /// one (integration-tested for chain and tree modes).
+    /// one (integration-tested for every speculation mode).
     pub paged: Option<PagedKvConfig>,
+}
+
+impl EngineConfig {
+    pub fn new(
+        target: impl Into<String>,
+        default_policy: SpecPolicy,
+        batch: usize,
+        max_new_tokens: usize,
+    ) -> EngineConfig {
+        EngineConfig {
+            target: target.into(),
+            batch,
+            max_new_tokens,
+            default_policy,
+            policies: Vec::new(),
+            seed: 0,
+            paged: None,
+        }
+    }
+
+    pub fn with_policies(mut self, policies: Vec<SpecPolicy>) -> EngineConfig {
+        self.policies = policies;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> EngineConfig {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_paged(mut self, paged: Option<PagedKvConfig>) -> EngineConfig {
+        self.paged = paged;
+        self
+    }
+
+    /// Default + allowlisted policies, deduplicated by executable key.
+    pub fn allowed_policies(&self) -> Vec<&SpecPolicy> {
+        let mut out: Vec<&SpecPolicy> = vec![&self.default_policy];
+        for p in &self.policies {
+            if !out.iter().any(|a| a.exec_key() == p.exec_key()) {
+                out.push(p);
+            }
+        }
+        out
+    }
+
+    /// Engine-wide physical scatter width: the widest chunk any serveable
+    /// policy writes. Every bucket's verify scatters this far into every
+    /// live row (masked garbage for non-members), so the `s_max` fit and
+    /// admission checks must honor the maximum.
+    pub fn max_write_width(&self) -> usize {
+        self.allowed_policies().iter().map(|p| p.chunk_width()).max().unwrap()
+    }
+
+    /// Smallest commit width any serveable policy charges — the minimal
+    /// per-request paged footprint the scheduler's bucket pick reasons with.
+    /// Deliberately scans default + allowlist WITHOUT the exec-key dedup:
+    /// dynamic-budget variants share an exec key but charge differently, and
+    /// a listed low-budget variant is exactly the footprint the engine's own
+    /// per-request gate would admit.
+    pub fn min_commit_width(&self) -> usize {
+        std::iter::once(&self.default_policy)
+            .chain(self.policies.iter())
+            .map(|p| p.commit_width())
+            .min()
+            .unwrap()
+    }
+
+    /// Acceptance-length ceiling across serveable policies (metrics
+    /// histogram sizing). Dynamic policies use their envelope's depth, the
+    /// ceiling over every per-request budget.
+    pub fn al_max(&self) -> usize {
+        self.allowed_policies().iter().map(|p| al_ceiling(p)).max().unwrap()
+    }
+}
+
+/// AL ceiling of one policy over every runtime budget it may carry.
+fn al_ceiling(p: &SpecPolicy) -> usize {
+    match p {
+        SpecPolicy::Dynamic { envelope, .. } => envelope.max_depth(),
+        _ => p.al_max(),
+    }
 }
 
 /// One streamed engine occurrence, in emission order within a step.
@@ -187,7 +297,14 @@ impl StepReport {
 
 /// Per-slot decode state for one in-flight request.
 struct ActiveSlot {
-    spec: RequestSpec,
+    req: Request,
+    /// resolved policy (the request's own, or the engine default) — carries
+    /// the per-request dynamic budget
+    policy: SpecPolicy,
+    /// cached `policy.exec_key()` (the bucket this slot steps with)
+    key: String,
+    /// the request's private sampling stream (greedy never draws)
+    rng: Rng,
     finished: Option<FinishReason>,
     generated: Vec<i32>,
     last_tok: i32,
@@ -197,7 +314,7 @@ struct ActiveSlot {
     ctx_feats: Vec<f32>,
     /// absolute position of `last_tok`
     pos_last: usize,
-    /// effective generation budget: min(spec, engine config)
+    /// effective generation budget: min(request, engine config)
     max_new: usize,
     iterations: usize,
     accepted_sum: usize,
@@ -215,8 +332,8 @@ impl ActiveSlot {
 
     fn result(self, reason: FinishReason) -> RequestResult {
         RequestResult {
-            id: self.spec.id,
-            prompt_len: self.spec.prompt.len(),
+            id: self.req.id,
+            prompt_len: self.req.prompt.len(),
             tokens: self.generated,
             finish: reason,
             iterations: self.iterations,
@@ -226,12 +343,33 @@ impl ActiveSlot {
     }
 }
 
-/// The stepped engine core: fixed executable width, continuous admission.
+/// One policy bucket's loaded runtime state: the executable pair plus the
+/// masks the policy's verify passes need (built once per group lifetime).
+struct PolicyGroup {
+    /// the allowlisted archetype this group was loaded for (per-slot dynamic
+    /// budgets come from each slot's own policy, not from here)
+    archetype: SpecPolicy,
+    te: TargetExec,
+    de: DraftExec,
+    /// draft width per step: tree/envelope node count N, or chain depth K
+    n_draft: usize,
+    /// static-tree mode: precomputed cross-node ancestor mask ([N+1, N+1])
+    tree_mask: Option<HostTensor>,
+    /// dynamic mode: the envelope's bit-packed ancestor mask, gathered into
+    /// per-slot subset masks each step
+    envelope_mask: Option<TreeMask>,
+}
+
+/// The stepped engine core: fixed executable width, continuous admission,
+/// per-request speculation policies.
 pub struct EngineCore {
     pub cfg: EngineConfig,
-    te: TargetExec,
+    /// policy buckets by exec key, loaded on first use (the default policy
+    /// eagerly at construction). BTreeMap => deterministic bucket order.
+    groups: BTreeMap<String, PolicyGroup>,
+    /// validated archetypes (default + allowlist), for admission checks
+    allowed: Vec<SpecPolicy>,
     te1: TargetExec, // batch-1 prefill executable for per-slot admission
-    de: DraftExec,
     /// reusable zeroed batch-1 KV input for admission prefills (PJRT does
     /// not donate inputs, so one buffer serves every admission)
     kv1_zero: xla::PjRtBuffer,
@@ -243,28 +381,22 @@ pub struct EngineCore {
     pad_id: i32,
     eos_id: i32,
     kv: xla::PjRtBuffer,
-    /// draft width per step: tree/envelope node count N, or chain depth K
-    n_draft: usize,
-    /// precomputed cross-node ancestor mask ([N+1, N+1] i32), static tree
-    /// mode only
-    tree_mask: Option<HostTensor>,
-    /// dynamic mode: the envelope's bit-packed ancestor mask, gathered into
-    /// per-slot subset masks each step
-    envelope_mask: Option<TreeMask>,
+    /// physical block-pool size the paged executables were lowered with
+    phys_blocks: Option<usize>,
     slots: Vec<Option<ActiveSlot>>,
     slotmgr: SlotManager,
-    queue: VecDeque<(RequestSpec, Instant)>,
-    rng: Rng,
+    queue: VecDeque<(Request, SpecPolicy, Instant)>,
     pub metrics: EngineMetrics,
 }
 
 impl EngineCore {
-    /// Build an engine of width `cfg.batch`: loads/compiles exactly the
-    /// executables the step loop runs (batch-wide verify, batch-1 admission
-    /// prefill, batch-wide drafter — the tree-shaped variants when
-    /// `cfg.tree` is set), allocates the shared zeroed KV buffer, and in
-    /// tree mode builds the cross-node ancestor mask ONCE for the engine's
-    /// lifetime.
+    /// Build an engine of width `cfg.batch`: validates every serveable
+    /// policy against the manifest (drafter exists, serves the target,
+    /// supports the mode — descriptive errors at startup, not mid-flight),
+    /// eagerly loads the default policy's executables (allowlisted ones load
+    /// on first use), allocates the shared zeroed KV buffer, and sizes the
+    /// allocator: per-slot commit chunks by each request's policy, the
+    /// engine-wide write width by the widest serveable policy.
     pub fn new(mr: &mut ModelRuntime, cfg: EngineConfig) -> Result<EngineCore> {
         let b = cfg.batch;
         if b == 0 {
@@ -284,101 +416,63 @@ impl EngineCore {
                 bail!("s_max {} not divisible by kv_block_size {bs}", mr.manifest.s_max);
             }
         }
-        if cfg.tree.is_some() && cfg.tree_dynamic.is_some() {
-            bail!(
-                "EngineConfig::tree and EngineConfig::tree_dynamic are mutually \
-                 exclusive (the dynamic envelope IS the topology)"
-            );
+        let allowed: Vec<SpecPolicy> =
+            cfg.allowed_policies().into_iter().cloned().collect();
+        for p in &allowed {
+            // capability gate AND executable-existence probe (pure manifest
+            // lookups): a policy lowered at the wrong batch width fails HERE
+            // with the descriptive find_exec error, never mid-flight — only
+            // the compile/load of non-default policies stays lazy.
+            mr.probe_policy_execs(&cfg.target, p, b, cfg.paged.is_some())?;
         }
-        let (te, de, n_draft, tree_mask, envelope_mask) =
-            match (&cfg.tree, &cfg.tree_dynamic, cfg.paged) {
-                (Some(tree), None, paged) => {
-                    let te = match paged {
-                        Some(_) => mr.ensure_verify_tree_paged(&cfg.target, b, tree)?,
-                        None => mr.ensure_verify_tree(&cfg.target, b, tree)?,
-                    };
-                    let de = mr.ensure_drafter_tree(&cfg.drafter, b, tree)?;
-                    let m = tree.build_mask();
-                    let mask = HostTensor::i32(&[m.n, m.n], m.to_i32());
-                    (te, de, tree.len(), Some(mask), None)
-                }
-                (None, Some(dync), paged) => {
-                    let env = &dync.envelope;
-                    let te = match paged {
-                        Some(_) => mr.ensure_verify_tree_dyn_paged(&cfg.target, b, env)?,
-                        None => mr.ensure_verify_tree_dyn(&cfg.target, b, env)?,
-                    };
-                    let de = mr.ensure_drafter_tree_scored(&cfg.drafter, b, env)?;
-                    (te, de, env.len(), None, Some(env.build_mask()))
-                }
-                (None, None, Some(_)) => (
-                    mr.ensure_verify_paged(&cfg.target, b, cfg.k)?,
-                    mr.ensure_drafter(&cfg.drafter, b, cfg.k)?,
-                    cfg.k,
-                    None,
-                    None,
-                ),
-                (None, None, None) => (
-                    mr.ensure_verify(&cfg.target, b, cfg.k)?,
-                    mr.ensure_drafter(&cfg.drafter, b, cfg.k)?,
-                    cfg.k,
-                    None,
-                    None,
-                ),
-                (Some(_), Some(_), _) => unreachable!("rejected above"),
-            };
+        let write_width = cfg.max_write_width();
+        let al_max = cfg.al_max();
+
+        // the default policy drives immediate serving — load it now so a
+        // missing executable fails at construction, and (paged) so the
+        // physical pool size is known before allocating the pool
+        let mut groups = BTreeMap::new();
+        let default_group =
+            load_group(mr, &cfg.target, &cfg.default_policy, b, cfg.paged.is_some())?;
         let te1 = mr.ensure_prefill(&cfg.target, 1)?;
         let info = mr.manifest.target(&cfg.target)?;
         let fdim = info.feature_dim;
-        // paged: the physical pool matches the lowered executable; the
-        // allocator's logical budget may be smaller (block 0 stays reserved
-        // as the null block either way)
-        // dynamic tree mode splits the accounting: blocks/admission charge
-        // the COMMITTABLE chunk (node budget + 1 — the over-reservation
-        // fix), while the s_max fit keeps honoring the envelope-wide scatter
-        // the lowered executable performs (write_width).
-        let write_width = n_draft + 1;
-        let commit_chunk = cfg
-            .tree_dynamic
-            .as_ref()
-            .map(|d| d.active_nodes() + 1)
-            .unwrap_or(write_width);
-        let (kv, slotmgr) = match cfg.paged {
+        // per-slot commit chunks are claimed per request; the constructor
+        // default covers the default policy. write_width is engine-wide: in
+        // a multi-policy batch EVERY bucket's verify scatters (masked
+        // garbage) into every live row, so the s_max fit honors the maximum.
+        let commit_default = cfg.default_policy.commit_width();
+        let (kv, slotmgr, phys_blocks) = match cfg.paged {
             Some(p) => {
                 let bs = mr.manifest.kv_block_size;
-                let phys = te
+                let phys = default_group
+                    .te
                     .num_blocks
                     .ok_or_else(|| anyhow::anyhow!("paged executable carries no num_blocks"))?;
                 let budget = p.num_blocks.unwrap_or(phys - 1).min(phys - 1);
                 (
                     mr.zero_kv_pool(&cfg.target, phys, bs)?,
-                    SlotManager::new_paged(b, mr.manifest.s_max, commit_chunk, bs, budget)
+                    SlotManager::new_paged(b, mr.manifest.s_max, commit_default, bs, budget)
                         .with_write_width(write_width),
+                    Some(phys),
                 )
             }
             None => (
                 mr.zero_kv(&cfg.target, b)?,
-                SlotManager::new(b, mr.manifest.s_max, commit_chunk)
+                SlotManager::new(b, mr.manifest.s_max, commit_default)
                     .with_write_width(write_width),
+                None,
             ),
         };
         let kv1_zero = mr.zero_kv(&cfg.target, 1)?;
         let mut slots = Vec::with_capacity(b);
         slots.resize_with(b, || None);
-        // AL ceiling = max accepted path + bonus: tree depth (or K) + 1;
-        // dynamic mode can accept at most budget nodes, and never deeper
-        // than the envelope
-        let al_max = match (&cfg.tree, &cfg.tree_dynamic) {
-            (Some(t), _) => t.max_depth(),
-            (_, Some(d)) => d.envelope.max_depth().min(d.active_nodes()),
-            _ => cfg.k,
-        };
+        groups.insert(cfg.default_policy.exec_key(), default_group);
         Ok(EngineCore {
-            rng: Rng::new(cfg.seed ^ 0xE4617E),
             metrics: EngineMetrics::new(al_max),
-            te,
+            groups,
+            allowed,
             te1,
-            de,
             kv1_zero,
             fdim,
             ctx: mr.manifest.ctx_window,
@@ -387,9 +481,7 @@ impl EngineCore {
             pad_id: mr.manifest.pad_id,
             eos_id: mr.manifest.eos_id,
             kv,
-            n_draft,
-            tree_mask,
-            envelope_mask,
+            phys_blocks,
             slots,
             slotmgr,
             queue: VecDeque::new(),
@@ -397,35 +489,77 @@ impl EngineCore {
         })
     }
 
+    /// Load a policy bucket's executables on first use (the registry caches
+    /// by exec key, so re-creating an engine is cheap). Paged groups must
+    /// address the same physical pool the engine allocated.
+    fn ensure_group(&mut self, mr: &mut ModelRuntime, policy: &SpecPolicy) -> Result<()> {
+        let key = policy.exec_key();
+        if self.groups.contains_key(&key) {
+            return Ok(());
+        }
+        let group =
+            load_group(mr, &self.cfg.target, policy, self.cfg.batch, self.cfg.paged.is_some())?;
+        if let Some(phys) = self.phys_blocks {
+            if group.te.num_blocks != Some(phys) {
+                bail!(
+                    "policy {}: paged executable lowered for {:?} blocks, engine pool has \
+                     {phys} (stale artifacts?)",
+                    policy.id(),
+                    group.te.num_blocks
+                );
+            }
+        }
+        self.groups.insert(key, group);
+        Ok(())
+    }
+
     /// Enqueue a request. Validation happens here (not mid-flight): the
     /// prompt must fit the prefill pad, cover the drafter context window,
-    /// and leave room for at least one speculation chunk in the KV slot.
-    pub fn add_request(&mut self, spec: RequestSpec) -> Result<()> {
-        let plen = spec.prompt.len();
+    /// and leave room for at least one speculation chunk in the KV slot; the
+    /// request's policy (or the engine default) must be serveable — its
+    /// [`SpecPolicy::exec_key`] must match an allowlisted policy's (dynamic
+    /// budgets vary freely within one key).
+    pub fn add_request(&mut self, req: Request) -> Result<()> {
+        let plen = req.prompt.len();
         if plen > self.p_pad {
-            bail!("request {}: prompt len {plen} > prompt_pad {}", spec.id, self.p_pad);
+            bail!("request {}: prompt len {plen} > prompt_pad {}", req.id, self.p_pad);
         }
         if plen < self.ctx {
-            bail!("request {}: prompt len {plen} < ctx_window {}", spec.id, self.ctx);
+            bail!("request {}: prompt len {plen} < ctx_window {}", req.id, self.ctx);
         }
         if plen + self.slotmgr.write_width() > self.slotmgr.s_max {
             bail!(
                 "request {}: prompt len {plen} + write width {} > s_max {}",
-                spec.id,
+                req.id,
                 self.slotmgr.write_width(),
                 self.slotmgr.s_max
             );
         }
-        if !self.slotmgr.request_fits(plen) {
+        let policy = req.policy.clone().unwrap_or_else(|| self.cfg.default_policy.clone());
+        policy
+            .validate()
+            .map_err(|e| anyhow::anyhow!("request {}: invalid policy: {e}", req.id))?;
+        let key = policy.exec_key();
+        if !self.allowed.iter().any(|a| a.exec_key() == key) {
+            let serveable: Vec<String> = self.allowed.iter().map(|a| a.id()).collect();
+            bail!(
+                "request {}: policy {} is not serveable by this engine (allowlist: [{}]) — \
+                 add it to EngineConfig::policies or serve with --drafters/--policy",
+                req.id,
+                policy.id(),
+                serveable.join(", ")
+            );
+        }
+        if !self.slotmgr.request_fits_chunk(plen, policy.commit_width()) {
             bail!(
                 "request {}: prompt len {plen} + chunk {} needs more KV blocks than \
                  the paged pool's {} total",
-                spec.id,
-                self.slotmgr.chunk,
+                req.id,
+                policy.commit_width(),
                 self.slotmgr.blocks_total()
             );
         }
-        self.queue.push_back((spec, Instant::now()));
+        self.queue.push_back((req, policy, Instant::now()));
         Ok(())
     }
 
@@ -433,12 +567,12 @@ impl EngineCore {
     /// `None` if the id is unknown. In-flight aborts free the slot
     /// immediately; the next `step()` refills it from the queue.
     pub fn abort(&mut self, id: u64) -> Option<RequestResult> {
-        if let Some(qi) = self.queue.iter().position(|(s, _)| s.id == id) {
-            let (spec, _) = self.queue.remove(qi).unwrap();
+        if let Some(qi) = self.queue.iter().position(|(r, _, _)| r.id == id) {
+            let (req, _, _) = self.queue.remove(qi).unwrap();
             self.metrics.requests_aborted += 1;
             return Some(RequestResult {
-                id: spec.id,
-                prompt_len: spec.prompt.len(),
+                id: req.id,
+                prompt_len: req.prompt.len(),
                 tokens: Vec::new(),
                 finish: FinishReason::Aborted,
                 iterations: 0,
@@ -449,7 +583,7 @@ impl EngineCore {
         let i = self
             .slots
             .iter()
-            .position(|s| s.as_ref().is_some_and(|s| s.spec.id == id))?;
+            .position(|s| s.as_ref().is_some_and(|s| s.req.id == id))?;
         let slot = self.slots[i].take().unwrap();
         self.slotmgr.release(i);
         self.metrics.requests_aborted += 1;
@@ -484,7 +618,7 @@ impl EngineCore {
 
     /// Admit queued requests into free slots: one batch-1 prefill per
     /// request, spliced into the shared KV buffer, first token sampled from
-    /// the prefill logits.
+    /// the prefill logits with the request's own sampling params.
     ///
     /// The prefill HLO scatters K/V for *every* row at offset 0, so a
     /// batch-wide prefill mid-flight would clobber occupied slots. Instead
@@ -507,24 +641,30 @@ impl EngineCore {
                 continue;
             }
             // paged gating: a free SLOT is not enough — the queue head also
-            // needs free BLOCKS for prompt + one speculation chunk. FIFO: a
-            // blocked head defers the whole queue (no head-of-line bypass),
-            // counted as preemption pressure. Requests that could never fit
-            // were rejected at add_request, so blocks freed by evictions
-            // always unblock the head eventually.
-            if let Some((front, _)) = self.queue.front() {
-                if !self.slotmgr.can_admit(front.prompt.len()) {
+            // needs free BLOCKS for prompt + one speculation chunk (charged
+            // by the head's OWN policy commit width). FIFO: a blocked head
+            // defers the whole queue (no head-of-line bypass), counted as
+            // preemption pressure. Requests that could never fit were
+            // rejected at add_request, so blocks freed by evictions always
+            // unblock the head eventually.
+            if let Some((front, front_policy, _)) = self.queue.front() {
+                if !self
+                    .slotmgr
+                    .can_admit_chunk(front.prompt.len(), front_policy.commit_width())
+                {
                     self.metrics.admissions_blocked += 1;
                     break;
                 }
             }
-            let Some((spec, t_submit)) = self.queue.pop_front() else { break };
+            let Some((req, policy, t_submit)) = self.queue.pop_front() else { break };
             let t0 = Instant::now();
-            let plen = spec.prompt.len();
-            self.slotmgr.claim(i, plen).map_err(|e| anyhow::anyhow!(e))?;
+            let plen = req.prompt.len();
+            self.slotmgr
+                .claim_with_chunk(i, plen, policy.commit_width())
+                .map_err(|e| anyhow::anyhow!(e))?;
 
             let mut tok_buf = vec![self.pad_id; self.p_pad];
-            tok_buf[..plen].copy_from_slice(&spec.prompt);
+            tok_buf[..plen].copy_from_slice(&req.prompt);
             let pre = mr.prefill(
                 &self.te1,
                 &HostTensor::i32(&[1, self.p_pad], tok_buf),
@@ -543,7 +683,10 @@ impl EngineCore {
 
             let pre_logits = pre.last_logits.as_f32()?;
             let pre_feats = pre.feats.as_f32()?;
-            let t_first = sample(&pre_logits[..self.vocab], self.cfg.sampling, &mut self.rng);
+            // the request's private sampling stream: greedy never draws, so
+            // greedy output is independent of seeds and batch placement
+            let mut rng = Rng::new(self.cfg.seed ^ 0xE4617E ^ req.sampling.seed);
+            let t_first = sample(&pre_logits[..self.vocab], req.sampling.mode, &mut rng);
 
             // seed the drafter's rolling (token, feature) context from the
             // prompt tail; entry j covers position plen - ctx + 1 + j
@@ -551,14 +694,15 @@ impl EngineCore {
             let mut ctx_feats = vec![0f32; self.ctx * self.fdim];
             for j in 0..self.ctx {
                 let p = plen - self.ctx + 1 + j;
-                let token = if p < plen { spec.prompt[p] } else { t_first };
+                let token = if p < plen { req.prompt[p] } else { t_first };
                 ctx_tokens.push(token);
                 let off = (p - 1) * self.fdim;
                 ctx_feats[j * self.fdim..(j + 1) * self.fdim]
                     .copy_from_slice(&pre_feats[off..off + self.fdim]);
             }
 
-            let max_new = spec.max_new_tokens.min(self.cfg.max_new_tokens).max(1);
+            let max_new = req.max_new_tokens.min(self.cfg.max_new_tokens).max(1);
+            let key = policy.exec_key();
             let mut slot = ActiveSlot {
                 finished: None,
                 generated: vec![t_first],
@@ -570,7 +714,10 @@ impl EngineCore {
                 iterations: 0,
                 accepted_sum: 0,
                 t_submit,
-                spec,
+                rng,
+                key,
+                policy,
+                req,
             };
             if t_first == self.eos_id {
                 slot.finished = Some(FinishReason::Eos);
@@ -584,8 +731,8 @@ impl EngineCore {
             // defines TTFT (measured from submit, so queue wait is included)
             self.metrics.tokens_emitted += 1;
             self.metrics.ttfts.push(t_submit.elapsed());
-            events.push(EngineEvent::Admitted { id: slot.spec.id, slot: i });
-            events.push(EngineEvent::Tokens { id: slot.spec.id, tokens: vec![t_first] });
+            events.push(EngineEvent::Admitted { id: slot.req.id, slot: i });
+            events.push(EngineEvent::Tokens { id: slot.req.id, tokens: vec![t_first] });
             self.slots[i] = Some(slot);
             admitted += 1;
         }
@@ -617,17 +764,15 @@ impl EngineCore {
         }
     }
 
-    /// One engine iteration: admit into free slots, then a single
-    /// {draft -> verify -> accept} pass over all occupied slots, then evict
-    /// whatever finished. Free rows run inert masked inputs and are skipped
-    /// on the host side; their outputs are ignored and their KV rows are
-    /// fully overwritten at the next admission.
-    ///
-    /// In tree mode the drafter emits N node tokens, verification scores
-    /// the whole tree in one pass against the precomputed ancestor mask,
-    /// and only the longest accepted root path is committed to the KV cache
-    /// (non-contiguous paths are compacted through the host — ONE shared
-    /// download/upload per step regardless of how many slots need it).
+    /// One engine iteration: admit into free slots, then one
+    /// {draft -> verify -> accept -> commit} pass per POLICY BUCKET over the
+    /// occupied slots (deterministic bucket order; a homogeneous batch is
+    /// one bucket and byte-identical to the old engine-wide path), then
+    /// evict whatever finished. Rows outside the running bucket carry
+    /// masked inputs; their outputs are ignored and their scratch-region
+    /// scatter garbage is rewritten by their own bucket before anything is
+    /// committed from it (see the module docs for why that ordering is the
+    /// safety argument).
     pub fn step(&mut self, mr: &mut ModelRuntime) -> Result<StepReport> {
         let mut events = Vec::new();
         let admitted = self.admit_pending(mr, &mut events)?;
@@ -635,7 +780,6 @@ impl EngineCore {
         self.evict_finished(&mut events);
 
         let b = self.cfg.batch;
-        let n = self.n_draft; // tree nodes, or chain depth K
         let occupied = self.occupied();
         if occupied == 0 {
             return Ok(StepReport { events, admitted, occupied });
@@ -646,6 +790,57 @@ impl EngineCore {
                 .record_block_occupancy(self.slotmgr.blocks_used(), self.slotmgr.blocks_total());
         }
 
+        // distinct policy buckets among occupied slots, deterministic order
+        let mut keys: Vec<String> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.as_ref().map(|s| s.key.clone()))
+            .collect();
+        keys.sort();
+        keys.dedup();
+
+        let mut emitted_now = vec![0usize; b];
+        for key in keys {
+            // lazy-load the bucket's executables on first use
+            let policy = self
+                .slots
+                .iter()
+                .find_map(|s| {
+                    s.as_ref().filter(|s| s.key == key).map(|s| s.policy.clone())
+                })
+                .expect("bucket key without slot");
+            self.ensure_group(mr, &policy)?;
+            self.step_bucket(mr, &key, &mut events, &mut emitted_now)?;
+        }
+        self.metrics.record_iteration(&emitted_now);
+
+        self.evict_finished(&mut events);
+        Ok(StepReport { events, admitted, occupied })
+    }
+
+    /// One policy bucket's {draft -> verify -> accept -> commit} pass at
+    /// full engine width. Member slots (same exec key) carry real inputs;
+    /// every other row is masked. The accepted-path KV commit (dense
+    /// compaction or paged block surgery) happens HERE, before the next
+    /// bucket's verify — later buckets' masked scatter then lands strictly
+    /// beyond each slot's updated committed length.
+    fn step_bucket(
+        &mut self,
+        mr: &mut ModelRuntime,
+        key: &str,
+        events: &mut Vec<EngineEvent>,
+        emitted_now: &mut [usize],
+    ) -> Result<()> {
+        let group = &self.groups[key];
+        let b = self.cfg.batch;
+        let n = group.n_draft;
+        let vocab = self.vocab;
+        let dynamic = matches!(group.archetype, SpecPolicy::Dynamic { .. });
+        let envelope: Option<&TreeTopology> = match &group.archetype {
+            SpecPolicy::Dynamic { envelope, .. } => Some(envelope),
+            _ => None,
+        };
+
         // --- draft inputs (masked rows: PAD tokens, zero feats, pos 0) ----
         let th = Instant::now();
         let (c, fdim) = (self.ctx, self.fdim);
@@ -654,9 +849,12 @@ impl EngineCore {
         let mut pos_buf = vec![0i32; b];
         for (i, s) in self.slots.iter().enumerate() {
             if let Some(s) = s {
-                ctx_tok_buf[i * c..(i + 1) * c].copy_from_slice(&s.ctx_tokens);
-                ctx_feat_buf[i * c * fdim..(i + 1) * c * fdim].copy_from_slice(&s.ctx_feats);
-                pos_buf[i] = (s.pos_last - 1) as i32; // row space = token pos - 1
+                if s.key == key {
+                    ctx_tok_buf[i * c..(i + 1) * c].copy_from_slice(&s.ctx_tokens);
+                    ctx_feat_buf[i * c * fdim..(i + 1) * c * fdim]
+                        .copy_from_slice(&s.ctx_feats);
+                    pos_buf[i] = (s.pos_last - 1) as i32; // row space = token pos - 1
+                }
             }
         }
         self.metrics.host_time += th.elapsed();
@@ -665,27 +863,34 @@ impl EngineCore {
         let ct_t = HostTensor::i32(&[b, c], ctx_tok_buf);
         let cf_t = HostTensor::f32(&[b, c, fdim], ctx_feat_buf);
         let p0_t = HostTensor::i32(&[b], pos_buf);
-        let (drafts, draft_logp) = if self.cfg.tree_dynamic.is_some() {
-            let (t, l) = mr.draft_tree_scored(&self.de, &ct_t, &cf_t, &p0_t)?;
+        let (drafts, draft_logp) = if dynamic {
+            let (t, l) = mr.draft_tree_scored(&group.de, &ct_t, &cf_t, &p0_t)?;
             (t, Some(l))
         } else {
-            (mr.draft(&self.de, &ct_t, &cf_t, &p0_t)?, None)
+            (mr.draft(&group.de, &ct_t, &cf_t, &p0_t)?, None)
         };
         self.metrics.draft_time += t1.elapsed();
         let draft_toks = drafts.as_i32()?;
 
         // --- dynamic mode: per-slot confidence-driven node selection -------
-        // The drafter scored every envelope node; each occupied slot keeps
-        // its top-budget ancestor-closed subset, compacted into the first
-        // chunk slots (masking::dynamic).
+        // The drafter scored every envelope node; each member slot keeps its
+        // top-budget ancestor-closed subset — the budget is the SLOT's own
+        // (per-request adaptive budgets), compacted into the first chunk
+        // slots (masking::dynamic).
         let th_sel = Instant::now();
         let mut selections: Vec<Option<Vec<usize>>> = vec![None; b];
-        if let Some(dync) = &self.cfg.tree_dynamic {
+        if let Some(env) = envelope {
             let logp = draft_logp.as_ref().unwrap().as_f32()?;
             for (i, s) in self.slots.iter().enumerate() {
-                if s.is_some() {
-                    let row = &logp[i * n..(i + 1) * n];
-                    selections[i] = Some(select_nodes(&dync.envelope, row, dync.node_budget));
+                if let Some(s) = s {
+                    if s.key == key {
+                        let budget = match &s.policy {
+                            SpecPolicy::Dynamic { budget, .. } => *budget,
+                            _ => unreachable!("dynamic bucket with non-dynamic slot"),
+                        };
+                        let row = &logp[i * n..(i + 1) * n];
+                        selections[i] = Some(select_nodes(env, row, budget));
+                    }
                 }
             }
         }
@@ -696,36 +901,43 @@ impl EngineCore {
         let mut chunk_buf = vec![self.pad_id; b * (n + 1)];
         for (i, s) in self.slots.iter().enumerate() {
             if let Some(s) = s {
-                chunk_buf[i * (n + 1)] = s.last_tok;
-                match &selections[i] {
-                    Some(sel) => {
-                        for (j, &id) in sel.iter().enumerate() {
-                            chunk_buf[i * (n + 1) + 1 + j] = draft_toks[i * n + id - 1];
+                if s.key == key {
+                    chunk_buf[i * (n + 1)] = s.last_tok;
+                    match &selections[i] {
+                        Some(sel) => {
+                            for (j, &id) in sel.iter().enumerate() {
+                                chunk_buf[i * (n + 1) + 1 + j] = draft_toks[i * n + id - 1];
+                            }
                         }
+                        None => chunk_buf[i * (n + 1) + 1..(i + 1) * (n + 1)]
+                            .copy_from_slice(&draft_toks[i * n..(i + 1) * n]),
                     }
-                    None => chunk_buf[i * (n + 1) + 1..(i + 1) * (n + 1)]
-                        .copy_from_slice(&draft_toks[i * n..(i + 1) * n]),
+                    self.slotmgr.begin_spec(i); // chunk KV lands in scratch
                 }
-                self.slotmgr.begin_spec(i); // chunk KV lands in scratch
             }
         }
+        // cache_len is rebuilt from the allocator EVERY bucket pass: live
+        // rows outside this bucket report their current committed length, so
+        // this bucket's masked scatter lands in their scratch region, never
+        // over committed cache (the multi-policy safety invariant).
         let cache_len = self.slotmgr.cache_len_i32();
         let t2 = Instant::now();
         let chunk_t = HostTensor::i32(&[b, n + 1], chunk_buf);
         let clen_t = HostTensor::i32(&[b], cache_len.clone());
         // paged: the per-slot block tables are an executable input each step
         // (scratch blocks are already reserved — the allocator's coverage
-        // invariant — so the chunk scatter always lands in owned blocks)
+        // invariant — so the chunk scatter always lands in owned blocks, and
+        // non-member rows' tail scatter lands in the null block)
         let table_t = self.slotmgr.is_paged().then(|| {
             let bs = self.slotmgr.block_size().unwrap();
             let width = self.slotmgr.s_max / bs;
             HostTensor::i32(&[b, width], self.slotmgr.block_table_i32())
         });
-        let ver = if let Some(dync) = &self.cfg.tree_dynamic {
+        let ver = if let Some(env_mask) = &group.envelope_mask {
             // per-slot subset mask + depth offsets are runtime inputs each
             // step (inactive rows stay all-zero: attend only the committed
             // cache, attended by nobody)
-            let env_mask = self.envelope_mask.as_ref().expect("dynamic engine without mask");
+            let env = envelope.expect("dynamic group without envelope");
             let w = n + 1;
             let mut mask_buf = vec![0i32; b * w * w];
             let mut depth_buf = vec![0i32; b * w];
@@ -734,31 +946,31 @@ impl EngineCore {
                     mask_buf[i * w * w..(i + 1) * w * w]
                         .copy_from_slice(&subset_mask_i32(env_mask, sel, w));
                     depth_buf[i * w..(i + 1) * w]
-                        .copy_from_slice(&compacted_depths_i32(&dync.envelope, sel, w));
+                        .copy_from_slice(&compacted_depths_i32(env, sel, w));
                 }
             }
             let mask_t = HostTensor::i32(&[b, w, w], mask_buf);
             let depth_t = HostTensor::i32(&[b, w], depth_buf);
             match &table_t {
                 Some(table) => mr.verify_tree_dyn_paged(
-                    &self.te, &chunk_t, &clen_t, &mask_t, &depth_t, table, &self.kv,
+                    &group.te, &chunk_t, &clen_t, &mask_t, &depth_t, table, &self.kv,
                 )?,
-                None => {
-                    mr.verify_tree_dyn(&self.te, &chunk_t, &clen_t, &mask_t, &depth_t, &self.kv)?
-                }
+                None => mr.verify_tree_dyn(
+                    &group.te, &chunk_t, &clen_t, &mask_t, &depth_t, &self.kv,
+                )?,
             }
         } else {
-            match (&self.tree_mask, &table_t) {
+            match (&group.tree_mask, &table_t) {
                 (Some(mask), Some(table)) => {
-                    mr.verify_tree_paged(&self.te, &chunk_t, &clen_t, mask, table, &self.kv)?
+                    mr.verify_tree_paged(&group.te, &chunk_t, &clen_t, mask, table, &self.kv)?
                 }
                 (Some(mask), None) => {
-                    mr.verify_tree(&self.te, &chunk_t, &clen_t, mask, &self.kv)?
+                    mr.verify_tree(&group.te, &chunk_t, &clen_t, mask, &self.kv)?
                 }
                 (None, Some(table)) => {
-                    mr.verify_paged(&self.te, &chunk_t, &clen_t, table, &self.kv)?
+                    mr.verify_paged(&group.te, &chunk_t, &clen_t, table, &self.kv)?
                 }
-                (None, None) => mr.verify(&self.te, &chunk_t, &clen_t, &self.kv)?,
+                (None, None) => mr.verify(&group.te, &chunk_t, &clen_t, &self.kv)?,
             }
         };
         self.metrics.verify_time += t2.elapsed();
@@ -766,14 +978,18 @@ impl EngineCore {
         let logits = ver.logits.as_f32()?;
         let feats = ver.feats.as_f32()?;
 
-        // --- acceptance per occupied slot ---------------------------------
+        // --- acceptance per member slot ------------------------------------
         let th2 = Instant::now();
-        let vocab = self.vocab;
-        let mut emitted_now = vec![0usize; b];
+        let drafter_name = group.archetype.drafter().to_string();
+        let group_al = al_ceiling(&group.archetype);
+        self.metrics.policy_mut(&drafter_name, group_al).steps += 1;
         // slots whose committed path is non-contiguous: (slot, base, path)
         let mut to_compact: Vec<(usize, usize, Vec<usize>)> = Vec::new();
         for (i, s) in self.slots.iter_mut().enumerate() {
             let Some(s) = s.as_mut() else { continue };
+            if s.key != key {
+                continue;
+            }
             let rows: Vec<&[f32]> = (0..=n)
                 .map(|j| {
                     let off = (i * (n + 1) + j) * vocab;
@@ -781,35 +997,35 @@ impl EngineCore {
                 })
                 .collect();
             let slot_drafts = &draft_toks[i * n..(i + 1) * n];
+            let sampling = s.req.sampling.mode;
             // accepted path as chunk-slot ids (chain: the identity prefix;
             // dynamic: COMPACTED chunk slots — the walk is confined to the
             // selected subtree)
-            let (path, emitted) = if let Some(dync) = &self.cfg.tree_dynamic {
-                let sel = selections[i].as_ref().expect("occupied slot without selection");
-                let parents = compacted_parents(&dync.envelope, sel);
-                let compacted: Vec<i32> =
-                    sel.iter().map(|&id| slot_drafts[id - 1]).collect();
-                let a = accept_tree_subset(
-                    &parents,
-                    &compacted,
-                    &rows[..=sel.len()],
-                    self.cfg.sampling,
-                    &mut self.rng,
-                );
-                (a.accepted_path, a.emitted)
-            } else {
-                match &self.cfg.tree {
-                    Some(tree) => {
-                        let a = accept_tree(
-                            tree, slot_drafts, &rows, self.cfg.sampling, &mut self.rng,
-                        );
-                        (a.accepted_path, a.emitted)
-                    }
-                    None => {
-                        let a =
-                            accept_chain(slot_drafts, &rows, self.cfg.sampling, &mut self.rng);
-                        ((1..=a.n_accepted).collect(), a.emitted)
-                    }
+            let (path, emitted) = match (&s.policy, envelope) {
+                (SpecPolicy::Dynamic { .. }, Some(env)) => {
+                    let sel = selections[i].as_ref().expect("member slot without selection");
+                    let parents = compacted_parents(env, sel);
+                    let compacted: Vec<i32> =
+                        sel.iter().map(|&id| slot_drafts[id - 1]).collect();
+                    let a = accept_tree_subset(
+                        &parents,
+                        &compacted,
+                        &rows[..=sel.len()],
+                        sampling,
+                        &mut s.rng,
+                    );
+                    (a.accepted_path, a.emitted)
+                }
+                (SpecPolicy::Tree { topology, .. }, _) => {
+                    let a = accept_tree(topology, slot_drafts, &rows, sampling, &mut s.rng);
+                    (a.accepted_path, a.emitted)
+                }
+                (SpecPolicy::Chain { .. }, _) => {
+                    let a = accept_chain(slot_drafts, &rows, sampling, &mut s.rng);
+                    ((1..=a.n_accepted).collect(), a.emitted)
+                }
+                (SpecPolicy::Dynamic { .. }, None) => {
+                    unreachable!("dynamic slot in non-dynamic bucket")
                 }
             };
             let q = cache_len[i] as usize; // chunk start = pos of last_tok
@@ -818,7 +1034,7 @@ impl EngineCore {
             // raw (pre-truncation) acceptance depth: the envelope/budget
             // tuning signal printed by bench-otps
             self.metrics.record_accepted_depth(path.len());
-            if self.cfg.tree.is_some() || self.cfg.tree_dynamic.is_some() {
+            if !matches!(s.policy, SpecPolicy::Chain { .. }) {
                 let active = selections[i].as_ref().map(|sel| sel.len()).unwrap_or(n);
                 self.metrics.record_active_nodes(active);
             }
@@ -845,6 +1061,9 @@ impl EngineCore {
                 }
             }
             emitted_now[i] = step_toks.len();
+            self.metrics
+                .policy_mut(&drafter_name, group_al)
+                .record_iteration(step_toks.len(), path.len());
             // commit root + the accepted nodes actually kept (truncation at
             // EOS/length only happens when the request finishes)
             if !self.slotmgr.commit_spec(i, step_toks.len()) && s.finished.is_none() {
@@ -856,19 +1075,20 @@ impl EngineCore {
                     to_compact.push((i, q, path[..kept].to_vec()));
                 }
             }
-            events.push(EngineEvent::Tokens { id: s.spec.id, tokens: step_toks });
+            events.push(EngineEvent::Tokens { id: s.req.id, tokens: step_toks });
         }
         self.metrics.host_time += th2.elapsed();
-        self.metrics.record_iteration(&emitted_now);
 
-        // --- accepted-path KV commit (tree mode, non-contiguous paths) -----
-        // Dense: compact rows through one shared host round trip
-        // (compact_kv_path). Paged: NEVER calls compact_kv_path — each path
-        // gets a block-granular plan: table-entry swaps (pure pointer
-        // surgery, no pool round trip) when the path is a block-aligned
-        // uniform shift, position copies confined to the chunk's blocks
-        // otherwise; the pool round-trips through the host only when some
-        // plan actually has copies.
+        // --- accepted-path KV commit (tree modes, non-contiguous paths) ----
+        // Applied per BUCKET, before the next bucket's verify (whose masked
+        // scatter must land beyond the just-committed lengths). Dense:
+        // compact rows through one shared host round trip (compact_kv_path).
+        // Paged: NEVER calls compact_kv_path — each path gets a
+        // block-granular plan: table-entry swaps (pure pointer surgery, no
+        // pool round trip) when the path is a block-aligned uniform shift,
+        // position copies confined to the chunk's blocks otherwise; the pool
+        // round-trips through the host only when some plan actually has
+        // copies.
         if !to_compact.is_empty() {
             let tc = Instant::now();
             if self.slotmgr.is_paged() {
@@ -902,9 +1122,7 @@ impl EngineCore {
             }
             self.metrics.commit_time += tc.elapsed();
         }
-
-        self.evict_finished(&mut events);
-        Ok(StepReport { events, admitted, occupied })
+        Ok(())
     }
 
     /// Drive `step()` until queue and slots are empty; returns all results
@@ -916,5 +1134,64 @@ impl EngineCore {
             out.extend(self.step(mr)?.into_finished());
         }
         Ok(out)
+    }
+}
+
+/// Load one policy's executable pair from the runtime registry and build
+/// the masks its verify passes need.
+fn load_group(
+    mr: &mut ModelRuntime,
+    target: &str,
+    policy: &SpecPolicy,
+    batch: usize,
+    paged: bool,
+) -> Result<PolicyGroup> {
+    let pe = mr.ensure_policy_execs(target, policy, batch, paged)?;
+    let (tree_mask, envelope_mask) = match policy {
+        SpecPolicy::Chain { .. } => (None, None),
+        SpecPolicy::Tree { topology, .. } => {
+            let m = topology.build_mask();
+            (Some(HostTensor::i32(&[m.n, m.n], m.to_i32())), None)
+        }
+        SpecPolicy::Dynamic { envelope, .. } => (None, Some(envelope.build_mask())),
+    };
+    Ok(PolicyGroup {
+        archetype: policy.clone(),
+        n_draft: policy.n_draft(),
+        te: pe.te,
+        de: pe.de,
+        tree_mask,
+        envelope_mask,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SamplingParams;
+
+    #[test]
+    fn config_widths_span_the_allowlist() {
+        let env = TreeTopology::from_widths(&[4, 4, 2, 2, 1]);
+        let cfg = EngineConfig::new("t", SpecPolicy::chain("d", 5), 2, 64).with_policies(vec![
+            SpecPolicy::tree("d", TreeTopology::from_widths(&[3, 2, 1, 1, 1])),
+            SpecPolicy::dynamic("d", env.clone(), 3),
+            SpecPolicy::chain("d", 5), // duplicate exec key, deduped
+        ]);
+        assert_eq!(cfg.allowed_policies().len(), 3);
+        assert_eq!(cfg.max_write_width(), 14, "widest scatter = envelope + 1");
+        assert_eq!(cfg.min_commit_width(), 4, "smallest charge = budget + 1");
+        assert_eq!(cfg.al_max(), 5);
+        // dynamic-only engine: AL ceiling is the envelope depth, not the
+        // (runtime-variable) budget
+        let solo = EngineConfig::new("t", SpecPolicy::dynamic("d", env, 2), 1, 8);
+        assert_eq!(solo.al_max(), 5);
+        assert_eq!(solo.max_write_width(), 14);
+        assert_eq!(solo.min_commit_width(), 3);
+    }
+
+    #[test]
+    fn sampling_defaults_are_greedy() {
+        assert_eq!(SamplingParams::default(), SamplingParams::greedy());
     }
 }

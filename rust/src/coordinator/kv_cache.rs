@@ -43,18 +43,25 @@ struct PagedState {
 #[derive(Clone, Debug)]
 pub struct SlotManager {
     pub s_max: usize,
-    /// Positions a verify step can COMMIT (accepted path + bonus root):
-    /// static modes N+1; dynamic tree mode `node_budget + 1` — the charge
-    /// unit for paged block coverage and admission headroom.
+    /// DEFAULT positions a verify step can COMMIT (accepted path + bonus
+    /// root): static modes N+1; dynamic tree mode `node_budget + 1` — the
+    /// charge unit for paged block coverage and admission headroom. With
+    /// per-request speculation policies each slot may carry its OWN commit
+    /// chunk ([`claim_with_chunk`](Self::claim_with_chunk)); this field is
+    /// the default used by [`claim`](Self::claim) and by admission checks
+    /// that predate knowing the request's policy.
     pub chunk: usize,
+    /// Per-slot commit chunk (the slot's policy commit width); equals
+    /// `chunk` unless the slot was claimed with its own.
+    chunks: Vec<usize>,
     /// Positions a verify step physically WRITES (the lowered scatter
-    /// width). Equal to `chunk` except in dynamic tree mode, where the
-    /// envelope executable scatters `envelope + 1` slots but only the first
-    /// `chunk` are ever committed: the tail lands beyond the block-table
-    /// coverage (the reserved null block — garbage over garbage), so blocks
-    /// are charged by `chunk` while the dense `s_max` fit must still respect
-    /// `write_width` (a dense scatter past `s_max` would clamp and corrupt
-    /// committed positions).
+    /// width). At least the widest `chunk` any serveable policy commits:
+    /// dynamic tree envelopes scatter `envelope + 1` slots but commit only
+    /// `budget + 1`, and in a multi-policy engine EVERY policy bucket's
+    /// verify scatters (masked garbage) into every live row, so the `s_max`
+    /// fit must honor the engine-wide maximum scatter width (a dense scatter
+    /// past `s_max` would clamp and corrupt committed positions) while
+    /// blocks are still charged by each slot's own `chunk`.
     write_width: usize,
     lens: Vec<usize>,
     active: Vec<bool>,
@@ -69,6 +76,7 @@ impl SlotManager {
         SlotManager {
             s_max,
             chunk,
+            chunks: vec![chunk; batch],
             write_width: chunk,
             lens: vec![0; batch],
             active: vec![false; batch],
@@ -116,6 +124,7 @@ impl SlotManager {
         SlotManager {
             s_max,
             chunk,
+            chunks: vec![chunk; batch],
             write_width: chunk,
             lens: vec![0; batch],
             active: vec![false; batch],
@@ -150,34 +159,69 @@ impl SlotManager {
 
     /// Whether a request of `prompt_len` tokens could EVER be admitted (the
     /// full scatter fits the logical window and, in paged mode, the
-    /// committable chunk fits the total block capacity).
+    /// committable chunk fits the total block capacity). Uses the default
+    /// commit chunk; policy-aware callers use
+    /// [`request_fits_chunk`](Self::request_fits_chunk).
     pub fn request_fits(&self, prompt_len: usize) -> bool {
+        self.request_fits_chunk(prompt_len, self.chunk)
+    }
+
+    /// [`request_fits`](Self::request_fits) with the request's own commit
+    /// chunk (its policy's commit width).
+    pub fn request_fits_chunk(&self, prompt_len: usize, chunk: usize) -> bool {
         prompt_len + self.write_width <= self.s_max
             && self
                 .paged
                 .as_ref()
-                .is_none_or(|p| self.blocks_for(prompt_len + self.chunk) <= p.capacity)
+                .is_none_or(|p| self.blocks_for(prompt_len + chunk) <= p.capacity)
     }
 
     /// Whether a request of `prompt_len` tokens can be admitted NOW: dense
     /// mode only needs the logical window; paged mode additionally needs
     /// enough free blocks to cover prompt + one committable speculation
     /// chunk (dynamic tree mode charges the node BUDGET here, not the
-    /// envelope — the over-reservation fix).
+    /// envelope — the over-reservation fix). Uses the default commit chunk;
+    /// policy-aware callers use [`can_admit_chunk`](Self::can_admit_chunk).
     pub fn can_admit(&self, prompt_len: usize) -> bool {
+        self.can_admit_chunk(prompt_len, self.chunk)
+    }
+
+    /// [`can_admit`](Self::can_admit) with the request's own commit chunk.
+    pub fn can_admit_chunk(&self, prompt_len: usize, chunk: usize) -> bool {
         prompt_len + self.write_width <= self.s_max
             && self
                 .paged
                 .as_ref()
-                .is_none_or(|p| p.free.len() >= self.blocks_for(prompt_len + self.chunk))
+                .is_none_or(|p| p.free.len() >= self.blocks_for(prompt_len + chunk))
     }
 
-    /// Claim slot `i` for a request with `prompt_len` tokens. Fails if the
-    /// prompt plus one full speculation chunk cannot fit — in paged mode
-    /// that includes claiming the covering blocks from the free list.
+    /// Claim slot `i` for a request with `prompt_len` tokens at the default
+    /// commit chunk. Fails if the prompt plus one full speculation chunk
+    /// cannot fit — in paged mode that includes claiming the covering blocks
+    /// from the free list.
     pub fn claim(&mut self, i: usize, prompt_len: usize) -> Result<(), String> {
+        self.claim_with_chunk(i, prompt_len, self.chunk)
+    }
+
+    /// [`claim`](Self::claim) with the request's OWN commit chunk: the slot
+    /// is charged (block coverage, commit ceiling, CacheFull signaling) by
+    /// its policy's commit width for its whole lifetime — two slots with
+    /// different node budgets reserve different scratch coverage in the same
+    /// pool (the per-slot adaptive-budget accounting).
+    pub fn claim_with_chunk(
+        &mut self,
+        i: usize,
+        prompt_len: usize,
+        chunk: usize,
+    ) -> Result<(), String> {
         if self.active[i] {
             return Err(format!("slot {i} already active"));
+        }
+        if chunk == 0 || chunk > self.write_width {
+            return Err(format!(
+                "slot {i}: commit chunk {chunk} outside 1..={} (the engine write width)",
+                self.write_width
+            ));
         }
         if prompt_len + self.write_width > self.s_max {
             return Err(format!(
@@ -185,7 +229,7 @@ impl SlotManager {
                 self.write_width, self.s_max
             ));
         }
-        let need = self.blocks_for(prompt_len + self.chunk);
+        let need = self.blocks_for(prompt_len + chunk);
         if let Some(p) = &mut self.paged {
             if p.free.len() < need {
                 return Err(format!(
@@ -201,7 +245,13 @@ impl SlotManager {
         }
         self.active[i] = true;
         self.lens[i] = prompt_len;
+        self.chunks[i] = chunk;
         Ok(())
+    }
+
+    /// Slot `i`'s commit chunk (its policy's commit width).
+    pub fn chunk_of(&self, i: usize) -> usize {
+        self.chunks[i]
     }
 
     /// Record `accepted + 1` new cached positions after a verify step.
@@ -228,7 +278,7 @@ impl SlotManager {
         debug_assert!(self.lens[i] + self.write_width <= self.s_max);
         if let Some(p) = &self.paged {
             debug_assert!(
-                p.tables[i].len() * p.block_size >= self.lens[i] + self.chunk,
+                p.tables[i].len() * p.block_size >= self.lens[i] + self.chunks[i],
                 "slot {i}: scratch blocks not reserved"
             );
         }
@@ -246,13 +296,13 @@ impl SlotManager {
     /// FinishReason::CacheFull).
     pub fn commit_spec(&mut self, i: usize, kept: usize) -> bool {
         debug_assert!(self.specing[i], "slot {i}: commit without begin_spec");
-        debug_assert!(kept <= self.chunk);
+        debug_assert!(kept <= self.chunks[i]);
         self.specing[i] = false;
         self.lens[i] += kept;
         if self.lens[i] + self.write_width > self.s_max {
             return false;
         }
-        let need = self.blocks_for(self.lens[i] + self.chunk);
+        let need = self.blocks_for(self.lens[i] + self.chunks[i]);
         if let Some(p) = &mut self.paged {
             while p.tables[i].len() < need {
                 match p.free.pop() {
@@ -284,6 +334,7 @@ impl SlotManager {
         self.active[i] = false;
         self.specing[i] = false;
         self.lens[i] = 0;
+        self.chunks[i] = self.chunk;
         if let Some(p) = &mut self.paged {
             let drained = std::mem::take(&mut p.tables[i]);
             p.free.extend(drained);
@@ -635,6 +686,54 @@ mod tests {
         m.begin_spec(0);
         assert!(m.commit_spec(0, 4));
         assert!(m.table(0).len() * 4 >= m.len(0) + m.chunk);
+    }
+
+    #[test]
+    fn mixed_chunk_paged_admission_charges_per_slot() {
+        // THE per-request-budget regression (satellite of the multi-drafter
+        // PR): two slots claimed with different commit chunks in the same
+        // pool must each be charged by their OWN chunk — coverage, admission
+        // headroom, and commit growth all follow the slot, not an
+        // engine-wide constant. bs=4, write width 10 (the widest policy's
+        // scatter), default chunk 6.
+        let mut m = SlotManager::new_paged(3, 64, 6, 4, 12).with_write_width(10);
+        // slot 0: small-budget policy (chunk 4): prompt 8 + 4 -> 3 blocks
+        m.claim_with_chunk(0, 8, 4).unwrap();
+        assert_eq!(m.table(0).len(), 3);
+        assert_eq!(m.chunk_of(0), 4);
+        // slot 1: wide policy (chunk 9): prompt 8 + 9 -> 5 blocks
+        m.claim_with_chunk(1, 8, 9).unwrap();
+        assert_eq!(m.table(1).len(), 5, "wide slot charged by its own chunk");
+        assert_eq!(m.blocks_used(), 8);
+        // 4 blocks left: a wide (chunk-9) admission needs 5 and must refuse,
+        // a chunk-4 one needs 3 and fits — headroom is policy-denominated
+        assert!(!m.can_admit_chunk(8, 9));
+        assert!(m.can_admit_chunk(8, 4));
+        // commit growth keeps each slot's OWN coverage invariant
+        m.begin_spec(0);
+        assert!(m.commit_spec(0, 3)); // len 11, need ceil(15/4) = 4 blocks
+        assert_eq!(m.table(0).len(), 4);
+        assert!(m.table(0).len() * 4 >= m.len(0) + m.chunk_of(0));
+        m.begin_spec(1);
+        assert!(m.commit_spec(1, 9)); // len 17, need ceil(26/4) = 7 blocks
+        assert_eq!(m.table(1).len(), 7);
+        assert_eq!(m.free_blocks(), 1);
+        // the last free block cannot host even a 1-token chunk-4 request
+        let err = m.claim_with_chunk(2, 1, 4).unwrap_err();
+        assert!(err.contains("KV blocks"), "undescriptive error: {err}");
+        // release restores the default chunk for the next tenant
+        m.release(1);
+        m.claim(1, 8).unwrap();
+        assert_eq!(m.chunk_of(1), 6);
+    }
+
+    #[test]
+    fn claim_with_chunk_rejects_out_of_range_chunks() {
+        let mut m = SlotManager::new(1, 64, 6).with_write_width(10);
+        let err = m.claim_with_chunk(0, 8, 11).unwrap_err();
+        assert!(err.contains("write width"), "undescriptive error: {err}");
+        assert!(m.claim_with_chunk(0, 8, 0).is_err());
+        m.claim_with_chunk(0, 8, 10).unwrap();
     }
 
     #[test]

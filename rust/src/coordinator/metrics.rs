@@ -1,8 +1,102 @@
 //! Engine metrics: OTPS, acceptance length, latency percentiles, per-phase
 //! timing, and — for the stepped engine — slot-occupancy and time-to-first-
 //! token tracking. Everything the Table 9/10 benches report comes from here.
+//!
+//! With per-request speculation policies a single engine batch can mix
+//! drafters, so the aggregate AL no longer identifies who earned it:
+//! [`PolicyMetrics`] keeps an AL histogram, an acceptance-by-depth
+//! histogram, and step/iteration counts PER DRAFTER NAME
+//! ([`EngineMetrics::per_policy`]), recorded at acceptance time by the
+//! policy-grouped step and printed by `bench-otps`.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
+
+/// Per-drafter slice of the engine metrics (keyed by drafter name in
+/// [`EngineMetrics::per_policy`]): enough to compare drafters served side by
+/// side in one batch — AL, acceptance by depth, and how many bucket passes /
+/// slot-iterations each one ran.
+#[derive(Clone, Debug, Default)]
+pub struct PolicyMetrics {
+    /// policy-grouped verify passes that included this drafter (each engine
+    /// step runs one pass per distinct policy bucket)
+    pub steps: usize,
+    /// live slot-iterations (one per occupied slot per pass)
+    pub iterations: usize,
+    /// tokens emitted (accepted drafts + bonus), summed
+    pub accepted_sum: usize,
+    /// histogram over per-iteration acceptance length (index = emitted)
+    pub al_histogram: Vec<usize>,
+    /// raw accepted-path depth histogram (same convention as
+    /// [`EngineMetrics::accepted_by_depth`]); index 0 unused
+    pub accepted_by_depth: Vec<usize>,
+}
+
+impl PolicyMetrics {
+    fn sized(al_max: usize) -> PolicyMetrics {
+        PolicyMetrics {
+            al_histogram: vec![0; al_max + 2],
+            accepted_by_depth: vec![0; al_max + 1],
+            ..Default::default()
+        }
+    }
+
+    /// Record one live slot-iteration: `emitted` tokens kept, raw accepted
+    /// path `depth` nodes deep.
+    pub fn record_iteration(&mut self, emitted: usize, depth: usize) {
+        self.iterations += 1;
+        self.accepted_sum += emitted;
+        if emitted > 0 {
+            let bin = emitted.min(self.al_histogram.len().saturating_sub(1));
+            self.al_histogram[bin] += 1;
+        }
+        if self.accepted_by_depth.len() > 1 {
+            let max_d = self.accepted_by_depth.len() - 1;
+            for d in 1..=depth.min(max_d) {
+                self.accepted_by_depth[d] += 1;
+            }
+        }
+    }
+
+    /// Mean acceptance length for this drafter alone.
+    pub fn acceptance_length(&self) -> f64 {
+        if self.iterations == 0 {
+            0.0
+        } else {
+            self.accepted_sum as f64 / self.iterations as f64
+        }
+    }
+
+    /// Per-depth acceptance rates for this drafter
+    /// (`accepted_by_depth[d] / iterations`), depths `1..`.
+    pub fn depth_acceptance_rates(&self) -> Vec<f64> {
+        if self.iterations == 0 {
+            return Vec::new();
+        }
+        self.accepted_by_depth[1..]
+            .iter()
+            .map(|&c| c as f64 / self.iterations as f64)
+            .collect()
+    }
+
+    fn merge(&mut self, other: &PolicyMetrics) {
+        self.steps += other.steps;
+        self.iterations += other.iterations;
+        self.accepted_sum += other.accepted_sum;
+        if self.al_histogram.len() < other.al_histogram.len() {
+            self.al_histogram.resize(other.al_histogram.len(), 0);
+        }
+        for (i, &c) in other.al_histogram.iter().enumerate() {
+            self.al_histogram[i] += c;
+        }
+        if self.accepted_by_depth.len() < other.accepted_by_depth.len() {
+            self.accepted_by_depth.resize(other.accepted_by_depth.len(), 0);
+        }
+        for (i, &c) in other.accepted_by_depth.iter().enumerate() {
+            self.accepted_by_depth[i] += c;
+        }
+    }
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct EngineMetrics {
@@ -63,6 +157,9 @@ pub struct EngineMetrics {
     pub request_latencies: Vec<Duration>,
     /// submit -> first emitted token, per request (includes queue wait)
     pub ttfts: Vec<Duration>,
+    /// per-drafter breakdown (multi-policy engines; singleton for a
+    /// homogeneous batch) — see [`PolicyMetrics`]
+    pub per_policy: BTreeMap<String, PolicyMetrics>,
 }
 
 impl EngineMetrics {
@@ -85,6 +182,23 @@ impl EngineMetrics {
         for d in 1..=depth.min(max_d) {
             self.accepted_by_depth[d] += 1;
         }
+    }
+
+    /// The per-drafter slice for `drafter`, created (sized for `al_max`
+    /// accepted drafts) on first touch. One drafter may serve SEVERAL
+    /// policies with different AL ceilings (e.g. chain:3 next to a depth-5
+    /// tree), so the histograms grow whenever a deeper policy touches the
+    /// entry — first-touch sizing must never clamp a later policy's counts.
+    pub fn policy_mut(&mut self, drafter: &str, al_max: usize) -> &mut PolicyMetrics {
+        let pm = self
+            .per_policy
+            .entry(drafter.to_string())
+            .or_insert_with(|| PolicyMetrics::sized(al_max));
+        if pm.al_histogram.len() < al_max + 2 {
+            pm.al_histogram.resize(al_max + 2, 0);
+            pm.accepted_by_depth.resize(al_max + 1, 0);
+        }
+        pm
     }
 
     /// Record one tree-mode slot-iteration's active draft-node count.
@@ -244,6 +358,9 @@ impl EngineMetrics {
         self.wall_time += other.wall_time;
         self.request_latencies.extend_from_slice(&other.request_latencies);
         self.ttfts.extend_from_slice(&other.ttfts);
+        for (name, pm) in &other.per_policy {
+            self.per_policy.entry(name.clone()).or_default().merge(pm);
+        }
     }
 
     pub fn summary(&self) -> String {
@@ -383,6 +500,59 @@ mod tests {
         assert_eq!(m.accepted_by_depth.len(), 8);
         assert_eq!(m.accepted_by_depth[6], 1);
         assert_eq!(m.active_node_steps, 3);
+    }
+
+    #[test]
+    fn per_policy_breakdown_tracks_each_drafter() {
+        // satellite: AL, acceptance-by-depth, and step counts keyed by
+        // drafter name, independent across drafters and folded by merge
+        let mut m = EngineMetrics::new(5);
+        {
+            let pe = m.policy_mut("target-m-pe4", 5);
+            pe.steps += 1;
+            pe.record_iteration(3, 2);
+            pe.record_iteration(6, 5);
+        }
+        {
+            let ar = m.policy_mut("target-m-ar", 5);
+            ar.steps += 1;
+            ar.record_iteration(1, 0);
+        }
+        let pe = &m.per_policy["target-m-pe4"];
+        assert_eq!(pe.iterations, 2);
+        assert!((pe.acceptance_length() - 4.5).abs() < 1e-12);
+        assert_eq!(pe.al_histogram[3], 1);
+        assert_eq!(pe.al_histogram[6], 1);
+        assert_eq!(pe.accepted_by_depth, vec![0, 2, 2, 1, 1, 1]);
+        let rates = pe.depth_acceptance_rates();
+        assert!((rates[0] - 1.0).abs() < 1e-12);
+        assert!((rates[4] - 0.5).abs() < 1e-12);
+        let ar = &m.per_policy["target-m-ar"];
+        assert_eq!(ar.iterations, 1);
+        assert!((ar.acceptance_length() - 1.0).abs() < 1e-12);
+        assert_eq!(ar.accepted_by_depth, vec![0, 0, 0, 0, 0, 0]);
+        // emitted beyond the histogram clamps into the last bin
+        let mut tiny = EngineMetrics::new(1);
+        tiny.policy_mut("d", 1).record_iteration(9, 9);
+        assert_eq!(tiny.per_policy["d"].al_histogram, vec![0, 0, 1]);
+        assert_eq!(tiny.per_policy["d"].accepted_by_depth, vec![0, 1]);
+        // a deeper policy of the SAME drafter must grow the entry, not get
+        // clamped by whoever touched it first (one drafter, many policies)
+        tiny.policy_mut("d", 5).record_iteration(6, 5);
+        assert_eq!(tiny.per_policy["d"].al_histogram.len(), 7);
+        assert_eq!(tiny.per_policy["d"].al_histogram[6], 1);
+        assert_eq!(tiny.per_policy["d"].accepted_by_depth, vec![0, 2, 1, 1, 1, 1]);
+        // a shallower later touch never shrinks it
+        tiny.policy_mut("d", 1);
+        assert_eq!(tiny.per_policy["d"].al_histogram.len(), 7);
+        // merge folds per-drafter slices (and creates missing ones)
+        let mut o = EngineMetrics::new(5);
+        o.policy_mut("target-m-pe4", 5).record_iteration(2, 1);
+        o.policy_mut("target-m-pe2", 5).record_iteration(4, 3);
+        m.merge(&o);
+        assert_eq!(m.per_policy["target-m-pe4"].iterations, 3);
+        assert_eq!(m.per_policy.len(), 3);
+        assert_eq!(m.per_policy["target-m-pe2"].accepted_sum, 4);
     }
 
     #[test]

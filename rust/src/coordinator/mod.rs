@@ -1,7 +1,10 @@
 //! L3 coordinator: the serving engine (the paper's vLLM integration,
 //! §5.3) — a stepped, continuously batched speculative-decoding core
-//! (`EngineCore`) with swappable AR / P-EAGLE drafter executables, per-slot
-//! KV lifecycles, sampling/acceptance, occupancy/TTFT metrics, a thin
+//! (`EngineCore`) with PER-REQUEST speculation policies (each [`Request`]
+//! may name its own drafter + chain/tree/dynamic shape via [`SpecPolicy`];
+//! the step loop groups slots by policy and runs one pass per bucket over
+//! that policy's own executables), per-slot KV lifecycles, per-request
+//! sampling/acceptance, occupancy/TTFT and per-drafter metrics, a thin
 //! bucket-admission scheduler, and a threaded streaming server front-end.
 
 pub mod engine;
@@ -13,11 +16,13 @@ pub mod scheduler;
 pub mod server;
 
 pub use engine::{
-    paged_from_env, tree_dyn_from_env, EngineConfig, EngineCore, EngineEvent, PagedKvConfig,
-    StepReport,
+    multi_drafter_from_env, paged_from_env, tree_dyn_from_env, EngineConfig, EngineCore,
+    EngineEvent, PagedKvConfig, StepReport,
 };
-pub use metrics::EngineMetrics;
-pub use request::{FinishReason, RequestResult, RequestSpec};
+pub use metrics::{EngineMetrics, PolicyMetrics};
+pub use request::{
+    FinishReason, Request, RequestResult, RequestSpec, SamplingParams, SpecPolicy,
+};
 pub use sampler::Sampling;
 pub use scheduler::{run_closed_loop, Scheduler};
 pub use server::{ServerEvent, ServerHandle, ServerMsg};

@@ -1,12 +1,314 @@
-//! Request lifecycle types: what a request IS once it leaves the workload
-//! generator ([`RequestSpec`], re-exported from `workload::arrivals`), why
-//! it stopped ([`FinishReason`]), and what the engine hands back
-//! ([`RequestResult`], including the per-request acceptance-length
-//! accounting the paper's AL metric is computed from). Everything here is
-//! engine-agnostic data — the serving server, scheduler, benches, and tests
-//! all speak these types.
+//! The first-class request API: what a request IS ([`Request`] — prompt,
+//! generation budget, per-request [`SamplingParams`] and speculation
+//! [`SpecPolicy`]), why it stopped ([`FinishReason`]), and what the engine
+//! hands back ([`RequestResult`], including the per-request
+//! acceptance-length accounting the paper's AL metric is computed from).
+//! Everything here is engine-agnostic data — the serving server, scheduler,
+//! benches, and tests all speak these types.
+//!
+//! # Per-request speculation policies
+//!
+//! EAGLE-3 shows acceptance length varies sharply by workload, so the right
+//! drafter / speculation shape / node budget is a property of the *request*,
+//! not of the deployment. [`SpecPolicy`] names a manifest drafter plus a
+//! speculation mode (`Chain` / `Tree` / `Dynamic`); a request that carries
+//! one is drafted and verified with that policy's own executables inside the
+//! same continuously-batched engine step as everyone else (the engine groups
+//! occupied slots by policy — see
+//! [`EngineCore::step`](super::engine::EngineCore::step)). A request that
+//! carries `None` uses the engine's
+//! [`default_policy`](super::engine::EngineConfig::default_policy).
+//!
+//! # Migration note (engine-wide → per-request)
+//!
+//! `RequestSpec` (formerly defined in `workload::arrivals`) was promoted to
+//! [`Request`]; the old name remains as a type alias. The engine-wide
+//! `EngineConfig` fields `drafter` / `k` / `tree` / `tree_dynamic` /
+//! `sampling` collapsed into [`SpecPolicy`] + [`SamplingParams`] carried
+//! here — see the [`EngineConfig`](super::engine::EngineConfig) rustdoc for
+//! the field-by-field mapping.
 
-pub use crate::workload::RequestSpec;
+use crate::masking::{DynamicTreeConfig, TreeTopology};
+
+use super::sampler::Sampling;
+
+/// Per-request sampling configuration: the mode (greedy or temperature) plus
+/// the seed of the request's private rng stream. Greedy never draws from the
+/// rng, so greedy requests are bit-reproducible regardless of seed or batch
+/// placement; temperature requests are reproducible for a fixed
+/// (engine seed, request seed) pair.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplingParams {
+    pub mode: Sampling,
+    pub seed: u64,
+}
+
+impl SamplingParams {
+    pub fn greedy() -> SamplingParams {
+        SamplingParams { mode: Sampling::Greedy, seed: 0 }
+    }
+
+    pub fn temperature(t: f32, seed: u64) -> SamplingParams {
+        SamplingParams { mode: Sampling::Temperature(t), seed }
+    }
+}
+
+impl Default for SamplingParams {
+    fn default() -> SamplingParams {
+        SamplingParams::greedy()
+    }
+}
+
+/// A per-request speculation policy: which manifest drafter drafts for this
+/// request, and in which shape it speculates.
+///
+/// Two policies that differ only in the `Dynamic` node `budget` share the
+/// same lowered executables (the budget is per-step runtime data, not an
+/// executable shape) — [`exec_key`](Self::exec_key) is identical — so a
+/// single engine batch can mix budgets freely. Everything else (drafter,
+/// chain depth, topology, envelope) is baked into the lowered HLO and keys a
+/// distinct executable group.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpecPolicy {
+    /// Linear K-token chain speculation (classic EAGLE serving).
+    Chain { drafter: String, k: usize },
+    /// Static draft-tree speculation: the whole `topology` is drafted and
+    /// verified in one pass every step.
+    Tree { drafter: String, topology: TreeTopology },
+    /// Dynamic confidence-driven tree speculation inside a max-shape
+    /// `envelope`: each step activates the `budget` envelope nodes the
+    /// drafter is most confident in ([`crate::masking::dynamic`]). The
+    /// budget is runtime data — per-request adaptive budgets ride on the
+    /// same executables.
+    Dynamic { drafter: String, envelope: TreeTopology, budget: usize },
+}
+
+impl SpecPolicy {
+    pub fn chain(drafter: impl Into<String>, k: usize) -> SpecPolicy {
+        SpecPolicy::Chain { drafter: drafter.into(), k }
+    }
+
+    pub fn tree(drafter: impl Into<String>, topology: TreeTopology) -> SpecPolicy {
+        SpecPolicy::Tree { drafter: drafter.into(), topology }
+    }
+
+    pub fn dynamic(
+        drafter: impl Into<String>,
+        envelope: TreeTopology,
+        budget: usize,
+    ) -> SpecPolicy {
+        SpecPolicy::Dynamic { drafter: drafter.into(), envelope, budget }
+    }
+
+    /// The serving default for `drafter` from a [`DynamicTreeConfig`].
+    pub fn from_dynamic_config(drafter: impl Into<String>, d: &DynamicTreeConfig) -> SpecPolicy {
+        SpecPolicy::Dynamic {
+            drafter: drafter.into(),
+            envelope: d.envelope.clone(),
+            budget: d.node_budget,
+        }
+    }
+
+    /// Manifest drafter this policy speculates with.
+    pub fn drafter(&self) -> &str {
+        match self {
+            SpecPolicy::Chain { drafter, .. }
+            | SpecPolicy::Tree { drafter, .. }
+            | SpecPolicy::Dynamic { drafter, .. } => drafter,
+        }
+    }
+
+    /// Manifest capability name of this policy's mode: `chain` / `tree` /
+    /// `dyn` (what python `configs.drafter_modes` records per drafter).
+    pub fn mode_name(&self) -> &'static str {
+        match self {
+            SpecPolicy::Chain { .. } => "chain",
+            SpecPolicy::Tree { .. } => "tree",
+            SpecPolicy::Dynamic { .. } => "dyn",
+        }
+    }
+
+    /// Draft width per step: chain depth K, or tree/envelope node count N
+    /// (the drafter executable's output width).
+    pub fn n_draft(&self) -> usize {
+        match self {
+            SpecPolicy::Chain { k, .. } => *k,
+            SpecPolicy::Tree { topology, .. } => topology.len(),
+            SpecPolicy::Dynamic { envelope, .. } => envelope.len(),
+        }
+    }
+
+    /// Positions a verify step physically WRITES for this policy (the
+    /// lowered scatter width, `n_draft + 1`) — what the dense `s_max` fit
+    /// must honor.
+    pub fn chunk_width(&self) -> usize {
+        self.n_draft() + 1
+    }
+
+    /// Positions a verify step can COMMIT (accepted path + bonus root):
+    /// chain/tree `n_draft + 1`, dynamic `budget + 1` — the per-slot charge
+    /// unit for paged block coverage and admission headroom.
+    pub fn commit_width(&self) -> usize {
+        match self {
+            SpecPolicy::Dynamic { envelope, budget, .. } => (*budget).min(envelope.len()) + 1,
+            _ => self.n_draft() + 1,
+        }
+    }
+
+    /// Acceptance-length ceiling (accepted drafts, excluding the bonus):
+    /// chain K, tree max depth, dynamic min(envelope depth, budget).
+    pub fn al_max(&self) -> usize {
+        match self {
+            SpecPolicy::Chain { k, .. } => *k,
+            SpecPolicy::Tree { topology, .. } => topology.max_depth(),
+            SpecPolicy::Dynamic { envelope, budget, .. } => {
+                envelope.max_depth().min(*budget)
+            }
+        }
+    }
+
+    /// Executable-group key: requests whose policies share this key run in
+    /// the same policy bucket on the same loaded executables. The `Dynamic`
+    /// budget is deliberately EXCLUDED (it is runtime data); chain depth and
+    /// topology/envelope ids are included (they are baked into the HLO).
+    pub fn exec_key(&self) -> String {
+        match self {
+            SpecPolicy::Chain { drafter, k } => format!("{drafter}/chain:k{k}"),
+            SpecPolicy::Tree { drafter, topology } => {
+                format!("{drafter}/tree:{}", topology.id())
+            }
+            SpecPolicy::Dynamic { drafter, envelope, .. } => {
+                format!("{drafter}/dyn:{}", envelope.id())
+            }
+        }
+    }
+
+    /// Display id (includes the dynamic budget, unlike
+    /// [`exec_key`](Self::exec_key)).
+    pub fn id(&self) -> String {
+        match self {
+            SpecPolicy::Chain { drafter, k } => format!("{drafter}/chain:{k}"),
+            SpecPolicy::Tree { drafter, topology } => {
+                format!("{drafter}/tree:{}", topology.id())
+            }
+            SpecPolicy::Dynamic { drafter, envelope, budget } => {
+                format!("{drafter}/dyn:{}@{budget}", envelope.id())
+            }
+        }
+    }
+
+    /// Shape validation (no manifest access — drafter existence and
+    /// capability are checked by the runtime registry,
+    /// [`ModelRuntime::validate_policy`](crate::runtime::ModelRuntime::validate_policy)).
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            SpecPolicy::Chain { k, .. } => {
+                if *k == 0 {
+                    return Err("chain policy needs k >= 1".into());
+                }
+            }
+            SpecPolicy::Tree { topology, .. } => {
+                if topology.is_empty() {
+                    return Err("tree policy needs a non-empty topology".into());
+                }
+            }
+            SpecPolicy::Dynamic { envelope, budget, .. } => {
+                // reuse the DynamicTreeConfig ceilings so CLI/API errors stay
+                // descriptive and consistent with PR 4's validation
+                DynamicTreeConfig::new(envelope.clone(), *budget)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a CLI mode spec for `drafter`:
+    ///
+    /// * `chain:K` — linear chain of depth K;
+    /// * `tree:<topo>` — static tree, `<topo>` in
+    ///   [`TreeTopology::parse`] syntax (`chain:K` or `w:3,2,1,..`);
+    /// * `dyn:<envelope>@B` — dynamic selection of B nodes per step inside
+    ///   `<envelope>`.
+    ///
+    /// Untrusted-input safe: every branch funnels through the validated
+    /// parsers, so oversized or malformed specs fail with descriptive errors.
+    pub fn parse(drafter: &str, mode_spec: &str) -> Result<SpecPolicy, String> {
+        let p = if let Some(rest) = mode_spec.strip_prefix("tree:") {
+            SpecPolicy::Tree {
+                drafter: drafter.into(),
+                topology: TreeTopology::parse(rest)?,
+            }
+        } else if let Some(rest) = mode_spec.strip_prefix("dyn:") {
+            let (env, budget) = rest
+                .rsplit_once('@')
+                .ok_or_else(|| format!("dyn policy {rest:?} needs an `@<budget>` suffix"))?;
+            let budget: usize = budget
+                .parse()
+                .map_err(|_| format!("dyn policy budget {budget:?} is not a number"))?;
+            let d = DynamicTreeConfig::parse(env, budget)?;
+            SpecPolicy::Dynamic { drafter: drafter.into(), envelope: d.envelope, budget }
+        } else if let Some(k) = mode_spec.strip_prefix("chain:") {
+            let k: usize =
+                k.parse().map_err(|_| format!("chain policy depth {k:?} is not a number"))?;
+            SpecPolicy::Chain { drafter: drafter.into(), k }
+        } else {
+            return Err(format!(
+                "unknown policy spec {mode_spec:?} (expected chain:K, tree:<topo>, or \
+                 dyn:<envelope>@<budget>)"
+            ));
+        };
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+/// A serving request: prompt + generation budget, plus its own sampling
+/// parameters and (optionally) its own speculation policy. `policy: None`
+/// uses the engine's default — a stream of policy-free requests behaves
+/// exactly like the old engine-wide configuration.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// arrival offset in seconds (0 for closed-loop)
+    pub arrival_s: f64,
+    pub sampling: SamplingParams,
+    /// `None` → the engine's [`default_policy`](super::engine::EngineConfig::default_policy)
+    pub policy: Option<SpecPolicy>,
+}
+
+/// Migration alias: `RequestSpec` was promoted from `workload::arrivals`
+/// into this first-class [`Request`]. Existing code keeps compiling; new
+/// code should say [`Request`].
+pub type RequestSpec = Request;
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            arrival_s: 0.0,
+            sampling: SamplingParams::greedy(),
+            policy: None,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: SpecPolicy) -> Request {
+        self.policy = Some(policy);
+        self
+    }
+
+    pub fn with_sampling(mut self, sampling: SamplingParams) -> Request {
+        self.sampling = sampling;
+        self
+    }
+
+    pub fn with_arrival(mut self, arrival_s: f64) -> Request {
+        self.arrival_s = arrival_s;
+        self
+    }
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FinishReason {
@@ -78,5 +380,94 @@ mod tests {
             latency: std::time::Duration::ZERO,
         };
         assert_eq!(r.acceptance_length(), 0.0);
+    }
+
+    #[test]
+    fn policy_widths() {
+        let c = SpecPolicy::chain("d", 5);
+        assert_eq!(c.n_draft(), 5);
+        assert_eq!(c.chunk_width(), 6);
+        assert_eq!(c.commit_width(), 6);
+        assert_eq!(c.al_max(), 5);
+
+        let t = SpecPolicy::tree("d", TreeTopology::from_widths(&[3, 2, 1, 1, 1]));
+        assert_eq!(t.n_draft(), 8);
+        assert_eq!(t.chunk_width(), 9);
+        assert_eq!(t.commit_width(), 9);
+        assert_eq!(t.al_max(), 5);
+
+        let d = SpecPolicy::dynamic("d", TreeTopology::from_widths(&[4, 4, 2, 2, 1]), 3);
+        assert_eq!(d.n_draft(), 13);
+        assert_eq!(d.chunk_width(), 14, "dynamic scatters the whole envelope");
+        assert_eq!(d.commit_width(), 4, "but commits only budget + 1");
+        assert_eq!(d.al_max(), 3);
+    }
+
+    #[test]
+    fn exec_key_ignores_dynamic_budget_only() {
+        let env = TreeTopology::from_widths(&[4, 4, 2, 2, 1]);
+        let a = SpecPolicy::dynamic("d", env.clone(), 3);
+        let b = SpecPolicy::dynamic("d", env.clone(), 8);
+        assert_eq!(a.exec_key(), b.exec_key(), "budgets share executables");
+        assert_ne!(a.id(), b.id(), "but display ids differ");
+
+        let c5 = SpecPolicy::chain("d", 5);
+        let c7 = SpecPolicy::chain("d", 7);
+        assert_ne!(c5.exec_key(), c7.exec_key(), "chain depth is baked into the HLO");
+        let other = SpecPolicy::dynamic("e", env, 3);
+        assert_ne!(a.exec_key(), other.exec_key(), "drafter is part of the key");
+        assert_ne!(
+            SpecPolicy::chain("d", 5).exec_key(),
+            SpecPolicy::tree("d", TreeTopology::chain(5)).exec_key(),
+            "chain-k and chain-shaped tree use different executables"
+        );
+    }
+
+    #[test]
+    fn policy_parse_round_trips() {
+        let c = SpecPolicy::parse("d", "chain:5").unwrap();
+        assert_eq!(c, SpecPolicy::chain("d", 5));
+        let t = SpecPolicy::parse("d", "tree:w:3,2,1,1,1").unwrap();
+        assert_eq!(t, SpecPolicy::tree("d", TreeTopology::from_widths(&[3, 2, 1, 1, 1])));
+        let t2 = SpecPolicy::parse("d", "tree:chain:4").unwrap();
+        assert_eq!(t2, SpecPolicy::tree("d", TreeTopology::chain(4)));
+        let y = SpecPolicy::parse("d", "dyn:w:4,4,2,2,1@8").unwrap();
+        assert_eq!(
+            y,
+            SpecPolicy::dynamic("d", TreeTopology::from_widths(&[4, 4, 2, 2, 1]), 8)
+        );
+    }
+
+    #[test]
+    fn policy_parse_rejects_malformed_specs_descriptively() {
+        for (spec, needle) in [
+            ("chain:x", "not a number"),
+            ("chain:0", "k >= 1"),
+            ("tree:w:", "width profile"),
+            ("dyn:w:2,1", "@<budget>"),
+            ("dyn:w:2,1@x", "not a number"),
+            ("dyn:w:2,1@0", ">= 1"),
+            ("dyn:w:2,1@9", "exceeds"),
+            ("banana", "unknown policy spec"),
+        ] {
+            let err = SpecPolicy::parse("d", spec).unwrap_err();
+            assert!(err.contains(needle), "{spec:?}: undescriptive error {err:?}");
+        }
+    }
+
+    #[test]
+    fn request_builders() {
+        let r = Request::new(7, vec![1, 2, 3], 16)
+            .with_policy(SpecPolicy::chain("d", 5))
+            .with_sampling(SamplingParams::temperature(0.8, 42))
+            .with_arrival(1.5);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.max_new_tokens, 16);
+        assert_eq!(r.arrival_s, 1.5);
+        assert_eq!(r.sampling.seed, 42);
+        assert_eq!(r.policy.as_ref().unwrap().drafter(), "d");
+        let plain = Request::new(0, vec![1], 8);
+        assert!(plain.policy.is_none());
+        assert_eq!(plain.sampling, SamplingParams::greedy());
     }
 }

@@ -19,7 +19,7 @@
 use crate::masking::TreeTopology;
 use crate::util::rng::Rng;
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Sampling {
     Greedy,
     Temperature(f32),

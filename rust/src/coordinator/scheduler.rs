@@ -5,7 +5,11 @@
 //! it buffers submissions, picks the executable width (bucket) to spin the
 //! core up at, and feeds the core's queue. Unlike the old wave scheduler it
 //! never runs padded batches to completion — an undersized backlog admits
-//! into the smallest bucket and the core masks the empty rows.
+//! into the smallest bucket and the core masks the empty rows. Requests may
+//! carry their own [`SpecPolicy`](super::request::SpecPolicy); the width
+//! pick reasons with the engine's allowlist (the cheapest serveable
+//! policy's footprint), and the core charges each admitted slot by its own
+//! policy.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -14,14 +18,14 @@ use anyhow::{anyhow, Result};
 
 use super::engine::{EngineConfig, EngineCore};
 use super::metrics::EngineMetrics;
-use super::request::{RequestResult, RequestSpec};
+use super::request::{Request, RequestResult};
 use crate::runtime::ModelRuntime;
 
 pub struct Scheduler {
     pub cfg: EngineConfig,
     /// available executable widths, sorted ascending (manifest batch_sizes)
     pub buckets: Vec<usize>,
-    queue: VecDeque<RequestSpec>,
+    queue: VecDeque<Request>,
     pub results: Vec<RequestResult>,
     pub metrics: EngineMetrics,
 }
@@ -32,11 +36,11 @@ impl Scheduler {
         b.sort_unstable();
         b.dedup();
         assert!(!b.is_empty(), "scheduler needs at least one width bucket");
-        let metrics = EngineMetrics::new(cfg.k);
+        let metrics = EngineMetrics::new(cfg.al_max());
         Scheduler { cfg, buckets: b, queue: VecDeque::new(), results: Vec::new(), metrics }
     }
 
-    pub fn submit(&mut self, r: RequestSpec) {
+    pub fn submit(&mut self, r: Request) {
         self.queue.push_back(r);
     }
 
@@ -66,22 +70,16 @@ impl Scheduler {
             if let Some(budget) = p.num_blocks {
                 // floor per request: the smallest admissible footprint is a
                 // 1-token prompt + one COMMITTABLE speculation chunk of
-                // scratch — N+1 chunk slots, where N is the tree's node
-                // count (NOT k, which tree mode ignores), the chain depth K,
-                // or — dynamic tree mode — the per-step node BUDGET (the
-                // envelope's tail scatter lands in the null block and is
-                // never charged; charging the envelope here was the
-                // over-reservation bug). A block_size left to
+                // scratch — the CHEAPEST serveable policy's commit width
+                // (chain K+1, tree N+1, or — dynamic — the per-step node
+                // BUDGET + 1; the envelope's tail scatter lands in the null
+                // block and is never charged). A block_size left to
                 // default-from-manifest is estimated at the dense
                 // BLOCK_SIZE; the engine's own admission gate re-checks
-                // with exact numbers.
-                let n_draft = match (&self.cfg.tree_dynamic, &self.cfg.tree) {
-                    (Some(d), _) => d.active_nodes(),
-                    (None, Some(t)) => t.len(),
-                    (None, None) => self.cfg.k,
-                };
+                // with exact per-request numbers.
+                let commit = self.cfg.min_commit_width();
                 let bs = p.block_size.unwrap_or(crate::coordinator::kv_cache::BLOCK_SIZE);
-                let per_req = (n_draft + 2).div_ceil(bs).max(1);
+                let per_req = (commit + 1).div_ceil(bs).max(1);
                 if budget < per_req {
                     return None;
                 }
@@ -144,7 +142,7 @@ pub fn run_closed_loop(
     cfg: &EngineConfig,
     concurrency: usize,
     total: usize,
-    mut next_request: impl FnMut() -> RequestSpec,
+    mut next_request: impl FnMut() -> Request,
 ) -> Result<(Vec<RequestResult>, EngineMetrics)> {
     let mut cfgc = cfg.clone();
     cfgc.batch = concurrency;
@@ -173,21 +171,10 @@ pub fn run_closed_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::sampler::Sampling;
+    use crate::coordinator::request::SpecPolicy;
 
     fn cfg() -> EngineConfig {
-        EngineConfig {
-            target: "t".into(),
-            drafter: "d".into(),
-            k: 5,
-            batch: 4,
-            max_new_tokens: 32,
-            sampling: Sampling::Greedy,
-            tree: None,
-            tree_dynamic: None,
-            paged: None,
-            seed: 0,
-        }
+        EngineConfig::new("t", SpecPolicy::chain("d", 5), 4, 32)
     }
 
     #[test]
@@ -222,9 +209,10 @@ mod tests {
         use crate::coordinator::engine::PagedKvConfig;
         // K=5, block_size 4 => a minimal request needs ceil(7/4) = 2 blocks
         let paged = |num_blocks| {
-            let mut c = cfg();
-            c.paged =
-                Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(num_blocks) });
+            let c = cfg().with_paged(Some(PagedKvConfig {
+                block_size: Some(4),
+                num_blocks: Some(num_blocks),
+            }));
             Scheduler::new(c, vec![1, 2, 4])
         };
         // the refusal case: a 1-block budget cannot host ANY request — no
@@ -236,8 +224,8 @@ mod tests {
         assert_eq!(paged(64).pick_bucket(4), Some(4));
         assert_eq!(paged(64).pick_bucket(0), None);
         // unlimited (fully provisioned) budget: slot-only policy
-        let mut c = cfg();
-        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: None });
+        let c = cfg()
+            .with_paged(Some(PagedKvConfig { block_size: Some(4), num_blocks: None }));
         assert_eq!(Scheduler::new(c, vec![1, 2, 4]).pick_bucket(3), Some(2));
     }
 
@@ -246,10 +234,10 @@ mod tests {
         use crate::coordinator::engine::PagedKvConfig;
         use crate::masking::TreeTopology;
         // tree w:3,2,1,1,1 = 8 nodes -> minimal footprint ceil(10/4) = 3
-        // blocks, even though cfg.k (5) alone would suggest 2. A 2-block
-        // budget must refuse (every add_request would bail on capacity).
-        let mut c = cfg();
-        c.tree = Some(TreeTopology::from_widths(&[3, 2, 1, 1, 1]));
+        // blocks. A 2-block budget must refuse (every add_request would bail
+        // on capacity).
+        let tree = SpecPolicy::tree("d", TreeTopology::from_widths(&[3, 2, 1, 1, 1]));
+        let mut c = EngineConfig::new("t", tree, 4, 32);
         c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(2) });
         assert_eq!(Scheduler::new(c.clone(), vec![1, 2, 4]).pick_bucket(4), None);
         c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(7) });
@@ -259,13 +247,13 @@ mod tests {
     #[test]
     fn paged_bucket_charges_dynamic_trees_by_budget_not_envelope() {
         use crate::coordinator::engine::PagedKvConfig;
-        use crate::masking::DynamicTreeConfig;
+        use crate::masking::TreeTopology;
         // THE over-reservation regression: envelope w:4,4,2,2,1 has 13
         // nodes, but a 3-node budget commits at most 4 scratch positions.
         // block_size 4 => per-request floor ceil(5/4) = 2 blocks, NOT the
         // envelope's ceil(15/4) = 4.
-        let mut c = cfg();
-        c.tree_dynamic = Some(DynamicTreeConfig::parse("w:4,4,2,2,1", 3).unwrap());
+        let dynp = SpecPolicy::dynamic("d", TreeTopology::from_widths(&[4, 4, 2, 2, 1]), 3);
+        let mut c = EngineConfig::new("t", dynp, 4, 32);
         c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(5) });
         // 5 blocks at 2 per request host 2 concurrent requests: width 2.
         // Charging by the envelope (4 per request) would cap this at 1.
@@ -273,6 +261,33 @@ mod tests {
         // and a budget the envelope could never fit still admits: 3 blocks
         // host one 2-block request (envelope charging would refuse at < 4)
         c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(3) });
+        assert_eq!(Scheduler::new(c, vec![1, 2, 4]).pick_bucket(4), Some(1));
+    }
+
+    #[test]
+    fn paged_bucket_floor_uses_cheapest_allowed_policy() {
+        use crate::coordinator::engine::PagedKvConfig;
+        use crate::masking::TreeTopology;
+        // multi-policy allowlist: chain K=5 (commit 6) + dynamic budget 2
+        // (commit 3). The width pick floors at the CHEAPEST serveable
+        // footprint — ceil(4/4) = 1 block — so a tight budget still spins up
+        // an engine the small-budget requests can use.
+        let mut c = EngineConfig::new("t", SpecPolicy::chain("d", 5), 4, 32).with_policies(
+            vec![SpecPolicy::dynamic("d", TreeTopology::from_widths(&[4, 4, 2, 2, 1]), 2)],
+        );
+        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(1) });
+        // chain-only would refuse (needs 2 blocks); the dyn@2 policy fits
+        assert_eq!(Scheduler::new(c, vec![1, 2, 4]).pick_bucket(4), Some(1));
+
+        // same-EXEC-KEY budget variants must count too: dyn@8 default with a
+        // listed dyn@2 variant (identical executables, different charge) —
+        // the floor is the @2 footprint (ceil(4/4) = 1 block), because the
+        // engine's own per-request gate WOULD admit those requests. The
+        // exec-key dedup of allowed_policies() must not hide it.
+        let env = TreeTopology::from_widths(&[4, 4, 2, 2, 1]);
+        let mut c = EngineConfig::new("t", SpecPolicy::dynamic("d", env.clone(), 8), 4, 32)
+            .with_policies(vec![SpecPolicy::dynamic("d", env, 2)]);
+        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(1) });
         assert_eq!(Scheduler::new(c, vec![1, 2, 4]).pick_bucket(4), Some(1));
     }
 
@@ -286,12 +301,7 @@ mod tests {
     fn queue_accounting() {
         let mut s = Scheduler::new(cfg(), vec![1, 2, 4]);
         for i in 0..5 {
-            s.submit(RequestSpec {
-                id: i,
-                prompt: vec![1; 16],
-                max_new_tokens: 8,
-                arrival_s: 0.0,
-            });
+            s.submit(Request::new(i, vec![1; 16], 8));
         }
         assert_eq!(s.pending(), 5);
     }

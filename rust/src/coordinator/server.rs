@@ -16,11 +16,11 @@ use anyhow::{anyhow, Result};
 
 use super::engine::{EngineConfig, EngineCore, EngineEvent};
 use super::metrics::EngineMetrics;
-use super::request::{RequestResult, RequestSpec};
+use super::request::{Request, RequestResult};
 use crate::runtime::ModelRuntime;
 
 pub enum ServerMsg {
-    Submit(RequestSpec),
+    Submit(Request),
     /// Abort a queued or in-flight request by id.
     Abort(u64),
     /// Finish everything in flight/queued, then stop the worker.
@@ -49,7 +49,7 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    pub fn submit(&self, r: RequestSpec) {
+    pub fn submit(&self, r: Request) {
         let _ = self.tx.send(ServerMsg::Submit(r));
     }
 

@@ -15,13 +15,16 @@
 //!   finished requests are evicted immediately, and queued requests are
 //!   admitted into freed slots mid-flight via per-slot batch-1 prefill
 //!   spliced into the shared KV buffer (empty rows are masked, never padded
-//!   with fake requests). Speculation shape is a config choice: a linear
-//!   K-chain or a static draft tree verified in one pass against a
-//!   precomputed cross-node mask ([`masking::tree`]), with only the longest
-//!   accepted root path committed to the KV cache. A thin bucket scheduler
-//!   picks engine widths, a threaded server streams per-token events, and
-//!   the workload + mask/partition/memory substrates feed the bench
-//!   harnesses that regenerate every table and figure.
+//!   with fake requests). Speculation is per-REQUEST data: each request
+//!   resolves to a [`coordinator::SpecPolicy`] — a manifest drafter plus a
+//!   linear K-chain, a static draft tree verified in one pass against a
+//!   precomputed cross-node mask ([`masking::tree`]), or a dynamic
+//!   confidence-selected subtree of a max-shape envelope
+//!   ([`masking::dynamic`]) — and `step()` groups slots by policy, one
+//!   executable-pass per bucket over shared target weights. A thin bucket
+//!   scheduler picks engine widths, a threaded server streams per-token
+//!   events, and the workload + mask/partition/memory substrates feed the
+//!   bench harnesses that regenerate every table and figure.
 
 pub mod config;
 pub mod coordinator;

@@ -5,15 +5,22 @@
 //!   selftest                          runtime smoke test (loads artifacts)
 //!   serve      --target --method --k --concurrency --requests
 //!              [--dataset --max-new --quiet]   (streams engine step events)
+//!              [--drafters a,b,..]    (serve several drafters from ONE
+//!                                      engine: requests round-robin across
+//!                                      the list; the first is the default)
+//!              [--policy chain:K|tree:TOPO|dyn:ENV@B]
+//!                                     (speculation shape for every listed
+//!                                      drafter; default chain:K)
 //!              [--paged [--kv-blocks N]]       (block-paged KV cache;
 //!                                      --kv-blocks caps the block budget)
 //!              [--tree-dyn [--tree-envelope w:..] [--tree-budget N]]
-//!                                     (dynamic confidence-driven tree
-//!                                      speculation inside a max-shape
-//!                                      envelope)
+//!                                     (legacy spelling of --policy dyn:..)
 //!   eval-acceptance --drafter --dataset [--k --requests --max-new]
 //!   bench-otps --target --method --k --concurrency
 //!              [--dataset --mixed --profile]
+//!              [--sweep-drafters]     (one run per serveable drafter of the
+//!                                      target, shared runtime/weights, and
+//!                                      a comparison table)
 //!              [--paged [--kv-blocks N]]
 //!              [--tree [--tree-topo chain:K|w:w1,w2,..]]
 //!                                     (--tree runs a chain-vs-tree pair on
@@ -33,7 +40,8 @@ use anyhow::{anyhow, Result};
 use p_eagle::config::Manifest;
 use p_eagle::coordinator::server::spawn;
 use p_eagle::coordinator::{
-    paged_from_env, tree_dyn_from_env, EngineConfig, PagedKvConfig, Sampling, ServerEvent,
+    paged_from_env, tree_dyn_from_env, EngineConfig, EngineMetrics, PagedKvConfig, ServerEvent,
+    SpecPolicy,
 };
 use p_eagle::masking::{DynamicTreeConfig, TreeTopology};
 use p_eagle::memmodel;
@@ -88,6 +96,26 @@ fn tree_dyn_opts(args: &Args, default_budget: usize) -> Result<Option<DynamicTre
     Ok(Some(cfg))
 }
 
+/// Per-drafter metrics breakdown (multi-policy engines; a single row for a
+/// homogeneous batch): AL, per-depth acceptance, bucket passes.
+fn print_policy_breakdown(metrics: &EngineMetrics) {
+    if metrics.per_policy.len() <= 1 {
+        return;
+    }
+    println!("per-drafter breakdown:");
+    for (name, pm) in &metrics.per_policy {
+        let rates: Vec<String> =
+            pm.depth_acceptance_rates().iter().map(|r| format!("{r:.2}")).collect();
+        println!(
+            "  {name:<18} AL {:.2}  iters {}  passes {}  accepted-by-depth [{}]",
+            pm.acceptance_length(),
+            pm.iterations,
+            pm.steps,
+            rates.join(" "),
+        );
+    }
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand() {
@@ -132,7 +160,14 @@ fn info(args: &Args) -> Result<()> {
     }
     println!("drafters ({}):", m.drafters.len());
     for (n, d) in &m.drafters {
-        println!("  {n}: kind={} L={} hidden={} target={}", d.kind, d.n_layers, d.hidden_mode, d.target);
+        println!(
+            "  {n}: kind={} L={} hidden={} target={} modes=[{}]",
+            d.kind,
+            d.n_layers,
+            d.hidden_mode,
+            d.target,
+            d.modes.join(",")
+        );
     }
     println!("executables: {}", m.executables.len());
     Ok(())
@@ -141,12 +176,16 @@ fn info(args: &Args) -> Result<()> {
 /// Drive the threaded streaming server: submit `requests` and print events
 /// as they arrive from the step loop (admissions, per-step token chunks,
 /// finishes), then shut down and report occupancy/TTFT/latency.
+///
+/// With `--drafters a,b,..` one engine serves every listed drafter:
+/// requests are assigned round-robin across the list (each with the
+/// `--policy` speculation shape), so a single batch concurrently mixes
+/// drafters — the multi-drafter manifest in action.
 fn serve(args: &Args) -> Result<()> {
     let root = artifacts_root(args);
     let manifest = Manifest::load(&root)?;
     let target = args.get_or("target", "target-m");
     let method = args.get_or("method", "pe4");
-    let drafter = manifest.serving_drafter(&target, &method);
     let k = args.usize_or("k", manifest.default_k);
     let conc = args.usize_or("concurrency", 2);
     let total = args.usize_or("requests", 8);
@@ -154,33 +193,44 @@ fn serve(args: &Args) -> Result<()> {
     let dataset = args.get_or("dataset", "mtbench");
     let quiet = args.flag("quiet");
 
-    let mut arr = report::closed_loop_arrivals(&manifest, &dataset, max_new, 7)?;
+    let drafters: Vec<String> = args
+        .get("drafters")
+        .map(|s| s.split(',').map(|d| d.trim().to_string()).filter(|d| !d.is_empty()).collect())
+        .unwrap_or_else(|| vec![manifest.serving_drafter(&target, &method)]);
+    anyhow::ensure!(!drafters.is_empty(), "--drafters needs at least one name");
 
+    // the speculation shape: --policy wins; otherwise the legacy --tree-dyn
+    // family; otherwise chain at --k
     let tree_dynamic = tree_dyn_opts(args, DynamicTreeConfig::DEFAULT_NODE_BUDGET)?;
-    if let Some(d) = &tree_dynamic {
-        println!(
-            "dynamic tree speculation: envelope {} ({} nodes), budget {} nodes/step",
-            d.envelope.id(),
-            d.envelope.len(),
-            d.active_nodes()
-        );
-    }
-    let cfg = EngineConfig {
-        target: target.clone(),
-        drafter,
-        k,
-        batch: conc,
-        max_new_tokens: max_new,
-        sampling: Sampling::Greedy,
-        tree: None,
-        tree_dynamic,
-        paged: paged_opts(args),
-        seed: 7,
+    let mode_spec = match args.get("policy") {
+        Some(s) => s.to_string(),
+        None => match &tree_dynamic {
+            Some(d) => format!("dyn:{}@{}", d.envelope.spec_string(), d.node_budget),
+            None => format!("chain:{k}"),
+        },
     };
+    let policies: Vec<SpecPolicy> = drafters
+        .iter()
+        .map(|d| SpecPolicy::parse(d, &mode_spec).map_err(|e| anyhow!(e)))
+        .collect::<Result<_>>()?;
+    for p in &policies {
+        println!("serving policy: {}", p.id());
+    }
+
+    let mut arr = report::closed_loop_arrivals(&manifest, &dataset, max_new, 7)?;
+    let cfg = EngineConfig::new(&target, policies[0].clone(), conc, max_new)
+        .with_policies(policies[1..].to_vec())
+        .with_seed(7)
+        .with_paged(paged_opts(args));
     // ready/error handshake: a bad artifacts root fails here, not in a log
     let handle = spawn(root, cfg)?;
-    for _ in 0..total {
-        handle.submit(arr.next());
+    for i in 0..total {
+        let mut req = arr.next();
+        if policies.len() > 1 {
+            // round-robin: one batch concurrently serves every drafter
+            req = req.with_policy(policies[i % policies.len()].clone());
+        }
+        handle.submit(req);
     }
     let mut finished = 0usize;
     while finished < total {
@@ -216,7 +266,8 @@ fn serve(args: &Args) -> Result<()> {
     }
     let metrics = handle.shutdown();
     println!(
-        "served {total} requests  target={target} method={method} K={k} C={conc} dataset={dataset}"
+        "served {total} requests  target={target} drafters={} C={conc} dataset={dataset}",
+        drafters.join(",")
     );
     println!(
         "OTPS {:.0}  AL {:.2}  occupancy {:.2}  p50 TTFT {:?}  p50 latency {:?}  p99 latency {:?}",
@@ -227,6 +278,7 @@ fn serve(args: &Args) -> Result<()> {
         metrics.latency_quantile(0.5),
         metrics.latency_quantile(0.99),
     );
+    print_policy_breakdown(&metrics);
     println!("{}", metrics.summary());
     Ok(())
 }
@@ -262,6 +314,33 @@ fn bench_otps(args: &Args) -> Result<()> {
     // --mixed: per-request generation budgets from the Fig.1 length model —
     // the head-of-line workload the stepped engine exists for
     let mixed = args.flag("mixed");
+
+    // --sweep-drafters: one run per serveable drafter of the target,
+    // in-process (ONE runtime: shared target weights, shared executable
+    // registry), printed as a comparison table on the same workload seed.
+    if args.flag("sweep-drafters") {
+        let runs = report::sweep_drafters(
+            &mut mr, &target, &dataset, k, conc, total, max_new, 11, mixed,
+            paged_opts(args),
+        )?;
+        println!(
+            "drafter sweep [{target} K={k} C={conc} {dataset}{}] — {} drafters, shared runtime",
+            if mixed { " mixed" } else { "" },
+            runs.len(),
+        );
+        println!("{:<22} {:>8} {:>6} {:>6} {:>8}", "drafter", "OTPS", "AL", "occ", "iters");
+        for run in &runs {
+            println!(
+                "{:<22} {:>8.0} {:>6.2} {:>6.2} {:>8}",
+                run.drafter,
+                run.otps,
+                run.acceptance_length,
+                run.mean_occupancy,
+                run.metrics.iterations,
+            );
+        }
+        return Ok(());
+    }
 
     // --tree: chain / static-tree / (with --tree-dyn) dynamic-tree runs on
     // the same workload seed. The static topology defaults to the serving
@@ -384,6 +463,7 @@ fn bench_otps(args: &Args) -> Result<()> {
             run.metrics.block_rewires,
         );
     }
+    print_policy_breakdown(&run.metrics);
     if args.flag("profile") {
         let m = &run.metrics;
         println!(

@@ -148,6 +148,21 @@ impl TreeTopology {
         }
     }
 
+    /// The [`parse`](Self::parse)-syntax spelling of this topology
+    /// (`chain:K` / `w:w1,w2,..`) — the inverse of [`parse`](Self::parse),
+    /// round-trip tested. Used wherever a topology must be re-embedded in a
+    /// spec (e.g. `SpecPolicy` mode strings).
+    pub fn spec_string(&self) -> String {
+        match self.is_chain() {
+            Some(k) => format!("chain:{k}"),
+            None => {
+                let parts: Vec<String> =
+                    self.widths.iter().map(|w| w.to_string()).collect();
+                format!("w:{}", parts.join(","))
+            }
+        }
+    }
+
     /// Number of draft nodes N (the verify chunk is N + 1 wide).
     pub fn len(&self) -> usize {
         self.parent.len()
@@ -344,6 +359,17 @@ mod tests {
         assert!(TreeTopology::parse("chain:0").is_err());
         assert!(TreeTopology::parse("w:2,0").is_err());
         assert!(TreeTopology::parse("ring:4").is_err());
+    }
+
+    #[test]
+    fn spec_string_is_the_parse_inverse() {
+        for spec in ["chain:5", "w:3,2,1,1,1", "w:4,4,2,2,1"] {
+            let t = TreeTopology::parse(spec).unwrap();
+            assert_eq!(TreeTopology::parse(&t.spec_string()).unwrap(), t, "{spec}");
+        }
+        assert_eq!(TreeTopology::chain(3).spec_string(), "chain:3");
+        // all-1s profiles normalize to the chain spelling, like id()
+        assert_eq!(TreeTopology::parse("w:1,1").unwrap().spec_string(), "chain:2");
     }
 
     #[test]

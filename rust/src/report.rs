@@ -8,12 +8,30 @@ use anyhow::{anyhow, Result};
 use crate::config::Manifest;
 use crate::coordinator::{
     run_closed_loop, EngineConfig, EngineCore, EngineMetrics, PagedKvConfig, RequestResult,
-    Sampling,
+    SpecPolicy,
 };
 use crate::masking::{DynamicTreeConfig, TreeTopology};
 use crate::runtime::ModelRuntime;
 use crate::util::rng::Rng;
 use crate::workload::{corpus::load_eval_prompts, ArrivalProcess, LengthModel};
+
+/// Build the [`SpecPolicy`] one legacy (engine-wide) knob set describes:
+/// `tree_dynamic` wins over `tree` wins over the chain depth `k` — the same
+/// precedence the old `EngineConfig` fields had. The single place the
+/// report/bench surface maps its historical arguments onto the per-request
+/// policy API.
+pub fn legacy_policy(
+    drafter: &str,
+    k: usize,
+    tree: Option<&TreeTopology>,
+    tree_dynamic: Option<&DynamicTreeConfig>,
+) -> SpecPolicy {
+    match (tree_dynamic, tree) {
+        (Some(d), _) => SpecPolicy::from_dynamic_config(drafter, d),
+        (None, Some(t)) => SpecPolicy::tree(drafter, t.clone()),
+        (None, None) => SpecPolicy::chain(drafter, k),
+    }
+}
 
 /// Closed-loop arrival stream for one manifest dataset, with prompts sized
 /// to satisfy engine admission (>= ctx_window; 16 keeps the paper's fixed
@@ -63,18 +81,8 @@ pub fn eval_acceptance(
     let pool = load_eval_prompts(&mr.manifest.abs(&prompts_rel))?;
     let reqs = ArrivalProcess::from_pool(&pool, n_requests, max_new);
 
-    let cfg = EngineConfig {
-        target: info.target.clone(),
-        drafter: drafter.to_string(),
-        k,
-        batch: 1,
-        max_new_tokens: max_new,
-        sampling: Sampling::Greedy,
-        tree: None,
-        tree_dynamic: None,
-        paged: None,
-        seed: 42,
-    };
+    let cfg = EngineConfig::new(&info.target, SpecPolicy::chain(drafter, k), 1, max_new)
+        .with_seed(42);
     let mut queue = reqs.into_iter();
     let (results, _m) = run_closed_loop(mr, &cfg, 1, n_requests, || queue.next().unwrap())?;
     let (mut acc, mut iters) = (0usize, 0usize);
@@ -139,18 +147,10 @@ pub fn bench_otps(
     let mut arr = closed_loop_arrivals(&mr.manifest, dataset, max_new, seed)?;
     let lens = LengthModel::testbed(max_new.max(8));
     let mut lrng = Rng::new(seed ^ 0x1E46);
-    let cfg = EngineConfig {
-        target: info.target.clone(),
-        drafter: drafter.to_string(),
-        k,
-        batch: concurrency,
-        max_new_tokens: max_new,
-        sampling: Sampling::Greedy,
-        tree: tree.cloned(),
-        tree_dynamic: tree_dynamic.cloned(),
-        paged,
-        seed,
-    };
+    let policy = legacy_policy(drafter, k, tree, tree_dynamic);
+    let cfg = EngineConfig::new(&info.target, policy, concurrency, max_new)
+        .with_seed(seed)
+        .with_paged(paged);
     // warmup: compile/load the executables + weights outside the timed loop
     // (one throwaway 2-token request, like the paper's benchmark warmup)
     {
@@ -220,6 +220,58 @@ pub fn compare_chain_tree(
         None => None,
     };
     Ok((chain, treed, dyned))
+}
+
+/// Names of every drafter serveable for `target` at `(batch, k)` chain
+/// speculation: the manifest carries a draft executable at that shape.
+/// (Snapshot / ablation drafters lowered only at batch 1 drop out at wider
+/// engine widths — the probe is the single source of "serveable".)
+pub fn serveable_drafters(mr: &ModelRuntime, target: &str, batch: usize, k: usize) -> Vec<String> {
+    mr.manifest
+        .drafters
+        .values()
+        .filter(|d| d.target == target)
+        .filter(|d| {
+            mr.manifest
+                .find_exec("draft", None, Some(&d.name), Some(batch), Some(k))
+                .is_ok()
+        })
+        .map(|d| d.name.clone())
+        .collect()
+}
+
+/// `bench-otps --sweep-drafters`: one closed-loop OTPS run PER serveable
+/// drafter of `target`, in-process — one `ModelRuntime` serves every run,
+/// so target weights upload once and each drafter's executables join the
+/// shared registry (the multi-drafter manifest in action). Identical
+/// workload seed per run => the rows are directly comparable.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_drafters(
+    mr: &mut ModelRuntime,
+    target: &str,
+    dataset: &str,
+    k: usize,
+    concurrency: usize,
+    total_requests: usize,
+    max_new: usize,
+    seed: u64,
+    mixed_lengths: bool,
+    paged: Option<PagedKvConfig>,
+) -> Result<Vec<OtpsRun>> {
+    let names = serveable_drafters(mr, target, concurrency, k);
+    if names.is_empty() {
+        return Err(anyhow!(
+            "no serveable drafters for target {target} at batch {concurrency}, k {k}"
+        ));
+    }
+    let mut out = Vec::with_capacity(names.len());
+    for name in names {
+        out.push(bench_otps(
+            mr, &name, dataset, k, concurrency, total_requests, max_new, seed,
+            mixed_lengths, None, None, paged,
+        )?);
+    }
+    Ok(out)
 }
 
 /// Figure 1: sequence-length distribution report (paper-scale quantiles +

@@ -14,5 +14,5 @@ pub mod weights;
 
 pub use executable::{Arg, Runtime};
 pub use kv_blocks::{apply_path_copies, plan_path_commit, splice_kv_row_blocks, PathCommitPlan};
-pub use models::{compact_kv_path, splice_kv_row, DraftExec, ModelRuntime, TargetExec};
+pub use models::{compact_kv_path, splice_kv_row, DraftExec, ModelRuntime, PolicyExecs, TargetExec};
 pub use tensors::{HostData, HostTensor};

@@ -4,6 +4,15 @@
 //! every executable that uses them; KV caches round-trip as device buffers
 //! between verify calls.
 //!
+//! The registry is **policy-keyed** for the multi-drafter engine:
+//! [`ModelRuntime::ensure_policy_execs`] resolves one
+//! [`SpecPolicy`](crate::coordinator::request::SpecPolicy) to its
+//! verify/draft executable pair, loading on first use and caching per
+//! `(exec key, batch, paged)` — so one engine (or several across a
+//! process) serves many drafters and speculation shapes over one uploaded
+//! copy of the target weights. [`ModelRuntime::validate_policy`] gates
+//! policies on the manifest's per-drafter capability record (`modes`).
+//!
 //! Tree executables (`verify-tree` / `draft-tree` manifest kinds) bake a
 //! static [`TreeTopology`](crate::masking::TreeTopology) into the lowered
 //! HLO; the cross-node ancestor mask is NOT baked — the engine precomputes
@@ -28,12 +37,13 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::executable::{Arg, Runtime};
 use super::tensors::HostTensor;
 use super::weights::{check_order, read_pew, TensorData};
 use crate::config::Manifest;
+use crate::coordinator::request::SpecPolicy;
 use crate::masking::TreeTopology;
 
 pub struct ModelRuntime {
@@ -41,6 +51,22 @@ pub struct ModelRuntime {
     pub manifest: Manifest,
     /// weight-set name (target or drafter) -> uploaded parameter buffers
     weights: HashMap<String, Vec<xla::PjRtBuffer>>,
+    /// policy-keyed executable registry: (SpecPolicy::exec_key, batch,
+    /// paged) -> the loaded verify/draft executable pair. Entries are
+    /// created on first use ([`Self::ensure_policy_execs`]); target weights
+    /// are uploaded once per model and shared across every entry.
+    policy_execs: HashMap<(String, usize, bool), PolicyExecs>,
+}
+
+/// The executable pair one policy bucket steps with: the target-side verify
+/// (chain / tree / dynamic, dense or paged) and the drafter executable
+/// (chain, tree, or scored-tree). Handed out by
+/// [`ModelRuntime::ensure_policy_execs`]; cheap to clone (name + shape
+/// metadata only — the compiled executables live in the runtime registry).
+#[derive(Clone, Debug)]
+pub struct PolicyExecs {
+    pub te: TargetExec,
+    pub de: DraftExec,
 }
 
 /// Outputs of a target prefill call.
@@ -93,7 +119,136 @@ impl ModelRuntime {
     pub fn load(artifacts_root: impl Into<PathBuf>) -> Result<ModelRuntime> {
         let manifest = Manifest::load(artifacts_root.into())?;
         let rt = Runtime::cpu()?;
-        Ok(ModelRuntime { rt, manifest, weights: HashMap::new() })
+        Ok(ModelRuntime {
+            rt,
+            manifest,
+            weights: HashMap::new(),
+            policy_execs: HashMap::new(),
+        })
+    }
+
+    /// Validate a [`SpecPolicy`] against the manifest WITHOUT loading
+    /// anything: the drafter must exist, serve `target` (all of an engine's
+    /// policies share one target's weights and KV cache), and have been
+    /// lowered with the policy's speculation mode (the per-drafter
+    /// capability record python `aot.py` writes). Errors are descriptive —
+    /// this is the gate that turns "no such executable" into "that drafter
+    /// cannot tree-draft".
+    pub fn validate_policy(&self, target: &str, policy: &SpecPolicy) -> Result<()> {
+        policy.validate().map_err(|e| anyhow::anyhow!(e))?;
+        let d = self.manifest.drafter(policy.drafter())?;
+        if d.target != target {
+            bail!(
+                "policy {}: drafter {} serves target {} but the engine serves {target} \
+                 (one engine shares one target's weights and KV cache)",
+                policy.id(),
+                d.name,
+                d.target
+            );
+        }
+        if !d.supports(policy.mode_name()) {
+            bail!(
+                "policy {}: drafter {} (kind {}) does not support {} speculation \
+                 (capabilities: [{}]) — pick a parallel drafter or rebuild artifacts \
+                 with the mode lowered (python/compile/configs.py drafter_modes)",
+                policy.id(),
+                d.name,
+                d.kind,
+                policy.mode_name(),
+                d.modes.join(", ")
+            );
+        }
+        Ok(())
+    }
+
+    /// Cheap existence probe: would [`ensure_policy_execs`](Self::ensure_policy_execs)
+    /// find lowered executables for this policy at this width? Pure manifest
+    /// lookups — nothing is read, compiled, or uploaded. The engine probes
+    /// every allowlisted policy at construction so a policy lowered at the
+    /// wrong batch width fails at startup with the descriptive
+    /// `find_exec`/`find_exec_tree` error instead of killing the engine
+    /// mid-flight when its first request arrives.
+    pub fn probe_policy_execs(
+        &self,
+        target: &str,
+        policy: &SpecPolicy,
+        batch: usize,
+        paged: bool,
+    ) -> Result<()> {
+        self.validate_policy(target, policy)?;
+        let m = &self.manifest;
+        match policy {
+            SpecPolicy::Chain { drafter, k } => {
+                let kind = if paged { "verify-paged" } else { "verify" };
+                m.find_exec(kind, Some(target), None, Some(batch), Some(*k))?;
+                m.find_exec("draft", None, Some(drafter), Some(batch), Some(*k))?;
+            }
+            SpecPolicy::Tree { drafter, topology } => {
+                let id = topology.id();
+                let kind = if paged { "verify-tree-paged" } else { "verify-tree" };
+                m.find_exec_tree(kind, Some(target), None, Some(batch), &id)?;
+                m.find_exec_tree("draft-tree", None, Some(drafter), Some(batch), &id)?;
+            }
+            SpecPolicy::Dynamic { drafter, envelope, .. } => {
+                let id = envelope.id();
+                let kind = if paged { "verify-tree-dyn-paged" } else { "verify-tree-dyn" };
+                m.find_exec_tree(kind, Some(target), None, Some(batch), &id)?;
+                m.find_exec_tree("draft-tree-logp", None, Some(drafter), Some(batch), &id)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load (or fetch from the registry) the executable pair for one policy
+    /// at one engine width. First use per (policy executables, batch, paged)
+    /// compiles/loads the verify + draft executables; every later call is a
+    /// map lookup. Policies differing only in the `Dynamic` node budget
+    /// share an entry ([`SpecPolicy::exec_key`] excludes the budget — it is
+    /// runtime data). Target weights are shared across all entries of the
+    /// same target, drafter weights across all entries of the same drafter.
+    pub fn ensure_policy_execs(
+        &mut self,
+        target: &str,
+        policy: &SpecPolicy,
+        batch: usize,
+        paged: bool,
+    ) -> Result<PolicyExecs> {
+        let key = (policy.exec_key(), batch, paged);
+        if let Some(pe) = self.policy_execs.get(&key) {
+            return Ok(pe.clone());
+        }
+        self.validate_policy(target, policy)?;
+        let pe = match policy {
+            SpecPolicy::Chain { drafter, k } => {
+                let te = if paged {
+                    self.ensure_verify_paged(target, batch, *k)?
+                } else {
+                    self.ensure_verify(target, batch, *k)?
+                };
+                let de = self.ensure_drafter(drafter, batch, *k)?;
+                PolicyExecs { te, de }
+            }
+            SpecPolicy::Tree { drafter, topology } => {
+                let te = if paged {
+                    self.ensure_verify_tree_paged(target, batch, topology)?
+                } else {
+                    self.ensure_verify_tree(target, batch, topology)?
+                };
+                let de = self.ensure_drafter_tree(drafter, batch, topology)?;
+                PolicyExecs { te, de }
+            }
+            SpecPolicy::Dynamic { drafter, envelope, .. } => {
+                let te = if paged {
+                    self.ensure_verify_tree_dyn_paged(target, batch, envelope)?
+                } else {
+                    self.ensure_verify_tree_dyn(target, batch, envelope)?
+                };
+                let de = self.ensure_drafter_tree_scored(drafter, batch, envelope)?;
+                PolicyExecs { te, de }
+            }
+        };
+        self.policy_execs.insert(key, pe.clone());
+        Ok(pe)
     }
 
     /// Upload a weight set (target or drafter) once; validates the file's

@@ -4,18 +4,16 @@
 //! driver keeps exactly C requests in flight (each completion immediately
 //! admits the next), which is how the paper's vLLM benchmark client behaves.
 //! An open-loop Poisson mode exists for latency-under-load experiments.
+//!
+//! Generated [`Request`]s carry greedy [`SamplingParams`] and no policy
+//! (`policy: None` → the engine default); callers that want per-request
+//! policies attach them with [`Request::with_policy`] — see
+//! `report::sweep_drafters` and the `serve --drafters` round-robin.
+
+pub use crate::coordinator::request::{Request, RequestSpec, SamplingParams, SpecPolicy};
 
 use super::corpus::PhraseRegime;
 use crate::util::rng::Rng;
-
-#[derive(Clone, Debug)]
-pub struct RequestSpec {
-    pub id: u64,
-    pub prompt: Vec<i32>,
-    pub max_new_tokens: usize,
-    /// arrival offset in seconds (0 for closed-loop)
-    pub arrival_s: f64,
-}
 
 pub struct ArrivalProcess {
     pub regime: PhraseRegime,
@@ -44,33 +42,28 @@ impl ArrivalProcess {
     }
 
     /// Next request, immediately available (closed loop).
-    pub fn next(&mut self) -> RequestSpec {
+    pub fn next(&mut self) -> Request {
         let id = self.next_id;
         self.next_id += 1;
-        RequestSpec {
+        Request::new(
             id,
-            prompt: self.regime.sample_seq(self.prompt_len, &mut self.rng),
-            max_new_tokens: self.max_new_tokens,
-            arrival_s: self.clock_s,
-        }
+            self.regime.sample_seq(self.prompt_len, &mut self.rng),
+            self.max_new_tokens,
+        )
+        .with_arrival(self.clock_s)
     }
 
     /// Next request under Poisson arrivals at `rate` req/s (open loop).
-    pub fn next_poisson(&mut self, rate: f64) -> RequestSpec {
+    pub fn next_poisson(&mut self, rate: f64) -> Request {
         self.clock_s += self.rng.exponential(rate);
         self.next()
     }
 
     /// Fixed prompt pool variant used by acceptance evals (prompts come from
     /// the exported OOD eval sets instead of fresh sampling).
-    pub fn from_pool(pool: &[Vec<i32>], count: usize, max_new: usize) -> Vec<RequestSpec> {
+    pub fn from_pool(pool: &[Vec<i32>], count: usize, max_new: usize) -> Vec<Request> {
         (0..count)
-            .map(|i| RequestSpec {
-                id: i as u64,
-                prompt: pool[i % pool.len()].clone(),
-                max_new_tokens: max_new,
-                arrival_s: 0.0,
-            })
+            .map(|i| Request::new(i as u64, pool[i % pool.len()].clone(), max_new))
             .collect()
     }
 }
@@ -96,6 +89,8 @@ mod tests {
             assert_eq!(r.id, i);
             assert_eq!(r.prompt.len(), 12);
             assert_eq!(r.max_new_tokens, 32);
+            assert!(r.policy.is_none(), "generated requests use the engine default");
+            assert_eq!(r.sampling, SamplingParams::greedy());
         }
     }
 

@@ -7,6 +7,6 @@ pub mod arrivals;
 pub mod corpus;
 pub mod lengths;
 
-pub use arrivals::{ArrivalProcess, RequestSpec};
+pub use arrivals::{ArrivalProcess, Request, RequestSpec};
 pub use corpus::PhraseRegime;
 pub use lengths::LengthModel;

@@ -9,11 +9,36 @@
 //! stayed live.
 
 use p_eagle::coordinator::{
-    paged_from_env, run_closed_loop, tree_dyn_from_env, EngineConfig, EngineCore,
-    EngineEvent, FinishReason, Sampling,
+    multi_drafter_from_env, paged_from_env, run_closed_loop, tree_dyn_from_env, EngineConfig,
+    EngineCore, EngineEvent, FinishReason, Request, SamplingParams, SpecPolicy,
 };
+use p_eagle::masking::TreeTopology;
 use p_eagle::runtime::{HostTensor, ModelRuntime};
-use p_eagle::workload::RequestSpec;
+
+/// Default policy for the env-driven CI modes: PEAGLE_TREE_DYN=1 flips the
+/// suite into dynamic tree speculation, otherwise chain at `k`.
+fn default_policy(drafter: &str, k: usize) -> SpecPolicy {
+    match tree_dyn_from_env() {
+        Some(d) => SpecPolicy::from_dynamic_config(drafter, &d),
+        None => SpecPolicy::chain(drafter, k),
+    }
+}
+
+/// PEAGLE_MULTI_DRAFTER=1 (the CI rust-multidrafter job) widens every
+/// engine's allowlist with a second drafter + a second speculation mode:
+/// the whole suite then runs with the multi-policy surface active (widened
+/// write width, per-slot chunk accounting) while requests still use the
+/// default policy — output must stay byte-identical.
+fn env_extra_policies() -> Vec<SpecPolicy> {
+    if multi_drafter_from_env() {
+        vec![
+            SpecPolicy::chain("target-m-ar", 5),
+            SpecPolicy::tree("target-m-pe4", TreeTopology::from_widths(&[3, 2, 1, 1, 1])),
+        ]
+    } else {
+        Vec::new()
+    }
+}
 
 fn artifacts() -> Option<String> {
     let root = std::env::var("PEAGLE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -88,22 +113,14 @@ fn reference_greedy(
 
 fn engine_greedy(mr: &mut ModelRuntime, drafter: &str, prompt: &[i32], max_new: usize) -> Vec<i32> {
     let target = mr.manifest.drafter(drafter).unwrap().target.clone();
-    let cfg = EngineConfig {
-        target,
-        drafter: drafter.into(),
-        k: mr.manifest.default_k,
-        batch: 1,
-        max_new_tokens: max_new,
-        sampling: Sampling::Greedy,
-        tree: None,
-        // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
-        // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache
-        tree_dynamic: tree_dyn_from_env(),
-        paged: paged_from_env(),
-        seed: 5,
-    };
-    let spec = RequestSpec { id: 0, prompt: prompt.to_vec(), max_new_tokens: max_new, arrival_s: 0.0 };
-    let mut given = Some(spec);
+    // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
+    // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache;
+    // PEAGLE_MULTI_DRAFTER=1 widens the allowlist (requests stay default)
+    let cfg = EngineConfig::new(target, default_policy(drafter, mr.manifest.default_k), 1, max_new)
+        .with_policies(env_extra_policies())
+        .with_seed(5)
+        .with_paged(paged_from_env());
+    let mut given = Some(Request::new(0, prompt.to_vec(), max_new));
     let (results, _) = run_closed_loop(mr, &cfg, 1, 1, || given.take().unwrap()).unwrap();
     results.into_iter().next().unwrap().tokens
 }
@@ -159,25 +176,9 @@ fn batched_core_matches_single() {
     let solo1 = engine_greedy(&mut mr, "target-m-pe4", &p1, 24);
     let solo2 = engine_greedy(&mut mr, "target-m-pe4", &p2, 24);
 
-    let cfg = EngineConfig {
-        target: "target-m".into(),
-        drafter: "target-m-pe4".into(),
-        k: 5,
-        batch: 2,
-        max_new_tokens: 24,
-        sampling: Sampling::Greedy,
-        tree: None,
-        // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
-        // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache
-        tree_dynamic: tree_dyn_from_env(),
-        paged: paged_from_env(),
-        seed: 5,
-    };
-    let mut reqs = vec![
-        RequestSpec { id: 0, prompt: p1, max_new_tokens: 24, arrival_s: 0.0 },
-        RequestSpec { id: 1, prompt: p2, max_new_tokens: 24, arrival_s: 0.0 },
-    ]
-    .into_iter();
+    let cfg = core_cfg(2, 24);
+    let mut reqs =
+        vec![Request::new(0, p1, 24), Request::new(1, p2, 24)].into_iter();
     let (mut results, _) = run_closed_loop(&mut mr, &cfg, 2, 2, || reqs.next().unwrap()).unwrap();
     results.sort_by_key(|r| r.id);
     assert_eq!(results[0].tokens, solo1);
@@ -185,24 +186,17 @@ fn batched_core_matches_single() {
 }
 
 fn core_cfg(batch: usize, max_new: usize) -> EngineConfig {
-    EngineConfig {
-        target: "target-m".into(),
-        drafter: "target-m-pe4".into(),
-        k: 5,
-        batch,
-        max_new_tokens: max_new,
-        sampling: Sampling::Greedy,
-        tree: None,
-        // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
-        // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache
-        tree_dynamic: tree_dyn_from_env(),
-        paged: paged_from_env(),
-        seed: 5,
-    }
+    // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
+    // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache;
+    // PEAGLE_MULTI_DRAFTER=1 widens the allowlist (requests stay default)
+    EngineConfig::new("target-m", default_policy("target-m-pe4", 5), batch, max_new)
+        .with_policies(env_extra_policies())
+        .with_seed(5)
+        .with_paged(paged_from_env())
 }
 
-fn spec(id: u64, prompt: &[i32], max_new: usize) -> RequestSpec {
-    RequestSpec { id, prompt: prompt.to_vec(), max_new_tokens: max_new, arrival_s: 0.0 }
+fn spec(id: u64, prompt: &[i32], max_new: usize) -> Request {
+    Request::new(id, prompt.to_vec(), max_new)
 }
 
 #[test]
@@ -288,10 +282,10 @@ fn single_request_deterministic_vs_seed() {
     let root = require_artifacts!();
     let mut mr = ModelRuntime::load(&root).unwrap();
     let prompt = test_prompt(&mr, 61);
-    for sampling in [Sampling::Greedy, Sampling::Temperature(0.8)] {
+    for sampling in [SamplingParams::greedy(), SamplingParams::temperature(0.8, 13)] {
         let mut run = |mr: &mut ModelRuntime| {
-            let cfg = EngineConfig { sampling, ..core_cfg(1, 24) };
-            let mut g = Some(spec(0, &prompt, 24));
+            let cfg = core_cfg(1, 24);
+            let mut g = Some(spec(0, &prompt, 24).with_sampling(sampling));
             let (results, _) =
                 run_closed_loop(mr, &cfg, 1, 1, || g.take().unwrap()).unwrap();
             results.into_iter().next().unwrap().tokens
@@ -359,22 +353,8 @@ fn acceptance_length_in_valid_range() {
     let root = require_artifacts!();
     let mut mr = ModelRuntime::load(&root).unwrap();
     let prompt = test_prompt(&mr, 21);
-    let cfg = EngineConfig {
-        target: "target-m".into(),
-        drafter: "target-m-pe4".into(),
-        k: 5,
-        batch: 1,
-        max_new_tokens: 40,
-        sampling: Sampling::Greedy,
-        tree: None,
-        // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
-        // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache
-        tree_dynamic: tree_dyn_from_env(),
-        paged: paged_from_env(),
-        seed: 5,
-    };
-    let spec = RequestSpec { id: 0, prompt, max_new_tokens: 40, arrival_s: 0.0 };
-    let mut given = Some(spec);
+    let cfg = core_cfg(1, 40);
+    let mut given = Some(Request::new(0, prompt, 40));
     let (results, metrics) = run_closed_loop(&mut mr, &cfg, 1, 1, || given.take().unwrap()).unwrap();
     let al = results[0].acceptance_length();
     assert!(al >= 1.0 && al <= 6.0, "AL {al} outside [1, K+1]");
@@ -389,14 +369,18 @@ fn chain_topology_tree_is_byte_identical_to_chain() {
     // commit) must produce byte-identical tokens AND acceptance lengths to
     // the classic chain path, on the same seeds. This is what licenses
     // shipping tree speculation as a topology choice rather than a fork.
-    use p_eagle::masking::TreeTopology;
     let root = require_artifacts!();
     let mut mr = ModelRuntime::load(&root).unwrap();
     for seed in [81u64, 82, 83] {
         let prompt = test_prompt(&mr, seed);
         let run = |mr: &mut ModelRuntime, tree: Option<TreeTopology>| {
             // explicit static tree: the env-driven dynamic mode must yield
-            let cfg = EngineConfig { tree, tree_dynamic: None, ..core_cfg(1, 32) };
+            let policy = match tree {
+                Some(t) => SpecPolicy::tree("target-m-pe4", t),
+                None => SpecPolicy::chain("target-m-pe4", 5),
+            };
+            let mut cfg = core_cfg(1, 32);
+            cfg.default_policy = policy;
             let mut g =
                 Some(spec(0, &prompt, 32));
             let (results, metrics) =
@@ -419,7 +403,6 @@ fn branching_tree_is_lossless_and_al_dominates_chain() {
     // still emits exactly the target's own greedy continuation — and
     // (b) match or beat the chain's acceptance length on the same workload
     // (it embeds the rank-0 chain, so it accepts at least as deep).
-    use p_eagle::masking::TreeTopology;
     let root = require_artifacts!();
     let mut mr = ModelRuntime::load(&root).unwrap();
     let tree = TreeTopology::from_widths(&[3, 2, 1, 1, 1]);
@@ -429,7 +412,12 @@ fn branching_tree_is_lossless_and_al_dominates_chain() {
         let prompt = test_prompt(&mr, seed);
         let want = reference_greedy(&mut mr, "target-m", &prompt, 32);
         let run = |mr: &mut ModelRuntime, t: Option<TreeTopology>| {
-            let cfg = EngineConfig { tree: t, tree_dynamic: None, ..core_cfg(1, 32) };
+            let policy = match t {
+                Some(t) => SpecPolicy::tree("target-m-pe4", t),
+                None => SpecPolicy::chain("target-m-pe4", 5),
+            };
+            let mut cfg = core_cfg(1, 32);
+            cfg.default_policy = policy;
             let mut g = Some(spec(0, &prompt, 32));
             let (results, _) =
                 run_closed_loop(mr, &cfg, 1, 1, || g.take().unwrap()).unwrap();

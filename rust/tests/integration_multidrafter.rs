@@ -1,0 +1,365 @@
+//! Multi-drafter / per-request-policy integration tests — require
+//! `make artifacts`.
+//!
+//! The headline property (the PR's acceptance criterion): a SINGLE
+//! `EngineCore` batch concurrently serves two distinct drafters under two
+//! distinct speculation modes — an AR chain drafter, a P-EAGLE static-tree
+//! drafter, and a P-EAGLE dynamic-envelope drafter in the same step loop —
+//! and every request stays LOSSLESS (byte-identical to the target's own
+//! greedy continuation). Also pinned:
+//!
+//! * homogeneous-policy engines are byte-identical whether the policy
+//!   arrives as the engine default (the old engine-wide configuration
+//!   path), as an explicit per-request policy, or with a widened allowlist
+//!   sitting unused next to it — for chain, static tree, and dynamic
+//!   modes, dense and paged;
+//! * mixed-policy isolation: two slots with different drafters produce the
+//!   same tokens as two single-policy engines run separately;
+//! * per-slot adaptive dynamic budgets: one batch mixes budgets on shared
+//!   executables, each slot charged (paged blocks) by its own budget;
+//! * unsupported/unlisted policies fail with descriptive errors at
+//!   construction or admission, never mid-flight.
+
+use p_eagle::coordinator::{
+    run_closed_loop, EngineConfig, EngineCore, EngineMetrics, PagedKvConfig, Request,
+    SpecPolicy,
+};
+use p_eagle::masking::TreeTopology;
+use p_eagle::runtime::{HostTensor, ModelRuntime};
+
+fn artifacts() -> Option<String> {
+    let root = std::env::var("PEAGLE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&root).join("manifest.json").exists().then_some(root)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(r) => r,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn test_prompt(mr: &ModelRuntime, seed: u64) -> Vec<i32> {
+    let regime = mr.manifest.regimes["humaneval"].clone();
+    let mut rng = p_eagle::util::rng::Rng::new(seed);
+    regime.sample_seq(16, &mut rng)
+}
+
+fn serving_tree() -> TreeTopology {
+    TreeTopology::from_widths(&[3, 2, 1, 1, 1])
+}
+
+fn serving_envelope() -> TreeTopology {
+    TreeTopology::from_widths(&[4, 4, 2, 2, 1])
+}
+
+/// Reference greedy decode using only the target executables (no drafter).
+fn reference_greedy(
+    mr: &mut ModelRuntime,
+    target: &str,
+    prompt: &[i32],
+    max_new: usize,
+) -> Vec<i32> {
+    let k = mr.manifest.default_k;
+    let te = mr.ensure_target(target, 1, k).unwrap();
+    let p = mr.manifest.prompt_pad;
+    let vocab = mr.manifest.vocab;
+    let mut padded = vec![mr.manifest.pad_id; p];
+    padded[..prompt.len()].copy_from_slice(prompt);
+    let kv = mr.zero_kv(target, 1).unwrap();
+    let pre = mr
+        .prefill(
+            &te,
+            &HostTensor::i32(&[1, p], padded),
+            &HostTensor::i32(&[1], vec![prompt.len() as i32]),
+            &kv,
+        )
+        .unwrap();
+    let argmax = |row: &[f32]| -> i32 {
+        let mut bi = 0;
+        for (i, &x) in row.iter().enumerate() {
+            if x > row[bi] {
+                bi = i;
+            }
+        }
+        bi as i32
+    };
+    let mut out = vec![argmax(pre.last_logits.as_f32().unwrap())];
+    let mut kv = pre.kv;
+    let mut cache_len = prompt.len();
+    while out.len() < max_new && *out.last().unwrap() != mr.manifest.eos_id {
+        let mut chunk = vec![0i32; k + 1];
+        chunk[0] = *out.last().unwrap();
+        let v = mr
+            .verify(
+                &te,
+                &HostTensor::i32(&[1, k + 1], chunk),
+                &HostTensor::i32(&[1], vec![cache_len as i32]),
+                &kv,
+            )
+            .unwrap();
+        kv = v.kv;
+        let logits = v.logits.as_f32().unwrap();
+        out.push(argmax(&logits[..vocab]));
+        cache_len += 1;
+    }
+    out
+}
+
+/// One request through an engine whose DEFAULT policy is `policy` (the old
+/// engine-wide configuration path).
+fn run_default(
+    mr: &mut ModelRuntime,
+    policy: SpecPolicy,
+    paged: Option<PagedKvConfig>,
+    prompt: &[i32],
+    max_new: usize,
+) -> (Vec<i32>, usize, usize, EngineMetrics) {
+    let cfg = EngineConfig::new("target-m", policy, 1, max_new)
+        .with_seed(5)
+        .with_paged(paged);
+    let mut g = Some(Request::new(0, prompt.to_vec(), max_new));
+    let (results, metrics) = run_closed_loop(mr, &cfg, 1, 1, || g.take().unwrap()).unwrap();
+    let r = results.into_iter().next().unwrap();
+    (r.tokens, r.accepted_sum, r.iterations, metrics)
+}
+
+#[test]
+fn one_batch_serves_two_drafters_and_three_modes_losslessly() {
+    // THE acceptance criterion. One width-4 engine; three concurrent
+    // requests: AR chain drafting, P-EAGLE static-tree drafting, and
+    // P-EAGLE dynamic-envelope drafting — 2 drafters, 3 speculation modes,
+    // one shared target KV cache. Every request's tokens must equal the
+    // target's own greedy continuation (losslessness is per-slot, so the
+    // policy-grouped step must keep every bucket's writes out of everyone
+    // else's committed cache).
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let policies = [
+        SpecPolicy::chain("target-m-ar", 5),
+        SpecPolicy::tree("target-m-pe4", serving_tree()),
+        SpecPolicy::dynamic("target-m-pe4", serving_envelope(), 8),
+    ];
+    let prompts: Vec<Vec<i32>> =
+        [201u64, 202, 203].iter().map(|&s| test_prompt(&mr, s)).collect();
+    let want: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| reference_greedy(&mut mr, "target-m", p, 24))
+        .collect();
+
+    let cfg = EngineConfig::new("target-m", policies[0].clone(), 4, 24)
+        .with_policies(policies[1..].to_vec())
+        .with_seed(5);
+    let mut core = EngineCore::new(&mut mr, cfg).unwrap();
+    for (i, (p, pol)) in prompts.iter().zip(&policies).enumerate() {
+        core.add_request(Request::new(i as u64, p.clone(), 24).with_policy(pol.clone()))
+            .unwrap();
+    }
+    let first = core.step(&mut mr).unwrap();
+    assert_eq!(first.admitted, 3, "all three policies must admit together");
+    assert_eq!(first.occupied, 3, "the batch must actually mix the policies");
+    let mut results = first.into_finished();
+    while !core.is_idle() {
+        results.extend(core.step(&mut mr).unwrap().into_finished());
+    }
+    assert_eq!(results.len(), 3);
+    results.sort_by_key(|r| r.id);
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(
+            r.tokens, want[i],
+            "request {i} ({}) diverged from target greedy in the mixed batch",
+            policies[i].id()
+        );
+    }
+    // per-drafter metrics split the batch: both drafters iterated
+    let metrics = core.into_metrics();
+    assert_eq!(metrics.per_policy.len(), 2, "expected 2 drafter keys");
+    assert!(metrics.per_policy["target-m-ar"].iterations > 0);
+    assert!(metrics.per_policy["target-m-pe4"].iterations > 0);
+    assert!(
+        metrics.per_policy["target-m-pe4"].steps
+            > metrics.per_policy["target-m-pe4"].iterations / 2,
+        "pe4 served two buckets (tree + dynamic) per step"
+    );
+}
+
+#[test]
+fn homogeneous_policy_matches_engine_wide_config_dense_and_paged() {
+    // satellite: for chain, static tree, and dynamic modes, the SAME tokens
+    // + AL must come out of (a) the engine-wide default-policy path (the
+    // legacy configuration, requests carry no policy), (b) explicit
+    // per-request policies routed through the allowlist, and (c) the
+    // default path with a widened (unused) allowlist — dense and paged.
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let modes = [
+        SpecPolicy::chain("target-m-pe4", 5),
+        SpecPolicy::tree("target-m-pe4", serving_tree()),
+        SpecPolicy::dynamic("target-m-pe4", serving_envelope(), 8),
+    ];
+    let prompt = test_prompt(&mr, 211);
+    for policy in &modes {
+        for paged in [None, Some(PagedKvConfig::default())] {
+            let (legacy_toks, legacy_acc, legacy_iters, lm) =
+                run_default(&mut mr, policy.clone(), paged, &prompt, 24);
+
+            // (b) explicit per-request policy on an engine whose default is
+            // something ELSE entirely (the allowlist routes it)
+            let cfg = EngineConfig::new("target-m", SpecPolicy::chain("target-m-ar", 5), 1, 24)
+                .with_policies(vec![policy.clone()])
+                .with_seed(5)
+                .with_paged(paged);
+            let mut g =
+                Some(Request::new(0, prompt.clone(), 24).with_policy(policy.clone()));
+            let (results, em) =
+                run_closed_loop(&mut mr, &cfg, 1, 1, || g.take().unwrap()).unwrap();
+            let r = results.into_iter().next().unwrap();
+            assert_eq!(
+                r.tokens, legacy_toks,
+                "explicit {} diverged from the default-policy path (paged={})",
+                policy.id(),
+                paged.is_some()
+            );
+            assert_eq!(r.accepted_sum, legacy_acc);
+            assert_eq!(r.iterations, legacy_iters);
+            assert!(
+                (em.acceptance_length() - lm.acceptance_length()).abs() < 1e-12,
+                "AL diverged for {} (paged={})",
+                policy.id(),
+                paged.is_some()
+            );
+
+            // (c) widened allowlist, requests stay default: byte-identical
+            let cfg = EngineConfig::new("target-m", policy.clone(), 1, 24)
+                .with_policies(vec![
+                    SpecPolicy::chain("target-m-ar", 5),
+                    SpecPolicy::tree("target-m-pe4", serving_tree()),
+                ])
+                .with_seed(5)
+                .with_paged(paged);
+            let mut g = Some(Request::new(0, prompt.clone(), 24));
+            let (results, _) =
+                run_closed_loop(&mut mr, &cfg, 1, 1, || g.take().unwrap()).unwrap();
+            assert_eq!(
+                results[0].tokens, legacy_toks,
+                "widened allowlist perturbed {} (paged={})",
+                policy.id(),
+                paged.is_some()
+            );
+        }
+    }
+}
+
+#[test]
+fn mixed_policy_slots_match_single_policy_engines() {
+    // satellite: two slots with DIFFERENT drafters in one engine produce
+    // exactly the tokens each produces alone in a single-policy engine —
+    // the bucket passes are isolated.
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let p1 = test_prompt(&mr, 221);
+    let p2 = test_prompt(&mr, 222);
+    let pe4 = SpecPolicy::chain("target-m-pe4", 5);
+    let ar = SpecPolicy::chain("target-m-ar", 5);
+    let (solo1, ..) = run_default(&mut mr, pe4.clone(), None, &p1, 24);
+    let (solo2, ..) = run_default(&mut mr, ar.clone(), None, &p2, 24);
+
+    let cfg = EngineConfig::new("target-m", pe4.clone(), 2, 24)
+        .with_policies(vec![ar.clone()])
+        .with_seed(5);
+    let mut core = EngineCore::new(&mut mr, cfg).unwrap();
+    core.add_request(Request::new(0, p1, 24).with_policy(pe4)).unwrap();
+    core.add_request(Request::new(1, p2, 24).with_policy(ar)).unwrap();
+    let mut results = Vec::new();
+    while !core.is_idle() {
+        results.extend(core.step(&mut mr).unwrap().into_finished());
+    }
+    assert_eq!(results.len(), 2);
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results[0].tokens, solo1, "pe4 slot perturbed by the ar bucket");
+    assert_eq!(results[1].tokens, solo2, "ar slot perturbed by the pe4 bucket");
+}
+
+#[test]
+fn per_slot_dynamic_budgets_share_executables_and_charge_blocks_per_slot() {
+    // satellite (per-slot adaptive budgets): two dynamic requests with
+    // DIFFERENT node budgets share one exec key (no extra allowlist entry
+    // needed), run in one bucket, and each emits exactly its solo-budget
+    // tokens; in paged mode each slot reserves scratch coverage by its own
+    // budget + 1 (mixed-budget admission charging).
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let p1 = test_prompt(&mr, 231);
+    let p2 = test_prompt(&mr, 232);
+    let small = SpecPolicy::dynamic("target-m-pe4", serving_envelope(), 3);
+    let big = SpecPolicy::dynamic("target-m-pe4", serving_envelope(), 8);
+    let (solo_small, ..) = run_default(&mut mr, small.clone(), None, &p1, 20);
+    let (solo_big, ..) = run_default(&mut mr, big.clone(), None, &p2, 20);
+
+    for paged in [None, Some(PagedKvConfig::default())] {
+        let cfg = EngineConfig::new("target-m", big.clone(), 2, 20)
+            .with_seed(5)
+            .with_paged(paged);
+        let mut core = EngineCore::new(&mut mr, cfg).unwrap();
+        // `small` differs from the default only in budget: same exec key,
+        // admitted without an allowlist entry
+        core.add_request(Request::new(0, p1.clone(), 20).with_policy(small.clone()))
+            .unwrap();
+        core.add_request(Request::new(1, p2.clone(), 20).with_policy(big.clone())).unwrap();
+        let mut results = Vec::new();
+        while !core.is_idle() {
+            results.extend(core.step(&mut mr).unwrap().into_finished());
+        }
+        assert_eq!(results.len(), 2);
+        results.sort_by_key(|r| r.id);
+        assert_eq!(
+            results[0].tokens, solo_small,
+            "budget-3 slot diverged in the mixed-budget batch (paged={})",
+            paged.is_some()
+        );
+        assert_eq!(
+            results[1].tokens, solo_big,
+            "budget-8 slot diverged in the mixed-budget batch (paged={})",
+            paged.is_some()
+        );
+    }
+}
+
+#[test]
+fn unsupported_and_unlisted_policies_fail_descriptively() {
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+
+    // capability gate at construction: the AR scan cannot tree-draft
+    let cfg = EngineConfig::new("target-m", SpecPolicy::tree("target-m-ar", serving_tree()), 1, 8);
+    let err = EngineCore::new(&mut mr, cfg).unwrap_err().to_string();
+    assert!(
+        err.contains("does not support tree"),
+        "undescriptive capability error: {err}"
+    );
+
+    // unknown drafter at construction
+    let cfg = EngineConfig::new("target-m", SpecPolicy::chain("no-such-drafter", 5), 1, 8);
+    let err = EngineCore::new(&mut mr, cfg).unwrap_err().to_string();
+    assert!(err.contains("unknown drafter"), "undescriptive error: {err}");
+
+    // drafter serving a different target
+    let cfg = EngineConfig::new("target-m", SpecPolicy::chain("target-l-pe4", 5), 1, 8);
+    let err = EngineCore::new(&mut mr, cfg).unwrap_err().to_string();
+    assert!(err.contains("serves target"), "undescriptive error: {err}");
+
+    // allowlist gate at admission: a valid policy the engine wasn't
+    // configured to serve is rejected at add_request, naming the allowlist
+    let cfg = EngineConfig::new("target-m", SpecPolicy::chain("target-m-pe4", 5), 1, 8);
+    let mut core = EngineCore::new(&mut mr, cfg).unwrap();
+    let prompt = test_prompt(&mr, 241);
+    let req = Request::new(0, prompt, 8).with_policy(SpecPolicy::chain("target-m-ar", 5));
+    let err = core.add_request(req).unwrap_err().to_string();
+    assert!(err.contains("not serveable"), "undescriptive allowlist error: {err}");
+    assert!(err.contains("target-m-pe4/chain:5"), "error should name the allowlist: {err}");
+}

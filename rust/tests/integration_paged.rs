@@ -14,11 +14,11 @@
 //! without corrupting anyone's tokens.
 
 use p_eagle::coordinator::{
-    run_closed_loop, EngineConfig, EngineCore, EngineMetrics, PagedKvConfig, Sampling,
+    run_closed_loop, EngineConfig, EngineCore, EngineMetrics, PagedKvConfig, Request,
+    SpecPolicy,
 };
 use p_eagle::masking::TreeTopology;
 use p_eagle::runtime::ModelRuntime;
-use p_eagle::workload::RequestSpec;
 
 fn artifacts() -> Option<String> {
     let root = std::env::var("PEAGLE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -38,21 +38,18 @@ macro_rules! require_artifacts {
 }
 
 fn cfg(batch: usize, max_new: usize, paged: Option<PagedKvConfig>) -> EngineConfig {
-    EngineConfig {
-        target: "target-m".into(),
-        drafter: "target-m-pe4".into(),
-        k: 5,
-        batch,
-        max_new_tokens: max_new,
-        sampling: Sampling::Greedy,
-        tree: None,
-        // dense-vs-paged parity is asserted per explicit mode below, so the
-        // env-driven dynamic default is NOT wired here (several tests set
-        // `tree` directly, which excludes it)
-        tree_dynamic: None,
-        paged,
-        seed: 5,
-    }
+    // dense-vs-paged parity is asserted per explicit speculation mode below,
+    // so the env-driven dynamic/multi-drafter defaults are NOT wired here
+    // (several tests pin the default policy directly)
+    EngineConfig::new("target-m", SpecPolicy::chain("target-m-pe4", 5), batch, max_new)
+        .with_seed(5)
+        .with_paged(paged)
+}
+
+fn tree_cfg(batch: usize, max_new: usize, paged: Option<PagedKvConfig>, t: TreeTopology) -> EngineConfig {
+    EngineConfig::new("target-m", SpecPolicy::tree("target-m-pe4", t), batch, max_new)
+        .with_seed(5)
+        .with_paged(paged)
 }
 
 fn test_prompt(mr: &ModelRuntime, seed: u64) -> Vec<i32> {
@@ -61,8 +58,8 @@ fn test_prompt(mr: &ModelRuntime, seed: u64) -> Vec<i32> {
     regime.sample_seq(16, &mut rng)
 }
 
-fn spec(id: u64, prompt: &[i32], max_new: usize) -> RequestSpec {
-    RequestSpec { id, prompt: prompt.to_vec(), max_new_tokens: max_new, arrival_s: 0.0 }
+fn spec(id: u64, prompt: &[i32], max_new: usize) -> Request {
+    Request::new(id, prompt.to_vec(), max_new)
 }
 
 /// Run one closed-loop request; returns (tokens, accepted_sum, iterations)
@@ -108,10 +105,8 @@ fn dense_and_paged_tree_are_byte_identical() {
     let mut paged_commits = 0usize;
     for seed in [111u64, 112, 113] {
         let prompt = test_prompt(&mr, seed);
-        let mut cd = cfg(1, 32, None);
-        cd.tree = Some(tree.clone());
-        let mut cp = cfg(1, 32, Some(PagedKvConfig::default()));
-        cp.tree = Some(tree.clone());
+        let cd = tree_cfg(1, 32, None, tree.clone());
+        let cp = tree_cfg(1, 32, Some(PagedKvConfig::default()), tree.clone());
         let (dense, dm) = run_one(&mut mr, cd, &prompt, 32);
         let (paged, pm) = run_one(&mut mr, cp, &prompt, 32);
         assert_eq!(paged.0, dense.0, "tree tokens diverged (seed {seed})");
@@ -136,8 +131,7 @@ fn chain_topology_tree_paged_matches_dense_chain() {
     let mut mr = ModelRuntime::load(&root).unwrap();
     let prompt = test_prompt(&mr, 121);
     let (dense, _) = run_one(&mut mr, cfg(1, 24, None), &prompt, 24);
-    let mut cp = cfg(1, 24, Some(PagedKvConfig::default()));
-    cp.tree = Some(TreeTopology::chain(5));
+    let cp = tree_cfg(1, 24, Some(PagedKvConfig::default()), TreeTopology::chain(5));
     let (paged, pm) = run_one(&mut mr, cp, &prompt, 24);
     assert_eq!(paged.0, dense.0);
     assert_eq!(paged.1, dense.1);

@@ -4,7 +4,7 @@
 use std::collections::HashMap;
 
 use p_eagle::coordinator::server::spawn;
-use p_eagle::coordinator::{EngineConfig, FinishReason, RequestSpec, Sampling, ServerEvent};
+use p_eagle::coordinator::{EngineConfig, FinishReason, Request, ServerEvent, SpecPolicy};
 
 fn artifacts() -> Option<String> {
     let root = std::env::var("PEAGLE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -12,20 +12,22 @@ fn artifacts() -> Option<String> {
 }
 
 fn cfg(batch: usize, max_new: usize) -> EngineConfig {
-    EngineConfig {
-        target: "target-m".into(),
-        drafter: "target-m-pe4".into(),
-        k: 5,
-        batch,
-        max_new_tokens: max_new,
-        sampling: Sampling::Greedy,
-        tree: None,
-        // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
-        // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache
-        tree_dynamic: p_eagle::coordinator::tree_dyn_from_env(),
-        paged: p_eagle::coordinator::paged_from_env(),
-        seed: 1,
-    }
+    // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
+    // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache;
+    // PEAGLE_MULTI_DRAFTER=1 widens the allowlist (requests stay default)
+    let default = match p_eagle::coordinator::tree_dyn_from_env() {
+        Some(d) => SpecPolicy::from_dynamic_config("target-m-pe4", &d),
+        None => SpecPolicy::chain("target-m-pe4", 5),
+    };
+    let extras = if p_eagle::coordinator::multi_drafter_from_env() {
+        vec![SpecPolicy::chain("target-m-ar", 5)]
+    } else {
+        Vec::new()
+    };
+    EngineConfig::new("target-m", default, batch, max_new)
+        .with_policies(extras)
+        .with_seed(1)
+        .with_paged(p_eagle::coordinator::paged_from_env())
 }
 
 fn prompt(i: u64) -> Vec<i32> {
@@ -60,12 +62,11 @@ fn server_streams_ordered_events() {
     let tx = handle.tx.clone();
     let producer = std::thread::spawn(move || {
         for i in 0..3u64 {
-            let _ = tx.send(p_eagle::coordinator::ServerMsg::Submit(RequestSpec {
-                id: i,
-                prompt: prompt(i),
-                max_new_tokens: 4 + 4 * i as usize,
-                arrival_s: 0.0,
-            }));
+            let _ = tx.send(p_eagle::coordinator::ServerMsg::Submit(Request::new(
+                i,
+                prompt(i),
+                4 + 4 * i as usize,
+            )));
         }
     });
     producer.join().unwrap();
@@ -132,9 +133,9 @@ fn server_abort_and_reject() {
     let handle = spawn(root, cfg(1, 64)).unwrap();
 
     // a prompt below the drafter context window is rejected at validation
-    handle.submit(RequestSpec { id: 50, prompt: vec![1, 2], max_new_tokens: 8, arrival_s: 0.0 });
+    handle.submit(Request::new(50, vec![1, 2], 8));
     // a long request we abort mid-stream
-    handle.submit(RequestSpec { id: 51, prompt: prompt(0), max_new_tokens: 64, arrival_s: 0.0 });
+    handle.submit(Request::new(51, prompt(0), 64));
 
     let mut finish: Option<FinishReason> = None;
     let mut rejected = false;

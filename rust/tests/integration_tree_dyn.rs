@@ -16,11 +16,11 @@
 //! the engine level.
 
 use p_eagle::coordinator::{
-    run_closed_loop, EngineConfig, EngineCore, EngineMetrics, PagedKvConfig, Sampling,
+    run_closed_loop, EngineConfig, EngineCore, EngineMetrics, PagedKvConfig, Request,
+    SpecPolicy,
 };
 use p_eagle::masking::{DynamicTreeConfig, TreeTopology};
 use p_eagle::runtime::{HostTensor, ModelRuntime};
-use p_eagle::workload::RequestSpec;
 
 fn artifacts() -> Option<String> {
     let root = std::env::var("PEAGLE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -39,23 +39,21 @@ macro_rules! require_artifacts {
     };
 }
 
-fn cfg(batch: usize, max_new: usize) -> EngineConfig {
-    EngineConfig {
-        target: "target-m".into(),
-        drafter: "target-m-pe4".into(),
-        k: 5,
-        batch,
-        max_new_tokens: max_new,
-        sampling: Sampling::Greedy,
-        tree: None,
-        tree_dynamic: None,
-        paged: None,
-        seed: 5,
-    }
+fn policy_cfg(policy: SpecPolicy, batch: usize, max_new: usize) -> EngineConfig {
+    EngineConfig::new("target-m", policy, batch, max_new).with_seed(5)
 }
 
-fn dyn_cfg(envelope: &str, budget: usize) -> DynamicTreeConfig {
-    DynamicTreeConfig::parse(envelope, budget).unwrap()
+fn tree_cfg(t: TreeTopology, batch: usize, max_new: usize) -> EngineConfig {
+    policy_cfg(SpecPolicy::tree("target-m-pe4", t), batch, max_new)
+}
+
+fn dyn_policy(envelope: &str, budget: usize) -> SpecPolicy {
+    let d = DynamicTreeConfig::parse(envelope, budget).unwrap();
+    SpecPolicy::from_dynamic_config("target-m-pe4", &d)
+}
+
+fn dyn_cfg2(envelope: &str, budget: usize, batch: usize, max_new: usize) -> EngineConfig {
+    policy_cfg(dyn_policy(envelope, budget), batch, max_new)
 }
 
 fn test_prompt(mr: &ModelRuntime, seed: u64) -> Vec<i32> {
@@ -64,8 +62,8 @@ fn test_prompt(mr: &ModelRuntime, seed: u64) -> Vec<i32> {
     regime.sample_seq(16, &mut rng)
 }
 
-fn spec(id: u64, prompt: &[i32], max_new: usize) -> RequestSpec {
-    RequestSpec { id, prompt: prompt.to_vec(), max_new_tokens: max_new, arrival_s: 0.0 }
+fn spec(id: u64, prompt: &[i32], max_new: usize) -> Request {
+    Request::new(id, prompt.to_vec(), max_new)
 }
 
 /// Run one closed-loop request; returns (tokens, accepted_sum, iterations)
@@ -150,12 +148,8 @@ fn degenerate_budget_matches_static_tree_dense_and_paged() {
         for paged in [None, Some(PagedKvConfig::default())] {
             for seed in [151u64, 152] {
                 let prompt = test_prompt(&mr, seed);
-                let mut cs = cfg(1, 32);
-                cs.tree = Some(tree.clone());
-                cs.paged = paged;
-                let mut cd = cfg(1, 32);
-                cd.tree_dynamic = Some(dyn_cfg(envelope, budget));
-                cd.paged = paged;
+                let cs = tree_cfg(tree.clone(), 1, 32).with_paged(paged);
+                let cd = dyn_cfg2(envelope, budget, 1, 32).with_paged(paged);
                 let (stat, _) = run_one(&mut mr, cs, &prompt, 32);
                 let (dynr, _) = run_one(&mut mr, cd, &prompt, 32);
                 assert_eq!(
@@ -189,8 +183,7 @@ fn dynamic_budgets_stay_lossless() {
         let prompt = test_prompt(&mr, seed);
         let want = reference_greedy(&mut mr, "target-m", &prompt, 32);
         for budget in [1usize, 4, 8, 13] {
-            let mut c = cfg(1, 32);
-            c.tree_dynamic = Some(dyn_cfg("w:4,4,2,2,1", budget));
+            let c = dyn_cfg2("w:4,4,2,2,1", budget, 1, 32);
             let (got, _) = run_one(&mut mr, c, &prompt, 32);
             assert_eq!(
                 got.0, want,
@@ -208,10 +201,8 @@ fn dense_and_paged_dynamic_are_byte_identical_at_partial_budget() {
     let mut mr = ModelRuntime::load(&root).unwrap();
     for seed in [171u64, 172] {
         let prompt = test_prompt(&mr, seed);
-        let mut cd = cfg(1, 32);
-        cd.tree_dynamic = Some(dyn_cfg("w:4,4,2,2,1", 6));
-        let mut cp = cd.clone();
-        cp.paged = Some(PagedKvConfig::default());
+        let cd = dyn_cfg2("w:4,4,2,2,1", 6, 1, 32);
+        let cp = cd.clone().with_paged(Some(PagedKvConfig::default()));
         let (dense, _) = run_one(&mut mr, cd, &prompt, 32);
         let (paged, pm) = run_one(&mut mr, cp, &prompt, 32);
         assert_eq!(paged.0, dense.0, "tokens diverged (seed {seed})");
@@ -235,10 +226,8 @@ fn dynamic_al_matches_or_beats_static_at_equal_verified_node_budget() {
     let mut dyn_al = 0.0;
     for seed in [181u64, 182, 183, 184] {
         let prompt = test_prompt(&mr, seed);
-        let mut cs = cfg(1, 32);
-        cs.tree = Some(tree.clone());
-        let mut cd = cfg(1, 32);
-        cd.tree_dynamic = Some(dyn_cfg("w:4,4,2,2,1", tree.len()));
+        let cs = tree_cfg(tree.clone(), 1, 32);
+        let cd = dyn_cfg2("w:4,4,2,2,1", tree.len(), 1, 32);
         let (_, sm) = run_one(&mut mr, cs, &prompt, 32);
         let (_, dm) = run_one(&mut mr, cd, &prompt, 32);
         static_al += sm.acceptance_length();
@@ -269,12 +258,11 @@ fn paged_admission_charges_by_budget_not_envelope() {
     assert!(need_budget < need_envelope, "pick a prompt length that splits the two");
 
     // solo unconstrained reference
-    let mut c0 = cfg(1, 16);
-    c0.tree_dynamic = Some(dyn_cfg("w:4,4,2,2,1", 8));
+    let c0 = dyn_cfg2("w:4,4,2,2,1", 8, 1, 16);
     let (solo, _) = run_one(&mut mr, c0.clone(), &prompt, 16);
 
-    let mut cb = c0;
-    cb.paged = Some(PagedKvConfig { block_size: None, num_blocks: Some(need_budget) });
+    let cb = c0
+        .with_paged(Some(PagedKvConfig { block_size: None, num_blocks: Some(need_budget) }));
     let mut core = EngineCore::new(&mut mr, cb).unwrap();
     core.add_request(spec(0, &prompt, 16))
         .expect("budget-charged admission must accept what envelope charging would refuse");
