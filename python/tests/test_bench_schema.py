@@ -1,0 +1,105 @@
+"""The BENCH_<pr>.json perf-trajectory files committed at the repo root:
+schema validity + full-matrix coverage, checked from the Python side (the
+Rust parser in rust/src/bench/schema.rs is the normative validator; this
+test keeps the COMMITTED files honest in environments that only run
+pytest). Mirrors the semantics documented in ARCHITECTURE.md."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[2]
+BENCH_FILES = sorted(REPO.glob("BENCH_*.json"))
+
+SHAPES = {"chain", "tree", "dyn"}
+CACHES = {"dense", "paged"}
+LOADS = {"closed", "open"}
+
+REPORT_KEYS = ["schema_version", "pr", "git_rev", "created_unix", "suite",
+               "target", "dataset", "seed", "note", "cells"]
+CONFIG_KEYS = ["shape", "cache", "drafter", "policy", "load", "concurrency",
+               "rate_rps", "requests", "max_new", "seed", "deterministic"]
+METRIC_KEYS = ["requests_finished", "tokens_emitted", "iterations",
+               "acceptance_length", "mean_occupancy", "mean_block_occupancy",
+               "blocks_peak", "admissions_blocked", "mean_active_nodes",
+               "per_policy"]
+TIMING_KEYS = ["otps", "ttft_p50_us", "ttft_p99_us", "tpot_p50_us",
+               "tpot_p99_us", "latency_p50_us", "latency_p99_us", "wall_ms"]
+
+
+def cell_id(cfg):
+    """The Rust CellConfig::id derivation (rate formatted via {:g} to match
+    Rust's shortest f64 Display)."""
+    if cfg["load"] == "open":
+        return (f"{cfg['shape']}/{cfg['cache']}/{cfg['drafter']}"
+                f"/open-c{cfg['concurrency']}-r{cfg['rate_rps']:g}")
+    return f"{cfg['shape']}/{cfg['cache']}/{cfg['drafter']}/closed-c{cfg['concurrency']}"
+
+
+def test_trajectory_files_exist():
+    names = {p.name for p in BENCH_FILES}
+    assert "BENCH_6.json" in names
+    assert "BENCH_baseline.json" in names
+
+
+@pytest.mark.parametrize("path", BENCH_FILES, ids=lambda p: p.name)
+def test_schema_valid(path):
+    r = json.loads(path.read_text())
+    assert r["schema_version"] == 1
+    assert list(r.keys()) == REPORT_KEYS
+    assert r["suite"] in ("smoke", "full")
+    ids = set()
+    for cell in r["cells"]:
+        assert list(cell.keys()) == ["id", "config", "metrics", "timing"]
+        cfg, met, tim = cell["config"], cell["metrics"], cell["timing"]
+        assert list(cfg.keys()) == CONFIG_KEYS
+        assert list(met.keys()) == METRIC_KEYS
+        assert list(tim.keys()) == TIMING_KEYS
+        assert cfg["shape"] in SHAPES
+        assert cfg["cache"] in CACHES
+        assert cfg["load"] in LOADS
+        # closed-loop cells are the deterministic ones, exactly
+        assert cfg["deterministic"] == (cfg["load"] == "closed")
+        assert (cfg["rate_rps"] > 0) == (cfg["load"] == "open")
+        # stored id matches the derivation, and is unique
+        assert cell["id"] == cell_id(cfg)
+        assert cell["id"] not in ids
+        ids.add(cell["id"])
+        for k in ["concurrency", "requests", "max_new"]:
+            assert cfg[k] > 0
+        for k in METRIC_KEYS[:-1] + TIMING_KEYS:
+            v = met.get(k, tim.get(k))
+            assert isinstance(v, (int, float)) and v >= 0, (cell["id"], k)
+
+
+@pytest.mark.parametrize("path", BENCH_FILES, ids=lambda p: p.name)
+def test_full_matrix_coverage(path):
+    """A 'full' trajectory covers every axis value of the matrix: all three
+    speculation shapes, both cache modes, both arrival modes, and >= 2
+    drafters (the sweep axis)."""
+    r = json.loads(path.read_text())
+    if r["suite"] != "full":
+        pytest.skip("coverage contract applies to full-suite files")
+    cfgs = [c["config"] for c in r["cells"]]
+    assert {c["shape"] for c in cfgs} == SHAPES
+    assert {c["cache"] for c in cfgs} == CACHES
+    assert {c["load"] for c in cfgs} == LOADS
+    assert len({c["drafter"] for c in cfgs}) >= 2
+    # chain cells carry the chain-only AR drafter; tree/dyn cells must not
+    tree_drafters = {c["drafter"] for c in cfgs if c["shape"] in ("tree", "dyn")}
+    assert "target-m-ar" not in tree_drafters
+    # every (shape, cache) plane appears under every load column
+    planes = {(c["shape"], c["cache"], c["load"]) for c in cfgs}
+    assert len(planes) == len(SHAPES) * len(CACHES) * len(LOADS)
+
+
+def test_baseline_and_current_compare_cleanly():
+    """The committed baseline's cell ids are a subset of BENCH_6's (the
+    comparator treats a missing cell as a regression — CI's advisory compare
+    should start clean)."""
+    base = json.loads((REPO / "BENCH_baseline.json").read_text())
+    cur = json.loads((REPO / "BENCH_6.json").read_text())
+    base_ids = {c["id"] for c in base["cells"]}
+    cur_ids = {c["id"] for c in cur["cells"]}
+    assert base_ids <= cur_ids

@@ -1,6 +1,9 @@
 """Synthetic corpora + Figure-1 length model."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.configs import BOS_ID, VOCAB

@@ -1,6 +1,9 @@
 """§3.1 mask machinery: position-invariance (Fig 3), PARD equivalence, COD."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.masks import (

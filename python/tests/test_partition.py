@@ -5,6 +5,9 @@ gradients exactly (paper §3.2 'preserving attention dependencies')."""
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.configs import TARGETS, DrafterConfig, TrainConfig

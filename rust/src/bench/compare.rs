@@ -1,0 +1,310 @@
+//! Cell-by-cell trajectory comparison — the piece that turns `BENCH_*.json`
+//! files into a regression GATE.
+//!
+//! Semantics (documented in ARCHITECTURE.md; change both together):
+//!
+//! - cells are matched by id; the header (git rev, timestamps) never gates
+//! - a cell in OLD but not NEW is a **regression** (coverage loss — a
+//!   drafter or mode silently dropping out of the matrix is exactly the
+//!   failure this catches)
+//! - a cell in NEW but not OLD passes (`new-cell`) — growing the matrix is
+//!   never punished
+//! - a matched cell regresses when OTPS drops more than `otps_frac` OR
+//!   p99 TTFT grows more than `ttft_frac` (both relative); it is `improved`
+//!   when OTPS grows more than `otps_frac` with TTFT inside threshold
+//! - a zero baseline value skips that ratio check: a hand-authored skeleton
+//!   (all-zero timing) gates nothing until a real run replaces it, which is
+//!   what lets the advisory CI compare run against a placeholder baseline
+
+use crate::util::bench::Table;
+
+use super::schema::{BenchReport, CellRecord};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Thresholds {
+    /// max tolerated relative OTPS drop (0.10 = -10%)
+    pub otps_frac: f64,
+    /// max tolerated relative p99 TTFT growth (0.20 = +20%)
+    pub ttft_frac: f64,
+}
+
+impl Default for Thresholds {
+    fn default() -> Thresholds {
+        Thresholds { otps_frac: 0.10, ttft_frac: 0.20 }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum CellStatus {
+    Pass,
+    Improved,
+    /// human-readable reasons, e.g. `OTPS -23.1% (limit -10%)`
+    Regressed(Vec<String>),
+    NewCell,
+    MissingCell,
+}
+
+impl CellStatus {
+    pub fn is_regression(&self) -> bool {
+        matches!(self, CellStatus::Regressed(_) | CellStatus::MissingCell)
+    }
+
+    fn label(&self) -> &'static str {
+        match self {
+            CellStatus::Pass => "pass",
+            CellStatus::Improved => "improved",
+            CellStatus::Regressed(_) => "REGRESSED",
+            CellStatus::NewCell => "new-cell",
+            CellStatus::MissingCell => "MISSING",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CellDiff {
+    pub id: String,
+    pub status: CellStatus,
+    /// (old, new); None on the missing side
+    pub otps: (Option<f64>, Option<f64>),
+    pub ttft_p99_us: (Option<u64>, Option<u64>),
+}
+
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    pub thresholds: Thresholds,
+    pub diffs: Vec<CellDiff>,
+}
+
+impl CompareReport {
+    pub fn regressions(&self) -> usize {
+        self.diffs.iter().filter(|d| d.status.is_regression()).count()
+    }
+
+    pub fn has_regressions(&self) -> bool {
+        self.regressions() > 0
+    }
+
+    /// The regression table the CLI prints: one row per cell, worst first
+    /// (regressions top), then a one-line verdict.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["cell", "status", "OTPS old→new", "p99 TTFT old→new", "detail"]);
+        let mut rows: Vec<&CellDiff> = self.diffs.iter().collect();
+        rows.sort_by_key(|d| !d.status.is_regression());
+        for d in rows {
+            let detail = match &d.status {
+                CellStatus::Regressed(reasons) => reasons.join("; "),
+                _ => String::new(),
+            };
+            t.row(vec![
+                d.id.clone(),
+                d.status.label().to_string(),
+                pair(d.otps.0.map(|x| format!("{x:.0}")), d.otps.1.map(|x| format!("{x:.0}"))),
+                pair(
+                    d.ttft_p99_us.0.map(|x| format!("{x}µs")),
+                    d.ttft_p99_us.1.map(|x| format!("{x}µs")),
+                ),
+                detail,
+            ]);
+        }
+        let mut out = t.render();
+        let n = self.regressions();
+        out.push_str(&format!(
+            "{} cells compared: {} regressed (thresholds: OTPS -{:.0}%, p99 TTFT +{:.0}%)\n",
+            self.diffs.len(),
+            n,
+            self.thresholds.otps_frac * 100.0,
+            self.thresholds.ttft_frac * 100.0,
+        ));
+        out
+    }
+}
+
+fn pair(old: Option<String>, new: Option<String>) -> String {
+    format!(
+        "{} → {}",
+        old.unwrap_or_else(|| "-".into()),
+        new.unwrap_or_else(|| "-".into())
+    )
+}
+
+/// Diff two trajectory files cell-by-cell. Pure on the parsed reports —
+/// callers decide what an exit code means (the CLI gates, CI may run
+/// advisory).
+pub fn compare(old: &BenchReport, new: &BenchReport, th: Thresholds) -> CompareReport {
+    let mut diffs = Vec::new();
+    for oc in &old.cells {
+        match new.cells.iter().find(|nc| nc.id == oc.id) {
+            None => diffs.push(CellDiff {
+                id: oc.id.clone(),
+                status: CellStatus::MissingCell,
+                otps: (Some(oc.timing.otps), None),
+                ttft_p99_us: (Some(oc.timing.ttft_p99_us), None),
+            }),
+            Some(nc) => diffs.push(diff_cell(oc, nc, th)),
+        }
+    }
+    for nc in &new.cells {
+        if !old.cells.iter().any(|oc| oc.id == nc.id) {
+            diffs.push(CellDiff {
+                id: nc.id.clone(),
+                status: CellStatus::NewCell,
+                otps: (None, Some(nc.timing.otps)),
+                ttft_p99_us: (None, Some(nc.timing.ttft_p99_us)),
+            });
+        }
+    }
+    CompareReport { thresholds: th, diffs }
+}
+
+fn diff_cell(oc: &CellRecord, nc: &CellRecord, th: Thresholds) -> CellDiff {
+    let mut reasons = Vec::new();
+    let (o_otps, n_otps) = (oc.timing.otps, nc.timing.otps);
+    // zero baselines gate nothing (skeleton files; cells that emitted no
+    // tokens measure nothing worth ratio-ing)
+    if o_otps > 0.0 && n_otps < o_otps * (1.0 - th.otps_frac) {
+        reasons.push(format!(
+            "OTPS {:+.1}% (limit -{:.0}%)",
+            (n_otps / o_otps - 1.0) * 100.0,
+            th.otps_frac * 100.0
+        ));
+    }
+    let (o_ttft, n_ttft) = (oc.timing.ttft_p99_us as f64, nc.timing.ttft_p99_us as f64);
+    if o_ttft > 0.0 && n_ttft > o_ttft * (1.0 + th.ttft_frac) {
+        reasons.push(format!(
+            "p99 TTFT {:+.1}% (limit +{:.0}%)",
+            (n_ttft / o_ttft - 1.0) * 100.0,
+            th.ttft_frac * 100.0
+        ));
+    }
+    let status = if !reasons.is_empty() {
+        CellStatus::Regressed(reasons)
+    } else if o_otps > 0.0 && n_otps > o_otps * (1.0 + th.otps_frac) {
+        CellStatus::Improved
+    } else {
+        CellStatus::Pass
+    };
+    CellDiff {
+        id: oc.id.clone(),
+        status,
+        otps: (Some(o_otps), Some(n_otps)),
+        ttft_p99_us: (Some(oc.timing.ttft_p99_us), Some(nc.timing.ttft_p99_us)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::schema::SCHEMA_VERSION;
+
+    /// Hand-built golden fixture: a two-cell trajectory with round numbers
+    /// (OTPS 1000 / p99 TTFT 1000µs) so the threshold arithmetic reads off
+    /// the test directly.
+    fn golden(cells: &[(&str, f64, u64)]) -> BenchReport {
+        let body: Vec<String> = cells
+            .iter()
+            .map(|(drafter, otps, ttft)| {
+                format!(
+                    r#"{{"id": "chain/dense/{d}/closed-c2",
+                        "config": {{"shape": "chain", "cache": "dense",
+                          "drafter": "{d}", "policy": "{d}/chain:4",
+                          "load": "closed", "concurrency": 2, "rate_rps": 0,
+                          "requests": 6, "max_new": 24, "seed": 11,
+                          "deterministic": true}},
+                        "metrics": {{"requests_finished": 6, "tokens_emitted": 100,
+                          "iterations": 25, "acceptance_length": 4.0,
+                          "mean_occupancy": 0.9, "mean_block_occupancy": 0,
+                          "blocks_peak": 0, "admissions_blocked": 0,
+                          "mean_active_nodes": 0, "per_policy": []}},
+                        "timing": {{"otps": {otps}, "ttft_p50_us": 500,
+                          "ttft_p99_us": {ttft}, "tpot_p50_us": 100,
+                          "tpot_p99_us": 200, "latency_p50_us": 5000,
+                          "latency_p99_us": 9000, "wall_ms": 100}}}}"#,
+                    d = drafter,
+                )
+            })
+            .collect();
+        let s = format!(
+            r#"{{"schema_version": {SCHEMA_VERSION}, "pr": "6", "git_rev": "test",
+                "created_unix": 0, "suite": "smoke", "target": "target-m",
+                "dataset": "mono", "seed": 11, "note": "",
+                "cells": [{}]}}"#,
+            body.join(",")
+        );
+        BenchReport::parse(&s).expect("golden fixture must be schema-valid")
+    }
+
+    fn status_of<'a>(r: &'a CompareReport, id_part: &str) -> &'a CellStatus {
+        &r.diffs.iter().find(|d| d.id.contains(id_part)).unwrap().status
+    }
+
+    #[test]
+    fn pass_improved_regressed_new_missing() {
+        // all five statuses from one golden pair
+        let old = golden(&[("a", 1000.0, 1000), ("b", 1000.0, 1000), ("gone", 1000.0, 1000)]);
+        let new = golden(&[
+            ("a", 950.0, 1100),  // -5% OTPS, +10% TTFT: inside thresholds
+            ("b", 1200.0, 900),  // +20% OTPS: improved
+            ("fresh", 500.0, 1000), // only in new
+        ]);
+        let r = compare(&old, &new, Thresholds::default());
+        assert_eq!(*status_of(&r, "/a/"), CellStatus::Pass);
+        assert_eq!(*status_of(&r, "/b/"), CellStatus::Improved);
+        assert_eq!(*status_of(&r, "/gone/"), CellStatus::MissingCell);
+        assert_eq!(*status_of(&r, "/fresh/"), CellStatus::NewCell);
+        // missing cell counts as a regression; new cell does not
+        assert_eq!(r.regressions(), 1);
+        assert!(r.has_regressions());
+
+        let worse = golden(&[("a", 850.0, 1000), ("b", 1000.0, 1300), ("gone", 1000.0, 1000)]);
+        let r = compare(&old, &worse, Thresholds::default());
+        match status_of(&r, "/a/") {
+            CellStatus::Regressed(reasons) => assert!(reasons[0].contains("OTPS"), "{reasons:?}"),
+            s => panic!("expected OTPS regression, got {s:?}"),
+        }
+        match status_of(&r, "/b/") {
+            CellStatus::Regressed(reasons) => assert!(reasons[0].contains("TTFT"), "{reasons:?}"),
+            s => panic!("expected TTFT regression, got {s:?}"),
+        }
+        assert_eq!(r.regressions(), 2); // a (OTPS) and b (TTFT); gone is present here
+    }
+
+    #[test]
+    fn thresholds_are_strict_inequalities_at_the_boundary() {
+        let old = golden(&[("a", 1000.0, 1000)]);
+        // exactly -10% / +20%: NOT a regression (limits are inclusive)
+        let at = golden(&[("a", 900.0, 1200)]);
+        assert!(!compare(&old, &at, Thresholds::default()).has_regressions());
+        // a hair beyond: regression
+        let past = golden(&[("a", 899.0, 1000)]);
+        assert!(compare(&old, &past, Thresholds::default()).has_regressions());
+        // custom thresholds move the line
+        let loose = Thresholds { otps_frac: 0.50, ttft_frac: 0.50 };
+        assert!(!compare(&old, &past, loose).has_regressions());
+    }
+
+    #[test]
+    fn zero_baseline_gates_nothing() {
+        // the skeleton-baseline rule: an all-zero old cell passes any new
+        // numbers (and identical files trivially pass)
+        let skeleton = golden(&[("a", 0.0, 0)]);
+        let real = golden(&[("a", 123.0, 456)]);
+        assert!(!compare(&skeleton, &real, Thresholds::default()).has_regressions());
+        assert!(!compare(&skeleton, &skeleton, Thresholds::default()).has_regressions());
+        // but a real baseline against a zeroed new run DOES regress
+        assert!(compare(&real, &skeleton, Thresholds::default()).has_regressions());
+    }
+
+    #[test]
+    fn render_lists_every_cell_and_the_verdict() {
+        let old = golden(&[("a", 1000.0, 1000), ("gone", 1000.0, 1000)]);
+        let new = golden(&[("a", 500.0, 1000)]);
+        let r = compare(&old, &new, Thresholds::default());
+        let s = r.render();
+        assert!(s.contains("REGRESSED"), "{s}");
+        assert!(s.contains("MISSING"), "{s}");
+        assert!(s.contains("2 regressed"), "{s}");
+        // regressions sort to the top of the table
+        let first_row = s.lines().nth(2).unwrap();
+        assert!(first_row.contains("REGRESSED") || first_row.contains("MISSING"), "{s}");
+    }
+}

@@ -1,0 +1,33 @@
+//! Perf-trajectory subsystem: the workload-matrix bench harness behind the
+//! `bench-suite` CLI subcommand and the `BENCH_<pr>.json` files at the repo
+//! root.
+//!
+//! Three pieces, deliberately separable:
+//!
+//! - [`suite`] — the matrix DEFINITION: {chain, tree, dyn} × {dense, paged}
+//!   × serveable drafters × {closed-loop, open-loop} arrival loads, as plain
+//!   data (no manifest, no runtime)
+//! - [`runner`] — executes the matrix against a loaded `ModelRuntime` via
+//!   the same `report::bench_otps`/`bench_otps_open` paths the CLI benches
+//!   use, producing a [`schema::BenchReport`]
+//! - [`schema`] + [`compare`] — the versioned on-disk format and the
+//!   cell-by-cell regression gate over two files; both are pure (CI runs
+//!   them with no artifacts present)
+//!
+//! Every subsequent perf PR runs `bench-suite`, commits the new
+//! `BENCH_<pr>.json`, and gates with
+//! `bench-suite --compare BENCH_<prev>.json --new BENCH_<pr>.json`.
+
+pub mod compare;
+pub mod runner;
+pub mod schema;
+pub mod suite;
+
+/// The PR tag new reports default to (`BENCH_<CURRENT_PR>.json`). Bumped by
+/// each PR that re-records the trajectory.
+pub const CURRENT_PR: &str = "6";
+
+pub use compare::{compare, CellStatus, CompareReport, Thresholds};
+pub use runner::{deterministic_view, run_suite};
+pub use schema::{BenchReport, CellRecord, SCHEMA_VERSION};
+pub use suite::{Load, SuiteSpec};

@@ -1,0 +1,254 @@
+//! Execute the workload matrix against a loaded [`ModelRuntime`] and fill a
+//! [`BenchReport`].
+//!
+//! The runner is a thin loop over [`suite`](super::suite)'s matrix: resolve
+//! the target's drafters from the manifest, probe each (shape, cache,
+//! drafter, load) cell for serveability (pure manifest lookups — a drafter
+//! lowered chain-only simply drops out of the tree/dyn rows, counted in the
+//! report's `note`), and run the survivors through the same
+//! `report::bench_otps`/`bench_otps_open` entry points the CLI benches use —
+//! the trajectory measures the real serving path, not a parallel harness.
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::coordinator::PagedKvConfig;
+use crate::masking::{DynamicTreeConfig, TreeTopology};
+use crate::report::{self, OtpsRun};
+use crate::runtime::ModelRuntime;
+
+use super::schema::{
+    BenchReport, CellConfig, CellMetrics, CellRecord, CellTiming, PolicyCell, SCHEMA_VERSION,
+};
+use super::suite::{policy_for, Load, SuiteSpec, CACHES, SHAPES, TREE_SPEC};
+
+/// `git rev-parse --short HEAD`, or "unknown" (no git, not a repo, …) — the
+/// header is provenance, never load-bearing.
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+fn unix_now() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
+}
+
+/// Run the full matrix for `spec`; `pr` tags the report (file naming stays
+/// with the caller). Cells whose executables are not lowered are skipped and
+/// counted in the report `note` — an EMPTY matrix is an error (wrong target
+/// or missing artifacts), a partial one is information.
+pub fn run_suite(mr: &mut ModelRuntime, spec: &SuiteSpec, pr: &str) -> Result<BenchReport> {
+    let k = mr.manifest.default_k;
+    let drafters: Vec<String> = mr
+        .manifest
+        .drafters
+        .values()
+        .filter(|d| d.target == spec.target)
+        .map(|d| d.name.clone())
+        .collect();
+    ensure!(!drafters.is_empty(), "no drafters serve target {}", spec.target);
+
+    let tree_topo = TreeTopology::parse(TREE_SPEC).map_err(|e| anyhow!(e))?;
+    let dyn_cfg = DynamicTreeConfig::serving_default();
+    let mut cells = Vec::new();
+    let mut skipped = 0usize;
+    for shape in SHAPES {
+        let (tree, dynamic) = match shape {
+            "tree" => (Some(&tree_topo), None),
+            "dyn" => (None, Some(&dyn_cfg)),
+            _ => (None, None),
+        };
+        for cache in CACHES {
+            let paged_on = cache == "paged";
+            for drafter in &drafters {
+                let policy = policy_for(shape, drafter, k).map_err(|e| anyhow!(e))?;
+                for load in spec.loads() {
+                    let conc = load.concurrency();
+                    if mr.probe_policy_execs(&spec.target, &policy, conc, paged_on).is_err() {
+                        skipped += 1;
+                        continue;
+                    }
+                    let paged = paged_on
+                        .then(|| PagedKvConfig { block_size: None, num_blocks: spec.kv_blocks });
+                    let run = match load {
+                        Load::Closed { .. } => report::bench_otps(
+                            mr, drafter, &spec.dataset, k, conc, spec.requests, spec.max_new,
+                            spec.seed, false, tree, dynamic, paged,
+                        )?,
+                        Load::Open { rate_rps, .. } => report::bench_otps_open(
+                            mr, drafter, &spec.dataset, k, conc, spec.requests, spec.max_new,
+                            spec.seed, false, tree, dynamic, paged, rate_rps,
+                        )?,
+                    };
+                    cells.push(cell_record(spec, shape, cache, drafter, &policy.id(), load, &run));
+                }
+            }
+        }
+    }
+    ensure!(
+        !cells.is_empty(),
+        "every matrix cell was skipped — no lowered executables for target {}",
+        spec.target
+    );
+    Ok(BenchReport {
+        schema_version: SCHEMA_VERSION,
+        pr: pr.to_string(),
+        git_rev: git_rev(),
+        created_unix: unix_now(),
+        suite: spec.suite_name().to_string(),
+        target: spec.target.clone(),
+        dataset: spec.dataset.clone(),
+        seed: spec.seed,
+        note: if skipped == 0 {
+            String::new()
+        } else {
+            format!("{skipped} matrix cells skipped (executables not lowered)")
+        },
+        cells,
+    })
+}
+
+fn cell_record(
+    spec: &SuiteSpec,
+    shape: &str,
+    cache: &str,
+    drafter: &str,
+    policy_id: &str,
+    load: Load,
+    run: &OtpsRun,
+) -> CellRecord {
+    let m = &run.metrics;
+    let config = CellConfig {
+        shape: shape.to_string(),
+        cache: cache.to_string(),
+        drafter: drafter.to_string(),
+        policy: policy_id.to_string(),
+        load: load.name().to_string(),
+        concurrency: load.concurrency(),
+        rate_rps: load.rate_rps(),
+        requests: spec.requests,
+        max_new: spec.max_new,
+        seed: spec.seed,
+        deterministic: load.deterministic(),
+    };
+    CellRecord {
+        id: config.id(),
+        metrics: CellMetrics {
+            requests_finished: m.requests_finished,
+            tokens_emitted: m.tokens_emitted,
+            iterations: m.iterations,
+            acceptance_length: m.acceptance_length(),
+            mean_occupancy: m.mean_occupancy(),
+            mean_block_occupancy: m.mean_block_occupancy(),
+            blocks_peak: m.blocks_peak,
+            admissions_blocked: m.admissions_blocked,
+            mean_active_nodes: m.mean_active_nodes(),
+            per_policy: m
+                .per_policy
+                .iter()
+                .map(|(name, pm)| PolicyCell {
+                    drafter: name.clone(),
+                    iterations: pm.iterations,
+                    acceptance_length: pm.acceptance_length(),
+                })
+                .collect(),
+        },
+        timing: CellTiming {
+            otps: m.otps(),
+            ttft_p50_us: m.ttft_quantile(0.5).as_micros() as u64,
+            ttft_p99_us: m.ttft_quantile(0.99).as_micros() as u64,
+            tpot_p50_us: m.tpot_quantile(0.5).as_micros() as u64,
+            tpot_p99_us: m.tpot_quantile(0.99).as_micros() as u64,
+            latency_p50_us: m.latency_quantile(0.5).as_micros() as u64,
+            latency_p99_us: m.latency_quantile(0.99).as_micros() as u64,
+            wall_ms: m.wall_time.as_millis() as u64,
+        },
+        config,
+    }
+}
+
+/// Strip the wall-clock payloads from a report for determinism comparison:
+/// zero `created_unix` and every cell's `timing`. Two same-seed smoke runs
+/// must agree exactly on what remains (deterministic cells' configs +
+/// metrics); the integration test and ARCHITECTURE.md state this contract.
+pub fn deterministic_view(r: &BenchReport) -> BenchReport {
+    let mut out = r.clone();
+    out.created_unix = 0;
+    out.git_rev = "-".into();
+    for c in &mut out.cells {
+        c.timing = CellTiming::default();
+        if !c.config.deterministic {
+            // open-loop cells: admission interleaving is wall-clock too
+            c.metrics = CellMetrics::default();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn git_rev_never_panics() {
+        // in this repo it's a short hash; elsewhere "unknown" — total either way
+        let r = git_rev();
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn deterministic_view_strips_wall_clock() {
+        let mut r = BenchReport {
+            schema_version: SCHEMA_VERSION,
+            pr: "6".into(),
+            git_rev: "abc".into(),
+            created_unix: 123,
+            suite: "smoke".into(),
+            target: "t".into(),
+            dataset: "mono".into(),
+            seed: 11,
+            note: String::new(),
+            cells: vec![],
+        };
+        let closed = CellConfig {
+            shape: "chain".into(),
+            cache: "dense".into(),
+            drafter: "d".into(),
+            policy: "d/chain:4".into(),
+            load: "closed".into(),
+            concurrency: 2,
+            rate_rps: 0.0,
+            requests: 6,
+            max_new: 24,
+            seed: 11,
+            deterministic: true,
+        };
+        let mut open = closed.clone();
+        open.load = "open".into();
+        open.rate_rps = 8.0;
+        open.deterministic = false;
+        let metrics = CellMetrics { tokens_emitted: 100, ..CellMetrics::default() };
+        let timing = CellTiming { otps: 50.0, wall_ms: 10, ..CellTiming::default() };
+        r.cells = vec![
+            CellRecord { id: closed.id(), config: closed, metrics: metrics.clone(), timing: timing.clone() },
+            CellRecord { id: open.id(), config: open, metrics, timing },
+        ];
+        let v = deterministic_view(&r);
+        assert_eq!(v.created_unix, 0);
+        // every cell's timing is zeroed
+        assert!(v.cells.iter().all(|c| c.timing == CellTiming::default()));
+        // deterministic cells keep their metrics, open-loop cells don't
+        assert_eq!(v.cells[0].metrics.tokens_emitted, 100);
+        assert_eq!(v.cells[1].metrics.tokens_emitted, 0);
+        // configs (the coverage) always survive
+        assert_eq!(v.cells[1].config.rate_rps, 8.0);
+    }
+}

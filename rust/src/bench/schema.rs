@@ -1,0 +1,543 @@
+//! The `BENCH_<pr>.json` perf-trajectory schema.
+//!
+//! One report = one suite run: a self-describing header (schema version, PR
+//! tag, git revision, suite flavor, base workload config) plus one record
+//! per matrix cell. Records split into three payloads with different
+//! comparison semantics:
+//!
+//! - `config`  — what the cell measured (identity; derives the cell id)
+//! - `metrics` — deterministic counters (identical across same-seed runs of
+//!               a `deterministic` cell; the determinism test compares these)
+//! - `timing`  — wall-clock-derived numbers (OTPS, TTFT/TPOT/latency
+//!               quantiles); never expected to be bit-stable, gated only
+//!               through the comparator's relative thresholds
+//!
+//! Serialization uses a FIXED key order, so serialize → parse → re-serialize
+//! is byte-identical (the round-trip test pins this): trajectory diffs in
+//! git stay minimal and the comparator can treat files as canonical.
+
+use crate::util::json::Json;
+
+/// Bump when a field is added/renamed/retyped. The parser REJECTS other
+/// versions — a trajectory file is an interchange format, not a best-effort
+/// guess.
+pub const SCHEMA_VERSION: usize = 1;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    pub schema_version: usize,
+    /// PR tag the file is named for (`BENCH_<pr>.json`)
+    pub pr: String,
+    /// `git rev-parse --short HEAD` at run time ("unknown" outside a repo)
+    pub git_rev: String,
+    /// unix seconds at run time (0 for hand-authored skeletons)
+    pub created_unix: u64,
+    /// "smoke" | "full"
+    pub suite: String,
+    pub target: String,
+    pub dataset: String,
+    /// base workload seed (every cell derives from it deterministically)
+    pub seed: u64,
+    /// free-form provenance note ("" = none)
+    pub note: String,
+    pub cells: Vec<CellRecord>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellRecord {
+    /// derived from `config` (see [`CellConfig::id`]); stored redundantly so
+    /// the file is greppable, re-checked on parse
+    pub id: String,
+    pub config: CellConfig,
+    pub metrics: CellMetrics,
+    pub timing: CellTiming,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellConfig {
+    /// speculation shape: "chain" | "tree" | "dyn"
+    pub shape: String,
+    /// KV cache mode: "dense" | "paged"
+    pub cache: String,
+    pub drafter: String,
+    /// full policy id (e.g. `target-m-pe4/tree:w3x2x1x1x1`)
+    pub policy: String,
+    /// arrival mode: "closed" | "open"
+    pub load: String,
+    pub concurrency: usize,
+    /// open-loop Poisson rate (req/s); 0.0 for closed loop
+    pub rate_rps: f64,
+    pub requests: usize,
+    pub max_new: usize,
+    pub seed: u64,
+    /// whether same-seed re-runs must reproduce `metrics` exactly
+    /// (closed-loop cells: yes; open-loop cells admit by wall clock: no)
+    pub deterministic: bool,
+}
+
+impl CellConfig {
+    /// Canonical cell id: `shape/cache/drafter/closed-cC` or
+    /// `shape/cache/drafter/open-cC-rRATE`.
+    pub fn id(&self) -> String {
+        match self.load.as_str() {
+            "open" => format!(
+                "{}/{}/{}/open-c{}-r{}",
+                self.shape, self.cache, self.drafter, self.concurrency, self.rate_rps
+            ),
+            _ => format!(
+                "{}/{}/{}/closed-c{}",
+                self.shape, self.cache, self.drafter, self.concurrency
+            ),
+        }
+    }
+}
+
+/// Deterministic counters (same-seed reproducible for `deterministic` cells).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct CellMetrics {
+    pub requests_finished: usize,
+    pub tokens_emitted: usize,
+    pub iterations: usize,
+    pub acceptance_length: f64,
+    pub mean_occupancy: f64,
+    /// paged cells only (0.0 in dense mode)
+    pub mean_block_occupancy: f64,
+    pub blocks_peak: usize,
+    pub admissions_blocked: usize,
+    /// tree/dyn cells only (0.0 in chain mode)
+    pub mean_active_nodes: f64,
+    /// per-drafter breakdown (singleton for these single-drafter cells, but
+    /// the schema carries the full map so multi-drafter cells can join later)
+    pub per_policy: Vec<PolicyCell>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicyCell {
+    pub drafter: String,
+    pub iterations: usize,
+    pub acceptance_length: f64,
+}
+
+/// Wall-clock-derived numbers (never bit-stable; threshold-compared only).
+/// Durations are integer microseconds — coarse enough to serialize exactly,
+/// fine enough for sub-millisecond TPOT.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct CellTiming {
+    pub otps: f64,
+    pub ttft_p50_us: u64,
+    pub ttft_p99_us: u64,
+    pub tpot_p50_us: u64,
+    pub tpot_p99_us: u64,
+    pub latency_p50_us: u64,
+    pub latency_p99_us: u64,
+    pub wall_ms: u64,
+}
+
+// ---- serialization (fixed key order — the round-trip contract) -----------
+
+impl BenchReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::num(self.schema_version as f64)),
+            ("pr", Json::s(&self.pr)),
+            ("git_rev", Json::s(&self.git_rev)),
+            ("created_unix", Json::num(self.created_unix as f64)),
+            ("suite", Json::s(&self.suite)),
+            ("target", Json::s(&self.target)),
+            ("dataset", Json::s(&self.dataset)),
+            ("seed", Json::num(self.seed as f64)),
+            ("note", Json::s(&self.note)),
+            ("cells", Json::Arr(self.cells.iter().map(CellRecord::to_json).collect())),
+        ])
+    }
+
+    /// Canonical file content: pretty JSON + one trailing newline.
+    pub fn to_file_string(&self) -> String {
+        let mut s = self.to_json().to_string_pretty();
+        s.push('\n');
+        s
+    }
+
+    /// Parse AND validate: schema version, required keys/types, cell-id
+    /// consistency. Everything the `--validate` CLI mode checks lives here.
+    pub fn parse(s: &str) -> Result<BenchReport, String> {
+        Self::from_json(&Json::parse(s)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<BenchReport, String> {
+        let ver = int(j, "schema_version")?;
+        if ver != SCHEMA_VERSION {
+            return Err(format!(
+                "schema_version {ver} unsupported (this build reads {SCHEMA_VERSION})"
+            ));
+        }
+        let cells = j
+            .get("cells")
+            .and_then(Json::as_arr)
+            .ok_or("cells: expected an array")?
+            .iter()
+            .enumerate()
+            .map(|(i, c)| CellRecord::from_json(c).map_err(|e| format!("cells[{i}]: {e}")))
+            .collect::<Result<Vec<_>, _>>()?;
+        let mut seen = std::collections::BTreeSet::new();
+        for c in &cells {
+            if !seen.insert(&c.id) {
+                return Err(format!("duplicate cell id {:?}", c.id));
+            }
+        }
+        Ok(BenchReport {
+            schema_version: ver,
+            pr: string(j, "pr")?,
+            git_rev: string(j, "git_rev")?,
+            created_unix: int(j, "created_unix")? as u64,
+            suite: string(j, "suite")?,
+            target: string(j, "target")?,
+            dataset: string(j, "dataset")?,
+            seed: int(j, "seed")? as u64,
+            note: string(j, "note")?,
+            cells,
+        })
+    }
+}
+
+impl CellRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::s(&self.id)),
+            ("config", self.config.to_json()),
+            ("metrics", self.metrics.to_json()),
+            ("timing", self.timing.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CellRecord, String> {
+        let config = CellConfig::from_json(j.get("config").ok_or("missing config")?)
+            .map_err(|e| format!("config: {e}"))?;
+        let id = string(j, "id")?;
+        if id != config.id() {
+            return Err(format!("id {:?} != derived {:?}", id, config.id()));
+        }
+        Ok(CellRecord {
+            id,
+            config,
+            metrics: CellMetrics::from_json(j.get("metrics").ok_or("missing metrics")?)
+                .map_err(|e| format!("metrics: {e}"))?,
+            timing: CellTiming::from_json(j.get("timing").ok_or("missing timing")?)
+                .map_err(|e| format!("timing: {e}"))?,
+        })
+    }
+}
+
+impl CellConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shape", Json::s(&self.shape)),
+            ("cache", Json::s(&self.cache)),
+            ("drafter", Json::s(&self.drafter)),
+            ("policy", Json::s(&self.policy)),
+            ("load", Json::s(&self.load)),
+            ("concurrency", Json::num(self.concurrency as f64)),
+            ("rate_rps", Json::num(self.rate_rps)),
+            ("requests", Json::num(self.requests as f64)),
+            ("max_new", Json::num(self.max_new as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("deterministic", Json::Bool(self.deterministic)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CellConfig, String> {
+        let shape = string(j, "shape")?;
+        let cache = string(j, "cache")?;
+        let load = string(j, "load")?;
+        if !matches!(shape.as_str(), "chain" | "tree" | "dyn") {
+            return Err(format!("shape {shape:?} not one of chain|tree|dyn"));
+        }
+        if !matches!(cache.as_str(), "dense" | "paged") {
+            return Err(format!("cache {cache:?} not one of dense|paged"));
+        }
+        if !matches!(load.as_str(), "closed" | "open") {
+            return Err(format!("load {load:?} not one of closed|open"));
+        }
+        Ok(CellConfig {
+            shape,
+            cache,
+            drafter: string(j, "drafter")?,
+            policy: string(j, "policy")?,
+            load,
+            concurrency: int(j, "concurrency")?,
+            rate_rps: float(j, "rate_rps")?,
+            requests: int(j, "requests")?,
+            max_new: int(j, "max_new")?,
+            seed: int(j, "seed")? as u64,
+            deterministic: boolean(j, "deterministic")?,
+        })
+    }
+}
+
+impl CellMetrics {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests_finished", Json::num(self.requests_finished as f64)),
+            ("tokens_emitted", Json::num(self.tokens_emitted as f64)),
+            ("iterations", Json::num(self.iterations as f64)),
+            ("acceptance_length", Json::num(self.acceptance_length)),
+            ("mean_occupancy", Json::num(self.mean_occupancy)),
+            ("mean_block_occupancy", Json::num(self.mean_block_occupancy)),
+            ("blocks_peak", Json::num(self.blocks_peak as f64)),
+            ("admissions_blocked", Json::num(self.admissions_blocked as f64)),
+            ("mean_active_nodes", Json::num(self.mean_active_nodes)),
+            (
+                "per_policy",
+                Json::Arr(
+                    self.per_policy
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("drafter", Json::s(&p.drafter)),
+                                ("iterations", Json::num(p.iterations as f64)),
+                                ("acceptance_length", Json::num(p.acceptance_length)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CellMetrics, String> {
+        let per_policy = j
+            .get("per_policy")
+            .and_then(Json::as_arr)
+            .ok_or("per_policy: expected an array")?
+            .iter()
+            .map(|p| {
+                Ok(PolicyCell {
+                    drafter: string(p, "drafter")?,
+                    iterations: int(p, "iterations")?,
+                    acceptance_length: float(p, "acceptance_length")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(CellMetrics {
+            requests_finished: int(j, "requests_finished")?,
+            tokens_emitted: int(j, "tokens_emitted")?,
+            iterations: int(j, "iterations")?,
+            acceptance_length: float(j, "acceptance_length")?,
+            mean_occupancy: float(j, "mean_occupancy")?,
+            mean_block_occupancy: float(j, "mean_block_occupancy")?,
+            blocks_peak: int(j, "blocks_peak")?,
+            admissions_blocked: int(j, "admissions_blocked")?,
+            mean_active_nodes: float(j, "mean_active_nodes")?,
+            per_policy,
+        })
+    }
+}
+
+impl CellTiming {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("otps", Json::num(self.otps)),
+            ("ttft_p50_us", Json::num(self.ttft_p50_us as f64)),
+            ("ttft_p99_us", Json::num(self.ttft_p99_us as f64)),
+            ("tpot_p50_us", Json::num(self.tpot_p50_us as f64)),
+            ("tpot_p99_us", Json::num(self.tpot_p99_us as f64)),
+            ("latency_p50_us", Json::num(self.latency_p50_us as f64)),
+            ("latency_p99_us", Json::num(self.latency_p99_us as f64)),
+            ("wall_ms", Json::num(self.wall_ms as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CellTiming, String> {
+        Ok(CellTiming {
+            otps: float(j, "otps")?,
+            ttft_p50_us: int(j, "ttft_p50_us")? as u64,
+            ttft_p99_us: int(j, "ttft_p99_us")? as u64,
+            tpot_p50_us: int(j, "tpot_p50_us")? as u64,
+            tpot_p99_us: int(j, "tpot_p99_us")? as u64,
+            latency_p50_us: int(j, "latency_p50_us")? as u64,
+            latency_p99_us: int(j, "latency_p99_us")? as u64,
+            wall_ms: int(j, "wall_ms")? as u64,
+        })
+    }
+}
+
+// ---- typed accessors with error messages (no panicking req/str_of here —
+// a malformed trajectory file must surface as a CLI error, not a panic) ----
+
+fn string(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("{key}: expected a string"))
+}
+
+fn float(j: &Json, key: &str) -> Result<f64, String> {
+    let x = j
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{key}: expected a number"))?;
+    if !x.is_finite() {
+        return Err(format!("{key}: not finite"));
+    }
+    Ok(x)
+}
+
+fn int(j: &Json, key: &str) -> Result<usize, String> {
+    let x = float(j, key)?;
+    if x < 0.0 || x.fract() != 0.0 {
+        return Err(format!("{key}: expected a non-negative integer, got {x}"));
+    }
+    Ok(x as usize)
+}
+
+fn boolean(j: &Json, key: &str) -> Result<bool, String> {
+    j.get(key)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| format!("{key}: expected a bool"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample_report() -> BenchReport {
+        BenchReport {
+            schema_version: SCHEMA_VERSION,
+            pr: "6".into(),
+            git_rev: "abc1234".into(),
+            created_unix: 1754000000,
+            suite: "smoke".into(),
+            target: "target-m".into(),
+            dataset: "mono".into(),
+            seed: 11,
+            note: "".into(),
+            cells: vec![
+                CellRecord {
+                    id: "chain/dense/target-m-pe4/closed-c2".into(),
+                    config: CellConfig {
+                        shape: "chain".into(),
+                        cache: "dense".into(),
+                        drafter: "target-m-pe4".into(),
+                        policy: "target-m-pe4/chain:4".into(),
+                        load: "closed".into(),
+                        concurrency: 2,
+                        rate_rps: 0.0,
+                        requests: 8,
+                        max_new: 32,
+                        seed: 11,
+                        deterministic: true,
+                    },
+                    metrics: CellMetrics {
+                        requests_finished: 8,
+                        tokens_emitted: 256,
+                        iterations: 64,
+                        acceptance_length: 3.5,
+                        mean_occupancy: 0.9,
+                        mean_block_occupancy: 0.0,
+                        blocks_peak: 0,
+                        admissions_blocked: 0,
+                        mean_active_nodes: 0.0,
+                        per_policy: vec![PolicyCell {
+                            drafter: "target-m-pe4".into(),
+                            iterations: 64,
+                            acceptance_length: 3.5,
+                        }],
+                    },
+                    timing: CellTiming {
+                        otps: 1234.5,
+                        ttft_p50_us: 800,
+                        ttft_p99_us: 2000,
+                        tpot_p50_us: 150,
+                        tpot_p99_us: 400,
+                        latency_p50_us: 9000,
+                        latency_p99_us: 15000,
+                        wall_ms: 210,
+                    },
+                },
+                CellRecord {
+                    id: "tree/paged/target-m-pe4/open-c2-r8".into(),
+                    config: CellConfig {
+                        shape: "tree".into(),
+                        cache: "paged".into(),
+                        drafter: "target-m-pe4".into(),
+                        policy: "target-m-pe4/tree:w3x2x1x1x1".into(),
+                        load: "open".into(),
+                        concurrency: 2,
+                        rate_rps: 8.0,
+                        requests: 8,
+                        max_new: 32,
+                        seed: 11,
+                        deterministic: false,
+                    },
+                    metrics: CellMetrics {
+                        mean_block_occupancy: 0.4,
+                        blocks_peak: 12,
+                        mean_active_nodes: 8.0,
+                        per_policy: vec![],
+                        ..CellMetrics::default()
+                    },
+                    timing: CellTiming::default(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn round_trip_is_byte_identical() {
+        // THE schema contract: serialize → parse → re-serialize reproduces
+        // the exact bytes (fixed key order + shortest-repr numerics)
+        let r = sample_report();
+        let s1 = r.to_file_string();
+        let parsed = BenchReport::parse(&s1).unwrap();
+        assert_eq!(parsed, r);
+        assert_eq!(parsed.to_file_string(), s1);
+    }
+
+    #[test]
+    fn cell_ids_derive_from_config() {
+        let r = sample_report();
+        assert_eq!(r.cells[0].config.id(), "chain/dense/target-m-pe4/closed-c2");
+        assert_eq!(r.cells[1].config.id(), "tree/paged/target-m-pe4/open-c2-r8");
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let mut s = sample_report().to_file_string();
+        s = s.replace("\"schema_version\": 1", "\"schema_version\": 99");
+        let e = BenchReport::parse(&s).unwrap_err();
+        assert!(e.contains("schema_version 99"), "{e}");
+    }
+
+    #[test]
+    fn rejects_id_config_mismatch() {
+        let s = sample_report()
+            .to_file_string()
+            .replace("chain/dense/target-m-pe4/closed-c2", "chain/dense/WRONG/closed-c2");
+        // replaces the stored id (and only the id — the config spells the
+        // drafter on its own line), so derivation catches the mismatch
+        let e = BenchReport::parse(&s).unwrap_err();
+        assert!(e.contains("derived"), "{e}");
+    }
+
+    #[test]
+    fn rejects_duplicate_ids() {
+        let mut r = sample_report();
+        let dup = r.cells[0].clone();
+        r.cells.push(dup);
+        let e = BenchReport::parse(&r.to_file_string()).unwrap_err();
+        assert!(e.contains("duplicate"), "{e}");
+    }
+
+    #[test]
+    fn rejects_bad_enums_and_types() {
+        let base = sample_report();
+        let s = base.to_file_string().replace("\"cache\": \"dense\"", "\"cache\": \"flat\"");
+        assert!(BenchReport::parse(&s).unwrap_err().contains("cache"));
+        let s = base
+            .to_file_string()
+            .replace("\"iterations\": 64", "\"iterations\": -3");
+        assert!(BenchReport::parse(&s).unwrap_err().contains("iterations"));
+        let s = base.to_file_string().replace("\"pr\": \"6\"", "\"pr\": 6");
+        assert!(BenchReport::parse(&s).unwrap_err().contains("pr"));
+    }
+}

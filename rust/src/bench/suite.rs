@@ -1,0 +1,163 @@
+//! The fixed workload matrix the perf trajectory tracks:
+//! {chain, tree, dyn} × {dense, paged} × (serveable drafters) × loads.
+//!
+//! The matrix is DEFINED here as data (shapes, caches, loads, and the policy
+//! each shape maps to); the runner resolves it against a manifest (which
+//! drafters exist and which cells their lowered executables can actually
+//! serve) and executes the surviving cells. Keeping the definition
+//! manifest-free means the comparator and the tests can reason about
+//! expected coverage without artifacts on disk.
+
+use crate::masking::{DynamicTreeConfig, TreeTopology};
+use crate::coordinator::SpecPolicy;
+
+/// Speculation shapes, in matrix order.
+pub const SHAPES: [&str; 3] = ["chain", "tree", "dyn"];
+
+/// KV cache modes, in matrix order.
+pub const CACHES: [&str; 2] = ["dense", "paged"];
+
+/// The static tree every `tree` cell drafts (the repo's standard comparison
+/// topology — 8 nodes, depth 5, embeds the rank-0 chain).
+pub const TREE_SPEC: &str = "w:3,2,1,1,1";
+
+/// One arrival-load column of the matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Load {
+    /// fixed concurrency, next request admitted on completion
+    Closed { concurrency: usize },
+    /// Poisson arrivals at `rate_rps`, slot cap `concurrency`
+    Open { concurrency: usize, rate_rps: f64 },
+}
+
+impl Load {
+    pub fn concurrency(&self) -> usize {
+        match *self {
+            Load::Closed { concurrency } | Load::Open { concurrency, .. } => concurrency,
+        }
+    }
+
+    pub fn rate_rps(&self) -> f64 {
+        match *self {
+            Load::Closed { .. } => 0.0,
+            Load::Open { rate_rps, .. } => rate_rps,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Load::Closed { .. } => "closed",
+            Load::Open { .. } => "open",
+        }
+    }
+
+    /// Closed-loop cells replay exactly given the seed; open-loop admission
+    /// depends on wall-clock service times.
+    pub fn deterministic(&self) -> bool {
+        matches!(self, Load::Closed { .. })
+    }
+}
+
+/// What a suite run measures: the workload knobs shared by every cell.
+/// `smoke` shrinks the load columns and the per-cell budgets to CI scale.
+#[derive(Clone, Debug)]
+pub struct SuiteSpec {
+    pub smoke: bool,
+    pub target: String,
+    pub dataset: String,
+    /// requests per cell
+    pub requests: usize,
+    pub max_new: usize,
+    pub seed: u64,
+    /// paged cells: block budget (None = fully provisioned)
+    pub kv_blocks: Option<usize>,
+}
+
+impl SuiteSpec {
+    pub fn new(smoke: bool) -> SuiteSpec {
+        SuiteSpec {
+            smoke,
+            target: "target-m".into(),
+            dataset: "mtbench".into(),
+            requests: if smoke { 6 } else { 16 },
+            max_new: if smoke { 24 } else { 48 },
+            seed: 11,
+            kv_blocks: None,
+        }
+    }
+
+    pub fn suite_name(&self) -> &'static str {
+        if self.smoke {
+            "smoke"
+        } else {
+            "full"
+        }
+    }
+
+    /// The arrival-load columns this suite runs per (shape, cache, drafter).
+    pub fn loads(&self) -> Vec<Load> {
+        if self.smoke {
+            vec![Load::Closed { concurrency: 2 }, Load::Open { concurrency: 2, rate_rps: 8.0 }]
+        } else {
+            vec![
+                Load::Closed { concurrency: 2 },
+                Load::Closed { concurrency: 4 },
+                Load::Open { concurrency: 4, rate_rps: 8.0 },
+            ]
+        }
+    }
+}
+
+/// The [`SpecPolicy`] a matrix shape maps a drafter onto: chain at the
+/// manifest's default K, the standard static tree, or the default dynamic
+/// envelope/budget. The single source of "what does a `tree` cell run".
+pub fn policy_for(shape: &str, drafter: &str, default_k: usize) -> Result<SpecPolicy, String> {
+    match shape {
+        "chain" => Ok(SpecPolicy::chain(drafter, default_k)),
+        "tree" => Ok(SpecPolicy::tree(drafter, TreeTopology::parse(TREE_SPEC)?)),
+        "dyn" => {
+            Ok(SpecPolicy::from_dynamic_config(drafter, &DynamicTreeConfig::serving_default()))
+        }
+        other => Err(format!("unknown shape {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_and_full_load_columns() {
+        let smoke = SuiteSpec::new(true);
+        assert_eq!(smoke.suite_name(), "smoke");
+        assert_eq!(smoke.loads().len(), 2);
+        assert!(smoke.loads().iter().any(|l| !l.deterministic()));
+        let full = SuiteSpec::new(false);
+        assert_eq!(full.suite_name(), "full");
+        assert_eq!(full.loads().len(), 3);
+        // every suite covers both arrival modes
+        for s in [&smoke, &full] {
+            assert!(s.loads().iter().any(|l| l.name() == "closed"));
+            assert!(s.loads().iter().any(|l| l.name() == "open"));
+        }
+    }
+
+    #[test]
+    fn load_accessors() {
+        let c = Load::Closed { concurrency: 4 };
+        assert_eq!((c.concurrency(), c.rate_rps(), c.name()), (4, 0.0, "closed"));
+        assert!(c.deterministic());
+        let o = Load::Open { concurrency: 2, rate_rps: 8.0 };
+        assert_eq!((o.concurrency(), o.rate_rps(), o.name()), (2, 8.0, "open"));
+        assert!(!o.deterministic());
+    }
+
+    #[test]
+    fn shape_policies() {
+        assert_eq!(policy_for("chain", "d", 4).unwrap().id(), "d/chain:4");
+        assert_eq!(policy_for("tree", "d", 4).unwrap().id(), "d/tree:w3x2x1x1x1");
+        let dynp = policy_for("dyn", "d", 4).unwrap();
+        assert_eq!(dynp.mode_name(), "dyn");
+        assert!(policy_for("ring", "d", 4).is_err());
+    }
+}

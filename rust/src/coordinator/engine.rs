@@ -319,6 +319,10 @@ struct ActiveSlot {
     iterations: usize,
     accepted_sum: usize,
     t_submit: Instant,
+    /// instant of this slot's most recent token emission (the prefill token
+    /// at admission, then reset on every step that commits tokens) — the
+    /// inter-token gaps between these feed [`EngineMetrics::record_tpot`]
+    t_last_emit: Instant,
 }
 
 impl ActiveSlot {
@@ -714,6 +718,7 @@ impl EngineCore {
                 iterations: 0,
                 accepted_sum: 0,
                 t_submit,
+                t_last_emit: Instant::now(),
                 rng,
                 key,
                 policy,
@@ -1061,6 +1066,11 @@ impl EngineCore {
                 }
             }
             emitted_now[i] = step_toks.len();
+            if !step_toks.is_empty() {
+                let gap = s.t_last_emit.elapsed();
+                self.metrics.record_tpot(step_toks.len(), gap);
+                s.t_last_emit = Instant::now();
+            }
             self.metrics
                 .policy_mut(&drafter_name, group_al)
                 .record_iteration(step_toks.len(), path.len());

@@ -157,6 +157,13 @@ pub struct EngineMetrics {
     pub request_latencies: Vec<Duration>,
     /// submit -> first emitted token, per request (includes queue wait)
     pub ttfts: Vec<Duration>,
+    /// per-token inter-token gaps (TPOT): a slot-iteration that emits `m`
+    /// tokens after a gap `g` since that slot's previous emission records
+    /// `m` samples of `g / m` — so a speculative chunk's burst is amortized
+    /// over the tokens it delivered and the quantiles stay comparable to a
+    /// one-token-per-step decoder. Samples are per TOKEN (not per request):
+    /// `tpot_quantile` answers "what gap does the p-th output token see".
+    pub tpots: Vec<Duration>,
     /// per-drafter breakdown (multi-policy engines; singleton for a
     /// homogeneous batch) — see [`PolicyMetrics`]
     pub per_policy: BTreeMap<String, PolicyMetrics>,
@@ -318,6 +325,25 @@ impl EngineMetrics {
         quantile(&self.ttfts, p)
     }
 
+    /// Time-per-output-token quantile over the recorded inter-token gaps
+    /// (see [`tpots`](Self::tpots)). [`Duration::ZERO`] when no decode
+    /// iterations ran — an empty bench cell is a value, not a panic.
+    pub fn tpot_quantile(&self, p: f64) -> Duration {
+        quantile(&self.tpots, p)
+    }
+
+    /// Record one slot-iteration's emission burst for TPOT: `emitted` tokens
+    /// delivered `gap` after the slot's previous emission.
+    pub fn record_tpot(&mut self, emitted: usize, gap: Duration) {
+        if emitted == 0 {
+            return;
+        }
+        let per = gap / emitted as u32;
+        for _ in 0..emitted {
+            self.tpots.push(per);
+        }
+    }
+
     /// Fold another metrics block into this one (e.g. per-EngineCore metrics
     /// accumulated by a scheduler across widths). Wall times add.
     pub fn merge(&mut self, other: &EngineMetrics) {
@@ -358,6 +384,7 @@ impl EngineMetrics {
         self.wall_time += other.wall_time;
         self.request_latencies.extend_from_slice(&other.request_latencies);
         self.ttfts.extend_from_slice(&other.ttfts);
+        self.tpots.extend_from_slice(&other.tpots);
         for (name, pm) in &other.per_policy {
             self.per_policy.entry(name.clone()).or_default().merge(pm);
         }
@@ -366,13 +393,14 @@ impl EngineMetrics {
     pub fn summary(&self) -> String {
         let mut s = format!(
             "req={} tok={} iters={} AL={:.2} OTPS={:.0} occ={:.2} \
-             draft={:?} verify={:?} admit={:?} commit={:?}",
+             p50TPOT={:?} draft={:?} verify={:?} admit={:?} commit={:?}",
             self.requests_finished,
             self.tokens_emitted,
             self.iterations,
             self.acceptance_length(),
             self.otps(),
             self.mean_occupancy(),
+            self.tpot_quantile(0.5),
             self.draft_time,
             self.verify_time,
             self.admission_time,
@@ -391,6 +419,11 @@ impl EngineMetrics {
     }
 }
 
+/// Empirical quantile over duration samples. Total on ANY input: an empty
+/// sample set returns [`Duration::ZERO`] (the smoke-sized bench matrix
+/// legitimately produces empty cells — a zero-requests cell must serialize,
+/// not panic), and `p` outside `[0, 1]` (or NaN) clamps into range via the
+/// index arithmetic (`as usize` saturates).
 fn quantile(v: &[Duration], p: f64) -> Duration {
     if v.is_empty() {
         return Duration::ZERO;
@@ -452,6 +485,68 @@ mod tests {
         }
         assert_eq!(m.ttft_quantile(0.0), Duration::from_millis(5));
         assert_eq!(m.ttft_quantile(0.99), Duration::from_millis(25));
+    }
+
+    #[test]
+    fn tpot_quantiles() {
+        // mirrors ttft_quantiles: direct samples, quantile lookups
+        let mut m = EngineMetrics::new(2);
+        for ms in [2u64, 4, 6, 8] {
+            m.tpots.push(Duration::from_millis(ms));
+        }
+        assert_eq!(m.tpot_quantile(0.0), Duration::from_millis(2));
+        assert_eq!(m.tpot_quantile(0.5), Duration::from_millis(6));
+        assert_eq!(m.tpot_quantile(0.99), Duration::from_millis(8));
+        assert!(m.summary().contains("p50TPOT"));
+    }
+
+    #[test]
+    fn tpot_burst_amortizes_over_emitted_tokens() {
+        // a 3-token speculative burst 9ms after the previous emission is
+        // three 3ms gaps, not one 9ms gap — AL-independent quantiles
+        let mut m = EngineMetrics::new(5);
+        m.record_tpot(3, Duration::from_millis(9));
+        m.record_tpot(1, Duration::from_millis(5));
+        m.record_tpot(0, Duration::from_millis(100)); // no tokens, no sample
+        assert_eq!(m.tpots.len(), 4);
+        assert_eq!(m.tpot_quantile(0.0), Duration::from_millis(3));
+        assert_eq!(m.tpot_quantile(0.99), Duration::from_millis(5));
+    }
+
+    #[test]
+    fn tpot_merges() {
+        let mut a = EngineMetrics::new(2);
+        a.tpots.push(Duration::from_millis(1));
+        let mut b = EngineMetrics::new(2);
+        b.record_tpot(2, Duration::from_millis(4));
+        a.merge(&b);
+        assert_eq!(a.tpots.len(), 3);
+        assert_eq!(a.tpot_quantile(1.0), Duration::from_millis(2));
+    }
+
+    #[test]
+    fn empty_samples_are_values_not_panics() {
+        // the smoke bench matrix produces legitimately empty cells: every
+        // quantile and ratio helper must return zero, never divide or index
+        let m = EngineMetrics::new(3);
+        assert_eq!(m.ttft_quantile(0.5), Duration::ZERO);
+        assert_eq!(m.tpot_quantile(0.99), Duration::ZERO);
+        assert_eq!(m.latency_quantile(0.5), Duration::ZERO);
+        assert_eq!(m.otps(), 0.0); // zero wall time
+        assert_eq!(m.acceptance_length(), 0.0);
+        assert_eq!(m.mean_occupancy(), 0.0);
+        assert_eq!(m.mean_block_occupancy(), 0.0);
+        assert_eq!(m.mean_active_nodes(), 0.0);
+        assert!(m.depth_acceptance_rates().is_empty());
+        let pm = PolicyMetrics::default();
+        assert_eq!(pm.acceptance_length(), 0.0);
+        assert!(pm.depth_acceptance_rates().is_empty());
+        // out-of-range quantile args clamp instead of indexing out of bounds
+        let mut m = EngineMetrics::new(3);
+        m.ttfts.push(Duration::from_millis(7));
+        assert_eq!(m.ttft_quantile(2.0), Duration::from_millis(7));
+        assert_eq!(m.ttft_quantile(-1.0), Duration::from_millis(7));
+        assert_eq!(m.ttft_quantile(f64::NAN), Duration::from_millis(7));
     }
 
     #[test]

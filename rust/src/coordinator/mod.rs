@@ -24,5 +24,5 @@ pub use request::{
     FinishReason, Request, RequestResult, RequestSpec, SamplingParams, SpecPolicy,
 };
 pub use sampler::Sampling;
-pub use scheduler::{run_closed_loop, Scheduler};
+pub use scheduler::{run_closed_loop, run_open_loop, Scheduler};
 pub use server::{ServerEvent, ServerHandle, ServerMsg};

@@ -168,6 +168,65 @@ pub fn run_closed_loop(
     Ok((results, metrics))
 }
 
+/// Open-loop driver: requests arrive on their own wall-clock schedule
+/// (`Request::arrival_s`, seconds from driver start) regardless of how many
+/// are already in flight — the latency-under-load client. A request whose
+/// arrival time has passed is admitted as soon as a slot frees; TTFT measured
+/// from submit therefore includes genuine queueing delay, which is the point
+/// of the open-loop experiment. `requests` must be sorted by `arrival_s`
+/// (as [`ArrivalProcess::take_poisson`] produces them).
+///
+/// The engine only runs while work exists: with no requests in flight and the
+/// next arrival still in the future, the driver sleeps (capped at 50ms per
+/// nap so a coarse schedule still polls responsively).
+pub fn run_open_loop(
+    mr: &mut ModelRuntime,
+    cfg: &EngineConfig,
+    concurrency: usize,
+    requests: Vec<Request>,
+) -> Result<(Vec<RequestResult>, EngineMetrics)> {
+    let total = requests.len();
+    let mut cfgc = cfg.clone();
+    cfgc.batch = concurrency;
+    let mut core = EngineCore::new(mr, cfgc)?;
+    let mut results = Vec::with_capacity(total);
+    let mut pending = requests.into_iter().peekable();
+    let t0 = Instant::now();
+    while results.len() < total {
+        let now_s = t0.elapsed().as_secs_f64();
+        while core.in_flight() < concurrency
+            && pending.peek().is_some_and(|r| r.arrival_s <= now_s)
+        {
+            core.add_request(pending.next().unwrap())?;
+        }
+        if core.is_idle() {
+            match pending.peek() {
+                // nothing live, nothing due: nap until the next arrival
+                Some(r) => {
+                    let wait = (r.arrival_s - t0.elapsed().as_secs_f64()).max(0.0);
+                    if wait > 0.0 {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(
+                            wait.min(0.05),
+                        ));
+                    }
+                    continue;
+                }
+                None => {
+                    return Err(anyhow!(
+                        "open loop stalled at {}/{total} results",
+                        results.len()
+                    ))
+                }
+            }
+        }
+        let report = core.step(mr)?;
+        results.extend(report.into_finished());
+    }
+    let mut metrics = core.into_metrics();
+    metrics.wall_time = t0.elapsed();
+    Ok((results, metrics))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

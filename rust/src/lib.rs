@@ -26,6 +26,7 @@
 //!   events, and the workload + mask/partition/memory substrates feed the
 //!   bench harnesses that regenerate every table and figure.
 
+pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod masking;

@@ -32,6 +32,20 @@
 //!                                      budget = the static tree's node
 //!                                      count — plus the accepted-by-depth
 //!                                      tuning histogram)
+//!   bench-suite                       perf-trajectory matrix -> BENCH_<pr>.json
+//!              [--smoke]              (CI-sized matrix: fewer loads, tiny budgets)
+//!              [--pr N --out FILE]    (default BENCH_<CURRENT_PR>.json)
+//!              [--target --dataset --requests --max-new --seed --kv-blocks N]
+//!              [--compare OLD.json]   (run, then gate vs OLD: exit 1 when a
+//!                                      cell regresses beyond thresholds)
+//!              [--compare OLD.json --new NEW.json]
+//!                                     (pure file-vs-file gate — no runtime,
+//!                                      no artifacts needed)
+//!              [--validate FILE]      (schema-check one file, no runtime)
+//!              [--threshold-otps F --threshold-ttft F]
+//!                                     (relative regression limits; default
+//!                                      0.10 OTPS drop, 0.20 p99 TTFT growth)
+//!              [--advisory]           (report regressions, exit 0 anyway)
 //!   report     --fig1 | --fig5 | --memmodel
 //!   info                              manifest summary
 
@@ -124,10 +138,11 @@ fn main() -> Result<()> {
         Some("serve") => serve(&args),
         Some("eval-acceptance") => eval_acceptance(&args),
         Some("bench-otps") => bench_otps(&args),
+        Some("bench-suite") => bench_suite(&args),
         Some("report") => run_report(&args),
         other => {
             eprintln!("unknown subcommand {other:?}");
-            eprintln!("usage: p-eagle <selftest|info|serve|eval-acceptance|bench-otps|report> [options]");
+            eprintln!("usage: p-eagle <selftest|info|serve|eval-acceptance|bench-otps|bench-suite|report> [options]");
             std::process::exit(2);
         }
     }
@@ -193,10 +208,10 @@ fn serve(args: &Args) -> Result<()> {
     let dataset = args.get_or("dataset", "mtbench");
     let quiet = args.flag("quiet");
 
-    let drafters: Vec<String> = args
-        .get("drafters")
-        .map(|s| s.split(',').map(|d| d.trim().to_string()).filter(|d| !d.is_empty()).collect())
-        .unwrap_or_else(|| vec![manifest.serving_drafter(&target, &method)]);
+    let mut drafters = args.str_list("drafters");
+    if drafters.is_empty() && args.get("drafters").is_none() {
+        drafters = vec![manifest.serving_drafter(&target, &method)];
+    }
     anyhow::ensure!(!drafters.is_empty(), "--drafters needs at least one name");
 
     // the speculation shape: --policy wins; otherwise the legacy --tree-dyn
@@ -270,11 +285,13 @@ fn serve(args: &Args) -> Result<()> {
         drafters.join(",")
     );
     println!(
-        "OTPS {:.0}  AL {:.2}  occupancy {:.2}  p50 TTFT {:?}  p50 latency {:?}  p99 latency {:?}",
+        "OTPS {:.0}  AL {:.2}  occupancy {:.2}  p50 TTFT {:?}  p50 TPOT {:?}  \
+         p50 latency {:?}  p99 latency {:?}",
         metrics.otps(),
         metrics.acceptance_length(),
         metrics.mean_occupancy(),
         metrics.ttft_quantile(0.5),
+        metrics.tpot_quantile(0.5),
         metrics.latency_quantile(0.5),
         metrics.latency_quantile(0.99),
     );
@@ -448,11 +465,13 @@ fn bench_otps(args: &Args) -> Result<()> {
         paged_opts(args),
     )?;
     println!(
-        "OTPS[{target}/{method} K={k} C={conc} {dataset}{}] = {:.0} (AL {:.2}, occupancy {:.2})",
+        "OTPS[{target}/{method} K={k} C={conc} {dataset}{}] = {:.0} \
+         (AL {:.2}, occupancy {:.2}, p50 TPOT {:?})",
         if mixed { " mixed" } else { "" },
         run.otps,
         run.acceptance_length,
         run.mean_occupancy,
+        run.metrics.tpot_quantile(0.5),
     );
     if run.metrics.block_steps_total > 0 {
         println!(
@@ -468,14 +487,84 @@ fn bench_otps(args: &Args) -> Result<()> {
         let m = &run.metrics;
         println!(
             "breakdown: admission {:?} ({} admits)  draft {:?}  verify {:?}  host {:?}  \
-             (engine wall {:?}, {} iterations, p50 TTFT {:?})",
+             (engine wall {:?}, {} iterations, p50 TTFT {:?}, p50 TPOT {:?})",
             m.admission_time, m.admissions, m.draft_time, m.verify_time, m.host_time,
-            m.wall_time, m.iterations, m.ttft_quantile(0.5)
+            m.wall_time, m.iterations, m.ttft_quantile(0.5), m.tpot_quantile(0.5)
         );
         println!(
             "runtime: {} exec calls, exec {:?}, untuple {:?}, compile {:?}",
             mr.rt.exec_calls, mr.rt.exec_time, mr.rt.untuple_time, mr.rt.compile_time
         );
+    }
+    Ok(())
+}
+
+/// The perf-trajectory harness: run the workload matrix into
+/// `BENCH_<pr>.json` and/or gate two trajectory files against each other.
+/// `--validate` and the file-vs-file `--compare OLD --new NEW` modes are
+/// PURE file operations — CI runs them with no artifacts and no PJRT.
+/// Regressions beyond the thresholds exit nonzero unless `--advisory`.
+fn bench_suite(args: &Args) -> Result<()> {
+    use p_eagle::bench::{self, BenchReport, SuiteSpec, Thresholds};
+
+    let load_file = |path: &str| -> Result<BenchReport> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {path}: {e}"))?;
+        BenchReport::parse(&text).map_err(|e| anyhow!("{path}: {e}"))
+    };
+    if let Some(f) = args.get("validate") {
+        let r = load_file(f)?;
+        println!(
+            "{f}: schema v{} OK — {} cells ({} suite, pr {}, git {})",
+            r.schema_version,
+            r.cells.len(),
+            r.suite,
+            r.pr,
+            r.git_rev,
+        );
+        return Ok(());
+    }
+    let th = Thresholds {
+        otps_frac: args.f64_or("threshold-otps", Thresholds::default().otps_frac),
+        ttft_frac: args.f64_or("threshold-ttft", Thresholds::default().ttft_frac),
+    };
+    let gate = |old: &BenchReport, new: &BenchReport| {
+        let rep = bench::compare(old, new, th);
+        print!("{}", rep.render());
+        if rep.has_regressions() && !args.flag("advisory") {
+            std::process::exit(1);
+        }
+    };
+    if let (Some(oldf), Some(newf)) = (args.get("compare"), args.get("new")) {
+        gate(&load_file(oldf)?, &load_file(newf)?);
+        return Ok(());
+    }
+
+    let mut spec = SuiteSpec::new(args.flag("smoke"));
+    spec.target = args.get_or("target", &spec.target);
+    spec.dataset = args.get_or("dataset", &spec.dataset);
+    spec.requests = args.usize_or("requests", spec.requests);
+    spec.max_new = args.usize_or("max-new", spec.max_new);
+    spec.seed = args.usize_or("seed", spec.seed as usize) as u64;
+    spec.kv_blocks = args.get("kv-blocks").map(|n| {
+        n.parse().unwrap_or_else(|_| panic!("--kv-blocks expects a number"))
+    });
+    let pr = args.get_or("pr", bench::CURRENT_PR);
+    let mut mr = ModelRuntime::load(artifacts_root(args))?;
+    let report = bench::run_suite(&mut mr, &spec, &pr)?;
+    let out = args.get_or("out", &format!("BENCH_{pr}.json"));
+    std::fs::write(&out, report.to_file_string())
+        .map_err(|e| anyhow!("writing {out}: {e}"))?;
+    println!(
+        "wrote {out}: {} cells ({} suite, target {}, seed {}){}",
+        report.cells.len(),
+        report.suite,
+        report.target,
+        report.seed,
+        if report.note.is_empty() { String::new() } else { format!(" — {}", report.note) },
+    );
+    if let Some(oldf) = args.get("compare") {
+        gate(&load_file(oldf)?, &report);
     }
     Ok(())
 }

@@ -7,8 +7,8 @@ use anyhow::{anyhow, Result};
 
 use crate::config::Manifest;
 use crate::coordinator::{
-    run_closed_loop, EngineConfig, EngineCore, EngineMetrics, PagedKvConfig, RequestResult,
-    SpecPolicy,
+    run_closed_loop, run_open_loop, EngineConfig, EngineCore, EngineMetrics, PagedKvConfig,
+    RequestResult, SpecPolicy,
 };
 use crate::masking::{DynamicTreeConfig, TreeTopology};
 use crate::runtime::ModelRuntime;
@@ -108,6 +108,8 @@ pub struct OtpsRun {
     pub concurrency: usize,
     /// tree topology id when this run used tree speculation
     pub topology: Option<String>,
+    /// open-loop Poisson arrival rate (req/s); `None` for closed loop
+    pub rate_rps: Option<f64>,
     pub otps: f64,
     pub acceptance_length: f64,
     /// mean fraction of engine rows doing useful work per step
@@ -143,6 +145,57 @@ pub fn bench_otps(
     tree_dynamic: Option<&DynamicTreeConfig>,
     paged: Option<PagedKvConfig>,
 ) -> Result<OtpsRun> {
+    bench_otps_inner(
+        mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
+        mixed_lengths, tree, tree_dynamic, paged, None,
+    )
+}
+
+/// Open-loop OTPS/latency at Poisson arrival rate `rate_rps` req/s with a
+/// slot cap of `concurrency`: the latency-under-load experiment. Unlike the
+/// closed loop, TTFT here includes real queueing delay (a request whose
+/// arrival outpaces slot turnover waits), so p99 TTFT under a given rate is
+/// the headline number. The arrival SCHEDULE is a pure function of the seed,
+/// but admission interleaving depends on wall-clock service times — open-loop
+/// runs are deliberately not bit-deterministic.
+#[allow(clippy::too_many_arguments)]
+pub fn bench_otps_open(
+    mr: &mut ModelRuntime,
+    drafter: &str,
+    dataset: &str,
+    k: usize,
+    concurrency: usize,
+    total_requests: usize,
+    max_new: usize,
+    seed: u64,
+    mixed_lengths: bool,
+    tree: Option<&TreeTopology>,
+    tree_dynamic: Option<&DynamicTreeConfig>,
+    paged: Option<PagedKvConfig>,
+    rate_rps: f64,
+) -> Result<OtpsRun> {
+    bench_otps_inner(
+        mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
+        mixed_lengths, tree, tree_dynamic, paged, Some(rate_rps),
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bench_otps_inner(
+    mr: &mut ModelRuntime,
+    drafter: &str,
+    dataset: &str,
+    k: usize,
+    concurrency: usize,
+    total_requests: usize,
+    max_new: usize,
+    seed: u64,
+    mixed_lengths: bool,
+    tree: Option<&TreeTopology>,
+    tree_dynamic: Option<&DynamicTreeConfig>,
+    paged: Option<PagedKvConfig>,
+    rate_rps: Option<f64>,
+) -> Result<OtpsRun> {
     let info = mr.manifest.drafter(drafter)?.clone();
     let mut arr = closed_loop_arrivals(&mr.manifest, dataset, max_new, seed)?;
     let lens = LengthModel::testbed(max_new.max(8));
@@ -160,19 +213,37 @@ pub fn bench_otps(
         warm.add_request(arr.next())?;
         warm.run_until_idle(mr)?;
     }
-    let (_results, metrics) = run_closed_loop(mr, &cfg, concurrency, total_requests, || {
+    let mut next = move || {
         let mut spec = arr.next();
         if mixed_lengths {
             spec.max_new_tokens = lens.sample(&mut lrng).clamp(4, max_new);
         }
         spec
-    })?;
+    };
+    let (_results, metrics) = match rate_rps {
+        None => run_closed_loop(mr, &cfg, concurrency, total_requests, &mut next)?,
+        Some(rate) => {
+            // re-stamp the closed-loop requests onto a Poisson schedule: the
+            // prompts/budgets stay seed-identical to the closed-loop cell,
+            // only the arrival clock differs
+            let mut sched_rng = Rng::new(seed ^ 0x09E7);
+            let mut clock = 0.0f64;
+            let reqs: Vec<_> = (0..total_requests)
+                .map(|_| {
+                    clock += sched_rng.exponential(rate);
+                    next().with_arrival(clock)
+                })
+                .collect();
+            run_open_loop(mr, &cfg, concurrency, reqs)?
+        }
+    };
     Ok(OtpsRun {
         drafter: drafter.to_string(),
         dataset: dataset.to_string(),
         k,
         concurrency,
         topology: tree.map(|t| t.id()).or_else(|| tree_dynamic.map(|d| d.id())),
+        rate_rps,
         otps: metrics.otps(),
         acceptance_length: metrics.acceptance_length(),
         mean_occupancy: metrics.mean_occupancy(),

@@ -19,8 +19,21 @@ pub struct Stats {
 }
 
 impl Stats {
+    /// Total on empty input: a zero-sample bench (a smoke-sized matrix cell
+    /// with no iterations) yields all-zero stats rather than panicking.
     pub fn from_samples(mut ns: Vec<f64>) -> Stats {
-        assert!(!ns.is_empty());
+        if ns.is_empty() {
+            return Stats {
+                iters: 0,
+                mean_ns: 0.0,
+                p50_ns: 0.0,
+                p90_ns: 0.0,
+                p99_ns: 0.0,
+                min_ns: 0.0,
+                max_ns: 0.0,
+                std_ns: 0.0,
+            };
+        }
         ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = ns.len();
         let mean = ns.iter().sum::<f64>() / n as f64;
@@ -100,7 +113,9 @@ impl Table {
         self.rows.push(cells);
     }
 
-    pub fn print(&self) {
+    /// Render to a string (one trailing newline) — the comparator embeds
+    /// tables in error output, so rendering can't be print-only.
+    pub fn render(&self) -> String {
         let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
         for r in &self.rows {
             for (i, c) in r.iter().enumerate() {
@@ -114,14 +129,22 @@ impl Table {
             }
             s
         };
-        println!("{}", line(&self.header));
-        println!(
-            "|{}|",
+        let mut out = String::new();
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        out.push_str(&format!(
+            "|{}|\n",
             w.iter().map(|n| "-".repeat(n + 2)).collect::<Vec<_>>().join("|")
-        );
+        ));
         for r in &self.rows {
-            println!("{}", line(r));
+            out.push_str(&line(r));
+            out.push('\n');
         }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
     }
 }
 
@@ -138,6 +161,28 @@ mod tests {
         assert_eq!(s.max_ns, 100.0);
         assert!(s.p50_ns >= 50.0 && s.p50_ns <= 52.0);
         assert!(s.p99_ns >= 99.0);
+    }
+
+    #[test]
+    fn stats_empty_is_zeroed_not_panic() {
+        let s = Stats::from_samples(vec![]);
+        assert_eq!(s.iters, 0);
+        assert_eq!(s.mean_ns, 0.0);
+        assert_eq!(s.p99_ns, 0.0);
+        assert_eq!(s.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["x".into(), "y".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("bb"));
+        assert!(lines[1].starts_with("|-"));
+        assert!(lines[2].contains("| x"));
+        assert!(s.ends_with('\n'));
     }
 
     #[test]

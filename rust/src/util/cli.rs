@@ -60,6 +60,20 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Comma-separated list option: `--key a,b,c` → `["a","b","c"]`.
+    /// Empty segments are dropped; a missing key is an empty list.
+    pub fn str_list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|v| {
+                v.split(',')
+                    .map(|s| s.trim())
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.to_string())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -97,6 +111,13 @@ mod tests {
         assert_eq!(a.usize_or("missing", 7), 7);
         assert_eq!(a.f64_or("rate", 1.5), 1.5);
         assert!(!a.flag("x"));
+    }
+
+    #[test]
+    fn str_lists() {
+        let a = parse(&["--drafters", "a, b,,c"]);
+        assert_eq!(a.str_list("drafters"), vec!["a", "b", "c"]);
+        assert!(a.str_list("missing").is_empty());
     }
 
     #[test]

@@ -59,6 +59,17 @@ impl ArrivalProcess {
         self.next()
     }
 
+    /// Pre-draw an open-loop schedule: `count` requests with Poisson arrival
+    /// stamps at `rate` req/s, sorted by construction (the exponential gaps
+    /// accumulate on the process clock). This is the input shape
+    /// `coordinator::run_open_loop` wants — drawing the whole schedule up
+    /// front keeps it a pure function of the seed, independent of how the
+    /// engine interleaves admissions.
+    pub fn take_poisson(&mut self, count: usize, rate: f64) -> Vec<Request> {
+        assert!(rate > 0.0, "open-loop arrivals need a positive rate");
+        (0..count).map(|_| self.next_poisson(rate)).collect()
+    }
+
     /// Fixed prompt pool variant used by acceptance evals (prompts come from
     /// the exported OOD eval sets instead of fresh sampling).
     pub fn from_pool(pool: &[Vec<i32>], count: usize, max_new: usize) -> Vec<Request> {
@@ -100,6 +111,20 @@ mod tests {
         let a = ap.next_poisson(10.0);
         let b = ap.next_poisson(10.0);
         assert!(b.arrival_s > a.arrival_s);
+    }
+
+    #[test]
+    fn take_poisson_is_sorted_and_seed_deterministic() {
+        let mut a = ArrivalProcess::closed_loop(regime(), 8, 16, 3);
+        let mut b = ArrivalProcess::closed_loop(regime(), 8, 16, 3);
+        let ra = a.take_poisson(6, 4.0);
+        let rb = b.take_poisson(6, 4.0);
+        assert_eq!(ra.len(), 6);
+        assert!(ra.windows(2).all(|w| w[0].arrival_s < w[1].arrival_s));
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prompt, y.prompt);
+        }
     }
 
     #[test]
