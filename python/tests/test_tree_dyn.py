@@ -221,6 +221,66 @@ def test_scored_draft_joint_is_monotone_down_every_path(dm):
                 assert joint[b, i - 1] <= joint[b, p - 1] + 1e-6
 
 
+def _conditional_q(joint_row, parents):
+    """The Rust masking/dynamic.rs `conditional_q` reference: per-node
+    conditional draft probability recovered from joint path scores,
+    q = exp(joint - parent joint), NaN -> 0, clamped to [0, 1]."""
+    q = np.zeros(len(parents))
+    for i, p in enumerate(parents, start=1):
+        base = 0.0 if p == 0 else joint_row[p - 1]
+        q[i - 1] = np.exp(joint_row[i - 1] - base)
+    return np.clip(np.nan_to_num(q, nan=0.0), 0.0, 1.0)
+
+
+def test_conditional_q_recovers_level_softmax_probability(dm):
+    """The engine's calibration signal: exp(joint - parent joint) must be the
+    drafter's own per-level softmax probability of the drafted token — a
+    genuine probability in (0, 1], exactly what PolicyMetrics.record_draft_q
+    accumulates against acceptance outcomes."""
+    dcfg, tcfg, dp = dm
+    rng = np.random.default_rng(17)
+    ct, cf, p0 = draft_inputs(tcfg, rng)
+    widths = (3, 2, 1)
+    tokens, joint = draft_pe_tree(dp, dcfg, ct, cf, p0, widths,
+                                  attn_impl="jnp", return_logp=True)
+    tokens, joint = np.asarray(tokens), np.asarray(joint)
+    level_logits = np.asarray(_pe_depth_logits(dp, dcfg, ct, cf, p0,
+                                               len(widths), attn_impl="jnp"))
+    mx = level_logits.max(-1, keepdims=True)
+    logp = level_logits - mx - np.log(
+        np.exp(level_logits - mx).sum(-1, keepdims=True))
+    parents = tree_parents(list(widths))
+    depths = tree_depths(list(widths))
+    for b in range(tokens.shape[0]):
+        q = _conditional_q(joint[b], parents)
+        assert ((q > 0.0) & (q <= 1.0)).all(), q
+        for i in range(1, len(parents) + 1):
+            want = np.exp(logp[b, depths[i] - 1, tokens[b, i - 1]])
+            np.testing.assert_allclose(q[i - 1], want, atol=1e-5, rtol=1e-4,
+                                       err_msg=f"node {i}")
+
+
+def test_conditional_q_non_increasing_in_rank_within_level(dm):
+    """Levels draft the depth's top-w tokens in rank order, so the recovered
+    conditional q must be non-increasing across each level's nodes — the
+    property that makes q a usable confidence ordering for calibration."""
+    dcfg, tcfg, dp = dm
+    rng = np.random.default_rng(18)
+    ct, cf, p0 = draft_inputs(tcfg, rng)
+    widths = TREE_DYN_ENVELOPE
+    _, joint = draft_pe_tree(dp, dcfg, ct, cf, p0, widths,
+                             attn_impl="jnp", return_logp=True)
+    joint = np.asarray(joint)
+    parents = tree_parents(list(widths))
+    for b in range(joint.shape[0]):
+        q = _conditional_q(joint[b], parents)
+        off = 0
+        for w in widths:
+            level = q[off:off + w]
+            assert (np.diff(level) <= 1e-6).all(), (w, level)
+            off += w
+
+
 # ---------------------------------------------------------------------------
 # envelope verification with runtime topology
 # ---------------------------------------------------------------------------

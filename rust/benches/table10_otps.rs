@@ -11,7 +11,7 @@
 //! model instead of a fixed max_new — the workload where the stepped
 //! engine's mid-flight admission shows up as high slot occupancy.
 
-use p_eagle::coordinator::paged_from_env;
+use p_eagle::coordinator::{paged_from_env, SamplingParams};
 use p_eagle::report::bench_otps;
 use p_eagle::runtime::ModelRuntime;
 use p_eagle::util::bench::Table;
@@ -46,7 +46,8 @@ fn main() -> anyhow::Result<()> {
                     for (di, ds) in datasets.iter().enumerate() {
                         let run = bench_otps(&mut mr, &format!("{target}-{method}"),
                                              ds, k, c, total, max_new, 99, mixed, None,
-                                             None, paged_from_env())?;
+                                             None, paged_from_env(),
+                                             SamplingParams::greedy())?;
                         if method == "ar" {
                             ar_best[di] = ar_best[di].max(run.otps);
                         }

@@ -14,7 +14,7 @@
 //! artifacts after adding profiles). Reports AL, OTPS, and the tree's
 //! accepted-path KV commit overhead.
 
-use p_eagle::coordinator::{paged_from_env, tree_dyn_from_env};
+use p_eagle::coordinator::{paged_from_env, tree_dyn_from_env, SamplingParams};
 use p_eagle::masking::TreeTopology;
 use p_eagle::report::compare_chain_tree;
 use p_eagle::runtime::ModelRuntime;
@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
     for ds in datasets {
         let (chain, treed, dyned) = compare_chain_tree(
             &mut mr, drafter, ds, &tree, dynamic.as_ref(), 2, reqs, max_new, 99, false,
-            paged_from_env(),
+            paged_from_env(), SamplingParams::greedy(),
         )?;
         assert!(
             treed.acceptance_length + 1e-9 >= chain.acceptance_length,

@@ -13,7 +13,7 @@ use std::time::{SystemTime, UNIX_EPOCH};
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::coordinator::PagedKvConfig;
+use crate::coordinator::{PagedKvConfig, SamplingParams};
 use crate::masking::{DynamicTreeConfig, TreeTopology};
 use crate::report::{self, OtpsRun};
 use crate::runtime::ModelRuntime;
@@ -79,13 +79,16 @@ pub fn run_suite(mr: &mut ModelRuntime, spec: &SuiteSpec, pr: &str) -> Result<Be
                     let paged = paged_on
                         .then(|| PagedKvConfig { block_size: None, num_blocks: spec.kv_blocks });
                     let run = match load {
+                        // the trajectory pins greedy serving: cross-PR OTPS
+                        // deltas must never fold in sampling-path variance
                         Load::Closed { .. } => report::bench_otps(
                             mr, drafter, &spec.dataset, k, conc, spec.requests, spec.max_new,
-                            spec.seed, false, tree, dynamic, paged,
+                            spec.seed, false, tree, dynamic, paged, SamplingParams::greedy(),
                         )?,
                         Load::Open { rate_rps, .. } => report::bench_otps_open(
                             mr, drafter, &spec.dataset, k, conc, spec.requests, spec.max_new,
-                            spec.seed, false, tree, dynamic, paged, rate_rps,
+                            spec.seed, false, tree, dynamic, paged, SamplingParams::greedy(),
+                            rate_rps,
                         )?,
                     };
                     cells.push(cell_record(spec, shape, cache, drafter, &policy.id(), load, &run));

@@ -67,9 +67,11 @@ use anyhow::{bail, Result};
 use super::kv_cache::SlotManager;
 use super::metrics::EngineMetrics;
 use super::request::{FinishReason, Request, RequestResult, SpecPolicy};
-use super::sampler::{accept_chain, accept_tree, accept_tree_subset, sample};
+use super::sampler::{
+    accept_chain_sampled, accept_tree_sampled, accept_tree_subset_sampled, sample_filtered,
+};
 use crate::masking::dynamic::{
-    compacted_depths_i32, compacted_parents, select_nodes, subset_mask_i32,
+    compacted_depths_i32, compacted_parents, conditional_q, select_nodes, subset_mask_i32,
 };
 use crate::masking::{DynamicTreeConfig, TreeMask, TreeTopology};
 use crate::runtime::{
@@ -688,9 +690,11 @@ impl EngineCore {
             let pre_logits = pre.last_logits.as_f32()?;
             let pre_feats = pre.feats.as_f32()?;
             // the request's private sampling stream: greedy never draws, so
-            // greedy output is independent of seeds and batch placement
+            // greedy output is independent of seeds and batch placement; the
+            // first token honors the request's temperature/top-p/top-k
             let mut rng = Rng::new(self.cfg.seed ^ 0xE4617E ^ req.sampling.seed);
-            let t_first = sample(&pre_logits[..self.vocab], req.sampling.mode, &mut rng);
+            let t_first =
+                sample_filtered(&pre_logits[..self.vocab], &req.sampling.config(), &mut rng);
 
             // seed the drafter's rolling (token, feature) context from the
             // prompt tail; entry j covers position plen - ctx + 1 + j
@@ -982,6 +986,12 @@ impl EngineCore {
         self.kv = ver.kv;
         let logits = ver.logits.as_f32()?;
         let feats = ver.feats.as_f32()?;
+        // dynamic drafters scored every envelope node: keep the joint logp
+        // around to turn acceptance outcomes into drafter-calibration signal
+        let joint_all: Option<&[f32]> = match &draft_logp {
+            Some(l) => Some(l.as_f32()?),
+            None => None,
+        };
 
         // --- acceptance per member slot ------------------------------------
         let th2 = Instant::now();
@@ -1002,7 +1012,11 @@ impl EngineCore {
                 })
                 .collect();
             let slot_drafts = &draft_toks[i * n..(i + 1) * n];
-            let sampling = s.req.sampling.mode;
+            // greedy requests keep the exact-match walk (byte-identical, no
+            // rng draws); temperature requests get lossless multi-branch
+            // rejection sampling against the request's filtered target
+            // (sampler::accept_*_sampled dispatch)
+            let scfg = s.req.sampling.config();
             // accepted path as chunk-slot ids (chain: the identity prefix;
             // dynamic: COMPACTED chunk slots — the walk is confined to the
             // selected subtree)
@@ -1012,21 +1026,34 @@ impl EngineCore {
                     let parents = compacted_parents(env, sel);
                     let compacted: Vec<i32> =
                         sel.iter().map(|&id| slot_drafts[id - 1]).collect();
-                    let a = accept_tree_subset(
+                    let a = accept_tree_subset_sampled(
                         &parents,
                         &compacted,
                         &rows[..=sel.len()],
-                        sampling,
+                        &scfg,
                         &mut s.rng,
                     );
+                    // calibration signal: the drafter's conditional
+                    // confidence q per selected node vs whether the node was
+                    // accepted — metrics only, NEVER acceptance (a scalar
+                    // model-confidence q on deterministic drafts would bias
+                    // the output; see sampler.rs's statistical suite)
+                    if let Some(joint) = joint_all {
+                        let qs = conditional_q(env, &joint[i * n..(i + 1) * n], sel);
+                        let pm = self.metrics.policy_mut(&drafter_name, group_al);
+                        for (j, &qv) in qs.iter().enumerate() {
+                            pm.record_draft_q(qv, a.accepted_path.contains(&(j + 1)));
+                        }
+                    }
                     (a.accepted_path, a.emitted)
                 }
                 (SpecPolicy::Tree { topology, .. }, _) => {
-                    let a = accept_tree(topology, slot_drafts, &rows, sampling, &mut s.rng);
+                    let a =
+                        accept_tree_sampled(topology, slot_drafts, &rows, &scfg, &mut s.rng);
                     (a.accepted_path, a.emitted)
                 }
                 (SpecPolicy::Chain { .. }, _) => {
-                    let a = accept_chain(slot_drafts, &rows, sampling, &mut s.rng);
+                    let a = accept_chain_sampled(slot_drafts, &rows, &scfg, &mut s.rng);
                     ((1..=a.n_accepted).collect(), a.emitted)
                 }
                 (SpecPolicy::Dynamic { .. }, None) => {

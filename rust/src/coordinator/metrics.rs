@@ -30,6 +30,16 @@ pub struct PolicyMetrics {
     /// raw accepted-path depth histogram (same convention as
     /// [`EngineMetrics::accepted_by_depth`]); index 0 unused
     pub accepted_by_depth: Vec<usize>,
+    /// drafter-calibration accumulators (dynamic policies): the drafter's
+    /// conditional confidence `q` of each selected node, split by whether
+    /// the node ended up on the accepted path. A well-calibrated drafter
+    /// has mean-q(accepted) near its per-node acceptance rate and
+    /// mean-q(rejected) well below it; q is NEVER an acceptance input (see
+    /// [`conditional_q`](crate::masking::dynamic::conditional_q)).
+    pub q_accepted_sum: f64,
+    pub q_accepted_n: usize,
+    pub q_rejected_sum: f64,
+    pub q_rejected_n: usize,
 }
 
 impl PolicyMetrics {
@@ -79,10 +89,44 @@ impl PolicyMetrics {
             .collect()
     }
 
+    /// Record one drafted node's conditional confidence `q` against its
+    /// acceptance outcome (calibration signal only).
+    pub fn record_draft_q(&mut self, q: f32, accepted: bool) {
+        if accepted {
+            self.q_accepted_sum += q as f64;
+            self.q_accepted_n += 1;
+        } else {
+            self.q_rejected_sum += q as f64;
+            self.q_rejected_n += 1;
+        }
+    }
+
+    /// Mean drafter confidence over nodes that were accepted (0.0 if none).
+    pub fn mean_q_accepted(&self) -> f64 {
+        if self.q_accepted_n == 0 {
+            0.0
+        } else {
+            self.q_accepted_sum / self.q_accepted_n as f64
+        }
+    }
+
+    /// Mean drafter confidence over nodes that were rejected (0.0 if none).
+    pub fn mean_q_rejected(&self) -> f64 {
+        if self.q_rejected_n == 0 {
+            0.0
+        } else {
+            self.q_rejected_sum / self.q_rejected_n as f64
+        }
+    }
+
     fn merge(&mut self, other: &PolicyMetrics) {
         self.steps += other.steps;
         self.iterations += other.iterations;
         self.accepted_sum += other.accepted_sum;
+        self.q_accepted_sum += other.q_accepted_sum;
+        self.q_accepted_n += other.q_accepted_n;
+        self.q_rejected_sum += other.q_rejected_sum;
+        self.q_rejected_n += other.q_rejected_n;
         if self.al_histogram.len() < other.al_histogram.len() {
             self.al_histogram.resize(other.al_histogram.len(), 0);
         }
@@ -648,6 +692,26 @@ mod tests {
         assert_eq!(m.per_policy["target-m-pe4"].iterations, 3);
         assert_eq!(m.per_policy.len(), 3);
         assert_eq!(m.per_policy["target-m-pe2"].accepted_sum, 4);
+    }
+
+    #[test]
+    fn draft_q_calibration_accumulates_and_merges() {
+        let mut m = EngineMetrics::new(5);
+        let pm = m.policy_mut("pe", 5);
+        assert_eq!(pm.mean_q_accepted(), 0.0);
+        assert_eq!(pm.mean_q_rejected(), 0.0);
+        pm.record_draft_q(0.8, true);
+        pm.record_draft_q(0.6, true);
+        pm.record_draft_q(0.2, false);
+        assert!((pm.mean_q_accepted() - 0.7).abs() < 1e-6);
+        assert!((pm.mean_q_rejected() - 0.2).abs() < 1e-6);
+        let mut o = EngineMetrics::new(5);
+        o.policy_mut("pe", 5).record_draft_q(0.4, false);
+        m.merge(&o);
+        let pm = &m.per_policy["pe"];
+        assert_eq!(pm.q_rejected_n, 2);
+        assert!((pm.mean_q_rejected() - 0.3).abs() < 1e-6);
+        assert_eq!(pm.q_accepted_n, 2);
     }
 
     #[test]

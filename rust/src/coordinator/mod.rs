@@ -23,6 +23,6 @@ pub use metrics::{EngineMetrics, PolicyMetrics};
 pub use request::{
     FinishReason, Request, RequestResult, RequestSpec, SamplingParams, SpecPolicy,
 };
-pub use sampler::Sampling;
+pub use sampler::{SampleConfig, Sampling};
 pub use scheduler::{run_closed_loop, run_open_loop, Scheduler};
 pub use server::{ServerEvent, ServerHandle, ServerMsg};

@@ -30,26 +30,66 @@
 
 use crate::masking::{DynamicTreeConfig, TreeTopology};
 
-use super::sampler::Sampling;
+use super::sampler::{SampleConfig, Sampling};
 
-/// Per-request sampling configuration: the mode (greedy or temperature) plus
-/// the seed of the request's private rng stream. Greedy never draws from the
-/// rng, so greedy requests are bit-reproducible regardless of seed or batch
+/// Per-request sampling configuration: the mode (greedy or temperature), the
+/// serving filters (top-p nucleus / top-k, `1.0` / `0` = off), and the seed
+/// of the request's private rng stream. Greedy never draws from the rng, so
+/// greedy requests are bit-reproducible regardless of seed or batch
 /// placement; temperature requests are reproducible for a fixed
-/// (engine seed, request seed) pair.
+/// (engine seed, request seed) pair. The filters define the request's target
+/// distribution with filtered-softmax semantics
+/// ([`filtered_probs`](super::sampler::filtered_probs)): softmax at the
+/// temperature, top-k, then top-p, renormalized — honored by both direct
+/// sampling (prefill first token, bonus tokens) and the rejection-sampling
+/// acceptance rules.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SamplingParams {
     pub mode: Sampling,
+    /// nucleus filter; 1.0 = off
+    pub top_p: f32,
+    /// top-k filter; 0 = off
+    pub top_k: usize,
     pub seed: u64,
 }
 
 impl SamplingParams {
     pub fn greedy() -> SamplingParams {
-        SamplingParams { mode: Sampling::Greedy, seed: 0 }
+        SamplingParams { mode: Sampling::Greedy, top_p: 1.0, top_k: 0, seed: 0 }
     }
 
     pub fn temperature(t: f32, seed: u64) -> SamplingParams {
-        SamplingParams { mode: Sampling::Temperature(t), seed }
+        SamplingParams { mode: Sampling::Temperature(t), top_p: 1.0, top_k: 0, seed }
+    }
+
+    pub fn with_top_p(mut self, top_p: f32) -> SamplingParams {
+        self.top_p = top_p;
+        self
+    }
+
+    pub fn with_top_k(mut self, top_k: usize) -> SamplingParams {
+        self.top_k = top_k;
+        self
+    }
+
+    /// The per-draw sampler view of these params (everything but the seed —
+    /// the seed picks the rng STREAM, the config shapes each draw).
+    pub fn config(&self) -> SampleConfig {
+        SampleConfig { mode: self.mode, top_p: self.top_p, top_k: self.top_k }
+    }
+
+    /// Validate CLI/API input descriptively (the sampler itself clamps
+    /// defensively; serving should reject nonsense at the boundary).
+    pub fn validate(&self) -> Result<(), String> {
+        if let Sampling::Temperature(t) = self.mode {
+            if !(t.is_finite() && t >= 0.0) {
+                return Err(format!("temperature {t} must be a finite number >= 0"));
+            }
+        }
+        if !(self.top_p.is_finite() && self.top_p > 0.0 && self.top_p <= 1.0) {
+            return Err(format!("top-p {} must be in (0, 1]", self.top_p));
+        }
+        Ok(())
     }
 }
 
@@ -469,5 +509,34 @@ mod tests {
         let plain = Request::new(0, vec![1], 8);
         assert!(plain.policy.is_none());
         assert_eq!(plain.sampling, SamplingParams::greedy());
+    }
+
+    #[test]
+    fn sampling_params_filters_and_config() {
+        let sp = SamplingParams::temperature(0.7, 42).with_top_p(0.9).with_top_k(8);
+        assert_eq!(sp.top_p, 0.9);
+        assert_eq!(sp.top_k, 8);
+        assert_eq!(sp.seed, 42);
+        let cfg = sp.config();
+        assert_eq!(cfg.mode, Sampling::Temperature(0.7));
+        assert_eq!((cfg.top_p, cfg.top_k), (0.9, 8));
+        // defaults mean "filters off"
+        let g = SamplingParams::greedy();
+        assert_eq!((g.top_p, g.top_k), (1.0, 0));
+        assert!(g.config().is_greedy());
+    }
+
+    #[test]
+    fn sampling_params_validation_is_descriptive() {
+        assert!(SamplingParams::greedy().validate().is_ok());
+        assert!(SamplingParams::temperature(0.7, 0).with_top_p(0.5).validate().is_ok());
+        let err = SamplingParams::temperature(-1.0, 0).validate().unwrap_err();
+        assert!(err.contains("temperature"), "{err}");
+        let err = SamplingParams::temperature(f32::NAN, 0).validate().unwrap_err();
+        assert!(err.contains("temperature"), "{err}");
+        let err = SamplingParams::greedy().with_top_p(0.0).validate().unwrap_err();
+        assert!(err.contains("top-p"), "{err}");
+        let err = SamplingParams::greedy().with_top_p(1.5).validate().unwrap_err();
+        assert!(err.contains("top-p"), "{err}");
     }
 }

@@ -1,20 +1,59 @@
 //! Token sampling + the speculative acceptance rules (chain and tree).
 //!
-//! The engine runs greedy (argmax) verification — the paper's acceptance
-//! length metric is defined under chain drafting with greedy target
-//! decoding. Temperature sampling is provided for the serving API; under
-//! temperature > 0 acceptance uses the standard exact-match-on-sample rule
-//! (draft accepted iff it equals the sampled target token), which preserves
-//! the target distribution for greedy and is the chain special case of
-//! rejection sampling.
+//! # Sampling modes and filters
 //!
-//! [`accept_tree`] generalizes [`accept_chain`] to tree-structured drafts
-//! (EAGLE-3-style): it walks the longest root path of the draft tree whose
-//! node tokens match the target's sampled continuation, emitting the
-//! target's own token as the correction/bonus where the walk stops. A
-//! chain-shaped [`TreeTopology`] reproduces `accept_chain` token-for-token
-//! (property-tested below), which is what lets the engine treat the chain
-//! as the degenerate tree.
+//! [`Sampling`] picks greedy (argmax) or temperature decoding;
+//! [`SampleConfig`] adds the serving filters — top-k and nucleus (top-p) —
+//! with **filtered-softmax** semantics: softmax the logits at the request's
+//! temperature, apply top-k, then top-p, renormalize ([`filtered_probs`]).
+//! Greedy never draws from the rng; a temperature draw consumes exactly ONE
+//! `rng.f64()` ([`sample_filtered`]). The temperature floor (`t.max(1e-4)`)
+//! exists only to keep the softmax finite: at `t -> 0` the filtered softmax
+//! degenerates to a point mass at the argmax, so `Temperature(0.0)` emits
+//! the argmax token — while still consuming its one draw, unlike `Greedy`
+//! (tested below). [`argmax`] tie-breaking is FIRST MAX WINS (the lowest
+//! index among equal maxima), also pinned by a directed test — the rejection
+//! path leans on both edge behaviors.
+//!
+//! # Acceptance rules
+//!
+//! Two families, selected per request by the engine:
+//!
+//! * **Greedy** requests use the exact-match-on-argmax walk
+//!   ([`accept_chain`] / [`accept_tree`] / [`accept_tree_subset`]): byte
+//!   reproducible, zero rng draws, the paper's AL metric setting.
+//! * **Temperature** requests use SpecInfer/EAGLE-style multi-branch
+//!   **rejection sampling** ([`accept_chain_rejection`] /
+//!   [`accept_tree_rejection`] / [`accept_tree_subset_rejection`]): at each
+//!   node, try the drafted children in ascending slot order; child `d` is
+//!   accepted with probability `min(1, p(d)/q(d))` where `p` is the
+//!   filtered target distribution and `q` the draft proposal; on rejection
+//!   the target residual `max(0, p - q)` is renormalized before the next
+//!   sibling (and `q` is residualized without the tried token); if no child
+//!   accepts, the correction token is sampled from the final residual, and
+//!   at a leaf the bonus comes from the full filtered target row. One
+//!   `rng.f64()` per TRIED child plus one draw for the stop token — the
+//!   per-request rng stream contract the parity tests pin.
+//!
+//! The engine drafts **deterministically** (each node takes a fixed top-k
+//! rank), so its proposal is a point mass: `q(d) = 1`, the acceptance
+//! probability is `p(d)` itself, and the residual just zeroes the tried
+//! token (`q_rows = None` below). That point-mass rule is exactly lossless
+//! for deterministic drafts — and, notably, coincides IN DISTRIBUTION with
+//! the old exact-match-on-sample rule (both emit every token from the
+//! target conditional; they differ in rng consumption and in honoring the
+//! request's top-k/top-p filters, which the old rule ignored). The general
+//! `q_rows = Some(..)` form is the full SpecInfer rule for drafts SAMPLED
+//! from a known per-node proposal; the statistical suite below proves it
+//! lossless, and proves that misusing the drafter's model confidence as a
+//! scalar `q` for deterministic drafts is biased — which is why the engine
+//! threads drafter confidence into calibration metrics, never into
+//! acceptance.
+//!
+//! [`accept_tree_subset_rejection`] is the base implementation; chain and
+//! static tree delegate/mirror it, and a chain-shaped parent array
+//! reproduces the chain rule token-for-token INCLUDING rng consumption
+//! (property-tested below, extending the PR 2/4 parity pattern).
 
 use crate::masking::TreeTopology;
 use crate::util::rng::Rng;
@@ -25,7 +64,48 @@ pub enum Sampling {
     Temperature(f32),
 }
 
-/// Argmax over one logits row.
+/// Full per-draw sampling configuration: mode plus the serving filters.
+/// `top_p = 1.0` and `top_k = 0` disable the respective filter (the
+/// defaults), which makes the temperature path byte-identical to the
+/// unfiltered softmax sampler.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SampleConfig {
+    pub mode: Sampling,
+    /// nucleus filter: keep the smallest top-probability prefix with
+    /// cumulative mass >= top_p (always at least one token); 1.0 = off
+    pub top_p: f32,
+    /// keep only the top_k most probable tokens (ties keep the lowest
+    /// index); 0 = off
+    pub top_k: usize,
+}
+
+impl SampleConfig {
+    pub fn greedy() -> SampleConfig {
+        SampleConfig { mode: Sampling::Greedy, top_p: 1.0, top_k: 0 }
+    }
+
+    pub fn temperature(t: f32) -> SampleConfig {
+        SampleConfig { mode: Sampling::Temperature(t), top_p: 1.0, top_k: 0 }
+    }
+
+    pub fn with_top_p(mut self, top_p: f32) -> SampleConfig {
+        self.top_p = top_p;
+        self
+    }
+
+    pub fn with_top_k(mut self, top_k: usize) -> SampleConfig {
+        self.top_k = top_k;
+        self
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        matches!(self.mode, Sampling::Greedy)
+    }
+}
+
+/// Argmax over one logits row. Tie-breaking: FIRST max wins (the lowest
+/// index among equal maxima) — `x > bv`, never `>=` — so greedy decode and
+/// the `t -> 0` temperature limit agree bit-for-bit.
 pub fn argmax(row: &[f32]) -> i32 {
     let mut best = 0usize;
     let mut bv = f32::NEG_INFINITY;
@@ -38,7 +118,11 @@ pub fn argmax(row: &[f32]) -> i32 {
     best as i32
 }
 
-/// Sample a token from one logits row.
+/// Sample a token from one logits row (unfiltered; kept for the legacy call
+/// sites and the exact-match acceptance walk). The temperature floor
+/// `t.max(1e-4)` keeps `(x - m)/t` finite; at the floor the softmax is a
+/// point mass at the argmax, so `Temperature(0.0)` IS argmax — but it still
+/// consumes its one categorical draw, unlike `Greedy` (tested below).
 pub fn sample(row: &[f32], s: Sampling, rng: &mut Rng) -> i32 {
     match s {
         Sampling::Greedy => argmax(row),
@@ -51,6 +135,89 @@ pub fn sample(row: &[f32], s: Sampling, rng: &mut Rng) -> i32 {
     }
 }
 
+/// The filtered-softmax target distribution for one logits row: softmax at
+/// the configured temperature, then top-k, then top-p, renormalized to sum
+/// to 1. Greedy (and the `t -> 0` floor limit) degenerate to a point mass
+/// at the argmax. This is the `p` (and `q`) every rejection-sampling rule
+/// below scores against — the single source of the serving semantics for
+/// `--temperature/--top-p/--top-k`.
+pub fn filtered_probs(row: &[f32], cfg: &SampleConfig) -> Vec<f32> {
+    let t = match cfg.mode {
+        Sampling::Greedy => {
+            let mut p = vec![0.0; row.len()];
+            p[argmax(row) as usize] = 1.0;
+            return p;
+        }
+        Sampling::Temperature(t) => t.max(1e-4),
+    };
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut p: Vec<f32> = row.iter().map(|&x| ((x - m) / t).exp()).collect();
+    let total: f32 = p.iter().sum();
+    for x in p.iter_mut() {
+        *x /= total;
+    }
+    // rank once (prob desc, index asc — deterministic under ties), shared by
+    // both filters
+    let needs_k = cfg.top_k > 0 && cfg.top_k < row.len();
+    let needs_p = cfg.top_p > 0.0 && cfg.top_p < 1.0;
+    if needs_k || needs_p {
+        let mut order: Vec<usize> = (0..p.len()).collect();
+        order.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap().then(a.cmp(&b)));
+        let mut keep = if needs_k { cfg.top_k } else { p.len() };
+        if needs_p {
+            let mut cum = 0.0f32;
+            let mut nucleus = 0usize;
+            for &i in order.iter().take(keep) {
+                cum += p[i];
+                nucleus += 1;
+                if cum >= cfg.top_p {
+                    break;
+                }
+            }
+            keep = keep.min(nucleus.max(1));
+        }
+        for &i in order.iter().skip(keep) {
+            p[i] = 0.0;
+        }
+        let total: f32 = p.iter().sum();
+        if total > 0.0 {
+            for x in p.iter_mut() {
+                *x /= total;
+            }
+        }
+    }
+    p
+}
+
+/// Sample a token under the full [`SampleConfig`]: greedy = argmax (zero
+/// rng draws); temperature = ONE categorical draw over [`filtered_probs`].
+/// With the filters off this emits exactly what [`sample`] emits for the
+/// same rng state (normalizing the weights does not move the categorical
+/// walk), so default-parameter requests stay byte-identical.
+pub fn sample_filtered(row: &[f32], cfg: &SampleConfig, rng: &mut Rng) -> i32 {
+    match cfg.mode {
+        Sampling::Greedy => argmax(row),
+        Sampling::Temperature(_) => rng.categorical(&filtered_probs(row, cfg)) as i32,
+    }
+}
+
+/// Renormalize `p` in place; if the mass vanished (float edge: residual of
+/// a near-deterministic row), fall back to a point mass at the original
+/// row's argmax — deterministic, never NaN.
+fn renormalize(p: &mut [f32], fallback_row: &[f32]) {
+    let total: f32 = p.iter().sum();
+    if total > 0.0 && total.is_finite() {
+        for x in p.iter_mut() {
+            *x /= total;
+        }
+    } else {
+        for x in p.iter_mut() {
+            *x = 0.0;
+        }
+        p[argmax(fallback_row) as usize] = 1.0;
+    }
+}
+
 /// Outcome of verifying one slot's draft chunk.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Acceptance {
@@ -60,10 +227,11 @@ pub struct Acceptance {
     pub emitted: Vec<i32>,
 }
 
-/// Chain-drafting acceptance: target logits row i is the distribution for
-/// the token *after* chunk position i. Draft token `d[i]` is accepted while it
-/// matches the target's token for that position; the first mismatch (or the
-/// end of the chain) contributes the target's own token as the bonus.
+/// Chain-drafting acceptance (exact-match walk — the greedy rule): target
+/// logits row i is the distribution for the token *after* chunk position i.
+/// Draft token `d[i]` is accepted while it matches the target's token for
+/// that position; the first mismatch (or the end of the chain) contributes
+/// the target's own token as the bonus.
 pub fn accept_chain(
     drafts: &[i32],
     target_rows: &[&[f32]], // K+1 rows
@@ -104,7 +272,7 @@ impl TreeAcceptance {
     }
 }
 
-/// Tree acceptance: walk the longest accepted root path.
+/// Tree acceptance (exact-match walk): walk the longest accepted root path.
 ///
 /// `drafts[i - 1]` is the token drafted at tree node `i`; `target_rows[j]`
 /// (N+1 rows, chunk-slot order) is the target's distribution for the token
@@ -126,11 +294,12 @@ pub fn accept_tree(
     accept_tree_subset(&parents, drafts, target_rows, s, rng)
 }
 
-/// Tree acceptance over an arbitrary (compacted) subtree, described by a
-/// parent array instead of a width-profile topology — the dynamic-tree
-/// engine's acceptance rule ([`crate::masking::dynamic`] compacts the
-/// per-step selected subtree into slots `1..=m`, which is a valid level-major
-/// tree but not a round-robin width profile).
+/// Tree acceptance (exact-match walk) over an arbitrary (compacted)
+/// subtree, described by a parent array instead of a width-profile topology
+/// — the dynamic-tree engine's acceptance rule
+/// ([`crate::masking::dynamic`] compacts the per-step selected subtree into
+/// slots `1..=m`, which is a valid level-major tree but not a round-robin
+/// width profile).
 ///
 /// `parents[i - 1]` is the chunk slot of node `i`'s parent (0 = root;
 /// parents precede children); `drafts[i - 1]` its token; `target_rows` has
@@ -168,9 +337,232 @@ pub fn accept_tree_subset(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Multi-branch rejection sampling (temperature requests)
+// ---------------------------------------------------------------------------
+
+/// `min(1, p(d)/q(d))` for one drafted child: `q_cur = None` is the
+/// point-mass proposal of deterministic drafting (`q(d) = 1`, ratio =
+/// `p(d)`); an out-of-support `q(d) = 0` accepts iff the target gives the
+/// token any mass at all.
+fn accept_ratio(p: &[f32], q_cur: Option<&[f32]>, d: usize) -> f32 {
+    let pd = p.get(d).copied().unwrap_or(0.0);
+    match q_cur {
+        None => pd,
+        Some(q) => {
+            let qd = q.get(d).copied().unwrap_or(0.0);
+            if qd <= 0.0 {
+                if pd > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            } else {
+                (pd / qd).min(1.0)
+            }
+        }
+    }
+}
+
+/// After rejecting child token `d`: target residual `p <- norm(max(0,
+/// p - q))` and proposal residual `q <- norm(q \ {d})` (the next sibling
+/// was drafted without replacement). Point-mass proposal (`q_cur = None`):
+/// the residual just zeroes the tried token.
+fn reject_residual(p: &mut [f32], q_cur: &mut Option<Vec<f32>>, d: usize, fallback_row: &[f32]) {
+    match q_cur {
+        Some(q) => {
+            for (pi, qi) in p.iter_mut().zip(q.iter()) {
+                *pi = (*pi - *qi).max(0.0);
+            }
+            if d < q.len() {
+                q[d] = 0.0;
+            }
+            renormalize(q, fallback_row);
+        }
+        None => {
+            if d < p.len() {
+                p[d] = 0.0;
+            }
+        }
+    }
+    renormalize(p, fallback_row);
+}
+
+/// Chain rejection-sampling acceptance: the lossless temperature rule.
+///
+/// For each draft position i: `p` = filtered target row i, accept draft
+/// `d` with probability `min(1, p(d)/q(d))` (one `rng.f64()` per tried
+/// draft); on rejection sample the correction from the renormalized
+/// residual (one more draw) and stop; after a full acceptance the bonus is
+/// one [`sample_filtered`] draw from the last row. `q_rows = None` is the
+/// deterministic-draft point-mass proposal (accept w.p. `p(d)`, residual
+/// zeroes `d`); `q_rows = Some(..)` are per-position draft logits for
+/// drafts actually SAMPLED from the proposal (filtered with the same
+/// config). Token-for-token and draw-for-draw identical to
+/// [`accept_tree_subset_rejection`] on a chain parent array
+/// (property-tested below).
+pub fn accept_chain_rejection(
+    drafts: &[i32],
+    target_rows: &[&[f32]], // K+1 rows
+    q_rows: Option<&[&[f32]]>,
+    cfg: &SampleConfig,
+    rng: &mut Rng,
+) -> Acceptance {
+    assert_eq!(target_rows.len(), drafts.len() + 1);
+    if let Some(q) = q_rows {
+        assert_eq!(q.len(), target_rows.len());
+    }
+    let mut emitted = Vec::with_capacity(drafts.len() + 1);
+    let mut n_accepted = 0;
+    for (i, &dtok) in drafts.iter().enumerate() {
+        let mut p = filtered_probs(target_rows[i], cfg);
+        let mut q_cur = q_rows.map(|q| filtered_probs(q[i], cfg));
+        let d = dtok as usize;
+        if (rng.f64() as f32) < accept_ratio(&p, q_cur.as_deref(), d) {
+            emitted.push(dtok);
+            n_accepted += 1;
+            continue;
+        }
+        reject_residual(&mut p, &mut q_cur, d, target_rows[i]);
+        emitted.push(rng.categorical(&p) as i32); // correction from residual
+        return Acceptance { n_accepted, emitted };
+    }
+    emitted.push(sample_filtered(target_rows[drafts.len()], cfg, rng)); // bonus
+    Acceptance { n_accepted, emitted }
+}
+
+/// Tree rejection-sampling acceptance over a width-profile topology —
+/// delegates to [`accept_tree_subset_rejection`] exactly like
+/// [`accept_tree`] delegates to [`accept_tree_subset`].
+pub fn accept_tree_rejection(
+    tree: &TreeTopology,
+    drafts: &[i32],
+    target_rows: &[&[f32]], // N+1 rows
+    q_rows: Option<&[&[f32]]>,
+    cfg: &SampleConfig,
+    rng: &mut Rng,
+) -> TreeAcceptance {
+    assert_eq!(drafts.len(), tree.len());
+    let parents: Vec<usize> = (1..=tree.len()).map(|i| tree.parent(i)).collect();
+    accept_tree_subset_rejection(&parents, drafts, target_rows, q_rows, cfg, rng)
+}
+
+/// Multi-branch rejection sampling over an arbitrary (compacted) subtree —
+/// the base implementation every temperature acceptance inherits (chain,
+/// static tree, and dynamic subsets, via the same delegation the
+/// exact-match family uses).
+///
+/// At each node: `p` = filtered target row; the drafted children are tried
+/// in ascending slot order, child `d` accepted with `min(1, p(d)/q(d))`
+/// (one `rng.f64()` per tried child). On rejection the target residual
+/// `max(0, p - q)` is renormalized and the proposal residualized before
+/// the next sibling. If no child accepts, ONE categorical draw from the
+/// final residual emits the correction; at a leaf the same draw over the
+/// full filtered row emits the bonus. `q_rows = None` (the engine's
+/// deterministic top-k drafting) is the point-mass proposal: acceptance
+/// probability `p(d)`, residual zeroes `d` — provably lossless for
+/// deterministic drafts, pinned by the statistical suite below.
+pub fn accept_tree_subset_rejection(
+    parents: &[usize],
+    drafts: &[i32],
+    target_rows: &[&[f32]], // parents.len() + 1 rows
+    q_rows: Option<&[&[f32]]>,
+    cfg: &SampleConfig,
+    rng: &mut Rng,
+) -> TreeAcceptance {
+    assert_eq!(drafts.len(), parents.len());
+    assert_eq!(target_rows.len(), parents.len() + 1);
+    if let Some(q) = q_rows {
+        assert_eq!(q.len(), target_rows.len());
+    }
+    debug_assert!(parents.iter().enumerate().all(|(i, &p)| p <= i), "parents must precede children");
+    let mut accepted_path = Vec::new();
+    let mut emitted = Vec::new();
+    let mut cur = 0usize; // chunk slot of the current path head (0 = root)
+    loop {
+        let mut p = filtered_probs(target_rows[cur], cfg);
+        let mut q_cur = q_rows.map(|q| filtered_probs(q[cur], cfg));
+        let mut descended = false;
+        for c in 1..=parents.len() {
+            if parents[c - 1] != cur {
+                continue;
+            }
+            let d = drafts[c - 1] as usize;
+            if (rng.f64() as f32) < accept_ratio(&p, q_cur.as_deref(), d) {
+                accepted_path.push(c);
+                emitted.push(drafts[c - 1]);
+                cur = c;
+                descended = true;
+                break;
+            }
+            reject_residual(&mut p, &mut q_cur, d, target_rows[cur]);
+        }
+        if !descended {
+            // correction (some child tried) or bonus (leaf): one draw from
+            // the residual — the full filtered row at a leaf
+            emitted.push(rng.categorical(&p) as i32);
+            return TreeAcceptance { accepted_path, emitted };
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-request dispatch (what the engine calls)
+// ---------------------------------------------------------------------------
+
+/// Engine dispatch: greedy requests keep the exact-match argmax walk (byte
+/// identical to the pre-rejection engine, zero rng draws); temperature
+/// requests use chain rejection sampling with the point-mass proposal
+/// (deterministic engine drafts).
+pub fn accept_chain_sampled(
+    drafts: &[i32],
+    target_rows: &[&[f32]],
+    cfg: &SampleConfig,
+    rng: &mut Rng,
+) -> Acceptance {
+    match cfg.mode {
+        Sampling::Greedy => accept_chain(drafts, target_rows, Sampling::Greedy, rng),
+        Sampling::Temperature(_) => accept_chain_rejection(drafts, target_rows, None, cfg, rng),
+    }
+}
+
+/// Engine dispatch for static trees — see [`accept_chain_sampled`].
+pub fn accept_tree_sampled(
+    tree: &TreeTopology,
+    drafts: &[i32],
+    target_rows: &[&[f32]],
+    cfg: &SampleConfig,
+    rng: &mut Rng,
+) -> TreeAcceptance {
+    match cfg.mode {
+        Sampling::Greedy => accept_tree(tree, drafts, target_rows, Sampling::Greedy, rng),
+        Sampling::Temperature(_) => {
+            accept_tree_rejection(tree, drafts, target_rows, None, cfg, rng)
+        }
+    }
+}
+
+/// Engine dispatch for dynamic (compacted-subset) trees — see
+/// [`accept_chain_sampled`].
+pub fn accept_tree_subset_sampled(
+    parents: &[usize],
+    drafts: &[i32],
+    target_rows: &[&[f32]],
+    cfg: &SampleConfig,
+    rng: &mut Rng,
+) -> TreeAcceptance {
+    match cfg.mode {
+        Sampling::Greedy => accept_tree_subset(parents, drafts, target_rows, Sampling::Greedy, rng),
+        Sampling::Temperature(_) => {
+            accept_tree_subset_rejection(parents, drafts, target_rows, None, cfg, rng)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::stats::{goodness_of_fit, GofReport};
 
     fn onehot(v: usize, n: usize) -> Vec<f32> {
         let mut row = vec![0.0; n];
@@ -182,6 +574,102 @@ mod tests {
     fn argmax_basic() {
         assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
         assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn argmax_tie_breaking_first_max_wins() {
+        // the rejection path's point-mass fallback leans on stable
+        // tie-breaking: the LOWEST index among equal maxima, always
+        assert_eq!(argmax(&[5.0, 5.0, 1.0]), 0);
+        assert_eq!(argmax(&[1.0, 5.0, 5.0, 5.0]), 1);
+        assert_eq!(argmax(&[2.0, 2.0, 2.0]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
+        // and filtered_probs' greedy/t->0 point mass lands on the same index
+        let cfg = SampleConfig::temperature(0.0);
+        let p = filtered_probs(&[3.0, 7.0, 7.0], &cfg);
+        assert_eq!(p, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn temperature_floor_t_to_zero_is_argmax_with_one_draw() {
+        // t.max(1e-4) documents the t -> 0 limit: the softmax degenerates to
+        // a point mass at the argmax, so Temperature(0.0) emits the argmax —
+        // but unlike Greedy it still consumes exactly ONE rng draw
+        let mut rows_rng = Rng::new(0xF100);
+        for _ in 0..100 {
+            let row: Vec<f32> =
+                (0..12).map(|_| rows_rng.below(1000) as f32 / 100.0).collect();
+            let mut rng = Rng::new(77);
+            assert_eq!(sample(&row, Sampling::Temperature(0.0), &mut rng), argmax(&row));
+            // one draw consumed: the state matches a control that drew once
+            let mut control = Rng::new(77);
+            control.f64();
+            assert_eq!(rng.next_u64(), control.next_u64(), "t=0 must consume one draw");
+            // greedy consumes zero
+            let mut g = Rng::new(77);
+            assert_eq!(sample(&row, Sampling::Greedy, &mut g), argmax(&row));
+            assert_eq!(g.next_u64(), Rng::new(77).next_u64(), "greedy must consume none");
+        }
+    }
+
+    #[test]
+    fn filtered_probs_default_is_plain_softmax() {
+        let row = vec![1.0, 2.0, 0.5, -1.0];
+        let cfg = SampleConfig::temperature(0.7);
+        let p = filtered_probs(&row, &cfg);
+        let m = 2.0f32;
+        let w: Vec<f32> = row.iter().map(|&x| ((x - m) / 0.7).exp()).collect();
+        let tot: f32 = w.iter().sum();
+        for (a, b) in p.iter().zip(w.iter()) {
+            assert!((a - b / tot).abs() < 1e-6);
+        }
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn filtered_probs_top_k_and_top_p_semantics() {
+        // logits = ln(p) at t=1 give exact probabilities to filter
+        let row: Vec<f32> = [0.4f32, 0.3, 0.2, 0.1].iter().map(|p| p.ln()).collect();
+        let t1 = SampleConfig::temperature(1.0);
+
+        let p = filtered_probs(&row, &t1.with_top_k(2));
+        assert!((p[0] - 4.0 / 7.0).abs() < 1e-5);
+        assert!((p[1] - 3.0 / 7.0).abs() < 1e-5);
+        assert_eq!(&p[2..], &[0.0, 0.0]);
+
+        // nucleus: smallest prefix with cumulative mass >= top_p
+        let p = filtered_probs(&row, &t1.with_top_p(0.65));
+        assert!(p[0] > 0.0 && p[1] > 0.0, "0.4 + 0.3 covers 0.65");
+        assert_eq!(&p[2..], &[0.0, 0.0]);
+        let p = filtered_probs(&row, &t1.with_top_p(0.4));
+        assert_eq!(p, vec![1.0, 0.0, 0.0, 0.0], "0.4 alone covers 0.4");
+        // always at least one token even for tiny top_p
+        let p = filtered_probs(&row, &t1.with_top_p(1e-6));
+        assert_eq!(p, vec![1.0, 0.0, 0.0, 0.0]);
+
+        // top-k ties keep the LOWEST indices (deterministic)
+        let p = filtered_probs(&[1.0, 1.0, 1.0, 1.0], &t1.with_top_k(2));
+        assert_eq!(p, vec![0.5, 0.5, 0.0, 0.0]);
+
+        // filters compose: top-k first, then top-p inside the survivors
+        let p = filtered_probs(&row, &t1.with_top_k(3).with_top_p(0.45));
+        assert!((p[0] - 4.0 / 7.0).abs() < 1e-5, "top-p 0.45 needs 0.4+0.3 of the top-3");
+        assert!((p[1] - 3.0 / 7.0).abs() < 1e-5);
+        assert_eq!(&p[2..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn sample_filtered_matches_sample_at_default_params() {
+        // normalizing the softmax weights must not move the categorical walk
+        let mut rows_rng = Rng::new(0xBEEF);
+        for _ in 0..50 {
+            let row: Vec<f32> =
+                (0..10).map(|_| rows_rng.below(1000) as f32 / 100.0).collect();
+            let seed = rows_rng.next_u64();
+            let a = sample(&row, Sampling::Temperature(0.8), &mut Rng::new(seed));
+            let b = sample_filtered(&row, &SampleConfig::temperature(0.8), &mut Rng::new(seed));
+            assert_eq!(a, b);
+        }
     }
 
     #[test]
@@ -479,5 +967,410 @@ mod tests {
         let a = accept_chain(&[0, 1, 2, 3, 4], &refs, Sampling::Greedy, &mut rng);
         assert_eq!(a.emitted.len(), a.n_accepted + 1);
         assert_eq!(a.emitted.len(), 6); // K+1 = theoretical max (paper: 6.0)
+    }
+
+    // -----------------------------------------------------------------------
+    // rejection-sampling properties (satellite 1 + greedy regression)
+    // -----------------------------------------------------------------------
+
+    /// Random SampleConfig for property tests: temperature in (0.3, 1.3),
+    /// filters on or off.
+    fn rand_cfg(rng: &mut Rng, vocab: usize) -> SampleConfig {
+        let mut cfg = SampleConfig::temperature(0.3 + rng.below(100) as f32 / 100.0);
+        if rng.below(2) == 0 {
+            cfg = cfg.with_top_k(1 + rng.below(vocab));
+        }
+        if rng.below(2) == 0 {
+            cfg = cfg.with_top_p(0.5 + rng.below(50) as f32 / 100.0);
+        }
+        cfg
+    }
+
+    #[test]
+    fn chain_rejection_matches_tree_subset_rejection_on_chain_incl_rng() {
+        // THE satellite parity property: the chain rejection rule and the
+        // tree-subset rejection rule on a chain parent array [0,1,2,..] are
+        // the same algorithm — token-for-token AND rng-draw-for-rng-draw
+        // (the post-run rng states must coincide), with and without explicit
+        // q proposals, under greedy and temperature dispatch
+        use crate::util::prop::{check, Case};
+        check("chain-rejection-parity", 150, |rng| {
+            let k = 1 + rng.below(7);
+            let vocab = 4 + rng.below(12);
+            let rows = rand_rows(rng, k + 1, vocab);
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let qrows = rand_rows(rng, k + 1, vocab);
+            let qrefs: Vec<&[f32]> = qrows.iter().map(|r| r.as_slice()).collect();
+            let use_q = rng.below(2) == 0;
+            let q: Option<&[&[f32]]> = use_q.then_some(&qrefs[..]);
+            let drafts: Vec<i32> = refs
+                .iter()
+                .take(k)
+                .map(|r| {
+                    if rng.below(2) == 0 {
+                        argmax(r)
+                    } else {
+                        rng.below(vocab) as i32
+                    }
+                })
+                .collect();
+            let cfg = rand_cfg(rng, vocab);
+            let seed = rng.next_u64();
+            let parents: Vec<usize> = (0..k).collect();
+            let mut rng_a = Rng::new(seed);
+            let chain = accept_chain_rejection(&drafts, &refs, q, &cfg, &mut rng_a);
+            let mut rng_b = Rng::new(seed);
+            let sub =
+                accept_tree_subset_rejection(&parents, &drafts, &refs, q, &cfg, &mut rng_b);
+            if sub.emitted != chain.emitted
+                || sub.n_accepted() != chain.n_accepted
+                || rng_a.next_u64() != rng_b.next_u64()
+            {
+                return Case::Fail {
+                    desc: format!(
+                        "k={k} use_q={use_q} chain {:?}/{} vs subset {:?}/{} (cfg {cfg:?})",
+                        chain.emitted,
+                        chain.n_accepted,
+                        sub.emitted,
+                        sub.n_accepted()
+                    ),
+                    size: k,
+                };
+            }
+            Case::Pass
+        });
+    }
+
+    #[test]
+    fn sampled_dispatch_greedy_is_byte_identical_and_draw_free() {
+        // greedy regression (satellite): the per-request dispatch must route
+        // greedy requests through the exact-match walk unchanged — identical
+        // outputs AND an untouched rng (zero draws), chain and tree-subset
+        use crate::util::prop::{check, Case};
+        check("greedy-dispatch-regression", 120, |rng| {
+            let levels = 1 + rng.below(4);
+            let widths: Vec<usize> = (0..levels).map(|_| 1 + rng.below(3)).collect();
+            let t = TreeTopology::from_widths(&widths);
+            let vocab = 4 + rng.below(8);
+            let rows = rand_rows(rng, t.len() + 1, vocab);
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let drafts: Vec<i32> = (0..t.len())
+                .map(|_| {
+                    if rng.below(3) == 0 {
+                        rng.below(vocab) as i32
+                    } else {
+                        argmax(refs[rng.below(t.len() + 1)])
+                    }
+                })
+                .collect();
+            let parents: Vec<usize> = (1..=t.len()).map(|i| t.parent(i)).collect();
+            let cfg = SampleConfig::greedy();
+            let seed = rng.next_u64();
+            let mut rng_a = Rng::new(seed);
+            let a = accept_tree_subset_sampled(&parents, &drafts, &refs, &cfg, &mut rng_a);
+            let b = accept_tree_subset(
+                &parents,
+                &drafts,
+                &refs,
+                Sampling::Greedy,
+                &mut Rng::new(seed),
+            );
+            let draw_free = rng_a.next_u64() == Rng::new(seed).next_u64();
+            if a.emitted != b.emitted || a.accepted_path != b.accepted_path || !draw_free {
+                return Case::Fail {
+                    desc: format!("greedy dispatch diverged: {a:?} vs {b:?} draw_free={draw_free}"),
+                    size: t.len(),
+                };
+            }
+            // chain side too
+            let kc = 1 + rng.below(5);
+            let crows = rand_rows(rng, kc + 1, vocab);
+            let crefs: Vec<&[f32]> = crows.iter().map(|r| r.as_slice()).collect();
+            let cdrafts: Vec<i32> = (0..kc).map(|i| argmax(crefs[i])).collect();
+            let mut rng_c = Rng::new(seed);
+            let c = accept_chain_sampled(&cdrafts, &crefs, &cfg, &mut rng_c);
+            let d = accept_chain(&cdrafts, &crefs, Sampling::Greedy, &mut Rng::new(seed));
+            if c != d || rng_c.next_u64() != Rng::new(seed).next_u64() {
+                return Case::Fail { desc: format!("chain greedy dispatch: {c:?} vs {d:?}"), size: kc };
+            }
+            Case::Pass
+        });
+    }
+
+    #[test]
+    fn rejection_accepted_path_is_root_prefix_and_emits_drafts() {
+        // structural invariant under rejection: the accepted path is a
+        // connected root path whose emitted tokens are the drafted tokens,
+        // plus exactly one stop token
+        use crate::util::prop::{check, Case};
+        check("rejection-root-prefix", 120, |rng| {
+            let levels = 1 + rng.below(4);
+            let widths: Vec<usize> = (0..levels).map(|_| 1 + rng.below(3)).collect();
+            let t = TreeTopology::from_widths(&widths);
+            let vocab = 4 + rng.below(8);
+            let rows = rand_rows(rng, t.len() + 1, vocab);
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let drafts: Vec<i32> = (0..t.len())
+                .map(|_| {
+                    if rng.below(3) == 0 {
+                        rng.below(vocab) as i32
+                    } else {
+                        argmax(refs[rng.below(t.len() + 1)])
+                    }
+                })
+                .collect();
+            let cfg = rand_cfg(rng, vocab);
+            let a = accept_tree_rejection(&t, &drafts, &refs, None, &cfg, &mut rng.clone());
+            if a.emitted.len() != a.n_accepted() + 1 {
+                return Case::Fail {
+                    desc: format!("emitted {} != path {} + 1", a.emitted.len(), a.n_accepted()),
+                    size: t.len(),
+                };
+            }
+            let mut prev = 0usize;
+            for (m, &node) in a.accepted_path.iter().enumerate() {
+                if t.parent(node) != prev || a.emitted[m] != drafts[node - 1] {
+                    return Case::Fail {
+                        desc: format!("path {:?} invalid under {widths:?}", a.accepted_path),
+                        size: t.len(),
+                    };
+                }
+                prev = node;
+            }
+            Case::Pass
+        });
+    }
+
+    // -----------------------------------------------------------------------
+    // the statistical acceptance suite (satellite 2) — pre-registered
+    // thresholds, fixed seeds, no PJRT. The `rust-sampling` CI job runs
+    // exactly these.
+    // -----------------------------------------------------------------------
+
+    /// Pre-registered test parameters: 12k trials on a 12-token vocab; the
+    /// chi-square level is alpha = 0.001 (deterministic seeds make this a
+    /// fixed PASS/FAIL, not a flake rate) and the TVD tolerance 0.03 sits
+    /// ~3x above the expected sampling noise at n = 12_000 while the
+    /// deliberately-biased controls land at TVD > 0.05 by construction.
+    const TRIALS: usize = 12_000;
+    const ALPHA: f64 = 0.001;
+    const TVD_TOL: f64 = 0.03;
+    const STAT_SEED: u64 = 0x5A7_1571C;
+
+    /// Fixed synthetic target: 4 chunk-slot rows (tree parents [0,0,1]) over
+    /// a 12-token vocab, logits in [0, 3) so the temperature-0.7 softmax has
+    /// real spread without collapsing to a point mass.
+    fn stat_rows() -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(0x7A26E7);
+        (0..4)
+            .map(|_| (0..12).map(|_| rng.below(300) as f32 / 100.0).collect())
+            .collect()
+    }
+
+    fn stat_cfg() -> SampleConfig {
+        SampleConfig::temperature(0.7).with_top_k(8)
+    }
+
+    /// Deterministic drafts for the [0,0,1] tree: the target's two most
+    /// likely first tokens (distinct within the level), then the most likely
+    /// continuation under node 1 — realistic top-k drafting, decent
+    /// acceptance mass.
+    fn stat_drafts(rows: &[Vec<f32>]) -> Vec<i32> {
+        let d1 = argmax(&rows[0]);
+        let mut second = rows[0].clone();
+        second[d1 as usize] = f32::NEG_INFINITY;
+        vec![d1, argmax(&second), argmax(&rows[1])]
+    }
+
+    fn expected_probs(row: &[f32], cfg: &SampleConfig) -> Vec<f64> {
+        filtered_probs(row, cfg).iter().map(|&x| x as f64).collect()
+    }
+
+    fn assert_gof(rep: &GofReport, should_pass: bool, label: &str) {
+        assert_eq!(
+            rep.passes(TVD_TOL),
+            should_pass,
+            "{label}: tvd {:.4} (tol {TVD_TOL}), chi2 {:.1} (crit {:.1}, df {}), \
+             impossible bins {}",
+            rep.tvd,
+            rep.chi2,
+            rep.chi2_crit,
+            rep.df,
+            rep.impossible_bins,
+        );
+    }
+
+    #[test]
+    fn rejection_first_token_marginal_matches_direct_target_sampling() {
+        // LOSSLESSNESS: over 12k seeded trials, the first emitted token of
+        // the tree rejection rule (point-mass proposal, deterministic
+        // drafts) is distributed exactly like direct sampling from the
+        // request's filtered target distribution
+        let rows = stat_rows();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let drafts = stat_drafts(&rows);
+        let cfg = stat_cfg();
+        let parents = [0usize, 0, 1];
+        let mut counts = vec![0u64; 12];
+        for trial in 0..TRIALS {
+            let mut rng = Rng::new(STAT_SEED ^ (trial as u64).wrapping_mul(0x9E37_79B9));
+            let a = accept_tree_subset_rejection(&parents, &drafts, &refs, None, &cfg, &mut rng);
+            counts[a.emitted[0] as usize] += 1;
+        }
+        let rep = goodness_of_fit(&counts, &expected_probs(&rows[0], &cfg), ALPHA);
+        assert_gof(&rep, true, "rejection first-token marginal");
+    }
+
+    #[test]
+    fn rejection_conditional_continuation_matches_target() {
+        // LOSSLESSNESS one level down: conditioned on descending into node
+        // 1, the SECOND emitted token must follow node 1's filtered target
+        // row — the walk's residual machinery must not leak into accepted
+        // branches
+        let rows = stat_rows();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let drafts = stat_drafts(&rows);
+        let cfg = stat_cfg();
+        let parents = [0usize, 0, 1];
+        let mut counts = vec![0u64; 12];
+        for trial in 0..TRIALS {
+            let mut rng = Rng::new(STAT_SEED ^ (trial as u64).wrapping_mul(0x9E37_79B9));
+            let a = accept_tree_subset_rejection(&parents, &drafts, &refs, None, &cfg, &mut rng);
+            if a.accepted_path.first() == Some(&1) {
+                counts[a.emitted[1] as usize] += 1;
+            }
+        }
+        let n: u64 = counts.iter().sum();
+        assert!(n >= 2_000, "need conditional mass to test against ({n} trials descended)");
+        let rep = goodness_of_fit(&counts, &expected_probs(&rows[1], &cfg), ALPHA);
+        assert_gof(&rep, true, "rejection conditional continuation");
+    }
+
+    #[test]
+    fn sampled_drafts_with_explicit_q_rows_stay_lossless() {
+        // the GENERAL min(1, p/q) rule: drafts SAMPLED from a known proposal
+        // q (chain of depth 2, fresh drafts every trial from an independent
+        // stream), q_rows threaded into acceptance. The emitted first token
+        // must still follow the filtered TARGET distribution — speculative
+        // sampling's defining property
+        let rows = stat_rows();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut qrng = Rng::new(0x0DD_D12AF7);
+        let qrows: Vec<Vec<f32>> =
+            (0..3).map(|_| (0..12).map(|_| qrng.below(300) as f32 / 100.0).collect()).collect();
+        let qrefs: Vec<&[f32]> = qrows.iter().map(|r| r.as_slice()).collect();
+        let cfg = stat_cfg();
+        let parents = [0usize, 1];
+        let mut counts = vec![0u64; 12];
+        for trial in 0..TRIALS {
+            let t64 = trial as u64;
+            let mut draft_rng = Rng::new(0xD4AF7 ^ t64.wrapping_mul(0x2545_F491));
+            let drafts = vec![
+                sample_filtered(&qrows[0], &cfg, &mut draft_rng),
+                sample_filtered(&qrows[1], &cfg, &mut draft_rng),
+            ];
+            let mut rng = Rng::new(STAT_SEED ^ t64.wrapping_mul(0x9E37_79B9));
+            let a = accept_tree_subset_rejection(
+                &parents,
+                &drafts,
+                &refs[..3],
+                Some(&qrefs[..3]),
+                &cfg,
+                &mut rng,
+            );
+            counts[a.emitted[0] as usize] += 1;
+        }
+        let rep = goodness_of_fit(&counts, &expected_probs(&rows[0], &cfg), ALPHA);
+        assert_gof(&rep, true, "sampled-draft min(1,p/q) marginal");
+    }
+
+    #[test]
+    fn exact_match_control_at_temperature_one_fails_the_check() {
+        // POWER (the ISSUE's pre-registered control): verification that
+        // ignores the request's sampling parameters — the old exact-match
+        // rule run at raw temperature 1.0 with no filters, against a request
+        // that asked for temperature 0.7 + top-k 8 — must FAIL the same
+        // marginal check the rejection rule passes. This is precisely the
+        // pre-PR serving gap (the engine sampled at the raw temperature and
+        // ignored top-k/top-p), so the suite demonstrably detects it.
+        let rows = stat_rows();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let drafts = stat_drafts(&rows);
+        let cfg = stat_cfg(); // what the request ASKED for
+        let parents = [0usize, 0, 1];
+        let mut counts = vec![0u64; 12];
+        for trial in 0..TRIALS {
+            let mut rng = Rng::new(STAT_SEED ^ (trial as u64).wrapping_mul(0x9E37_79B9));
+            let a = accept_tree_subset(
+                &parents,
+                &drafts,
+                &refs,
+                Sampling::Temperature(1.0), // what the control DELIVERS
+                &mut rng,
+            );
+            counts[a.emitted[0] as usize] += 1;
+        }
+        let rep = goodness_of_fit(&counts, &expected_probs(&rows[0], &cfg), ALPHA);
+        assert_gof(&rep, false, "exact-match@T=1.0 control");
+        assert!(
+            rep.tvd > 0.05,
+            "control should fail by a wide margin, not at the threshold edge: tvd {:.4}",
+            rep.tvd
+        );
+    }
+
+    #[test]
+    fn scalar_confidence_q_on_deterministic_drafts_is_biased() {
+        // POWER + a design pin: reusing the drafter's model confidence as
+        // the rejection q while the drafts are DETERMINISTIC top-k picks is
+        // provably biased (the true proposal of a deterministic draft is a
+        // point mass, not the model distribution) — which is why the engine
+        // threads drafter confidence into calibration metrics only. Worked
+        // example: p = (.2, .3, .5), q = (.6, .3, .1), drafts = top-2 of q:
+        // the q-threaded rule emits (1/3, 0, 2/3) — TVD 0.3 from p — while
+        // the point-mass rule stays exactly p.
+        let pad = |v: &[f32]| -> Vec<f32> {
+            let mut row: Vec<f32> = v.iter().map(|p| p.ln()).collect();
+            row.extend(std::iter::repeat(-30.0).take(8 - v.len()));
+            row
+        };
+        let p_row = pad(&[0.2, 0.3, 0.5]);
+        let q_row = pad(&[0.6, 0.3, 0.1]);
+        let bonus_row = pad(&[0.5, 0.5]); // any row; the walk rarely gets there
+        let refs: Vec<&[f32]> = vec![&p_row, &bonus_row, &bonus_row];
+        let qrefs: Vec<&[f32]> = vec![&q_row, &bonus_row, &bonus_row];
+        let cfg = SampleConfig::temperature(1.0);
+        let parents = [0usize, 0]; // two depth-1 siblings
+        let drafts = [0i32, 1]; // deterministic top-2 of q — NOT sampled
+        let expected = expected_probs(&p_row, &cfg);
+
+        let mut biased = vec![0u64; 8];
+        let mut lossless = vec![0u64; 8];
+        for trial in 0..TRIALS {
+            let seed = STAT_SEED ^ (trial as u64).wrapping_mul(0x9E37_79B9);
+            let a = accept_tree_subset_rejection(
+                &parents,
+                &drafts,
+                &refs,
+                Some(&qrefs),
+                &cfg,
+                &mut Rng::new(seed),
+            );
+            biased[a.emitted[0] as usize] += 1;
+            let b = accept_tree_subset_rejection(
+                &parents,
+                &drafts,
+                &refs,
+                None,
+                &cfg,
+                &mut Rng::new(seed),
+            );
+            lossless[b.emitted[0] as usize] += 1;
+        }
+        let rep_biased = goodness_of_fit(&biased, &expected, ALPHA);
+        assert_gof(&rep_biased, false, "model-confidence-q control");
+        assert!(rep_biased.tvd > 0.1, "expected ~0.3 TVD, got {:.4}", rep_biased.tvd);
+        let rep_lossless = goodness_of_fit(&lossless, &expected, ALPHA);
+        assert_gof(&rep_lossless, true, "point-mass rule on the same setup");
     }
 }

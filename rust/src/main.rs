@@ -15,6 +15,11 @@
 //!                                      --kv-blocks caps the block budget)
 //!              [--tree-dyn [--tree-envelope w:..] [--tree-budget N]]
 //!                                     (legacy spelling of --policy dyn:..)
+//!              [--temperature T [--top-p P] [--top-k N]]
+//!                                     (per-request sampling: filtered-softmax
+//!                                      target, lossless rejection-sampling
+//!                                      acceptance; --top-p/--top-k imply
+//!                                      --temperature 1.0; default greedy)
 //!   eval-acceptance --drafter --dataset [--k --requests --max-new]
 //!   bench-otps --target --method --k --concurrency
 //!              [--dataset --mixed --profile]
@@ -32,6 +37,10 @@
 //!                                      budget = the static tree's node
 //!                                      count — plus the accepted-by-depth
 //!                                      tuning histogram)
+//!              [--temperature T [--top-p P] [--top-k N]]
+//!                                     (benchmark under temperature serving —
+//!                                      rejection-sampling acceptance; the
+//!                                      default stays greedy/bit-reproducible)
 //!   bench-suite                       perf-trajectory matrix -> BENCH_<pr>.json
 //!              [--smoke]              (CI-sized matrix: fewer loads, tiny budgets)
 //!              [--pr N --out FILE]    (default BENCH_<CURRENT_PR>.json)
@@ -54,8 +63,8 @@ use anyhow::{anyhow, Result};
 use p_eagle::config::Manifest;
 use p_eagle::coordinator::server::spawn;
 use p_eagle::coordinator::{
-    paged_from_env, tree_dyn_from_env, EngineConfig, EngineMetrics, PagedKvConfig, ServerEvent,
-    SpecPolicy,
+    paged_from_env, tree_dyn_from_env, EngineConfig, EngineMetrics, PagedKvConfig, SamplingParams,
+    ServerEvent, SpecPolicy,
 };
 use p_eagle::masking::{DynamicTreeConfig, TreeTopology};
 use p_eagle::memmodel;
@@ -110,6 +119,41 @@ fn tree_dyn_opts(args: &Args, default_budget: usize) -> Result<Option<DynamicTre
     Ok(Some(cfg))
 }
 
+/// `--temperature T [--top-p P] [--top-k N]`: per-request sampling for
+/// serve/bench-otps. The target distribution is the filtered softmax
+/// (temperature, then top-k, then top-p nucleus) and acceptance switches
+/// from greedy exact-match to lossless rejection sampling against that
+/// distribution. `--top-p`/`--top-k` imply `--temperature 1.0` — a filter
+/// without a temperature means "sample from the filtered raw softmax", not
+/// greedy (greedy ignores filters entirely). With none of the flags the
+/// default stays greedy and the output is bit-reproducible.
+fn sampling_opts(args: &Args) -> Result<SamplingParams> {
+    let temperature = args.get("temperature").map(|t| {
+        t.parse::<f32>()
+            .unwrap_or_else(|_| panic!("--temperature expects a number"))
+    });
+    let top_p = args.get("top-p").map(|p| {
+        p.parse::<f32>().unwrap_or_else(|_| panic!("--top-p expects a number"))
+    });
+    let top_k = args.get("top-k").map(|k| {
+        k.parse::<usize>().unwrap_or_else(|_| panic!("--top-k expects a number"))
+    });
+    let temperature = match (temperature, top_p.is_some() || top_k.is_some()) {
+        (Some(t), _) => t,
+        (None, true) => 1.0,
+        (None, false) => return Ok(SamplingParams::greedy()),
+    };
+    let mut sp = SamplingParams::temperature(temperature, 11);
+    if let Some(p) = top_p {
+        sp = sp.with_top_p(p);
+    }
+    if let Some(k) = top_k {
+        sp = sp.with_top_k(k);
+    }
+    sp.validate().map_err(|e| anyhow!(e))?;
+    Ok(sp)
+}
+
 /// Per-drafter metrics breakdown (multi-policy engines; a single row for a
 /// homogeneous batch): AL, per-depth acceptance, bucket passes.
 fn print_policy_breakdown(metrics: &EngineMetrics) {
@@ -120,8 +164,16 @@ fn print_policy_breakdown(metrics: &EngineMetrics) {
     for (name, pm) in &metrics.per_policy {
         let rates: Vec<String> =
             pm.depth_acceptance_rates().iter().map(|r| format!("{r:.2}")).collect();
+        // drafter-calibration readout (dynamic-tree policies only): mean
+        // drafter-estimated conditional q among accepted vs rejected nodes —
+        // a well-calibrated drafter shows q̄acc well above q̄rej
+        let calib = if pm.q_accepted_n + pm.q_rejected_n > 0 {
+            format!("  q̄acc {:.2} q̄rej {:.2}", pm.mean_q_accepted(), pm.mean_q_rejected())
+        } else {
+            String::new()
+        };
         println!(
-            "  {name:<18} AL {:.2}  iters {}  passes {}  accepted-by-depth [{}]",
+            "  {name:<18} AL {:.2}  iters {}  passes {}  accepted-by-depth [{}]{calib}",
             pm.acceptance_length(),
             pm.iterations,
             pm.steps,
@@ -232,6 +284,10 @@ fn serve(args: &Args) -> Result<()> {
         println!("serving policy: {}", p.id());
     }
 
+    let sampling = sampling_opts(args)?;
+    if !sampling.config().is_greedy() {
+        println!("serving sampling: {sampling:?}");
+    }
     let mut arr = report::closed_loop_arrivals(&manifest, &dataset, max_new, 7)?;
     let cfg = EngineConfig::new(&target, policies[0].clone(), conc, max_new)
         .with_policies(policies[1..].to_vec())
@@ -245,6 +301,10 @@ fn serve(args: &Args) -> Result<()> {
             // round-robin: one batch concurrently serves every drafter
             req = req.with_policy(policies[i % policies.len()].clone());
         }
+        // per-request private rng stream: shared mode/filters, the seed
+        // derived from (server seed, request id)
+        let seed = 7 ^ req.id;
+        req = req.with_sampling(SamplingParams { seed, ..sampling });
         handle.submit(req);
     }
     let mut finished = 0usize;
@@ -331,6 +391,7 @@ fn bench_otps(args: &Args) -> Result<()> {
     // --mixed: per-request generation budgets from the Fig.1 length model —
     // the head-of-line workload the stepped engine exists for
     let mixed = args.flag("mixed");
+    let sampling = sampling_opts(args)?;
 
     // --sweep-drafters: one run per serveable drafter of the target,
     // in-process (ONE runtime: shared target weights, shared executable
@@ -338,7 +399,7 @@ fn bench_otps(args: &Args) -> Result<()> {
     if args.flag("sweep-drafters") {
         let runs = report::sweep_drafters(
             &mut mr, &target, &dataset, k, conc, total, max_new, 11, mixed,
-            paged_opts(args),
+            paged_opts(args), sampling,
         )?;
         println!(
             "drafter sweep [{target} K={k} C={conc} {dataset}{}] — {} drafters, shared runtime",
@@ -380,7 +441,7 @@ fn bench_otps(args: &Args) -> Result<()> {
         }
         let (chain, treed, dyned) = report::compare_chain_tree(
             &mut mr, &drafter, &dataset, &tree, dynamic.as_ref(), conc, total, max_new,
-            11, mixed, paged_opts(args),
+            11, mixed, paged_opts(args), sampling,
         )?;
         println!(
             "chain[{target}/{method} K={} C={conc} {dataset}{}] OTPS {:.0}  AL {:.2}  occ {:.2}",
@@ -462,7 +523,7 @@ fn bench_otps(args: &Args) -> Result<()> {
 
     let run = report::bench_otps(
         &mut mr, &drafter, &dataset, k, conc, total, max_new, 11, mixed, None, None,
-        paged_opts(args),
+        paged_opts(args), sampling,
     )?;
     println!(
         "OTPS[{target}/{method} K={k} C={conc} {dataset}{}] = {:.0} \

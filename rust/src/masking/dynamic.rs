@@ -187,6 +187,37 @@ pub fn select_nodes(envelope: &TreeTopology, joint_logp: &[f32], budget: usize) 
     out
 }
 
+/// Per-selected-node CONDITIONAL draft probability: `q_j =
+/// exp(joint(node) - joint(parent))` — the drafter's own model confidence
+/// in node `j`'s token given its parent (the root's joint is 0, so depth-1
+/// nodes report `exp(joint)` directly). Clamped to [0, 1] against device
+/// float drift; NaN reports 0.
+///
+/// This is CALIBRATION SIGNAL, not an acceptance input: the engine drafts
+/// deterministically (each node is a fixed top-k rank), so the true
+/// proposal distribution is a point mass and feeding this model-confidence
+/// `q` into the `min(1, p/q)` rejection rule would bias the output — the
+/// sampler's statistical suite demonstrates the bias. The engine records
+/// `q` against acceptance outcomes in
+/// [`PolicyMetrics`](crate::coordinator::metrics::PolicyMetrics) so
+/// over/under-confidence is observable per drafter.
+pub fn conditional_q(envelope: &TreeTopology, joint_logp: &[f32], nodes: &[usize]) -> Vec<f32> {
+    assert_eq!(joint_logp.len(), envelope.len(), "joint_logp must cover every envelope node");
+    nodes
+        .iter()
+        .map(|&id| {
+            let parent = envelope.parent(id);
+            let pj = if parent == 0 { 0.0 } else { joint_logp[parent - 1] };
+            let q = (joint_logp[id - 1] - pj).exp();
+            if q.is_nan() {
+                0.0
+            } else {
+                q.clamp(0.0, 1.0)
+            }
+        })
+        .collect()
+}
+
 /// Compacted chunk-slot parents for a selected subtree: entry `j - 1` is
 /// the compacted slot of compacted node `j`'s parent (0 = root). `nodes`
 /// must be ascending and ancestor-closed (the [`select_nodes`] contract).
@@ -382,6 +413,47 @@ mod tests {
         let joint = random_joint(&t, &mut crate::util::rng::Rng::new(7));
         assert_eq!(select_nodes(&t, &joint, 6), (1..=6).collect::<Vec<_>>());
         assert_eq!(select_nodes(&t, &joint, 99), (1..=6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn conditional_q_recovers_level_terms() {
+        // joint = parent joint + level logp by construction, so q must be
+        // exp(level term) exactly — in (0, 1] for drafter-shaped scores
+        check("dyn-conditional-q", 100, |rng| {
+            let levels = 1 + rng.below(4);
+            let widths: Vec<usize> = (0..levels).map(|_| 1 + rng.below(4)).collect();
+            let t = TreeTopology::from_widths(&widths);
+            let mut level_terms = vec![0f32; t.len()];
+            let mut joint = vec![0f32; t.len()];
+            for i in 1..=t.len() {
+                level_terms[i - 1] = -(rng.below(1000) as f32) / 250.0; // [-4, 0]
+                let p = t.parent(i);
+                joint[i - 1] =
+                    level_terms[i - 1] + if p == 0 { 0.0 } else { joint[p - 1] };
+            }
+            let budget = 1 + rng.below(t.len());
+            let sel = select_nodes(&t, &joint, budget);
+            let qs = conditional_q(&t, &joint, &sel);
+            for (j, (&id, &q)) in sel.iter().zip(qs.iter()).enumerate() {
+                let want = level_terms[id - 1].exp();
+                if !(q > 0.0 && q <= 1.0) || (q - want).abs() > 1e-4 {
+                    return Case::Fail {
+                        desc: format!("node {id} (slot {j}): q {q} want {want}"),
+                        size: t.len(),
+                    };
+                }
+            }
+            Case::Pass
+        });
+    }
+
+    #[test]
+    fn conditional_q_handles_degenerate_scores() {
+        let t = env(&[2, 1]);
+        // node 2's joint above its (root) baseline -> clamped to 1;
+        // NaN joint -> q 0 for the node AND its child (NaN propagates)
+        let qs = conditional_q(&t, &[0.5, f32::NAN, f32::NAN], &[1, 2, 3]);
+        assert_eq!(qs, vec![1.0, 0.0, 0.0]);
     }
 
     #[test]

@@ -8,7 +8,7 @@ use anyhow::{anyhow, Result};
 use crate::config::Manifest;
 use crate::coordinator::{
     run_closed_loop, run_open_loop, EngineConfig, EngineCore, EngineMetrics, PagedKvConfig,
-    RequestResult, SpecPolicy,
+    RequestResult, SamplingParams, SpecPolicy,
 };
 use crate::masking::{DynamicTreeConfig, TreeTopology};
 use crate::runtime::ModelRuntime;
@@ -129,7 +129,9 @@ pub struct OtpsRun {
 /// chain-vs-tree(-vs-dynamic) runs directly comparable. With `paged` set,
 /// the engine serves from the block-paged KV cache (same workload seed ⇒
 /// directly comparable to the dense run, and byte-identical when fully
-/// provisioned).
+/// provisioned). `sampling` is applied to every request (seed re-stamped
+/// per request from the workload seed, so each request keeps a private rng
+/// stream); greedy keeps the historical bit-reproducible benchmark setting.
 #[allow(clippy::too_many_arguments)]
 pub fn bench_otps(
     mr: &mut ModelRuntime,
@@ -144,10 +146,11 @@ pub fn bench_otps(
     tree: Option<&TreeTopology>,
     tree_dynamic: Option<&DynamicTreeConfig>,
     paged: Option<PagedKvConfig>,
+    sampling: SamplingParams,
 ) -> Result<OtpsRun> {
     bench_otps_inner(
         mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
-        mixed_lengths, tree, tree_dynamic, paged, None,
+        mixed_lengths, tree, tree_dynamic, paged, sampling, None,
     )
 }
 
@@ -172,11 +175,12 @@ pub fn bench_otps_open(
     tree: Option<&TreeTopology>,
     tree_dynamic: Option<&DynamicTreeConfig>,
     paged: Option<PagedKvConfig>,
+    sampling: SamplingParams,
     rate_rps: f64,
 ) -> Result<OtpsRun> {
     bench_otps_inner(
         mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
-        mixed_lengths, tree, tree_dynamic, paged, Some(rate_rps),
+        mixed_lengths, tree, tree_dynamic, paged, sampling, Some(rate_rps),
     )
 }
 
@@ -194,6 +198,7 @@ fn bench_otps_inner(
     tree: Option<&TreeTopology>,
     tree_dynamic: Option<&DynamicTreeConfig>,
     paged: Option<PagedKvConfig>,
+    sampling: SamplingParams,
     rate_rps: Option<f64>,
 ) -> Result<OtpsRun> {
     let info = mr.manifest.drafter(drafter)?.clone();
@@ -218,6 +223,9 @@ fn bench_otps_inner(
         if mixed_lengths {
             spec.max_new_tokens = lens.sample(&mut lrng).clamp(4, max_new);
         }
+        // per-request private rng stream: same mode/filters for the whole
+        // run, the seed derived from (workload seed, request id)
+        spec.sampling = SamplingParams { seed: seed ^ spec.id, ..sampling };
         spec
     };
     let (_results, metrics) = match rate_rps {
@@ -273,20 +281,21 @@ pub fn compare_chain_tree(
     seed: u64,
     mixed_lengths: bool,
     paged: Option<PagedKvConfig>,
+    sampling: SamplingParams,
 ) -> Result<(OtpsRun, OtpsRun, Option<OtpsRun>)> {
     let k = tree.max_depth();
     let chain = bench_otps(
         mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
-        mixed_lengths, None, None, paged,
+        mixed_lengths, None, None, paged, sampling,
     )?;
     let treed = bench_otps(
         mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
-        mixed_lengths, Some(tree), None, paged,
+        mixed_lengths, Some(tree), None, paged, sampling,
     )?;
     let dyned = match dynamic {
         Some(d) => Some(bench_otps(
             mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
-            mixed_lengths, None, Some(d), paged,
+            mixed_lengths, None, Some(d), paged, sampling,
         )?),
         None => None,
     };
@@ -328,6 +337,7 @@ pub fn sweep_drafters(
     seed: u64,
     mixed_lengths: bool,
     paged: Option<PagedKvConfig>,
+    sampling: SamplingParams,
 ) -> Result<Vec<OtpsRun>> {
     let names = serveable_drafters(mr, target, concurrency, k);
     if names.is_empty() {
@@ -339,7 +349,7 @@ pub fn sweep_drafters(
     for name in names {
         out.push(bench_otps(
             mr, &name, dataset, k, concurrency, total_requests, max_new, seed,
-            mixed_lengths, None, None, paged,
+            mixed_lengths, None, None, paged, sampling,
         )?);
     }
     Ok(out)

@@ -7,9 +7,11 @@
 //! * [`cli`]   — argument parsing (clap replacement)
 //! * [`bench`] — measurement harness + stats (criterion replacement)
 //! * [`prop`]  — property-testing loop (proptest replacement)
+//! * [`stats`] — statistical goodness-of-fit checks (TVD, chi-square)
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod stats;

@@ -18,11 +18,15 @@
 //! * per-slot adaptive dynamic budgets: one batch mixes budgets on shared
 //!   executables, each slot charged (paged blocks) by its own budget;
 //! * unsupported/unlisted policies fail with descriptive errors at
-//!   construction or admission, never mid-flight.
+//!   construction or admission, never mid-flight;
+//! * greedy requests stay byte-identical to the solo default engine even
+//!   when batched next to a temperature-sampling neighbor — for chain,
+//!   static tree, and dynamic modes, dense and paged (greedy acceptance
+//!   consumes zero rng draws, so the neighbor's stream cannot leak in).
 
 use p_eagle::coordinator::{
     run_closed_loop, EngineConfig, EngineCore, EngineMetrics, PagedKvConfig, Request,
-    SpecPolicy,
+    SamplingParams, SpecPolicy,
 };
 use p_eagle::masking::TreeTopology;
 use p_eagle::runtime::{HostTensor, ModelRuntime};
@@ -327,6 +331,66 @@ fn per_slot_dynamic_budgets_share_executables_and_charge_blocks_per_slot() {
             "budget-8 slot diverged in the mixed-budget batch (paged={})",
             paged.is_some()
         );
+    }
+}
+
+#[test]
+fn greedy_requests_are_byte_identical_next_to_temperature_neighbors() {
+    // satellite (greedy regression): a greedy request — even one stamped
+    // with a non-default sampling seed, as serve/bench now stamp every
+    // request — must emit byte-identical tokens whether it runs alone in a
+    // default engine or shares a batch with a temperature-sampling
+    // neighbor, across chain/static-tree/dynamic modes, dense and paged.
+    // Greedy dispatch takes the legacy exact-match path and consumes ZERO
+    // rng draws, so the neighbor's rejection-sampling stream has no channel
+    // into this slot.
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let modes = [
+        SpecPolicy::chain("target-m-pe4", 5),
+        SpecPolicy::tree("target-m-pe4", serving_tree()),
+        SpecPolicy::dynamic("target-m-pe4", serving_envelope(), 8),
+    ];
+    let greedy_prompt = test_prompt(&mr, 251);
+    let temp_prompt = test_prompt(&mr, 252);
+    for policy in &modes {
+        for paged in [None, Some(PagedKvConfig::default())] {
+            let (solo, ..) = run_default(&mut mr, policy.clone(), paged, &greedy_prompt, 24);
+
+            let cfg = EngineConfig::new("target-m", policy.clone(), 2, 24)
+                .with_seed(5)
+                .with_paged(paged);
+            let mut core = EngineCore::new(&mut mr, cfg).unwrap();
+            core.add_request(
+                Request::new(0, greedy_prompt.clone(), 24).with_sampling(SamplingParams {
+                    seed: 0x5EED,
+                    ..SamplingParams::greedy()
+                }),
+            )
+            .unwrap();
+            core.add_request(
+                Request::new(1, temp_prompt.clone(), 24)
+                    .with_sampling(SamplingParams::temperature(0.8, 42).with_top_k(40)),
+            )
+            .unwrap();
+            let mut results = Vec::new();
+            while !core.is_idle() {
+                results.extend(core.step(&mut mr).unwrap().into_finished());
+            }
+            assert_eq!(results.len(), 2);
+            results.sort_by_key(|r| r.id);
+            assert_eq!(
+                results[0].tokens, solo,
+                "greedy slot diverged next to a temperature neighbor under {} (paged={})",
+                policy.id(),
+                paged.is_some()
+            );
+            assert!(
+                !results[1].tokens.is_empty(),
+                "temperature neighbor produced no tokens under {}",
+                policy.id()
+            );
+        }
     }
 }
 
