@@ -29,17 +29,17 @@ from jax._src.lib import xla_client as xc
 from . import data as data_mod
 from .configs import (
     BATCH_SIZES, BOS_ID, CTX_WINDOW, DATASETS, DEFAULT_K, EOS_ID,
-    EPOCH_SNAPSHOTS, KV_BLOCK_SIZE, MASK_ID, PAD_ID, PROMPT_PAD, S_MAX,
-    SPEC_DEPTHS, TABLE1_CONTEXTS, TARGETS, TREE_DYN_ENVELOPES,
-    TREE_TARGETS, TREE_TOPOLOGIES, VOCAB, DrafterConfig, all_drafters,
-    ablation_drafters, config_dict, drafter_modes, drafter_train_config,
-    kv_blocks_per_slot, num_kv_blocks, serving_drafters, table1_drafters,
-    tree_drafters,
+    EPOCH_SNAPSHOTS, KV_BLOCK_SIZE, MASK_ID, PAD_ID, PREFIX_TAIL_PAD,
+    PROMPT_PAD, S_MAX, SPEC_DEPTHS, TABLE1_CONTEXTS, TARGETS,
+    TREE_DYN_ENVELOPES, TREE_TARGETS, TREE_TOPOLOGIES, VOCAB, DrafterConfig,
+    all_drafters, ablation_drafters, config_dict, drafter_modes,
+    drafter_train_config, kv_blocks_per_slot, num_kv_blocks,
+    serving_drafters, table1_drafters, tree_drafters,
 )
 from .drafter import draft_ar, draft_pe, draft_pe_tree, init_drafter
 from .masks import tree_depths, tree_topology_id
 from .model import (
-    init_target, prefill, verify, verify_paged, verify_tree,
+    init_target, prefill, prefill_cached, verify, verify_paged, verify_tree,
     verify_tree_dyn, verify_tree_dyn_paged, verify_tree_paged, zero_kv,
 )
 from .pew import flatten_named, read_pew, unflatten_named, write_pew
@@ -103,6 +103,7 @@ class Artifacts:
             "eos_id": EOS_ID, "mask_id": MASK_ID,
             "spec_depths": SPEC_DEPTHS, "batch_sizes": BATCH_SIZES,
             "default_k": DEFAULT_K, "kv_block_size": KV_BLOCK_SIZE,
+            "prefix_tail_pad": PREFIX_TAIL_PAD,
             "kernel": KERNEL, "fast": FAST,
             "targets": {}, "drafters": {}, "executables": [],
             "regimes": {}, "eval_prompts": {}, "training_logs": {},
@@ -264,6 +265,23 @@ def stage_lower(art: Artifacts, target_params, drafter_params):
                 (pspec, toks, plen, kv), "prefill",
                 {"model": tname, "batch": b},
                 [{"name": "last_logits"}, {"name": "feats"}, {"name": "kv"}])
+            if b == 1:
+                # prefix-cache tail prefill: batch-1 only (admission is
+                # per-request), token operand is the left-aligned unique
+                # tail, `start` the cached-prefix length. Argument order
+                # after the params matches ModelRuntime::prefill_cached:
+                # tokens, prompt_len, start, kv.
+                tail = jax.ShapeDtypeStruct((1, PREFIX_TAIL_PAD), jnp.int32)
+                start = jax.ShapeDtypeStruct((1,), jnp.int32)
+                _maybe_lower(
+                    art, f"{tname}-prefill-cached-b1",
+                    lambda p, t, l, s, c, _cfg=tcfg: prefill_cached(
+                        p, _cfg, t, l, s, c),
+                    (pspec, tail, plen, start, kv), "prefill-cached",
+                    {"model": tname, "batch": 1,
+                     "tail_pad": PREFIX_TAIL_PAD},
+                    [{"name": "last_logits"}, {"name": "feats"},
+                     {"name": "kv"}])
             # paged twin shapes: block pool + per-slot block table (the
             # engine passes the table as a runtime input each step). Argument
             # order after the params must match ModelRuntime::verify_paged:

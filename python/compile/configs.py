@@ -36,6 +36,20 @@ MAX_NEW_TOKENS = 160
 KV_BLOCK_SIZE = 16
 assert S_MAX % KV_BLOCK_SIZE == 0
 
+# Prefix-cache tail prefill width (the `prefill-cached` executables): a
+# cache-hit admission prefills only the prompt's unique tail, left-aligned
+# into a [1, PREFIX_TAIL_PAD] token operand at a runtime `start` offset.
+# Must cover CTX_WINDOW (the drafter needs features for the last CTX_WINDOW
+# prompt positions, so the engine computes from min(cached_len, plen - ctx))
+# and stay within PROMPT_PAD (a tail as wide as the full prefill would never
+# pay); hits with longer unique tails fall back to the full prefill
+# executable while still sharing prefix blocks. The widest scatter,
+# start = PROMPT_PAD - 1 plus PREFIX_TAIL_PAD tail slots, must stay inside
+# the S_MAX cache window.
+PREFIX_TAIL_PAD = 32
+assert CTX_WINDOW <= PREFIX_TAIL_PAD <= PROMPT_PAD
+assert PROMPT_PAD - 1 + PREFIX_TAIL_PAD <= S_MAX
+
 
 def kv_blocks_per_slot() -> int:
     """Block-table width per engine slot (covers the full S_MAX window)."""

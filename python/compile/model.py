@@ -197,6 +197,36 @@ def prefill(params, cfg: TargetConfig, tokens, prompt_len, kv):
     return last_logits, feats, new_kv
 
 
+def prefill_cached(params, cfg: TargetConfig, tokens, prompt_len, start, kv):
+    """Tail-only prefill behind a cached prompt prefix (prefix-cache hit).
+
+    tokens: [B, W] — the prompt TAIL, left-aligned: tokens[b, i] holds
+    prompt position start[b] + i (slots at or past prompt_len[b] - start[b]
+    are PAD garbage); prompt_len: [B] int32 (the FULL prompt length);
+    start: [B] int32 — positions [0, start[b]) of `kv` already hold the
+    prefix KV (gathered from shared pool blocks by the engine);
+    kv: [L, 2, B, S_MAX, H, Dh].
+
+    Returns (last_logits [B, V], feats [B, W, 3d], new_kv); feats[b, i] is
+    the feature row for prompt position start[b] + i. Masked attention keys
+    at or beyond key_limit contribute exactly-zero weight, and softmax rows
+    reduce independently in the same order as a full prefill's, so the tail
+    rows here are BITWISE equal to the same rows of `prefill` over the whole
+    prompt — pinned by tests/test_prefix_cache.py; with start == 0 this IS
+    `prefill` modulo the token operand width.
+    """
+    B, W = tokens.shape
+    # tail slot i sits at logical position start + i and attends cache keys
+    # q < start + i + 1: the whole cached prefix plus its own self-causal
+    # chunk prefix (chunk keys are scattered into the cache before attention)
+    key_limit = start[:, None] + jnp.arange(1, W + 1, dtype=jnp.int32)[None, :]
+    feats, logits, new_kv = _chunk_forward(params, cfg, tokens, start, kv,
+                                           key_limit)
+    last = prompt_len - 1 - start
+    last_logits = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+    return last_logits, feats, new_kv
+
+
 def verify(params, cfg: TargetConfig, chunk, cache_len, kv):
     """Verify a speculation chunk [bonus_token, d_1 .. d_K].
 
@@ -305,9 +335,12 @@ def paged_gather(pool, block_table):
 
 def paged_scatter(pool, block_table, dense):
     """Write a dense [L,2,B,S,H,Dh] logical view back into the pool through
-    the table. Rows never share real blocks (allocator exclusivity), so the
-    only duplicate index is the null block 0 — garbage writes racing over
-    garbage."""
+    the table. Duplicate indices are (a) the null block 0 (inactive rows and
+    unused entries — garbage racing over garbage) and (b) prefix-cache
+    shared blocks mapped by several rows' tables: every sharing row
+    writes back the identical committed bytes it gathered (verify only
+    mutates positions at or beyond its own cache_len, which lie strictly
+    above the shared prompt prefix), so the write order is immaterial."""
     L, two, B, S, H, Dh = dense.shape
     M = block_table.shape[1]
     blocks = dense.reshape(L, two, B, M, S // M, H, Dh)

@@ -1,0 +1,155 @@
+"""Prefix-cache tail prefill: bitwise parity against the full prefill.
+
+The load-bearing property: `prefill_cached` run over only the un-cached tail
+of a prompt — with the prefix KV rows seeded from an earlier prefill — must
+produce BITWISE-equal last_logits, per-position feats, and KV rows to a full
+`prefill` of the whole prompt. Masked attention keys contribute exactly-zero
+weight and every softmax row reduces over the same S_MAX-length cache axis in
+the same order, so there is no tolerance to tune: equality is exact.
+
+Two layers of the argument are pinned separately:
+
+  1. *Prefix reuse is sound across requests*: two prompts sharing their first
+     `n` tokens produce bitwise-identical KV rows at positions [0, n) (KV row
+     q depends only on tokens <= q). This is what licenses the Rust engine's
+     content-addressed block sharing.
+  2. *Tail-only compute is invisible*: seeding those rows and running
+     `prefill_cached` over the remainder matches the full prefill exactly.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import PREFIX_TAIL_PAD, PROMPT_PAD, TARGETS
+from compile.model import init_target, prefill, prefill_cached, zero_kv
+
+
+@pytest.fixture(scope="module")
+def tm():
+    cfg = TARGETS["target-m"]
+    params = init_target(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def toks(rng, shape):
+    return jnp.asarray(rng.integers(4, 250, size=shape), jnp.int32)
+
+
+def full_prefill(cfg, params, prompt_tokens):
+    """Reference full prefill of a single prompt, PROMPT_PAD-padded."""
+    plen = len(prompt_tokens)
+    prompt = np.zeros((1, PROMPT_PAD), np.int32)
+    prompt[0, :plen] = prompt_tokens
+    return prefill(params, cfg, jnp.asarray(prompt),
+                   jnp.asarray([plen], jnp.int32), zero_kv(cfg, 1))
+
+
+def cached_prefill(cfg, params, prompt_tokens, start, kv_seed):
+    """Tail-only prefill of prompt positions [start, plen), PAD slots filled
+    with sentinel garbage (251) to prove masking — never a real token."""
+    plen = len(prompt_tokens)
+    tail = np.full((1, PREFIX_TAIL_PAD), 251, np.int32)
+    tail[0, :plen - start] = prompt_tokens[start:]
+    return prefill_cached(params, cfg, jnp.asarray(tail),
+                          jnp.asarray([plen], jnp.int32),
+                          jnp.asarray([start], jnp.int32), kv_seed)
+
+
+def seeded_kv(kv_ref, start):
+    """The engine's cache-hit seed: prefix rows [0, start) gathered from the
+    shared pool, everything at or past `start` zeroed."""
+    return kv_ref.at[:, :, :, start:].set(0.0)
+
+
+# ---------------------------------------------------------------------------
+# shared-prefix KV rows are bitwise identical across requests
+# ---------------------------------------------------------------------------
+
+def test_shared_prefix_kv_rows_are_bitwise_identical(tm):
+    cfg, p = tm
+    rng = np.random.default_rng(0)
+    shared = np.asarray(toks(rng, (9,)))
+    a = np.concatenate([shared, np.asarray(toks(rng, (5,)))])
+    b = np.concatenate([shared, np.asarray(toks(rng, (3,)))])
+    _, _, kv_a = full_prefill(cfg, p, a)
+    _, _, kv_b = full_prefill(cfg, p, b)
+    np.testing.assert_array_equal(np.asarray(kv_a)[:, :, :, :9],
+                                  np.asarray(kv_b)[:, :, :, :9])
+    # and the first divergent row differs — the prefix length really is 9
+    assert not np.array_equal(np.asarray(kv_a)[:, :, :, 9],
+                              np.asarray(kv_b)[:, :, :, 9])
+
+
+# ---------------------------------------------------------------------------
+# tail-only prefill parity (bitwise)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("start", [0, 1, 8, 13])
+def test_prefill_cached_matches_full_prefill(tm, start):
+    """Every cache depth — including start=0 (degenerate: IS a prefill) and
+    start=plen-1 (maximal hit, single-token tail, the engine's cap)."""
+    cfg, p = tm
+    rng = np.random.default_rng(1)
+    prompt = np.asarray(toks(rng, (14,)))
+    plen = len(prompt)
+
+    l_ref, f_ref, kv_ref = full_prefill(cfg, p, prompt)
+    l_c, f_c, kv_c = cached_prefill(cfg, p, prompt, start,
+                                    seeded_kv(kv_ref, start))
+
+    np.testing.assert_array_equal(np.asarray(l_c), np.asarray(l_ref))
+    # feats row i of the cached run is prompt position start + i
+    np.testing.assert_array_equal(np.asarray(f_c)[0, :plen - start],
+                                  np.asarray(f_ref)[0, start:plen])
+    # the recomputed tail KV rows land bitwise on the full prefill's; the
+    # seeded prefix rows pass through untouched
+    np.testing.assert_array_equal(np.asarray(kv_c)[:, :, :, :plen],
+                                  np.asarray(kv_ref)[:, :, :, :plen])
+
+
+def test_prefill_cached_cross_request(tm):
+    """The engine's actual flow: request A prefills fully and registers its
+    blocks; request B (same 9-token prefix, different tail) seeds from A's
+    rows and computes only its own tail. Must be invisible vs B's full
+    prefill."""
+    cfg, p = tm
+    rng = np.random.default_rng(2)
+    shared = np.asarray(toks(rng, (9,)))
+    a = np.concatenate([shared, np.asarray(toks(rng, (6,)))])
+    b = np.concatenate([shared, np.asarray(toks(rng, (4,)))])
+
+    _, _, kv_a = full_prefill(cfg, p, a)
+    l_ref, f_ref, kv_ref = full_prefill(cfg, p, b)
+
+    l_c, f_c, kv_c = cached_prefill(cfg, p, b, 9, seeded_kv(kv_a, 9))
+
+    np.testing.assert_array_equal(np.asarray(l_c), np.asarray(l_ref))
+    np.testing.assert_array_equal(np.asarray(f_c)[0, :len(b) - 9],
+                                  np.asarray(f_ref)[0, 9:len(b)])
+    np.testing.assert_array_equal(np.asarray(kv_c)[:, :, :, :len(b)],
+                                  np.asarray(kv_ref)[:, :, :, :len(b)])
+
+
+def test_pad_garbage_in_tail_is_invisible(tm):
+    """Slots at or past plen - start are PAD: changing them must not perturb
+    a single output bit (they sit beyond every row's key_limit)."""
+    cfg, p = tm
+    rng = np.random.default_rng(3)
+    prompt = np.asarray(toks(rng, (12,)))
+    _, _, kv_ref = full_prefill(cfg, p, prompt)
+    seed = seeded_kv(kv_ref, 6)
+
+    tail = np.full((1, PREFIX_TAIL_PAD), 17, np.int32)
+    tail[0, :6] = prompt[6:]
+    alt = tail.copy()
+    alt[0, 6:] = 233
+    args = (jnp.asarray([12], jnp.int32), jnp.asarray([6], jnp.int32), seed)
+    l1, f1, k1 = prefill_cached(p, cfg, jnp.asarray(tail), *args)
+    l2, f2, k2 = prefill_cached(p, cfg, jnp.asarray(alt), *args)
+
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    np.testing.assert_array_equal(np.asarray(f1)[0, :6], np.asarray(f2)[0, :6])
+    np.testing.assert_array_equal(np.asarray(k1)[:, :, :, :12],
+                                  np.asarray(k2)[:, :, :, :12])

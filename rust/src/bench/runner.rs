@@ -21,7 +21,7 @@ use crate::runtime::ModelRuntime;
 use super::schema::{
     BenchReport, CellConfig, CellMetrics, CellRecord, CellTiming, PolicyCell, SCHEMA_VERSION,
 };
-use super::suite::{policy_for, Load, SuiteSpec, CACHES, SHAPES, TREE_SPEC};
+use super::suite::{policy_for, Load, SuiteSpec, CACHES, SHAPES, SHARED_PREFIX_TOKENS, TREE_SPEC};
 
 /// `git rev-parse --short HEAD`, or "unknown" (no git, not a repo, …) — the
 /// header is provenance, never load-bearing.
@@ -67,20 +67,36 @@ pub fn run_suite(mr: &mut ModelRuntime, spec: &SuiteSpec, pr: &str) -> Result<Be
             _ => (None, None),
         };
         for cache in CACHES {
-            let paged_on = cache == "paged";
+            // "prefix" = paged + automatic prefix cache, shared-prefix
+            // workload; it serves from the same paged executables
+            let paged_on = cache != "dense";
+            let prefix_on = cache == "prefix";
             for drafter in &drafters {
                 let policy = policy_for(shape, drafter, k).map_err(|e| anyhow!(e))?;
                 for load in spec.loads() {
+                    if prefix_on && !load.deterministic() {
+                        // the prefix column is closed-loop by definition (see
+                        // suite::CACHES) — not a lowering gap, so not `skipped`
+                        continue;
+                    }
                     let conc = load.concurrency();
                     if mr.probe_policy_execs(&spec.target, &policy, conc, paged_on).is_err() {
                         skipped += 1;
                         continue;
                     }
-                    let paged = paged_on
-                        .then(|| PagedKvConfig { block_size: None, num_blocks: spec.kv_blocks });
+                    let paged = paged_on.then(|| PagedKvConfig {
+                        block_size: None,
+                        num_blocks: spec.kv_blocks,
+                        prefix_cache: prefix_on,
+                    });
                     let run = match load {
                         // the trajectory pins greedy serving: cross-PR OTPS
                         // deltas must never fold in sampling-path variance
+                        Load::Closed { .. } if prefix_on => report::bench_otps_prefix(
+                            mr, drafter, &spec.dataset, k, conc, spec.requests, spec.max_new,
+                            spec.seed, tree, dynamic, paged, SamplingParams::greedy(),
+                            SHARED_PREFIX_TOKENS,
+                        )?,
                         Load::Closed { .. } => report::bench_otps(
                             mr, drafter, &spec.dataset, k, conc, spec.requests, spec.max_new,
                             spec.seed, false, tree, dynamic, paged, SamplingParams::greedy(),

@@ -57,7 +57,8 @@ pub struct CellRecord {
 pub struct CellConfig {
     /// speculation shape: "chain" | "tree" | "dyn"
     pub shape: String,
-    /// KV cache mode: "dense" | "paged"
+    /// KV cache mode: "dense" | "paged" | "prefix" (paged + automatic
+    /// prefix cache on a shared-prefix workload)
     pub cache: String,
     pub drafter: String,
     /// full policy id (e.g. `target-m-pe4/tree:w3x2x1x1x1`)
@@ -252,8 +253,8 @@ impl CellConfig {
         if !matches!(shape.as_str(), "chain" | "tree" | "dyn") {
             return Err(format!("shape {shape:?} not one of chain|tree|dyn"));
         }
-        if !matches!(cache.as_str(), "dense" | "paged") {
-            return Err(format!("cache {cache:?} not one of dense|paged"));
+        if !matches!(cache.as_str(), "dense" | "paged" | "prefix") {
+            return Err(format!("cache {cache:?} not one of dense|paged|prefix"));
         }
         if !matches!(load.as_str(), "closed" | "open") {
             return Err(format!("load {load:?} not one of closed|open"));

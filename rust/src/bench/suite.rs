@@ -1,5 +1,5 @@
 //! The fixed workload matrix the perf trajectory tracks:
-//! {chain, tree, dyn} × {dense, paged} × (serveable drafters) × loads.
+//! {chain, tree, dyn} × {dense, paged, prefix} × (serveable drafters) × loads.
 //!
 //! The matrix is DEFINED here as data (shapes, caches, loads, and the policy
 //! each shape maps to); the runner resolves it against a manifest (which
@@ -14,8 +14,17 @@ use crate::coordinator::SpecPolicy;
 /// Speculation shapes, in matrix order.
 pub const SHAPES: [&str; 3] = ["chain", "tree", "dyn"];
 
-/// KV cache modes, in matrix order.
-pub const CACHES: [&str; 2] = ["dense", "paged"];
+/// KV cache modes, in matrix order. `prefix` is the paged cache with the
+/// automatic prefix cache on, measured on a shared-prefix workload (every
+/// prompt opens with the same [`SHARED_PREFIX_TOKENS`]-token header) — the
+/// TTFT-collapse column. It runs closed-loop only: the collapse it tracks is
+/// prefill cost, and open-loop admission interleaving is wall-clock anyway.
+pub const CACHES: [&str; 3] = ["dense", "paged", "prefix"];
+
+/// Shared-prefix length (tokens) the `prefix` cache column stamps onto every
+/// prompt — 2.5 KV blocks at the testbed's block size 16, so the hit path
+/// exercises both whole-block mapping and the partial-tail COW claim.
+pub const SHARED_PREFIX_TOKENS: usize = 40;
 
 /// The static tree every `tree` cell drafts (the repo's standard comparison
 /// topology — 8 nodes, depth 5, embeds the rank-0 chain).

@@ -59,8 +59,8 @@ fn default_modes(kind: &str) -> Vec<String> {
 pub struct ExecutableInfo {
     pub name: String,
     pub path: String,
-    /// prefill | verify | verify-paged | draft | verify-tree |
-    /// verify-tree-paged | draft-tree | verify-tree-dyn |
+    /// prefill | prefill-cached | verify | verify-paged | draft |
+    /// verify-tree | verify-tree-paged | draft-tree | verify-tree-dyn |
     /// verify-tree-dyn-paged | draft-tree-logp | selftest
     pub kind: String,
     pub model: Option<String>,
@@ -84,6 +84,9 @@ pub struct Manifest {
     /// token width of one paged-KV pool block (python `configs.KV_BLOCK_SIZE`;
     /// 16 when the manifest predates paged lowering)
     pub kv_block_size: usize,
+    /// token operand width of the `prefill-cached` executables (python
+    /// `configs.PREFIX_TAIL_PAD`; 32 when the manifest predates them)
+    pub prefix_tail_pad: usize,
     pub prompt_pad: usize,
     pub ctx_window: usize,
     pub pad_id: i32,
@@ -214,6 +217,7 @@ impl Manifest {
             vocab: v.usize_of("vocab"),
             s_max: v.usize_of("s_max"),
             kv_block_size: v.get("kv_block_size").and_then(|x| x.as_usize()).unwrap_or(16),
+            prefix_tail_pad: v.get("prefix_tail_pad").and_then(|x| x.as_usize()).unwrap_or(32),
             prompt_pad: v.usize_of("prompt_pad"),
             ctx_window: v.usize_of("ctx_window"),
             pad_id: v.usize_of("pad_id") as i32,

@@ -75,8 +75,9 @@ use crate::masking::dynamic::{
 };
 use crate::masking::{DynamicTreeConfig, TreeMask, TreeTopology};
 use crate::runtime::{
-    apply_path_copies, compact_kv_path, plan_path_commit, splice_kv_row,
-    splice_kv_row_blocks, DraftExec, HostTensor, ModelRuntime, TargetExec,
+    apply_path_copies, compact_kv_path, copy_pool_block, gather_kv_row_blocks,
+    plan_path_commit, splice_kv_row, splice_kv_row_blocks_range, DraftExec, HostTensor,
+    ModelRuntime, TargetExec,
 };
 use crate::util::rng::Rng;
 
@@ -95,12 +96,31 @@ use crate::util::rng::Rng;
 pub struct PagedKvConfig {
     pub block_size: Option<usize>,
     pub num_blocks: Option<usize>,
+    /// automatic prefix caching: committed prompt blocks are
+    /// content-addressed (chained hash over their token ids) and later
+    /// admissions map matching prefix blocks *shared* (copy-on-write),
+    /// prefilling only the unique prompt tail. Token output stays
+    /// byte-identical to a cold engine (integration-tested); TTFT on
+    /// shared-prefix workloads collapses to the tail cost.
+    pub prefix_cache: bool,
 }
 
 /// `PEAGLE_PAGED=1` flips engines built by the test helpers / benches into
 /// paged mode (the CI paged job sets it); anything else returns `None`.
 pub fn paged_from_env() -> Option<PagedKvConfig> {
     (std::env::var("PEAGLE_PAGED").ok().as_deref() == Some("1")).then(PagedKvConfig::default)
+}
+
+/// `PEAGLE_PREFIX_CACHE=1` flips engines built by the test helpers / benches
+/// into paged mode WITH the automatic prefix cache (the CI
+/// `rust-prefix-cache` job sets it); anything else defers to
+/// [`paged_from_env`], so the helper composes with the paged job unchanged.
+pub fn prefix_cache_from_env() -> Option<PagedKvConfig> {
+    if std::env::var("PEAGLE_PREFIX_CACHE").ok().as_deref() == Some("1") {
+        Some(PagedKvConfig { prefix_cache: true, ..PagedKvConfig::default() })
+    } else {
+        paged_from_env()
+    }
 }
 
 /// `PEAGLE_TREE_DYN=1` flips engines built by the test helpers / benches
@@ -202,6 +222,16 @@ impl EngineConfig {
 
     pub fn with_paged(mut self, paged: Option<PagedKvConfig>) -> EngineConfig {
         self.paged = paged;
+        self
+    }
+
+    /// Enable the automatic prefix cache (implies paged KV: the cache is a
+    /// property of the block allocator, so a dense config is promoted to
+    /// the default paged one).
+    pub fn with_prefix_cache(mut self) -> EngineConfig {
+        let mut p = self.paged.unwrap_or_default();
+        p.prefix_cache = true;
+        self.paged = Some(p);
         self
     }
 
@@ -376,10 +406,16 @@ pub struct EngineCore {
     /// validated archetypes (default + allowlist), for admission checks
     allowed: Vec<SpecPolicy>,
     te1: TargetExec, // batch-1 prefill executable for per-slot admission
+    /// batch-1 tail-only prefill for prefix-cache hits; `None` when the
+    /// cache is off or the manifest predates the `prefill-cached`
+    /// executables (hits then dedup memory but still pay a full prefill)
+    te_cached: Option<TargetExec>,
     /// reusable zeroed batch-1 KV input for admission prefills (PJRT does
     /// not donate inputs, so one buffer serves every admission)
     kv1_zero: xla::PjRtBuffer,
     // manifest-derived shape constants
+    /// token operand width of `prefill-cached` (manifest `prefix_tail_pad`)
+    tail_pad: usize,
     fdim: usize,
     ctx: usize,
     p_pad: usize,
@@ -456,12 +492,13 @@ impl EngineCore {
                     .num_blocks
                     .ok_or_else(|| anyhow::anyhow!("paged executable carries no num_blocks"))?;
                 let budget = p.num_blocks.unwrap_or(phys - 1).min(phys - 1);
-                (
-                    mr.zero_kv_pool(&cfg.target, phys, bs)?,
+                let mut sm =
                     SlotManager::new_paged(b, mr.manifest.s_max, commit_default, bs, budget)
-                        .with_write_width(write_width),
-                    Some(phys),
-                )
+                        .with_write_width(write_width);
+                if p.prefix_cache {
+                    sm = sm.with_prefix_cache();
+                }
+                (mr.zero_kv_pool(&cfg.target, phys, bs)?, sm, Some(phys))
             }
             None => (
                 mr.zero_kv(&cfg.target, b)?,
@@ -469,6 +506,12 @@ impl EngineCore {
                     .with_write_width(write_width),
                 None,
             ),
+        };
+        // the tail-only prefill is an optimization, not a capability: an
+        // artifact set lowered before it still serves (with full prefills)
+        let te_cached = match cfg.paged {
+            Some(p) if p.prefix_cache => mr.ensure_prefill_cached(&cfg.target).ok(),
+            _ => None,
         };
         let kv1_zero = mr.zero_kv(&cfg.target, 1)?;
         let mut slots = Vec::with_capacity(b);
@@ -479,7 +522,9 @@ impl EngineCore {
             groups,
             allowed,
             te1,
+            te_cached,
             kv1_zero,
+            tail_pad: mr.manifest.prefix_tail_pad,
             fdim,
             ctx: mr.manifest.ctx_window,
             p_pad: mr.manifest.prompt_pad,
@@ -641,23 +686,29 @@ impl EngineCore {
         if self.queue.is_empty() {
             return Ok(admitted);
         }
+        let prefix_on = self.slotmgr.prefix_cache_enabled();
         let mut shared_host: Option<HostTensor> = None; // lazy: skip if no free slot
+        let mut admitted_slots: Vec<usize> = Vec::new();
         for i in 0..self.slots.len() {
             if self.slots[i].is_some() {
                 continue;
             }
             // paged gating: a free SLOT is not enough — the queue head also
             // needs free BLOCKS for prompt + one speculation chunk (charged
-            // by the head's OWN policy commit width). FIFO: a blocked head
-            // defers the whole queue (no head-of-line bypass), counted as
-            // preemption pressure. Requests that could never fit were
-            // rejected at add_request, so blocks freed by evictions always
-            // unblock the head eventually.
+            // by the head's OWN policy commit width). With the prefix cache
+            // on, full-block prefix hits map shared and reduce the need —
+            // the prompt-aware check mirrors claim_with_prefix exactly.
+            // FIFO: a blocked head defers the whole queue (no head-of-line
+            // bypass), counted as preemption pressure. Requests that could
+            // never fit were rejected at add_request, so blocks freed by
+            // evictions always unblock the head eventually.
             if let Some((front, front_policy, _)) = self.queue.front() {
-                if !self
-                    .slotmgr
-                    .can_admit_chunk(front.prompt.len(), front_policy.commit_width())
-                {
+                let fits = if prefix_on {
+                    self.slotmgr.can_admit_prompt(&front.prompt, front_policy.commit_width())
+                } else {
+                    self.slotmgr.can_admit_chunk(front.prompt.len(), front_policy.commit_width())
+                };
+                if !fits {
                     self.metrics.admissions_blocked += 1;
                     break;
                 }
@@ -665,24 +716,104 @@ impl EngineCore {
             let Some((req, policy, t_submit)) = self.queue.pop_front() else { break };
             let t0 = Instant::now();
             let plen = req.prompt.len();
-            self.slotmgr
-                .claim_with_chunk(i, plen, policy.commit_width())
+            // with the cache off this is exactly the old claim_with_chunk
+            // (a zero-length hit, no copies)
+            let claim = self
+                .slotmgr
+                .claim_with_prefix(i, &req.prompt, policy.commit_width())
                 .map_err(|e| anyhow::anyhow!(e))?;
 
-            let mut tok_buf = vec![self.pad_id; self.p_pad];
-            tok_buf[..plen].copy_from_slice(&req.prompt);
-            let pre = mr.prefill(
-                &self.te1,
-                &HostTensor::i32(&[1, self.p_pad], tok_buf),
-                &HostTensor::i32(&[1], vec![plen as i32]),
-                &self.kv1_zero,
-            )?;
+            // COW copies and the prefix gather both need the current pool
+            // bytes on the host — force the shared download early on a hit
+            if (claim.cached_len > 0 || !claim.copies.is_empty()) && shared_host.is_none() {
+                shared_host = Some(mr.rt.download(&self.kv)?);
+            }
+            // materialize sub-block hits BEFORE anything writes through the
+            // table: the private dst must hold the shared src's prefix bytes
+            for &(src, dst) in &claim.copies {
+                copy_pool_block(shared_host.as_mut().unwrap(), src, dst)?;
+            }
+            self.metrics.cow_copies += claim.copies.len();
+
+            // Three prefill shapes, all bitwise-equivalent on the prompt
+            // range (pinned python-side by tests/test_prefix_cache.py):
+            //   miss            -> full batch-1 prefill, splice [0, plen)
+            //   hit, short tail -> gather cached rows, tail-only prefill,
+            //                      splice [cached_len, plen)
+            //   hit, long tail  -> full prefill (tail exceeds the lowered
+            //                      PREFIX_TAIL_PAD, or no prefill-cached
+            //                      executable): memory dedup without the
+            //                      FLOP savings, splice [cached_len, plen)
+            // compute_start is capped at plen - ctx so the drafter context
+            // seed below always has computed feats for its window.
+            let (pre, compute_start) = if claim.cached_len == 0 {
+                if prefix_on {
+                    self.metrics.prefix_misses += 1;
+                }
+                let mut tok_buf = vec![self.pad_id; self.p_pad];
+                tok_buf[..plen].copy_from_slice(&req.prompt);
+                let pre = mr.prefill(
+                    &self.te1,
+                    &HostTensor::i32(&[1, self.p_pad], tok_buf),
+                    &HostTensor::i32(&[1], vec![plen as i32]),
+                    &self.kv1_zero,
+                )?;
+                (pre, 0)
+            } else {
+                self.metrics.prefix_hits += 1;
+                self.metrics.prefix_tokens_cached += claim.cached_len;
+                let start = claim.cached_len.min(plen - self.ctx);
+                let tail = plen - start;
+                if tail <= self.tail_pad && self.te_cached.is_some() {
+                    let seed = gather_kv_row_blocks(
+                        shared_host.as_ref().unwrap(),
+                        self.slotmgr.table(i),
+                        start,
+                        self.slotmgr.s_max,
+                    )?;
+                    let seed_buf = mr.rt.upload(&seed)?;
+                    let mut tail_buf = vec![self.pad_id; self.tail_pad];
+                    tail_buf[..tail].copy_from_slice(&req.prompt[start..]);
+                    let te = self.te_cached.as_ref().unwrap();
+                    let pre = mr.prefill_cached(
+                        te,
+                        &HostTensor::i32(&[1, self.tail_pad], tail_buf),
+                        &HostTensor::i32(&[1], vec![plen as i32]),
+                        &HostTensor::i32(&[1], vec![start as i32]),
+                        &seed_buf,
+                    )?;
+                    (pre, start)
+                } else {
+                    let mut tok_buf = vec![self.pad_id; self.p_pad];
+                    tok_buf[..plen].copy_from_slice(&req.prompt);
+                    let pre = mr.prefill(
+                        &self.te1,
+                        &HostTensor::i32(&[1, self.p_pad], tok_buf),
+                        &HostTensor::i32(&[1], vec![plen as i32]),
+                        &self.kv1_zero,
+                    )?;
+                    (pre, 0)
+                }
+            };
             let row = mr.rt.download(&pre.kv)?;
             if shared_host.is_none() {
                 shared_host = Some(mr.rt.download(&self.kv)?);
             }
             if self.slotmgr.is_paged() {
-                splice_kv_row_blocks(shared_host.as_mut().unwrap(), &row, self.slotmgr.table(i), plen)?;
+                // only the un-cached range is written: positions before
+                // cached_len live in shared (possibly refcount > 1) blocks
+                // that already hold exactly these bytes
+                splice_kv_row_blocks_range(
+                    shared_host.as_mut().unwrap(),
+                    &row,
+                    self.slotmgr.table(i),
+                    0,
+                    claim.cached_len,
+                    plen,
+                )?;
+                // index this prompt's fully-committed blocks so later
+                // admissions (including ones later in this same loop) share
+                self.slotmgr.register_prefix(i, &req.prompt);
             } else {
                 splice_kv_row(shared_host.as_mut().unwrap(), &row, i)?;
             }
@@ -697,14 +828,17 @@ impl EngineCore {
                 sample_filtered(&pre_logits[..self.vocab], &req.sampling.config(), &mut rng);
 
             // seed the drafter's rolling (token, feature) context from the
-            // prompt tail; entry j covers position plen - ctx + 1 + j
+            // prompt tail; entry j covers position plen - ctx + 1 + j. The
+            // prefill feats row r holds position compute_start + r (a full
+            // prefill is compute_start == 0), and compute_start <= plen - ctx
+            // guarantees the whole window was computed.
             let mut ctx_tokens = Vec::with_capacity(self.ctx);
             let mut ctx_feats = vec![0f32; self.ctx * self.fdim];
             for j in 0..self.ctx {
                 let p = plen - self.ctx + 1 + j;
                 let token = if p < plen { req.prompt[p] } else { t_first };
                 ctx_tokens.push(token);
-                let off = (p - 1) * self.fdim;
+                let off = (p - 1 - compute_start) * self.fdim;
                 ctx_feats[j * self.fdim..(j + 1) * self.fdim]
                     .copy_from_slice(&pre_feats[off..off + self.fdim]);
             }
@@ -743,12 +877,26 @@ impl EngineCore {
             events.push(EngineEvent::Admitted { id: slot.req.id, slot: i });
             events.push(EngineEvent::Tokens { id: slot.req.id, tokens: vec![t_first] });
             self.slots[i] = Some(slot);
+            admitted_slots.push(i);
             admitted += 1;
         }
         if let Some(h) = shared_host {
             let t_up = Instant::now();
             self.kv = mr.rt.upload(&h)?;
             self.metrics.admission_time += t_up.elapsed();
+        }
+        // TPOT epoch fix: each slot's t_last_emit was provisionally stamped
+        // when its own prefill token was sampled, but LATER admissions in
+        // this same pass (their prefills) and the single shared KV upload
+        // all run before any of them can decode — the provisional stamp
+        // would bill that work to the slot's first inter-token gap,
+        // skewing TPOT up for early-admitted slots. Decode for everyone
+        // starts after the upload, so that is the honest epoch.
+        restamp_admission_emits(&mut self.slots, &admitted_slots, Instant::now());
+        if prefix_on {
+            self.metrics.prefix_evictions = self.slotmgr.prefix_evictions();
+            self.metrics.shared_blocks_peak =
+                self.metrics.shared_blocks_peak.max(self.slotmgr.shared_blocks());
         }
         Ok(admitted)
     }
@@ -1174,6 +1322,18 @@ impl EngineCore {
     }
 }
 
+/// Reset the TPOT epoch of freshly admitted slots to `now` — the instant
+/// the admission pass's shared KV upload completed. See the call site in
+/// [`EngineCore::admit_pending`] for the skew this removes; split out as a
+/// free function so the fix is unit-testable without a runtime.
+fn restamp_admission_emits(slots: &mut [Option<ActiveSlot>], admitted: &[usize], now: Instant) {
+    for &i in admitted {
+        if let Some(s) = slots[i].as_mut() {
+            s.t_last_emit = now;
+        }
+    }
+}
+
 /// Load one policy's executable pair from the runtime registry and build
 /// the masks its verify passes need.
 fn load_group(
@@ -1230,5 +1390,52 @@ mod tests {
     #[test]
     fn sampling_defaults_are_greedy() {
         assert_eq!(SamplingParams::default(), SamplingParams::greedy());
+    }
+
+    fn dummy_slot(id: u64, t: Instant) -> ActiveSlot {
+        let policy = SpecPolicy::chain("d", 5);
+        ActiveSlot {
+            key: policy.exec_key(),
+            policy,
+            rng: Rng::new(id),
+            finished: None,
+            generated: vec![1],
+            last_tok: 1,
+            ctx_tokens: vec![1; 4],
+            ctx_feats: vec![0.0; 8],
+            pos_last: 10,
+            max_new: 4,
+            iterations: 0,
+            accepted_sum: 0,
+            t_submit: t,
+            t_last_emit: t,
+            req: Request::new(id, vec![1; 10], 4),
+        }
+    }
+
+    /// Pin the admission TPOT-skew fix: every slot admitted in one
+    /// `admit_pending` pass has its inter-token epoch reset to the shared
+    /// upload instant, so the first TPOT gap cannot be charged for later
+    /// requests' prefills; slots that were already decoding keep theirs.
+    #[test]
+    fn admission_restamps_tpot_epoch_only_for_admitted_slots() {
+        let old = Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let mut slots: Vec<Option<ActiveSlot>> = vec![
+            Some(dummy_slot(0, old)), // pre-existing, decoding
+            Some(dummy_slot(1, old)), // admitted earlier in this pass
+            None,                     // free
+            Some(dummy_slot(3, old)), // admitted later in this pass
+        ];
+        let now = Instant::now();
+        assert!(now > old);
+        restamp_admission_emits(&mut slots, &[1, 3], now);
+        assert_eq!(slots[0].as_ref().unwrap().t_last_emit, old, "non-admitted slot restamped");
+        assert_eq!(slots[1].as_ref().unwrap().t_last_emit, now);
+        assert_eq!(slots[3].as_ref().unwrap().t_last_emit, now);
+        // t_submit (TTFT base) is never touched — only the TPOT epoch moves
+        assert_eq!(slots[1].as_ref().unwrap().t_submit, old);
+        // a stale index into a freed slot is a no-op, not a panic
+        restamp_admission_emits(&mut slots, &[2], Instant::now());
     }
 }

@@ -25,10 +25,116 @@
 //! scratch blocks for reuse. Frees happen only at [`SlotManager::release`]
 //! and are idempotent. Admission is gated on free-*block* headroom
 //! ([`SlotManager::can_admit`]), not just free slots.
+//!
+//! Prefix cache ([`SlotManager::with_prefix_cache`], paged mode only): the
+//! allocator additionally keeps a per-block mapping *refcount* and a
+//! content-addressed index of fully-committed prompt blocks (a chained hash
+//! over each block's token ids, verified by token equality so hash collisions
+//! can never alias). A new admission walks its prompt through the index
+//! ([`SlotManager::claim_with_prefix`]): full-block hits are mapped *shared*
+//! (refcount bumped, no allocation, no prefill needed for those positions),
+//! and a sub-block hit under the same parent hash is claimed copy-on-write —
+//! the claim hands the engine a `(src, dst)` pool-block copy to apply before
+//! any write, so a shared block is never mutated while another table maps it.
+//! `release` decrefs instead of freeing; a registered block whose refcount
+//! drops to 0 stays *cached-idle* (off the free list, still indexed) until
+//! an allocation finds the free list dry and evicts cached-idle blocks LRU.
+//! Every block is therefore in exactly one of three states — free, mapped
+//! (refcount ≥ 1), or cached-idle — and the three partition the id range.
 
 /// Dense-mode utilization granularity, and the default paged block size
 /// (must match the Python lowering's `configs.KV_BLOCK_SIZE`).
 pub const BLOCK_SIZE: usize = 16;
+
+use std::collections::HashMap;
+
+/// Root parent for the chained block hash (the FNV-1a offset basis; any
+/// fixed constant works — collisions are guarded by token equality, the
+/// hash is only an index).
+const CHAIN_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Chained content hash: `h_k = chain_hash(h_{k-1}, block_k_tokens)`, so a
+/// block's identity pins the entire token prefix up to and including it.
+/// FNV-1a over the tokens' little-endian bytes, seeded by the parent hash.
+fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
+    let mut h = parent ^ 0x9e37_79b9_7f4a_7c15;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Index entry for one registered (fully-committed, content-addressed) block.
+#[derive(Clone, Debug)]
+struct BlockMeta {
+    hash: u64,
+    parent: u64,
+    /// the exact `block_size` token ids the block's KV was computed from —
+    /// the collision guard and the sub-block-match comparand
+    tokens: Vec<i32>,
+    last_used: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+struct PrefixCache {
+    /// chained hash -> registered block (unique: first writer wins)
+    by_hash: HashMap<u64, usize>,
+    /// parent hash -> registered blocks directly extending it (the
+    /// sub-block partial-match candidates)
+    by_parent: HashMap<u64, Vec<usize>>,
+    /// per-block registration record; `None` = not cached
+    meta: Vec<Option<BlockMeta>>,
+    /// logical LRU clock (bumped on every touch/register)
+    tick: u64,
+    evictions: usize,
+}
+
+impl PrefixCache {
+    fn sized(capacity: usize) -> PrefixCache {
+        PrefixCache { meta: vec![None; capacity + 1], ..PrefixCache::default() }
+    }
+
+    fn touch(&mut self, b: usize) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(m) = self.meta[b].as_mut() {
+            m.last_used = tick;
+        }
+    }
+
+    fn register(&mut self, b: usize, parent: u64, hash: u64, tokens: Vec<i32>) {
+        debug_assert!(self.meta[b].is_none(), "block {b} registered twice");
+        debug_assert!(!self.by_hash.contains_key(&hash), "hash {hash:#x} already indexed");
+        self.tick += 1;
+        self.meta[b] = Some(BlockMeta { hash, parent, tokens, last_used: self.tick });
+        self.by_hash.insert(hash, b);
+        self.by_parent.entry(parent).or_default().push(b);
+    }
+
+    fn unregister(&mut self, b: usize) {
+        let Some(m) = self.meta[b].take() else { return };
+        self.by_hash.remove(&m.hash);
+        if let Some(v) = self.by_parent.get_mut(&m.parent) {
+            v.retain(|&x| x != b);
+            if v.is_empty() {
+                self.by_parent.remove(&m.parent);
+            }
+        }
+    }
+}
+
+/// Result of walking a prompt through the prefix index.
+#[derive(Clone, Debug, Default)]
+struct PrefixMatch {
+    /// registered blocks covering the longest full-block prompt prefix
+    full: Vec<usize>,
+    /// best sub-block extension under the last matched hash:
+    /// `(source block, matched token count ≥ 1)`
+    partial: Option<(usize, usize)>,
+}
 
 #[derive(Clone, Debug)]
 struct PagedState {
@@ -38,6 +144,140 @@ struct PagedState {
     /// LIFO free list; initialized descending so pops hand out ascending ids
     free: Vec<usize>,
     tables: Vec<Vec<usize>>,
+    /// per-block mapping refcount (`refcount[b]` == number of slot tables
+    /// currently containing `b`); index 0 is the null block, always 0
+    refcount: Vec<u32>,
+    /// the content-addressed prefix index; `None` = prefix caching off
+    /// (every mapped block then has refcount exactly 1)
+    prefix: Option<PrefixCache>,
+}
+
+impl PagedState {
+    /// Whether `b` is registered in the prefix index.
+    fn is_cached(&self, b: usize) -> bool {
+        self.prefix.as_ref().is_some_and(|c| c.meta[b].is_some())
+    }
+
+    /// Registered blocks no table maps (refcount 0) — evictable on demand.
+    fn idle_cached(&self) -> usize {
+        let refcount = &self.refcount;
+        match &self.prefix {
+            Some(c) => c
+                .meta
+                .iter()
+                .enumerate()
+                .filter(|(b, m)| m.is_some() && refcount[*b] == 0)
+                .count(),
+            None => 0,
+        }
+    }
+
+    /// Blocks an allocation can obtain right now: free + evictable idle.
+    fn available(&self) -> usize {
+        self.free.len() + self.idle_cached()
+    }
+
+    fn incref(&mut self, b: usize) {
+        self.refcount[b] += 1;
+    }
+
+    /// Drop one mapping of `b`. At refcount 0 an *uncached* block returns to
+    /// the free list; a cached block stays idle (indexed, evictable) so a
+    /// later admission can still hit it.
+    fn decref(&mut self, b: usize) {
+        debug_assert!(self.refcount[b] > 0, "decref of unmapped block {b}");
+        self.refcount[b] -= 1;
+        if self.refcount[b] == 0 && !self.is_cached(b) {
+            self.free.push(b);
+        }
+    }
+
+    /// Hand out one block with refcount 1: from the free list, else by
+    /// evicting the least-recently-used cached-idle block. `None` only when
+    /// every block is mapped.
+    fn alloc(&mut self) -> Option<usize> {
+        let b = match self.free.pop() {
+            Some(b) => b,
+            None => self.evict_lru()?,
+        };
+        debug_assert_eq!(self.refcount[b], 0, "allocated block {b} still mapped");
+        self.refcount[b] = 1;
+        Some(b)
+    }
+
+    /// Unregister and return the LRU refcount-0 cached block.
+    fn evict_lru(&mut self) -> Option<usize> {
+        let refcount = &self.refcount;
+        let cache = self.prefix.as_mut()?;
+        let victim = cache
+            .meta
+            .iter()
+            .enumerate()
+            .filter(|(b, m)| m.is_some() && refcount[*b] == 0)
+            .min_by_key(|(_, m)| m.as_ref().unwrap().last_used)
+            .map(|(b, _)| b)?;
+        cache.unregister(victim);
+        cache.evictions += 1;
+        Some(victim)
+    }
+
+    /// Longest cached cover of `prompt`, structurally capped at
+    /// `prompt.len() - 1` positions (the full-block walk requires
+    /// `(k+1)*bs < plen`) so a hit always leaves at least one token to
+    /// prefill — the sampler needs a fresh last-logit row and the drafter
+    /// fresh features. The sub-block arm matches a *strict token prefix* of
+    /// a registered sibling under the same parent hash, which is sound
+    /// because KV at position `p` depends only on tokens `≤ p`.
+    fn match_prefix(&self, prompt: &[i32]) -> PrefixMatch {
+        let mut out = PrefixMatch::default();
+        let Some(cache) = &self.prefix else { return out };
+        let bs = self.block_size;
+        let plen = prompt.len();
+        let mut h = CHAIN_SEED;
+        let mut k = 0usize;
+        while (k + 1) * bs < plen {
+            let toks = &prompt[k * bs..(k + 1) * bs];
+            let nh = chain_hash(h, toks);
+            match cache.by_hash.get(&nh) {
+                Some(&b) if cache.meta[b].as_ref().is_some_and(|m| m.tokens == toks) => {
+                    out.full.push(b);
+                    h = nh;
+                    k += 1;
+                }
+                _ => break,
+            }
+        }
+        let base = k * bs;
+        let want = &prompt[base..plen.saturating_sub(1).min(base + bs)];
+        if !want.is_empty() {
+            if let Some(cands) = cache.by_parent.get(&h) {
+                let mut best = 0usize;
+                for &b in cands {
+                    if let Some(m) = &cache.meta[b] {
+                        let common =
+                            m.tokens.iter().zip(want).take_while(|(a, c)| a == c).count();
+                        if common > best {
+                            best = common;
+                            out.partial = Some((b, common));
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// What [`SlotManager::claim_with_prefix`] handed the slot from the cache.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PrefixClaim {
+    /// prompt positions already materialized in the slot's mapped blocks
+    /// (always `≤ prompt_len - 1`: at least one token is freshly prefilled)
+    pub cached_len: usize,
+    /// `(src, dst)` pool-block copies the engine must apply to the physical
+    /// pool BEFORE any write into the slot: sub-block partial matches are
+    /// claimed copy-on-write into a private block, never mutated in place
+    pub copies: Vec<(usize, usize)>,
 }
 
 #[derive(Clone, Debug)]
@@ -134,8 +374,24 @@ impl SlotManager {
                 capacity,
                 free: (1..=capacity).rev().collect(),
                 tables: vec![Vec::new(); batch],
+                refcount: vec![0; capacity + 1],
+                prefix: None,
             }),
         }
+    }
+
+    /// Enable the content-addressed prefix cache (paged mode only): blocks
+    /// released at refcount 0 stay indexed for reuse instead of freeing, and
+    /// [`claim_with_prefix`](Self::claim_with_prefix) maps cache hits shared.
+    pub fn with_prefix_cache(mut self) -> SlotManager {
+        let p = self.paged.as_mut().expect("prefix cache requires the paged allocator");
+        p.prefix = Some(PrefixCache::sized(p.capacity));
+        self
+    }
+
+    /// Whether the prefix cache is on (always false in dense mode).
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.paged.as_ref().is_some_and(|p| p.prefix.is_some())
     }
 
     pub fn batch(&self) -> usize {
@@ -187,12 +443,34 @@ impl SlotManager {
     }
 
     /// [`can_admit`](Self::can_admit) with the request's own commit chunk.
+    /// Paged headroom counts *available* blocks (free + evictable
+    /// cached-idle), not just the free list — identical without a prefix
+    /// cache, where no block is ever cached-idle.
     pub fn can_admit_chunk(&self, prompt_len: usize, chunk: usize) -> bool {
         prompt_len + self.write_width <= self.s_max
             && self
                 .paged
                 .as_ref()
-                .is_none_or(|p| p.free.len() >= self.blocks_for(prompt_len + chunk))
+                .is_none_or(|p| p.available() >= self.blocks_for(prompt_len + chunk))
+    }
+
+    /// Prompt-aware admission headroom: full-block prefix hits are mapped
+    /// shared (no allocation), so they reduce the fresh-block need; hits
+    /// themselves are protected from eviction at claim time, so an idle hit
+    /// cannot double as eviction supply. Falls back to
+    /// [`can_admit_chunk`](Self::can_admit_chunk) semantics when the prefix
+    /// cache is off.
+    pub fn can_admit_prompt(&self, prompt: &[i32], chunk: usize) -> bool {
+        let plen = prompt.len();
+        if plen + self.write_width > self.s_max {
+            return false;
+        }
+        let Some(p) = &self.paged else { return true };
+        let need = self.blocks_for(plen + chunk);
+        let m = p.match_prefix(prompt);
+        let hits = m.full.len();
+        let idle_hits = m.full.iter().filter(|&&b| p.refcount[b] == 0).count();
+        p.available() - idle_hits + hits >= need
     }
 
     /// Claim slot `i` for a request with `prompt_len` tokens at the default
@@ -231,22 +509,149 @@ impl SlotManager {
         }
         let need = self.blocks_for(prompt_len + chunk);
         if let Some(p) = &mut self.paged {
-            if p.free.len() < need {
+            if p.available() < need {
                 return Err(format!(
                     "slot {i}: need {need} KV blocks, {} free (capacity {})",
-                    p.free.len(),
+                    p.available(),
                     p.capacity
                 ));
             }
             debug_assert!(p.tables[i].is_empty(), "slot {i}: stale block table");
             for _ in 0..need {
-                p.tables[i].push(p.free.pop().unwrap());
+                let b = p.alloc().expect("available() promised headroom");
+                p.tables[i].push(b);
             }
         }
         self.active[i] = true;
         self.lens[i] = prompt_len;
         self.chunks[i] = chunk;
         Ok(())
+    }
+
+    /// [`claim_with_chunk`](Self::claim_with_chunk) through the prefix cache:
+    /// walk `prompt` through the index, map full-block hits *shared*
+    /// (incref, no allocation), claim the best sub-block hit copy-on-write
+    /// (a private block plus a `(src, dst)` pool copy for the engine), then
+    /// allocate the remaining coverage fresh. Matched blocks are increfed
+    /// BEFORE any allocation so on-demand eviction can never reclaim the
+    /// very blocks being hit. On failure everything is rolled back and the
+    /// allocator is untouched. With the cache off this is exactly
+    /// `claim_with_chunk` (a zero-length hit).
+    pub fn claim_with_prefix(
+        &mut self,
+        i: usize,
+        prompt: &[i32],
+        chunk: usize,
+    ) -> Result<PrefixClaim, String> {
+        if !self.prefix_cache_enabled() {
+            return self.claim_with_chunk(i, prompt.len(), chunk).map(|()| PrefixClaim::default());
+        }
+        let prompt_len = prompt.len();
+        if self.active[i] {
+            return Err(format!("slot {i} already active"));
+        }
+        if chunk == 0 || chunk > self.write_width {
+            return Err(format!(
+                "slot {i}: commit chunk {chunk} outside 1..={} (the engine write width)",
+                self.write_width
+            ));
+        }
+        if prompt_len + self.write_width > self.s_max {
+            return Err(format!(
+                "prompt {prompt_len} + write width {} > s_max {}",
+                self.write_width, self.s_max
+            ));
+        }
+        let need = self.blocks_for(prompt_len + chunk);
+        let p = self.paged.as_mut().expect("prefix cache implies paged");
+        debug_assert!(p.tables[i].is_empty(), "slot {i}: stale block table");
+        let m = p.match_prefix(prompt);
+        let bs = p.block_size;
+        // Protect every hit before the first alloc(): alloc may evict
+        // refcount-0 cached blocks — including the hits themselves.
+        let mut table: Vec<usize> = Vec::with_capacity(need);
+        for &b in &m.full {
+            p.incref(b);
+            table.push(b);
+        }
+        let guard = m.partial.map(|(src, _)| {
+            p.incref(src);
+            src
+        });
+        let mut claim = PrefixClaim { cached_len: table.len() * bs, copies: Vec::new() };
+        if let Some((src, matched)) = m.partial {
+            if let Some(dst) = p.alloc() {
+                claim.copies.push((src, dst));
+                claim.cached_len += matched;
+                table.push(dst);
+            }
+        }
+        let mut exhausted = false;
+        while table.len() < need {
+            match p.alloc() {
+                Some(b) => table.push(b),
+                None => {
+                    exhausted = true;
+                    break;
+                }
+            }
+        }
+        if let Some(src) = guard {
+            p.decref(src);
+        }
+        if exhausted {
+            // the COW copy was never applied to the pool, so its destination
+            // simply frees; hits fall back to their prior state
+            for &b in &table {
+                p.decref(b);
+            }
+            return Err(format!(
+                "slot {i}: need {need} KV blocks, {} available (capacity {})",
+                p.available(),
+                p.capacity
+            ));
+        }
+        if let Some(cache) = p.prefix.as_mut() {
+            for &b in &m.full {
+                cache.touch(b);
+            }
+        }
+        p.tables[i] = table;
+        self.active[i] = true;
+        self.lens[i] = prompt_len;
+        self.chunks[i] = chunk;
+        Ok(claim)
+    }
+
+    /// Register slot `i`'s fully-committed prompt blocks — those whose every
+    /// position is `< prompt.len()` and will never be written again — in the
+    /// prefix index, so later admissions can share them. Call AFTER the
+    /// block contents physically exist in the pool (post-splice). Blocks
+    /// whose hash is already indexed (including the slot's own shared hits)
+    /// are skipped; no-op without the cache. Generated blocks are never
+    /// registered: only prompt-derived KV is bit-reproducible across the
+    /// prefill paths.
+    pub fn register_prefix(&mut self, i: usize, prompt: &[i32]) {
+        let Some(p) = self.paged.as_mut() else { return };
+        if p.prefix.is_none() {
+            return;
+        }
+        debug_assert!(self.active[i], "register_prefix on an inactive slot");
+        let bs = p.block_size;
+        let plen = prompt.len();
+        let mut h = CHAIN_SEED;
+        let mut k = 0usize;
+        while (k + 1) * bs <= plen {
+            let toks = &prompt[k * bs..(k + 1) * bs];
+            let nh = chain_hash(h, toks);
+            let b = p.tables[i][k];
+            let cache = p.prefix.as_mut().expect("checked above");
+            if !cache.by_hash.contains_key(&nh) && cache.meta[b].is_none() {
+                cache.register(b, h, nh, toks.to_vec());
+            }
+            h = nh;
+            k += 1;
+        }
     }
 
     /// Slot `i`'s commit chunk (its policy's commit width).
@@ -305,7 +710,11 @@ impl SlotManager {
         let need = self.blocks_for(self.lens[i] + self.chunks[i]);
         if let Some(p) = &mut self.paged {
             while p.tables[i].len() < need {
-                match p.free.pop() {
+                // alloc() evicts cached-idle blocks on demand; when even
+                // that runs dry, the partially-grown table stays with the
+                // slot — every caller must release the slot on `false`
+                // (pinned by commit_spec_partial_grab_then_release_…)
+                match p.alloc() {
                     Some(b) => p.tables[i].push(b),
                     None => return false, // block budget exhausted
                 }
@@ -327,9 +736,12 @@ impl SlotManager {
         self.specing[i]
     }
 
-    /// Free slot `i` (idempotent): paged tables drain back to the free list
-    /// exactly once — a second release finds an empty table and frees
-    /// nothing, so the free list never double-holds a block.
+    /// Free slot `i` (idempotent): paged tables drain exactly once — a
+    /// second release finds an empty table and frees nothing, so no block is
+    /// ever double-freed. Each drained block is *decrefed*, never freed
+    /// outright: a block another table still maps keeps its refcount, and a
+    /// registered block at refcount 0 parks cached-idle instead of returning
+    /// to the free list.
     pub fn release(&mut self, i: usize) {
         self.active[i] = false;
         self.specing[i] = false;
@@ -337,7 +749,9 @@ impl SlotManager {
         self.chunks[i] = self.chunk;
         if let Some(p) = &mut self.paged {
             let drained = std::mem::take(&mut p.tables[i]);
-            p.free.extend(drained);
+            for b in drained {
+                p.decref(b);
+            }
         }
     }
 
@@ -363,15 +777,30 @@ impl SlotManager {
     pub fn swap_blocks(&mut self, i: usize, a: usize, b: usize) {
         let p = self.paged.as_mut().expect("swap_blocks on a dense SlotManager");
         debug_assert!(self.active[i]);
+        // tree path commits only rewire scratch-region blocks, which sit
+        // strictly above the registered prompt prefix (registered block k
+        // has (k+1)*bs <= plen; scratch starts at position >= plen), so a
+        // rewire can never move a shared or content-indexed block
+        debug_assert!(
+            p.refcount[p.tables[i][a]] == 1 && p.refcount[p.tables[i][b]] == 1,
+            "swap_blocks would rewire a shared block"
+        );
+        debug_assert!(
+            !p.is_cached(p.tables[i][a]) && !p.is_cached(p.tables[i][b]),
+            "swap_blocks would move a prefix-cached block"
+        );
         p.tables[i].swap(a, b);
     }
 
-    /// Blocks in use across all slots. Paged mode counts actually allocated
-    /// blocks (== the sum of table lengths); dense mode reports the
-    /// utilization *view* (blocks a paged cache would need).
+    /// Blocks in use across all slots. Paged mode counts *distinct* mapped
+    /// blocks (`capacity - free - cached-idle`): under prefix sharing the
+    /// sum of table lengths can exceed the physical pool, and occupancy
+    /// metrics gate on `used <= capacity`. Without sharing the two counts
+    /// are identical. Dense mode reports the utilization *view* (blocks a
+    /// paged cache would need).
     pub fn blocks_used(&self) -> usize {
         match &self.paged {
-            Some(p) => p.tables.iter().map(|t| t.len()).sum(),
+            Some(p) => p.capacity - p.free.len() - p.idle_cached(),
             None => self
                 .lens
                 .iter()
@@ -398,6 +827,46 @@ impl SlotManager {
 
     pub fn utilization(&self) -> f64 {
         self.blocks_used() as f64 / self.blocks_total() as f64
+    }
+
+    /// Mapping refcount of pool block `b` (0 in dense mode, for free blocks,
+    /// and for cached-idle blocks).
+    pub fn refcount(&self, b: usize) -> u32 {
+        self.paged.as_ref().map(|p| p.refcount[b]).unwrap_or(0)
+    }
+
+    /// Blocks currently mapped by two or more slot tables.
+    pub fn shared_blocks(&self) -> usize {
+        self.paged
+            .as_ref()
+            .map(|p| p.refcount.iter().filter(|&&r| r >= 2).count())
+            .unwrap_or(0)
+    }
+
+    /// Blocks registered in the prefix index (mapped or idle).
+    pub fn cached_blocks(&self) -> usize {
+        self.paged
+            .as_ref()
+            .and_then(|p| p.prefix.as_ref())
+            .map(|c| c.meta.iter().flatten().count())
+            .unwrap_or(0)
+    }
+
+    /// Cumulative LRU evictions of cached-idle blocks.
+    pub fn prefix_evictions(&self) -> usize {
+        self.paged
+            .as_ref()
+            .and_then(|p| p.prefix.as_ref())
+            .map(|c| c.evictions)
+            .unwrap_or(0)
+    }
+
+    /// Blocks an allocation could obtain right now (free + evictable idle).
+    pub fn available_blocks(&self) -> usize {
+        match &self.paged {
+            Some(p) => p.available(),
+            None => self.free_blocks(),
+        }
     }
 
     /// cache_len vector for the verify executable (`[B]` i32). Inactive slots
@@ -866,6 +1335,333 @@ mod tests {
                 }
                 if !ad {
                     return Case::Pass;
+                }
+            }
+            Case::Pass
+        });
+    }
+
+    // --- prefix cache & block sharing --------------------------------------
+
+    /// None, or a description of the first sharing-invariant violation:
+    /// refcount == table mappings, free blocks unmapped/uncached/unique,
+    /// free ∪ mapped ∪ cached-idle partitions the id range, and
+    /// blocks_used() counts distinct mapped blocks.
+    fn sharing_violation(m: &SlotManager) -> Option<String> {
+        let p = m.paged.as_ref().unwrap();
+        let cap = p.capacity;
+        let mut maps = vec![0u32; cap + 1];
+        for t in &p.tables {
+            for &b in t {
+                if b == 0 || b > cap {
+                    return Some(format!("block {b} out of range"));
+                }
+                maps[b] += 1;
+            }
+        }
+        for b in 1..=cap {
+            if p.refcount[b] != maps[b] {
+                return Some(format!(
+                    "block {b}: refcount {} != {} table mappings",
+                    p.refcount[b], maps[b]
+                ));
+            }
+        }
+        let mut in_free = vec![false; cap + 1];
+        for &b in &p.free {
+            if in_free[b] {
+                return Some(format!("block {b} twice on the free list"));
+            }
+            in_free[b] = true;
+            if maps[b] != 0 {
+                return Some(format!("mapped block {b} on the free list"));
+            }
+            if p.is_cached(b) {
+                return Some(format!("cached block {b} on the free list"));
+            }
+        }
+        let mapped_distinct = (1..=cap).filter(|&b| maps[b] > 0).count();
+        let idle = (1..=cap).filter(|&b| maps[b] == 0 && p.is_cached(b)).count();
+        if p.free.len() + mapped_distinct + idle != cap {
+            return Some(format!(
+                "partition broken: {} free + {mapped_distinct} mapped + {idle} idle != {cap}",
+                p.free.len()
+            ));
+        }
+        if m.blocks_used() != mapped_distinct {
+            return Some(format!(
+                "blocks_used {} != distinct mapped {mapped_distinct}",
+                m.blocks_used()
+            ));
+        }
+        None
+    }
+
+    #[test]
+    fn commit_spec_partial_grab_then_release_restores_full_range() {
+        // THE exhaustion-invariant pin: commit_spec pops blocks into the
+        // slot's table BEFORE discovering the free list cannot cover the
+        // next chunk — the no-leak story requires the partial grab to stay
+        // with the slot and drain on release. bs=2, cap=6: claim covers 4
+        // blocks, the failing grow pops the remaining 2, then signals false.
+        let mut m = paged(1, 16, 5, 2, 6);
+        m.claim(0, 3).unwrap(); // blocks_for(3+5)=4
+        assert_eq!(m.table(0).len(), 4);
+        assert_eq!(m.free_blocks(), 2);
+        m.begin_spec(0);
+        // len 8: need blocks_for(13)=7 > capacity — pops the last 2, fails
+        assert!(!m.commit_spec(0, 5));
+        assert_eq!(m.table(0).len(), 6, "partial grab stays with the slot");
+        assert_eq!(m.free_blocks(), 0);
+        assert!(sharing_violation(&m).is_none());
+        // the caller contract: release on false restores the full id range
+        m.release(0);
+        assert_eq!(m.blocks_used(), 0);
+        assert_eq!(m.free_blocks(), 6);
+        let mut free = m.paged.as_ref().unwrap().free.clone();
+        free.sort_unstable();
+        assert_eq!(free, vec![1, 2, 3, 4, 5, 6], "free ∪ owned != id range");
+        // and the slot is immediately reusable at full capacity
+        m.claim(0, 3).unwrap();
+        assert_eq!(m.table(0).len(), 4);
+    }
+
+    #[test]
+    fn chain_hash_is_order_and_parent_sensitive() {
+        let a = chain_hash(CHAIN_SEED, &[1, 2, 3, 4]);
+        let b = chain_hash(CHAIN_SEED, &[2, 1, 3, 4]);
+        assert_ne!(a, b, "token order must change the hash");
+        let c1 = chain_hash(a, &[5, 6, 7, 8]);
+        let c2 = chain_hash(b, &[5, 6, 7, 8]);
+        assert_ne!(c1, c2, "identical blocks under different parents must differ");
+        assert_ne!(a, chain_hash(CHAIN_SEED, &[1, 2, 3]), "length must matter");
+    }
+
+    #[test]
+    fn prefix_claim_shares_full_blocks_and_increfs() {
+        let mut m = paged(3, 32, 3, 4, 16).with_prefix_cache();
+        assert!(m.prefix_cache_enabled());
+        let a: Vec<i32> = (1..=10).collect();
+        // cold claim: a miss end to end
+        let c0 = m.claim_with_prefix(0, &a, 3).unwrap();
+        assert_eq!(c0, PrefixClaim::default());
+        m.register_prefix(0, &a); // registers blocks 0,1 ((k+1)*4 <= 10)
+        assert_eq!(m.cached_blocks(), 2);
+        m.register_prefix(0, &a); // idempotent
+        assert_eq!(m.cached_blocks(), 2);
+        // hit claim: both full blocks shared, tail blocks fresh
+        let c1 = m.claim_with_prefix(1, &a, 3).unwrap();
+        assert_eq!(c1.cached_len, 8);
+        assert!(c1.copies.is_empty());
+        assert_eq!(&m.table(1)[..2], &m.table(0)[..2], "prefix blocks shared");
+        assert_ne!(m.table(1)[2], m.table(0)[2], "tail blocks private");
+        assert_eq!(m.refcount(m.table(0)[0]), 2);
+        assert_eq!(m.refcount(m.table(0)[1]), 2);
+        assert_eq!(m.shared_blocks(), 2);
+        // distinct occupancy: 4 (slot 0) + 2 private (slot 1)
+        assert_eq!(m.blocks_used(), 6);
+        assert!(m.blocks_used() <= m.blocks_total());
+        assert!(sharing_violation(&m).is_none());
+    }
+
+    #[test]
+    fn prefix_partial_match_cows_a_private_copy() {
+        let mut m = paged(2, 32, 3, 4, 16).with_prefix_cache();
+        let a = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        m.claim_with_prefix(0, &a, 3).unwrap();
+        m.register_prefix(0, &a); // blocks [1,2,3,4] and [5,6,7,8]
+        // b diverges inside the second block: [5,6,..] shares 2 of 4 tokens
+        let b = vec![1, 2, 3, 4, 5, 6, 99, 100];
+        let c = m.claim_with_prefix(1, &b, 3).unwrap();
+        assert_eq!(c.cached_len, 6, "4 full + 2 sub-block positions");
+        assert_eq!(c.copies.len(), 1);
+        let (src, dst) = c.copies[0];
+        assert_eq!(src, m.table(0)[1], "copy source is the registered block");
+        assert_eq!(dst, m.table(1)[1], "copy destination is slot 1's block");
+        assert_ne!(src, dst, "COW must never write the shared block");
+        assert_eq!(m.refcount(src), 1, "source still owned by slot 0 only");
+        assert_eq!(m.refcount(dst), 1, "destination is private");
+        assert!(!m.paged.as_ref().unwrap().is_cached(dst));
+        assert_eq!(m.shared_blocks(), 1, "only the first block is shared");
+        assert!(sharing_violation(&m).is_none());
+    }
+
+    #[test]
+    fn prefix_release_decrefs_and_keeps_shared_blocks_out_of_free() {
+        let mut m = paged(2, 32, 3, 4, 16).with_prefix_cache();
+        let a: Vec<i32> = (1..=10).collect();
+        m.claim_with_prefix(0, &a, 3).unwrap();
+        m.register_prefix(0, &a);
+        m.claim_with_prefix(1, &a, 3).unwrap();
+        let shared: Vec<usize> = m.table(0)[..2].to_vec();
+        m.release(0);
+        // shared blocks survive with refcount 1; slot 0's privates free
+        for &b in &shared {
+            assert_eq!(m.refcount(b), 1);
+            assert!(!m.paged.as_ref().unwrap().free.contains(&b));
+        }
+        assert!(sharing_violation(&m).is_none());
+        m.release(1);
+        m.release(1); // decref must be idempotent across double release
+        // registered blocks park cached-idle, never on the free list
+        assert_eq!(m.cached_blocks(), 2);
+        assert_eq!(m.blocks_used(), 0);
+        assert_eq!(m.free_blocks(), 14);
+        assert_eq!(m.available_blocks(), 16);
+        for &b in &shared {
+            assert_eq!(m.refcount(b), 0);
+            assert!(!m.paged.as_ref().unwrap().free.contains(&b));
+        }
+        assert!(sharing_violation(&m).is_none());
+    }
+
+    #[test]
+    fn prefix_cache_eviction_is_lru_and_counts() {
+        let mut m = paged(1, 16, 2, 4, 4).with_prefix_cache();
+        let a = vec![1, 2, 3, 4, 5, 6];
+        let b = vec![9, 10, 11, 12, 13, 14];
+        m.claim_with_prefix(0, &a, 2).unwrap();
+        m.register_prefix(0, &a);
+        m.release(0);
+        m.claim_with_prefix(0, &b, 2).unwrap();
+        m.register_prefix(0, &b);
+        m.release(0);
+        assert_eq!(m.cached_blocks(), 2);
+        // touch a's block so b's becomes the LRU victim
+        let ca = m.claim_with_prefix(0, &a, 2).unwrap();
+        assert_eq!(ca.cached_len, 4, "idle cached block must still hit");
+        m.release(0);
+        // a 3-block claim exceeds the 2 free blocks -> evicts exactly one
+        let c = vec![50; 10];
+        m.claim_with_prefix(0, &c, 2).unwrap();
+        assert_eq!(m.prefix_evictions(), 1);
+        assert_eq!(m.cached_blocks(), 1);
+        assert!(sharing_violation(&m).is_none());
+        m.release(0);
+        // the survivor is a's block (recently touched), b's was the LRU
+        let ca = m.claim_with_prefix(0, &a, 2).unwrap();
+        assert_eq!(ca.cached_len, 4, "recently-used block must survive");
+        m.release(0);
+        let cb = m.claim_with_prefix(0, &b, 2).unwrap();
+        assert_eq!(cb.cached_len, 0, "LRU block must be gone");
+    }
+
+    #[test]
+    fn can_admit_prompt_accounts_for_cached_and_evictable() {
+        let mut m = paged(2, 16, 2, 4, 4).with_prefix_cache();
+        let a: Vec<i32> = (1..=10).collect();
+        m.claim_with_prefix(0, &a, 2).unwrap(); // 3 blocks, 1 free
+        m.register_prefix(0, &a); // blocks 0,1 registered (and mapped)
+        // same-prefix prompt: needs 3 blocks but hits 2, so 1 free suffices
+        let mut a2 = a.clone();
+        a2[8] = 77;
+        a2[9] = 78;
+        assert!(m.can_admit_prompt(&a2, 2));
+        // length-only headroom refuses — the hit is what admits it
+        assert!(!m.can_admit_chunk(10, 2));
+        // a cold prompt of the same length cannot be admitted
+        let cold: Vec<i32> = (20..30).collect();
+        assert!(!m.can_admit_prompt(&cold, 2));
+        // and the claim agrees with the check, both ways
+        assert!(m.claim_with_prefix(1, &cold, 2).unwrap_err().contains("KV blocks"));
+        let c = m.claim_with_prefix(1, &a2, 2).unwrap();
+        assert_eq!(c.cached_len, 8);
+        assert_eq!(m.shared_blocks(), 2);
+        assert!(sharing_violation(&m).is_none());
+    }
+
+    #[test]
+    fn prefix_claim_rolls_back_cleanly_on_exhaustion() {
+        let mut m = paged(2, 32, 3, 4, 4).with_prefix_cache();
+        let a: Vec<i32> = (1..=10).collect();
+        m.claim_with_prefix(0, &a, 3).unwrap(); // all 4 blocks
+        m.register_prefix(0, &a);
+        // a hit that still needs 2 fresh blocks must fail atomically
+        let err = m.claim_with_prefix(1, &a, 3).unwrap_err();
+        assert!(err.contains("KV blocks"), "undescriptive error: {err}");
+        assert!(!m.is_active(1));
+        assert!(m.table(1).is_empty());
+        assert_eq!(m.shared_blocks(), 0, "rollback must drop the shared incref");
+        assert!(sharing_violation(&m).is_none());
+        // slot 0 is untouched and still releases the full range
+        m.release(0);
+        assert_eq!(m.available_blocks(), 4);
+    }
+
+    #[test]
+    fn prefix_sharing_property_suite() {
+        // The satellite property suite: random claim/spec/release traffic
+        // over a small pool of shared prefixes with colliding sub-block
+        // tails. After EVERY op: refcount == table mappings, free blocks are
+        // unmapped+uncached+unique, free ∪ mapped ∪ cached-idle partitions
+        // the id range, blocks_used() is the distinct mapped count, and each
+        // COW destination is private and unindexed.
+        check("prefix-sharing", 100, |rng| {
+            let bs = 2 + rng.below(4); // 2..=5
+            let blocks_per_slot = 3 + rng.below(4);
+            let s_max = bs * blocks_per_slot;
+            let chunk = 1 + rng.below(3);
+            let batch = 2 + rng.below(3);
+            let cap = 2 + rng.below(batch * blocks_per_slot + 4);
+            let mut m =
+                SlotManager::new_paged(batch, s_max, chunk, bs, cap).with_prefix_cache();
+            // three disjoint base prefixes of two full blocks each
+            let prefixes: Vec<Vec<i32>> = (0..3)
+                .map(|j| (0..2 * bs as i32).map(|t| j * 50 + t + 1).collect())
+                .collect();
+            for step in 0..80 {
+                let i = rng.below(batch);
+                match rng.below(6) {
+                    0 | 1 => {
+                        if !m.is_active(i) && s_max > chunk {
+                            let base = &prefixes[rng.below(3)];
+                            let mut prompt = base.clone();
+                            // near-binary tails collide at sub-block depth,
+                            // exercising the COW arm
+                            for _ in 0..1 + rng.below(bs * 2) {
+                                prompt.push(200 + rng.below(2) as i32);
+                            }
+                            prompt.truncate(s_max.saturating_sub(chunk).max(1));
+                            if let Ok(c) = m.claim_with_prefix(i, &prompt, chunk) {
+                                for &(src, dst) in &c.copies {
+                                    let p = m.paged.as_ref().unwrap();
+                                    if src == dst || p.refcount[dst] != 1 || p.is_cached(dst) {
+                                        return Case::Fail {
+                                            desc: format!(
+                                                "step {step}: bad COW ({src} -> {dst})"
+                                            ),
+                                            size: cap,
+                                        };
+                                    }
+                                }
+                                m.register_prefix(i, &prompt);
+                            }
+                        }
+                    }
+                    2 => {
+                        if m.is_active(i) && !m.is_specing(i) {
+                            m.begin_spec(i);
+                        }
+                    }
+                    3 => {
+                        if m.is_specing(i) {
+                            if !m.commit_spec(i, rng.below(chunk + 1)) {
+                                m.release(i); // the engine evicts on CacheFull
+                            }
+                        }
+                    }
+                    4 => {
+                        if m.is_specing(i) {
+                            m.rollback_spec(i);
+                        }
+                    }
+                    _ => {
+                        m.release(i);
+                        m.release(i); // double release must be idempotent
+                    }
+                }
+                if let Some(desc) = sharing_violation(&m) {
+                    return Case::Fail { desc: format!("step {step}: {desc}"), size: cap };
                 }
             }
             Case::Pass

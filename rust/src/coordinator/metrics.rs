@@ -188,6 +188,23 @@ pub struct EngineMetrics {
     /// dense tree-mode accepted paths committed via host compaction
     /// (`compact_kv_path`); must stay 0 when paged mode is on
     pub dense_compactions: usize,
+    /// prefix cache: admissions whose prompt matched at least one cached
+    /// token (shared blocks and/or a copy-on-write sub-block hit)
+    pub prefix_hits: usize,
+    /// prefix cache: admissions that matched nothing (cold prompts); stays
+    /// 0 when the cache is off, so `hits + misses > 0` gates the summary
+    pub prefix_misses: usize,
+    /// prefix cache: prompt tokens served from cached KV instead of being
+    /// prefilled, summed over hits (the TTFT-collapse numerator)
+    pub prefix_tokens_cached: usize,
+    /// prefix cache: sub-block hits materialized as a private block copy
+    pub cow_copies: usize,
+    /// prefix cache: cached-idle blocks reclaimed by LRU eviction under
+    /// free-list pressure (synced by assignment from the allocator, so
+    /// merge SUMS engine-disjoint counts)
+    pub prefix_evictions: usize,
+    /// prefix cache: peak simultaneously-shared (refcount >= 2) blocks
+    pub shared_blocks_peak: usize,
     pub draft_time: Duration,
     pub verify_time: Duration,
     /// per-slot admission overhead: batch-1 prefill + KV row splice
@@ -420,6 +437,12 @@ impl EngineMetrics {
         self.block_rewires += other.block_rewires;
         self.paged_path_commits += other.paged_path_commits;
         self.dense_compactions += other.dense_compactions;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_misses += other.prefix_misses;
+        self.prefix_tokens_cached += other.prefix_tokens_cached;
+        self.cow_copies += other.cow_copies;
+        self.prefix_evictions += other.prefix_evictions;
+        self.shared_blocks_peak = self.shared_blocks_peak.max(other.shared_blocks_peak);
         self.draft_time += other.draft_time;
         self.verify_time += other.verify_time;
         self.admission_time += other.admission_time;
@@ -457,6 +480,17 @@ impl EngineMetrics {
                 self.blocks_peak,
                 self.admissions_blocked,
                 self.block_rewires,
+            ));
+        }
+        if self.prefix_hits + self.prefix_misses > 0 {
+            s.push_str(&format!(
+                " pfxhit={}/{} pfxtok={} cow={} pfxevict={} sharedpeak={}",
+                self.prefix_hits,
+                self.prefix_hits + self.prefix_misses,
+                self.prefix_tokens_cached,
+                self.cow_copies,
+                self.prefix_evictions,
+                self.shared_blocks_peak,
             ));
         }
         s
@@ -612,6 +646,32 @@ mod tests {
         assert_eq!(m.block_rewires, 1);
         assert_eq!(m.paged_path_commits, 4);
         assert!(m.summary().contains("blkocc"));
+    }
+
+    #[test]
+    fn prefix_cache_counters_merge_and_summarize() {
+        let m = EngineMetrics::new(2);
+        assert!(!m.summary().contains("pfxhit"), "cache-off engines stay silent");
+        let mut a = EngineMetrics::new(2);
+        a.prefix_hits = 3;
+        a.prefix_misses = 1;
+        a.prefix_tokens_cached = 96;
+        a.cow_copies = 2;
+        a.prefix_evictions = 1;
+        a.shared_blocks_peak = 4;
+        let mut b = EngineMetrics::new(2);
+        b.prefix_misses = 2;
+        b.shared_blocks_peak = 6;
+        a.merge(&b);
+        assert_eq!(a.prefix_hits, 3);
+        assert_eq!(a.prefix_misses, 3);
+        assert_eq!(a.prefix_tokens_cached, 96);
+        assert_eq!(a.cow_copies, 2);
+        assert_eq!(a.prefix_evictions, 1);
+        assert_eq!(a.shared_blocks_peak, 6, "peaks max, not sum");
+        let s = a.summary();
+        assert!(s.contains("pfxhit=3/6"), "{s}");
+        assert!(s.contains("pfxtok=96"), "{s}");
     }
 
     #[test]

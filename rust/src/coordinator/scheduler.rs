@@ -194,9 +194,11 @@ pub fn run_open_loop(
     let t0 = Instant::now();
     while results.len() < total {
         let now_s = t0.elapsed().as_secs_f64();
-        while core.in_flight() < concurrency
-            && pending.peek().is_some_and(|r| r.arrival_s <= now_s)
-        {
+        while admit_due(
+            core.in_flight(),
+            concurrency,
+            pending.peek().is_some_and(|r| r.arrival_s <= now_s),
+        ) {
             core.add_request(pending.next().unwrap())?;
         }
         if core.is_idle() {
@@ -227,10 +229,51 @@ pub fn run_open_loop(
     Ok((results, metrics))
 }
 
+/// The open-loop admission gate, one decision per due arrival: admit only
+/// while the engine's QUEUED + OCCUPIED count stays strictly below
+/// `concurrency`. `in_flight` must be re-read from the engine after every
+/// admission (each `add_request` enqueues immediately), so a clustered burst
+/// of simultaneous arrivals can never over-enqueue past the cap — the excess
+/// stays in the driver's own pending list until in-flight work drains.
+/// Factored out of [`run_open_loop`] so the bound is unit-testable without a
+/// runtime.
+fn admit_due(in_flight: usize, concurrency: usize, next_due: bool) -> bool {
+    next_due && in_flight < concurrency
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::request::SpecPolicy;
+
+    /// Satellite regression: N simultaneous arrivals (identical arrival_s,
+    /// all due the instant the driver starts) must admit exactly
+    /// `concurrency` requests before the first step — the gate counts the
+    /// engine queue, not just occupied slots, so there is no window where a
+    /// burst over-enqueues. Draining one in-flight unit re-admits exactly
+    /// one more.
+    #[test]
+    fn open_loop_burst_cannot_over_enqueue() {
+        let concurrency = 4;
+        let due = 10; // clustered arrivals, all due NOW
+        let mut in_flight = 0; // engine-side queued + occupied
+        let mut admitted = 0;
+        while admit_due(in_flight, concurrency, admitted < due) {
+            in_flight += 1; // add_request enqueues immediately
+            admitted += 1;
+        }
+        assert_eq!(admitted, concurrency, "burst admitted past the cap");
+        // one request finishes: exactly one replacement admits, no more
+        in_flight -= 1;
+        let mut extra = 0;
+        while admit_due(in_flight, concurrency, admitted + extra < due) {
+            in_flight += 1;
+            extra += 1;
+        }
+        assert_eq!(extra, 1);
+        // and an empty schedule admits nothing regardless of headroom
+        assert!(!admit_due(0, concurrency, false));
+    }
 
     fn cfg() -> EngineConfig {
         EngineConfig::new("t", SpecPolicy::chain("d", 5), 4, 32)
@@ -271,6 +314,7 @@ mod tests {
             let c = cfg().with_paged(Some(PagedKvConfig {
                 block_size: Some(4),
                 num_blocks: Some(num_blocks),
+                prefix_cache: false,
             }));
             Scheduler::new(c, vec![1, 2, 4])
         };
@@ -284,7 +328,7 @@ mod tests {
         assert_eq!(paged(64).pick_bucket(0), None);
         // unlimited (fully provisioned) budget: slot-only policy
         let c = cfg()
-            .with_paged(Some(PagedKvConfig { block_size: Some(4), num_blocks: None }));
+            .with_paged(Some(PagedKvConfig { block_size: Some(4), num_blocks: None, prefix_cache: false }));
         assert_eq!(Scheduler::new(c, vec![1, 2, 4]).pick_bucket(3), Some(2));
     }
 
@@ -297,9 +341,9 @@ mod tests {
         // on capacity).
         let tree = SpecPolicy::tree("d", TreeTopology::from_widths(&[3, 2, 1, 1, 1]));
         let mut c = EngineConfig::new("t", tree, 4, 32);
-        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(2) });
+        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(2), prefix_cache: false });
         assert_eq!(Scheduler::new(c.clone(), vec![1, 2, 4]).pick_bucket(4), None);
-        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(7) });
+        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(7), prefix_cache: false });
         assert_eq!(Scheduler::new(c, vec![1, 2, 4]).pick_bucket(4), Some(2));
     }
 
@@ -313,13 +357,13 @@ mod tests {
         // envelope's ceil(15/4) = 4.
         let dynp = SpecPolicy::dynamic("d", TreeTopology::from_widths(&[4, 4, 2, 2, 1]), 3);
         let mut c = EngineConfig::new("t", dynp, 4, 32);
-        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(5) });
+        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(5), prefix_cache: false });
         // 5 blocks at 2 per request host 2 concurrent requests: width 2.
         // Charging by the envelope (4 per request) would cap this at 1.
         assert_eq!(Scheduler::new(c.clone(), vec![1, 2, 4]).pick_bucket(4), Some(2));
         // and a budget the envelope could never fit still admits: 3 blocks
         // host one 2-block request (envelope charging would refuse at < 4)
-        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(3) });
+        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(3), prefix_cache: false });
         assert_eq!(Scheduler::new(c, vec![1, 2, 4]).pick_bucket(4), Some(1));
     }
 
@@ -334,7 +378,7 @@ mod tests {
         let mut c = EngineConfig::new("t", SpecPolicy::chain("d", 5), 4, 32).with_policies(
             vec![SpecPolicy::dynamic("d", TreeTopology::from_widths(&[4, 4, 2, 2, 1]), 2)],
         );
-        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(1) });
+        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(1), prefix_cache: false });
         // chain-only would refuse (needs 2 blocks); the dyn@2 policy fits
         assert_eq!(Scheduler::new(c, vec![1, 2, 4]).pick_bucket(4), Some(1));
 
@@ -346,7 +390,7 @@ mod tests {
         let env = TreeTopology::from_widths(&[4, 4, 2, 2, 1]);
         let mut c = EngineConfig::new("t", SpecPolicy::dynamic("d", env.clone(), 8), 4, 32)
             .with_policies(vec![SpecPolicy::dynamic("d", env, 2)]);
-        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(1) });
+        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(1), prefix_cache: false });
         assert_eq!(Scheduler::new(c, vec![1, 2, 4]).pick_bucket(4), Some(1));
     }
 

@@ -13,6 +13,9 @@
 //!                                      drafter; default chain:K)
 //!              [--paged [--kv-blocks N]]       (block-paged KV cache;
 //!                                      --kv-blocks caps the block budget)
+//!              [--prefix-cache]       (automatic prefix caching: shared
+//!                                      prompt-prefix blocks, copy-on-write;
+//!                                      implies --paged)
 //!              [--tree-dyn [--tree-envelope w:..] [--tree-budget N]]
 //!                                     (legacy spelling of --policy dyn:..)
 //!              [--temperature T [--top-p P] [--top-k N]]
@@ -26,7 +29,10 @@
 //!              [--sweep-drafters]     (one run per serveable drafter of the
 //!                                      target, shared runtime/weights, and
 //!                                      a comparison table)
-//!              [--paged [--kv-blocks N]]
+//!              [--paged [--kv-blocks N]] [--prefix-cache]
+//!              [--shared-prefix N]     (every prompt opens with the same
+//!                                      N-token header — the workload where
+//!                                      --prefix-cache collapses TTFT)
 //!              [--tree [--tree-topo chain:K|w:w1,w2,..]]
 //!                                     (--tree runs a chain-vs-tree pair on
 //!                                      the same workload seed and reports
@@ -63,8 +69,8 @@ use anyhow::{anyhow, Result};
 use p_eagle::config::Manifest;
 use p_eagle::coordinator::server::spawn;
 use p_eagle::coordinator::{
-    paged_from_env, tree_dyn_from_env, EngineConfig, EngineMetrics, PagedKvConfig, SamplingParams,
-    ServerEvent, SpecPolicy,
+    prefix_cache_from_env, tree_dyn_from_env, EngineConfig, EngineMetrics, PagedKvConfig,
+    SamplingParams, ServerEvent, SpecPolicy,
 };
 use p_eagle::masking::{DynamicTreeConfig, TreeTopology};
 use p_eagle::memmodel;
@@ -81,12 +87,18 @@ fn artifacts_root(args: &Args) -> String {
 /// allocator below full provisioning (admission then queues on free blocks)
 /// and implies `--paged` — a block budget on the dense cache would be
 /// silently meaningless. Block size always comes from the manifest.
+/// `--prefix-cache` (or `PEAGLE_PREFIX_CACHE=1`) additionally enables the
+/// automatic prefix cache — content-addressed prompt blocks shared
+/// copy-on-write across requests — and implies `--paged`, since the cache
+/// lives in the block allocator.
 fn paged_opts(args: &Args) -> Option<PagedKvConfig> {
     let kv_blocks = args
         .get("kv-blocks")
         .map(|n| n.parse().unwrap_or_else(|_| panic!("--kv-blocks expects a number")));
-    let on = args.flag("paged") || kv_blocks.is_some() || paged_from_env().is_some();
-    on.then(|| PagedKvConfig { block_size: None, num_blocks: kv_blocks })
+    let env = prefix_cache_from_env();
+    let prefix = args.flag("prefix-cache") || env.is_some_and(|p| p.prefix_cache);
+    let on = args.flag("paged") || kv_blocks.is_some() || prefix || env.is_some();
+    on.then(|| PagedKvConfig { block_size: None, num_blocks: kv_blocks, prefix_cache: prefix })
 }
 
 /// `--tree-dyn [--tree-envelope w:..] [--tree-budget N]` (or the
@@ -521,10 +533,21 @@ fn bench_otps(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    let run = report::bench_otps(
-        &mut mr, &drafter, &dataset, k, conc, total, max_new, 11, mixed, None, None,
-        paged_opts(args), sampling,
-    )?;
+    // --shared-prefix N: stamp the same N-token header onto every prompt.
+    // Pair a run with and without --prefix-cache on this workload: tokens
+    // must match byte-for-byte while TTFT collapses toward the tail cost.
+    let shared_prefix = args.usize_or("shared-prefix", 0);
+    let run = if shared_prefix > 0 {
+        report::bench_otps_prefix(
+            &mut mr, &drafter, &dataset, k, conc, total, max_new, 11, None, None,
+            paged_opts(args), sampling, shared_prefix,
+        )?
+    } else {
+        report::bench_otps(
+            &mut mr, &drafter, &dataset, k, conc, total, max_new, 11, mixed, None, None,
+            paged_opts(args), sampling,
+        )?
+    };
     println!(
         "OTPS[{target}/{method} K={k} C={conc} {dataset}{}] = {:.0} \
          (AL {:.2}, occupancy {:.2}, p50 TPOT {:?})",
@@ -541,6 +564,19 @@ fn bench_otps(args: &Args) -> Result<()> {
             run.metrics.blocks_peak,
             run.metrics.admissions_blocked,
             run.metrics.block_rewires,
+        );
+    }
+    if run.metrics.prefix_hits + run.metrics.prefix_misses > 0 {
+        println!(
+            "prefix cache: hits {}/{} admissions, {} prompt tokens served from cache, \
+             cow copies {}, evictions {}, shared-block peak {}, p50 TTFT {:?}",
+            run.metrics.prefix_hits,
+            run.metrics.prefix_hits + run.metrics.prefix_misses,
+            run.metrics.prefix_tokens_cached,
+            run.metrics.cow_copies,
+            run.metrics.prefix_evictions,
+            run.metrics.shared_blocks_peak,
+            run.metrics.ttft_quantile(0.5),
         );
     }
     print_policy_breakdown(&run.metrics);

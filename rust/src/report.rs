@@ -150,7 +150,37 @@ pub fn bench_otps(
 ) -> Result<OtpsRun> {
     bench_otps_inner(
         mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
-        mixed_lengths, tree, tree_dynamic, paged, sampling, None,
+        mixed_lengths, tree, tree_dynamic, paged, sampling, None, None,
+    )
+}
+
+/// Closed-loop OTPS on a SHARED-PREFIX workload: every request's prompt
+/// starts with the same seed-derived `shared_prefix_tokens`-token prefix
+/// (think system prompt / few-shot header), followed by that request's own
+/// unique tail. This is the workload where automatic prefix caching pays:
+/// with `paged.prefix_cache` on, every admission after the first maps the
+/// prefix blocks shared and prefills only the tail, so TTFT collapses
+/// toward the tail cost; with it off, the same seed measures the baseline —
+/// the pair is directly comparable and must emit byte-identical tokens.
+#[allow(clippy::too_many_arguments)]
+pub fn bench_otps_prefix(
+    mr: &mut ModelRuntime,
+    drafter: &str,
+    dataset: &str,
+    k: usize,
+    concurrency: usize,
+    total_requests: usize,
+    max_new: usize,
+    seed: u64,
+    tree: Option<&TreeTopology>,
+    tree_dynamic: Option<&DynamicTreeConfig>,
+    paged: Option<PagedKvConfig>,
+    sampling: SamplingParams,
+    shared_prefix_tokens: usize,
+) -> Result<OtpsRun> {
+    bench_otps_inner(
+        mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
+        false, tree, tree_dynamic, paged, sampling, None, Some(shared_prefix_tokens),
     )
 }
 
@@ -180,7 +210,7 @@ pub fn bench_otps_open(
 ) -> Result<OtpsRun> {
     bench_otps_inner(
         mr, drafter, dataset, k, concurrency, total_requests, max_new, seed,
-        mixed_lengths, tree, tree_dynamic, paged, sampling, Some(rate_rps),
+        mixed_lengths, tree, tree_dynamic, paged, sampling, Some(rate_rps), None,
     )
 }
 
@@ -200,6 +230,7 @@ fn bench_otps_inner(
     paged: Option<PagedKvConfig>,
     sampling: SamplingParams,
     rate_rps: Option<f64>,
+    shared_prefix: Option<usize>,
 ) -> Result<OtpsRun> {
     let info = mr.manifest.drafter(drafter)?.clone();
     let mut arr = closed_loop_arrivals(&mr.manifest, dataset, max_new, seed)?;
@@ -218,8 +249,19 @@ fn bench_otps_inner(
         warm.add_request(arr.next())?;
         warm.run_until_idle(mr)?;
     }
+    // shared-prefix workload: one fixed seed-derived token prefix stamped
+    // onto every prompt (the unique dataset tail keeps requests distinct,
+    // and at least 4 tail tokens survive so every prompt still diverges)
+    let shared_toks: Vec<i32> = {
+        let mut r = Rng::new(seed ^ 0x5A12);
+        (0..shared_prefix.unwrap_or(0)).map(|_| (r.below(246) + 4) as i32).collect()
+    };
     let mut next = move || {
         let mut spec = arr.next();
+        if let Some(n) = shared_prefix {
+            let n = n.min(spec.prompt.len().saturating_sub(4));
+            spec.prompt[..n].copy_from_slice(&shared_toks[..n]);
+        }
         if mixed_lengths {
             spec.max_new_tokens = lens.sample(&mut lrng).clamp(4, max_new);
         }

@@ -111,6 +111,24 @@ pub fn splice_kv_row_blocks(
     table: &[usize],
     valid_len: usize,
 ) -> Result<()> {
+    splice_kv_row_blocks_range(pool, row, table, 0, 0, valid_len)
+}
+
+/// [`splice_kv_row_blocks`] restricted to logical positions `from .. to`:
+/// the tail splice for a prefix-cache hit, where positions below `from` are
+/// already materialized in shared (or freshly copied) blocks and must not be
+/// rewritten through this slot's table. `row_base` is the logical position
+/// of `row`'s first entry — 0 for a full prefill row, `compute_start` for a
+/// cached (tail-only) prefill row — so row index `pos - row_base` holds
+/// logical position `pos`.
+pub fn splice_kv_row_blocks_range(
+    pool: &mut HostTensor,
+    row: &HostTensor,
+    table: &[usize],
+    row_base: usize,
+    from: usize,
+    to: usize,
+) -> Result<()> {
     let (planes, nb, bs, elems) = pool_dims(pool)?;
     anyhow::ensure!(row.dims.len() == 6, "KV row must be rank 6, got {:?}", row.dims);
     anyhow::ensure!(row.dims[2] == 1, "source KV must be batch 1, got {:?}", row.dims);
@@ -123,10 +141,15 @@ pub fn splice_kv_row_blocks(
         row.dims
     );
     let row_s = row.dims[3];
-    anyhow::ensure!(valid_len <= row_s, "valid_len {valid_len} > row length {row_s}");
+    anyhow::ensure!(from <= to, "splice range {from}..{to} is inverted");
+    anyhow::ensure!(row_base <= from, "row base {row_base} past splice start {from}");
     anyhow::ensure!(
-        valid_len <= table.len() * bs,
-        "valid_len {valid_len} not covered by {} blocks of {bs}",
+        to - row_base <= row_s,
+        "splice end {to} past row coverage {row_base}+{row_s}"
+    );
+    anyhow::ensure!(
+        to <= table.len() * bs,
+        "splice end {to} not covered by {} blocks of {bs}",
         table.len()
     );
     anyhow::ensure!(
@@ -140,17 +163,84 @@ pub fn splice_kv_row_blocks(
     for p in 0..planes {
         let pool0 = p * nb * bs * elems;
         let row0 = p * row_s * elems;
-        let mut pos = 0usize;
-        while pos < valid_len {
+        let mut pos = from;
+        while pos < to {
             // contiguous run within one block
-            let run = (bs - pos % bs).min(valid_len - pos);
+            let run = (bs - pos % bs).min(to - pos);
             let dst = pool0 + phys_off(table, bs, elems, pos);
-            let src = row0 + pos * elems;
+            let src = row0 + (pos - row_base) * elems;
             pool_v[dst..dst + run * elems].copy_from_slice(&row_v[src..src + run * elems]);
             pos += run;
         }
     }
     Ok(())
+}
+
+/// Copy every position of physical pool block `src` into block `dst` across
+/// all planes — the copy-on-write materialization for a sub-block prefix
+/// hit: the claim's private destination block starts as an exact replica of
+/// the shared source, and the tail splice then overwrites only the
+/// divergent positions. The shared source is never written.
+pub fn copy_pool_block(pool: &mut HostTensor, src: usize, dst: usize) -> Result<()> {
+    let (planes, nb, bs, elems) = pool_dims(pool)?;
+    anyhow::ensure!(
+        src > 0 && src < nb && dst > 0 && dst < nb,
+        "pool block copy {src}->{dst} outside 1..{nb}"
+    );
+    anyhow::ensure!(src != dst, "pool block copy onto itself");
+    let pool_v = match &mut pool.data {
+        HostData::F32(d) => d,
+        _ => anyhow::bail!("KV pool must be f32"),
+    };
+    let span = bs * elems;
+    for p in 0..planes {
+        let p0 = p * nb * span;
+        pool_v.copy_within(p0 + src * span..p0 + (src + 1) * span, p0 + dst * span);
+    }
+    Ok(())
+}
+
+/// Assemble a dense single-row KV `[L, 2, 1, s_out, H, Dh]` from the pool
+/// through `table`, positions `0 .. upto`; the remaining positions are zero.
+/// The cached-prefix upload for a tail-only prefill: the `prefill-cached`
+/// executable attends the gathered prefix in its dense kv operand while
+/// computing only the tail's queries.
+pub fn gather_kv_row_blocks(
+    pool: &HostTensor,
+    table: &[usize],
+    upto: usize,
+    s_out: usize,
+) -> Result<HostTensor> {
+    let (planes, nb, bs, elems) = pool_dims(pool)?;
+    anyhow::ensure!(upto <= s_out, "gather length {upto} > output length {s_out}");
+    anyhow::ensure!(
+        upto <= table.len() * bs,
+        "gather length {upto} not covered by {} blocks of {bs}",
+        table.len()
+    );
+    anyhow::ensure!(
+        table.iter().all(|&b| b > 0 && b < nb),
+        "block table entry out of pool range 1..{nb}: {table:?}"
+    );
+    let pool_v = match &pool.data {
+        HostData::F32(d) => d,
+        _ => anyhow::bail!("KV pool must be f32"),
+    };
+    let dims = [pool.dims[0], pool.dims[1], 1, s_out, pool.dims[4], pool.dims[5]];
+    let mut out = vec![0.0f32; planes * s_out * elems];
+    for p in 0..planes {
+        let pool0 = p * nb * bs * elems;
+        let out0 = p * s_out * elems;
+        let mut pos = 0usize;
+        while pos < upto {
+            let run = (bs - pos % bs).min(upto - pos);
+            let src = pool0 + phys_off(table, bs, elems, pos);
+            let dst = out0 + pos * elems;
+            out[dst..dst + run * elems].copy_from_slice(&pool_v[src..src + run * elems]);
+            pos += run;
+        }
+    }
+    Ok(HostTensor::f32(&dims, out))
 }
 
 /// Apply a [`PathCommitPlan`]'s position copies to the pool through `table`.
@@ -374,5 +464,99 @@ mod tests {
         assert!(apply_path_copies(&mut pl, &[1, 2], &[(3, 5)]).is_err());
         assert!(apply_path_copies(&mut pl, &[1, 2], &[(9, 2)]).is_err()); // src beyond coverage
         assert!(apply_path_copies(&mut pl, &[1, 2], &[(5, 3)]).is_ok());
+    }
+
+    // --- prefix cache helpers ----------------------------------------------
+
+    #[test]
+    fn copy_pool_block_replicates_all_planes_and_nothing_else() {
+        let (nb, bs) = (5, 4);
+        let mut pl = pool(nb, bs, |i| i as f32);
+        let before = pl.as_f32().unwrap().to_vec();
+        copy_pool_block(&mut pl, 2, 4).unwrap();
+        let after = pl.as_f32().unwrap();
+        for p in 0..2 {
+            let p0 = p * nb * bs;
+            for o in 0..bs {
+                assert_eq!(after[p0 + 4 * bs + o], before[p0 + 2 * bs + o], "plane {p} off {o}");
+            }
+            // source and unrelated blocks untouched
+            for b in [0usize, 1, 2, 3] {
+                for o in 0..bs {
+                    assert_eq!(after[p0 + b * bs + o], before[p0 + b * bs + o]);
+                }
+            }
+        }
+        assert!(copy_pool_block(&mut pl, 0, 1).is_err(), "null block source");
+        assert!(copy_pool_block(&mut pl, 1, 5).is_err(), "dst out of pool");
+        assert!(copy_pool_block(&mut pl, 3, 3).is_err(), "self copy");
+    }
+
+    #[test]
+    fn range_splice_writes_only_the_tail_range() {
+        let (nb, bs) = (6, 4);
+        let mut full = pool(nb, bs, |_| 0.0);
+        let mut tail = pool(nb, bs, |_| 0.0);
+        let row = HostTensor::f32(&[1, 2, 1, 16, 1, 1], (0..32).map(|i| i as f32 + 1.0).collect());
+        let table = [2usize, 5, 1];
+        splice_kv_row_blocks(&mut full, &row, &table, 10).unwrap();
+        // pre-poison the shared-prefix region of `tail`, then splice 6..10
+        // only — the prefix must keep its poison (range splice never touches
+        // shared blocks below `from`)
+        let poison = HostTensor::f32(&[1, 2, 1, 16, 1, 1], vec![-7.0; 32]);
+        splice_kv_row_blocks(&mut tail, &poison, &table, 6).unwrap();
+        splice_kv_row_blocks_range(&mut tail, &row, &table, 0, 6, 10).unwrap();
+        for p in 0..2 {
+            for pos in 0..6 {
+                assert_eq!(read(&tail, &table, p, pos), -7.0, "prefix overwritten at {pos}");
+            }
+            for pos in 6..10 {
+                assert_eq!(read(&tail, &table, p, pos), read(&full, &table, p, pos));
+            }
+        }
+        // inverted and under-covered ranges are rejected
+        assert!(splice_kv_row_blocks_range(&mut tail, &row, &table, 0, 8, 6).is_err());
+        assert!(splice_kv_row_blocks_range(&mut tail, &row, &table, 7, 6, 10).is_err());
+    }
+
+    #[test]
+    fn range_splice_honors_row_base_offset() {
+        // a tail-only prefill row: row index i holds logical position 4+i
+        let (nb, bs) = (4, 4);
+        let mut pl = pool(nb, bs, |_| 0.0);
+        let tail_row =
+            HostTensor::f32(&[1, 2, 1, 4, 1, 1], (0..8).map(|i| 100.0 + i as f32).collect());
+        let table = [1usize, 3];
+        splice_kv_row_blocks_range(&mut pl, &tail_row, &table, 4, 4, 7).unwrap();
+        for p in 0..2 {
+            for (i, pos) in (4..7).enumerate() {
+                assert_eq!(read(&pl, &table, p, pos), 100.0 + (p * 4 + i) as f32);
+            }
+            assert_eq!(read(&pl, &table, p, 7), 0.0, "past-end position written");
+        }
+        // the row is too short to cover past row_base + row_s
+        assert!(splice_kv_row_blocks_range(&mut pl, &tail_row, &table, 4, 4, 100).is_err());
+    }
+
+    #[test]
+    fn gather_round_trips_the_spliced_prefix() {
+        let (nb, bs) = (6, 4);
+        let mut pl = pool(nb, bs, |_| 0.0);
+        let row = HostTensor::f32(&[1, 2, 1, 16, 1, 1], (0..32).map(|i| i as f32 + 1.0).collect());
+        let table = [3usize, 1, 4];
+        splice_kv_row_blocks(&mut pl, &row, &table, 9).unwrap();
+        let dense = gather_kv_row_blocks(&pl, &table, 9, 16).unwrap();
+        assert_eq!(dense.dims, row.dims);
+        let (d, r) = (dense.as_f32().unwrap(), row.as_f32().unwrap());
+        for p in 0..2 {
+            for pos in 0..9 {
+                assert_eq!(d[p * 16 + pos], r[p * 16 + pos], "plane {p} pos {pos}");
+            }
+            for pos in 9..16 {
+                assert_eq!(d[p * 16 + pos], 0.0, "ungathered position not zeroed");
+            }
+        }
+        assert!(gather_kv_row_blocks(&pl, &table, 13, 12).is_err(), "upto > s_out");
+        assert!(gather_kv_row_blocks(&pl, &[1], 5, 16).is_err(), "under-covered");
     }
 }

@@ -774,6 +774,53 @@ impl ModelRuntime {
         Ok(TargetExec { target: target.to_string(), batch, k: 0, topo: None, paged: false, dynamic: false, num_blocks: None })
     }
 
+    /// Load the batch-1 tail-only prefill (`prefill-cached`) for a target —
+    /// the prefix-cache admission path. Errors when the manifest predates
+    /// the executable; callers treat that as "hits dedup memory but still
+    /// pay a full prefill".
+    pub fn ensure_prefill_cached(&mut self, target: &str) -> Result<TargetExec> {
+        let info = self.manifest.target(target)?.clone();
+        self.ensure_weights(target, &info.weights, &info.param_order)?;
+        let pre = self
+            .manifest
+            .find_exec("prefill-cached", Some(target), None, Some(1), None)?
+            .clone();
+        self.rt.load(&pre.name, &self.manifest.abs(&pre.path))?;
+        Ok(TargetExec { target: target.to_string(), batch: 1, k: 0, topo: None, paged: false, dynamic: false, num_blocks: None })
+    }
+
+    /// Tail-only prefill behind a cached prompt prefix (prefix-cache hit).
+    ///
+    /// `tokens` `[1, PREFIX_TAIL_PAD]` i32 — the prompt tail, left-aligned
+    /// (slot i holds prompt position start + i); `prompt_len` `[1]` i32 (the
+    /// FULL prompt length); `start` `[1]` i32 — positions `[0, start)` of
+    /// the uploaded `kv` already hold the prefix rows (gathered from shared
+    /// pool blocks). Outputs are bitwise-identical to the same rows of a
+    /// full [`prefill`](Self::prefill): `feats` row i is prompt position
+    /// start + i.
+    pub fn prefill_cached(
+        &mut self,
+        te: &TargetExec,
+        tokens: &HostTensor,     // [1, W] i32 (tail, left-aligned)
+        prompt_len: &HostTensor, // [1] i32
+        start: &HostTensor,      // [1] i32
+        kv: &xla::PjRtBuffer,
+    ) -> Result<PrefillOut> {
+        let name = format!("{}-prefill-cached-b1", te.target);
+        let wbufs = &self.weights[&te.target];
+        let mut args: Vec<Arg> = wbufs.iter().map(Arg::Buf).collect();
+        args.push(Arg::Host(tokens));
+        args.push(Arg::Host(prompt_len));
+        args.push(Arg::Host(start));
+        args.push(Arg::Buf(kv));
+        let out = self.rt.call(&name, &args)?;
+        let mut it = out.into_iter();
+        let last_logits = self.rt.download(&it.next().context("missing logits")?)?;
+        let feats = self.rt.download(&it.next().context("missing feats")?)?;
+        let kv = it.next().context("missing kv")?;
+        Ok(PrefillOut { last_logits, feats, kv })
+    }
+
     /// Load just the verify executable for a target at (`batch`, `k`) — the
     /// stepped engine's decode width never runs a prefill (admission uses
     /// the batch-1 prefill instead), so the batch-wide prefill HLO is not

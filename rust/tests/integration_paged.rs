@@ -153,7 +153,7 @@ fn constrained_block_budget_serializes_without_corruption() {
     let (solo1, _) = run_one(&mut mr, cfg(1, 24, None), &p1, 24);
     let (solo2, _) = run_one(&mut mr, cfg(1, 24, None), &p2, 24);
 
-    let paged = PagedKvConfig { block_size: None, num_blocks: Some(3) };
+    let paged = PagedKvConfig { block_size: None, num_blocks: Some(3), prefix_cache: false };
     let mut core = EngineCore::new(&mut mr, cfg(2, 24, Some(paged))).unwrap();
     core.add_request(spec(0, &p1, 24)).unwrap();
     core.add_request(spec(1, &p2, 24)).unwrap();
@@ -179,7 +179,7 @@ fn oversized_request_rejected_at_add_under_tight_budget() {
     // rejected at add_request (not deadlock the admission queue)
     let root = require_artifacts!();
     let mut mr = ModelRuntime::load(&root).unwrap();
-    let paged = PagedKvConfig { block_size: None, num_blocks: Some(1) };
+    let paged = PagedKvConfig { block_size: None, num_blocks: Some(1), prefix_cache: false };
     let mut core = EngineCore::new(&mut mr, cfg(1, 8, Some(paged))).unwrap();
     let prompt = test_prompt(&mr, 141);
     let err = core.add_request(spec(0, &prompt, 8)).unwrap_err();

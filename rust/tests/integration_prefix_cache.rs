@@ -1,0 +1,217 @@
+//! Prefix-cache parity — requires `make artifacts`.
+//!
+//! The headline property: the automatic prefix cache is INVISIBLE in the
+//! output. On a shared-prefix workload (every prompt opens with the same
+//! header, think system prompt / few-shot examples), the paged engine with
+//! `prefix_cache` on must emit byte-identical token streams AND acceptance
+//! lengths to the same engine with it off — for chain, static-tree, and
+//! dynamic-tree speculation — while the metrics prove the cache actually
+//! engaged (hits on every admission after the first, prompt tokens served
+//! from cache, shared physical blocks at peak).
+//!
+//! Also pinned: a workload with NO sharing runs through the cache as pure
+//! misses and stays byte-identical (the miss path is the old admission path),
+//! and divergent tails after a shared header never cross-contaminate
+//! (copy-on-write isolates the first divergent block).
+
+use p_eagle::coordinator::{
+    run_closed_loop, EngineConfig, EngineMetrics, PagedKvConfig, Request, RequestResult,
+    SpecPolicy,
+};
+use p_eagle::masking::{DynamicTreeConfig, TreeTopology};
+use p_eagle::runtime::ModelRuntime;
+use p_eagle::util::rng::Rng;
+
+fn artifacts() -> Option<String> {
+    let root = std::env::var("PEAGLE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&root).join("manifest.json").exists().then_some(root)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(r) => r,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+/// The three speculation shapes the parity claim covers.
+fn policies() -> Vec<(&'static str, SpecPolicy)> {
+    vec![
+        ("chain", SpecPolicy::chain("target-m-pe4", 5)),
+        (
+            "tree",
+            SpecPolicy::tree("target-m-pe4", TreeTopology::from_widths(&[3, 2, 1, 1, 1])),
+        ),
+        (
+            "dyn",
+            SpecPolicy::from_dynamic_config(
+                "target-m-pe4",
+                &DynamicTreeConfig::serving_default(),
+            ),
+        ),
+    ]
+}
+
+fn cfg(policy: SpecPolicy, batch: usize, max_new: usize, prefix: bool) -> EngineConfig {
+    EngineConfig::new("target-m", policy, batch, max_new)
+        .with_seed(5)
+        .with_paged(Some(PagedKvConfig {
+            block_size: None,
+            num_blocks: None,
+            prefix_cache: prefix,
+        }))
+}
+
+/// A shared-prefix workload: every prompt opens with the same 40-token
+/// header (2.5 blocks at block size 16 — exercises whole-block sharing AND
+/// the partial-tail copy-on-write claim) followed by a per-request tail.
+fn shared_prefix_prompts(mr: &ModelRuntime, n: usize) -> Vec<Vec<i32>> {
+    let mut hr = Rng::new(0x5A12);
+    let header: Vec<i32> = (0..40).map(|_| (hr.below(246) + 4) as i32).collect();
+    let regime = mr.manifest.regimes["humaneval"].clone();
+    (0..n as u64)
+        .map(|i| {
+            let mut rng = Rng::new(900 + i);
+            let mut p = header.clone();
+            p.extend(regime.sample_seq(16, &mut rng));
+            p
+        })
+        .collect()
+}
+
+/// Run `prompts` through a closed loop at the given concurrency; results
+/// sorted by request id.
+fn run_workload(
+    mr: &mut ModelRuntime,
+    cfg: &EngineConfig,
+    prompts: &[Vec<i32>],
+    concurrency: usize,
+    max_new: usize,
+) -> (Vec<RequestResult>, EngineMetrics) {
+    let mut next_id = 0u64;
+    let (mut results, metrics) = run_closed_loop(mr, cfg, concurrency, prompts.len(), || {
+        let id = next_id;
+        next_id += 1;
+        Request::new(id, prompts[id as usize].clone(), max_new)
+    })
+    .unwrap();
+    results.sort_by_key(|r| r.id);
+    (results, metrics)
+}
+
+#[test]
+fn prefix_cache_is_byte_identical_across_policies() {
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let prompts = shared_prefix_prompts(&mr, 4);
+    for (name, policy) in policies() {
+        let (off, _) =
+            run_workload(&mut mr, &cfg(policy.clone(), 2, 24, false), &prompts, 2, 24);
+        let (on, m) = run_workload(&mut mr, &cfg(policy, 2, 24, true), &prompts, 2, 24);
+        for (a, b) in off.iter().zip(on.iter()) {
+            assert_eq!(b.tokens, a.tokens, "{name}: tokens diverged (request {})", a.id);
+            assert_eq!(
+                b.accepted_sum, a.accepted_sum,
+                "{name}: accepted_sum diverged (request {})",
+                a.id
+            );
+        }
+        // the cache engaged: only the first admission of the header misses
+        assert!(m.prefix_hits >= 1, "{name}: shared-prefix workload never hit the cache");
+        assert_eq!(
+            m.prefix_hits + m.prefix_misses,
+            prompts.len(),
+            "{name}: every admission is a hit or a miss"
+        );
+        assert!(m.prefix_tokens_cached > 0, "{name}: hits served no cached prompt tokens");
+        assert!(
+            m.shared_blocks_peak >= 1,
+            "{name}: no physical block was ever mapped by two slots"
+        );
+    }
+}
+
+#[test]
+fn unshared_workload_is_all_misses_and_byte_identical() {
+    // no common header: the cache sees only misses and must change nothing
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    // distinct FIRST tokens by construction: the index also offers root-level
+    // sub-block matches, so a coincidental shared first token would be a
+    // legitimate (if tiny) hit and make the all-misses assertion flaky
+    let regime = mr.manifest.regimes["humaneval"].clone();
+    let prompts: Vec<Vec<i32>> = (0..3u64)
+        .map(|i| {
+            let mut p = vec![4 + i as i32];
+            p.extend(regime.sample_seq(15, &mut Rng::new(300 + i)));
+            p
+        })
+        .collect();
+    let policy = SpecPolicy::chain("target-m-pe4", 5);
+    let (off, _) = run_workload(&mut mr, &cfg(policy.clone(), 2, 24, false), &prompts, 2, 24);
+    let (on, m) = run_workload(&mut mr, &cfg(policy, 2, 24, true), &prompts, 2, 24);
+    for (a, b) in off.iter().zip(on.iter()) {
+        assert_eq!(b.tokens, a.tokens, "miss-path tokens diverged (request {})", a.id);
+        assert_eq!(b.accepted_sum, a.accepted_sum);
+    }
+    // 16-token prompts share no block-aligned prefix across distinct seeds
+    assert_eq!(m.prefix_hits, 0, "distinct prompts must not hit");
+    assert_eq!(m.prefix_misses, prompts.len());
+    assert_eq!(m.cow_copies, 0);
+}
+
+#[test]
+fn divergent_tails_after_shared_header_do_not_cross_contaminate() {
+    // the copy-on-write case distilled: identical 40-token header, tails that
+    // differ in the FIRST tail token (so divergence lands inside the shared
+    // partial block). Each stream must equal its own solo uncached run.
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let mut hr = Rng::new(0x7E11);
+    let header: Vec<i32> = (0..40).map(|_| (hr.below(246) + 4) as i32).collect();
+    let prompts: Vec<Vec<i32>> = [7i32, 11]
+        .iter()
+        .map(|&t| {
+            let mut p = header.clone();
+            p.extend((0..8).map(|j| 4 + (t + 31 * j) % 200));
+            p
+        })
+        .collect();
+    let policy = SpecPolicy::chain("target-m-pe4", 5);
+    let mut solos = Vec::new();
+    for p in &prompts {
+        let (r, _) =
+            run_workload(&mut mr, &cfg(policy.clone(), 1, 24, false), &[p.clone()], 1, 24);
+        solos.push(r.into_iter().next().unwrap());
+    }
+    let (on, m) = run_workload(&mut mr, &cfg(policy, 2, 24, true), &prompts, 2, 24);
+    for (got, want) in on.iter().zip(solos.iter()) {
+        assert_eq!(got.tokens, want.tokens, "COW leaked across requests");
+        assert_eq!(got.accepted_sum, want.accepted_sum);
+    }
+    assert_eq!(m.prefix_hits, 1, "second admission must hit the first's header");
+    // divergence inside the shared partial block forces a private copy
+    assert!(m.cow_copies >= 1, "divergent tail in a shared block never copied");
+}
+
+#[test]
+fn shared_prefix_ttft_smoke() {
+    // TTFT sanity on the workload the cache exists for: both runs measure a
+    // real first-token latency; the report cell (BENCH_<pr>.json `prefix`
+    // column) tracks the collapse itself — wall-clock ratios are too noisy
+    // to hard-gate in a unit test.
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let prompts = shared_prefix_prompts(&mr, 4);
+    let policy = SpecPolicy::chain("target-m-pe4", 5);
+    let (_, off) = run_workload(&mut mr, &cfg(policy.clone(), 2, 16, false), &prompts, 2, 16);
+    let (_, on) = run_workload(&mut mr, &cfg(policy, 2, 16, true), &prompts, 2, 16);
+    assert!(off.ttft_quantile(0.5) > std::time::Duration::ZERO);
+    assert!(on.ttft_quantile(0.5) > std::time::Duration::ZERO);
+    assert!(on.prefix_tokens_cached > 0, "cached run never served prompt tokens from cache");
+}

@@ -14,7 +14,9 @@ fn artifacts() -> Option<String> {
 fn cfg(batch: usize, max_new: usize) -> EngineConfig {
     // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
     // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache;
-    // PEAGLE_MULTI_DRAFTER=1 widens the allowlist (requests stay default)
+    // PEAGLE_PREFIX_CACHE=1 (the prefix-cache job) additionally turns on
+    // the automatic prefix cache; PEAGLE_MULTI_DRAFTER=1 widens the
+    // allowlist (requests stay default)
     let default = match p_eagle::coordinator::tree_dyn_from_env() {
         Some(d) => SpecPolicy::from_dynamic_config("target-m-pe4", &d),
         None => SpecPolicy::chain("target-m-pe4", 5),
@@ -27,7 +29,7 @@ fn cfg(batch: usize, max_new: usize) -> EngineConfig {
     EngineConfig::new("target-m", default, batch, max_new)
         .with_policies(extras)
         .with_seed(1)
-        .with_paged(p_eagle::coordinator::paged_from_env())
+        .with_paged(p_eagle::coordinator::prefix_cache_from_env())
 }
 
 fn prompt(i: u64) -> Vec<i32> {

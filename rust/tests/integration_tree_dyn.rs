@@ -261,8 +261,11 @@ fn paged_admission_charges_by_budget_not_envelope() {
     let c0 = dyn_cfg2("w:4,4,2,2,1", 8, 1, 16);
     let (solo, _) = run_one(&mut mr, c0.clone(), &prompt, 16);
 
-    let cb = c0
-        .with_paged(Some(PagedKvConfig { block_size: None, num_blocks: Some(need_budget) }));
+    let cb = c0.with_paged(Some(PagedKvConfig {
+        block_size: None,
+        num_blocks: Some(need_budget),
+        prefix_cache: false,
+    }));
     let mut core = EngineCore::new(&mut mr, cb).unwrap();
     core.add_request(spec(0, &prompt, 16))
         .expect("budget-charged admission must accept what envelope charging would refuse");
