@@ -14,6 +14,10 @@ Env knobs:
   PEAGLE_FAST=1       quarter training steps (CI / iteration)
   PEAGLE_KERNEL=jnp   lower drafters with the jnp attention instead of the
                       Pallas kernel (perf A/B in EXPERIMENTS.md §Perf)
+  PEAGLE_PAGED_GATHER=1  lower the paged verify families on the legacy
+                      gather-dense path (paged_gather densification) instead
+                      of the in-place paged-attention kernel — parity baseline
+                      for python/tests/test_paged_kernel.py
 """
 
 import argparse
@@ -28,8 +32,8 @@ from jax._src.lib import xla_client as xc
 
 from . import data as data_mod
 from .configs import (
-    BATCH_SIZES, BOS_ID, CTX_WINDOW, DATASETS, DEFAULT_K, EOS_ID,
-    EPOCH_SNAPSHOTS, KV_BLOCK_SIZE, MASK_ID, PAD_ID, PREFIX_TAIL_PAD,
+    BATCH_SIZES, BOS_ID, COMMIT_PLAN_ROWS, CTX_WINDOW, DATASETS, DEFAULT_K,
+    EOS_ID, EPOCH_SNAPSHOTS, KV_BLOCK_SIZE, MASK_ID, PAD_ID, PREFIX_TAIL_PAD,
     PROMPT_PAD, S_MAX, SPEC_DEPTHS, TABLE1_CONTEXTS, TARGETS,
     TREE_DYN_ENVELOPES, TREE_TARGETS, TREE_TOPOLOGIES, VOCAB, DrafterConfig,
     all_drafters, ablation_drafters, config_dict, drafter_modes,
@@ -39,8 +43,10 @@ from .configs import (
 from .drafter import draft_ar, draft_pe, draft_pe_tree, init_drafter
 from .masks import tree_depths, tree_topology_id
 from .model import (
-    init_target, prefill, prefill_cached, verify, verify_paged, verify_tree,
-    verify_tree_dyn, verify_tree_dyn_paged, verify_tree_paged, zero_kv,
+    commit_path_paged, init_target, prefill, prefill_cached, verify,
+    verify_paged, verify_paged_inplace, verify_tree, verify_tree_dyn,
+    verify_tree_dyn_paged, verify_tree_dyn_paged_inplace, verify_tree_paged,
+    verify_tree_paged_inplace, zero_kv,
 )
 from .pew import flatten_named, read_pew, unflatten_named, write_pew
 from .pretrain import pretrain_target
@@ -48,6 +54,11 @@ from .train import train_drafter
 
 FAST = os.environ.get("PEAGLE_FAST", "") == "1"
 KERNEL = os.environ.get("PEAGLE_KERNEL", "pallas")
+# Legacy paged lowering: densify through paged_gather before attending.
+# Default (off) lowers the paged verify families on the in-place Pallas
+# paged-attention kernel — no densification, same names/kinds, bitwise-equal
+# logits (the manifest records which path was lowered as `paged_inplace`).
+PAGED_GATHER = os.environ.get("PEAGLE_PAGED_GATHER", "") == "1"
 
 
 def to_hlo_text(lowered) -> str:
@@ -105,6 +116,8 @@ class Artifacts:
             "default_k": DEFAULT_K, "kv_block_size": KV_BLOCK_SIZE,
             "prefix_tail_pad": PREFIX_TAIL_PAD,
             "kernel": KERNEL, "fast": FAST,
+            "paged_inplace": not PAGED_GATHER,
+            "commit_plan_rows": COMMIT_PLAN_ROWS,
             "targets": {}, "drafters": {}, "executables": [],
             "regimes": {}, "eval_prompts": {}, "training_logs": {},
             "table1_contexts": {str(k): v for k, v in TABLE1_CONTEXTS.items()},
@@ -299,14 +312,29 @@ def stage_lower(art: Artifacts, target_params, drafter_params):
                     (pspec, chunk, clen, kv), "verify",
                     {"model": tname, "batch": b, "k": k},
                     [{"name": "logits"}, {"name": "feats"}, {"name": "kv"}])
+                _vp = verify_paged if PAGED_GATHER else verify_paged_inplace
                 _maybe_lower(
                     art, f"{tname}-verify-paged-b{b}-k{k}",
-                    lambda p, c, l, t, pl, _cfg=tcfg: verify_paged(
+                    lambda p, c, l, t, pl, _cfg=tcfg, _fn=_vp: _fn(
                         p, _cfg, c, l, t, pl),
                     (pspec, chunk, clen, table, pool), "verify-paged",
                     {"model": tname, "batch": b, "k": k,
                      "block_size": KV_BLOCK_SIZE, "num_blocks": num_kv_blocks(b)},
                     [{"name": "logits"}, {"name": "feats"}, {"name": "kv"}])
+            # device accepted-path commit: gather/scatter pool rows per the
+            # uploaded [COMMIT_PLAN_ROWS, 4] plan (physical src/dst block+
+            # offset rows; padding rows are inert null self-copies). No
+            # weights — args are exactly (plan, pool), single "kv" output.
+            # Argument order matches ModelRuntime::commit_path_paged.
+            plan = jax.ShapeDtypeStruct((COMMIT_PLAN_ROWS, 4), jnp.int32)
+            _maybe_lower(
+                art, f"{tname}-commit-path-paged-b{b}",
+                lambda pln, pl: commit_path_paged(pln, pl),
+                (plan, pool), "commit-path-paged",
+                {"model": tname, "batch": b, "block_size": KV_BLOCK_SIZE,
+                 "num_blocks": num_kv_blocks(b),
+                 "plan_rows": COMMIT_PLAN_ROWS},
+                [{"name": "kv"}])
 
     # --- drafter executables -----------------------------------------------
     # every serving drafter (pe2 included — the multi-drafter engine serves
@@ -370,10 +398,12 @@ def stage_lower(art: Artifacts, target_params, drafter_params):
                 pool = jax.ShapeDtypeStruct(
                     (tcfg.n_layers, 2, num_kv_blocks(b), KV_BLOCK_SIZE,
                      tcfg.n_heads, tcfg.head_dim), jnp.float32)
+                _vtp = (verify_tree_paged if PAGED_GATHER
+                        else verify_tree_paged_inplace)
                 _maybe_lower(
                     art, f"{tname}-verify-tree-paged-{tid}-b{b}",
-                    lambda p, c, l, m, t, pl, _cfg=tcfg, _d=depths:
-                        verify_tree_paged(p, _cfg, c, l, t, pl, m, _d),
+                    lambda p, c, l, m, t, pl, _cfg=tcfg, _d=depths, _fn=_vtp:
+                        _fn(p, _cfg, c, l, t, pl, m, _d),
                     (pspec, chunk, clen, tmask, table, pool),
                     "verify-tree-paged",
                     {"model": tname, "batch": b, "k": n_nodes, "topology": tid,
@@ -435,10 +465,12 @@ def stage_lower(art: Artifacts, target_params, drafter_params):
                 pool = jax.ShapeDtypeStruct(
                     (tcfg.n_layers, 2, num_kv_blocks(b), KV_BLOCK_SIZE,
                      tcfg.n_heads, tcfg.head_dim), jnp.float32)
+                _vdp = (verify_tree_dyn_paged if PAGED_GATHER
+                        else verify_tree_dyn_paged_inplace)
                 _maybe_lower(
                     art, f"{tname}-verify-tree-dyn-paged-{tid}-b{b}",
-                    lambda p, c, l, m, o, t, pl, _cfg=tcfg:
-                        verify_tree_dyn_paged(p, _cfg, c, l, t, pl, m, o),
+                    lambda p, c, l, m, o, t, pl, _cfg=tcfg, _fn=_vdp:
+                        _fn(p, _cfg, c, l, t, pl, m, o),
                     (pspec, chunk, clen, tmask, doffs, table, pool),
                     "verify-tree-dyn-paged",
                     {"model": tname, "batch": b, "k": n_nodes, "topology": tid,

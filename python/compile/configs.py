@@ -51,6 +51,17 @@ assert CTX_WINDOW <= PREFIX_TAIL_PAD <= PROMPT_PAD
 assert PROMPT_PAD - 1 + PREFIX_TAIL_PAD <= S_MAX
 
 
+# On-device accepted-path commit (the `commit-path-paged` executables): the
+# engine uploads a [COMMIT_PLAN_ROWS, 4] int32 plan of physical
+# (src_block, src_off, dst_block, dst_off) position copies per step, padded
+# with inert (0, 0, 0, 0) null-block self-copies. One slot's accepted path
+# contributes at most max(SPEC_DEPTHS) copies (the deepest accepted path of
+# the deepest lowered policy), and at most `batch` slots commit per step, so
+# 32 covers every lowered (batch <= 4, depth <= 7) shape with headroom; the
+# engine falls back to the host copy path if a step ever plans more.
+COMMIT_PLAN_ROWS = 32
+
+
 def kv_blocks_per_slot() -> int:
     """Block-table width per engine slot (covers the full S_MAX window)."""
     return S_MAX // KV_BLOCK_SIZE
@@ -179,6 +190,10 @@ DATASETS = ["humaneval", "mtbench", "gsm8k"]
 BATCH_SIZES = [1, 2, 4]
 SPEC_DEPTHS = [3, 5, 7]
 DEFAULT_K = 5
+
+# every slot's accepted path plans at most max-depth copies, and at most
+# `batch` slots commit per step (see COMMIT_PLAN_ROWS above)
+assert max(BATCH_SIZES) * max(SPEC_DEPTHS) <= COMMIT_PLAN_ROWS
 
 # Static draft-tree width profiles lowered as tree executables (aot.py):
 # widths[d] nodes at depth d+1, level-major ids — see masks.tree_parents and

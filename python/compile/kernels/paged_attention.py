@@ -1,0 +1,98 @@
+"""Pallas paged-attention kernel — in-place attention over the KV block pool.
+
+This is the verify-path attention of the device-resident decode step: instead
+of densifying the block pool into the per-slot `[B, S_MAX, ...]` layout
+before attending (`model.paged_gather`, one full-pool gather + scatter per
+verify), each (batch, head) program instance walks its OWN row of the block
+table and gathers exactly the `M = S_MAX / BS` pool blocks that hold the
+slot's logical cache — vLLM PagedAttention proper, adapted to the TPU memory
+hierarchy (see DESIGN.md §Hardware-Adaptation): the per-instance working set
+is the gathered `[S, Dh]` K/V pair plus the `[T, S]` score tile in VMEM, and
+`num_blocks` bounds the *device* pool footprint, not just the accounting.
+
+Numerics contract: the gathered key/value rows are byte-identical to what
+`paged_gather` would have materialized (same pool bytes addressed through the
+same table), the score matrix is computed in one full-row `[T, S]` tile, and
+the softmax reduces in the same order as `common.sdpa`'s — so logits from the
+in-place verify twins are BITWISE equal to the gather-dense path's
+(python/tests/test_paged_kernel.py pins this across chain/tree/dyn). The
+flash/online-softmax variant in draft_attention.py deliberately does NOT
+carry that guarantee, which is why this kernel keeps the single-tile shape.
+
+`interpret=True` for the same reason as draft_attention.py: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, and interpret mode lowers the
+kernel — block-table gather included — to plain HLO that runs inside the AOT
+artifacts loaded by the Rust runtime.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _paged_block_kernel(table_ref, q_ref, kp_ref, vp_ref, bias_ref, o_ref, *,
+                        scale):
+    """One (batch, head) program instance: gather the slot's blocks, then
+    full T x S attention in VMEM (same math as
+    draft_attention._single_block_kernel, keys addressed through the table).
+    """
+    t = table_ref[...]                           # [M] pool-block ids
+    q = q_ref[...].astype(jnp.float32)           # [T, Dh]
+    kp = kp_ref[...].astype(jnp.float32)         # [NB, BS, Dh] (this head)
+    vp = vp_ref[...].astype(jnp.float32)
+    b = bias_ref[...].astype(jnp.float32)        # [T, S]
+    bs, dh = kp.shape[1], kp.shape[2]
+    k = kp[t].reshape(t.shape[0] * bs, dh)       # [S, Dh] through the table
+    v = vp[t].reshape(t.shape[0] * bs, dh)
+    scores = q @ k.T * scale + b                 # [T, S] (MXU matmul)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (p @ v).astype(o_ref.dtype)     # [T, Dh] (MXU matmul)
+
+
+def paged_attention(q, k_pool, v_pool, block_table, bias, *, interpret=True):
+    """In-place attention over a paged KV pool, single block per (batch, head).
+
+    q: [B,H,T,Dh]; k_pool, v_pool: [NB,BS,H,Dh] (one layer's pool planes);
+    block_table: [B,M] int32 pool-block ids (M*BS = the logical view length
+    S); bias: [B,1,T,S] or [1,1,T,S] additive. Returns [B,H,T,Dh] in q.dtype.
+    Matches kernels.ref.ref_paged_attention bitwise.
+    """
+    B, H, T, Dh = q.shape
+    NB, BS = k_pool.shape[0], k_pool.shape[1]
+    M = block_table.shape[1]
+    S = M * BS
+    scale = 1.0 / math.sqrt(Dh)
+    bias_b = jnp.broadcast_to(bias, (B, 1, T, S))
+
+    kernel = functools.partial(_paged_block_kernel, scale=scale)
+    grid = (B, H)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, M), lambda b, h: (b, 0)),
+            pl.BlockSpec((None, None, T, Dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((NB, BS, None, Dh), lambda b, h: (0, 0, h, 0)),
+            pl.BlockSpec((NB, BS, None, Dh), lambda b, h: (0, 0, h, 0)),
+            pl.BlockSpec((None, None, T, S), lambda b, h: (b, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, T, Dh), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, Dh), q.dtype),
+        interpret=interpret,
+    )(block_table, q, k_pool, v_pool, bias_b)
+
+
+def paged_vmem_estimate_bytes(m, bs, t, dh, dtype_bytes=4):
+    """Analytical VMEM footprint per program instance on a real TPU (the
+    §Perf estimate; interpret mode has no real VMEM): the gathered [S, Dh]
+    K and V tiles, the [T, S] score tile, and the q/o tiles. The whole-pool
+    operand streams through HBM — only the table-named blocks are pulled."""
+    s = m * bs
+    return dtype_bytes * (2 * s * dh + t * s + 2 * t * dh + m)

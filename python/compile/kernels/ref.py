@@ -27,6 +27,23 @@ def ref_attention(q, k, v, bias):
     return out.astype(q.dtype)
 
 
+def ref_paged_attention(q, k_pool, v_pool, block_table, bias):
+    """Oracle for the in-place paged kernel: densify the pool through the
+    table (exactly `model.paged_gather`'s addressing), then plain attention.
+
+    q: [B,H,T,Dh]; k_pool, v_pool: [NB,BS,H,Dh] (one layer's pool planes);
+    block_table: [B,M] int32 pool-block ids; bias: [B,1,T,S] or [1,1,T,S]
+    additive with S = M*BS.
+    """
+    B = q.shape[0]
+    BS, H, Dh = k_pool.shape[1], k_pool.shape[2], k_pool.shape[3]
+    M = block_table.shape[1]
+    # [B,M,BS,H,Dh] -> [B,S,H,Dh] -> [B,H,S,Dh]
+    k = k_pool[block_table].reshape(B, M * BS, H, Dh).transpose(0, 2, 1, 3)
+    v = v_pool[block_table].reshape(B, M * BS, H, Dh).transpose(0, 2, 1, 3)
+    return ref_attention(q, k, v, bias)
+
+
 def ref_attention_varlen(q, k, v, bias, kv_len):
     """Variant with a per-batch valid key length (serving verify path):
     keys at s >= kv_len[b] are masked out on top of `bias`.

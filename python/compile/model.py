@@ -388,6 +388,162 @@ def zero_kv_paged(cfg: TargetConfig, num_blocks, block_size):
 
 
 # ---------------------------------------------------------------------------
+# In-place paged serving (device-resident decode; lowered by default)
+# ---------------------------------------------------------------------------
+#
+# The gather-dense twins above materialize the WHOLE pool into the per-slot
+# dense layout around every verify — two full-pool data movements per step
+# that exist only to reuse `_chunk_forward`. The in-place twins below never
+# densify: the chunk's K/V is scattered directly into the pool at
+# (block_table[b, pos // BS], pos % BS), and attention runs through
+# `kernels.paged_attention` — each (batch, head) program gathers exactly its
+# own table's blocks (vLLM PagedAttention proper). Logits are BITWISE equal
+# to the gather path's (the kernel computes the score rows over byte-equal
+# gathered keys in sdpa's reduction order; pinned by
+# tests/test_paged_kernel.py), and the new pool differs from the gather
+# path's only in the reserved null block 0 (the gather path rewrites every
+# covered block including null-mapped garbage; in-place writes only real
+# chunk positions) — bytes no reachable logical view ever exposes.
+
+def _chunk_forward_paged(params, cfg: TargetConfig, tokens, start, pool,
+                         block_table, key_limit, pos_offsets=None,
+                         chunk_mask=None):
+    """`_chunk_forward` addressed through a block table: identical mask/RoPE
+    construction over the logical view S = M*BS, chunk K/V scattered into
+    pool blocks in place, attention via the Pallas paged kernel.
+
+    tokens [B,T] int32; start [B] int32; pool [L,2,NB,BS,H,Dh];
+    block_table [B,M] int32; key_limit/pos_offsets/chunk_mask as in
+    `_chunk_forward`. Returns (features [B,T,3d], logits [B,T,V], new_pool).
+    """
+    from .kernels.paged_attention import paged_attention
+
+    H, Dh = cfg.n_heads, cfg.head_dim
+    B, T = tokens.shape
+    BS = pool.shape[3]
+    M = block_table.shape[1]
+    S = M * BS  # logical view length (S_MAX for the serving configs)
+    x = params["embed"][tokens]
+    offs = (jnp.arange(T, dtype=jnp.int32) if pos_offsets is None
+            else jnp.asarray(pos_offsets, jnp.int32))
+    positions = start[:, None] + (offs if offs.ndim == 2 else offs[None, :])
+
+    key_pos = jnp.arange(S, dtype=jnp.int32)
+    allow = key_pos[None, None, :] < key_limit[:, :, None]
+    if chunk_mask is not None:
+        q_rel = key_pos[None, :] - start[:, None]              # [B, S]
+        in_chunk = (q_rel >= 0) & (q_rel < T)
+        q_clip = jnp.clip(q_rel, 0, T - 1)
+        if chunk_mask.ndim == 3:
+            gathered = jnp.take_along_axis(
+                chunk_mask, jnp.broadcast_to(q_clip[:, None, :], (B, T, S)),
+                axis=2)
+            allow = allow | (gathered & in_chunk[:, None, :])
+        else:
+            gathered = chunk_mask[:, q_clip]                   # [T, B, S]
+            allow = allow | (jnp.transpose(gathered, (1, 0, 2)) & in_chunk[:, None, :])
+    bias = mask_to_bias(allow)[:, None]
+
+    # chunk slot j lives at logical start + j -> pool (table[pos//BS], pos%BS)
+    # (the same addressing `paged_scatter` uses, restricted to the chunk).
+    # Collisions only happen in the null block 0 (inactive rows share it and
+    # write identical PAD-chunk values), so the scatter order is immaterial.
+    pos = start[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]  # [B, T]
+    bid = jnp.take_along_axis(block_table, pos // BS, axis=1)       # [B, T]
+    off = pos % BS
+
+    taps = {i: None for i in cfg.feature_layers}
+    new_kv = []
+    for li, blk in enumerate(params["blocks"]):
+        h = rms_norm(x, blk["ln1"], cfg.norm_eps)
+        q = (h @ blk["wq"]).reshape(B, T, H, Dh)
+        k = (h @ blk["wk"]).reshape(B, T, H, Dh)
+        v = (h @ blk["wv"]).reshape(B, T, H, Dh)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+        k_pool = pool[li, 0].at[bid, off].set(k)   # [NB, BS, H, Dh]
+        v_pool = pool[li, 1].at[bid, off].set(v)
+        new_kv.append(jnp.stack([k_pool, v_pool]))
+
+        a = paged_attention(
+            q.transpose(0, 2, 1, 3), k_pool, v_pool, block_table, bias)
+        a = a.transpose(0, 2, 1, 3).reshape(B, T, cfg.d_model)
+        x = x + a @ blk["wo"]
+        h2 = rms_norm(x, blk["ln2"], cfg.norm_eps)
+        x = x + swiglu(h2, blk["w_gate"], blk["w_up"], blk["w_down"])
+        if li in taps:
+            taps[li] = x
+
+    feats = jnp.concatenate([taps[i] for i in cfg.feature_layers], axis=-1)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return feats, logits, jnp.stack(new_kv)
+
+
+def verify_paged_inplace(params, cfg: TargetConfig, chunk, cache_len,
+                         block_table, pool):
+    """In-place twin of `verify_paged`: same signature, no densification."""
+    B, T = chunk.shape
+    key_limit = (cache_len[:, None]
+                 + jnp.arange(1, T + 1, dtype=jnp.int32)[None, :])
+    feats, logits, new_pool = _chunk_forward_paged(
+        params, cfg, chunk, cache_len, pool, block_table, key_limit)
+    return logits, feats, new_pool
+
+
+def verify_tree_paged_inplace(params, cfg: TargetConfig, chunk, cache_len,
+                              block_table, pool, tree_mask, depths):
+    """In-place twin of `verify_tree_paged` (same mask/depth semantics)."""
+    B, T = chunk.shape
+    key_limit = jnp.broadcast_to(cache_len[:, None], (B, T))
+    feats, logits, new_pool = _chunk_forward_paged(
+        params, cfg, chunk, cache_len, pool, block_table, key_limit,
+        pos_offsets=depths, chunk_mask=tree_mask != 0)
+    return logits, feats, new_pool
+
+
+def verify_tree_dyn_paged_inplace(params, cfg: TargetConfig, chunk, cache_len,
+                                  block_table, pool, tree_mask,
+                                  depth_offsets):
+    """In-place twin of `verify_tree_dyn_paged` (same mask/depth semantics).
+
+    The envelope scatter's inactive tail still lands through the table — for
+    positions past the slot's coverage that is the reserved null block, same
+    as `paged_scatter`'s argument."""
+    B, T = chunk.shape
+    key_limit = jnp.broadcast_to(cache_len[:, None], (B, T))
+    feats, logits, new_pool = _chunk_forward_paged(
+        params, cfg, chunk, cache_len, pool, block_table, key_limit,
+        pos_offsets=depth_offsets, chunk_mask=tree_mask != 0)
+    return logits, feats, new_pool
+
+
+def commit_path_paged(plan, pool):
+    """On-device accepted-path commit: apply block-mapped position copies to
+    the pool without a host round trip.
+
+    plan: [R, 4] int32 rows (src_block, src_off, dst_block, dst_off) — the
+    PHYSICAL addresses of `plan_path_commit`'s copies, mapped through each
+    slot's block table by the engine (rust/src/runtime/kv_blocks.rs
+    `physical_copy_rows`); padding rows are (0, 0, 0, 0), an inert null-block
+    self-copy. pool: [L,2,NB,BS,H,Dh]. Returns the committed pool.
+
+    All sources are gathered from the INPUT pool before any write lands, so
+    the result equals applying the copies sequentially (the host
+    `apply_path_copies` semantics): within one slot, copy m's destination
+    `base + m` is strictly below every later source `base + node` (node > m),
+    and across slots the touched blocks are disjoint — no source is ever
+    clobbered by an earlier destination, making gather-then-scatter and
+    sequential application identical. Distinct real rows write distinct
+    (block, offset) cells; padding rows all rewrite null cell (0, 0) with its
+    own original value.
+    """
+    src = pool[:, :, plan[:, 0], plan[:, 1]]          # [L, 2, R, H, Dh]
+    return pool.at[:, :, plan[:, 2], plan[:, 3]].set(src)
+
+
+# ---------------------------------------------------------------------------
 # Feature extraction for drafter training (full-sequence, no cache)
 # ---------------------------------------------------------------------------
 

@@ -23,7 +23,9 @@ CONFIG_KEYS = ["shape", "cache", "drafter", "policy", "load", "concurrency",
 METRIC_KEYS = ["requests_finished", "tokens_emitted", "iterations",
                "acceptance_length", "mean_occupancy", "mean_block_occupancy",
                "blocks_peak", "admissions_blocked", "mean_active_nodes",
-               "per_policy"]
+               "downloads_per_step", "uploads_per_step", "download_bytes",
+               "upload_bytes", "kv_downloads", "kv_uploads",
+               "device_path_commits", "per_policy"]
 TIMING_KEYS = ["otps", "ttft_p50_us", "ttft_p99_us", "tpot_p50_us",
                "tpot_p99_us", "latency_p50_us", "latency_p99_us", "wall_ms"]
 
@@ -41,13 +43,14 @@ def test_trajectory_files_exist():
     names = {p.name for p in BENCH_FILES}
     assert "BENCH_6.json" in names
     assert "BENCH_8.json" in names
+    assert "BENCH_9.json" in names
     assert "BENCH_baseline.json" in names
 
 
 @pytest.mark.parametrize("path", BENCH_FILES, ids=lambda p: p.name)
 def test_schema_valid(path):
     r = json.loads(path.read_text())
-    assert r["schema_version"] == 1
+    assert r["schema_version"] == 2
     assert list(r.keys()) == REPORT_KEYS
     assert r["suite"] in ("smoke", "full")
     ids = set()
@@ -111,7 +114,7 @@ def test_baseline_and_current_compare_cleanly():
     trajectory's (the comparator treats a missing cell as a regression —
     CI's blocking compare should start clean)."""
     base = json.loads((REPO / "BENCH_baseline.json").read_text())
-    cur = json.loads((REPO / "BENCH_8.json").read_text())
+    cur = json.loads((REPO / "BENCH_9.json").read_text())
     base_ids = {c["id"] for c in base["cells"]}
     cur_ids = {c["id"] for c in cur["cells"]}
     assert base_ids <= cur_ids

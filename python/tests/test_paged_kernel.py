@@ -1,0 +1,312 @@
+"""In-place paged attention: bitwise parity against the gather-dense path.
+
+ISSUE 9's tentpole contract: the Pallas paged-attention kernel attends the
+block pool *in place* through the block table — no `paged_gather`
+densification — and the `*_inplace` verify twins lowered on it must produce
+BITWISE-equal logits/feats to the legacy gather twins on the same logical
+cache state, across chain / static-tree / dynamic-tree speculation. That
+equality is what lets aot.py swap the lowered path under the same executable
+names with zero Rust-side changes, and what licenses the engine's
+device-commit byte-parity integration test.
+
+Pool-parity caveat: the in-place scatter only writes chunk positions, while
+the gather path rewrites every covered block; the two output pools agree on
+all table-addressed blocks and may differ only in the reserved null block 0
+(inactive-row garbage, never attended).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import (
+    COMMIT_PLAN_ROWS, KV_BLOCK_SIZE, S_MAX, TARGETS, kv_blocks_per_slot,
+    num_kv_blocks,
+)
+from compile.kernels.paged_attention import paged_attention
+from compile.kernels.ref import ref_paged_attention
+from compile.masks import paged_logical_view, tree_ancestor_mask, tree_depths
+from compile.model import (
+    commit_path_paged, init_target, paged_scatter, prefill, verify_paged,
+    verify_paged_inplace, verify_tree_dyn_paged, verify_tree_dyn_paged_inplace,
+    verify_tree_paged, verify_tree_paged_inplace, zero_kv, zero_kv_paged,
+)
+
+M = kv_blocks_per_slot()
+BS = KV_BLOCK_SIZE
+
+
+@pytest.fixture(scope="module")
+def tm():
+    cfg = TARGETS["target-m"]
+    params = init_target(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def toks(rng, shape):
+    return jnp.asarray(rng.integers(4, 250, size=shape), jnp.int32)
+
+
+def fresh_table(batch, rng=None, shuffle=False):
+    ids = np.arange(1, batch * M + 1)
+    if shuffle:
+        ids = rng.permutation(ids)
+    return jnp.asarray(ids.reshape(batch, M), jnp.int32)
+
+
+def pool_from_dense(cfg, dense, table):
+    pool = zero_kv_paged(cfg, num_kv_blocks(dense.shape[2]), KV_BLOCK_SIZE)
+    return paged_scatter(pool, table, dense)
+
+
+def prefilled(cfg, params, rng, batch=1, plen=14, same_prompt=False):
+    prompt = np.zeros((batch, 24), np.int32)
+    row = np.asarray(toks(rng, (1, plen)))
+    for i in range(batch):
+        prompt[i, :plen] = row if same_prompt else np.asarray(
+            toks(rng, (1, plen)))
+    kv = zero_kv(cfg, batch)
+    _, _, kv = prefill(params, cfg, jnp.asarray(prompt),
+                       jnp.asarray([plen] * batch, jnp.int32), kv)
+    return kv, plen
+
+
+# ---------------------------------------------------------------------------
+# kernel vs numpy oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batch,t", [(1, 6), (2, 8), (4, 9)])
+def test_kernel_matches_ref(tm, batch, t):
+    cfg, _ = tm
+    rng = np.random.default_rng(10 + batch)
+    nb = num_kv_blocks(batch)
+    table = fresh_table(batch, rng, shuffle=True)
+    q = jnp.asarray(rng.normal(size=(batch, cfg.n_heads, t, cfg.head_dim)),
+                    jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nb, BS, cfg.n_heads, cfg.head_dim)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nb, BS, cfg.n_heads, cfg.head_dim)),
+                     jnp.float32)
+    # causal-ish random additive bias with some -inf structure
+    bias = np.where(rng.random((batch, 1, t, M * BS)) < 0.3, -1e9, 0.0)
+    bias = jnp.asarray(bias, jnp.float32)
+    out = paged_attention(q, kp, vp, table, bias)
+    ref = ref_paged_attention(q, kp, vp, table, bias)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_kernel_matches_ref_shared_bias(tm):
+    """[1,1,T,S] bias broadcasts across the batch identically."""
+    cfg, _ = tm
+    rng = np.random.default_rng(20)
+    nb = num_kv_blocks(2)
+    table = fresh_table(2, rng, shuffle=True)
+    q = jnp.asarray(rng.normal(size=(2, cfg.n_heads, 7, cfg.head_dim)),
+                    jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nb, BS, cfg.n_heads, cfg.head_dim)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nb, BS, cfg.n_heads, cfg.head_dim)),
+                     jnp.float32)
+    bias = jnp.asarray(
+        np.where(rng.random((1, 1, 7, M * BS)) < 0.3, -1e9, 0.0), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(paged_attention(q, kp, vp, table, bias)),
+        np.asarray(ref_paged_attention(q, kp, vp, table, bias)))
+
+
+# ---------------------------------------------------------------------------
+# in-place verify twins vs gather twins (bitwise)
+# ---------------------------------------------------------------------------
+
+def test_verify_inplace_matches_gather_chain(tm):
+    cfg, p = tm
+    rng = np.random.default_rng(2)
+    kv, plen = prefilled(cfg, p, rng, batch=2)
+    table = fresh_table(2, rng, shuffle=True)
+    pool = pool_from_dense(cfg, kv, table)
+    chunk = toks(rng, (2, 6))
+    clen = jnp.asarray([plen, plen], jnp.int32)
+
+    l_g, f_g, pool_g = verify_paged(p, cfg, chunk, clen, table, pool)
+    l_i, f_i, pool_i = verify_paged_inplace(p, cfg, chunk, clen, table, pool)
+
+    np.testing.assert_array_equal(np.asarray(l_i), np.asarray(l_g))
+    np.testing.assert_array_equal(np.asarray(f_i), np.asarray(f_g))
+    # pools agree on every table-addressed block (null block 0 exempt)
+    np.testing.assert_array_equal(
+        np.asarray(pool_i)[:, :, 1:], np.asarray(pool_g)[:, :, 1:])
+
+
+def test_verify_inplace_matches_gather_tree(tm):
+    cfg, p = tm
+    rng = np.random.default_rng(3)
+    kv, plen = prefilled(cfg, p, rng)
+    table = fresh_table(1, rng, shuffle=True)
+    pool = pool_from_dense(cfg, kv, table)
+    widths = [3, 2, 1]
+    n = sum(widths)
+    chunk = toks(rng, (1, n + 1))
+    clen = jnp.asarray([plen], jnp.int32)
+    mask = jnp.asarray(tree_ancestor_mask(widths), jnp.int32)
+    depths = tuple(tree_depths(widths))
+
+    l_g, f_g, pool_g = verify_tree_paged(p, cfg, chunk, clen, table, pool,
+                                         mask, depths)
+    l_i, f_i, pool_i = verify_tree_paged_inplace(p, cfg, chunk, clen, table,
+                                                 pool, mask, depths)
+
+    np.testing.assert_array_equal(np.asarray(l_i), np.asarray(l_g))
+    np.testing.assert_array_equal(np.asarray(f_i), np.asarray(f_g))
+    np.testing.assert_array_equal(
+        np.asarray(pool_i)[:, :, 1:], np.asarray(pool_g)[:, :, 1:])
+
+
+def test_verify_inplace_matches_gather_dyn(tm):
+    """Dynamic-tree twin: per-batch runtime mask + depth offsets, rows with
+    different active-node subsets (row 1's tail is disabled)."""
+    cfg, p = tm
+    rng = np.random.default_rng(4)
+    kv, plen = prefilled(cfg, p, rng, batch=2)
+    table = fresh_table(2, rng, shuffle=True)
+    pool = pool_from_dense(cfg, kv, table)
+    widths = [3, 2, 1]
+    n = sum(widths)
+    chunk = toks(rng, (2, n + 1))
+    clen = jnp.asarray([plen, plen], jnp.int32)
+    base = np.asarray(tree_ancestor_mask(widths), np.int32)
+    depths = np.asarray(tree_depths(widths), np.int32)
+    mask = np.stack([base, base])
+    mask[1, n:, :] = 0
+    mask[1, :, n:] = 0
+    mask[1, n, n] = 1          # keep the disabled node self-visible
+    doffs = np.stack([depths, depths]).astype(np.int32)
+    tmask = jnp.asarray(mask, jnp.int32)
+    offs = jnp.asarray(doffs, jnp.int32)
+
+    l_g, f_g, pool_g = verify_tree_dyn_paged(p, cfg, chunk, clen, table, pool,
+                                             tmask, offs)
+    l_i, f_i, pool_i = verify_tree_dyn_paged_inplace(
+        p, cfg, chunk, clen, table, pool, tmask, offs)
+
+    np.testing.assert_array_equal(np.asarray(l_i), np.asarray(l_g))
+    np.testing.assert_array_equal(np.asarray(f_i), np.asarray(f_g))
+    np.testing.assert_array_equal(
+        np.asarray(pool_i)[:, :, 1:], np.asarray(pool_g)[:, :, 1:])
+
+
+def test_multistep_decode_parity_inplace(tm):
+    """Thread the pool through several greedy steps: the in-place and gather
+    paths must pick identical argmax tokens at every step."""
+    cfg, p = tm
+    rng = np.random.default_rng(5)
+    kv, plen = prefilled(cfg, p, rng)
+    table = fresh_table(1, rng, shuffle=True)
+    pool_g = pool_from_dense(cfg, kv, table)
+    pool_i = pool_g
+    k = 3
+    clen_v, tok_g, tok_i = plen, 5, 5
+    for step in range(4):
+        chunk = np.full((1, k + 1), 4 + step, np.int32)
+        clen = jnp.asarray([clen_v], jnp.int32)
+        chunk[0, 0] = tok_g
+        lg, _, pool_g = verify_paged(p, cfg, jnp.asarray(chunk), clen, table,
+                                     pool_g)
+        chunk[0, 0] = tok_i
+        li, _, pool_i = verify_paged_inplace(p, cfg, jnp.asarray(chunk), clen,
+                                             table, pool_i)
+        np.testing.assert_array_equal(np.asarray(li), np.asarray(lg))
+        tok_g = int(np.argmax(np.asarray(lg)[0, 0]))
+        tok_i = int(np.argmax(np.asarray(li)[0, 0]))
+        assert tok_g == tok_i, f"step {step}: {tok_g} != {tok_i}"
+        clen_v += 1
+
+
+def test_inplace_preserves_cow_shared_prefix_blocks(tm):
+    """Prefix-cache COW sharing: two rows share a fully committed prefix
+    block; the in-place scatter writes only chunk positions, so the shared
+    block's bytes must be untouched — that is what makes in-place verify safe
+    over COW-shared tables without copy-up. (The gather path would rewrite
+    the shared block, which is why the engine copies-up before dense
+    scatter.) Both rows carry the same prompt, so logits must match the
+    exclusive-table baseline bitwise."""
+    cfg, p = tm
+    rng = np.random.default_rng(6)
+    plen = BS  # exactly one fully committed block — shareable
+    kv, _ = prefilled(cfg, p, rng, batch=2, plen=plen, same_prompt=True)
+    excl = fresh_table(2)
+    pool = pool_from_dense(cfg, kv, excl)
+    # row 1's first (prefix) block aliases row 0's; chunk lands in block 1
+    shared = np.asarray(excl).copy()
+    shared[1, 0] = shared[0, 0]
+    shared = jnp.asarray(shared, jnp.int32)
+    chunk = toks(rng, (2, 6))
+    chunk = jnp.asarray(np.stack([np.asarray(chunk)[0]] * 2), jnp.int32)
+    clen = jnp.asarray([plen, plen], jnp.int32)
+
+    l_ref, _, _ = verify_paged_inplace(p, cfg, chunk, clen, excl, pool)
+    l_cow, _, pool_cow = verify_paged_inplace(p, cfg, chunk, clen, shared,
+                                              pool)
+
+    np.testing.assert_array_equal(np.asarray(l_cow), np.asarray(l_ref))
+    sb = int(np.asarray(shared)[0, 0])
+    np.testing.assert_array_equal(
+        np.asarray(pool_cow)[:, :, sb], np.asarray(pool)[:, :, sb])
+
+
+def test_logical_view_parity_after_inplace(tm):
+    """The in-place written-back pool holds the same logical cache as the
+    gather path everywhere the cache is valid."""
+    cfg, p = tm
+    rng = np.random.default_rng(7)
+    kv, plen = prefilled(cfg, p, rng, batch=2)
+    table = fresh_table(2, rng, shuffle=True)
+    pool = pool_from_dense(cfg, kv, table)
+    chunk = toks(rng, (2, 6))
+    clen = jnp.asarray([plen, plen], jnp.int32)
+    _, _, pool_g = verify_paged(p, cfg, chunk, clen, table, pool)
+    _, _, pool_i = verify_paged_inplace(p, cfg, chunk, clen, table, pool)
+    np.testing.assert_array_equal(
+        paged_logical_view(pool_i, table)[:, :, :, :plen + 6],
+        paged_logical_view(pool_g, table)[:, :, :, :plen + 6])
+
+
+# ---------------------------------------------------------------------------
+# device commit executable
+# ---------------------------------------------------------------------------
+
+def test_commit_path_paged_matches_sequential_copies(tm):
+    """The single gather-then-scatter must equal applying the plan rows one
+    by one (the host `apply_path_copies` semantics): `plan_path_commit`
+    plans are ascending with src > dst within a slot, so no source row is
+    clobbered before it is read."""
+    cfg, _ = tm
+    rng = np.random.default_rng(8)
+    nb = num_kv_blocks(2)
+    pool = np.asarray(rng.normal(
+        size=(cfg.n_layers, 2, nb, BS, cfg.n_heads, cfg.head_dim)),
+        np.float32)
+    # a non-aligned accepted path: pull logical rows base+{2,4,5} down to
+    # base+{1,2,3} inside block 3, plus a cross-block move 5->4
+    plan = np.zeros((COMMIT_PLAN_ROWS, 4), np.int32)
+    plan[:4] = [[3, 2, 3, 1], [3, 4, 3, 2], [3, 5, 3, 3], [5, 0, 4, 15]]
+
+    ref = pool.copy()
+    for sb, so, db, do in plan[:4]:
+        ref[:, :, db, do] = ref[:, :, sb, so]
+    # padding rows are inert null self-copies — block 0 copies onto itself
+
+    out = np.asarray(commit_path_paged(jnp.asarray(plan), jnp.asarray(pool)))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_commit_path_paged_all_padding_is_identity(tm):
+    cfg, _ = tm
+    rng = np.random.default_rng(9)
+    nb = num_kv_blocks(1)
+    pool = np.asarray(rng.normal(
+        size=(cfg.n_layers, 2, nb, BS, cfg.n_heads, cfg.head_dim)),
+        np.float32)
+    plan = np.zeros((COMMIT_PLAN_ROWS, 4), np.int32)
+    out = np.asarray(commit_path_paged(jnp.asarray(plan), jnp.asarray(pool)))
+    np.testing.assert_array_equal(out, pool)

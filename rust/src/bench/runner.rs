@@ -170,6 +170,13 @@ fn cell_record(
             blocks_peak: m.blocks_peak,
             admissions_blocked: m.admissions_blocked,
             mean_active_nodes: m.mean_active_nodes(),
+            downloads_per_step: m.downloads_per_step(),
+            uploads_per_step: m.uploads_per_step(),
+            download_bytes: m.download_bytes as usize,
+            upload_bytes: m.upload_bytes as usize,
+            kv_downloads: m.kv_downloads as usize,
+            kv_uploads: m.kv_uploads as usize,
+            device_path_commits: m.device_path_commits,
             per_policy: m
                 .per_policy
                 .iter()

@@ -21,7 +21,12 @@ use crate::util::json::Json;
 /// Bump when a field is added/renamed/retyped. The parser REJECTS other
 /// versions — a trajectory file is an interchange format, not a best-effort
 /// guess.
-pub const SCHEMA_VERSION: usize = 1;
+///
+/// v2: host-transfer accounting columns in `metrics` (`downloads_per_step`,
+/// `uploads_per_step`, `download_bytes`, `upload_bytes`, `kv_downloads`,
+/// `kv_uploads`, `device_path_commits`) — the device-resident-decode
+/// trajectory: steady-state paged cells must hold `kv_downloads` at 0.
+pub const SCHEMA_VERSION: usize = 2;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct BenchReport {
@@ -107,6 +112,20 @@ pub struct CellMetrics {
     pub admissions_blocked: usize,
     /// tree/dyn cells only (0.0 in chain mode)
     pub mean_active_nodes: f64,
+    /// host→device/device→host transfer counts per decode step (runtime
+    /// boundary accounting): deterministic for closed-loop cells — the
+    /// count is a function of the step sequence, not the wall clock
+    pub downloads_per_step: f64,
+    pub uploads_per_step: f64,
+    /// total boundary traffic over the cell (bytes, exact)
+    pub download_bytes: usize,
+    pub upload_bytes: usize,
+    /// engine KV-state round trips during decode steps — the
+    /// device-resident-decode headline: 0 for steady-state paged cells
+    pub kv_downloads: usize,
+    pub kv_uploads: usize,
+    /// accepted-path commits executed on device (`commit-path-paged`)
+    pub device_path_commits: usize,
     /// per-drafter breakdown (singleton for these single-drafter cells, but
     /// the schema carries the full map so multi-drafter cells can join later)
     pub per_policy: Vec<PolicyCell>,
@@ -287,6 +306,13 @@ impl CellMetrics {
             ("blocks_peak", Json::num(self.blocks_peak as f64)),
             ("admissions_blocked", Json::num(self.admissions_blocked as f64)),
             ("mean_active_nodes", Json::num(self.mean_active_nodes)),
+            ("downloads_per_step", Json::num(self.downloads_per_step)),
+            ("uploads_per_step", Json::num(self.uploads_per_step)),
+            ("download_bytes", Json::num(self.download_bytes as f64)),
+            ("upload_bytes", Json::num(self.upload_bytes as f64)),
+            ("kv_downloads", Json::num(self.kv_downloads as f64)),
+            ("kv_uploads", Json::num(self.kv_uploads as f64)),
+            ("device_path_commits", Json::num(self.device_path_commits as f64)),
             (
                 "per_policy",
                 Json::Arr(
@@ -329,6 +355,13 @@ impl CellMetrics {
             blocks_peak: int(j, "blocks_peak")?,
             admissions_blocked: int(j, "admissions_blocked")?,
             mean_active_nodes: float(j, "mean_active_nodes")?,
+            downloads_per_step: float(j, "downloads_per_step")?,
+            uploads_per_step: float(j, "uploads_per_step")?,
+            download_bytes: int(j, "download_bytes")?,
+            upload_bytes: int(j, "upload_bytes")?,
+            kv_downloads: int(j, "kv_downloads")?,
+            kv_uploads: int(j, "kv_uploads")?,
+            device_path_commits: int(j, "device_path_commits")?,
             per_policy,
         })
     }
@@ -438,6 +471,13 @@ mod tests {
                         blocks_peak: 0,
                         admissions_blocked: 0,
                         mean_active_nodes: 0.0,
+                        downloads_per_step: 2.5,
+                        uploads_per_step: 4.0,
+                        download_bytes: 1048576,
+                        upload_bytes: 2097152,
+                        kv_downloads: 64,
+                        kv_uploads: 64,
+                        device_path_commits: 0,
                         per_policy: vec![PolicyCell {
                             drafter: "target-m-pe4".into(),
                             iterations: 64,
@@ -474,6 +514,7 @@ mod tests {
                         mean_block_occupancy: 0.4,
                         blocks_peak: 12,
                         mean_active_nodes: 8.0,
+                        device_path_commits: 9,
                         per_policy: vec![],
                         ..CellMetrics::default()
                     },
@@ -504,7 +545,7 @@ mod tests {
     #[test]
     fn rejects_wrong_version() {
         let mut s = sample_report().to_file_string();
-        s = s.replace("\"schema_version\": 1", "\"schema_version\": 99");
+        s = s.replace("\"schema_version\": 2", "\"schema_version\": 99");
         let e = BenchReport::parse(&s).unwrap_err();
         assert!(e.contains("schema_version 99"), "{e}");
     }

@@ -87,6 +87,16 @@ pub struct Manifest {
     /// token operand width of the `prefill-cached` executables (python
     /// `configs.PREFIX_TAIL_PAD`; 32 when the manifest predates them)
     pub prefix_tail_pad: usize,
+    /// Whether the paged verify families were lowered on the in-place
+    /// Pallas paged-attention kernel (aot.py default) rather than the legacy
+    /// `paged_gather` densification (`PEAGLE_PAGED_GATHER=1`). Informational
+    /// for reporting — both lowerings are bitwise-equal and share names.
+    /// False when the manifest predates the capability.
+    pub paged_inplace: bool,
+    /// Plan-operand row count of the `commit-path-paged` executables
+    /// (python `configs.COMMIT_PLAN_ROWS`; 0 when the manifest predates
+    /// device commit — the engine then falls back to host copies).
+    pub commit_plan_rows: usize,
     pub prompt_pad: usize,
     pub ctx_window: usize,
     pub pad_id: i32,
@@ -218,6 +228,8 @@ impl Manifest {
             s_max: v.usize_of("s_max"),
             kv_block_size: v.get("kv_block_size").and_then(|x| x.as_usize()).unwrap_or(16),
             prefix_tail_pad: v.get("prefix_tail_pad").and_then(|x| x.as_usize()).unwrap_or(32),
+            paged_inplace: v.get("paged_inplace").and_then(|x| x.as_bool()).unwrap_or(false),
+            commit_plan_rows: v.get("commit_plan_rows").and_then(|x| x.as_usize()).unwrap_or(0),
             prompt_pad: v.usize_of("prompt_pad"),
             ctx_window: v.usize_of("ctx_window"),
             pad_id: v.usize_of("pad_id") as i32,

@@ -76,8 +76,8 @@ use crate::masking::dynamic::{
 use crate::masking::{DynamicTreeConfig, TreeMask, TreeTopology};
 use crate::runtime::{
     apply_path_copies, compact_kv_path, copy_pool_block, gather_kv_row_blocks,
-    plan_path_commit, splice_kv_row, splice_kv_row_blocks_range, DraftExec, HostTensor,
-    ModelRuntime, TargetExec,
+    physical_copy_rows, plan_path_commit, splice_kv_row, splice_kv_row_blocks_range,
+    DraftExec, HostTensor, ModelRuntime, TargetExec,
 };
 use crate::util::rng::Rng;
 
@@ -142,6 +142,22 @@ pub fn tree_dyn_from_env() -> Option<DynamicTreeConfig> {
 /// use the default policy, which must stay byte-identical.
 pub fn multi_drafter_from_env() -> bool {
     std::env::var("PEAGLE_MULTI_DRAFTER").ok().as_deref() == Some("1")
+}
+
+/// `PEAGLE_DEVICE_COMMIT=1` (the CI `rust-device-commit` job) flips the test
+/// helpers / benches into paged mode, same as [`paged_from_env`] — the knob
+/// exists so a dedicated job exercises the device commit arm end to end.
+/// The engine itself needs no flag: whenever the manifest carries the
+/// `commit-path-paged` executables (`commit_plan_rows > 0`) a paged engine
+/// commits accepted paths on device and only falls back to host copies when
+/// the executable is absent or a step's combined plan overflows the lowered
+/// row budget.
+pub fn device_commit_from_env() -> Option<PagedKvConfig> {
+    if std::env::var("PEAGLE_DEVICE_COMMIT").ok().as_deref() == Some("1") {
+        Some(PagedKvConfig::default())
+    } else {
+        prefix_cache_from_env()
+    }
 }
 
 /// Engine configuration: one target, one executable width, a default
@@ -410,6 +426,11 @@ pub struct EngineCore {
     /// cache is off or the manifest predates the `prefill-cached`
     /// executables (hits then dedup memory but still pay a full prefill)
     te_cached: Option<TargetExec>,
+    /// device-side accepted-path commit over the paged pool
+    /// (`commit-path-paged`); `None` when the engine is dense or the
+    /// manifest predates device commit — non-aligned paths then fall back
+    /// to the host download/copy/upload round trip
+    te_commit: Option<TargetExec>,
     /// reusable zeroed batch-1 KV input for admission prefills (PJRT does
     /// not donate inputs, so one buffer serves every admission)
     kv1_zero: xla::PjRtBuffer,
@@ -513,6 +534,15 @@ impl EngineCore {
             Some(p) if p.prefix_cache => mr.ensure_prefill_cached(&cfg.target).ok(),
             _ => None,
         };
+        // like the tail prefill: device commit is an optimization the engine
+        // uses whenever the artifacts carry it, never a capability callers
+        // must opt into — older manifests just keep the host commit path
+        let te_commit = match cfg.paged {
+            Some(_) if mr.manifest.commit_plan_rows > 0 => {
+                mr.ensure_commit_path_paged(&cfg.target, b).ok()
+            }
+            _ => None,
+        };
         let kv1_zero = mr.zero_kv(&cfg.target, 1)?;
         let mut slots = Vec::with_capacity(b);
         slots.resize_with(b, || None);
@@ -523,6 +553,7 @@ impl EngineCore {
             allowed,
             te1,
             te_cached,
+            te_commit,
             kv1_zero,
             tail_pad: mr.manifest.prefix_tail_pad,
             fdim,
@@ -538,6 +569,20 @@ impl EngineCore {
             queue: VecDeque::new(),
             cfg,
         })
+    }
+
+    /// Drop the device commit executable: accepted-path copies then take
+    /// the host download/copy/upload fallback. The parity baseline for the
+    /// device path (integration_device_commit.rs) and a debugging escape
+    /// hatch — byte-identical output either way.
+    pub fn force_host_commit(&mut self) {
+        self.te_commit = None;
+    }
+
+    /// Whether the device commit arm is armed (paged engine + manifest
+    /// carries `commit-path-paged` at this width).
+    pub fn device_commit_armed(&self) -> bool {
+        self.te_commit.is_some()
     }
 
     /// Load a policy bucket's executables on first use (the registry caches
@@ -957,6 +1002,11 @@ impl EngineCore {
         keys.dedup();
 
         let mut emitted_now = vec![0usize; b];
+        // boundary accounting: everything the decode pass moves across the
+        // host/device boundary (chunk/table uploads, logits/feats downloads,
+        // any KV round trips) lands in the per-step transfer counters —
+        // the zero-download steady-state invariant is measured HERE
+        let transfers_before = mr.rt.transfer_snapshot();
         for key in keys {
             // lazy-load the bucket's executables on first use
             let policy = self
@@ -969,6 +1019,7 @@ impl EngineCore {
             self.ensure_group(mr, &policy)?;
             self.step_bucket(mr, &key, &mut events, &mut emitted_now)?;
         }
+        self.metrics.record_step_transfers(transfers_before, mr.rt.transfer_snapshot());
         self.metrics.record_iteration(&emitted_now);
 
         self.evict_finished(&mut events);
@@ -1267,13 +1318,18 @@ impl EngineCore {
         // --- accepted-path KV commit (tree modes, non-contiguous paths) ----
         // Applied per BUCKET, before the next bucket's verify (whose masked
         // scatter must land beyond the just-committed lengths). Dense:
-        // compact rows through one shared host round trip (compact_kv_path).
-        // Paged: NEVER calls compact_kv_path — each path gets a
-        // block-granular plan: table-entry swaps (pure pointer surgery, no
-        // pool round trip) when the path is a block-aligned uniform shift,
-        // position copies confined to the chunk's blocks otherwise; the pool
-        // round-trips through the host only when some plan actually has
-        // copies.
+        // compact all of the bucket's rows through ONE shared host round
+        // trip (compact_kv_path) — never one download per slot. Paged:
+        // NEVER calls compact_kv_path — each path gets a block-granular
+        // plan: table-entry swaps (pure pointer surgery, no pool traffic)
+        // when the path is a block-aligned uniform shift, position copies
+        // confined to the chunk's blocks otherwise. Copies run ON DEVICE
+        // through the `commit-path-paged` executable (logical copies
+        // translated through the post-swap tables into one physical
+        // gather/scatter plan — cross-slot blocks are disjoint, so the
+        // combined plan stays sequential-equivalent); the pool round-trips
+        // through the host only when the executable is absent from the
+        // manifest or the combined plan overflows its lowered row budget.
         if !to_compact.is_empty() {
             let tc = Instant::now();
             if self.slotmgr.is_paged() {
@@ -1291,18 +1347,45 @@ impl EngineCore {
                 }
                 self.metrics.paged_path_commits += to_compact.len();
                 if !copy_jobs.is_empty() {
-                    let mut host = mr.rt.download(&self.kv)?;
-                    for (slot, copies) in &copy_jobs {
-                        apply_path_copies(&mut host, self.slotmgr.table(*slot), copies)?;
+                    let plan_rows = mr.manifest.commit_plan_rows;
+                    let rows_needed: usize = copy_jobs.iter().map(|(_, c)| c.len()).sum();
+                    if self.te_commit.is_some() && rows_needed <= plan_rows {
+                        let phys = self.phys_blocks.expect("paged engine without pool size");
+                        let mut rows: Vec<i32> = Vec::with_capacity(plan_rows * 4);
+                        for (slot, copies) in &copy_jobs {
+                            physical_copy_rows(
+                                self.slotmgr.table(*slot),
+                                copies,
+                                bs,
+                                phys,
+                                &mut rows,
+                            )?;
+                        }
+                        // pad with (0,0,0,0): inert self-copies into the
+                        // reserved null block
+                        rows.resize(plan_rows * 4, 0);
+                        let plan_t = HostTensor::i32(&[plan_rows, 4], rows);
+                        let te = self.te_commit.as_ref().unwrap();
+                        self.kv = mr.commit_path_paged(te, &plan_t, &self.kv)?;
+                        self.metrics.device_path_commits += 1;
+                    } else {
+                        self.metrics.kv_downloads += 1;
+                        let mut host = mr.rt.download(&self.kv)?;
+                        for (slot, copies) in &copy_jobs {
+                            apply_path_copies(&mut host, self.slotmgr.table(*slot), copies)?;
+                        }
+                        self.metrics.kv_uploads += 1;
+                        self.kv = mr.rt.upload(&host)?;
                     }
-                    self.kv = mr.rt.upload(&host)?;
                 }
             } else {
                 self.metrics.dense_compactions += to_compact.len();
+                self.metrics.kv_downloads += 1;
                 let mut host = mr.rt.download(&self.kv)?;
                 for (slot, base, path) in &to_compact {
                     compact_kv_path(&mut host, *slot, *base, path)?;
                 }
+                self.metrics.kv_uploads += 1;
                 self.kv = mr.rt.upload(&host)?;
             }
             self.metrics.commit_time += tc.elapsed();

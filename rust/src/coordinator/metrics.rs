@@ -205,6 +205,28 @@ pub struct EngineMetrics {
     pub prefix_evictions: usize,
     /// prefix cache: peak simultaneously-shared (refcount >= 2) blocks
     pub shared_blocks_peak: usize,
+    /// host-transfer accounting, diffed from the runtime-boundary counters
+    /// ([`Runtime::transfer_snapshot`](crate::runtime::executable::Runtime))
+    /// around each decode step: every upload (tokens, tables, plans, host
+    /// args) and download (logits, feats, caches) the step performed.
+    /// `transfer_steps` counts the measured steps, so `downloads /
+    /// transfer_steps` is the per-step rate the bench suite reports.
+    pub transfer_steps: usize,
+    pub uploads: u64,
+    pub upload_bytes: u64,
+    pub downloads: u64,
+    pub download_bytes: u64,
+    /// downloads of the engine-wide KV state specifically (dense cache or
+    /// block pool) during decode steps — the commit-arm host round trips.
+    /// The device-resident decode invariant: steady-state paged decode keeps
+    /// this at ZERO (logits/feats downloads are per-verify outputs and
+    /// unavoidable; the cache itself must never leave the device).
+    pub kv_downloads: u64,
+    pub kv_uploads: u64,
+    /// paged accepted paths committed ON DEVICE via the `commit-path-paged`
+    /// executable (subset of `paged_path_commits`; the rest were host
+    /// copies or pure table rewires)
+    pub device_path_commits: usize,
     pub draft_time: Duration,
     pub verify_time: Duration,
     /// per-slot admission overhead: batch-1 prefill + KV row splice
@@ -352,6 +374,40 @@ impl EngineMetrics {
         }
     }
 
+    /// Record one decode step's host-transfer delta: `before`/`after` are
+    /// [`Runtime::transfer_snapshot`](crate::runtime::executable::Runtime)
+    /// tuples `(uploads, upload_bytes, downloads, download_bytes)` taken
+    /// around the step.
+    pub fn record_step_transfers(
+        &mut self,
+        before: (u64, u64, u64, u64),
+        after: (u64, u64, u64, u64),
+    ) {
+        self.transfer_steps += 1;
+        self.uploads += after.0 - before.0;
+        self.upload_bytes += after.1 - before.1;
+        self.downloads += after.2 - before.2;
+        self.download_bytes += after.3 - before.3;
+    }
+
+    /// Mean host downloads per measured decode step (0.0 before any step).
+    pub fn downloads_per_step(&self) -> f64 {
+        if self.transfer_steps == 0 {
+            0.0
+        } else {
+            self.downloads as f64 / self.transfer_steps as f64
+        }
+    }
+
+    /// Mean host uploads per measured decode step (0.0 before any step).
+    pub fn uploads_per_step(&self) -> f64 {
+        if self.transfer_steps == 0 {
+            0.0
+        } else {
+            self.uploads as f64 / self.transfer_steps as f64
+        }
+    }
+
     /// Mean acceptance length (accepted drafts + bonus per live iteration).
     pub fn acceptance_length(&self) -> f64 {
         let n: usize = self.al_histogram.iter().sum();
@@ -443,6 +499,14 @@ impl EngineMetrics {
         self.cow_copies += other.cow_copies;
         self.prefix_evictions += other.prefix_evictions;
         self.shared_blocks_peak = self.shared_blocks_peak.max(other.shared_blocks_peak);
+        self.transfer_steps += other.transfer_steps;
+        self.uploads += other.uploads;
+        self.upload_bytes += other.upload_bytes;
+        self.downloads += other.downloads;
+        self.download_bytes += other.download_bytes;
+        self.kv_downloads += other.kv_downloads;
+        self.kv_uploads += other.kv_uploads;
+        self.device_path_commits += other.device_path_commits;
         self.draft_time += other.draft_time;
         self.verify_time += other.verify_time;
         self.admission_time += other.admission_time;
@@ -480,6 +544,19 @@ impl EngineMetrics {
                 self.blocks_peak,
                 self.admissions_blocked,
                 self.block_rewires,
+            ));
+        }
+        if self.transfer_steps > 0 {
+            s.push_str(&format!(
+                " dl/step={:.1} dlMB={:.1} ul/step={:.1} ulMB={:.1} \
+                 kvdl={} kvul={} devcommits={}",
+                self.downloads_per_step(),
+                self.download_bytes as f64 / 1e6,
+                self.uploads_per_step(),
+                self.upload_bytes as f64 / 1e6,
+                self.kv_downloads,
+                self.kv_uploads,
+                self.device_path_commits,
             ));
         }
         if self.prefix_hits + self.prefix_misses > 0 {
@@ -646,6 +723,38 @@ mod tests {
         assert_eq!(m.block_rewires, 1);
         assert_eq!(m.paged_path_commits, 4);
         assert!(m.summary().contains("blkocc"));
+    }
+
+    #[test]
+    fn transfer_counters_record_merge_and_summarize() {
+        let m = EngineMetrics::new(2);
+        assert!(!m.summary().contains("dl/step"), "unmeasured engines stay silent");
+        assert_eq!(m.downloads_per_step(), 0.0);
+        assert_eq!(m.uploads_per_step(), 0.0);
+        let mut a = EngineMetrics::new(2);
+        // two steps: (3 ul / 1 kB, 2 dl / 2 kB) then (1 ul, 4 dl)
+        a.record_step_transfers((0, 0, 0, 0), (3, 1000, 2, 2000));
+        a.record_step_transfers((3, 1000, 2, 2000), (4, 1500, 6, 9000));
+        a.kv_downloads = 1;
+        a.kv_uploads = 1;
+        a.device_path_commits = 2;
+        assert_eq!(a.transfer_steps, 2);
+        assert_eq!(a.uploads, 4);
+        assert_eq!(a.upload_bytes, 1500);
+        assert_eq!(a.downloads, 6);
+        assert_eq!(a.download_bytes, 9000);
+        assert!((a.downloads_per_step() - 3.0).abs() < 1e-12);
+        assert!((a.uploads_per_step() - 2.0).abs() < 1e-12);
+        let mut b = EngineMetrics::new(2);
+        b.record_step_transfers((10, 0, 10, 0), (12, 100, 10, 0));
+        a.merge(&b);
+        assert_eq!(a.transfer_steps, 3);
+        assert_eq!(a.uploads, 6);
+        assert_eq!(a.downloads, 6, "zero-download steps merge as zeros");
+        let s = a.summary();
+        assert!(s.contains("dl/step=2.0"), "{s}");
+        assert!(s.contains("kvdl=1"), "{s}");
+        assert!(s.contains("devcommits=2"), "{s}");
     }
 
     #[test]

@@ -16,8 +16,8 @@ pub mod scheduler;
 pub mod server;
 
 pub use engine::{
-    multi_drafter_from_env, paged_from_env, prefix_cache_from_env, tree_dyn_from_env,
-    EngineConfig, EngineCore, EngineEvent, PagedKvConfig, StepReport,
+    device_commit_from_env, multi_drafter_from_env, paged_from_env, prefix_cache_from_env,
+    tree_dyn_from_env, EngineConfig, EngineCore, EngineEvent, PagedKvConfig, StepReport,
 };
 pub use metrics::{EngineMetrics, PolicyMetrics};
 pub use request::{

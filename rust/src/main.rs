@@ -69,7 +69,7 @@ use anyhow::{anyhow, Result};
 use p_eagle::config::Manifest;
 use p_eagle::coordinator::server::spawn;
 use p_eagle::coordinator::{
-    prefix_cache_from_env, tree_dyn_from_env, EngineConfig, EngineMetrics, PagedKvConfig,
+    device_commit_from_env, tree_dyn_from_env, EngineConfig, EngineMetrics, PagedKvConfig,
     SamplingParams, ServerEvent, SpecPolicy,
 };
 use p_eagle::masking::{DynamicTreeConfig, TreeTopology};
@@ -90,12 +90,14 @@ fn artifacts_root(args: &Args) -> String {
 /// `--prefix-cache` (or `PEAGLE_PREFIX_CACHE=1`) additionally enables the
 /// automatic prefix cache — content-addressed prompt blocks shared
 /// copy-on-write across requests — and implies `--paged`, since the cache
-/// lives in the block allocator.
+/// lives in the block allocator. `PEAGLE_DEVICE_COMMIT=1` (the CI
+/// device-commit job) also implies `--paged`; the device commit arm itself
+/// is on whenever the manifest carries the commit executables.
 fn paged_opts(args: &Args) -> Option<PagedKvConfig> {
     let kv_blocks = args
         .get("kv-blocks")
         .map(|n| n.parse().unwrap_or_else(|_| panic!("--kv-blocks expects a number")));
-    let env = prefix_cache_from_env();
+    let env = device_commit_from_env();
     let prefix = args.flag("prefix-cache") || env.is_some_and(|p| p.prefix_cache);
     let on = args.flag("paged") || kv_blocks.is_some() || prefix || env.is_some();
     on.then(|| PagedKvConfig { block_size: None, num_blocks: kv_blocks, prefix_cache: prefix })
@@ -577,6 +579,19 @@ fn bench_otps(args: &Args) -> Result<()> {
             run.metrics.prefix_evictions,
             run.metrics.shared_blocks_peak,
             run.metrics.ttft_quantile(0.5),
+        );
+    }
+    if run.metrics.transfer_steps > 0 {
+        println!(
+            "transfers: {:.1} downloads/step ({:.2} MB), {:.1} uploads/step ({:.2} MB), \
+             kv downloads {}, kv uploads {}, device commits {}",
+            run.metrics.downloads_per_step(),
+            run.metrics.download_bytes as f64 / 1e6,
+            run.metrics.uploads_per_step(),
+            run.metrics.upload_bytes as f64 / 1e6,
+            run.metrics.kv_downloads,
+            run.metrics.kv_uploads,
+            run.metrics.device_path_commits,
         );
     }
     print_policy_breakdown(&run.metrics);

@@ -7,6 +7,7 @@
 //! come back as device buffers so state can be threaded into the next call
 //! without host round-trips.
 
+use std::cell::Cell;
 use std::collections::HashMap;
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -23,6 +24,18 @@ pub struct Runtime {
     pub exec_time: Duration,
     /// time spent splitting tuple results via the host (perf-pass target)
     pub untuple_time: Duration,
+    /// Host-transfer accounting at the runtime boundary: every `upload`
+    /// (including the per-call `Arg::Host` uploads) and every `download`
+    /// bumps a counter + byte total. `Cell` because upload/download take
+    /// `&self`. The engine snapshots these around `step()` to attribute
+    /// transfers per decode step (EngineMetrics) — the zero-download
+    /// steady-state AC of the device-resident decode path is measured here,
+    /// not asserted. Internal untuple round-trips are deliberately NOT
+    /// counted: they are an xla-crate artifact, not engine-driven traffic.
+    pub uploads: Cell<u64>,
+    pub upload_bytes: Cell<u64>,
+    pub downloads: Cell<u64>,
+    pub download_bytes: Cell<u64>,
 }
 
 pub struct LoadedExec {
@@ -48,7 +61,22 @@ impl Runtime {
             exec_calls: 0,
             exec_time: Duration::ZERO,
             untuple_time: Duration::ZERO,
+            uploads: Cell::new(0),
+            upload_bytes: Cell::new(0),
+            downloads: Cell::new(0),
+            download_bytes: Cell::new(0),
         })
+    }
+
+    /// Snapshot of the transfer counters: (uploads, upload_bytes, downloads,
+    /// download_bytes). Diff two snapshots to attribute traffic to a region.
+    pub fn transfer_snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.uploads.get(),
+            self.upload_bytes.get(),
+            self.downloads.get(),
+            self.download_bytes.get(),
+        )
     }
 
     /// Load + compile an HLO text file under `name` (idempotent).
@@ -83,6 +111,8 @@ impl Runtime {
     /// path may alias the host allocation past the call under TFRT-CPU's
     /// buffer semantics, corrupting weights once the source Vec is freed.
     pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        self.uploads.set(self.uploads.get() + 1);
+        self.upload_bytes.set(self.upload_bytes.get() + 4 * t.numel() as u64);
         let lit = match &t.data {
             HostData::F32(v) => {
                 let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
@@ -168,7 +198,11 @@ impl Runtime {
     /// Download a device buffer to the host.
     pub fn download(&self, buf: &xla::PjRtBuffer) -> Result<HostTensor> {
         let lit = buf.to_literal_sync()?;
-        literal_to_host(&lit)
+        let t = literal_to_host(&lit)?;
+        self.downloads.set(self.downloads.get() + 1);
+        self.download_bytes
+            .set(self.download_bytes.get() + 4 * t.numel() as u64);
+        Ok(t)
     }
 }
 

@@ -277,6 +277,40 @@ pub fn apply_path_copies(
     Ok(())
 }
 
+/// Translate a [`PathCommitPlan`]'s LOGICAL copies into physical plan rows
+/// for the device `commit-path-paged` executable: each copy `(src, dst)`
+/// becomes one `(src_block, src_off, dst_block, dst_off)` i32 quad appended
+/// to `rows`, where `*_block` is the PHYSICAL pool block id from `table` and
+/// `*_off` the in-block offset. Same validation as [`apply_path_copies`].
+///
+/// Rows from several slots may be appended into one plan: slots own disjoint
+/// physical blocks, so the device's gather-then-scatter over the combined
+/// rows still equals applying each slot's copies sequentially. The caller
+/// zero-pads to the executable's fixed row count — `(0, 0, 0, 0)` is an
+/// inert self-copy inside the reserved null block 0.
+pub fn physical_copy_rows(
+    table: &[usize],
+    copies: &[(usize, usize)],
+    block_size: usize,
+    num_blocks: usize,
+    rows: &mut Vec<i32>,
+) -> Result<()> {
+    let bs = block_size;
+    for &(src, dst) in copies {
+        anyhow::ensure!(src > dst, "copy source {src} must lie ahead of destination {dst}");
+        anyhow::ensure!(
+            src / bs < table.len() && table[src / bs] < num_blocks && table[dst / bs] < num_blocks,
+            "copy {src}->{dst} outside the slot's {} covered blocks",
+            table.len()
+        );
+        rows.push(table[src / bs] as i32);
+        rows.push((src % bs) as i32);
+        rows.push(table[dst / bs] as i32);
+        rows.push((dst % bs) as i32);
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -456,6 +490,32 @@ mod tests {
             }
             Case::Pass
         });
+    }
+
+    #[test]
+    fn physical_rows_translate_through_the_table() {
+        // bs 4, table [3, 1]: logical 5 lives in table slot 1 -> physical
+        // block 1 offset 1; logical 3 in table slot 0 -> block 3 offset 3
+        let table = [3usize, 1];
+        let mut rows = Vec::new();
+        physical_copy_rows(&table, &[(5, 3), (7, 4)], 4, 8, &mut rows).unwrap();
+        assert_eq!(rows, vec![1, 1, 3, 3, 1, 3, 1, 0]);
+        // appending a second slot's copies extends, never rewrites
+        physical_copy_rows(&[6], &[(2, 1)], 4, 8, &mut rows).unwrap();
+        assert_eq!(rows.len(), 12);
+        assert_eq!(&rows[8..], &[6, 2, 6, 1]);
+    }
+
+    #[test]
+    fn physical_rows_reject_what_apply_rejects() {
+        let mut rows = Vec::new();
+        // backward move
+        assert!(physical_copy_rows(&[1, 2], &[(3, 5)], 4, 8, &mut rows).is_err());
+        // src beyond table coverage
+        assert!(physical_copy_rows(&[1, 2], &[(9, 2)], 4, 8, &mut rows).is_err());
+        // block id out of pool
+        assert!(physical_copy_rows(&[9], &[(2, 1)], 4, 8, &mut rows).is_err());
+        assert!(physical_copy_rows(&[1, 2], &[(5, 3)], 4, 8, &mut rows).is_ok());
     }
 
     #[test]

@@ -14,8 +14,8 @@ pub mod weights;
 
 pub use executable::{Arg, Runtime};
 pub use kv_blocks::{
-    apply_path_copies, copy_pool_block, gather_kv_row_blocks, plan_path_commit,
-    splice_kv_row_blocks, splice_kv_row_blocks_range, PathCommitPlan,
+    apply_path_copies, copy_pool_block, gather_kv_row_blocks, physical_copy_rows,
+    plan_path_commit, splice_kv_row_blocks, splice_kv_row_blocks_range, PathCommitPlan,
 };
 pub use models::{compact_kv_path, splice_kv_row, DraftExec, ModelRuntime, PolicyExecs, TargetExec};
 pub use tensors::{HostData, HostTensor};

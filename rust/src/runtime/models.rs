@@ -731,6 +731,56 @@ impl ModelRuntime {
         Ok(VerifyOut { logits, feats, kv })
     }
 
+    /// Load the device accepted-path commit executable for `target` at
+    /// `batch` (kind `commit-path-paged`). Errors when the manifest predates
+    /// device commit — callers treat that as "fall back to host copies"
+    /// (the [`ensure_prefill_cached`](Self::ensure_prefill_cached)
+    /// precedent). No weights are involved: the executable is a pure
+    /// gather/scatter over the pool driven by the uploaded plan.
+    pub fn ensure_commit_path_paged(&mut self, target: &str, batch: usize) -> Result<TargetExec> {
+        let exe = self
+            .manifest
+            .find_exec("commit-path-paged", Some(target), None, Some(batch), None)?
+            .clone();
+        self.rt.load(&exe.name, &self.manifest.abs(&exe.path))?;
+        Ok(TargetExec {
+            target: target.to_string(),
+            batch,
+            k: 0,
+            topo: None,
+            paged: true,
+            dynamic: false,
+            num_blocks: exe.num_blocks,
+        })
+    }
+
+    /// Device accepted-path commit: apply a physical copy plan to the block
+    /// pool without downloading it.
+    ///
+    /// `plan` `[COMMIT_PLAN_ROWS, 4]` i32 rows of
+    /// `(src_block, src_off, dst_block, dst_off)` — the physical-row form of
+    /// [`super::kv_blocks::PathCommitPlan`] copies (see
+    /// [`super::kv_blocks::physical_copy_rows`]); unused rows are
+    /// `(0, 0, 0, 0)`, an inert self-copy inside the reserved null block.
+    /// The lowered HLO gathers every source row before scattering
+    /// (python `model.commit_path_paged`), which matches applying the rows
+    /// sequentially because `plan_path_commit` orders copies ascending with
+    /// src > dst. Returns the new pool buffer — the only transfer is the
+    /// tiny plan upload.
+    pub fn commit_path_paged(
+        &mut self,
+        te: &TargetExec,
+        plan: &HostTensor, // [R, 4] i32
+        pool: &xla::PjRtBuffer,
+    ) -> Result<xla::PjRtBuffer> {
+        anyhow::ensure!(te.paged, "commit_path_paged called with a non-paged TargetExec");
+        let name = format!("{}-commit-path-paged-b{}", te.target, te.batch);
+        let args = [Arg::Host(plan), Arg::Buf(pool)];
+        let mut out = self.rt.call(&name, &args)?;
+        anyhow::ensure!(out.len() == 1, "{name}: expected 1 output, got {}", out.len());
+        Ok(out.remove(0))
+    }
+
     /// Scored tree draft: same inputs as [`draft`](Self::draft), returning
     /// `([B, N]` node tokens, `[B, N]` joint log-probabilities`)` — node
     /// `i`'s joint log-probability is the sum of the drafter's per-level

@@ -1,0 +1,212 @@
+//! Device-resident accepted-path commit — requires `make artifacts`.
+//!
+//! The headline property: a paged engine committing accepted paths ON
+//! DEVICE (the `commit-path-paged` executable over the block pool) is
+//! byte-identical to the same engine forced onto the host fallback
+//! (download → apply_path_copies → upload) — same tokens, same acceptance
+//! lengths, same iteration counts — for chain, static-tree, and
+//! dynamic-tree speculation.
+//!
+//! Also pinned here, via the engine's transfer accounting
+//! (EngineMetrics::kv_downloads counts engine KV-state round trips during
+//! decode steps):
+//! - steady-state paged decode performs ZERO host cache transfers — the
+//!   device-commit engine holds `kv_downloads == 0` even in tree mode,
+//!   where non-block-aligned accepted paths commit every few steps;
+//! - the dense engine's commit arm makes at most ONE cache download per
+//!   step (all of a bucket's compactions share one round trip).
+
+use p_eagle::coordinator::{
+    EngineConfig, EngineCore, EngineMetrics, PagedKvConfig, Request, RequestResult,
+    SpecPolicy,
+};
+use p_eagle::masking::{DynamicTreeConfig, TreeTopology};
+use p_eagle::runtime::ModelRuntime;
+
+fn artifacts() -> Option<String> {
+    let root = std::env::var("PEAGLE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&root).join("manifest.json").exists().then_some(root)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(r) => r,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn cfg(policy: SpecPolicy, batch: usize, max_new: usize) -> EngineConfig {
+    EngineConfig::new("target-m", policy, batch, max_new)
+        .with_seed(5)
+        .with_paged(Some(PagedKvConfig::default()))
+}
+
+fn test_prompt(mr: &ModelRuntime, seed: u64) -> Vec<i32> {
+    let regime = mr.manifest.regimes["humaneval"].clone();
+    let mut rng = p_eagle::util::rng::Rng::new(seed);
+    regime.sample_seq(16, &mut rng)
+}
+
+/// Drive a core to idle; `host_commit` forces the host fallback arm.
+fn run_core(
+    mr: &mut ModelRuntime,
+    cfg: EngineConfig,
+    host_commit: bool,
+    reqs: Vec<Request>,
+) -> (Vec<RequestResult>, EngineMetrics) {
+    let mut core = EngineCore::new(mr, cfg).unwrap();
+    if host_commit {
+        core.force_host_commit();
+    }
+    for r in reqs {
+        core.add_request(r).unwrap();
+    }
+    let mut results = Vec::new();
+    while !core.is_idle() {
+        results.extend(core.step(mr).unwrap().into_finished());
+    }
+    results.sort_by_key(|r| r.id);
+    (results, core.into_metrics())
+}
+
+/// Manifests lowered before `commit-path-paged` have no device arm to test.
+fn device_commit_available(mr: &mut ModelRuntime) -> bool {
+    let armed = EngineCore::new(mr, cfg(SpecPolicy::chain("target-m-pe4", 5), 1, 4))
+        .unwrap()
+        .device_commit_armed();
+    if !armed {
+        eprintln!("skipping: artifacts predate commit-path-paged (re-run `make artifacts`)");
+    }
+    armed
+}
+
+fn policies() -> Vec<(&'static str, SpecPolicy)> {
+    vec![
+        ("chain", SpecPolicy::chain("target-m-pe4", 5)),
+        (
+            "tree",
+            SpecPolicy::tree("target-m-pe4", TreeTopology::from_widths(&[3, 2, 1, 1, 1])),
+        ),
+        (
+            "dyn",
+            SpecPolicy::from_dynamic_config(
+                "target-m-pe4",
+                &DynamicTreeConfig::serving_default(),
+            ),
+        ),
+    ]
+}
+
+#[test]
+fn device_commit_is_byte_identical_to_host_commit() {
+    // chain / static-tree / dynamic-tree, three seeds each: the device and
+    // host commit arms must agree on every token, acceptance sum, and
+    // iteration count — and the tree modes must actually exercise the
+    // device executable somewhere in the sweep (chain paths are contiguous,
+    // so chain legitimately commits nothing).
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    if !device_commit_available(&mut mr) {
+        return;
+    }
+    let mut tree_device_commits = 0usize;
+    for (mode, policy) in policies() {
+        for seed in [201u64, 202, 203] {
+            let prompt = test_prompt(&mr, seed);
+            let reqs = || vec![Request::new(0, prompt.clone(), 32)];
+            let (host, hm) = run_core(&mut mr, cfg(policy.clone(), 1, 32), true, reqs());
+            let (dev, dm) = run_core(&mut mr, cfg(policy.clone(), 1, 32), false, reqs());
+            assert_eq!(dev[0].tokens, host[0].tokens, "{mode} tokens diverged (seed {seed})");
+            assert_eq!(
+                dev[0].accepted_sum, host[0].accepted_sum,
+                "{mode} accepted_sum diverged (seed {seed})"
+            );
+            assert_eq!(
+                dev[0].iterations, host[0].iterations,
+                "{mode} iterations diverged (seed {seed})"
+            );
+            // both arms see the same accepted paths
+            assert_eq!(dm.paged_path_commits, hm.paged_path_commits, "{mode} seed {seed}");
+            assert_eq!(hm.device_path_commits, 0, "forced-host engine used the device arm");
+            // the device engine NEVER round-trips the pool through the host
+            assert_eq!(dm.kv_downloads, 0, "{mode} device engine downloaded KV (seed {seed})");
+            assert_eq!(dm.kv_uploads, 0, "{mode} device engine uploaded KV (seed {seed})");
+            if mode != "chain" {
+                tree_device_commits += dm.device_path_commits;
+                // whenever the host arm needed a pool round trip, the device
+                // arm must have replaced it with a device commit
+                assert_eq!(
+                    dm.device_path_commits, hm.kv_downloads as usize,
+                    "{mode} device commits != host round trips (seed {seed})"
+                );
+            }
+        }
+    }
+    assert!(
+        tree_device_commits > 0,
+        "tree sweeps never hit the device commit arm — the parity check is vacuous"
+    );
+}
+
+#[test]
+fn steady_state_paged_decode_makes_zero_kv_downloads() {
+    // THE tentpole invariant: once a request is admitted, paged decode keeps
+    // the KV state device-resident — verify attends the pool in place
+    // through the block table, accepted paths commit on device. Tree mode is
+    // the hard case (non-aligned path commits every few steps) and must
+    // still hold the counter at zero across a multi-request run.
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    if !device_commit_available(&mut mr) {
+        return;
+    }
+    let tree = SpecPolicy::tree("target-m-pe4", TreeTopology::from_widths(&[3, 2, 1, 1, 1]));
+    let reqs = vec![
+        Request::new(0, test_prompt(&mr, 211), 40),
+        Request::new(1, test_prompt(&mr, 212), 40),
+    ];
+    let (results, m) = run_core(&mut mr, cfg(tree, 2, 40), false, reqs);
+    assert_eq!(results.len(), 2);
+    assert!(m.transfer_steps > 0, "run recorded no decode steps");
+    assert_eq!(m.kv_downloads, 0, "steady-state paged decode downloaded the KV pool");
+    assert_eq!(m.kv_uploads, 0, "steady-state paged decode uploaded the KV pool");
+    assert!(
+        m.paged_path_commits > 0,
+        "tree run never committed a non-contiguous path — the invariant is vacuous"
+    );
+}
+
+#[test]
+fn dense_commit_arm_downloads_at_most_once_per_step() {
+    // the dense regression pin: all of a step's compactions share ONE cache
+    // round trip (single-bucket engines — one policy — make at most one
+    // download per step, however many slots committed).
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let tree = SpecPolicy::tree("target-m-pe4", TreeTopology::from_widths(&[3, 2, 1, 1, 1]));
+    let dense = EngineConfig::new("target-m", tree, 2, 40).with_seed(5);
+    let reqs = vec![
+        Request::new(0, test_prompt(&mr, 221), 40),
+        Request::new(1, test_prompt(&mr, 222), 40),
+    ];
+    let (results, m) = run_core(&mut mr, dense, false, reqs);
+    assert_eq!(results.len(), 2);
+    assert!(m.dense_compactions > 0, "tree run never compacted — the pin is vacuous");
+    assert!(
+        m.kv_downloads <= m.transfer_steps as u64,
+        "dense commit arm downloaded the cache more than once per step \
+         ({} downloads over {} steps)",
+        m.kv_downloads,
+        m.transfer_steps
+    );
+    assert_eq!(m.kv_downloads, m.kv_uploads, "unpaired cache round trips");
+    assert!(
+        m.kv_downloads <= m.dense_compactions as u64,
+        "more downloads than compaction events — the shared round trip regressed"
+    );
+}

@@ -9,7 +9,7 @@
 //! stayed live.
 
 use p_eagle::coordinator::{
-    multi_drafter_from_env, prefix_cache_from_env, run_closed_loop, tree_dyn_from_env,
+    multi_drafter_from_env, device_commit_from_env, run_closed_loop, tree_dyn_from_env,
     EngineConfig,
     EngineCore, EngineEvent, FinishReason, Request, SamplingParams, SpecPolicy,
 };
@@ -120,7 +120,7 @@ fn engine_greedy(mr: &mut ModelRuntime, drafter: &str, prompt: &[i32], max_new: 
     let cfg = EngineConfig::new(target, default_policy(drafter, mr.manifest.default_k), 1, max_new)
         .with_policies(env_extra_policies())
         .with_seed(5)
-        .with_paged(prefix_cache_from_env());
+        .with_paged(device_commit_from_env());
     let mut given = Some(Request::new(0, prompt.to_vec(), max_new));
     let (results, _) = run_closed_loop(mr, &cfg, 1, 1, || given.take().unwrap()).unwrap();
     results.into_iter().next().unwrap().tokens
@@ -193,7 +193,7 @@ fn core_cfg(batch: usize, max_new: usize) -> EngineConfig {
     EngineConfig::new("target-m", default_policy("target-m-pe4", 5), batch, max_new)
         .with_policies(env_extra_policies())
         .with_seed(5)
-        .with_paged(prefix_cache_from_env())
+        .with_paged(device_commit_from_env())
 }
 
 fn spec(id: u64, prompt: &[i32], max_new: usize) -> Request {

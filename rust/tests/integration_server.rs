@@ -29,7 +29,7 @@ fn cfg(batch: usize, max_new: usize) -> EngineConfig {
     EngineConfig::new("target-m", default, batch, max_new)
         .with_policies(extras)
         .with_seed(1)
-        .with_paged(p_eagle::coordinator::prefix_cache_from_env())
+        .with_paged(p_eagle::coordinator::device_commit_from_env())
 }
 
 fn prompt(i: u64) -> Vec<i32> {
