@@ -12,9 +12,11 @@ import pytest
 REPO = Path(__file__).resolve().parents[2]
 BENCH_FILES = sorted(REPO.glob("BENCH_*.json"))
 
-SHAPES = {"chain", "tree", "dyn"}
+SHAPES = {"chain", "tree", "dyn", "adaptive"}
+STATIC_SHAPES = {"chain", "tree", "dyn"}
 CACHES = {"dense", "paged", "prefix"}
-LOADS = {"closed", "open"}
+LOADS = {"closed", "open", "adaptive"}
+STATIC_LOADS = {"closed", "open"}
 
 REPORT_KEYS = ["schema_version", "pr", "git_rev", "created_unix", "suite",
                "target", "dataset", "seed", "note", "cells"]
@@ -26,6 +28,7 @@ METRIC_KEYS = ["requests_finished", "tokens_emitted", "iterations",
                "downloads_per_step", "uploads_per_step", "download_bytes",
                "upload_bytes", "kv_downloads", "kv_uploads",
                "device_path_commits", "per_policy"]
+POLICY_CELL_KEYS = ["policy", "iterations", "acceptance_length"]
 TIMING_KEYS = ["otps", "ttft_p50_us", "ttft_p99_us", "tpot_p50_us",
                "tpot_p99_us", "latency_p50_us", "latency_p99_us", "wall_ms"]
 
@@ -33,9 +36,9 @@ TIMING_KEYS = ["otps", "ttft_p50_us", "ttft_p99_us", "tpot_p50_us",
 def cell_id(cfg):
     """The Rust CellConfig::id derivation (rate formatted via {:g} to match
     Rust's shortest f64 Display)."""
-    if cfg["load"] == "open":
+    if cfg["load"] in ("open", "adaptive"):
         return (f"{cfg['shape']}/{cfg['cache']}/{cfg['drafter']}"
-                f"/open-c{cfg['concurrency']}-r{cfg['rate_rps']:g}")
+                f"/{cfg['load']}-c{cfg['concurrency']}-r{cfg['rate_rps']:g}")
     return f"{cfg['shape']}/{cfg['cache']}/{cfg['drafter']}/closed-c{cfg['concurrency']}"
 
 
@@ -44,13 +47,14 @@ def test_trajectory_files_exist():
     assert "BENCH_6.json" in names
     assert "BENCH_8.json" in names
     assert "BENCH_9.json" in names
+    assert "BENCH_10.json" in names
     assert "BENCH_baseline.json" in names
 
 
 @pytest.mark.parametrize("path", BENCH_FILES, ids=lambda p: p.name)
 def test_schema_valid(path):
     r = json.loads(path.read_text())
-    assert r["schema_version"] == 2
+    assert r["schema_version"] == 3
     assert list(r.keys()) == REPORT_KEYS
     assert r["suite"] in ("smoke", "full")
     ids = set()
@@ -63,9 +67,15 @@ def test_schema_valid(path):
         assert cfg["shape"] in SHAPES
         assert cfg["cache"] in CACHES
         assert cfg["load"] in LOADS
+        # the adaptive column is coherent: shape, load, drafter, and policy
+        # all say "the controller owns this cell" together or not at all
+        assert (cfg["shape"] == "adaptive") == (cfg["load"] == "adaptive")
+        if cfg["load"] == "adaptive":
+            assert cfg["drafter"] == "auto"
+            assert cfg["policy"] == "adaptive"
         # closed-loop cells are the deterministic ones, exactly
         assert cfg["deterministic"] == (cfg["load"] == "closed")
-        assert (cfg["rate_rps"] > 0) == (cfg["load"] == "open")
+        assert (cfg["rate_rps"] > 0) == (cfg["load"] in ("open", "adaptive"))
         # stored id matches the derivation, and is unique
         assert cell["id"] == cell_id(cfg)
         assert cell["id"] not in ids
@@ -75,28 +85,34 @@ def test_schema_valid(path):
         for k in METRIC_KEYS[:-1] + TIMING_KEYS:
             v = met.get(k, tim.get(k))
             assert isinstance(v, (int, float)) and v >= 0, (cell["id"], k)
+        # per_policy rows are keyed by policy identity (v3's rename)
+        for row in met["per_policy"]:
+            assert list(row.keys()) == POLICY_CELL_KEYS
 
 
 @pytest.mark.parametrize("path", BENCH_FILES, ids=lambda p: p.name)
 def test_full_matrix_coverage(path):
-    """A 'full' trajectory covers every axis value of the matrix: all three
-    speculation shapes, every cache mode, both arrival modes, and >= 2
-    drafters (the sweep axis). The `prefix` cache column is closed-loop only
-    (suite.rs CACHES), so its planes have no open-loop member."""
+    """A 'full' trajectory covers every axis value of the static matrix: all
+    three static speculation shapes, every cache mode, both static arrival
+    modes, and >= 2 drafters (the sweep axis). The `prefix` cache column is
+    closed-loop only (suite.rs CACHES), so its planes have no open-loop
+    member. Adaptive cells are their own column (one per cache mode, no
+    prefix) and are checked separately."""
     r = json.loads(path.read_text())
     if r["suite"] != "full":
         pytest.skip("coverage contract applies to full-suite files")
-    cfgs = [c["config"] for c in r["cells"]]
-    assert {c["shape"] for c in cfgs} == SHAPES
+    cfgs = [c["config"] for c in r["cells"] if c["config"]["shape"] != "adaptive"]
+    assert {c["shape"] for c in cfgs} == STATIC_SHAPES
     caches = {c["cache"] for c in cfgs}
     assert caches <= CACHES
     # trajectories committed before a cache column existed keep validating;
     # the CURRENT trajectory (highest PR number) must cover the whole matrix
     # as defined today
     numbered = [q for q in BENCH_FILES if q.stem.split("_")[1].isdigit()]
-    if path == max(numbered, key=lambda q: int(q.stem.split("_")[1])):
+    current = path == max(numbered, key=lambda q: int(q.stem.split("_")[1]))
+    if current:
         assert caches == CACHES
-    assert {c["load"] for c in cfgs} == LOADS
+    assert {c["load"] for c in cfgs} == STATIC_LOADS
     assert len({c["drafter"] for c in cfgs}) >= 2
     # chain cells carry the chain-only AR drafter; tree/dyn cells must not
     tree_drafters = {c["drafter"] for c in cfgs if c["shape"] in ("tree", "dyn")}
@@ -104,9 +120,14 @@ def test_full_matrix_coverage(path):
     # every (shape, cache) plane appears under every load column it runs:
     # dense/paged under closed AND open, prefix under closed only
     planes = {(c["shape"], c["cache"], c["load"]) for c in cfgs}
-    expect = {(s_, c_, l_) for s_ in SHAPES for c_ in caches for l_ in LOADS
-              if not (c_ == "prefix" and l_ == "open")}
+    expect = {(s_, c_, l_) for s_ in STATIC_SHAPES for c_ in caches
+              for l_ in STATIC_LOADS if not (c_ == "prefix" and l_ == "open")}
     assert planes == expect
+    # the CURRENT trajectory carries the adaptive column: one cell per
+    # non-prefix cache mode (the controller owns drafter + shape there)
+    adaptive = [c["config"] for c in r["cells"] if c["config"]["shape"] == "adaptive"]
+    if current:
+        assert {c["cache"] for c in adaptive} == {"dense", "paged"}
 
 
 def test_baseline_and_current_compare_cleanly():
@@ -114,7 +135,7 @@ def test_baseline_and_current_compare_cleanly():
     trajectory's (the comparator treats a missing cell as a regression —
     CI's blocking compare should start clean)."""
     base = json.loads((REPO / "BENCH_baseline.json").read_text())
-    cur = json.loads((REPO / "BENCH_9.json").read_text())
+    cur = json.loads((REPO / "BENCH_10.json").read_text())
     base_ids = {c["id"] for c in base["cells"]}
     cur_ids = {c["id"] for c in cur["cells"]}
     assert base_ids <= cur_ids

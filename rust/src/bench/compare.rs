@@ -214,7 +214,11 @@ mod tests {
                           "iterations": 25, "acceptance_length": 4.0,
                           "mean_occupancy": 0.9, "mean_block_occupancy": 0,
                           "blocks_peak": 0, "admissions_blocked": 0,
-                          "mean_active_nodes": 0, "per_policy": []}},
+                          "mean_active_nodes": 0, "downloads_per_step": 0,
+                          "uploads_per_step": 0, "download_bytes": 0,
+                          "upload_bytes": 0, "kv_downloads": 0,
+                          "kv_uploads": 0, "device_path_commits": 0,
+                          "per_policy": []}},
                         "timing": {{"otps": {otps}, "ttft_p50_us": 500,
                           "ttft_p99_us": {ttft}, "tpot_p50_us": 100,
                           "tpot_p99_us": 200, "latency_p50_us": 5000,

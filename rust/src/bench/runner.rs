@@ -8,12 +8,14 @@
 //! report's `note`), and run the survivors through the same
 //! `report::bench_otps`/`bench_otps_open` entry points the CLI benches use —
 //! the trajectory measures the real serving path, not a parallel harness.
+//! The adaptive-controller column rides after the static matrix: one
+//! `bench_otps_adaptive` cell per cache mode, drafter "auto".
 
 use std::time::{SystemTime, UNIX_EPOCH};
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::coordinator::{PagedKvConfig, SamplingParams};
+use crate::coordinator::{ControllerConfig, PagedKvConfig, SamplingParams};
 use crate::masking::{DynamicTreeConfig, TreeTopology};
 use crate::report::{self, OtpsRun};
 use crate::runtime::ModelRuntime;
@@ -112,6 +114,32 @@ pub fn run_suite(mr: &mut ModelRuntime, spec: &SuiteSpec, pr: &str) -> Result<Be
             }
         }
     }
+    // the adaptive-controller column: one cell per cache mode (dense,
+    // paged), NOT per (shape, drafter) — the controller owns both choices,
+    // so the cell's drafter is "auto" and its policy is "adaptive". The
+    // prefix column is skipped: its workload (shared-prefix, closed-loop)
+    // measures prefill reuse, not speculation policy.
+    for cache in ["dense", "paged"] {
+        let paged_on = cache != "dense";
+        for load in spec.adaptive_loads() {
+            let conc = load.concurrency();
+            if report::adaptive_allowlist(mr, &spec.target, conc, k, paged_on).is_empty() {
+                skipped += 1;
+                continue;
+            }
+            let paged = paged_on.then(|| PagedKvConfig {
+                block_size: None,
+                num_blocks: spec.kv_blocks,
+                prefix_cache: false,
+            });
+            let run = report::bench_otps_adaptive(
+                mr, &spec.target, &spec.dataset, k, conc, spec.requests, spec.max_new,
+                spec.seed, false, paged, SamplingParams::greedy(), Some(load.rate_rps()),
+                ControllerConfig::default(),
+            )?;
+            cells.push(cell_record(spec, "adaptive", cache, "auto", "adaptive", load, &run));
+        }
+    }
     ensure!(
         !cells.is_empty(),
         "every matrix cell was skipped — no lowered executables for target {}",
@@ -181,7 +209,7 @@ fn cell_record(
                 .per_policy
                 .iter()
                 .map(|(name, pm)| PolicyCell {
-                    drafter: name.clone(),
+                    policy: name.clone(),
                     iterations: pm.iterations,
                     acceptance_length: pm.acceptance_length(),
                 })

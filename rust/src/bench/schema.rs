@@ -26,7 +26,14 @@ use crate::util::json::Json;
 /// `uploads_per_step`, `download_bytes`, `upload_bytes`, `kv_downloads`,
 /// `kv_uploads`, `device_path_commits`) — the device-resident-decode
 /// trajectory: steady-state paged cells must hold `kv_downloads` at 0.
-pub const SCHEMA_VERSION: usize = 2;
+///
+/// v3: the adaptive-controller column. `shape`/`load` admit "adaptive"
+/// (controller-assigned policies under open-loop arrivals; `drafter` is
+/// "auto" — no single drafter owns the cell), and `per_policy` rows are
+/// keyed by full POLICY IDENTITY (`drafter/mode:shape`) under the renamed
+/// `policy` key — an adaptive cell legitimately runs several shapes of one
+/// drafter, which drafter-keyed rows could not distinguish.
+pub const SCHEMA_VERSION: usize = 3;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct BenchReport {
@@ -60,34 +67,44 @@ pub struct CellRecord {
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct CellConfig {
-    /// speculation shape: "chain" | "tree" | "dyn"
+    /// speculation shape: "chain" | "tree" | "dyn" | "adaptive" (the
+    /// controller picks the shape per request — no static value fits)
     pub shape: String,
     /// KV cache mode: "dense" | "paged" | "prefix" (paged + automatic
     /// prefix cache on a shared-prefix workload)
     pub cache: String,
+    /// drafter name; "auto" for adaptive cells (controller-assigned)
     pub drafter: String,
-    /// full policy id (e.g. `target-m-pe4/tree:w3x2x1x1x1`)
+    /// full policy id (e.g. `target-m-pe4/tree:w3x2x1x1x1`); "adaptive"
+    /// for adaptive cells
     pub policy: String,
-    /// arrival mode: "closed" | "open"
+    /// arrival mode: "closed" | "open" | "adaptive" (open-loop Poisson
+    /// arrivals under the adaptive controller)
     pub load: String,
     pub concurrency: usize,
-    /// open-loop Poisson rate (req/s); 0.0 for closed loop
+    /// open-loop/adaptive Poisson rate (req/s); 0.0 for closed loop
     pub rate_rps: f64,
     pub requests: usize,
     pub max_new: usize,
     pub seed: u64,
     /// whether same-seed re-runs must reproduce `metrics` exactly
-    /// (closed-loop cells: yes; open-loop cells admit by wall clock: no)
+    /// (closed-loop cells: yes; open-loop/adaptive cells admit by wall
+    /// clock: no)
     pub deterministic: bool,
 }
 
 impl CellConfig {
-    /// Canonical cell id: `shape/cache/drafter/closed-cC` or
-    /// `shape/cache/drafter/open-cC-rRATE`.
+    /// Canonical cell id: `shape/cache/drafter/closed-cC`,
+    /// `shape/cache/drafter/open-cC-rRATE`, or
+    /// `adaptive/cache/auto/adaptive-cC-rRATE`.
     pub fn id(&self) -> String {
         match self.load.as_str() {
             "open" => format!(
                 "{}/{}/{}/open-c{}-r{}",
+                self.shape, self.cache, self.drafter, self.concurrency, self.rate_rps
+            ),
+            "adaptive" => format!(
+                "{}/{}/{}/adaptive-c{}-r{}",
                 self.shape, self.cache, self.drafter, self.concurrency, self.rate_rps
             ),
             _ => format!(
@@ -126,14 +143,17 @@ pub struct CellMetrics {
     pub kv_uploads: usize,
     /// accepted-path commits executed on device (`commit-path-paged`)
     pub device_path_commits: usize,
-    /// per-drafter breakdown (singleton for these single-drafter cells, but
-    /// the schema carries the full map so multi-drafter cells can join later)
+    /// per-policy breakdown keyed by policy identity (`drafter/mode:shape`;
+    /// singleton for single-policy cells — adaptive cells carry one row per
+    /// policy the controller actually served)
     pub per_policy: Vec<PolicyCell>,
 }
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct PolicyCell {
-    pub drafter: String,
+    /// policy-identity key (`drafter/mode:shape` — v2's `drafter` column,
+    /// renamed when the engine re-keyed its per-policy metrics)
+    pub policy: String,
     pub iterations: usize,
     pub acceptance_length: f64,
 }
@@ -269,14 +289,22 @@ impl CellConfig {
         let shape = string(j, "shape")?;
         let cache = string(j, "cache")?;
         let load = string(j, "load")?;
-        if !matches!(shape.as_str(), "chain" | "tree" | "dyn") {
-            return Err(format!("shape {shape:?} not one of chain|tree|dyn"));
+        if !matches!(shape.as_str(), "chain" | "tree" | "dyn" | "adaptive") {
+            return Err(format!("shape {shape:?} not one of chain|tree|dyn|adaptive"));
         }
         if !matches!(cache.as_str(), "dense" | "paged" | "prefix") {
             return Err(format!("cache {cache:?} not one of dense|paged|prefix"));
         }
-        if !matches!(load.as_str(), "closed" | "open") {
-            return Err(format!("load {load:?} not one of closed|open"));
+        if !matches!(load.as_str(), "closed" | "open" | "adaptive") {
+            return Err(format!("load {load:?} not one of closed|open|adaptive"));
+        }
+        // the adaptive column is one coherent thing, not a free mix: an
+        // adaptive load means controller-assigned policies (shape/drafter/
+        // policy have no static value) and vice versa
+        if (shape == "adaptive") != (load == "adaptive") {
+            return Err(format!(
+                "shape {shape:?} / load {load:?}: adaptive cells set both"
+            ));
         }
         Ok(CellConfig {
             shape,
@@ -320,7 +348,7 @@ impl CellMetrics {
                         .iter()
                         .map(|p| {
                             Json::obj(vec![
-                                ("drafter", Json::s(&p.drafter)),
+                                ("policy", Json::s(&p.policy)),
                                 ("iterations", Json::num(p.iterations as f64)),
                                 ("acceptance_length", Json::num(p.acceptance_length)),
                             ])
@@ -339,7 +367,7 @@ impl CellMetrics {
             .iter()
             .map(|p| {
                 Ok(PolicyCell {
-                    drafter: string(p, "drafter")?,
+                    policy: string(p, "policy")?,
                     iterations: int(p, "iterations")?,
                     acceptance_length: float(p, "acceptance_length")?,
                 })
@@ -479,7 +507,7 @@ mod tests {
                         kv_uploads: 64,
                         device_path_commits: 0,
                         per_policy: vec![PolicyCell {
-                            drafter: "target-m-pe4".into(),
+                            policy: "target-m-pe4/chain:k4".into(),
                             iterations: 64,
                             acceptance_length: 3.5,
                         }],
@@ -520,6 +548,40 @@ mod tests {
                     },
                     timing: CellTiming::default(),
                 },
+                CellRecord {
+                    id: "adaptive/dense/auto/adaptive-c2-r8".into(),
+                    config: CellConfig {
+                        shape: "adaptive".into(),
+                        cache: "dense".into(),
+                        drafter: "auto".into(),
+                        policy: "adaptive".into(),
+                        load: "adaptive".into(),
+                        concurrency: 2,
+                        rate_rps: 8.0,
+                        requests: 8,
+                        max_new: 32,
+                        seed: 11,
+                        deterministic: false,
+                    },
+                    metrics: CellMetrics {
+                        // the controller served two shapes of one drafter —
+                        // exactly what policy-identity rows exist to record
+                        per_policy: vec![
+                            PolicyCell {
+                                policy: "target-m-pe4/chain:k4".into(),
+                                iterations: 10,
+                                acceptance_length: 3.1,
+                            },
+                            PolicyCell {
+                                policy: "target-m-pe4/dyn:w4x4x2x2x1".into(),
+                                iterations: 30,
+                                acceptance_length: 4.2,
+                            },
+                        ],
+                        ..CellMetrics::default()
+                    },
+                    timing: CellTiming::default(),
+                },
             ],
         }
     }
@@ -540,14 +602,26 @@ mod tests {
         let r = sample_report();
         assert_eq!(r.cells[0].config.id(), "chain/dense/target-m-pe4/closed-c2");
         assert_eq!(r.cells[1].config.id(), "tree/paged/target-m-pe4/open-c2-r8");
+        assert_eq!(r.cells[2].config.id(), "adaptive/dense/auto/adaptive-c2-r8");
     }
 
     #[test]
     fn rejects_wrong_version() {
         let mut s = sample_report().to_file_string();
-        s = s.replace("\"schema_version\": 2", "\"schema_version\": 99");
+        s = s.replace("\"schema_version\": 3", "\"schema_version\": 99");
         let e = BenchReport::parse(&s).unwrap_err();
         assert!(e.contains("schema_version 99"), "{e}");
+    }
+
+    #[test]
+    fn rejects_half_adaptive_cells() {
+        // an adaptive load with a static shape (or the reverse) is a
+        // malformed cell, not a new kind of coverage
+        let s = sample_report()
+            .to_file_string()
+            .replace("\"shape\": \"adaptive\"", "\"shape\": \"dyn\"");
+        let e = BenchReport::parse(&s).unwrap_err();
+        assert!(e.contains("adaptive cells set both"), "{e}");
     }
 
     #[test]

@@ -37,19 +37,27 @@ pub enum Load {
     Closed { concurrency: usize },
     /// Poisson arrivals at `rate_rps`, slot cap `concurrency`
     Open { concurrency: usize, rate_rps: f64 },
+    /// Poisson arrivals served by the adaptive speculation controller:
+    /// requests arrive policy-free and the controller assigns drafter,
+    /// shape, and budget from live engine signal. Its own load variant
+    /// (not a shape) because it replaces the whole (shape × drafter)
+    /// cross-product with one cell per cache mode.
+    Adaptive { concurrency: usize, rate_rps: f64 },
 }
 
 impl Load {
     pub fn concurrency(&self) -> usize {
         match *self {
-            Load::Closed { concurrency } | Load::Open { concurrency, .. } => concurrency,
+            Load::Closed { concurrency }
+            | Load::Open { concurrency, .. }
+            | Load::Adaptive { concurrency, .. } => concurrency,
         }
     }
 
     pub fn rate_rps(&self) -> f64 {
         match *self {
             Load::Closed { .. } => 0.0,
-            Load::Open { rate_rps, .. } => rate_rps,
+            Load::Open { rate_rps, .. } | Load::Adaptive { rate_rps, .. } => rate_rps,
         }
     }
 
@@ -57,11 +65,13 @@ impl Load {
         match self {
             Load::Closed { .. } => "closed",
             Load::Open { .. } => "open",
+            Load::Adaptive { .. } => "adaptive",
         }
     }
 
-    /// Closed-loop cells replay exactly given the seed; open-loop admission
-    /// depends on wall-clock service times.
+    /// Closed-loop cells replay exactly given the seed; open-loop and
+    /// adaptive admission depends on wall-clock service times (and the
+    /// controller's decisions depend on wall-clock-shaped signal windows).
     pub fn deterministic(&self) -> bool {
         matches!(self, Load::Closed { .. })
     }
@@ -115,6 +125,16 @@ impl SuiteSpec {
             ]
         }
     }
+
+    /// The adaptive-controller columns — run ONCE per cache mode (dense,
+    /// paged), not per (shape, drafter): the controller owns both choices.
+    pub fn adaptive_loads(&self) -> Vec<Load> {
+        if self.smoke {
+            vec![Load::Adaptive { concurrency: 2, rate_rps: 8.0 }]
+        } else {
+            vec![Load::Adaptive { concurrency: 4, rate_rps: 8.0 }]
+        }
+    }
 }
 
 /// The [`SpecPolicy`] a matrix shape maps a drafter onto: chain at the
@@ -159,6 +179,19 @@ mod tests {
         let o = Load::Open { concurrency: 2, rate_rps: 8.0 };
         assert_eq!((o.concurrency(), o.rate_rps(), o.name()), (2, 8.0, "open"));
         assert!(!o.deterministic());
+        let a = Load::Adaptive { concurrency: 2, rate_rps: 8.0 };
+        assert_eq!((a.concurrency(), a.rate_rps(), a.name()), (2, 8.0, "adaptive"));
+        assert!(!a.deterministic());
+    }
+
+    #[test]
+    fn adaptive_columns_per_suite() {
+        // one adaptive column per suite flavor, always non-deterministic
+        for smoke in [true, false] {
+            let loads = SuiteSpec::new(smoke).adaptive_loads();
+            assert_eq!(loads.len(), 1);
+            assert!(loads.iter().all(|l| l.name() == "adaptive" && !l.deterministic()));
+        }
     }
 
     #[test]

@@ -1,0 +1,885 @@
+//! Adaptive speculation controller: the sense → decide → act layer that
+//! closes the loop between live engine signal and the speculation policy
+//! surface (drafter × chain/tree/dynamic shape × node budget).
+//!
+//! The paper's speedups hold only while verify FLOPs don't crowd out batch
+//! throughput — at saturated occupancy, speculation must throttle itself
+//! toward plain decoding (the Meta-at-scale observation), and EAGLE-3
+//! motivates steering node budgets by *observed* acceptance instead of
+//! static config. Every actuator already exists in this engine: the
+//! policy-keyed executable registry (choose among the allowlist probed at
+//! `EngineCore::new`), and the `Dynamic` node budget (deliberately excluded
+//! from [`SpecPolicy::exec_key`], so per-step budget moves need no new
+//! executables). This module adds the missing half — the sensing and the
+//! decision:
+//!
+//! * **Sense** — [`SpecController::observe`] snapshots the engine's
+//!   cumulative [`EngineMetrics`] each step and pushes *per-step deltas*
+//!   through the windowed primitives in [`crate::util::stats`] ([`Ewma`]
+//!   over slot/block occupancy and admission pressure, a [`RingWindow`] +
+//!   per-policy EWMAs over acceptance length). Cumulative counters are
+//!   useless to a control loop; windows are what it acts on.
+//! * **Decide** — [`decide`] is a PURE function of
+//!   ([`ControllerConfig`], [`Signals`]): no engine state, no clock, no
+//!   randomness. Hysteresis lives in the `Signals` snapshot itself
+//!   (breach-streak counters and an action cooldown maintained by
+//!   `observe`), so single-step blips provably cannot flap a decision and
+//!   the whole policy is unit-testable without an engine.
+//! * **Act** — [`SpecController::assign`] gives each incoming request its
+//!   [`SpecPolicy`] at admission (the policy is FIXED for the request's
+//!   lifetime); [`SpecController::budget_target`] re-tunes in-flight
+//!   `Dynamic` budgets per step. The throttle ladder degrades
+//!   `Dynamic → Tree → Chain → Off` as occupancy saturates, where `Off` is
+//!   the cheapest allowlisted policy at the minimum node budget (a literal
+//!   k=0 chain has no lowered executables — see `SpecPolicy::validate`).
+//!
+//! # Invariants (ARCHITECTURE.md "Adaptive speculation")
+//!
+//! * A request's policy (drafter, shape, executables) never changes after
+//!   admission — only `Dynamic` budgets move in flight.
+//! * In-flight budget moves stay within `[budget_min, admitted budget]`:
+//!   never above the commit width the slot's KV chunk was claimed for at
+//!   admission, so allocator accounting and the scheduler's admission floor
+//!   can never go stale upward.
+
+use std::collections::BTreeMap;
+
+use crate::util::stats::{Ewma, RingWindow};
+
+use super::metrics::EngineMetrics;
+use super::request::SpecPolicy;
+
+/// Tuning knobs for the controller. Defaults are deliberately conservative:
+/// thresholds form a dead band (saturate well above relief, deep well above
+/// shallow), and hysteresis + cooldown mean a decision needs sustained
+/// evidence and decisions are rate-limited.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ControllerConfig {
+    /// EWMA half-life, in engine steps, for occupancy/pressure smoothing
+    /// and the per-policy acceptance-length tracks
+    pub half_life: f64,
+    /// sliding-window capacity (steps) for the global AL window
+    pub window: usize,
+    /// smoothed slot/block occupancy at or above this → saturation breach
+    pub saturate_occupancy: f64,
+    /// smoothed occupancy at or below this (with no admission pressure) →
+    /// relief breach; the (relief, saturate) gap is the dead band
+    pub relief_occupancy: f64,
+    /// windowed AL fraction of the current ceiling at or above this →
+    /// deep-acceptance breach (the drafter is worth more nodes)
+    pub deep_al_frac: f64,
+    /// windowed AL fraction at or below this → shallow-acceptance breach
+    pub shallow_al_frac: f64,
+    /// consecutive breach steps required before a decision fires
+    pub hysteresis_steps: usize,
+    /// minimum steps between decisions (rate limit)
+    pub cooldown_steps: usize,
+    /// floor for dynamic node budgets (assignment and in-flight retunes)
+    pub budget_min: usize,
+    /// budget increment/decrement per decision
+    pub budget_step: usize,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> ControllerConfig {
+        ControllerConfig {
+            half_life: 8.0,
+            window: 32,
+            saturate_occupancy: 0.90,
+            relief_occupancy: 0.55,
+            deep_al_frac: 0.60,
+            shallow_al_frac: 0.25,
+            hysteresis_steps: 3,
+            cooldown_steps: 6,
+            budget_min: 2,
+            budget_step: 2,
+        }
+    }
+}
+
+/// `PEAGLE_ADAPTIVE=1` (the CI adaptive job): run every engine with the
+/// adaptive controller on at default tuning — same env-gating pattern as
+/// `paged_from_env` and friends in [`super::engine`].
+pub fn adaptive_from_env() -> Option<ControllerConfig> {
+    (std::env::var("PEAGLE_ADAPTIVE").ok().as_deref() == Some("1"))
+        .then(ControllerConfig::default)
+}
+
+/// One rung of the throttle ladder, richest speculation first. `Off` is the
+/// terminal degrade: the cheapest allowlisted policy at the minimum node
+/// budget (k=0 is not a lowered executable shape, so "stop speculating"
+/// means "spend as little verify width as the allowlist permits").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Dynamic,
+    Tree,
+    Chain,
+    Off,
+}
+
+impl Tier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Dynamic => "dyn",
+            Tier::Tree => "tree",
+            Tier::Chain => "chain",
+            Tier::Off => "off",
+        }
+    }
+}
+
+/// What [`decide`] can tell the engine to do. Tier moves redirect FUTURE
+/// admissions only; budget moves also re-tune in-flight `Dynamic` slots
+/// (within each slot's admitted cap).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    Hold,
+    /// degrade one ladder rung (Dynamic → Tree → Chain → Off)
+    ThrottleDown,
+    /// recover one ladder rung
+    ThrottleUp,
+    /// raise the dynamic node-budget target by `budget_step`
+    BudgetUp,
+    /// lower the dynamic node-budget target by `budget_step`
+    BudgetDown,
+}
+
+/// A pure snapshot of everything [`decide`] is allowed to look at. The
+/// controller maintains it in [`SpecController::observe`]; tests construct
+/// it directly. Hysteresis state (streaks, cooldown) is IN the snapshot so
+/// the decision function itself stays stateless.
+#[derive(Clone, Debug, Default)]
+pub struct Signals {
+    /// smoothed slot occupancy (None until the first step — cold start)
+    pub occupancy: Option<f64>,
+    /// smoothed paged block occupancy (None in dense mode)
+    pub block_occupancy: Option<f64>,
+    /// smoothed admissions-blocked-per-step (paged admission pressure)
+    pub admission_pressure: Option<f64>,
+    /// windowed acceptance length as a fraction of the current tier's
+    /// AL ceiling (None until a live iteration lands in the window)
+    pub al_frac: Option<f64>,
+    /// consecutive steps the saturation predicate held
+    pub saturate_streak: usize,
+    /// consecutive steps the relief predicate held
+    pub relief_streak: usize,
+    /// consecutive steps the deep-acceptance predicate held
+    pub deep_streak: usize,
+    /// consecutive steps the shallow-acceptance predicate held
+    pub shallow_streak: usize,
+    /// steps since the last non-`Hold` decision
+    pub cooldown: usize,
+    /// ladder room below the current tier
+    pub can_throttle_down: bool,
+    /// ladder room above the current tier
+    pub can_throttle_up: bool,
+    /// current tier assigns `Dynamic` policies and the budget target is
+    /// below its ceiling
+    pub can_budget_up: bool,
+    /// current tier assigns `Dynamic` policies and the budget target is
+    /// above `budget_min`
+    pub can_budget_down: bool,
+}
+
+/// THE decision function — pure in (config, signals), no engine state.
+///
+/// Priority order: saturation (protect batch throughput) beats relief
+/// (recover speculation) beats acceptance-driven budget tuning. Every arm
+/// requires its breach streak to reach `hysteresis_steps` AND the cooldown
+/// to have expired, so a single-step signal blip can never flap a decision.
+/// Under saturation the response ratchets: shrink dynamic budgets first
+/// (mild, keeps the executables), drop a ladder rung once budgets are
+/// floored.
+pub fn decide(cfg: &ControllerConfig, s: &Signals) -> Action {
+    if s.cooldown < cfg.cooldown_steps {
+        return Action::Hold;
+    }
+    let h = cfg.hysteresis_steps.max(1);
+    if s.saturate_streak >= h {
+        if s.can_budget_down {
+            return Action::BudgetDown;
+        }
+        if s.can_throttle_down {
+            return Action::ThrottleDown;
+        }
+        return Action::Hold;
+    }
+    if s.relief_streak >= h && s.can_throttle_up {
+        return Action::ThrottleUp;
+    }
+    if s.deep_streak >= h && s.can_budget_up {
+        return Action::BudgetUp;
+    }
+    if s.shallow_streak >= h && s.can_budget_down {
+        return Action::BudgetDown;
+    }
+    Action::Hold
+}
+
+/// Cumulative-counter snapshot from the previous `observe` — what turns the
+/// engine's monotone metrics into per-step deltas.
+#[derive(Clone, Debug, Default)]
+struct Snapshot {
+    slot_occupied: usize,
+    slot_total: usize,
+    block_used: usize,
+    block_total: usize,
+    admissions_blocked: usize,
+    /// per policy-identity: (iterations, accepted_sum)
+    per_policy: BTreeMap<String, (usize, usize)>,
+}
+
+/// The controller subsystem: owns the windowed-signal layer and the ladder
+/// position, hands the engine a policy per admission and a budget target
+/// per step. Deterministic — same metrics sequence, same decisions.
+#[derive(Clone, Debug)]
+pub struct SpecController {
+    cfg: ControllerConfig,
+    /// the engine allowlist, default policy first (assignment candidates)
+    candidates: Vec<SpecPolicy>,
+    /// throttle ladder actually available given the allowlist: rungs in
+    /// degrade order, each with the candidate indices it assigns from
+    ladder: Vec<(Tier, Vec<usize>)>,
+    tier_idx: usize,
+    /// current dynamic node-budget target (assignment + in-flight retune)
+    budget: usize,
+    budget_max: usize,
+    sig: Signals,
+    occ: Ewma,
+    block: Ewma,
+    pressure: Ewma,
+    al_window: RingWindow,
+    /// windowed AL per policy identity (exec_key) — the drafter-choice signal
+    per_policy_al: BTreeMap<String, Ewma>,
+    prev: Snapshot,
+    /// non-`Hold` decisions taken (observability)
+    pub actions_taken: usize,
+}
+
+impl SpecController {
+    /// Build from the engine's probed policy allowlist (`default` first —
+    /// the cold-start assignment). Errors on an empty candidate list.
+    pub fn new(cfg: ControllerConfig, candidates: Vec<SpecPolicy>) -> Result<SpecController, String> {
+        if candidates.is_empty() {
+            return Err("adaptive controller needs at least one allowlisted policy".into());
+        }
+        if cfg.budget_min == 0 || cfg.budget_step == 0 {
+            return Err("adaptive controller: budget_min and budget_step must be >= 1".into());
+        }
+        if !(cfg.relief_occupancy < cfg.saturate_occupancy) {
+            return Err(format!(
+                "adaptive controller: relief occupancy {} must sit below saturate occupancy {}",
+                cfg.relief_occupancy, cfg.saturate_occupancy
+            ));
+        }
+        let mut ladder: Vec<(Tier, Vec<usize>)> = Vec::new();
+        for tier in [Tier::Dynamic, Tier::Tree, Tier::Chain] {
+            let idxs: Vec<usize> = candidates
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.mode_name() == tier.name())
+                .map(|(i, _)| i)
+                .collect();
+            if !idxs.is_empty() {
+                ladder.push((tier, idxs));
+            }
+        }
+        // the terminal rung always exists: every candidate, assigned at the
+        // cheapest commit width the ladder can reach
+        ladder.push((Tier::Off, (0..candidates.len()).collect()));
+        let budget_max = candidates
+            .iter()
+            .filter_map(|p| match p {
+                SpecPolicy::Dynamic { envelope, .. } => Some(envelope.len()),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(cfg.budget_min);
+        let budget = candidates
+            .iter()
+            .filter_map(|p| match p {
+                SpecPolicy::Dynamic { budget, .. } => Some(*budget),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(cfg.budget_min)
+            .clamp(cfg.budget_min.min(budget_max), budget_max);
+        let sig = Signals { cooldown: cfg.cooldown_steps, ..Signals::default() };
+        let occ = Ewma::with_half_life(cfg.half_life);
+        let al_window = RingWindow::new(cfg.window);
+        Ok(SpecController {
+            candidates,
+            ladder,
+            tier_idx: 0,
+            budget,
+            budget_max,
+            sig,
+            block: occ.clone(),
+            pressure: occ.clone(),
+            occ,
+            al_window,
+            per_policy_al: BTreeMap::new(),
+            prev: Snapshot::default(),
+            actions_taken: 0,
+            cfg,
+        })
+    }
+
+    pub fn config(&self) -> &ControllerConfig {
+        &self.cfg
+    }
+
+    /// The current `Signals` snapshot (what the next [`decide`] will see).
+    pub fn signals(&self) -> &Signals {
+        &self.sig
+    }
+
+    pub fn tier(&self) -> Tier {
+        self.ladder[self.tier_idx].0
+    }
+
+    /// Current dynamic node-budget target. The engine clamps it per slot to
+    /// `[budget_min, admitted budget]` when re-tuning in flight.
+    pub fn budget_target(&self) -> usize {
+        self.budget
+    }
+
+    /// Sense: fold one step's cumulative [`EngineMetrics`] into the
+    /// windowed-signal layer and advance the hysteresis state.
+    pub fn observe(&mut self, m: &EngineMetrics) {
+        // per-step deltas of the cumulative counters
+        let d_occ = m.slot_steps_occupied - self.prev.slot_occupied;
+        let d_occ_total = m.slot_steps_total - self.prev.slot_total;
+        if d_occ_total > 0 {
+            self.occ.push(d_occ as f64 / d_occ_total as f64);
+        }
+        let d_blk = m.block_steps_used - self.prev.block_used;
+        let d_blk_total = m.block_steps_total - self.prev.block_total;
+        if d_blk_total > 0 {
+            self.block.push(d_blk as f64 / d_blk_total as f64);
+        }
+        self.pressure
+            .push((m.admissions_blocked - self.prev.admissions_blocked) as f64);
+        let (mut d_iters, mut d_acc) = (0usize, 0usize);
+        for (key, pm) in &m.per_policy {
+            let (pi, pa) = self.prev.per_policy.get(key).copied().unwrap_or((0, 0));
+            let (di, da) = (pm.iterations - pi, pm.accepted_sum - pa);
+            d_iters += di;
+            d_acc += da;
+            if di > 0 {
+                self.per_policy_al
+                    .entry(key.clone())
+                    .or_insert_with(|| Ewma::with_half_life(self.cfg.half_life))
+                    .push(da as f64 / di as f64);
+            }
+        }
+        if d_iters > 0 {
+            self.al_window.push(d_acc as f64 / d_iters as f64);
+        }
+        self.prev = Snapshot {
+            slot_occupied: m.slot_steps_occupied,
+            slot_total: m.slot_steps_total,
+            block_used: m.block_steps_used,
+            block_total: m.block_steps_total,
+            admissions_blocked: m.admissions_blocked,
+            per_policy: m
+                .per_policy
+                .iter()
+                .map(|(k, pm)| (k.clone(), (pm.iterations, pm.accepted_sum)))
+                .collect(),
+        };
+
+        // refresh the snapshot decide() sees
+        self.sig.occupancy = self.occ.value();
+        self.sig.block_occupancy = self.block.value();
+        self.sig.admission_pressure = self.pressure.value();
+        self.sig.al_frac = self
+            .al_window
+            .mean()
+            .map(|al| al / self.al_ceiling() as f64);
+        self.sig.cooldown = self.sig.cooldown.saturating_add(1);
+
+        // breach streaks: saturation when EITHER occupancy view crosses the
+        // high threshold or paged admission is visibly blocking; relief when
+        // everything sits below the low threshold. The band between resets
+        // both — that dead band plus the streaks is the hysteresis.
+        let occ = self.sig.occupancy.unwrap_or(0.0);
+        let blk = self.sig.block_occupancy.unwrap_or(0.0);
+        let press = self.sig.admission_pressure.unwrap_or(0.0);
+        let saturated =
+            occ >= self.cfg.saturate_occupancy || blk >= self.cfg.saturate_occupancy || press >= 0.5;
+        let relieved = self.sig.occupancy.is_some()
+            && occ <= self.cfg.relief_occupancy
+            && blk <= self.cfg.relief_occupancy
+            && press < 0.5;
+        if saturated {
+            self.sig.saturate_streak += 1;
+            self.sig.relief_streak = 0;
+        } else if relieved {
+            self.sig.relief_streak += 1;
+            self.sig.saturate_streak = 0;
+        } else {
+            self.sig.saturate_streak = 0;
+            self.sig.relief_streak = 0;
+        }
+        match self.sig.al_frac {
+            Some(f) if f >= self.cfg.deep_al_frac => {
+                self.sig.deep_streak += 1;
+                self.sig.shallow_streak = 0;
+            }
+            Some(f) if f <= self.cfg.shallow_al_frac => {
+                self.sig.shallow_streak += 1;
+                self.sig.deep_streak = 0;
+            }
+            _ => {
+                self.sig.deep_streak = 0;
+                self.sig.shallow_streak = 0;
+            }
+        }
+
+        // actuator room, recomputed from the ladder position
+        self.sig.can_throttle_down = self.tier_idx + 1 < self.ladder.len();
+        self.sig.can_throttle_up = self.tier_idx > 0;
+        let dyn_tier = self.tier() == Tier::Dynamic;
+        self.sig.can_budget_up = dyn_tier && self.budget < self.budget_max;
+        self.sig.can_budget_down = dyn_tier && self.budget > self.cfg.budget_min;
+    }
+
+    /// Sense + decide + act for one engine step: returns the decision taken
+    /// (already applied to the ladder position / budget target).
+    pub fn step(&mut self, m: &EngineMetrics) -> Action {
+        self.observe(m);
+        let action = decide(&self.cfg, &self.sig);
+        self.apply(action);
+        action
+    }
+
+    fn apply(&mut self, action: Action) {
+        match action {
+            Action::Hold => return,
+            Action::ThrottleDown => self.tier_idx += 1,
+            Action::ThrottleUp => self.tier_idx -= 1,
+            Action::BudgetUp => {
+                self.budget = (self.budget + self.cfg.budget_step).min(self.budget_max)
+            }
+            Action::BudgetDown => {
+                self.budget = self
+                    .budget
+                    .saturating_sub(self.cfg.budget_step)
+                    .max(self.cfg.budget_min.min(self.budget_max))
+            }
+        }
+        self.actions_taken += 1;
+        // a decision resets the evidence: the next one needs fresh streaks
+        // AND a full cooldown
+        self.sig.saturate_streak = 0;
+        self.sig.relief_streak = 0;
+        self.sig.deep_streak = 0;
+        self.sig.shallow_streak = 0;
+        self.sig.cooldown = 0;
+    }
+
+    /// Act (admission): the policy the controller assigns an incoming
+    /// request right now. Cold start — no signal observed yet — is the
+    /// engine default; otherwise the current tier's candidate with the best
+    /// windowed AL (unseen candidates explore first, in allowlist order).
+    /// The assigned policy is FIXED for the request's lifetime.
+    pub fn assign(&self) -> SpecPolicy {
+        if self.occ.is_empty() && self.al_window.is_empty() {
+            return self.candidates[0].clone();
+        }
+        let (tier, idxs) = &self.ladder[self.tier_idx];
+        if *tier == Tier::Off {
+            // cheapest verified width the allowlist can spend, dynamic
+            // budgets floored
+            let i = idxs
+                .iter()
+                .copied()
+                .min_by_key(|&i| self.min_commit_width_of(&self.candidates[i]))
+                .expect("ladder rungs are non-empty");
+            return self.with_budget(self.candidates[i].clone(), self.cfg.budget_min);
+        }
+        let mut best: Option<usize> = None;
+        for &i in idxs {
+            let key = self.candidates[i].exec_key();
+            match self.per_policy_al.get(&key).and_then(Ewma::value) {
+                // no signal for this candidate yet: explore it first
+                None => return self.with_budget(self.candidates[i].clone(), self.budget),
+                Some(al) => {
+                    let better = match best {
+                        None => true,
+                        Some(b) => {
+                            let bal = self.per_policy_al[&self.candidates[b].exec_key()]
+                                .value()
+                                .unwrap_or(0.0);
+                            al > bal
+                        }
+                    };
+                    if better {
+                        best = Some(i);
+                    }
+                }
+            }
+        }
+        let i = best.expect("ladder rungs are non-empty");
+        self.with_budget(self.candidates[i].clone(), self.budget)
+    }
+
+    /// One-line state readout for serve/bench logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "tier={} budget={} actions={} occ={:.2} al_frac={:.2}",
+            self.tier().name(),
+            self.budget,
+            self.actions_taken,
+            self.sig.occupancy.unwrap_or(0.0),
+            self.sig.al_frac.unwrap_or(0.0),
+        )
+    }
+
+    /// Commit width of `p` with dynamic budgets floored — what the `Off`
+    /// rung (and the scheduler's admission floor) costs a policy at.
+    fn min_commit_width_of(&self, p: &SpecPolicy) -> usize {
+        match p {
+            SpecPolicy::Dynamic { envelope, budget, .. } => {
+                self.cfg.budget_min.min(*budget).min(envelope.len()) + 1
+            }
+            _ => p.commit_width(),
+        }
+    }
+
+    fn with_budget(&self, mut p: SpecPolicy, target: usize) -> SpecPolicy {
+        if let SpecPolicy::Dynamic { envelope, budget, .. } = &mut p {
+            *budget = target.clamp(self.cfg.budget_min.min(envelope.len()), envelope.len());
+        }
+        p
+    }
+
+    /// AL ceiling (accepted drafts + bonus) of the current tier's
+    /// candidates at the current budget target — the denominator of
+    /// `Signals::al_frac`.
+    fn al_ceiling(&self) -> usize {
+        let (_, idxs) = &self.ladder[self.tier_idx];
+        idxs.iter()
+            .map(|&i| match &self.candidates[i] {
+                SpecPolicy::Dynamic { envelope, .. } => {
+                    envelope.max_depth().min(self.budget.max(1))
+                }
+                p => p.al_max(),
+            })
+            .max()
+            .unwrap_or(1)
+            + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masking::TreeTopology;
+
+    fn cfg() -> ControllerConfig {
+        ControllerConfig::default()
+    }
+
+    fn ready(streaks: impl Fn(&mut Signals)) -> Signals {
+        let mut s = Signals { cooldown: cfg().cooldown_steps, ..Signals::default() };
+        streaks(&mut s);
+        s
+    }
+
+    // ---- decide(): the pure unit suite (no artifacts, no engine) ---------
+
+    #[test]
+    fn cold_start_holds() {
+        // no signal, no streaks → Hold; admission-side cold start (default
+        // policy) is covered in controller_cold_start_assigns_default
+        let s = ready(|_| {});
+        assert_eq!(decide(&cfg(), &s), Action::Hold);
+    }
+
+    #[test]
+    fn saturation_throttles_down_the_ladder() {
+        let s = ready(|s| {
+            s.saturate_streak = cfg().hysteresis_steps;
+            s.can_throttle_down = true;
+        });
+        assert_eq!(decide(&cfg(), &s), Action::ThrottleDown);
+    }
+
+    #[test]
+    fn saturation_shrinks_budget_before_dropping_a_rung() {
+        let s = ready(|s| {
+            s.saturate_streak = cfg().hysteresis_steps;
+            s.can_throttle_down = true;
+            s.can_budget_down = true;
+        });
+        assert_eq!(decide(&cfg(), &s), Action::BudgetDown, "mild response first");
+    }
+
+    #[test]
+    fn saturation_at_the_terminal_rung_holds() {
+        let s = ready(|s| s.saturate_streak = 99);
+        assert_eq!(decide(&cfg(), &s), Action::Hold, "no room left to degrade");
+    }
+
+    #[test]
+    fn deep_acceptance_raises_the_budget() {
+        let s = ready(|s| {
+            s.deep_streak = cfg().hysteresis_steps;
+            s.can_budget_up = true;
+        });
+        assert_eq!(decide(&cfg(), &s), Action::BudgetUp);
+    }
+
+    #[test]
+    fn shallow_acceptance_lowers_the_budget() {
+        let s = ready(|s| {
+            s.shallow_streak = cfg().hysteresis_steps;
+            s.can_budget_down = true;
+        });
+        assert_eq!(decide(&cfg(), &s), Action::BudgetDown);
+    }
+
+    #[test]
+    fn relief_recovers_a_rung_and_outranks_budget_moves() {
+        let s = ready(|s| {
+            s.relief_streak = cfg().hysteresis_steps;
+            s.deep_streak = cfg().hysteresis_steps;
+            s.can_throttle_up = true;
+            s.can_budget_up = true;
+        });
+        assert_eq!(decide(&cfg(), &s), Action::ThrottleUp);
+    }
+
+    #[test]
+    fn saturation_outranks_everything() {
+        let s = ready(|s| {
+            s.saturate_streak = cfg().hysteresis_steps;
+            s.relief_streak = cfg().hysteresis_steps; // impossible live, but priority is pinned
+            s.deep_streak = cfg().hysteresis_steps;
+            s.can_throttle_down = true;
+            s.can_throttle_up = true;
+            s.can_budget_up = true;
+        });
+        assert_eq!(decide(&cfg(), &s), Action::ThrottleDown);
+    }
+
+    #[test]
+    fn hysteresis_a_single_step_blip_cannot_flap() {
+        // one breach step < hysteresis_steps → Hold, every arm
+        let c = cfg();
+        assert!(c.hysteresis_steps > 1);
+        for f in [
+            (|s: &mut Signals| {
+                s.saturate_streak = 1;
+                s.can_throttle_down = true;
+            }) as fn(&mut Signals),
+            |s| {
+                s.relief_streak = 1;
+                s.can_throttle_up = true;
+            },
+            |s| {
+                s.deep_streak = 1;
+                s.can_budget_up = true;
+            },
+            |s| {
+                s.shallow_streak = 1;
+                s.can_budget_down = true;
+            },
+        ] {
+            let s = ready(f);
+            assert_eq!(decide(&c, &s), Action::Hold);
+        }
+    }
+
+    #[test]
+    fn cooldown_rate_limits_decisions() {
+        let mut s = ready(|s| {
+            s.saturate_streak = 99;
+            s.can_throttle_down = true;
+        });
+        s.cooldown = cfg().cooldown_steps - 1;
+        assert_eq!(decide(&cfg(), &s), Action::Hold, "cooldown not expired");
+        s.cooldown = cfg().cooldown_steps;
+        assert_eq!(decide(&cfg(), &s), Action::ThrottleDown);
+    }
+
+    #[test]
+    fn decide_is_pure() {
+        let s = ready(|s| {
+            s.saturate_streak = cfg().hysteresis_steps;
+            s.can_throttle_down = true;
+        });
+        let a = decide(&cfg(), &s);
+        for _ in 0..3 {
+            assert_eq!(decide(&cfg(), &s), a, "same snapshot, same decision");
+        }
+    }
+
+    // ---- SpecController: deterministic closed-loop behavior --------------
+
+    fn candidates() -> Vec<SpecPolicy> {
+        vec![
+            SpecPolicy::dynamic("pe", TreeTopology::from_widths(&[4, 4, 2, 2, 1]), 8),
+            SpecPolicy::tree("pe", TreeTopology::from_widths(&[3, 2, 1, 1, 1])),
+            SpecPolicy::chain("pe", 4),
+            SpecPolicy::chain("ar", 5),
+        ]
+    }
+
+    /// Drive `steps` controller steps over a synthetic metrics stream with
+    /// the given per-step occupancy and AL.
+    fn drive(ctl: &mut SpecController, m: &mut EngineMetrics, steps: usize, occ: (usize, usize), al: usize) {
+        for _ in 0..steps {
+            m.record_occupancy(occ.0, occ.1);
+            m.policy_mut("pe/dyn:w4x4x2x2x1", 8).record_iteration(al, al.saturating_sub(1));
+            ctl.step(m);
+        }
+    }
+
+    #[test]
+    fn controller_cold_start_assigns_default() {
+        let ctl = SpecController::new(cfg(), candidates()).unwrap();
+        assert_eq!(ctl.assign(), candidates()[0], "no signal yet → engine default");
+        assert_eq!(ctl.tier(), Tier::Dynamic);
+    }
+
+    #[test]
+    fn controller_rejects_empty_allowlist_and_bad_band() {
+        assert!(SpecController::new(cfg(), vec![]).is_err());
+        let bad = ControllerConfig { relief_occupancy: 0.95, ..cfg() };
+        assert!(SpecController::new(bad, candidates()).is_err());
+        let bad = ControllerConfig { budget_min: 0, ..cfg() };
+        assert!(SpecController::new(bad, candidates()).is_err());
+    }
+
+    #[test]
+    fn sustained_saturation_walks_down_the_ladder() {
+        let c = cfg();
+        let mut ctl = SpecController::new(c.clone(), candidates()).unwrap();
+        let mut m = EngineMetrics::new(8);
+        // saturated batch, decent AL: first responses shrink the budget to
+        // the floor, then rungs drop dyn → tree → chain → off
+        let enough = (c.hysteresis_steps + c.cooldown_steps) * 16;
+        drive(&mut ctl, &mut m, enough, (4, 4), 3);
+        assert_eq!(ctl.tier(), Tier::Off, "sustained saturation reaches the terminal rung");
+        assert_eq!(ctl.budget_target(), c.budget_min);
+        // terminal-rung assignment: the cheapest commit width in the
+        // allowlist — the floored dyn policy commits at budget_min+1 = 3,
+        // beating chain:4 (5), chain:5 (6), and the static tree (9)
+        assert_eq!(
+            ctl.assign(),
+            SpecPolicy::dynamic("pe", TreeTopology::from_widths(&[4, 4, 2, 2, 1]), c.budget_min)
+        );
+    }
+
+    #[test]
+    fn relief_after_saturation_recovers_the_ladder() {
+        let c = cfg();
+        let mut ctl = SpecController::new(c.clone(), candidates()).unwrap();
+        let mut m = EngineMetrics::new(8);
+        let enough = (c.hysteresis_steps + c.cooldown_steps) * 16;
+        drive(&mut ctl, &mut m, enough, (4, 4), 3);
+        assert_eq!(ctl.tier(), Tier::Off);
+        // idle batch at moderate AL → climbs back to the richest rung
+        drive(&mut ctl, &mut m, enough, (1, 4), 3);
+        assert_eq!(ctl.tier(), Tier::Dynamic);
+    }
+
+    #[test]
+    fn deep_acceptance_raises_budget_until_the_envelope() {
+        let c = cfg();
+        let mut ctl = SpecController::new(c.clone(), candidates()).unwrap();
+        let mut m = EngineMetrics::new(8);
+        let b0 = ctl.budget_target();
+        // comfortable occupancy, AL pinned at the ceiling → budget climbs
+        drive(&mut ctl, &mut m, (c.hysteresis_steps + c.cooldown_steps) * 8, (3, 4), 6);
+        assert!(ctl.budget_target() > b0, "deep acceptance must raise the budget");
+        assert!(ctl.budget_target() <= 13, "never beyond the envelope node count");
+        // and the raised budget shows up in fresh dynamic assignments
+        match ctl.assign() {
+            SpecPolicy::Dynamic { budget, .. } => assert_eq!(budget, ctl.budget_target()),
+            p => panic!("expected a dynamic assignment, got {}", p.id()),
+        }
+    }
+
+    #[test]
+    fn single_blip_does_not_move_the_controller() {
+        let c = cfg();
+        let mut ctl = SpecController::new(c.clone(), candidates()).unwrap();
+        let mut m = EngineMetrics::new(8);
+        // settle into a calm steady state (middle occupancy, middle AL)
+        drive(&mut ctl, &mut m, c.cooldown_steps * 4, (3, 4), 3);
+        let (tier, budget, acted) = (ctl.tier(), ctl.budget_target(), ctl.actions_taken);
+        // ONE saturated step, then calm again
+        drive(&mut ctl, &mut m, 1, (4, 4), 3);
+        drive(&mut ctl, &mut m, 1, (3, 4), 3);
+        assert_eq!(ctl.tier(), tier);
+        assert_eq!(ctl.budget_target(), budget);
+        assert_eq!(ctl.actions_taken, acted, "a single-step blip must not decide");
+    }
+
+    #[test]
+    fn assignment_prefers_the_best_windowed_al_and_explores_unseen() {
+        let c = cfg();
+        let mut ctl = SpecController::new(c.clone(), candidates()).unwrap();
+        let mut m = EngineMetrics::new(8);
+        // comfortable occupancy; only the dyn policy has signal so far —
+        // with sustained saturation ruled out the tier stays Dynamic and the
+        // single dyn candidate is both "unseen-explored" and best
+        drive(&mut ctl, &mut m, 4, (2, 4), 4);
+        let p = ctl.assign();
+        assert_eq!(p.mode_name(), "dyn");
+        assert_eq!(p.drafter(), "pe");
+    }
+
+    #[test]
+    fn observe_is_delta_based_not_cumulative() {
+        let c = cfg();
+        let mut ctl = SpecController::new(c.clone(), candidates()).unwrap();
+        let mut m = EngineMetrics::new(8);
+        // two steps at 50% occupancy: the EWMA must read 0.5, not the
+        // cumulative ratio of a growing counter pair
+        drive(&mut ctl, &mut m, 2, (2, 4), 3);
+        let occ = ctl.signals().occupancy.unwrap();
+        assert!((occ - 0.5).abs() < 1e-9, "per-step delta occupancy, got {occ}");
+        // AL window carries per-step AL (3), not a cumulative sum
+        let al = ctl.al_window.mean().unwrap();
+        assert!((al - 3.0).abs() < 1e-9, "windowed per-step AL, got {al}");
+    }
+
+    #[test]
+    fn budget_clamps_respect_envelope_and_floor() {
+        let ctl = SpecController::new(cfg(), candidates()).unwrap();
+        let p = ctl.with_budget(candidates()[0].clone(), 99);
+        match p {
+            SpecPolicy::Dynamic { budget, .. } => assert_eq!(budget, 13, "envelope cap"),
+            _ => unreachable!(),
+        }
+        let p = ctl.with_budget(candidates()[0].clone(), 0);
+        match p {
+            SpecPolicy::Dynamic { budget, .. } => {
+                assert_eq!(budget, ctl.cfg.budget_min, "floor")
+            }
+            _ => unreachable!(),
+        }
+        // non-dynamic policies pass through untouched
+        assert_eq!(ctl.with_budget(candidates()[2].clone(), 1), candidates()[2]);
+    }
+
+    #[test]
+    fn chain_only_allowlist_has_a_two_rung_ladder() {
+        let ctl =
+            SpecController::new(cfg(), vec![SpecPolicy::chain("ar", 5)]).unwrap();
+        assert_eq!(ctl.ladder.len(), 2, "chain + terminal off");
+        assert_eq!(ctl.tier(), Tier::Chain);
+    }
+
+    #[test]
+    fn env_gate_parses() {
+        // covers the wiring contract, not the env itself (tests must not
+        // mutate process env): absent/other values mean off
+        assert!(adaptive_from_env().is_none() || std::env::var("PEAGLE_ADAPTIVE").as_deref() == Ok("1"));
+    }
+}

@@ -64,6 +64,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use super::controller::{ControllerConfig, SpecController};
 use super::kv_cache::SlotManager;
 use super::metrics::EngineMetrics;
 use super::request::{FinishReason, Request, RequestResult, SpecPolicy};
@@ -206,6 +207,11 @@ pub struct EngineConfig {
     /// provisioned paged engine must emit byte-identical tokens to the dense
     /// one (integration-tested for every speculation mode).
     pub paged: Option<PagedKvConfig>,
+    /// adaptive speculation: a [`SpecController`] assigns every policy-free
+    /// request its policy from live windowed signal and re-tunes in-flight
+    /// `Dynamic` budgets per step (within each slot's admitted chunk).
+    /// Requests that carry their own policy bypass the controller entirely.
+    pub adaptive: Option<ControllerConfig>,
 }
 
 impl EngineConfig {
@@ -223,7 +229,13 @@ impl EngineConfig {
             policies: Vec::new(),
             seed: 0,
             paged: None,
+            adaptive: None,
         }
+    }
+
+    pub fn with_adaptive(mut self, adaptive: Option<ControllerConfig>) -> EngineConfig {
+        self.adaptive = adaptive;
+        self
     }
 
     pub fn with_policies(mut self, policies: Vec<SpecPolicy>) -> EngineConfig {
@@ -276,10 +288,27 @@ impl EngineConfig {
     /// dynamic-budget variants share an exec key but charge differently, and
     /// a listed low-budget variant is exactly the footprint the engine's own
     /// per-request gate would admit.
+    ///
+    /// With the adaptive controller on, every CURRENTLY-ASSIGNABLE policy is
+    /// in scope, not just the listed budget variants: the controller may
+    /// floor any `Dynamic` policy's budget to `budget_min` (new assignments
+    /// AND in-flight retunes), so the static listed budgets would overstate
+    /// the floor and `Scheduler::pick_bucket` would queue work a real slot
+    /// could serve. Dynamic widths therefore fold the controller floor. The
+    /// floor never goes stale in the OTHER direction: in-flight budget moves
+    /// are clamped to each slot's admitted chunk ([`EngineCore::step`]), and
+    /// assignments above a listed budget only raise per-request widths, not
+    /// the minimum.
     pub fn min_commit_width(&self) -> usize {
+        let floor = self.adaptive.as_ref().map(|a| a.budget_min);
         std::iter::once(&self.default_policy)
             .chain(self.policies.iter())
-            .map(|p| p.commit_width())
+            .map(|p| match (p, floor) {
+                (SpecPolicy::Dynamic { envelope, budget, .. }, Some(bmin)) => {
+                    bmin.min(*budget).min(envelope.len()) + 1
+                }
+                _ => p.commit_width(),
+            })
             .min()
             .unwrap()
     }
@@ -449,6 +478,9 @@ pub struct EngineCore {
     slots: Vec<Option<ActiveSlot>>,
     slotmgr: SlotManager,
     queue: VecDeque<(Request, SpecPolicy, Instant)>,
+    /// adaptive speculation controller ([`EngineConfig::adaptive`]): assigns
+    /// policy-free admissions and re-tunes in-flight dynamic budgets
+    controller: Option<SpecController>,
     pub metrics: EngineMetrics,
 }
 
@@ -490,6 +522,15 @@ impl EngineCore {
         }
         let write_width = cfg.max_write_width();
         let al_max = cfg.al_max();
+        // the controller chooses among exactly the probed allowlist (default
+        // first — its cold-start assignment), so it can never assign a
+        // policy the registry can't serve
+        let controller = cfg
+            .adaptive
+            .as_ref()
+            .map(|c| SpecController::new(c.clone(), allowed.clone()))
+            .transpose()
+            .map_err(|e| anyhow::anyhow!(e))?;
 
         // the default policy drives immediate serving — load it now so a
         // missing executable fails at construction, and (paged) so the
@@ -567,8 +608,15 @@ impl EngineCore {
             slots,
             slotmgr,
             queue: VecDeque::new(),
+            controller,
             cfg,
         })
+    }
+
+    /// The adaptive controller, when [`EngineConfig::adaptive`] is on
+    /// (serve/bench status lines read its [`SpecController::summary`]).
+    pub fn controller(&self) -> Option<&SpecController> {
+        self.controller.as_ref()
     }
 
     /// Drop the device commit executable: accepted-path copies then take
@@ -631,7 +679,13 @@ impl EngineCore {
                 self.slotmgr.s_max
             );
         }
-        let policy = req.policy.clone().unwrap_or_else(|| self.cfg.default_policy.clone());
+        // policy-free requests go through the adaptive controller when it is
+        // on (cold start = engine default); explicit policies bypass it
+        let policy = match (&req.policy, &self.controller) {
+            (Some(p), _) => p.clone(),
+            (None, Some(ctl)) => ctl.assign(),
+            (None, None) => self.cfg.default_policy.clone(),
+        };
         policy
             .validate()
             .map_err(|e| anyhow::anyhow!("request {}: invalid policy: {e}", req.id))?;
@@ -1022,6 +1076,27 @@ impl EngineCore {
         self.metrics.record_step_transfers(transfers_before, mr.rt.transfer_snapshot());
         self.metrics.record_iteration(&emitted_now);
 
+        // adaptive closed loop: sense this step's metrics, decide, and sync
+        // every in-flight Dynamic slot's budget to the (possibly moved)
+        // target. The clamp is the safety invariant: never above the budget
+        // the slot's KV chunk was admitted for (`chunk_of(i) - 1` — the
+        // allocator's accounting anchor), never below the controller floor.
+        // Budgets are per-slot runtime data read fresh by the next
+        // step_bucket pass, so the move takes effect next step with no
+        // executable or allocator churn.
+        if let Some(ctl) = self.controller.as_mut() {
+            ctl.step(&self.metrics);
+            let (target, bmin) = (ctl.budget_target(), ctl.config().budget_min);
+            for (i, s) in self.slots.iter_mut().enumerate() {
+                let Some(s) = s else { continue };
+                if let SpecPolicy::Dynamic { envelope, budget, .. } = &mut s.policy {
+                    let admitted = self.slotmgr.chunk_of(i).saturating_sub(1);
+                    let cap = admitted.min(envelope.len()).max(1);
+                    *budget = target.clamp(bmin.min(cap), cap);
+                }
+            }
+        }
+
         self.evict_finished(&mut events);
         Ok(StepReport { events, admitted, occupied })
     }
@@ -1194,9 +1269,11 @@ impl EngineCore {
 
         // --- acceptance per member slot ------------------------------------
         let th2 = Instant::now();
-        let drafter_name = group.archetype.drafter().to_string();
+        // per-policy metrics are keyed by policy identity (the bucket's exec
+        // key), so chain vs tree vs dyn rows of one drafter stay separate
+        // signal — EngineMetrics::per_drafter() re-rolls them for display
         let group_al = al_ceiling(&group.archetype);
-        self.metrics.policy_mut(&drafter_name, group_al).steps += 1;
+        self.metrics.policy_mut(key, group_al).steps += 1;
         // slots whose committed path is non-contiguous: (slot, base, path)
         let mut to_compact: Vec<(usize, usize, Vec<usize>)> = Vec::new();
         for (i, s) in self.slots.iter_mut().enumerate() {
@@ -1239,7 +1316,7 @@ impl EngineCore {
                     // the output; see sampler.rs's statistical suite)
                     if let Some(joint) = joint_all {
                         let qs = conditional_q(env, &joint[i * n..(i + 1) * n], sel);
-                        let pm = self.metrics.policy_mut(&drafter_name, group_al);
+                        let pm = self.metrics.policy_mut(key, group_al);
                         for (j, &qv) in qs.iter().enumerate() {
                             pm.record_draft_q(qv, a.accepted_path.contains(&(j + 1)));
                         }
@@ -1298,7 +1375,7 @@ impl EngineCore {
                 s.t_last_emit = Instant::now();
             }
             self.metrics
-                .policy_mut(&drafter_name, group_al)
+                .policy_mut(key, group_al)
                 .record_iteration(step_toks.len(), path.len());
             // commit root + the accepted nodes actually kept (truncation at
             // EOS/length only happens when the request finishes)
@@ -1468,6 +1545,32 @@ mod tests {
         assert_eq!(solo.al_max(), 5);
         assert_eq!(solo.max_write_width(), 14);
         assert_eq!(solo.min_commit_width(), 3);
+    }
+
+    /// The satellite bugfix: with the adaptive controller on, the
+    /// scheduler-facing commit-width floor must reflect what the controller
+    /// can actually assign (any Dynamic policy floored to `budget_min`), not
+    /// just the statically listed budget variants — otherwise
+    /// `Scheduler::pick_bucket` reasons with a stale floor once budgets are
+    /// re-tuned at runtime.
+    #[test]
+    fn adaptive_floor_folds_into_min_commit_width() {
+        let env = TreeTopology::from_widths(&[4, 4, 2, 2, 1]);
+        let cfg = EngineConfig::new("t", SpecPolicy::chain("d", 5), 2, 64)
+            .with_policies(vec![SpecPolicy::dynamic("d", env.clone(), 8)]);
+        assert_eq!(cfg.min_commit_width(), 6, "static floor: chain k=5 wins");
+        let adaptive = ControllerConfig { budget_min: 2, ..ControllerConfig::default() };
+        let cfg = cfg.with_adaptive(Some(adaptive.clone()));
+        assert_eq!(
+            cfg.min_commit_width(),
+            3,
+            "adaptive floor: the dyn policy may be assigned at budget_min"
+        );
+        // the fold clamps to the envelope and the LISTED budget (a variant
+        // listed below budget_min keeps its own, smaller charge)
+        let tiny = EngineConfig::new("t", SpecPolicy::dynamic("d", env, 1), 1, 8)
+            .with_adaptive(Some(adaptive));
+        assert_eq!(tiny.min_commit_width(), 2, "listed budget below the floor wins");
     }
 
     #[test]

@@ -3,19 +3,24 @@
 //! token tracking. Everything the Table 9/10 benches report comes from here.
 //!
 //! With per-request speculation policies a single engine batch can mix
-//! drafters, so the aggregate AL no longer identifies who earned it:
-//! [`PolicyMetrics`] keeps an AL histogram, an acceptance-by-depth
-//! histogram, and step/iteration counts PER DRAFTER NAME
-//! ([`EngineMetrics::per_policy`]), recorded at acceptance time by the
-//! policy-grouped step and printed by `bench-otps`.
+//! drafters AND speculation shapes, so the aggregate AL no longer
+//! identifies who earned it: [`PolicyMetrics`] keeps an AL histogram, an
+//! acceptance-by-depth histogram, and step/iteration counts PER POLICY
+//! IDENTITY — the `exec_key` string (`drafter/mode`, e.g.
+//! `target-m-pe4/chain:4` vs `target-m-pe4/dyn:w4x4x2x2x1`), recorded at
+//! acceptance time by the policy-grouped step and printed by `bench-otps`.
+//! Chain vs tree vs dyn rows of the same drafter are therefore separable
+//! signal (what the adaptive controller steers by);
+//! [`EngineMetrics::per_drafter`] rolls the map back up to drafter names
+//! for display.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
 
-/// Per-drafter slice of the engine metrics (keyed by drafter name in
-/// [`EngineMetrics::per_policy`]): enough to compare drafters served side by
-/// side in one batch — AL, acceptance by depth, and how many bucket passes /
-/// slot-iterations each one ran.
+/// Per-policy slice of the engine metrics (keyed by policy identity —
+/// the `exec_key` string — in [`EngineMetrics::per_policy`]): enough to
+/// compare policies served side by side in one batch — AL, acceptance by
+/// depth, and how many bucket passes / slot-iterations each one ran.
 #[derive(Clone, Debug, Default)]
 pub struct PolicyMetrics {
     /// policy-grouped verify passes that included this drafter (each engine
@@ -247,8 +252,9 @@ pub struct EngineMetrics {
     /// one-token-per-step decoder. Samples are per TOKEN (not per request):
     /// `tpot_quantile` answers "what gap does the p-th output token see".
     pub tpots: Vec<Duration>,
-    /// per-drafter breakdown (multi-policy engines; singleton for a
-    /// homogeneous batch) — see [`PolicyMetrics`]
+    /// per-policy breakdown keyed by policy identity (the `exec_key`
+    /// string, `drafter/mode`; singleton for a homogeneous batch) — see
+    /// [`PolicyMetrics`]; [`per_drafter`](Self::per_drafter) rolls it up
     pub per_policy: BTreeMap<String, PolicyMetrics>,
 }
 
@@ -274,21 +280,36 @@ impl EngineMetrics {
         }
     }
 
-    /// The per-drafter slice for `drafter`, created (sized for `al_max`
-    /// accepted drafts) on first touch. One drafter may serve SEVERAL
-    /// policies with different AL ceilings (e.g. chain:3 next to a depth-5
-    /// tree), so the histograms grow whenever a deeper policy touches the
-    /// entry — first-touch sizing must never clamp a later policy's counts.
-    pub fn policy_mut(&mut self, drafter: &str, al_max: usize) -> &mut PolicyMetrics {
+    /// The per-policy slice for identity `key` (an `exec_key` string,
+    /// `drafter/mode`), created (sized for `al_max` accepted drafts) on
+    /// first touch. Distinct policies get distinct entries even when they
+    /// share a drafter; merged streams may still fold entries with
+    /// different AL ceilings, so the histograms grow whenever a deeper
+    /// toucher arrives — first-touch sizing must never clamp later counts.
+    pub fn policy_mut(&mut self, key: &str, al_max: usize) -> &mut PolicyMetrics {
         let pm = self
             .per_policy
-            .entry(drafter.to_string())
+            .entry(key.to_string())
             .or_insert_with(|| PolicyMetrics::sized(al_max));
         if pm.al_histogram.len() < al_max + 2 {
             pm.al_histogram.resize(al_max + 2, 0);
             pm.accepted_by_depth.resize(al_max + 1, 0);
         }
         pm
+    }
+
+    /// Roll the policy-identity map back up to DRAFTER names (the display
+    /// view `serve`/`bench-otps` keep for compatibility): entries whose
+    /// keys share the drafter segment before the first `/` merge. A key
+    /// without a `/` (pre-identity data folded in via [`merge`](Self::merge))
+    /// rolls up under itself.
+    pub fn per_drafter(&self) -> BTreeMap<String, PolicyMetrics> {
+        let mut out: BTreeMap<String, PolicyMetrics> = BTreeMap::new();
+        for (key, pm) in &self.per_policy {
+            let drafter = key.split('/').next().unwrap_or(key);
+            out.entry(drafter.to_string()).or_default().merge(pm);
+        }
+        out
     }
 
     /// Record one tree-mode slot-iteration's active draft-node count.
@@ -811,22 +832,23 @@ mod tests {
     }
 
     #[test]
-    fn per_policy_breakdown_tracks_each_drafter() {
+    fn per_policy_breakdown_tracks_each_policy_identity() {
         // satellite: AL, acceptance-by-depth, and step counts keyed by
-        // drafter name, independent across drafters and folded by merge
+        // POLICY IDENTITY (exec_key strings), so chain vs dyn rows of the
+        // same drafter are separable signal, folded by merge
         let mut m = EngineMetrics::new(5);
         {
-            let pe = m.policy_mut("target-m-pe4", 5);
+            let pe = m.policy_mut("target-m-pe4/dyn:w3x2x1x1x1", 5);
             pe.steps += 1;
             pe.record_iteration(3, 2);
             pe.record_iteration(6, 5);
         }
         {
-            let ar = m.policy_mut("target-m-ar", 5);
+            let ar = m.policy_mut("target-m-ar/chain:5", 5);
             ar.steps += 1;
             ar.record_iteration(1, 0);
         }
-        let pe = &m.per_policy["target-m-pe4"];
+        let pe = &m.per_policy["target-m-pe4/dyn:w3x2x1x1x1"];
         assert_eq!(pe.iterations, 2);
         assert!((pe.acceptance_length() - 4.5).abs() < 1e-12);
         assert_eq!(pe.al_histogram[3], 1);
@@ -835,32 +857,53 @@ mod tests {
         let rates = pe.depth_acceptance_rates();
         assert!((rates[0] - 1.0).abs() < 1e-12);
         assert!((rates[4] - 0.5).abs() < 1e-12);
-        let ar = &m.per_policy["target-m-ar"];
+        let ar = &m.per_policy["target-m-ar/chain:5"];
         assert_eq!(ar.iterations, 1);
         assert!((ar.acceptance_length() - 1.0).abs() < 1e-12);
         assert_eq!(ar.accepted_by_depth, vec![0, 0, 0, 0, 0, 0]);
         // emitted beyond the histogram clamps into the last bin
         let mut tiny = EngineMetrics::new(1);
-        tiny.policy_mut("d", 1).record_iteration(9, 9);
-        assert_eq!(tiny.per_policy["d"].al_histogram, vec![0, 0, 1]);
-        assert_eq!(tiny.per_policy["d"].accepted_by_depth, vec![0, 1]);
-        // a deeper policy of the SAME drafter must grow the entry, not get
-        // clamped by whoever touched it first (one drafter, many policies)
-        tiny.policy_mut("d", 5).record_iteration(6, 5);
-        assert_eq!(tiny.per_policy["d"].al_histogram.len(), 7);
-        assert_eq!(tiny.per_policy["d"].al_histogram[6], 1);
-        assert_eq!(tiny.per_policy["d"].accepted_by_depth, vec![0, 2, 1, 1, 1, 1]);
+        tiny.policy_mut("d/chain:1", 1).record_iteration(9, 9);
+        assert_eq!(tiny.per_policy["d/chain:1"].al_histogram, vec![0, 0, 1]);
+        assert_eq!(tiny.per_policy["d/chain:1"].accepted_by_depth, vec![0, 1]);
+        // a deeper later toucher of the SAME key must grow the entry, not
+        // get clamped by whoever touched it first (merged streams)
+        tiny.policy_mut("d/chain:1", 5).record_iteration(6, 5);
+        assert_eq!(tiny.per_policy["d/chain:1"].al_histogram.len(), 7);
+        assert_eq!(tiny.per_policy["d/chain:1"].al_histogram[6], 1);
+        assert_eq!(tiny.per_policy["d/chain:1"].accepted_by_depth, vec![0, 2, 1, 1, 1, 1]);
         // a shallower later touch never shrinks it
-        tiny.policy_mut("d", 1);
-        assert_eq!(tiny.per_policy["d"].al_histogram.len(), 7);
-        // merge folds per-drafter slices (and creates missing ones)
+        tiny.policy_mut("d/chain:1", 1);
+        assert_eq!(tiny.per_policy["d/chain:1"].al_histogram.len(), 7);
+        // merge folds per-policy slices (and creates missing ones)
         let mut o = EngineMetrics::new(5);
-        o.policy_mut("target-m-pe4", 5).record_iteration(2, 1);
-        o.policy_mut("target-m-pe2", 5).record_iteration(4, 3);
+        o.policy_mut("target-m-pe4/dyn:w3x2x1x1x1", 5).record_iteration(2, 1);
+        o.policy_mut("target-m-pe2/chain:4", 5).record_iteration(4, 3);
         m.merge(&o);
-        assert_eq!(m.per_policy["target-m-pe4"].iterations, 3);
+        assert_eq!(m.per_policy["target-m-pe4/dyn:w3x2x1x1x1"].iterations, 3);
         assert_eq!(m.per_policy.len(), 3);
-        assert_eq!(m.per_policy["target-m-pe2"].accepted_sum, 4);
+        assert_eq!(m.per_policy["target-m-pe2/chain:4"].accepted_sum, 4);
+    }
+
+    #[test]
+    fn per_drafter_rolls_policy_identities_up() {
+        // the display-compatibility rollup: two policies of one drafter
+        // merge into a single per-drafter row, distinct drafters stay apart
+        let mut m = EngineMetrics::new(5);
+        m.policy_mut("pe/chain:4", 5).record_iteration(3, 2);
+        m.policy_mut("pe/dyn:w3x2x1", 5).record_iteration(5, 4);
+        m.policy_mut("ar/chain:5", 5).record_iteration(1, 0);
+        let rolled = m.per_drafter();
+        assert_eq!(rolled.len(), 2);
+        assert_eq!(rolled["pe"].iterations, 2);
+        assert_eq!(rolled["pe"].accepted_sum, 8);
+        assert!((rolled["pe"].acceptance_length() - 4.0).abs() < 1e-12);
+        assert_eq!(rolled["ar"].iterations, 1);
+        // depth histograms fold too
+        assert_eq!(rolled["pe"].accepted_by_depth, vec![0, 2, 2, 1, 1, 0]);
+        // a bare (pre-identity) key rolls up under itself
+        m.policy_mut("legacy", 5).record_iteration(2, 1);
+        assert_eq!(m.per_drafter()["legacy"].iterations, 1);
     }
 
     #[test]

@@ -4,9 +4,12 @@
 //! may name its own drafter + chain/tree/dynamic shape via [`SpecPolicy`];
 //! the step loop groups slots by policy and runs one pass per bucket over
 //! that policy's own executables), per-slot KV lifecycles, per-request
-//! sampling/acceptance, occupancy/TTFT and per-drafter metrics, a thin
-//! bucket-admission scheduler, and a threaded streaming server front-end.
+//! sampling/acceptance, occupancy/TTFT and per-policy metrics, a thin
+//! bucket-admission scheduler, a feedback-driven adaptive speculation
+//! controller ([`SpecController`]), and a threaded streaming server
+//! front-end.
 
+pub mod controller;
 pub mod engine;
 pub mod kv_cache;
 pub mod metrics;
@@ -15,6 +18,9 @@ pub mod sampler;
 pub mod scheduler;
 pub mod server;
 
+pub use controller::{
+    adaptive_from_env, decide, Action, ControllerConfig, Signals, SpecController, Tier,
+};
 pub use engine::{
     device_commit_from_env, multi_drafter_from_env, paged_from_env, prefix_cache_from_env,
     tree_dyn_from_env, EngineConfig, EngineCore, EngineEvent, PagedKvConfig, StepReport,

@@ -394,6 +394,31 @@ mod tests {
         assert_eq!(Scheduler::new(c, vec![1, 2, 4]).pick_bucket(4), Some(1));
     }
 
+    /// Regression for the adaptive-controller staleness bug: the width
+    /// pick's commit-width floor is recomputed from currently-ASSIGNABLE
+    /// policies via `EngineConfig::min_commit_width`, which folds the
+    /// controller's `budget_min` for Dynamic policies — a floor frozen from
+    /// the static policy list would refuse block budgets the adaptive engine
+    /// can genuinely serve once it floors budgets at runtime. (Staleness in
+    /// the other direction cannot happen: in-flight retunes never exceed a
+    /// slot's admitted chunk — see `EngineCore::step`.)
+    #[test]
+    fn paged_bucket_floor_tracks_adaptive_budget_min() {
+        use crate::coordinator::controller::ControllerConfig;
+        use crate::coordinator::engine::PagedKvConfig;
+        use crate::masking::TreeTopology;
+        // dyn@8 default: static commit 9 -> ceil(11/4) = 3 blocks/request
+        let dynp = SpecPolicy::dynamic("d", TreeTopology::from_widths(&[4, 4, 2, 2, 1]), 8);
+        let mut c = EngineConfig::new("t", dynp, 4, 32);
+        c.paged = Some(PagedKvConfig { block_size: Some(4), num_blocks: Some(2), prefix_cache: false });
+        // static floor: a 2-block budget cannot host any request — refuse
+        assert_eq!(Scheduler::new(c.clone(), vec![1, 2, 4]).pick_bucket(4), None);
+        // adaptive floor: the controller may assign dyn@2 (commit 3 ->
+        // ceil(5/4) = 2 blocks), so the same budget hosts one request
+        c.adaptive = Some(ControllerConfig { budget_min: 2, ..ControllerConfig::default() });
+        assert_eq!(Scheduler::new(c, vec![1, 2, 4]).pick_bucket(4), Some(1));
+    }
+
     #[test]
     fn buckets_sorted_and_deduped() {
         let s = Scheduler::new(cfg(), vec![4, 1, 2, 2]);

@@ -23,6 +23,11 @@
 //!                                      target, lossless rejection-sampling
 //!                                      acceptance; --top-p/--top-k imply
 //!                                      --temperature 1.0; default greedy)
+//!              [--adaptive [--adaptive-budget-min N]]
+//!                                     (feedback-driven speculation
+//!                                      controller: policy-free requests are
+//!                                      assigned from live signal; in-flight
+//!                                      Dynamic budgets re-tune each step)
 //!   eval-acceptance --drafter --dataset [--k --requests --max-new]
 //!   bench-otps --target --method --k --concurrency
 //!              [--dataset --mixed --profile]
@@ -47,6 +52,11 @@
 //!                                     (benchmark under temperature serving —
 //!                                      rejection-sampling acceptance; the
 //!                                      default stays greedy/bit-reproducible)
+//!              [--adaptive [--adaptive-budget-min N]]
+//!                                     (adaptive-controller run; with
+//!                                      --sweep-drafters, appends an adaptive
+//!                                      row to the comparison table on the
+//!                                      same workload seed)
 //!   bench-suite                       perf-trajectory matrix -> BENCH_<pr>.json
 //!              [--smoke]              (CI-sized matrix: fewer loads, tiny budgets)
 //!              [--pr N --out FILE]    (default BENCH_<CURRENT_PR>.json)
@@ -69,8 +79,8 @@ use anyhow::{anyhow, Result};
 use p_eagle::config::Manifest;
 use p_eagle::coordinator::server::spawn;
 use p_eagle::coordinator::{
-    device_commit_from_env, tree_dyn_from_env, EngineConfig, EngineMetrics, PagedKvConfig,
-    SamplingParams, ServerEvent, SpecPolicy,
+    adaptive_from_env, device_commit_from_env, tree_dyn_from_env, ControllerConfig,
+    EngineConfig, EngineMetrics, PagedKvConfig, SamplingParams, ServerEvent, SpecPolicy,
 };
 use p_eagle::masking::{DynamicTreeConfig, TreeTopology};
 use p_eagle::memmodel;
@@ -133,6 +143,31 @@ fn tree_dyn_opts(args: &Args, default_budget: usize) -> Result<Option<DynamicTre
     Ok(Some(cfg))
 }
 
+/// `--adaptive [--adaptive-budget-min N]` (or the `PEAGLE_ADAPTIVE=1` env
+/// the CI adaptive job sets): the feedback-driven speculation controller.
+/// Policy-free requests are assigned a `SpecPolicy` from live windowed
+/// engine signal instead of the static default, and in-flight Dynamic
+/// node budgets are re-tuned every step within
+/// `[budget_min, admitted width]`. `--adaptive-budget-min` lowers (or
+/// raises) the floor the throttle ladder can shrink budgets to and
+/// implies `--adaptive`. Explicit `--policy`/round-robin assignments
+/// bypass the controller — it only decides for requests that arrive
+/// without a policy.
+fn adaptive_opts(args: &Args) -> Option<ControllerConfig> {
+    let budget_min = args.get("adaptive-budget-min").map(|n| {
+        n.parse::<usize>()
+            .unwrap_or_else(|_| panic!("--adaptive-budget-min expects a number"))
+    });
+    let on = args.flag("adaptive") || budget_min.is_some() || adaptive_from_env().is_some();
+    on.then(|| {
+        let mut cfg = ControllerConfig::default();
+        if let Some(b) = budget_min {
+            cfg.budget_min = b.max(1);
+        }
+        cfg
+    })
+}
+
 /// `--temperature T [--top-p P] [--top-k N]`: per-request sampling for
 /// serve/bench-otps. The target distribution is the filtered softmax
 /// (temperature, then top-k, then top-p nucleus) and acceptance switches
@@ -168,13 +203,17 @@ fn sampling_opts(args: &Args) -> Result<SamplingParams> {
     Ok(sp)
 }
 
-/// Per-drafter metrics breakdown (multi-policy engines; a single row for a
-/// homogeneous batch): AL, per-depth acceptance, bucket passes.
+/// Per-policy metrics breakdown (multi-policy engines; a single row for a
+/// homogeneous batch): AL, per-depth acceptance, bucket passes, keyed by
+/// POLICY IDENTITY (`drafter/mode:shape` — distinct shapes on one drafter
+/// get distinct rows, which is what the adaptive controller's ladder moves
+/// produce). A second table rolls the rows back up to drafter names when
+/// more than one drafter contributed.
 fn print_policy_breakdown(metrics: &EngineMetrics) {
     if metrics.per_policy.len() <= 1 {
         return;
     }
-    println!("per-drafter breakdown:");
+    println!("per-policy breakdown:");
     for (name, pm) in &metrics.per_policy {
         let rates: Vec<String> =
             pm.depth_acceptance_rates().iter().map(|r| format!("{r:.2}")).collect();
@@ -187,12 +226,24 @@ fn print_policy_breakdown(metrics: &EngineMetrics) {
             String::new()
         };
         println!(
-            "  {name:<18} AL {:.2}  iters {}  passes {}  accepted-by-depth [{}]{calib}",
+            "  {name:<34} AL {:.2}  iters {}  passes {}  accepted-by-depth [{}]{calib}",
             pm.acceptance_length(),
             pm.iterations,
             pm.steps,
             rates.join(" "),
         );
+    }
+    let rollup = metrics.per_drafter();
+    if rollup.len() > 1 {
+        println!("per-drafter rollup:");
+        for (name, pm) in &rollup {
+            println!(
+                "  {name:<34} AL {:.2}  iters {}  passes {}",
+                pm.acceptance_length(),
+                pm.iterations,
+                pm.steps,
+            );
+        }
     }
 }
 
@@ -302,17 +353,24 @@ fn serve(args: &Args) -> Result<()> {
     if !sampling.config().is_greedy() {
         println!("serving sampling: {sampling:?}");
     }
+    let adaptive = adaptive_opts(args);
+    if let Some(a) = &adaptive {
+        println!("serving adaptive controller: budget_min={} window={}", a.budget_min, a.window);
+    }
     let mut arr = report::closed_loop_arrivals(&manifest, &dataset, max_new, 7)?;
     let cfg = EngineConfig::new(&target, policies[0].clone(), conc, max_new)
         .with_policies(policies[1..].to_vec())
         .with_seed(7)
-        .with_paged(paged_opts(args));
+        .with_paged(paged_opts(args))
+        .with_adaptive(adaptive.clone());
     // ready/error handshake: a bad artifacts root fails here, not in a log
     let handle = spawn(root, cfg)?;
     for i in 0..total {
         let mut req = arr.next();
-        if policies.len() > 1 {
-            // round-robin: one batch concurrently serves every drafter
+        if policies.len() > 1 && adaptive.is_none() {
+            // round-robin: one batch concurrently serves every drafter.
+            // Under --adaptive requests stay policy-free so the controller
+            // assigns from live signal instead.
             req = req.with_policy(policies[i % policies.len()].clone());
         }
         // per-request private rng stream: shared mode/filters, the seed
@@ -431,6 +489,44 @@ fn bench_otps(args: &Args) -> Result<()> {
                 run.metrics.iterations,
             );
         }
+        // --adaptive appends the controller on the SAME workload seed as a
+        // final comparison row: the adaptive run should meet or beat every
+        // static row above (the integration gate asserts exactly that).
+        if let Some(cfg) = adaptive_opts(args) {
+            let run = report::bench_otps_adaptive(
+                &mut mr, &target, &dataset, k, conc, total, max_new, 11, mixed,
+                paged_opts(args), sampling, None, cfg,
+            )?;
+            println!(
+                "{:<22} {:>8.0} {:>6.2} {:>6.2} {:>8}",
+                "adaptive (auto)",
+                run.otps,
+                run.acceptance_length,
+                run.mean_occupancy,
+                run.metrics.iterations,
+            );
+            print_policy_breakdown(&run.metrics);
+        }
+        return Ok(());
+    }
+
+    // --adaptive without --sweep-drafters: one adaptive run — the
+    // controller picks drafter/shape/budget per request from live signal.
+    if let Some(cfg) = adaptive_opts(args) {
+        let run = report::bench_otps_adaptive(
+            &mut mr, &target, &dataset, k, conc, total, max_new, 11, mixed,
+            paged_opts(args), sampling, None, cfg,
+        )?;
+        println!(
+            "OTPS[{target} adaptive C={conc} {dataset}{}] = {:.0} \
+             (AL {:.2}, occupancy {:.2}, p50 TPOT {:?})",
+            if mixed { " mixed" } else { "" },
+            run.otps,
+            run.acceptance_length,
+            run.mean_occupancy,
+            run.metrics.tpot_quantile(0.5),
+        );
+        print_policy_breakdown(&run.metrics);
         return Ok(());
     }
 

@@ -7,8 +7,8 @@ use anyhow::{anyhow, Result};
 
 use crate::config::Manifest;
 use crate::coordinator::{
-    run_closed_loop, run_open_loop, EngineConfig, EngineCore, EngineMetrics, PagedKvConfig,
-    RequestResult, SamplingParams, SpecPolicy,
+    run_closed_loop, run_open_loop, ControllerConfig, EngineConfig, EngineCore, EngineMetrics,
+    PagedKvConfig, RequestResult, SamplingParams, SpecPolicy,
 };
 use crate::masking::{DynamicTreeConfig, TreeTopology};
 use crate::runtime::ModelRuntime;
@@ -395,6 +395,127 @@ pub fn sweep_drafters(
         )?);
     }
     Ok(out)
+}
+
+/// The adaptive controller's policy surface for `target` at engine width
+/// `batch`: every serveable drafter's chain policy at `k`, plus the serving
+/// static tree / dynamic envelope for drafters whose manifest `modes` carry
+/// the capability — filtered through the SAME executable probe
+/// `EngineCore::new` runs, so the controller only ever chooses among
+/// policies the registry can serve at this width. Ordered dyn → tree →
+/// chain so the strongest available policy leads (the controller's
+/// cold-start default).
+pub fn adaptive_allowlist(
+    mr: &ModelRuntime,
+    target: &str,
+    batch: usize,
+    k: usize,
+    paged: bool,
+) -> Vec<SpecPolicy> {
+    let serving_tree = TreeTopology::from_widths(&[3, 2, 1, 1, 1]);
+    let dyn_cfg = DynamicTreeConfig::serving_default();
+    let mut out = Vec::new();
+    for mode in ["dyn", "tree", "chain"] {
+        for d in mr.manifest.drafters.values().filter(|d| d.target == target) {
+            let p = match mode {
+                "dyn" => SpecPolicy::from_dynamic_config(&d.name, &dyn_cfg),
+                "tree" => SpecPolicy::tree(&d.name, serving_tree.clone()),
+                _ => SpecPolicy::chain(&d.name, k),
+            };
+            if d.supports(mode) && mr.probe_policy_execs(target, &p, batch, paged).is_ok() {
+                out.push(p);
+            }
+        }
+    }
+    out
+}
+
+/// OTPS under the adaptive speculation controller: requests carry NO policy
+/// — the [`SpecController`](crate::coordinator::SpecController) assigns each
+/// admission a (drafter × shape × budget) from live windowed signal and
+/// re-tunes in-flight dynamic budgets per step. The workload (prompts,
+/// budgets, sampling seeds, arrival schedule) is seed-identical to the
+/// static `bench_otps`/`sweep_drafters` cells, so the adaptive row is
+/// directly comparable to every static row — the ROADMAP acceptance
+/// criterion is exactly "adaptive ≥ every static row on a mixed workload".
+/// `rate_rps` selects the open-loop Poisson client (the mixed-load regime
+/// the controller is for); `None` is the closed loop.
+#[allow(clippy::too_many_arguments)]
+pub fn bench_otps_adaptive(
+    mr: &mut ModelRuntime,
+    target: &str,
+    dataset: &str,
+    k: usize,
+    concurrency: usize,
+    total_requests: usize,
+    max_new: usize,
+    seed: u64,
+    mixed_lengths: bool,
+    paged: Option<PagedKvConfig>,
+    sampling: SamplingParams,
+    rate_rps: Option<f64>,
+    adaptive: ControllerConfig,
+) -> Result<OtpsRun> {
+    let mut allow = adaptive_allowlist(mr, target, concurrency, k, paged.is_some());
+    if allow.is_empty() {
+        return Err(anyhow!(
+            "no serveable policies for target {target} at batch {concurrency}, k {k} — \
+             cannot run the adaptive controller"
+        ));
+    }
+    let default = allow.remove(0);
+    let cfg = EngineConfig::new(target, default, concurrency, max_new)
+        .with_policies(allow)
+        .with_seed(seed)
+        .with_paged(paged)
+        .with_adaptive(Some(adaptive));
+    let mut arr = closed_loop_arrivals(&mr.manifest, dataset, max_new, seed)?;
+    let lens = LengthModel::testbed(max_new.max(8));
+    let mut lrng = Rng::new(seed ^ 0x1E46);
+    // warmup compiles the DEFAULT policy's executables; the controller's
+    // other candidates load lazily on first assignment (mid-run, like any
+    // allowlisted policy)
+    {
+        let mut cfg_w = cfg.clone();
+        cfg_w.max_new_tokens = 2;
+        let mut warm = EngineCore::new(mr, cfg_w)?;
+        warm.add_request(arr.next())?;
+        warm.run_until_idle(mr)?;
+    }
+    let mut next = move || {
+        let mut spec = arr.next();
+        if mixed_lengths {
+            spec.max_new_tokens = lens.sample(&mut lrng).clamp(4, max_new);
+        }
+        spec.sampling = SamplingParams { seed: seed ^ spec.id, ..sampling };
+        spec // policy: None — the controller assigns at admission
+    };
+    let (_results, metrics) = match rate_rps {
+        None => run_closed_loop(mr, &cfg, concurrency, total_requests, &mut next)?,
+        Some(rate) => {
+            let mut sched_rng = Rng::new(seed ^ 0x09E7);
+            let mut clock = 0.0f64;
+            let reqs: Vec<_> = (0..total_requests)
+                .map(|_| {
+                    clock += sched_rng.exponential(rate);
+                    next().with_arrival(clock)
+                })
+                .collect();
+            run_open_loop(mr, &cfg, concurrency, reqs)?
+        }
+    };
+    Ok(OtpsRun {
+        drafter: "auto".to_string(),
+        dataset: dataset.to_string(),
+        k,
+        concurrency,
+        topology: Some("adaptive".to_string()),
+        rate_rps,
+        otps: metrics.otps(),
+        acceptance_length: metrics.acceptance_length(),
+        mean_occupancy: metrics.mean_occupancy(),
+        metrics,
+    })
 }
 
 /// Figure 1: sequence-length distribution report (paper-scale quantiles +

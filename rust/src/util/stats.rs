@@ -18,6 +18,107 @@
 //! Everything here is deterministic: seeded trials in, fixed PASS/FAIL
 //! out. There is no runtime dependency — the z-quantiles are a small
 //! pre-registered table and the chi-square critical value is closed-form.
+//!
+//! The module also carries the **windowed-signal primitives** the adaptive
+//! speculation controller (and future schedulers) smooth live engine
+//! counters with: [`Ewma`] (half-life-parameterized exponential average)
+//! and [`RingWindow`] (fixed-capacity sliding window with mean/quantile).
+//! Both are empty-safe: before the first observation they answer `None`,
+//! never a fabricated zero a control loop would act on.
+
+/// Exponentially weighted moving average with the smoothing factor given as
+/// a **half-life in observations**: after `half_life` pushes of a new
+/// steady value, the average has closed half the distance to it
+/// (`alpha = 1 − 2^(−1/half_life)`). The first push seeds the average
+/// directly — no bias toward a phantom zero history.
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn with_half_life(half_life: f64) -> Ewma {
+        assert!(half_life > 0.0, "half-life must be positive, got {half_life}");
+        Ewma { alpha: 1.0 - 2f64.powf(-1.0 / half_life), value: None }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        });
+    }
+
+    /// `None` until the first observation — a controller must treat "no
+    /// signal yet" as cold start, not as a zero reading.
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn value_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.value.is_none()
+    }
+}
+
+/// Fixed-capacity sliding window over the last `capacity` observations,
+/// stored as a ring buffer. `mean`/`quantile` answer over exactly the
+/// retained suffix and are `None` on an empty window (same empty-safety
+/// contract as the latency quantiles in `coordinator::metrics`).
+#[derive(Clone, Debug)]
+pub struct RingWindow {
+    buf: Vec<f64>,
+    capacity: usize,
+    /// next write position once the buffer has wrapped
+    head: usize,
+}
+
+impl RingWindow {
+    pub fn new(capacity: usize) -> RingWindow {
+        assert!(capacity > 0, "window capacity must be positive");
+        RingWindow { buf: Vec::with_capacity(capacity), capacity, head: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(x);
+        } else {
+            self.buf[self.head] = x;
+        }
+        self.head = (self.head + 1) % self.capacity;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        Some(self.buf.iter().sum::<f64>() / self.buf.len() as f64)
+    }
+
+    /// Nearest-rank quantile over the retained window (`q` clamped to
+    /// [0, 1]): `q = 0.0` is the min, `q = 1.0` the max.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let mut sorted = self.buf.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let idx = (q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
+        Some(sorted[idx.min(sorted.len() - 1)])
+    }
+}
 
 /// Total variation distance between observed counts and an expected
 /// probability vector: `0.5 * Σ |obs_i/n − exp_i|`. Returns 1.0 for an
@@ -170,6 +271,86 @@ mod tests {
         let rep = goodness_of_fit(&[500, 500, 0], &[0.5, 0.5, 0.0], 0.001);
         assert_eq!(rep.df, 1, "zero-expected bins don't count toward df");
         assert!(rep.passes(0.05));
+    }
+
+    #[test]
+    fn ewma_is_empty_safe_and_seeds_on_first_push() {
+        let mut e = Ewma::with_half_life(4.0);
+        assert!(e.is_empty());
+        assert_eq!(e.value(), None, "no fabricated zero before the first observation");
+        assert_eq!(e.value_or(7.5), 7.5);
+        e.push(3.0);
+        assert_eq!(e.value(), Some(3.0), "first push seeds the average directly");
+    }
+
+    #[test]
+    fn ewma_half_life_closes_half_the_distance() {
+        // the definition of the parameterization: starting at 1.0, pushing
+        // a steady 0.0 for exactly `half_life` steps lands at 0.5
+        for half_life in [1usize, 4, 16] {
+            let mut e = Ewma::with_half_life(half_life as f64);
+            e.push(1.0);
+            for _ in 0..half_life {
+                e.push(0.0);
+            }
+            let v = e.value().unwrap();
+            assert!(
+                (v - 0.5).abs() < 1e-12,
+                "half-life {half_life}: expected 0.5, got {v}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "half-life must be positive")]
+    fn ewma_rejects_nonpositive_half_life() {
+        Ewma::with_half_life(0.0);
+    }
+
+    #[test]
+    fn ring_window_empty_safety_and_mean() {
+        let mut w = RingWindow::new(4);
+        assert!(w.is_empty());
+        assert_eq!(w.mean(), None);
+        assert_eq!(w.quantile(0.5), None);
+        w.push(2.0);
+        w.push(4.0);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.mean(), Some(3.0));
+    }
+
+    #[test]
+    fn ring_window_evicts_oldest_at_capacity() {
+        let mut w = RingWindow::new(3);
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            w.push(x);
+        }
+        // retained suffix is the last 3 observations: {3, 4, 5}
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.mean(), Some(4.0));
+        assert_eq!(w.quantile(0.0), Some(3.0));
+        assert_eq!(w.quantile(1.0), Some(5.0));
+    }
+
+    #[test]
+    fn ring_window_quantiles_nearest_rank() {
+        let mut w = RingWindow::new(8);
+        // pushed out of order — quantile sorts the retained window
+        for x in [9.0, 1.0, 5.0, 3.0, 7.0] {
+            w.push(x);
+        }
+        assert_eq!(w.quantile(0.5), Some(5.0));
+        assert_eq!(w.quantile(0.0), Some(1.0));
+        assert_eq!(w.quantile(1.0), Some(9.0));
+        // out-of-range q clamps instead of panicking
+        assert_eq!(w.quantile(2.0), Some(9.0));
+        assert_eq!(w.quantile(-1.0), Some(1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be positive")]
+    fn ring_window_rejects_zero_capacity() {
+        RingWindow::new(0);
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! Adaptive-controller integration tests — require `make artifacts`.
+//!
+//! Two properties anchor the subsystem:
+//!
+//! 1. LOSSLESSNESS UNDER POLICY MIXING: with the controller assigning
+//!    policies at admission and re-tuning in-flight dynamic budgets every
+//!    step, greedy output must stay byte-identical to the target model's
+//!    own greedy continuation — speculation policy is a throughput knob,
+//!    never a quality knob.
+//! 2. STATIC-ROW DOMINANCE: on the same workload seed, the adaptive run's
+//!    OTPS must meet or beat every static `sweep_drafters` row — the
+//!    controller's whole justification is that it lands on (at least) the
+//!    best static configuration without being told which one that is.
+
+use p_eagle::coordinator::{run_closed_loop, ControllerConfig, EngineConfig, Request};
+use p_eagle::report;
+use p_eagle::runtime::{HostTensor, ModelRuntime};
+
+fn artifacts() -> Option<String> {
+    let root = std::env::var("PEAGLE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&root).join("manifest.json").exists().then_some(root)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(r) => r,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+/// Reference greedy decode using only the target executables (no drafter):
+/// chunk = [last, PAD...], take row 0's argmax each iteration.
+fn reference_greedy(
+    mr: &mut ModelRuntime,
+    target: &str,
+    prompt: &[i32],
+    max_new: usize,
+) -> Vec<i32> {
+    let k = mr.manifest.default_k;
+    let te = mr.ensure_target(target, 1, k).unwrap();
+    let p = mr.manifest.prompt_pad;
+    let vocab = mr.manifest.vocab;
+    let mut padded = vec![mr.manifest.pad_id; p];
+    padded[..prompt.len()].copy_from_slice(prompt);
+    let kv = mr.zero_kv(target, 1).unwrap();
+    let pre = mr
+        .prefill(
+            &te,
+            &HostTensor::i32(&[1, p], padded),
+            &HostTensor::i32(&[1], vec![prompt.len() as i32]),
+            &kv,
+        )
+        .unwrap();
+    let argmax = |row: &[f32]| -> i32 {
+        let mut bi = 0;
+        for (i, &x) in row.iter().enumerate() {
+            if x > row[bi] {
+                bi = i;
+            }
+        }
+        bi as i32
+    };
+    let mut out = vec![argmax(pre.last_logits.as_f32().unwrap())];
+    let mut kv = pre.kv;
+    let mut cache_len = prompt.len();
+    while out.len() < max_new && *out.last().unwrap() != mr.manifest.eos_id {
+        let mut chunk = vec![0i32; k + 1];
+        chunk[0] = *out.last().unwrap();
+        let v = mr
+            .verify(
+                &te,
+                &HostTensor::i32(&[1, k + 1], chunk),
+                &HostTensor::i32(&[1], vec![cache_len as i32]),
+                &kv,
+            )
+            .unwrap();
+        kv = v.kv;
+        let logits = v.logits.as_f32().unwrap();
+        out.push(argmax(&logits[..vocab]));
+        cache_len += 1;
+    }
+    out
+}
+
+fn test_prompt(mr: &ModelRuntime, seed: u64) -> Vec<i32> {
+    let regime = mr.manifest.regimes["humaneval"].clone();
+    let mut rng = p_eagle::util::rng::Rng::new(seed);
+    regime.sample_seq(16, &mut rng)
+}
+
+/// Adaptive engine config over the full controller allowlist (every
+/// serveable drafter × shape, strongest first), hysteresis/cooldown cut
+/// down so short test runs actually see controller actions.
+fn adaptive_cfg(mr: &ModelRuntime, batch: usize, max_new: usize) -> EngineConfig {
+    let mut allow =
+        report::adaptive_allowlist(mr, "target-m", batch, mr.manifest.default_k, false);
+    assert!(!allow.is_empty(), "testbed manifest must serve target-m");
+    let default = allow.remove(0);
+    let adaptive = ControllerConfig {
+        window: 8,
+        hysteresis_steps: 2,
+        cooldown_steps: 2,
+        ..ControllerConfig::default()
+    };
+    EngineConfig::new("target-m", default, batch, max_new)
+        .with_policies(allow)
+        .with_seed(5)
+        .with_adaptive(Some(adaptive))
+}
+
+#[test]
+fn adaptive_decoding_is_lossless() {
+    // policy-free requests through a controller-fronted width-2 core: every
+    // request's tokens must match its solo reference greedy run, whatever
+    // mix of drafters/shapes/budgets the controller served them with
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let prompts: Vec<Vec<i32>> = (21u64..27).map(|s| test_prompt(&mr, s)).collect();
+    let want: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| reference_greedy(&mut mr, "target-m", p, 32))
+        .collect();
+
+    let cfg = adaptive_cfg(&mr, 2, 32);
+    let mut iter = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request::new(i as u64, p.clone(), 32))
+        .collect::<Vec<_>>()
+        .into_iter();
+    let (mut results, metrics) =
+        run_closed_loop(&mut mr, &cfg, 2, prompts.len(), || iter.next().unwrap()).unwrap();
+    results.sort_by_key(|r| r.id);
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.tokens, want[i], "adaptive engine diverged from greedy (request {i})");
+    }
+    // the per-policy breakdown is keyed by policy identity, and every key
+    // the controller served must be an allowlisted executable group
+    let allowed: Vec<String> = std::iter::once(&cfg.default_policy)
+        .chain(cfg.policies.iter())
+        .map(|p| p.exec_key())
+        .collect();
+    assert!(!metrics.per_policy.is_empty());
+    for key in metrics.per_policy.keys() {
+        assert!(allowed.contains(key), "controller served un-allowlisted policy {key}");
+    }
+}
+
+#[test]
+fn adaptive_meets_or_beats_every_static_sweep_row() {
+    // the subsystem's acceptance criterion: on the same workload seed, the
+    // adaptive run's OTPS >= every static per-drafter sweep row (2% slack
+    // absorbs wall-clock timer jitter — OTPS is a timed quantity even in
+    // the closed loop)
+    let root = require_artifacts!();
+    let mut mr = ModelRuntime::load(&root).unwrap();
+    let k = mr.manifest.default_k;
+    let (conc, total, max_new, seed) = (2, 10, 48, 11u64);
+    let sampling = p_eagle::coordinator::SamplingParams::greedy();
+    let rows = report::sweep_drafters(
+        &mut mr, "target-m", "mtbench", k, conc, total, max_new, seed, true, None, sampling,
+    )
+    .unwrap();
+    assert!(!rows.is_empty());
+    let adaptive = report::bench_otps_adaptive(
+        &mut mr, "target-m", "mtbench", k, conc, total, max_new, seed, true, None, sampling,
+        None, ControllerConfig::default(),
+    )
+    .unwrap();
+    for row in &rows {
+        assert!(
+            adaptive.otps >= row.otps * 0.98,
+            "adaptive OTPS {:.0} fell below static row {} at {:.0}",
+            adaptive.otps,
+            row.drafter,
+            row.otps,
+        );
+    }
+}

@@ -9,7 +9,8 @@
 //! stayed live.
 
 use p_eagle::coordinator::{
-    multi_drafter_from_env, device_commit_from_env, run_closed_loop, tree_dyn_from_env,
+    adaptive_from_env, multi_drafter_from_env, device_commit_from_env, run_closed_loop,
+    tree_dyn_from_env,
     EngineConfig,
     EngineCore, EngineEvent, FinishReason, Request, SamplingParams, SpecPolicy,
 };
@@ -116,11 +117,15 @@ fn engine_greedy(mr: &mut ModelRuntime, drafter: &str, prompt: &[i32], max_new: 
     let target = mr.manifest.drafter(drafter).unwrap().target.clone();
     // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
     // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache;
-    // PEAGLE_MULTI_DRAFTER=1 widens the allowlist (requests stay default)
+    // PEAGLE_MULTI_DRAFTER=1 widens the allowlist (requests stay default);
+    // PEAGLE_ADAPTIVE=1 (the adaptive job) routes policy-free admissions
+    // through the controller — with this single-candidate allowlist it must
+    // keep assigning the default policy, so output stays byte-identical
     let cfg = EngineConfig::new(target, default_policy(drafter, mr.manifest.default_k), 1, max_new)
         .with_policies(env_extra_policies())
         .with_seed(5)
-        .with_paged(device_commit_from_env());
+        .with_paged(device_commit_from_env())
+        .with_adaptive(adaptive_from_env());
     let mut given = Some(Request::new(0, prompt.to_vec(), max_new));
     let (results, _) = run_closed_loop(mr, &cfg, 1, 1, || given.take().unwrap()).unwrap();
     results.into_iter().next().unwrap().tokens
@@ -189,11 +194,14 @@ fn batched_core_matches_single() {
 fn core_cfg(batch: usize, max_new: usize) -> EngineConfig {
     // PEAGLE_TREE_DYN=1 (the CI tree-dyn job) runs this suite in dynamic
     // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache;
-    // PEAGLE_MULTI_DRAFTER=1 widens the allowlist (requests stay default)
+    // PEAGLE_MULTI_DRAFTER=1 widens the allowlist (requests stay default);
+    // PEAGLE_ADAPTIVE=1 (the adaptive job) routes policy-free admissions
+    // through the controller
     EngineConfig::new("target-m", default_policy("target-m-pe4", 5), batch, max_new)
         .with_policies(env_extra_policies())
         .with_seed(5)
         .with_paged(device_commit_from_env())
+        .with_adaptive(adaptive_from_env())
 }
 
 fn spec(id: u64, prompt: &[i32], max_new: usize) -> Request {

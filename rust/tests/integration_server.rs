@@ -16,7 +16,8 @@ fn cfg(batch: usize, max_new: usize) -> EngineConfig {
     // tree mode; PEAGLE_PAGED=1 (the paged job) on the paged KV cache;
     // PEAGLE_PREFIX_CACHE=1 (the prefix-cache job) additionally turns on
     // the automatic prefix cache; PEAGLE_MULTI_DRAFTER=1 widens the
-    // allowlist (requests stay default)
+    // allowlist (requests stay default); PEAGLE_ADAPTIVE=1 (the adaptive
+    // job) routes policy-free admissions through the controller
     let default = match p_eagle::coordinator::tree_dyn_from_env() {
         Some(d) => SpecPolicy::from_dynamic_config("target-m-pe4", &d),
         None => SpecPolicy::chain("target-m-pe4", 5),
@@ -30,6 +31,7 @@ fn cfg(batch: usize, max_new: usize) -> EngineConfig {
         .with_policies(extras)
         .with_seed(1)
         .with_paged(p_eagle::coordinator::device_commit_from_env())
+        .with_adaptive(p_eagle::coordinator::adaptive_from_env())
 }
 
 fn prompt(i: u64) -> Vec<i32> {
